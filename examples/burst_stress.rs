@@ -1,0 +1,88 @@
+//! Flash-crowd stress scenario: a hand-built workload with one extreme
+//! long-job burst, showing the transient manager's adaptation timeline —
+//! the l_r trajectory, the transient fleet ramp, the provisioning lag,
+//! and the graceful drain afterwards.
+//!
+//! ```bash
+//! cargo run --release --offline --example burst_stress
+//! ```
+
+use anyhow::Result;
+
+use cloudcoaster::cluster::QueuePolicy;
+use cloudcoaster::coordinator::runner::{simulate, SimConfig};
+use cloudcoaster::sched::Hybrid;
+use cloudcoaster::sim::Rng;
+use cloudcoaster::trace::{Job, Workload};
+use cloudcoaster::transient::{Budget, ManagerConfig};
+use cloudcoaster::util::JobId;
+
+fn main() -> Result<()> {
+    // 400-server cluster, 16-server short partition (p=0.5 -> 8 on-demand
+    // + up to 24 transients at r=3).
+    let n_servers = 400;
+    let n_short = 16;
+    let mut rng = Rng::new(7);
+    let mut jobs: Vec<Job> = Vec::new();
+
+    // Steady short-job stream over 4 hours.
+    let horizon = 4.0 * 3600.0;
+    let mut t = 0.0;
+    while t < horizon {
+        t += rng.exponential(4.0);
+        let n = 1 + rng.below(8) as usize;
+        let durs = (0..n).map(|_| rng.lognormal(3.0, 0.5)).collect();
+        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false });
+    }
+    // The flash crowd: at t=1h, a burst of long jobs saturates the
+    // general partition within minutes.
+    for i in 0..40 {
+        let durs = (0..12).map(|_| rng.lognormal(7.2, 0.4)).collect();
+        jobs.push(Job {
+            id: JobId(0),
+            arrival: 3600.0 + i as f64 * 10.0,
+            task_durations: durs,
+            is_long: true,
+        });
+    }
+    let workload = Workload::new(jobs, 90.0);
+
+    let cfg = SimConfig {
+        n_general: n_servers - n_short,
+        n_short_reserved: n_short / 2,
+        queue_policy: QueuePolicy::Srpt { starvation_limit: 600.0 },
+        manager: Some(ManagerConfig::paper(Budget::new(n_short, 0.5, 3.0))),
+        snapshot_interval: 60.0,
+        steal_probes: 8,
+        steal_batch: 8,
+        seed: 7,
+    };
+    let mut sched = Hybrid::cloudcoaster(2.0);
+    let res = simulate(&workload, &mut sched, &cfg);
+
+    println!("flash-crowd adaptation timeline (one row per 5 min):");
+    println!("{:>8} {:>8} {:>12}  fleet", "min", "l_r", "transients");
+    for (i, &(t, lr)) in res.rec.lr_series.points.iter().enumerate() {
+        if i % 5 != 0 {
+            continue;
+        }
+        let transients = res.rec.transient_series.points[i].1;
+        let bars = "#".repeat(transients as usize);
+        println!("{:>8.0} {:>8.3} {:>12.0}  {bars}", t / 60.0, lr, transients);
+    }
+    let (adds, drains, _) = res.manager_stats.unwrap();
+    println!(
+        "\n{} transients requested, {} drained; short delay mean {:.1}s p99 {:.1}s; \
+         {} stale copies skipped; {:.0}k events/s",
+        adds,
+        drains,
+        res.rec.short_delays.mean(),
+        {
+            let mut d = res.rec.short_delays.clone();
+            d.percentile(0.99)
+        },
+        res.rec.stale_copies_skipped,
+        res.events_per_sec() / 1000.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: run CloudCoaster vs. the Eagle baseline on a small
+//! synthetic cluster and print the headline numbers.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use cloudcoaster::coordinator::config::{ExperimentConfig, SchedulerKind, WorkloadSource};
+use cloudcoaster::coordinator::report::{build_workload, run_experiment_on, summary_line};
+use cloudcoaster::runtime::AnalyticsEngine;
+use cloudcoaster::trace::synth::YahooLikeParams;
+use cloudcoaster::trace::TraceStats;
+
+fn main() -> Result<()> {
+    // A 500-server cluster with a 2-hour Yahoo-like workload: small
+    // enough to run in about a second, big enough to show the effect.
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.cluster_size = 500;
+    cfg.short_partition = 16;
+    let mut params = YahooLikeParams::default();
+    params.horizon = 4.0 * 3600.0;
+    // Scale the workload to the smaller cluster (~1/8th of paper scale):
+    // rates shrink with the cluster, dwell times shrink with the horizon
+    // so the high/low occupancy phases still alternate within the run.
+    params.short_arrivals.calm_rate /= 8.0;
+    params.short_arrivals.burst_rate /= 8.0;
+    // Longs scale less than the cluster so the general partition still
+    // saturates (the quickstart exists to show the crowded regime).
+    params.long_arrivals.calm_rate /= 4.0;
+    params.long_arrivals.burst_rate /= 4.0;
+    params.long_arrivals.calm_dwell /= 6.0;
+    params.long_arrivals.burst_dwell /= 6.0;
+    cfg.workload = WorkloadSource::YahooLike(params);
+
+    let workload = build_workload(&cfg)?;
+    println!("workload: {}", TraceStats::of(&workload).summary());
+
+    // Analytics: XLA artifacts if built (make artifacts), else native.
+    let mut analytics =
+        AnalyticsEngine::auto(&cloudcoaster::coordinator::report::artifacts_dir());
+
+    let mut baseline_cfg = cfg.clone();
+    baseline_cfg.scheduler = SchedulerKind::Eagle;
+    let baseline = run_experiment_on(&baseline_cfg, &workload, analytics.as_dyn())?;
+    println!("{}", summary_line(&baseline));
+
+    let cc = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+    println!("{}", summary_line(&cc));
+
+    let speedup = baseline.short_delay.mean / cc.short_delay.mean.max(1e-9);
+    println!(
+        "\nCloudCoaster (r={}) improves average short-task queueing delay by {:.1}x \
+         ({:.1}s -> {:.1}s) using on average {:.1} transient servers \
+         ({:.1} on-demand-equivalents vs {} in the static baseline partition).",
+        cfg.r,
+        speedup,
+        baseline.short_delay.mean,
+        cc.short_delay.mean,
+        cc.avg_transients,
+        cc.r_normalized_avg,
+        cfg.short_partition / 2,
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+"""AOT lowering: jax (L2 + L1) -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowered with
+``return_tuple=True`` — the rust side unwraps with ``to_tuple``.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+ENTRY_POINTS = {
+    "cluster_state": model.cluster_state,
+    "interval_count": model.concurrency,
+    "lr_forecast": model.forecast,
+    "delay_hist": model.delay_cdf,
+}
+
+
+def lower_all(out_dir: str) -> dict:
+    manifest = {"artifacts": {}}
+    for name, meta in shapes.MANIFEST.items():
+        fn = ENTRY_POINTS[name]
+        arg_specs = [_spec(inp["shape"]) for inp in meta["inputs"]]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, meta["path"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            **meta,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = lower_all(args.out_dir)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

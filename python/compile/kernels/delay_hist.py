@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: queueing-delay cumulative histogram (Figure 3
+analytics).
+
+Given delay samples ``d_i`` and CDF evaluation edges ``e_j``, computes
+``counts[j] = |{ i : d_i <= e_j }|`` — the unnormalised empirical CDF of
+short-task queueing delay. The L2 wrapper divides by the valid-sample
+count to produce the CDF the paper plots in Figure 3.
+
+Same tiled compare-and-accumulate shape as ``interval_count``: grid =
+(edge tiles x delay tiles), the per-edge accumulator block is revisited
+across the inner (delay) reduction dimension. Padding samples use
+``d = PAD_SENTINEL`` so they fall beyond every finite edge.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import DELAY_BLOCK, EDGE_BLOCK
+
+
+def _kernel(d_ref, e_ref, o_ref):
+    di = pl.program_id(1)  # inner (reduction) dim: delay tile
+    d = d_ref[...]
+    e = e_ref[...]
+    below = d[:, None] <= e[None, :]
+    part = jnp.sum(below.astype(jnp.float32), axis=0)
+
+    @pl.when(di == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+def delay_hist(delays, edges, *, delay_block=DELAY_BLOCK, edge_block=EDGE_BLOCK):
+    """counts[j] = sum_i [delays[i] <= edges[j]], f32."""
+    (n,) = delays.shape
+    (m,) = edges.shape
+    assert n % delay_block == 0, (n, delay_block)
+    assert m % edge_block == 0, (m, edge_block)
+    grid = (m // edge_block, n // delay_block)
+    delay_spec = pl.BlockSpec((delay_block,), lambda ej, di: (di,))
+    edge_spec = pl.BlockSpec((edge_block,), lambda ej, di: (ej,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[delay_spec, edge_spec],
+        out_specs=edge_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(delays, edges)

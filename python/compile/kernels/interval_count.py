@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: interval-overlap counting (Figure 1 analytics).
+
+Given task intervals ``[start_i, end_i)`` and time-bucket sample points
+``t_j``, computes ``counts[j] = |{ i : start_i <= t_j < end_i }|`` — the
+number of tasks concurrently running at each sample point, i.e. the
+"theoretical number of concurrent tasks" curve of the paper's Figure 1
+(unlimited cluster, omniscient scheduler).
+
+Structured as a ``(buckets x tasks)`` tiled compare-and-accumulate: the
+grid iterates bucket tiles (outer) x task tiles (inner, the reduction
+dimension); each step materialises a ``TASK_BLOCK x BUCKET_BLOCK`` boolean
+overlap tile in VMEM (~2 MiB as f32) and reduces it over the task axis
+into the per-bucket accumulator block, which is revisited across the inner
+grid dimension. Padding tasks use ``start = PAD_SENTINEL`` so they never
+overlap any finite sample point.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import BUCKET_BLOCK, TASK_BLOCK
+
+
+def _kernel(s_ref, e_ref, t_ref, o_ref):
+    ti = pl.program_id(1)  # inner (reduction) dim: task tile
+    s = s_ref[...]
+    e = e_ref[...]
+    t = t_ref[...]
+    overlap = (s[:, None] <= t[None, :]) & (e[:, None] > t[None, :])
+    part = jnp.sum(overlap.astype(jnp.float32), axis=0)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+def interval_count(starts, ends, bucket_times, *, task_block=TASK_BLOCK,
+                   bucket_block=BUCKET_BLOCK):
+    """counts[j] = sum_i [starts[i] <= bucket_times[j] < ends[i]], f32."""
+    (tasks,) = starts.shape
+    (buckets,) = bucket_times.shape
+    assert tasks % task_block == 0, (tasks, task_block)
+    assert buckets % bucket_block == 0, (buckets, bucket_block)
+    grid = (buckets // bucket_block, tasks // task_block)
+    task_spec = pl.BlockSpec((task_block,), lambda bj, ti: (ti,))
+    bucket_spec = pl.BlockSpec((bucket_block,), lambda bj, ti: (bj,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[task_spec, task_spec, bucket_spec],
+        out_specs=bucket_spec,
+        out_shape=jax.ShapeDtypeStruct((buckets,), jnp.float32),
+        interpret=True,
+    )(starts, ends, bucket_times)

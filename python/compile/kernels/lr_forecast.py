@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: long-load-ratio forecasting (predictive resizing).
+
+The reactive §3.2 policy pays the full 120 s provisioning delay on every
+crowding onset. The predictive extension forecasts ``l_r`` one
+provisioning-delay ahead from the sampled history using exponentially
+weighted level + trend (Holt's linear method with fixed gains, expressed
+as two weighted reductions so it lowers to a single fused pass):
+
+  level  = sum_k w_k x_k / sum_k w_k          with w_k = (1-alpha)^(W-1-k)
+  slope  = weighted least-squares slope of x over step index, same weights
+  forecast(h) = clip(level + slope * (h + (W-1) - kbar_w), 0, 1)
+
+where ``kbar_w`` is the weighted mean index — so the trend is anchored at
+the weighted centre of the window, not at the last sample.
+
+History windows are small (W = 128), so the kernel is a single-block
+reduction; it exists to keep the *entire* epoch-path analytics inside one
+AOT artifact set rather than for FLOPs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import FORECAST_ALPHA, FORECAST_WINDOW
+
+
+def _kernel(x_ref, h_ref, out_ref):
+    x = x_ref[...]
+    h = h_ref[0]
+    w = x.shape[0]
+    k = jnp.arange(w, dtype=jnp.float32)
+    weights = (1.0 - FORECAST_ALPHA) ** (w - 1.0 - k)
+    wsum = jnp.sum(weights)
+    level = jnp.sum(weights * x) / wsum
+    kbar = jnp.sum(weights * k) / wsum
+    var = jnp.sum(weights * (k - kbar) * (k - kbar))
+    cov = jnp.sum(weights * (k - kbar) * (x - level))
+    slope = cov / jnp.maximum(var, 1e-9)
+    forecast = jnp.clip(level + slope * (h + (w - 1.0) - kbar), 0.0, 1.0)
+    out_ref[...] = jnp.stack([forecast, level, slope])
+
+
+def lr_forecast(history, horizon_steps):
+    """history f32[FORECAST_WINDOW], horizon_steps f32[1] ->
+    f32[3] = [forecast, level, slope]."""
+    (w,) = history.shape
+    assert w == FORECAST_WINDOW, (w, FORECAST_WINDOW)
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((w,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        interpret=True,
+    )(history, horizon_steps)

@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth: trivially-correct whole-array
+expressions with no tiling, no grid, no accumulator reuse. pytest asserts
+``allclose(kernel(x), ref(x))`` across random and adversarial inputs —
+this is the core correctness signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+from ..shapes import ALPHA, PAD_SENTINEL
+
+
+def server_scan_ref(remaining_work, long_counts, queue_len, active):
+    est_wait = remaining_work + ALPHA * queue_len
+    scores = jnp.where(active > 0.0, est_wait, PAD_SENTINEL)
+    long_servers = jnp.sum(jnp.where((long_counts > 0.0) & (active > 0.0), 1.0, 0.0))
+    stats = jnp.stack(
+        [
+            long_servers,
+            jnp.sum(remaining_work * active),
+            jnp.sum(queue_len * active),
+            jnp.sum(active),
+        ]
+    )
+    return scores, stats
+
+
+def interval_count_ref(starts, ends, bucket_times):
+    overlap = (starts[:, None] <= bucket_times[None, :]) & (
+        ends[:, None] > bucket_times[None, :]
+    )
+    return jnp.sum(overlap.astype(jnp.float32), axis=0)
+
+
+def delay_hist_ref(delays, edges):
+    below = delays[:, None] <= edges[None, :]
+    return jnp.sum(below.astype(jnp.float32), axis=0)
+
+
+def lr_forecast_ref(history, horizon_steps):
+    """Holt level+trend forecast; mirrors lr_forecast.py's math."""
+    from ..shapes import FORECAST_ALPHA
+
+    x = history
+    w = x.shape[0]
+    k = jnp.arange(w, dtype=jnp.float32)
+    weights = (1.0 - FORECAST_ALPHA) ** (w - 1.0 - k)
+    wsum = jnp.sum(weights)
+    level = jnp.sum(weights * x) / wsum
+    kbar = jnp.sum(weights * k) / wsum
+    var = jnp.sum(weights * (k - kbar) ** 2)
+    cov = jnp.sum(weights * (k - kbar) * (x - level))
+    slope = cov / jnp.maximum(var, 1e-9)
+    forecast = jnp.clip(level + slope * (horizon_steps[0] + (w - 1.0) - kbar), 0.0, 1.0)
+    return jnp.stack([forecast, level, slope])
+
+
+def long_load_ratio_ref(long_counts, active):
+    """The paper's l_r = N_long / N_total over the active server set."""
+    n_long = jnp.sum(jnp.where((long_counts > 0.0) & (active > 0.0), 1.0, 0.0))
+    n_total = jnp.maximum(jnp.sum(active), 1.0)
+    return n_long / n_total

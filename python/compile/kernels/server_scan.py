@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: per-server cluster-state scan.
+
+Computes, in one tiled pass over the (padded) server vector:
+
+  * ``scores[s]``   — estimated wait for a probe landing on server ``s``:
+                      ``remaining_work + ALPHA * queue_len`` (inactive /
+                      padding servers score ``PAD_SENTINEL`` so they are
+                      never selected by the coordinator's top-k probe
+                      placement).
+  * ``stats``       — global reductions ``[n_long_servers, total_backlog,
+                      total_queued, n_active]`` used by the transient
+                      manager: ``l_r = n_long_servers / n_active`` is the
+                      paper's long-load ratio (§3.2).
+
+TPU shaping: the server vector is tiled in ``SERVER_BLOCK`` slices; the
+stats accumulator lives in a single output block revisited by every grid
+step (initialised at step 0). All accumulation is f32. Run with
+``interpret=True`` — on a real TPU this kernel is VPU-bound (compare+add).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import ALPHA, PAD_SENTINEL, SERVER_BLOCK
+
+
+def _kernel(rw_ref, lc_ref, ql_ref, active_ref, score_ref, stats_ref):
+    i = pl.program_id(0)
+    rw = rw_ref[...]
+    lc = lc_ref[...]
+    ql = ql_ref[...]
+    active = active_ref[...]
+
+    est_wait = rw + ALPHA * ql
+    score_ref[...] = jnp.where(active > 0.0, est_wait, PAD_SENTINEL)
+
+    long_servers = jnp.sum(jnp.where((lc > 0.0) & (active > 0.0), 1.0, 0.0))
+    backlog = jnp.sum(rw * active)
+    queued = jnp.sum(ql * active)
+    n_active = jnp.sum(active)
+    part = jnp.stack([long_servers, backlog, queued, n_active])
+
+    @pl.when(i == 0)
+    def _init():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    stats_ref[...] += part
+
+
+def server_scan(remaining_work, long_counts, queue_len, active, *, block=SERVER_BLOCK):
+    """Tiled server-state scan. All inputs are f32[S] with S % block == 0."""
+    (servers,) = remaining_work.shape
+    assert servers % block == 0, (servers, block)
+    grid = (servers // block,)
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    stats_spec = pl.BlockSpec((4,), lambda i: (0,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, vec_spec, vec_spec],
+        out_specs=[vec_spec, stats_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((servers,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
+        ],
+        interpret=True,
+    )(remaining_work, long_counts, queue_len, active)

@@ -1,0 +1,56 @@
+"""L2: the jax compute graphs the rust coordinator invokes via PJRT.
+
+Three entry points, each AOT-lowered by ``aot.py`` to a fixed-shape HLO
+text artifact (shapes in ``shapes.py``, mirrored to rust via
+``artifacts/manifest.json``):
+
+  * ``cluster_state``  — one fused pass over the padded server vector:
+    probe scores + global stats + the long-load ratio ``l_r`` (§3.2).
+  * ``concurrency``    — Figure 1: concurrent tasks at bucket sample
+    points for one chunk of task intervals (rust accumulates chunks).
+  * ``delay_cdf``      — Figure 3: cumulative histogram + normalised CDF
+    of short-task queueing delays for one chunk of samples.
+
+Each function calls the Layer-1 Pallas kernels (interpret=True, so the
+lowered HLO is plain ops runnable on the CPU PJRT client) and does only
+cheap scalar epilogue work here, keeping the heavy pass fused and single.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.delay_hist import delay_hist
+from .kernels.interval_count import interval_count
+from .kernels.lr_forecast import lr_forecast
+from .kernels.server_scan import server_scan
+
+
+def cluster_state(remaining_work, long_counts, queue_len, active):
+    """-> (scores f32[S], stats f32[4], l_r f32[1]).
+
+    stats = [n_long_servers, total_backlog, total_queued, n_active].
+    l_r = n_long_servers / max(n_active, 1) — the paper's long-load ratio.
+    """
+    scores, stats = server_scan(remaining_work, long_counts, queue_len, active)
+    l_r = stats[0] / jnp.maximum(stats[3], 1.0)
+    return scores, stats, l_r.reshape((1,))
+
+
+def concurrency(starts, ends, bucket_times):
+    """-> counts f32[B]: concurrent tasks at each bucket sample point."""
+    return (interval_count(starts, ends, bucket_times),)
+
+
+def forecast(history, horizon_steps):
+    """-> f32[3] = [forecast l_r, level, slope] (predictive resizing)."""
+    return (lr_forecast(history, horizon_steps),)
+
+
+def delay_cdf(delays, edges, n_valid):
+    """-> (counts f32[E], cdf f32[E]).
+
+    ``n_valid`` (f32[1]) is the number of real (non-padding) samples;
+    padding samples carry PAD_SENTINEL and never land below an edge.
+    """
+    counts = delay_hist(delays, edges)
+    cdf = counts / jnp.maximum(n_valid[0], 1.0)
+    return counts, cdf

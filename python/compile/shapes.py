@@ -1,0 +1,84 @@
+"""Canonical AOT artifact shapes shared by the kernels, the lowering script
+and (via artifacts/manifest.json) the rust runtime.
+
+All artifact shapes are fixed at lowering time — the rust coordinator pads
+its inputs up to these sizes (padding conventions are per-kernel, see the
+kernel docstrings) and streams larger workloads through in chunks.
+"""
+
+# cluster_state: per-server analytics over a padded server vector.
+SERVERS = 4096  # max servers per snapshot (4000 on-demand + transients fit)
+SERVER_BLOCK = 512
+
+# interval_count: concurrent-task counting (Figure 1 analytics).
+TASK_CHUNK = 16384  # tasks per kernel invocation; rust accumulates chunks
+BUCKETS = 2048  # time buckets per invocation
+TASK_BLOCK = 1024
+BUCKET_BLOCK = 512
+
+# delay_hist: queueing-delay histogram/CDF (Figure 3 analytics).
+DELAY_CHUNK = 16384
+EDGES = 512
+DELAY_BLOCK = 1024
+EDGE_BLOCK = 512
+
+# Probe-score weight: estimated wait = remaining_work + ALPHA * queue_len.
+ALPHA = 1.0
+
+# lr_forecast: predictive resizing (Holt level+trend over l_r history).
+FORECAST_WINDOW = 128
+FORECAST_ALPHA = 0.1  # per-sample EWMA gain
+
+# Padding sentinel for "never counted" task/delay entries. A finite big
+# number (not inf) so the compare-and-accumulate stays NaN-free.
+PAD_SENTINEL = 1e30
+
+MANIFEST = {
+    "cluster_state": {
+        "path": "cluster_state.hlo.txt",
+        "inputs": [
+            {"name": "remaining_work", "shape": [SERVERS], "dtype": "f32"},
+            {"name": "long_counts", "shape": [SERVERS], "dtype": "f32"},
+            {"name": "queue_len", "shape": [SERVERS], "dtype": "f32"},
+            {"name": "active", "shape": [SERVERS], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "scores", "shape": [SERVERS], "dtype": "f32"},
+            {"name": "stats", "shape": [4], "dtype": "f32"},
+            {"name": "long_load_ratio", "shape": [1], "dtype": "f32"},
+        ],
+    },
+    "interval_count": {
+        "path": "interval_count.hlo.txt",
+        "inputs": [
+            {"name": "starts", "shape": [TASK_CHUNK], "dtype": "f32"},
+            {"name": "ends", "shape": [TASK_CHUNK], "dtype": "f32"},
+            {"name": "bucket_times", "shape": [BUCKETS], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "counts", "shape": [BUCKETS], "dtype": "f32"},
+        ],
+    },
+    "lr_forecast": {
+        "path": "lr_forecast.hlo.txt",
+        "inputs": [
+            {"name": "history", "shape": [FORECAST_WINDOW], "dtype": "f32"},
+            {"name": "horizon_steps", "shape": [1], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "forecast_level_slope", "shape": [3], "dtype": "f32"},
+        ],
+    },
+    "delay_hist": {
+        "path": "delay_hist.hlo.txt",
+        "inputs": [
+            {"name": "delays", "shape": [DELAY_CHUNK], "dtype": "f32"},
+            {"name": "edges", "shape": [EDGES], "dtype": "f32"},
+            {"name": "n_valid", "shape": [1], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "counts", "shape": [EDGES], "dtype": "f32"},
+            {"name": "cdf", "shape": [EDGES], "dtype": "f32"},
+        ],
+    },
+}

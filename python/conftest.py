@@ -1,0 +1,6 @@
+"""pytest root: run from python/ so `compile` is importable as a package."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

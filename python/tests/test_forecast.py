@@ -1,0 +1,72 @@
+"""lr_forecast kernel: Pallas vs ref, plus analytic sanity checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lr_forecast import lr_forecast
+from compile.kernels.ref import lr_forecast_ref
+from compile.shapes import FORECAST_WINDOW
+
+jax.config.update("jax_platform_name", "cpu")
+
+W = FORECAST_WINDOW
+
+
+def run_both(history, h):
+    hist = jnp.asarray(history, jnp.float32)
+    hs = jnp.asarray([h], jnp.float32)
+    return np.asarray(lr_forecast(hist, hs)), np.asarray(lr_forecast_ref(hist, hs))
+
+
+class TestLrForecast:
+    def test_matches_ref_random(self):
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            hist = rng.uniform(0, 1, W).astype(np.float32)
+            got, want = run_both(hist, 2.0)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_constant_history_forecasts_constant(self):
+        got, _ = run_both(np.full(W, 0.7, np.float32), 5.0)
+        forecast, level, slope = got
+        assert abs(level - 0.7) < 1e-5
+        assert abs(slope) < 1e-6
+        assert abs(forecast - 0.7) < 1e-5
+
+    def test_linear_ramp_extrapolates(self):
+        # x_k = k/256: slope 1/256 per step; forecast at +h continues it.
+        hist = (np.arange(W) / 256.0).astype(np.float32)
+        got, _ = run_both(hist, 10.0)
+        forecast, _level, slope = got
+        assert abs(slope - 1.0 / 256.0) < 1e-5
+        expected = (W - 1 + 10.0) / 256.0
+        assert abs(forecast - expected) < 2e-3, (forecast, expected)
+
+    def test_forecast_clipped_to_unit_interval(self):
+        hist = (np.arange(W) / float(W)).astype(np.float32)  # steep ramp
+        got, _ = run_both(hist, 500.0)
+        assert got[0] <= 1.0
+        got, _ = run_both(hist[::-1].copy(), 500.0)  # steep decline
+        assert got[0] >= 0.0
+
+    def test_recent_samples_dominate(self):
+        # Old crowding, recent calm: level must sit near the recent value.
+        hist = np.concatenate([np.full(W // 2, 0.95), np.full(W // 2, 0.1)]).astype(
+            np.float32
+        )
+        got, _ = run_both(hist, 0.0)
+        assert got[1] < 0.3, f"level {got[1]} ignores recency"
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        h=st.floats(0.0, 64.0),
+    )
+    def test_hypothesis_matches_ref(self, seed, h):
+        rng = np.random.default_rng(seed)
+        hist = rng.uniform(0, 1, W).astype(np.float32)
+        got, want = run_both(hist, h)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        assert 0.0 <= got[0] <= 1.0

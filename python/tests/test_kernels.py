@@ -1,0 +1,216 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Fixed random suites plus hypothesis sweeps over shapes (block-multiple
+sizes) and value regimes, including the adversarial edges the simulator
+actually produces: zero-length intervals, identical timestamps, padding
+sentinels, all-long and all-idle clusters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.delay_hist import delay_hist
+from compile.kernels.interval_count import interval_count
+from compile.kernels.ref import (
+    delay_hist_ref,
+    interval_count_ref,
+    long_load_ratio_ref,
+    server_scan_ref,
+)
+from compile.kernels.server_scan import server_scan
+from compile.shapes import PAD_SENTINEL
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- server_scan
+
+
+class TestServerScan:
+    def _random_inputs(self, seed, servers):
+        r = rng(seed)
+        rw = jnp.asarray(r.exponential(100.0, servers), jnp.float32)
+        lc = jnp.asarray(r.integers(0, 3, servers), jnp.float32)
+        ql = jnp.asarray(r.integers(0, 20, servers), jnp.float32)
+        active = jnp.asarray(r.integers(0, 2, servers), jnp.float32)
+        return rw, lc, ql, active
+
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("servers", [512, 1024, 4096])
+    def test_matches_ref(self, seed, servers):
+        inputs = self._random_inputs(seed, servers)
+        scores, stats = server_scan(*inputs)
+        scores_r, stats_r = server_scan_ref(*inputs)
+        np.testing.assert_allclose(scores, scores_r, rtol=1e-6)
+        np.testing.assert_allclose(stats, stats_r, rtol=1e-6)
+
+    def test_all_idle_cluster(self):
+        servers = 512
+        z = jnp.zeros(servers, jnp.float32)
+        active = jnp.ones(servers, jnp.float32)
+        scores, stats = server_scan(z, z, z, active)
+        assert float(stats[0]) == 0.0  # no long servers
+        assert float(stats[3]) == servers
+        np.testing.assert_allclose(scores, np.zeros(servers))
+
+    def test_all_long_cluster(self):
+        servers = 512
+        ones = jnp.ones(servers, jnp.float32)
+        _, stats = server_scan(ones * 50.0, ones, ones, ones)
+        assert float(stats[0]) == servers  # every server runs a long task
+        lr = long_load_ratio_ref(ones, ones)
+        assert float(lr) == 1.0
+
+    def test_padding_scores_sentinel(self):
+        servers = 512
+        r = rng(7)
+        rw = jnp.asarray(r.exponential(10.0, servers), jnp.float32)
+        active = jnp.zeros(servers, jnp.float32).at[: servers // 2].set(1.0)
+        scores, stats = server_scan(rw, rw, rw, active)
+        assert np.all(np.asarray(scores[servers // 2 :]) == PAD_SENTINEL)
+        assert float(stats[3]) == servers // 2
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 8),
+    )
+    def test_hypothesis_shapes(self, seed, blocks):
+        servers = 512 * blocks
+        inputs = self._random_inputs(seed, servers)
+        scores, stats = server_scan(*inputs)
+        scores_r, stats_r = server_scan_ref(*inputs)
+        np.testing.assert_allclose(scores, scores_r, rtol=1e-6)
+        np.testing.assert_allclose(stats, stats_r, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), block=st.sampled_from([64, 128, 256]))
+    def test_block_size_invariance(self, seed, block):
+        inputs = self._random_inputs(seed, 1024)
+        scores_a, stats_a = server_scan(*inputs, block=block)
+        scores_b, stats_b = server_scan(*inputs, block=512)
+        np.testing.assert_allclose(scores_a, scores_b, rtol=1e-6)
+        np.testing.assert_allclose(stats_a, stats_b, rtol=1e-6)
+
+
+# ------------------------------------------------------------- interval_count
+
+
+class TestIntervalCount:
+    def _random_intervals(self, seed, tasks, buckets, horizon=10_000.0):
+        r = rng(seed)
+        starts = r.uniform(0.0, horizon, tasks).astype(np.float32)
+        durs = r.exponential(300.0, tasks).astype(np.float32)
+        ends = starts + durs
+        times = np.linspace(0.0, horizon, buckets, dtype=np.float32)
+        return jnp.asarray(starts), jnp.asarray(ends), jnp.asarray(times)
+
+    @pytest.mark.parametrize("seed", range(3))
+    @pytest.mark.parametrize("tasks,buckets", [(1024, 512), (4096, 1024), (16384, 2048)])
+    def test_matches_ref(self, seed, tasks, buckets):
+        s, e, t = self._random_intervals(seed, tasks, buckets)
+        got = interval_count(s, e, t)
+        want = interval_count_ref(s, e, t)
+        np.testing.assert_allclose(got, want)
+
+    def test_zero_length_intervals_never_counted(self):
+        s = jnp.linspace(0.0, 100.0, 1024, dtype=jnp.float32)
+        t = jnp.linspace(0.0, 100.0, 512, dtype=jnp.float32)
+        got = interval_count(s, s, t)  # end == start -> empty interval
+        np.testing.assert_allclose(got, np.zeros(512))
+
+    def test_padding_sentinel_never_counted(self):
+        s = jnp.full((1024,), PAD_SENTINEL, jnp.float32)
+        e = jnp.full((1024,), PAD_SENTINEL, jnp.float32)
+        t = jnp.linspace(0.0, 1e6, 512, dtype=jnp.float32)
+        got = interval_count(s, e, t)
+        np.testing.assert_allclose(got, np.zeros(512))
+
+    def test_single_task_boundary_semantics(self):
+        # Interval [10, 20): counted at t=10, not at t=20.
+        s = jnp.full((1024,), PAD_SENTINEL, jnp.float32).at[0].set(10.0)
+        e = jnp.full((1024,), PAD_SENTINEL, jnp.float32).at[0].set(20.0)
+        t = jnp.asarray(
+            np.concatenate([[9.0, 10.0, 15.0, 20.0, 21.0], np.full(507, 1e9)]),
+            jnp.float32,
+        )
+        got = np.asarray(interval_count(s, e, t))
+        assert list(got[:5]) == [0.0, 1.0, 1.0, 0.0, 0.0]
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        task_tiles=st.integers(1, 4),
+        bucket_tiles=st.integers(1, 3),
+    )
+    def test_hypothesis_shapes(self, seed, task_tiles, bucket_tiles):
+        tasks, buckets = 1024 * task_tiles, 512 * bucket_tiles
+        s, e, t = self._random_intervals(seed, tasks, buckets)
+        np.testing.assert_allclose(
+            interval_count(s, e, t), interval_count_ref(s, e, t)
+        )
+
+    def test_chunk_accumulation_equals_whole(self):
+        # The rust runtime streams task chunks and sums counts — verify the
+        # decomposition is exact.
+        s, e, t = self._random_intervals(11, 4096, 512)
+        whole = np.asarray(interval_count(s, e, t))
+        parts = sum(
+            np.asarray(interval_count(s[i : i + 1024], e[i : i + 1024], t))
+            for i in range(0, 4096, 1024)
+        )
+        np.testing.assert_allclose(whole, parts)
+
+
+# ----------------------------------------------------------------- delay_hist
+
+
+class TestDelayHist:
+    def _random(self, seed, n, m):
+        r = rng(seed)
+        delays = jnp.asarray(r.exponential(200.0, n), jnp.float32)
+        edges = jnp.asarray(np.sort(r.uniform(0, 2000.0, m)), jnp.float32)
+        return delays, edges
+
+    @pytest.mark.parametrize("seed", range(3))
+    @pytest.mark.parametrize("n,m", [(1024, 512), (16384, 512)])
+    def test_matches_ref(self, seed, n, m):
+        d, e = self._random(seed, n, m)
+        np.testing.assert_allclose(delay_hist(d, e), delay_hist_ref(d, e))
+
+    def test_cdf_is_monotone_and_complete(self):
+        d, e = self._random(3, 4096, 512)
+        counts = np.asarray(delay_hist(d, e))
+        assert np.all(np.diff(counts) >= 0.0)
+        # Final edge above max delay captures every sample.
+        e_full = jnp.asarray(
+            np.concatenate([np.asarray(e)[:-1], [1e9]]), jnp.float32
+        )
+        counts_full = np.asarray(delay_hist(d, e_full))
+        assert counts_full[-1] == 4096.0
+
+    def test_padding_excluded(self):
+        d = jnp.full((1024,), PAD_SENTINEL, jnp.float32).at[:10].set(5.0)
+        e = jnp.asarray(np.linspace(0, 100, 512), jnp.float32)
+        counts = np.asarray(delay_hist(d, e))
+        assert counts[-1] == 10.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 4))
+    def test_hypothesis_shapes(self, seed, tiles):
+        d, e = self._random(seed, 1024 * tiles, 512)
+        np.testing.assert_allclose(delay_hist(d, e), delay_hist_ref(d, e))
+
+    def test_zero_delay_boundary(self):
+        # delay == edge counts as "<=" (closed on the right).
+        d = jnp.full((1024,), PAD_SENTINEL, jnp.float32).at[0].set(0.0)
+        e = jnp.zeros((512,), jnp.float32)
+        counts = np.asarray(delay_hist(d, e))
+        assert np.all(counts == 1.0)

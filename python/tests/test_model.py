@@ -1,0 +1,86 @@
+"""L2 shape/semantics tests: model entry points + AOT lowering round-trip."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, shapes
+from compile.kernels.ref import long_load_ratio_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _pad(a, n, fill=0.0):
+    out = np.full(n, fill, np.float32)
+    out[: len(a)] = a
+    return jnp.asarray(out)
+
+
+class TestClusterState:
+    def test_long_load_ratio_matches_paper_definition(self):
+        # 4000-server cluster, 3800 of them running long tasks: l_r = 0.95,
+        # exactly the paper's default threshold scenario.
+        S = shapes.SERVERS
+        lc = _pad(np.concatenate([np.ones(3800), np.zeros(200)]), S)
+        active = _pad(np.ones(4000), S)
+        rw = _pad(np.ones(4000) * 10.0, S)
+        ql = _pad(np.zeros(4000), S)
+        scores, stats, l_r = model.cluster_state(rw, lc, ql, active)
+        assert scores.shape == (S,)
+        assert stats.shape == (4,)
+        np.testing.assert_allclose(float(l_r[0]), 0.95, rtol=1e-6)
+        np.testing.assert_allclose(
+            float(l_r[0]), float(long_load_ratio_ref(lc, active)), rtol=1e-6
+        )
+
+    def test_empty_cluster_ratio_zero(self):
+        S = shapes.SERVERS
+        z = jnp.zeros(S, jnp.float32)
+        _, _, l_r = model.cluster_state(z, z, z, z)
+        assert float(l_r[0]) == 0.0
+
+
+class TestDelayCdf:
+    def test_cdf_normalised(self):
+        n = shapes.DELAY_CHUNK
+        delays = _pad(np.linspace(0, 100, 1000), n, fill=shapes.PAD_SENTINEL)
+        edges = jnp.asarray(np.linspace(0, 200, shapes.EDGES), jnp.float32)
+        counts, cdf = model.delay_cdf(delays, edges, jnp.asarray([1000.0]))
+        assert float(cdf[-1]) == pytest.approx(1.0)
+        assert np.all(np.diff(np.asarray(cdf)) >= 0)
+
+
+class TestAotLowering:
+    @pytest.fixture(scope="class")
+    def artifacts(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        manifest = aot.lower_all(str(out))
+        return out, manifest
+
+    def test_all_artifacts_written(self, artifacts):
+        out, manifest = artifacts
+        for name, meta in shapes.MANIFEST.items():
+            path = os.path.join(out, meta["path"])
+            assert os.path.exists(path), name
+            text = open(path).read()
+            assert "HloModule" in text
+            assert manifest["artifacts"][name]["bytes"] == len(text)
+
+    def test_hlo_text_has_expected_entry_shapes(self, artifacts):
+        out, _ = artifacts
+        text = open(os.path.join(out, "cluster_state.hlo.txt")).read()
+        # Four f32[SERVERS] parameters.
+        assert text.count(f"f32[{shapes.SERVERS}]") >= 4
+
+    def test_manifest_roundtrip(self, artifacts):
+        out, manifest = artifacts
+        path = os.path.join(out, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f)
+        loaded = json.load(open(path))
+        assert set(loaded["artifacts"]) == set(shapes.MANIFEST)

@@ -1,0 +1,46 @@
+//! Ablation bench: reactive (§3.2) vs predictive resizing (DESIGN.md exp
+//! `abl-forecast`). The predictive mode forecasts l_r one
+//! provisioning-delay ahead through the AOT-compiled `lr_forecast`
+//! artifact (Holt level+trend over the snapshot history) and
+//! pre-provisions, hiding the 120 s lag behind the crowding trend.
+//!
+//! `cargo bench --offline --bench abl_forecast`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::bench;
+use cloudcoaster::coordinator::sweep::forecast_sweep;
+
+fn main() {
+    let base = bench_common::bench_base();
+    let reports = forecast_sweep(&base).unwrap();
+    println!("== Ablation: reactive vs predictive resizing (bench scale) ==");
+    println!(
+        "{:>24} {:>12} {:>12} {:>14} {:>11}",
+        "mode", "mean delay", "p99 delay", "avg transients", "requested"
+    );
+    for rep in &reports {
+        println!(
+            "{:>24} {:>11.1}s {:>11.1}s {:>14.1} {:>11}",
+            rep.name,
+            rep.short_delay.mean,
+            rep.short_delay.p99,
+            rep.avg_transients,
+            rep.transients_requested
+        );
+    }
+    let reactive = &reports[0];
+    let predictive = &reports[1];
+    println!(
+        "\npredictive vs reactive: {:.2}X mean delay, {:+.1} avg transients",
+        reactive.short_delay.mean / predictive.short_delay.mean.max(1e-9),
+        predictive.avg_transients - reactive.avg_transients,
+    );
+    // The predictive mode must at minimum not lose work and must hold at
+    // least as many transients (it pre-provisions).
+    assert!(predictive.avg_transients >= reactive.avg_transients * 0.9);
+
+    bench("abl_forecast/predictive_run", 0, 3, || {
+        let _ = forecast_sweep(&base).unwrap();
+    });
+}

@@ -1,0 +1,45 @@
+//! Ablation bench: dynamic spot-market pricing (DESIGN.md exp
+//! `abl-market`). The paper assumes fixed 1/r pricing and zero
+//! revocations; this sweep runs CloudCoaster against a regime-switching
+//! price process at different bid levels — low bids mean cheaper servers
+//! but price-crossing revocations and unavailable windows.
+//!
+//! `cargo bench --offline --bench abl_market`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::bench;
+use cloudcoaster::coordinator::sweep::bid_sweep;
+
+fn main() {
+    let base = bench_common::bench_base();
+    let bids = [None, Some(2.0), Some(0.50), Some(0.35)];
+    let reports = bid_sweep(&base, &bids).unwrap();
+    println!("== Ablation: spot bid sweep (bench scale) ==");
+    println!(
+        "{:>12} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "bid", "mean delay", "p99 delay", "revoked", "rescheduled", "avg transnt"
+    );
+    for rep in &reports {
+        println!(
+            "{:>12} {:>11.1}s {:>11.1}s {:>10} {:>12} {:>12.1}",
+            rep.name,
+            rep.short_delay.mean,
+            rep.short_delay.p99,
+            rep.transients_revoked,
+            rep.tasks_rescheduled,
+            rep.avg_transients,
+        );
+    }
+    // Fixed pricing never revokes; a bid at/above on-demand survives all
+    // but the rarest spikes; tight bids churn.
+    assert_eq!(reports[0].transients_revoked, 0);
+    assert!(
+        reports[3].transients_revoked >= reports[1].transients_revoked,
+        "tight bid should revoke at least as much as a high bid"
+    );
+
+    bench("abl_market/bid_0.5_run", 0, 3, || {
+        let _ = bid_sweep(&base, &[Some(0.5)]).unwrap();
+    });
+}

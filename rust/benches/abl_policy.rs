@@ -1,0 +1,41 @@
+//! Ablation bench: the §3.3 asymmetric grow/shrink policy vs. symmetric
+//! alternatives (DESIGN.md exp `abl-policy`): paper (aggressive add,
+//! one drain per cooldown), paper-literal (no cooldown), symmetric
+//! aggressive (drain as fast as add), and slow-add.
+//!
+//! `cargo bench --offline --bench abl_policy`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::bench;
+use cloudcoaster::coordinator::sweep::policy_sweep;
+
+fn main() {
+    let base = bench_common::bench_base();
+    let reports = policy_sweep(&base).unwrap();
+    println!("== Ablation: resize-policy sweep (bench scale) ==");
+    println!(
+        "{:>28} {:>12} {:>12} {:>12} {:>11}",
+        "policy", "mean delay", "p99 delay", "avg transnt", "requested"
+    );
+    for rep in &reports {
+        println!(
+            "{:>28} {:>11.1}s {:>11.1}s {:>12.1} {:>11}",
+            rep.name,
+            rep.short_delay.mean,
+            rep.short_delay.p99,
+            rep.avg_transients,
+            rep.transients_requested
+        );
+    }
+    // The no-cooldown literal policy must churn more than the paper
+    // policy (more requests for the same workload).
+    assert!(
+        reports[1].transients_requested >= reports[0].transients_requested,
+        "cooldown should reduce churn"
+    );
+
+    bench("abl_policy/paper_run", 0, 3, || {
+        let _ = policy_sweep(&base).map(|r| r.len()).unwrap();
+    });
+}

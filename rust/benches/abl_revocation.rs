@@ -1,0 +1,39 @@
+//! Ablation bench: behaviour under forced revocations (DESIGN.md exp
+//! `abl-revoke`). The paper's evaluation never experiences a revocation
+//! (lifetimes ≪ MTTF); this sweep injects MTTF ∈ {1 h, 4 h, ∞} and shows
+//! the §3.3 duplicate-copy mechanism keeping the workload lossless.
+//!
+//! `cargo bench --offline --bench abl_revocation`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::bench;
+use cloudcoaster::coordinator::sweep::revocation_sweep;
+
+fn main() {
+    let base = bench_common::bench_base();
+    let mttfs = [None, Some(4.0 * 3600.0), Some(3600.0)];
+    let reports = revocation_sweep(&base, &mttfs).unwrap();
+    println!("== Ablation: revocation MTTF sweep (bench scale) ==");
+    println!(
+        "{:>12} {:>12} {:>12} {:>10} {:>14}",
+        "mttf", "mean delay", "p99 delay", "revoked", "rescheduled"
+    );
+    for rep in &reports {
+        println!(
+            "{:>12} {:>11.1}s {:>11.1}s {:>10} {:>14}",
+            rep.name,
+            rep.short_delay.mean,
+            rep.short_delay.p99,
+            rep.transients_revoked,
+            rep.tasks_rescheduled
+        );
+    }
+    assert_eq!(reports[0].transients_revoked, 0, "mttf=inf must never revoke");
+    // Harsher market -> at least as many revocations.
+    assert!(reports[2].transients_revoked >= reports[1].transients_revoked);
+
+    bench("abl_revocation/mttf_1h_run", 0, 3, || {
+        let _ = revocation_sweep(&base, &[Some(3600.0)]).unwrap();
+    });
+}

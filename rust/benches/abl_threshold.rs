@@ -1,0 +1,41 @@
+//! Ablation bench: sensitivity to the long-load-ratio threshold `L_r^T`
+//! (DESIGN.md exp `abl-thresh`). The paper fixes L_r^T = 0.95; this
+//! sweep shows the delay/cost trade-off around that choice.
+//!
+//! `cargo bench --offline --bench abl_threshold`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::bench;
+use cloudcoaster::coordinator::sweep::threshold_sweep;
+
+fn main() {
+    let base = bench_common::bench_base();
+    let thresholds = [0.5, 0.75, 0.9, 0.95, 0.99];
+    let reports = threshold_sweep(&base, &thresholds).unwrap();
+    println!("== Ablation: L_r^T sweep (bench scale) ==");
+    println!(
+        "{:>10} {:>12} {:>12} {:>14} {:>12}",
+        "L_r^T", "mean delay", "p99 delay", "avg transients", "requested"
+    );
+    for (t, rep) in thresholds.iter().zip(&reports) {
+        println!(
+            "{:>10.2} {:>11.1}s {:>11.1}s {:>14.1} {:>12}",
+            t,
+            rep.short_delay.mean,
+            rep.short_delay.p99,
+            rep.avg_transients,
+            rep.transients_requested
+        );
+    }
+    // Expected shape: lower threshold -> more transients -> lower delay,
+    // higher cost. Sanity-check monotonicity of the cost side.
+    assert!(
+        reports.first().unwrap().avg_transients >= reports.last().unwrap().avg_transients,
+        "lower threshold should hold at least as many transients"
+    );
+
+    bench("abl_threshold/one_run", 0, 3, || {
+        let _ = threshold_sweep(&base, &[0.95]).unwrap();
+    });
+}

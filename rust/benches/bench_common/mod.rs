@@ -1,0 +1,26 @@
+//! Shared configuration for the bench binaries: a reduced-scale but
+//! dynamics-preserving version of the paper setup (1000 servers / 6 h
+//! horizon instead of 4000 / 24 h) so each bench finishes in seconds
+//! while keeping the crowded-regime behaviour. The full-scale run lives
+//! in `examples/paper_eval.rs`.
+
+use cloudcoaster::coordinator::config::{ExperimentConfig, WorkloadSource};
+use cloudcoaster::trace::synth::YahooLikeParams;
+
+pub fn bench_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.cluster_size = 1000;
+    cfg.short_partition = 20;
+    let mut p = YahooLikeParams::default();
+    p.horizon = 6.0 * 3600.0;
+    // Scale arrival rates with the cluster (1/4 of paper scale), dwell
+    // times with the horizon so phases still alternate.
+    p.short_arrivals.calm_rate /= 4.0;
+    p.short_arrivals.burst_rate /= 4.0;
+    p.long_arrivals.calm_rate /= 4.0;
+    p.long_arrivals.burst_rate /= 4.0;
+    p.long_arrivals.calm_dwell /= 4.0;
+    p.long_arrivals.burst_dwell /= 4.0;
+    cfg.workload = WorkloadSource::YahooLike(p);
+    cfg
+}

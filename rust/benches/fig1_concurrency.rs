@@ -1,0 +1,58 @@
+//! Bench: regenerate **Figure 1** — theoretical concurrent tasks on the
+//! Google-like trace (100 s then 4 h averaging) — and time the interval
+//! counting analytics (XLA artifact vs native reference).
+//!
+//! `cargo bench --offline --bench fig1_concurrency`
+
+use cloudcoaster::benchkit::{bench, black_box};
+use cloudcoaster::coordinator::report::artifacts_dir;
+use cloudcoaster::metrics::TimeSeries;
+use cloudcoaster::runtime::{Analytics, AnalyticsEngine, NativeAnalytics};
+use cloudcoaster::sim::Rng;
+use cloudcoaster::trace::synth::{google_like, GoogleLikeParams};
+
+fn main() {
+    let mut params = GoogleLikeParams::default();
+    params.horizon = 2.0 * 86_400.0; // 2 days is plenty for a bench
+    let workload = google_like(&params, &mut Rng::new(23));
+    let mut starts = Vec::new();
+    let mut ends = Vec::new();
+    for job in &workload.jobs {
+        for &d in &job.task_durations {
+            starts.push(job.arrival as f32);
+            ends.push((job.arrival + d) as f32);
+        }
+    }
+    let n_points = (params.horizon / 100.0) as usize;
+    let points: Vec<f32> = (0..n_points.min(2048)).map(|i| i as f32 * 100.0).collect();
+    println!(
+        "fig1 workload: {} jobs, {} tasks, {} sample points",
+        workload.num_jobs(),
+        starts.len(),
+        points.len()
+    );
+
+    let mut engine = AnalyticsEngine::auto(&artifacts_dir());
+    let counts = engine.as_dyn().concurrency(&starts, &ends, &points).unwrap();
+    let mut fine = TimeSeries::new();
+    for (p, c) in points.iter().zip(&counts) {
+        fine.push(*p as f64, *c as f64);
+    }
+    let coarse = fine.rebucket(4.0 * 3600.0);
+    let peak = coarse.max();
+    let trough = coarse.points.iter().map(|&(_, v)| v).fold(f64::INFINITY, f64::min);
+    println!(
+        "fig1 series: mean {:.0} tasks, peak/trough {:.1}X (paper: >6X), {} coarse buckets",
+        fine.mean(),
+        peak / trough.max(1.0),
+        coarse.len()
+    );
+
+    bench(&format!("fig1/{}_interval_count", engine.as_dyn().name()), 1, 5, || {
+        black_box(engine.as_dyn().concurrency(&starts, &ends, &points).unwrap());
+    });
+    let mut native = NativeAnalytics;
+    bench("fig1/native_interval_count", 1, 5, || {
+        black_box(native.concurrency(&starts, &ends, &points).unwrap());
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate **Figure 3** — CDFs of short-task queueing delay for
+//! the Eagle baseline and CloudCoaster at r = 1, 2, 3 — on the reduced
+//! bench scale, and time one full simulation run.
+//!
+//! `cargo bench --offline --bench fig3_queueing_cdf`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::{bench, black_box};
+use cloudcoaster::coordinator::report::{build_workload, fig3_markdown};
+use cloudcoaster::coordinator::runner::simulate;
+use cloudcoaster::coordinator::sweep::paper_sweep;
+use cloudcoaster::sched::Hybrid;
+
+fn main() {
+    let base = bench_common::bench_base();
+    let reports = paper_sweep(&base, &[1.0, 2.0, 3.0]).unwrap();
+    println!("== Figure 3 (bench scale: 1000 servers, 6h) ==");
+    println!("{}", fig3_markdown(&reports));
+    println!("CDF probe (delay <= 60s fraction):");
+    for rep in &reports {
+        let idx = rep.cdf.edges.partition_point(|&e| e <= 60.0);
+        println!(
+            "  {:<20} {:.3}",
+            rep.name,
+            rep.cdf.values[idx.saturating_sub(1).min(rep.cdf.values.len() - 1)]
+        );
+    }
+
+    // Timing: one full baseline simulation (the core DES workload).
+    let workload = build_workload(&base).unwrap();
+    let sim_cfg = {
+        let mut c = base.clone();
+        c.scheduler = cloudcoaster::coordinator::config::SchedulerKind::Eagle;
+        c.to_sim_config()
+    };
+    bench("fig3/eagle_simulation_6h_1000srv", 1, 5, || {
+        let mut sched = Hybrid::eagle(2.0);
+        black_box(simulate(&workload, &mut sched, &sim_cfg));
+    });
+    let cc_cfg = base.to_sim_config();
+    bench("fig3/cloudcoaster_simulation_6h_1000srv", 1, 5, || {
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        black_box(simulate(&workload, &mut sched, &cc_cfg));
+    });
+}

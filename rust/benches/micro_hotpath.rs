@@ -1,0 +1,110 @@
+//! Microbenchmarks of the hot paths (§Perf, L3): event queue push/pop,
+//! argmin-tree updates, probe placement, task stealing, and the PJRT
+//! analytics invocation latency (the epoch path).
+//!
+//! `cargo bench --offline --bench micro_hotpath`
+
+use cloudcoaster::benchkit::{bench, black_box, fmt_ns};
+use cloudcoaster::cluster::{Cluster, QueuePolicy};
+use cloudcoaster::coordinator::report::artifacts_dir;
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::runtime::AnalyticsEngine;
+use cloudcoaster::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
+use cloudcoaster::sim::{Engine, Event, Rng};
+use cloudcoaster::util::{JobId, MinTree, ServerId};
+
+fn bench_event_queue() {
+    // Throughput of schedule+pop on a queue with realistic depth.
+    let n = 100_000u64;
+    let r = bench("micro/engine_push_pop_100k", 1, 10, || {
+        let mut e = Engine::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..n {
+            e.schedule(rng.f64() * 1e6, Event::Snapshot);
+        }
+        while e.pop().is_some() {}
+        black_box(e.processed());
+    });
+    let evps = 2.0 * n as f64 / (r.median_ns() / 1e9);
+    println!("  -> {:.1}M event-ops/s (push+pop)", evps / 1e6);
+}
+
+fn bench_mintree() {
+    let mut tree = MinTree::new(3920);
+    let mut rng = Rng::new(2);
+    let r = bench("micro/mintree_update_argmin_x1000", 10, 20, || {
+        for _ in 0..1000 {
+            let i = rng.below(3920) as usize;
+            tree.update(i, rng.f64() * 1e4);
+            black_box(tree.argmin());
+        }
+    });
+    println!("  -> {} per update+argmin", fmt_ns(r.median_ns() / 1000.0));
+}
+
+fn bench_probe_placement() {
+    let mut cluster = Cluster::new(3920, 80, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(3.0);
+    let mut rng = Rng::new(3);
+    // Pre-load some servers.
+    for i in 0..2000u32 {
+        let t = cluster.add_task(JobId(0), 100.0, i % 5 == 0, 0.0);
+        cluster.enqueue(t, ServerId(i), &mut engine, &mut rec);
+    }
+    let pool: Vec<ServerId> = cluster.general.clone();
+    let mut buf = ProbeBuffers::new();
+    let mut out = Vec::new();
+    let costs = vec![30.0f64; 20];
+    let r = bench("micro/probe_place_20task_job", 100, 20, || {
+        buf.candidates.clear();
+        sample_from_pool(&pool, 40, &cluster, &mut rng, &mut buf);
+        filter_long(&cluster, &mut buf);
+        assign_least_loaded(&cluster, &costs, &mut buf, &mut out);
+        black_box(out.len());
+    });
+    println!("  -> {} per short-job placement (40 probes)", fmt_ns(r.median_ns()));
+}
+
+fn bench_steal() {
+    let r = bench("micro/steal_batch8", 10, 20, || {
+        let mut cluster = Cluster::new(16, 2, QueuePolicy::Fifo);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(1.0);
+        let victim = cluster.short_reserved[0];
+        for i in 0..64 {
+            let t = cluster.add_task(JobId(i), 10.0, false, 0.0);
+            cluster.enqueue(t, victim, &mut engine, &mut rec);
+        }
+        let thief = cluster.short_reserved[1];
+        black_box(cluster.steal_short_tasks(victim, thief, 8, &mut engine, &mut rec));
+    });
+    println!("  -> {} per steal (incl. setup)", fmt_ns(r.median_ns()));
+}
+
+fn bench_analytics() {
+    let mut engine = AnalyticsEngine::auto(&artifacts_dir());
+    let name = engine.as_dyn().name().to_string();
+    let mut rng = Rng::new(4);
+    let n = 4000;
+    let rw: Vec<f32> = (0..n).map(|_| (rng.f64() * 500.0) as f32).collect();
+    let lc: Vec<f32> = (0..n).map(|_| rng.below(2) as f32).collect();
+    let ql: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+    let act = vec![1.0f32; n];
+    bench(&format!("micro/{name}_cluster_state_4000srv"), 2, 10, || {
+        black_box(engine.as_dyn().cluster_state(&rw, &lc, &ql, &act).unwrap());
+    });
+    let delays: Vec<f32> = (0..100_000).map(|_| rng.exponential(200.0) as f32).collect();
+    let edges: Vec<f32> = (0..512).map(|i| i as f32 * 10.0).collect();
+    bench(&format!("micro/{name}_delay_cdf_100k"), 1, 5, || {
+        black_box(engine.as_dyn().delay_cdf(&delays, &edges).unwrap());
+    });
+}
+
+fn main() {
+    bench_event_queue();
+    bench_mintree();
+    bench_probe_placement();
+    bench_steal();
+    bench_analytics();
+}

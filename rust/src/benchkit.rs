@@ -1,0 +1,107 @@
+//! Minimal benchmark harness (criterion is not available in this build
+//! environment, so `cargo bench` targets use `harness = false` binaries
+//! built on this module).
+//!
+//! Provides warmup + repeated timed runs, robust summary statistics, and
+//! a stable one-line output format the bench binaries share:
+//!
+//! ```text
+//! bench <name>: median 12.34ms  mean 12.50ms ± 0.42ms  (n=10)
+//! ```
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        let mut v = self.samples_ns.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v[v.len() / 2]
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::mean(&self.samples_ns)
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        let m = self.mean_ns();
+        let var = self.samples_ns.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples_ns.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "bench {}: median {}  mean {} ± {}  (n={})",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.std_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult { name: name.to_string(), samples_ns: samples };
+    println!("{}", r.report());
+    r
+}
+
+/// Black-box: defeat constant-folding of bench results.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 1, 5, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.median_ns() >= 0.0);
+        assert!(r.report().contains("bench noop"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

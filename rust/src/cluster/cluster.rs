@@ -1,0 +1,663 @@
+//! The cluster: server + task arenas, partitions, and the incremental
+//! state the schedulers and the transient manager read (`N_long`,
+//! `N_total`, the long-load ratio).
+//!
+//! All mutation goes through methods here so the invariants hold by
+//! construction:
+//!
+//! * `n_long_servers` == number of Active/Draining servers with
+//!   `long_tasks > 0` (the paper's `N_long`).
+//! * `n_total` == number of Active/Draining servers (the paper's
+//!   `N_total`).
+//! * a server's `running` task is always in state `Running` with
+//!   `ran_on == server`.
+
+use crate::cluster::{Pool, QueuePolicy, Server, ServerKind, ServerState, Task, TaskState};
+use crate::metrics::Recorder;
+use crate::sim::{Engine, Event};
+use crate::util::{JobId, MinTree, ServerId, TaskId, Time};
+
+/// Full simulated-cluster state.
+pub struct Cluster {
+    pub servers: Vec<Server>,
+    pub tasks: Vec<Task>,
+    pub policy: QueuePolicy,
+    /// Servers (Active or Draining) currently hosting >= 1 long task.
+    n_long_servers: usize,
+    /// Servers currently Active or Draining.
+    n_total: usize,
+    /// On-demand general partition (long + short), fixed.
+    pub general: Vec<ServerId>,
+    /// On-demand short-only partition, fixed ("buffer", §3.1).
+    pub short_reserved: Vec<ServerId>,
+    /// Active transient servers (dynamic short-only partition).
+    pub transient_pool: Vec<ServerId>,
+    /// Argmin index over general-partition `est_work` — O(log N) exact
+    /// least-loaded placement for the centralized long-job scheduler.
+    gen_tree: MinTree,
+}
+
+impl Cluster {
+    /// Build the static cluster: `n_general` general servers plus
+    /// `n_short_reserved` on-demand short-only servers.
+    pub fn new(n_general: usize, n_short_reserved: usize, policy: QueuePolicy) -> Self {
+        let mut servers = Vec::with_capacity(n_general + n_short_reserved);
+        let mut general = Vec::with_capacity(n_general);
+        let mut short_reserved = Vec::with_capacity(n_short_reserved);
+        for i in 0..n_general + n_short_reserved {
+            let id = ServerId(i as u32);
+            let pool = if i < n_general { Pool::General } else { Pool::ShortReserved };
+            servers.push(Server::new(id, ServerKind::OnDemand, pool, ServerState::Active, 0.0));
+            if i < n_general {
+                general.push(id);
+            } else {
+                short_reserved.push(id);
+            }
+        }
+        Cluster {
+            n_total: servers.len(),
+            servers,
+            tasks: Vec::new(),
+            policy,
+            n_long_servers: 0,
+            general,
+            short_reserved,
+            transient_pool: Vec::new(),
+            gen_tree: MinTree::new(n_general.max(1)),
+        }
+    }
+
+    /// Keep the general-partition argmin tree in sync after an `est_work`
+    /// change. No-op for servers outside the general prefix.
+    #[inline]
+    fn sync_tree(&mut self, sid: ServerId) {
+        let idx = sid.index();
+        if idx < self.general.len() {
+            self.gen_tree.update(idx, self.servers[idx].est_work);
+        }
+    }
+
+    /// The general-partition server with the least estimated wait — the
+    /// centralized scheduler's placement target for long tasks.
+    #[inline]
+    pub fn least_loaded_general(&self) -> ServerId {
+        self.general[self.gen_tree.argmin()]
+    }
+
+    // ------------------------------------------------------------ queries
+
+    #[inline]
+    pub fn n_long_servers(&self) -> usize {
+        self.n_long_servers
+    }
+
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    /// The paper's long-load ratio `l_r = N_long / N_total` (§3.2).
+    #[inline]
+    pub fn long_load_ratio(&self) -> f64 {
+        if self.n_total == 0 {
+            0.0
+        } else {
+            self.n_long_servers as f64 / self.n_total as f64
+        }
+    }
+
+    #[inline]
+    pub fn server(&self, id: ServerId) -> &Server {
+        &self.servers[id.index()]
+    }
+
+    #[inline]
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.index()]
+    }
+
+    /// Does this server currently host any long task? (The "succinct
+    /// state" bit Eagle's distributed schedulers use to dodge
+    /// head-of-line blocking.)
+    #[inline]
+    pub fn has_long(&self, id: ServerId) -> bool {
+        self.servers[id.index()].long_tasks > 0
+    }
+
+    // ---------------------------------------------------------- tasks
+
+    /// Create a task in the arena (does not enqueue it).
+    pub fn add_task(&mut self, job: JobId, duration: f64, is_long: bool, now: Time) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        self.tasks.push(Task::new(id, job, duration, is_long, now));
+        id
+    }
+
+    /// Enqueue (a copy of) `task` on `server`; starts it immediately if
+    /// the server is idle. Panics if the server is not accepting work.
+    pub fn enqueue(
+        &mut self,
+        task_id: TaskId,
+        server_id: ServerId,
+        engine: &mut Engine,
+        rec: &mut Recorder,
+    ) {
+        let is_long;
+        {
+            let task = &mut self.tasks[task_id.index()];
+            debug_assert_eq!(task.state, TaskState::Queued, "enqueue of non-queued task");
+            task.copies += 1;
+            task.add_location(server_id);
+            is_long = task.is_long;
+        }
+        let dur = self.tasks[task_id.index()].duration;
+        let server = &mut self.servers[server_id.index()];
+        assert!(server.accepting(), "enqueue on non-accepting server {server_id:?}");
+        server.queue.push_back(task_id);
+        server.est_work += dur;
+        if is_long {
+            server.long_tasks += 1;
+            if server.long_tasks == 1 {
+                self.n_long_servers += 1;
+            }
+        }
+        self.sync_tree(server_id);
+        if self.servers[server_id.index()].running.is_none() {
+            self.try_start_next(server_id, engine, rec);
+        }
+    }
+
+    /// Pop the next runnable task (per policy) and start it. No-op if the
+    /// slot is busy or the queue has no runnable entry.
+    pub fn try_start_next(
+        &mut self,
+        server_id: ServerId,
+        engine: &mut Engine,
+        rec: &mut Recorder,
+    ) {
+        let now = engine.now();
+        if self.servers[server_id.index()].running.is_some() {
+            return;
+        }
+        let mut pruned: Vec<TaskId> = Vec::new();
+        loop {
+            let idx = {
+                let server = &mut self.servers[server_id.index()];
+                pruned.clear();
+                let idx = server.select_next(&self.tasks, self.policy, now, &mut pruned);
+                idx
+            };
+            for &tid in &pruned {
+                // Settle the stale copy: its est_work contribution was
+                // already discounted when the live copy started.
+                let t = &mut self.tasks[tid.index()];
+                t.copies -= 1;
+                t.remove_location(server_id);
+                rec.stale_copies_skipped += 1;
+            }
+            let Some(idx) = idx else { return };
+            let server = &mut self.servers[server_id.index()];
+            let task_id = server.queue.remove(idx).expect("index from select_next");
+            let task = &mut self.tasks[task_id.index()];
+            if task.state != TaskState::Queued {
+                // Stale copy (non-front selection path): settle like the
+                // pruned entries above.
+                task.copies -= 1;
+                task.remove_location(server_id);
+                rec.stale_copies_skipped += 1;
+                continue;
+            }
+            task.state = TaskState::Running;
+            task.started_at = now;
+            task.ran_on = Some(server_id);
+            task.copies -= 1;
+            task.remove_location(server_id);
+            let other = task.other_location(server_id);
+            let dur = task.duration;
+            let is_long = task.is_long;
+            let delay = task.queueing_delay();
+            server.running = Some(task_id);
+            // est_work keeps the running task's full duration as the
+            // occupancy estimate (matches the probe-score convention) —
+            // the queued contribution simply becomes the running one.
+            rec.task_started(is_long, delay);
+            engine.schedule_after(dur, Event::TaskFinish { server: server_id, task: task_id });
+            // Discount the §3.3 shadow copy from its host's load estimate
+            // right away so probe placement sees true load; the stale
+            // queue entry itself is pruned lazily at dequeue.
+            if let Some(other_sid) = other {
+                let o = &mut self.servers[other_sid.index()];
+                o.est_work = (o.est_work - dur).max(0.0);
+                self.sync_tree(other_sid);
+            }
+            return;
+        }
+    }
+
+    /// Handle a `TaskFinish` event. Returns true if the server has gone
+    /// idle *and* is draining (caller should complete the drain).
+    pub fn on_task_finish(
+        &mut self,
+        server_id: ServerId,
+        task_id: TaskId,
+        engine: &mut Engine,
+        rec: &mut Recorder,
+    ) -> bool {
+        let is_long = {
+            let task = &mut self.tasks[task_id.index()];
+            debug_assert_eq!(task.state, TaskState::Running);
+            debug_assert_eq!(task.ran_on, Some(server_id));
+            task.state = TaskState::Finished;
+            task.is_long
+        };
+        let dur = self.tasks[task_id.index()].duration;
+        {
+            let server = &mut self.servers[server_id.index()];
+            debug_assert_eq!(server.running, Some(task_id));
+            server.running = None;
+            server.est_work = (server.est_work - dur).max(0.0);
+            if is_long {
+                debug_assert!(server.long_tasks > 0);
+                server.long_tasks -= 1;
+                if server.long_tasks == 0 {
+                    self.n_long_servers -= 1;
+                }
+            }
+        }
+        rec.tasks_finished += 1;
+        self.sync_tree(server_id);
+        self.try_start_next(server_id, engine, rec);
+        let server = &self.servers[server_id.index()];
+        server.state == ServerState::Draining && server.is_idle()
+    }
+
+    /// Hawk/Eagle-style randomized task stealing: move up to `max_n`
+    /// *queued short* tasks from `victim`'s queue to `thief` (which must
+    /// be idle and accepting). Returns how many were moved.
+    ///
+    /// This is how the Hawk lineage (which Eagle and therefore
+    /// CloudCoaster build on) drains deep queues left behind by load
+    /// spikes: an idle server probes random busy ones and takes a batch
+    /// of their pending shorts.
+    pub fn steal_short_tasks(
+        &mut self,
+        victim: ServerId,
+        thief: ServerId,
+        max_n: usize,
+        engine: &mut Engine,
+        rec: &mut Recorder,
+    ) -> usize {
+        if victim == thief || !self.servers[thief.index()].accepting() {
+            return 0;
+        }
+        let mut stolen: Vec<TaskId> = Vec::with_capacity(max_n);
+        {
+            let queue = &mut self.servers[victim.index()].queue;
+            let mut i = 0;
+            while i < queue.len() && stolen.len() < max_n {
+                let tid = queue[i];
+                let t = &self.tasks[tid.index()];
+                if !t.is_long && t.state == TaskState::Queued {
+                    queue.remove(i);
+                    stolen.push(tid);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let mut freed = 0.0;
+        for &tid in &stolen {
+            freed += self.tasks[tid.index()].duration;
+            // The queue entry moves servers; `copies` nets out against the
+            // re-enqueue below.
+            self.tasks[tid.index()].copies -= 1;
+            self.tasks[tid.index()].remove_location(victim);
+        }
+        {
+            let server = &mut self.servers[victim.index()];
+            server.est_work = (server.est_work - freed).max(0.0);
+        }
+        self.sync_tree(victim);
+        let n = stolen.len();
+        for tid in stolen {
+            self.enqueue(tid, thief, engine, rec);
+        }
+        n
+    }
+
+    // ------------------------------------------------- transient servers
+
+    /// Request a new transient server (Provisioning until `TransientReady`).
+    pub fn request_transient(&mut self, now: Time) -> ServerId {
+        let id = ServerId(self.servers.len() as u32);
+        self.servers.push(Server::new(
+            id,
+            ServerKind::Transient,
+            Pool::TransientPool,
+            ServerState::Provisioning,
+            now,
+        ));
+        id
+    }
+
+    /// Number of transient servers still provisioning.
+    pub fn provisioning_count(&self) -> usize {
+        self.servers
+            .iter()
+            .filter(|s| s.kind == ServerKind::Transient && s.state == ServerState::Provisioning)
+            .count()
+    }
+
+    /// Provisioning finished: the server joins the dynamic short pool.
+    pub fn transient_ready(&mut self, id: ServerId, now: Time, rec: &mut Recorder) {
+        let server = &mut self.servers[id.index()];
+        debug_assert_eq!(server.state, ServerState::Provisioning);
+        server.state = ServerState::Active;
+        server.active_at = now;
+        self.transient_pool.push(id);
+        self.n_total += 1;
+        rec.cost.transient_up(now);
+    }
+
+    /// Begin graceful release: stop accepting, finish queued work (§3.2).
+    /// Returns true if the server was already idle (caller retires it).
+    pub fn begin_drain(&mut self, id: ServerId) -> bool {
+        let server = &mut self.servers[id.index()];
+        debug_assert_eq!(server.state, ServerState::Active);
+        debug_assert_eq!(server.kind, ServerKind::Transient);
+        server.state = ServerState::Draining;
+        // Remove from the probe-candidate pool immediately.
+        self.transient_pool.retain(|&s| s != id);
+        self.servers[id.index()].is_idle()
+    }
+
+    /// Final shutdown of a drained/revoked transient server.
+    pub fn retire(&mut self, id: ServerId, now: Time, rec: &mut Recorder) {
+        let server = &mut self.servers[id.index()];
+        debug_assert!(matches!(server.state, ServerState::Draining | ServerState::Active));
+        debug_assert_eq!(server.kind, ServerKind::Transient);
+        if server.long_tasks > 0 {
+            self.n_long_servers -= 1; // should not happen: transients are short-only
+        }
+        server.state = ServerState::Retired;
+        server.retired_at = now;
+        self.transient_pool.retain(|&s| s != id);
+        self.n_total -= 1;
+        rec.cost.transient_down(now, now - server.active_at);
+    }
+
+    /// Revoke a transient server immediately (provider reclaim, §3.3).
+    ///
+    /// Queued copies on it become stale; tasks whose *only* copy lived
+    /// here (including a task mid-execution) are returned for rescheduling.
+    pub fn revoke(&mut self, id: ServerId, now: Time, rec: &mut Recorder) -> Vec<TaskId> {
+        let mut orphans = Vec::new();
+        let (queued, running): (Vec<TaskId>, Option<TaskId>) = {
+            let server = &self.servers[id.index()];
+            (server.queue.iter().copied().collect(), server.running)
+        };
+        for tid in queued {
+            let task = &mut self.tasks[tid.index()];
+            if task.state == TaskState::Queued {
+                task.copies -= 1;
+                task.remove_location(id);
+                if task.copies == 0 {
+                    orphans.push(tid);
+                }
+            } else {
+                // Stale entry on the revoked server: settle it here since
+                // its queue is being destroyed.
+                task.copies -= 1;
+                task.remove_location(id);
+            }
+        }
+        if let Some(tid) = running {
+            // Mid-execution work is lost; the task restarts elsewhere.
+            let task = &mut self.tasks[tid.index()];
+            task.state = TaskState::Queued;
+            task.ran_on = None;
+            if task.copies > 0 {
+                // §3.3 payoff: a shadow copy still sits queued on an
+                // on-demand server — the task resurrects there. Restore
+                // the load-estimate contribution discounted at start.
+                let dur = task.duration;
+                let locs: Vec<ServerId> = task.placed_on.iter().flatten().copied().collect();
+                for loc in locs {
+                    self.servers[loc.index()].est_work += dur;
+                    self.sync_tree(loc);
+                }
+            } else {
+                orphans.push(tid);
+            }
+        }
+        {
+            let server = &mut self.servers[id.index()];
+            server.queue.clear();
+            server.running = None;
+            server.est_work = 0.0;
+            // Settle the N_long counter here (retire() sees 0 below).
+            if server.long_tasks > 0 {
+                server.long_tasks = 0;
+                self.n_long_servers -= 1;
+            }
+        }
+        rec.transients_revoked += 1;
+        self.retire(id, now, rec);
+        orphans
+    }
+
+    // ------------------------------------------------------- validation
+
+    /// Exhaustive invariant check (tests / debug builds only — O(cluster)).
+    pub fn check_invariants(&self) {
+        let mut n_long = 0;
+        let mut n_total = 0;
+        for (i, s) in self.servers.iter().enumerate() {
+            if i < self.general.len() {
+                assert!(
+                    (self.gen_tree.key(i) - s.est_work).abs() < 1e-9,
+                    "gen_tree drift on server {i}"
+                );
+            }
+            if matches!(s.state, ServerState::Active | ServerState::Draining) {
+                n_total += 1;
+                if s.long_tasks > 0 {
+                    n_long += 1;
+                }
+            }
+            if let Some(tid) = s.running {
+                let t = &self.tasks[tid.index()];
+                assert_eq!(t.state, TaskState::Running, "running slot holds non-running task");
+                assert_eq!(t.ran_on, Some(s.id));
+            }
+            assert!(s.est_work >= -1e-9, "negative est_work on {:?}", s.id);
+            // est_work == running duration + live queued entries (stale
+            // copies were discounted when their live twin started).
+            let mut expect = s.running.map(|t| self.tasks[t.index()].duration).unwrap_or(0.0);
+            for &tid in &s.queue {
+                let t = &self.tasks[tid.index()];
+                if t.state == TaskState::Queued {
+                    expect += t.duration;
+                }
+            }
+            assert!(
+                (s.est_work - expect).abs() < 1e-6 * expect.max(1.0),
+                "est_work drift on {:?}: {} vs {}",
+                s.id,
+                s.est_work,
+                expect
+            );
+        }
+        for t in &self.tasks {
+            let locs = t.placed_on.iter().flatten().count() as u8;
+            assert_eq!(t.copies, locs, "copies/placed_on drift on {:?}", t.id);
+        }
+        assert_eq!(n_long, self.n_long_servers, "N_long drift");
+        assert_eq!(n_total, self.n_total, "N_total drift");
+        let lr = self.long_load_ratio();
+        assert!((0.0..=1.0).contains(&lr), "l_r out of [0,1]: {lr}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Cluster, Engine, Recorder) {
+        let cluster = Cluster::new(4, 2, QueuePolicy::Fifo);
+        (cluster, Engine::new(), Recorder::new(3.0))
+    }
+
+    #[test]
+    fn new_cluster_layout() {
+        let (c, _, _) = setup();
+        assert_eq!(c.servers.len(), 6);
+        assert_eq!(c.general.len(), 4);
+        assert_eq!(c.short_reserved.len(), 2);
+        assert_eq!(c.n_total(), 6);
+        assert_eq!(c.long_load_ratio(), 0.0);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn enqueue_starts_immediately_when_idle() {
+        let (mut c, mut e, mut r) = setup();
+        let t = c.add_task(JobId(0), 10.0, false, 0.0);
+        c.enqueue(t, ServerId(0), &mut e, &mut r);
+        assert_eq!(c.task(t).state, TaskState::Running);
+        assert_eq!(c.server(ServerId(0)).running, Some(t));
+        // TaskFinish scheduled at t=10
+        assert_eq!(e.peek_time(), Some(10.0));
+        assert_eq!(r.short_delays.len(), 1);
+        assert_eq!(r.short_delays.as_slice()[0], 0.0);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn queueing_delay_measured_from_enqueue_to_start() {
+        let (mut c, mut e, mut r) = setup();
+        let t1 = c.add_task(JobId(0), 10.0, false, 0.0);
+        let t2 = c.add_task(JobId(0), 5.0, false, 0.0);
+        c.enqueue(t1, ServerId(0), &mut e, &mut r);
+        c.enqueue(t2, ServerId(0), &mut e, &mut r);
+        let (_, ev) = e.pop().unwrap(); // t1 finish at 10.0
+        match ev {
+            Event::TaskFinish { server, task } => {
+                let drained = c.on_task_finish(server, task, &mut e, &mut r);
+                assert!(!drained);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(c.task(t2).state, TaskState::Running);
+        assert!((c.task(t2).queueing_delay() - 10.0).abs() < 1e-12);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn long_load_ratio_tracks_long_tasks() {
+        let (mut c, mut e, mut r) = setup();
+        let t = c.add_task(JobId(0), 100.0, true, 0.0);
+        c.enqueue(t, ServerId(1), &mut e, &mut r);
+        assert_eq!(c.n_long_servers(), 1);
+        assert!((c.long_load_ratio() - 1.0 / 6.0).abs() < 1e-12);
+        // Second long task on the same server doesn't double count.
+        let t2 = c.add_task(JobId(0), 100.0, true, 0.0);
+        c.enqueue(t2, ServerId(1), &mut e, &mut r);
+        assert_eq!(c.n_long_servers(), 1);
+        // Finish both -> ratio back to 0.
+        while let Some((_, ev)) = e.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                c.on_task_finish(server, task, &mut e, &mut r);
+            }
+        }
+        assert_eq!(c.n_long_servers(), 0);
+        assert_eq!(c.long_load_ratio(), 0.0);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn transient_lifecycle_changes_n_total() {
+        let (mut c, mut e, mut r) = setup();
+        let sid = c.request_transient(0.0);
+        assert_eq!(c.n_total(), 6); // provisioning doesn't count
+        assert_eq!(c.provisioning_count(), 1);
+        c.transient_ready(sid, 120.0, &mut r);
+        assert_eq!(c.n_total(), 7);
+        assert_eq!(c.transient_pool.len(), 1);
+        // Graceful drain of idle server retires immediately via caller.
+        let idle = c.begin_drain(sid);
+        assert!(idle);
+        e.schedule(200.0, Event::Snapshot);
+        e.pop();
+        c.retire(sid, 200.0, &mut r);
+        assert_eq!(c.n_total(), 6);
+        assert!(c.transient_pool.is_empty());
+        assert_eq!(r.cost.lifetimes.len(), 1);
+        assert!((r.cost.lifetimes[0] - 80.0).abs() < 1e-12);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn duplicate_copies_first_start_wins() {
+        let (mut c, mut e, mut r) = setup();
+        // Occupy server 0 so the copy there queues.
+        let blocker = c.add_task(JobId(0), 50.0, false, 0.0);
+        c.enqueue(blocker, ServerId(0), &mut e, &mut r);
+        let t = c.add_task(JobId(1), 10.0, false, 0.0);
+        c.enqueue(t, ServerId(0), &mut e, &mut r); // queued copy
+        c.enqueue(t, ServerId(1), &mut e, &mut r); // starts immediately
+        assert_eq!(c.task(t).state, TaskState::Running);
+        assert_eq!(c.task(t).ran_on, Some(ServerId(1)));
+        assert_eq!(c.task(t).copies, 1); // stale copy still queued on 0
+        // Run the world; the stale copy must be skipped, not re-run.
+        while let Some((_, ev)) = e.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                c.on_task_finish(server, task, &mut e, &mut r);
+            }
+        }
+        assert_eq!(r.tasks_finished, 2);
+        assert!(r.stale_copies_skipped >= 1);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn revoke_returns_orphans_only() {
+        let (mut c, mut e, mut r) = setup();
+        let sid = c.request_transient(0.0);
+        c.transient_ready(sid, 0.0, &mut r);
+        // Task A: copy on transient + copy on on-demand (safe).
+        let a = c.add_task(JobId(0), 30.0, false, 0.0);
+        // Occupy both so copies stay queued.
+        let b0 = c.add_task(JobId(0), 100.0, false, 0.0);
+        let b1 = c.add_task(JobId(0), 100.0, false, 0.0);
+        c.enqueue(b0, ServerId(4), &mut e, &mut r);
+        c.enqueue(b1, sid, &mut e, &mut r);
+        c.enqueue(a, sid, &mut e, &mut r);
+        c.enqueue(a, ServerId(4), &mut e, &mut r);
+        // Task C: only copy on the transient (unsafe).
+        let cc = c.add_task(JobId(0), 30.0, false, 0.0);
+        c.enqueue(cc, sid, &mut e, &mut r);
+        let orphans = c.revoke(sid, 10.0, &mut r);
+        // b1 was running on the transient -> orphaned; c queued only there
+        // -> orphaned; a survives through its on-demand copy.
+        assert!(orphans.contains(&cc));
+        assert!(orphans.contains(&b1));
+        assert!(!orphans.contains(&a));
+        assert_eq!(r.transients_revoked, 1);
+        c.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "non-accepting")]
+    fn cannot_enqueue_on_draining() {
+        let (mut c, mut e, mut r) = setup();
+        let sid = c.request_transient(0.0);
+        c.transient_ready(sid, 0.0, &mut r);
+        // Make it non-idle so drain keeps it alive.
+        let t0 = c.add_task(JobId(0), 50.0, false, 0.0);
+        c.enqueue(t0, sid, &mut e, &mut r);
+        c.begin_drain(sid);
+        let t = c.add_task(JobId(0), 10.0, false, 0.0);
+        c.enqueue(t, sid, &mut e, &mut r);
+    }
+}

@@ -1,0 +1,12 @@
+//! Cluster substrate: servers (on-demand + transient), per-server queues
+//! with Eagle-style SRPT discipline, partitions, the task arena, and the
+//! incrementally-maintained long-load-ratio state.
+
+#[allow(clippy::module_inception)]
+mod cluster;
+mod server;
+mod task;
+
+pub use cluster::Cluster;
+pub use server::{Pool, QueuePolicy, Server, ServerKind, ServerState};
+pub use task::{Task, TaskState};

@@ -1,0 +1,243 @@
+//! Server model: one execution slot + a work queue, in the style of the
+//! Eagle/Hawk simulators the paper builds on.
+
+use std::collections::VecDeque;
+
+use crate::cluster::{Task, TaskState};
+use crate::util::{ServerId, TaskId, Time};
+
+/// Purchase class of a server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerKind {
+    /// Statically provisioned, always available.
+    OnDemand,
+    /// Cheap, revocable, provisioned on demand (§2.4).
+    Transient,
+}
+
+/// Which partition a server belongs to (§3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pool {
+    /// Static partition: runs both long and short tasks.
+    General,
+    /// On-demand short-only partition ("buffer" servers).
+    ShortReserved,
+    /// Dynamic short-only partition of transient servers.
+    TransientPool,
+}
+
+/// Server lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerState {
+    /// Transient server requested but not yet usable (provisioning delay).
+    Provisioning,
+    /// Accepting and executing tasks.
+    Active,
+    /// Finishing its queue, accepting no new tasks (graceful release §3.2,
+    /// or a revocation warning §3.3).
+    Draining,
+    /// Gone (drained out or revoked).
+    Retired,
+}
+
+/// How a server picks the next task from its queue.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueuePolicy {
+    /// Strict arrival order.
+    Fifo,
+    /// Eagle's discipline: shortest-remaining-processing-time among queued
+    /// short tasks (longs yield to shorts), bounded by a starvation limit —
+    /// any task queued longer than the limit runs first, in FIFO order.
+    Srpt { starvation_limit: f64 },
+}
+
+/// One simulated server: a single execution slot plus a queue.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub id: ServerId,
+    pub kind: ServerKind,
+    pub pool: Pool,
+    pub state: ServerState,
+    pub running: Option<TaskId>,
+    pub queue: VecDeque<TaskId>,
+    /// Long tasks on this server (running + queued). `> 0` marks the
+    /// server in the long-bitmap Eagle shares with distributed schedulers,
+    /// and feeds the cluster's incremental `N_long` for `l_r`.
+    pub long_tasks: u32,
+    /// Estimated queued work (sum of durations of queued entries + the
+    /// running task's full duration) — the probe-placement load signal.
+    pub est_work: f64,
+    /// Provisioning request time (transient lifetime accounting).
+    pub requested_at: Time,
+    /// When the server became Active.
+    pub active_at: Time,
+    /// When the server retired.
+    pub retired_at: Time,
+}
+
+impl Server {
+    pub fn new(id: ServerId, kind: ServerKind, pool: Pool, state: ServerState, now: Time) -> Self {
+        Server {
+            id,
+            kind,
+            pool,
+            state,
+            running: None,
+            queue: VecDeque::new(),
+            long_tasks: 0,
+            est_work: 0.0,
+            requested_at: now,
+            active_at: now,
+            retired_at: 0.0,
+        }
+    }
+
+    /// Can the scheduler place new work here?
+    #[inline]
+    pub fn accepting(&self) -> bool {
+        self.state == ServerState::Active
+    }
+
+    #[inline]
+    pub fn is_idle(&self) -> bool {
+        self.running.is_none() && self.queue.is_empty()
+    }
+
+    /// Queue length including the running slot.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.queue.len() + self.running.is_some() as usize
+    }
+
+    /// Select the next runnable task index in `queue` under `policy`,
+    /// skipping stale copies (tasks already running/finished elsewhere).
+    /// Returns the queue index to pop, or None if the queue has no
+    /// runnable entry. Stale entries pruned off the front are pushed to
+    /// `pruned` so the cluster can settle their copy accounting.
+    pub fn select_next(
+        &mut self,
+        tasks: &[Task],
+        policy: QueuePolicy,
+        now: Time,
+        pruned: &mut Vec<TaskId>,
+    ) -> Option<usize> {
+        // Prune stale copies from the front first — cheap and keeps FIFO
+        // semantics exact for the common case.
+        while let Some(&front) = self.queue.front() {
+            if tasks[front.index()].state == TaskState::Queued {
+                break;
+            }
+            pruned.push(front);
+            self.queue.pop_front();
+        }
+        if self.queue.is_empty() {
+            return None;
+        }
+        match policy {
+            QueuePolicy::Fifo => Some(0),
+            QueuePolicy::Srpt { starvation_limit } => {
+                let mut best: Option<(usize, f64)> = None;
+                let mut starved: Option<usize> = None;
+                for (i, &tid) in self.queue.iter().enumerate() {
+                    let t = &tasks[tid.index()];
+                    if t.state != TaskState::Queued {
+                        continue; // stale copy, skipped (pruned on pop)
+                    }
+                    if now - t.enqueued_at > starvation_limit && starved.is_none() {
+                        starved = Some(i);
+                    }
+                    let key = if t.is_long { f64::INFINITY } else { t.duration };
+                    if best.map_or(true, |(_, k)| key < k) {
+                        best = Some((i, key));
+                    }
+                }
+                starved.or(best.map(|(i, _)| i))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::JobId;
+
+    fn mk_task(id: u32, duration: f64, is_long: bool, enq: f64) -> Task {
+        Task::new(TaskId(id), JobId(0), duration, is_long, enq)
+    }
+
+    fn mk_server() -> Server {
+        Server::new(ServerId(0), ServerKind::OnDemand, Pool::General, ServerState::Active, 0.0)
+    }
+
+    #[test]
+    fn fifo_picks_front() {
+        let tasks = vec![mk_task(0, 10.0, false, 0.0), mk_task(1, 1.0, false, 0.0)];
+        let mut s = mk_server();
+        s.queue.push_back(TaskId(0));
+        s.queue.push_back(TaskId(1));
+        assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 5.0, &mut vec![]), Some(0));
+    }
+
+    #[test]
+    fn srpt_prefers_shortest_short() {
+        let tasks = vec![
+            mk_task(0, 50.0, false, 0.0),
+            mk_task(1, 5.0, false, 0.0),
+            mk_task(2, 20.0, false, 0.0),
+        ];
+        let mut s = mk_server();
+        for i in 0..3 {
+            s.queue.push_back(TaskId(i));
+        }
+        let policy = QueuePolicy::Srpt { starvation_limit: 1e9 };
+        assert_eq!(s.select_next(&tasks, policy, 1.0, &mut vec![]), Some(1));
+    }
+
+    #[test]
+    fn srpt_longs_yield_to_shorts() {
+        let tasks = vec![mk_task(0, 1000.0, true, 0.0), mk_task(1, 30.0, false, 0.0)];
+        let mut s = mk_server();
+        s.queue.push_back(TaskId(0));
+        s.queue.push_back(TaskId(1));
+        let policy = QueuePolicy::Srpt { starvation_limit: 1e9 };
+        assert_eq!(s.select_next(&tasks, policy, 1.0, &mut vec![]), Some(1));
+    }
+
+    #[test]
+    fn srpt_starvation_guard_restores_fifo() {
+        let tasks = vec![mk_task(0, 1000.0, true, 0.0), mk_task(1, 30.0, false, 400.0)];
+        let mut s = mk_server();
+        s.queue.push_back(TaskId(0));
+        s.queue.push_back(TaskId(1));
+        // Long task has waited 500 s > limit, so it runs despite SRPT.
+        let policy = QueuePolicy::Srpt { starvation_limit: 300.0 };
+        assert_eq!(s.select_next(&tasks, policy, 500.0, &mut vec![]), Some(0));
+    }
+
+    #[test]
+    fn stale_copies_skipped() {
+        let mut tasks = vec![mk_task(0, 10.0, false, 0.0), mk_task(1, 10.0, false, 0.0)];
+        tasks[0].state = TaskState::Running; // copy started elsewhere
+        let mut s = mk_server();
+        s.queue.push_back(TaskId(0));
+        s.queue.push_back(TaskId(1));
+        let mut pruned = Vec::new();
+        assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 0.0, &mut pruned), Some(0));
+        // After pruning, front is task 1 and the stale copy is reported.
+        assert_eq!(s.queue.front(), Some(&TaskId(1)));
+        assert_eq!(pruned, vec![TaskId(0)]);
+    }
+
+    #[test]
+    fn empty_after_all_stale() {
+        let mut tasks = vec![mk_task(0, 10.0, false, 0.0)];
+        tasks[0].state = TaskState::Finished;
+        let mut s = mk_server();
+        s.queue.push_back(TaskId(0));
+        let mut pruned = Vec::new();
+        assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 0.0, &mut pruned), None);
+        assert!(s.queue.is_empty());
+        assert_eq!(pruned.len(), 1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Task lifecycle: the unit of scheduled work.
+//!
+//! Tasks are arena-allocated in [`crate::cluster::Cluster`] and referenced
+//! by [`TaskId`] everywhere — no per-event allocation on the hot path.
+//!
+//! A short task may be enqueued on *multiple* servers at once: CloudCoaster
+//! guarantees at least one copy of every short task lives on an on-demand
+//! server so transient revocation can never lose work (paper §3.3). The
+//! first copy a server dequeues wins; stale copies are skipped at dequeue.
+
+use crate::util::{JobId, ServerId, TaskId, Time};
+
+/// Where a task is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Created and placed on one or more server queues.
+    Queued,
+    /// Executing on exactly one server.
+    Running,
+    /// Completed.
+    Finished,
+}
+
+/// A schedulable task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub job: JobId,
+    pub duration: f64,
+    pub is_long: bool,
+    pub state: TaskState,
+    /// When the task was enqueued (== job arrival; placement is immediate).
+    pub enqueued_at: Time,
+    /// When the task started executing (valid once `state >= Running`).
+    pub started_at: Time,
+    /// Server executing / having executed the task.
+    pub ran_on: Option<ServerId>,
+    /// Outstanding queue entries across all servers (copies, §3.3).
+    pub copies: u8,
+    /// Where the outstanding queue entries live (at most two: the primary
+    /// placement plus the §3.3 on-demand shadow copy). Kept exact so a
+    /// task's start can immediately discount its other copy from that
+    /// server's load estimate.
+    pub placed_on: [Option<ServerId>; 2],
+}
+
+impl Task {
+    pub fn new(id: TaskId, job: JobId, duration: f64, is_long: bool, now: Time) -> Self {
+        Task {
+            id,
+            job,
+            duration,
+            is_long,
+            state: TaskState::Queued,
+            enqueued_at: now,
+            started_at: 0.0,
+            ran_on: None,
+            copies: 0,
+            placed_on: [None, None],
+        }
+    }
+
+    /// Record a queue-entry location. Panics beyond two live copies —
+    /// the §3.3 invariant (primary + one on-demand shadow).
+    pub fn add_location(&mut self, sid: ServerId) {
+        for slot in &mut self.placed_on {
+            if slot.is_none() {
+                *slot = Some(sid);
+                return;
+            }
+        }
+        panic!("task {:?} placed on more than two servers", self.id);
+    }
+
+    /// Forget a queue-entry location (entry consumed, stolen or revoked).
+    pub fn remove_location(&mut self, sid: ServerId) {
+        for slot in &mut self.placed_on {
+            if *slot == Some(sid) {
+                *slot = None;
+                return;
+            }
+        }
+    }
+
+    /// The other live copy's server, if any.
+    pub fn other_location(&self, not: ServerId) -> Option<ServerId> {
+        self.placed_on.iter().flatten().copied().find(|&s| s != not)
+    }
+
+    /// Queueing delay (start - enqueue); the paper's headline metric.
+    pub fn queueing_delay(&self) -> f64 {
+        debug_assert!(self.state != TaskState::Queued);
+        self.started_at - self.enqueued_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queueing_delay_from_timestamps() {
+        let mut t = Task::new(TaskId(0), JobId(0), 30.0, false, 100.0);
+        t.state = TaskState::Running;
+        t.started_at = 160.0;
+        assert!((t.queueing_delay() - 60.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,328 @@
+//! High-level experiment configuration: the paper's (N, N_s, p, r, L_r^T,
+//! provisioning-delay) knobs plus workload selection, loadable from a
+//! TOML-subset file or built programmatically.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::QueuePolicy;
+use crate::coordinator::runner::SimConfig;
+use crate::coordinator::toml::{parse, Table};
+use crate::trace::synth::{GoogleLikeParams, YahooLikeParams};
+use crate::transient::{Budget, ManagerConfig, MarketConfig};
+
+/// Which placement policy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Centralized,
+    Sparrow,
+    /// Hawk (ATC'15) — Eagle's predecessor, no succinct state.
+    Hawk,
+    /// Eagle hybrid — the paper's *Baseline*.
+    Eagle,
+    /// Eagle + transient manager + on-demand duplication.
+    CloudCoaster,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "centralized" => SchedulerKind::Centralized,
+            "sparrow" => SchedulerKind::Sparrow,
+            "hawk" => SchedulerKind::Hawk,
+            "eagle" | "baseline" => SchedulerKind::Eagle,
+            "cloudcoaster" => SchedulerKind::CloudCoaster,
+            other => bail!("unknown scheduler {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Centralized => "centralized",
+            SchedulerKind::Sparrow => "sparrow",
+            SchedulerKind::Hawk => "hawk",
+            SchedulerKind::Eagle => "eagle",
+            SchedulerKind::CloudCoaster => "cloudcoaster",
+        }
+    }
+}
+
+/// Workload source.
+#[derive(Clone, Debug)]
+pub enum WorkloadSource {
+    YahooLike(YahooLikeParams),
+    GoogleLike(GoogleLikeParams),
+    Csv(String),
+}
+
+/// One experiment = cluster geometry + budget + policy + workload.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Total on-demand cluster size (paper: 4000).
+    pub cluster_size: usize,
+    /// Static short-only partition size N_s (paper: 80).
+    pub short_partition: usize,
+    /// Fraction of N_s converted to transient budget (paper: 0.5).
+    pub p: f64,
+    /// Cost ratio r (paper sweeps 1, 2, 3).
+    pub r: f64,
+    /// Long-load-ratio threshold L_r^T (paper: 0.95).
+    pub threshold: f64,
+    /// Transient provisioning delay, seconds (paper: 120).
+    pub provisioning_delay: f64,
+    /// Mean time to revocation (None = paper regime, never revoked).
+    pub mttf: Option<f64>,
+    /// Spot bid (fraction of on-demand price). `None` = the paper's
+    /// fixed 1/r pricing; `Some(bid)` enables the dynamic price process
+    /// (requests fail and servers are revoked on price crossings).
+    pub bid: Option<f64>,
+    pub scheduler: SchedulerKind,
+    /// Probes per short task.
+    pub probe_ratio: f64,
+    pub queue_policy: QueuePolicy,
+    /// Shrink conservativeness (1 = paper; usize::MAX = symmetric).
+    pub max_removals_per_recalc: usize,
+    pub aggressive_add: bool,
+    /// Min seconds between drains (see [`ManagerConfig::drain_cooldown`]).
+    pub drain_cooldown: f64,
+    /// Predictive resizing via the lr_forecast artifact (abl-forecast).
+    pub predictive: bool,
+    pub snapshot_interval: f64,
+    pub seed: u64,
+    pub workload: WorkloadSource,
+}
+
+impl ExperimentConfig {
+    /// The paper's §4 default configuration with CloudCoaster at r = 3.
+    pub fn paper_defaults() -> Self {
+        ExperimentConfig {
+            cluster_size: 4000,
+            short_partition: 80,
+            p: 0.5,
+            r: 3.0,
+            threshold: 0.95,
+            provisioning_delay: 120.0,
+            mttf: None,
+            bid: None,
+            scheduler: SchedulerKind::CloudCoaster,
+            probe_ratio: 2.0,
+            queue_policy: QueuePolicy::Srpt { starvation_limit: 600.0 },
+            max_removals_per_recalc: 1,
+            aggressive_add: true,
+            drain_cooldown: 120.0,
+            predictive: false,
+            snapshot_interval: 60.0,
+            seed: 42,
+            workload: WorkloadSource::YahooLike(YahooLikeParams::default()),
+        }
+    }
+
+    /// The paper's *Baseline*: Eagle on the statically provisioned
+    /// cluster (full 80-server on-demand short partition, no transients).
+    pub fn paper_baseline() -> Self {
+        ExperimentConfig { scheduler: SchedulerKind::Eagle, ..Self::paper_defaults() }
+    }
+
+    /// Derive low-level simulation parameters.
+    ///
+    /// Cluster geometry (§3.1/§4): the general partition is
+    /// `cluster_size - short_partition`. The baseline keeps all
+    /// `short_partition` servers on-demand; CloudCoaster keeps
+    /// `(1-p)·N_s` on-demand and manages up to `K = r·N_s·p` transients.
+    pub fn to_sim_config(&self) -> SimConfig {
+        let n_general = self.cluster_size - self.short_partition;
+        match self.scheduler {
+            SchedulerKind::CloudCoaster => {
+                let budget = Budget::new(self.short_partition, self.p, self.r);
+                let manager = ManagerConfig {
+                    threshold: self.threshold,
+                    market: MarketConfig {
+                        cost_ratio: self.r,
+                        provisioning_delay: self.provisioning_delay,
+                        mttf: self.mttf,
+                        pricing: self.bid.map(|bid| crate::transient::PricingConfig {
+                            bid,
+                            ..Default::default()
+                        }),
+                        ..Default::default()
+                    },
+                    budget,
+                    max_removals_per_recalc: self.max_removals_per_recalc,
+                    aggressive_add: self.aggressive_add,
+                    drain_cooldown: self.drain_cooldown,
+                    predictive: self.predictive,
+                };
+                SimConfig {
+                    n_general,
+                    n_short_reserved: budget.ondemand_short(),
+                    queue_policy: self.queue_policy,
+                    manager: Some(manager),
+                    snapshot_interval: self.snapshot_interval,
+                    seed: self.seed,
+                    ..Default::default()
+                }
+            }
+            _ => SimConfig {
+                n_general,
+                n_short_reserved: self.short_partition,
+                queue_policy: self.queue_policy,
+                manager: None,
+                snapshot_interval: self.snapshot_interval,
+                seed: self.seed,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Load from a TOML-subset file (all keys optional; see
+    /// `examples/paper.toml`).
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let t = parse(text)?;
+        let mut cfg = Self::paper_defaults();
+        let get_f64 = |t: &Table, k: &str| t.get(k).and_then(|v| v.as_f64());
+        let get_usize = |t: &Table, k: &str| t.get(k).and_then(|v| v.as_usize());
+        if let Some(v) = get_usize(&t, "cluster.servers") {
+            cfg.cluster_size = v;
+        }
+        if let Some(v) = get_usize(&t, "cluster.short_partition") {
+            cfg.short_partition = v;
+        }
+        if let Some(v) = get_f64(&t, "transient.p") {
+            cfg.p = v;
+        }
+        if let Some(v) = get_f64(&t, "transient.r") {
+            cfg.r = v;
+        }
+        if let Some(v) = get_f64(&t, "transient.threshold") {
+            cfg.threshold = v;
+        }
+        if let Some(v) = get_f64(&t, "transient.provisioning_delay") {
+            cfg.provisioning_delay = v;
+        }
+        if let Some(v) = get_f64(&t, "transient.mttf") {
+            cfg.mttf = if v > 0.0 { Some(v) } else { None };
+        }
+        if let Some(v) = get_f64(&t, "transient.bid") {
+            cfg.bid = if v > 0.0 { Some(v) } else { None };
+        }
+        if let Some(v) = t.get("transient.predictive").and_then(|v| v.as_bool()) {
+            cfg.predictive = v;
+        }
+        if let Some(v) = t.get("scheduler.kind").and_then(|v| v.as_str()) {
+            cfg.scheduler = SchedulerKind::parse(v)?;
+        }
+        if let Some(v) = get_f64(&t, "scheduler.probe_ratio") {
+            cfg.probe_ratio = v;
+        }
+        if let Some(v) = get_f64(&t, "scheduler.starvation_limit") {
+            cfg.queue_policy = QueuePolicy::Srpt { starvation_limit: v };
+        }
+        if let Some(v) = t.get("scheduler.fifo").and_then(|v| v.as_bool()) {
+            if v {
+                cfg.queue_policy = QueuePolicy::Fifo;
+            }
+        }
+        if let Some(v) = t.get("seed").and_then(|v| v.as_u64()) {
+            cfg.seed = v;
+        }
+        if let Some(v) = get_f64(&t, "workload.horizon") {
+            if let WorkloadSource::YahooLike(p) = &mut cfg.workload {
+                p.horizon = v;
+            }
+        }
+        if let Some(v) = t.get("workload.csv").and_then(|v| v.as_str()) {
+            cfg.workload = WorkloadSource::Csv(v.to_string());
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.short_partition >= self.cluster_size {
+            bail!("short partition must be smaller than the cluster");
+        }
+        if !(0.0..=1.0).contains(&self.p) {
+            bail!("p must be in [0,1]");
+        }
+        if self.r < 1.0 {
+            bail!("cost ratio r must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.threshold) {
+            bail!("threshold must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section_4() {
+        let c = ExperimentConfig::paper_defaults();
+        assert_eq!(c.cluster_size, 4000);
+        assert_eq!(c.short_partition, 80);
+        assert_eq!(c.p, 0.5);
+        assert_eq!(c.threshold, 0.95);
+        assert_eq!(c.provisioning_delay, 120.0);
+        let sim = c.to_sim_config();
+        assert_eq!(sim.n_general, 3920);
+        assert_eq!(sim.n_short_reserved, 40); // (1-p)·80
+        let mgr = sim.manager.unwrap();
+        assert_eq!(mgr.budget.max_transients(), 120); // r·N·p
+    }
+
+    #[test]
+    fn baseline_has_no_manager_and_full_partition() {
+        let sim = ExperimentConfig::paper_baseline().to_sim_config();
+        assert!(sim.manager.is_none());
+        assert_eq!(sim.n_short_reserved, 80);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            seed = 7
+            [cluster]
+            servers = 1000
+            short_partition = 20
+            [transient]
+            r = 2
+            threshold = 0.9
+            [scheduler]
+            kind = "eagle"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster_size, 1000);
+        assert_eq!(cfg.short_partition, 20);
+        assert_eq!(cfg.r, 2.0);
+        assert_eq!(cfg.threshold, 0.9);
+        assert_eq!(cfg.scheduler, SchedulerKind::Eagle);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ExperimentConfig::from_toml("[cluster]\nservers = 10\nshort_partition = 10\n").is_err());
+        assert!(ExperimentConfig::from_toml("[transient]\nr = 0.5\n").is_err());
+        assert!(ExperimentConfig::from_toml("[scheduler]\nkind = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn scheduler_kind_roundtrip() {
+        for k in ["centralized", "sparrow", "hawk", "eagle", "cloudcoaster"] {
+            assert_eq!(SchedulerKind::parse(k).unwrap().name(), k);
+        }
+        assert_eq!(SchedulerKind::parse("baseline").unwrap(), SchedulerKind::Eagle);
+    }
+}

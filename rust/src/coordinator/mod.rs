@@ -1,0 +1,13 @@
+//! The experiment coordinator: configuration (TOML-subset + programmatic),
+//! the simulation runner, parameter sweeps, and report generation.
+
+pub mod config;
+pub mod replicate;
+pub mod report;
+pub mod runner;
+pub mod sweep;
+pub mod toml;
+
+pub use config::{ExperimentConfig, SchedulerKind, WorkloadSource};
+pub use report::{run_experiment, Report};
+pub use runner::{simulate, simulate_with, RunResult, SimConfig};

@@ -1,0 +1,305 @@
+//! Experiment reports: run a configured experiment end-to-end and distill
+//! the numbers the paper reports (Figure 3 CDFs, Table 1 rows, headline
+//! ratios), using the XLA analytics artifacts when available.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::config::{ExperimentConfig, SchedulerKind, WorkloadSource};
+use crate::coordinator::runner::{simulate_with, RunResult, SimConfig};
+use crate::metrics::Cdf;
+use crate::runtime::{Analytics, AnalyticsEngine};
+use crate::sched::{Centralized, Hybrid, Scheduler, Sparrow};
+use crate::sim::Rng;
+use crate::trace::{synth, TraceStats, Workload};
+
+/// Summary statistics of one delay population.
+#[derive(Clone, Debug)]
+pub struct DelayStats {
+    pub n: usize,
+    pub mean: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl DelayStats {
+    fn of(samples: &mut crate::metrics::DelaySamples) -> DelayStats {
+        DelayStats {
+            n: samples.len(),
+            mean: samples.mean(),
+            max: samples.max(),
+            p50: samples.percentile(0.5),
+            p90: samples.percentile(0.9),
+            p99: samples.percentile(0.99),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+}
+
+/// Everything one experiment produces.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: String,
+    pub scheduler: &'static str,
+    pub r: f64,
+    pub short_delay: DelayStats,
+    pub long_delay: DelayStats,
+    /// Figure 3: short-task queueing-delay CDF.
+    pub cdf: Cdf,
+    /// Table 1 columns.
+    pub avg_transients: f64,
+    pub max_transients: f64,
+    pub mean_lifetime_h: f64,
+    pub max_lifetime_h: f64,
+    pub r_normalized_avg: f64,
+    pub transients_requested: u64,
+    pub transients_revoked: u64,
+    pub tasks_rescheduled: u64,
+    /// Run mechanics.
+    pub end_time: f64,
+    pub events: u64,
+    pub wall_ms: f64,
+    pub events_per_sec: f64,
+    /// Which analytics engine produced the CDF ("xla" or "native").
+    pub analytics_engine: &'static str,
+}
+
+/// Resolve the artifacts directory: $CLOUDCOASTER_ARTIFACTS or
+/// `<manifest>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CLOUDCOASTER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Materialise the workload for a config.
+pub fn build_workload(cfg: &ExperimentConfig) -> Result<Workload> {
+    Ok(match &cfg.workload {
+        WorkloadSource::YahooLike(p) => synth::yahoo_like(p, &mut Rng::new(cfg.seed)),
+        WorkloadSource::GoogleLike(p) => synth::google_like(p, &mut Rng::new(cfg.seed)),
+        WorkloadSource::Csv(path) => crate::trace::read_csv(std::path::Path::new(path), 90.0)?,
+    })
+}
+
+/// Build the scheduler instance for a kind.
+pub fn build_scheduler(kind: SchedulerKind, probe_ratio: f64) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Centralized => Box::new(Centralized),
+        SchedulerKind::Sparrow => Box::new(Sparrow::new(probe_ratio)),
+        SchedulerKind::Hawk => Box::new(Hybrid::hawk(probe_ratio)),
+        SchedulerKind::Eagle => Box::new(Hybrid::eagle(probe_ratio)),
+        SchedulerKind::CloudCoaster => Box::new(Hybrid::cloudcoaster(probe_ratio)),
+    }
+}
+
+/// Run one experiment end-to-end (workload synthesis → simulation →
+/// analytics) and distill the report.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Report> {
+    let workload = build_workload(cfg)?;
+    let mut analytics = AnalyticsEngine::auto(&artifacts_dir());
+    run_experiment_on(cfg, &workload, analytics.as_dyn())
+}
+
+/// Like [`run_experiment`] but with a shared workload + analytics engine
+/// (sweeps reuse both across runs).
+pub fn run_experiment_on(
+    cfg: &ExperimentConfig,
+    workload: &Workload,
+    analytics: &mut dyn Analytics,
+) -> Result<Report> {
+    let sim_cfg: SimConfig = cfg.to_sim_config();
+    let mut scheduler = build_scheduler(cfg.scheduler, cfg.probe_ratio);
+    let result = simulate_with(workload, scheduler.as_mut(), &sim_cfg, Some(&mut *analytics));
+    distill(cfg, result, analytics)
+}
+
+fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analytics) -> Result<Report> {
+    let end = run.end_time;
+    // Figure 3 CDF through the analytics engine (XLA artifacts when
+    // available): samples -> f32, evaluated at uniform edges.
+    let samples: Vec<f32> =
+        run.rec.short_delays.as_slice().iter().map(|&d| d as f32).collect();
+    let max_delay = samples.iter().copied().fold(1e-6f32, f32::max);
+    let n_edges = crate::runtime::artifacts::EDGES;
+    let edges: Vec<f32> = (0..n_edges)
+        .map(|i| max_delay * i as f32 / (n_edges - 1) as f32)
+        .collect();
+    let (_counts, cdf_vals) = analytics.delay_cdf(&samples, &edges)?;
+    let cdf = Cdf {
+        edges: edges.iter().map(|&e| e as f64).collect(),
+        values: cdf_vals.iter().map(|&v| v as f64).collect(),
+        n_samples: samples.len(),
+    };
+
+    let scheduler: &'static str = match run.scheduler.as_str() {
+        "hawk" => "hawk",
+        "eagle" => "eagle",
+        "cloudcoaster" => "cloudcoaster",
+        "sparrow" => "sparrow",
+        _ => "centralized",
+    };
+    Ok(Report {
+        name: format!("{} r={}", scheduler, cfg.r),
+        scheduler,
+        r: cfg.r,
+        short_delay: DelayStats::of(&mut run.rec.short_delays),
+        long_delay: DelayStats::of(&mut run.rec.long_delays),
+        cdf,
+        avg_transients: run.rec.cost.avg_active(end),
+        max_transients: run.rec.cost.max_active(),
+        mean_lifetime_h: run.rec.cost.mean_lifetime_hours(),
+        max_lifetime_h: run.rec.cost.max_lifetime_hours(),
+        r_normalized_avg: run.rec.cost.r_normalized_avg(end),
+        transients_requested: run.rec.transients_requested,
+        transients_revoked: run.rec.transients_revoked,
+        tasks_rescheduled: run.rec.tasks_rescheduled,
+        end_time: end,
+        events: run.events,
+        wall_ms: run.wall_ms,
+        events_per_sec: run.events as f64 / (run.wall_ms / 1000.0).max(1e-9),
+        analytics_engine: analytics.name(),
+    })
+}
+
+/// Render Table 1 (plus context columns) from a set of reports.
+pub fn table1_markdown(reports: &[Report]) -> String {
+    let mut out = String::new();
+    out.push_str("| run | r | avg life (h) | max life (h) | avg transient | r-norm avg on-demand | requested |\n");
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for rep in reports {
+        out.push_str(&format!(
+            "| {} | {:.0} | {:.2} | {:.1} | {:.1} | {:.1} | {} |\n",
+            rep.name,
+            rep.r,
+            rep.mean_lifetime_h,
+            rep.max_lifetime_h,
+            rep.avg_transients,
+            rep.r_normalized_avg,
+            rep.transients_requested,
+        ));
+    }
+    out
+}
+
+/// Render the Figure 3 summary (delay stats per run + headline ratios
+/// against the first report, which should be the baseline).
+pub fn fig3_markdown(reports: &[Report]) -> String {
+    let mut out = String::new();
+    out.push_str("| run | short mean (s) | short p50 | short p99 | short max | long mean | speedup mean | speedup max |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    let base = reports.first();
+    for rep in reports {
+        let (su_mean, su_max) = match base {
+            Some(b) if b.short_delay.mean > 0.0 => (
+                b.short_delay.mean / rep.short_delay.mean.max(1e-9),
+                b.short_delay.max / rep.short_delay.max.max(1e-9),
+            ),
+            _ => (1.0, 1.0),
+        };
+        out.push_str(&format!(
+            "| {} | {:.1} | {:.1} | {:.1} | {:.0} | {:.1} | {:.2}x | {:.2}x |\n",
+            rep.name,
+            rep.short_delay.mean,
+            rep.short_delay.p50,
+            rep.short_delay.p99,
+            rep.short_delay.max,
+            rep.long_delay.mean,
+            su_mean,
+            su_max,
+        ));
+    }
+    out
+}
+
+/// CSV of CDF series for plotting Figure 3 (one column block per run).
+pub fn fig3_cdf_csv(reports: &[Report]) -> String {
+    let mut out = String::from("run,edge,cdf\n");
+    for rep in reports {
+        for (e, v) in rep.cdf.edges.iter().zip(&rep.cdf.values) {
+            out.push_str(&format!("{},{e:.3},{v:.6}\n", rep.name));
+        }
+    }
+    out
+}
+
+/// Short human-readable summary for the CLI.
+pub fn summary_line(rep: &Report) -> String {
+    format!(
+        "{:<18} short mean {:>8.1}s  p99 {:>8.1}s  max {:>7.0}s | long mean {:>7.1}s | \
+         avg transients {:>6.1} (r-norm {:>5.1}) | {:.1}k ev/s [{}]",
+        rep.name,
+        rep.short_delay.mean,
+        rep.short_delay.p99,
+        rep.short_delay.max,
+        rep.long_delay.mean,
+        rep.avg_transients,
+        rep.r_normalized_avg,
+        rep.events_per_sec / 1000.0,
+        rep.analytics_engine,
+    )
+}
+
+/// Workload description for reports.
+pub fn workload_summary(cfg: &ExperimentConfig) -> Result<String> {
+    Ok(TraceStats::of(&build_workload(cfg)?).summary())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeAnalytics;
+    use crate::trace::synth::YahooLikeParams;
+
+    fn tiny_cfg(kind: SchedulerKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.scheduler = kind;
+        cfg.cluster_size = 120;
+        cfg.short_partition = 8;
+        let mut p = YahooLikeParams::default();
+        p.horizon = 3000.0;
+        cfg.workload = WorkloadSource::YahooLike(p);
+        cfg
+    }
+
+    #[test]
+    fn end_to_end_report_native_analytics() {
+        let cfg = tiny_cfg(SchedulerKind::Eagle);
+        let w = build_workload(&cfg).unwrap();
+        let mut analytics = NativeAnalytics;
+        let rep = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
+        assert!(rep.short_delay.n > 0);
+        assert_eq!(rep.analytics_engine, "native");
+        assert!(rep.cdf.values.last().copied().unwrap_or(0.0) > 0.999);
+        assert_eq!(rep.avg_transients, 0.0); // baseline has none
+    }
+
+    #[test]
+    fn cloudcoaster_report_has_transients() {
+        let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+        cfg.threshold = 0.5; // small cluster needs a lower trigger
+        let w = build_workload(&cfg).unwrap();
+        let mut analytics = NativeAnalytics;
+        let rep = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
+        assert!(rep.transients_requested > 0);
+        assert!(rep.max_transients > 0.0);
+    }
+
+    #[test]
+    fn markdown_tables_render() {
+        let cfg = tiny_cfg(SchedulerKind::Eagle);
+        let w = build_workload(&cfg).unwrap();
+        let mut analytics = NativeAnalytics;
+        let rep = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
+        let reports = vec![rep];
+        assert!(table1_markdown(&reports).contains("r-norm"));
+        assert!(fig3_markdown(&reports).contains("speedup"));
+        assert!(fig3_cdf_csv(&reports).lines().count() > 10);
+        assert!(!summary_line(&reports[0]).is_empty());
+    }
+}

@@ -1,0 +1,406 @@
+//! The simulation runner: drives the event loop over a workload, wiring
+//! the scheduler, the cluster, the transient manager and the metrics
+//! recorder together.
+
+use std::time::Instant;
+
+use crate::cluster::{Cluster, QueuePolicy, ServerState};
+use crate::metrics::Recorder;
+use crate::sched::{SchedCtx, Scheduler};
+use crate::sim::{Engine, Event, Rng};
+use crate::trace::Workload;
+use crate::transient::{ManagerConfig, TransientManager};
+use crate::util::{JobId, TaskId, Time};
+
+/// Low-level simulation parameters (cluster geometry + hooks).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// General-partition size (long + short), on-demand.
+    pub n_general: usize,
+    /// On-demand short-only partition size.
+    pub n_short_reserved: usize,
+    pub queue_policy: QueuePolicy,
+    /// Transient manager (None = statically provisioned baseline).
+    pub manager: Option<ManagerConfig>,
+    /// Metrics sampling period, seconds.
+    pub snapshot_interval: f64,
+    /// Hawk-style task stealing: probes an idle server sends looking for
+    /// a busy victim (0 disables stealing).
+    pub steal_probes: usize,
+    /// Max queued short tasks moved per steal.
+    pub steal_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_general: 3920,
+            n_short_reserved: 80,
+            queue_policy: QueuePolicy::Srpt { starvation_limit: 600.0 },
+            manager: None,
+            snapshot_interval: 60.0,
+            steal_probes: 8,
+            steal_batch: 8,
+            seed: 1,
+        }
+    }
+}
+
+/// Everything a run produces.
+pub struct RunResult {
+    pub scheduler: String,
+    pub rec: Recorder,
+    /// Simulation end time (all work finished), seconds.
+    pub end_time: Time,
+    /// Events processed.
+    pub events: u64,
+    /// Wall-clock runtime, milliseconds.
+    pub wall_ms: f64,
+    /// (adds, drains, failed_requests) if a manager ran.
+    pub manager_stats: Option<(u64, u64, u64)>,
+}
+
+impl RunResult {
+    /// Events per second of wall clock (§Perf headline for L3).
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / (self.wall_ms / 1000.0).max(1e-9)
+    }
+}
+
+/// Steal probes for a newly idle server: sample candidates from the
+/// short pools (where load-spike queues live) and the general partition,
+/// steal from the first victim with queued work.
+fn try_steal(
+    cluster: &mut Cluster,
+    thief: crate::util::ServerId,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+    engine: &mut Engine,
+    rec: &mut Recorder,
+) {
+    // Long-hosting victims are fine: we only take their *short* tasks.
+    for probe in 0..cfg.steal_probes {
+        // Alternate between short pools and the general partition.
+        let victim = if probe % 2 == 0 {
+            let shorts = cluster.short_reserved.len() + cluster.transient_pool.len();
+            if shorts == 0 {
+                continue;
+            }
+            let k = rng.below(shorts as u64) as usize;
+            if k < cluster.short_reserved.len() {
+                cluster.short_reserved[k]
+            } else {
+                cluster.transient_pool[k - cluster.short_reserved.len()]
+            }
+        } else {
+            cluster.general[rng.below(cluster.general.len() as u64) as usize]
+        };
+        if cluster.server(victim).queue.is_empty() {
+            continue;
+        }
+        if cluster.steal_short_tasks(victim, thief, cfg.steal_batch, engine, rec) > 0 {
+            return;
+        }
+    }
+}
+
+/// Run `workload` under `scheduler` with the given config.
+pub fn simulate(
+    workload: &Workload,
+    scheduler: &mut dyn Scheduler,
+    cfg: &SimConfig,
+) -> RunResult {
+    simulate_with(workload, scheduler, cfg, None)
+}
+
+/// Like [`simulate`], with an optional analytics engine for the
+/// predictive-resizing path (the l_r forecast runs on the snapshot/epoch
+/// cadence through the AOT-compiled artifact when the manager has
+/// `predictive = true`).
+pub fn simulate_with(
+    workload: &Workload,
+    scheduler: &mut dyn Scheduler,
+    cfg: &SimConfig,
+    mut analytics: Option<&mut dyn crate::runtime::Analytics>,
+) -> RunResult {
+    let wall0 = Instant::now();
+    let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
+    let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(r);
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut sched_rng = root_rng.fork(0x5C); // probe sampling stream
+    let mut manager = cfg
+        .manager
+        .clone()
+        .map(|m| TransientManager::new(m, root_rng.fork(0x7A)));
+
+    // Per-job bookkeeping for response-time metrics.
+    let mut job_remaining: Vec<u32> =
+        workload.jobs.iter().map(|j| j.num_tasks() as u32).collect();
+    let mut outstanding_tasks: u64 = workload.num_tasks() as u64;
+    let mut next_job = 0usize;
+    let mut task_ids: Vec<TaskId> = Vec::new();
+
+    // Predictive resizing state: l_r history ring + forecast horizon in
+    // snapshot steps.
+    let predictive = cfg.manager.as_ref().map(|m| m.predictive).unwrap_or(false);
+    let window = crate::runtime::artifacts::FORECAST_WINDOW;
+    let mut lr_history: Vec<f32> = Vec::with_capacity(window);
+    let horizon_steps = cfg
+        .manager
+        .as_ref()
+        .map(|m| (m.market.provisioning_delay / cfg.snapshot_interval).ceil() as f32)
+        .unwrap_or(1.0);
+
+    if !workload.jobs.is_empty() {
+        engine.schedule(workload.jobs[0].arrival, Event::JobArrival(JobId(0)));
+        engine.schedule(cfg.snapshot_interval, Event::Snapshot);
+    }
+
+    while let Some((now, event)) = engine.pop() {
+        // Did this event change long-task occupancy? (The paper's §3.2
+        // recalculation trigger.)
+        let mut long_event = false;
+
+        match event {
+            Event::JobArrival(jid) => {
+                let job = &workload.jobs[jid.index()];
+                task_ids.clear();
+                for &d in &job.task_durations {
+                    task_ids.push(cluster.add_task(job.id, d, job.is_long, now));
+                }
+                let mut ctx = SchedCtx {
+                    cluster: &mut cluster,
+                    engine: &mut engine,
+                    rec: &mut rec,
+                    rng: &mut sched_rng,
+                };
+                scheduler.place_job(job, &task_ids, &mut ctx);
+                long_event = job.is_long;
+                next_job = jid.index() + 1;
+                if next_job < workload.jobs.len() {
+                    engine.schedule(
+                        workload.jobs[next_job].arrival,
+                        Event::JobArrival(JobId(next_job as u32)),
+                    );
+                }
+            }
+            Event::TaskFinish { server, task } => {
+                // A revocation may have killed this execution after its
+                // finish event was scheduled (the task restarts elsewhere
+                // with a new finish event) — ignore the stale one.
+                let (is_long, jid) = {
+                    let t = cluster.task(task);
+                    if t.state != crate::cluster::TaskState::Running || t.ran_on != Some(server)
+                    {
+                        continue;
+                    }
+                    (t.is_long, t.job)
+                };
+                let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                if drained {
+                    cluster.retire(server, now, &mut rec);
+                } else if cfg.steal_probes > 0
+                    && cluster.server(server).is_idle()
+                    && cluster.server(server).accepting()
+                {
+                    // Hawk-lineage randomized stealing: the newly idle
+                    // server probes for a busy victim and takes a batch of
+                    // its queued shorts.
+                    try_steal(&mut cluster, server, cfg, &mut sched_rng, &mut engine, &mut rec);
+                }
+                outstanding_tasks -= 1;
+                let rem = &mut job_remaining[jid.index()];
+                *rem -= 1;
+                if *rem == 0 {
+                    let job = &workload.jobs[jid.index()];
+                    rec.job_finished(job.is_long, now - job.arrival);
+                }
+                long_event = is_long;
+            }
+            Event::TransientReady(sid) => {
+                if let Some(mgr) = manager.as_mut() {
+                    mgr.on_ready(sid, &mut cluster, &engine, &mut rec);
+                }
+            }
+            Event::RevocationWarning(sid) => {
+                if let Some(mgr) = manager.as_mut() {
+                    mgr.on_warning(sid, &mut cluster, &engine, &mut rec);
+                }
+            }
+            Event::Revoked(sid) => {
+                let state = cluster.server(sid).state;
+                if matches!(state, ServerState::Active | ServerState::Draining) {
+                    let orphans = cluster.revoke(sid, now, &mut rec);
+                    if !orphans.is_empty() {
+                        let mut ctx = SchedCtx {
+                            cluster: &mut cluster,
+                            engine: &mut engine,
+                            rec: &mut rec,
+                            rng: &mut sched_rng,
+                        };
+                        scheduler.replace_orphans(&orphans, &mut ctx);
+                    }
+                }
+            }
+            Event::DrainComplete(sid) => {
+                if cluster.server(sid).state == ServerState::Draining
+                    && cluster.server(sid).is_idle()
+                {
+                    cluster.retire(sid, now, &mut rec);
+                }
+            }
+            Event::Snapshot => {
+                let lr = cluster.long_load_ratio();
+                rec.snapshot(now, lr, cluster.transient_pool.len() as f64);
+                if predictive {
+                    if lr_history.len() == window {
+                        lr_history.rotate_left(1);
+                        lr_history.pop();
+                    }
+                    lr_history.push(lr as f32);
+                    if lr_history.len() == window {
+                        if let (Some(mgr), Some(eng)) = (manager.as_mut(), analytics.as_deref_mut())
+                        {
+                            if let Ok((forecast, _, _)) =
+                                eng.lr_forecast(&lr_history, horizon_steps)
+                            {
+                                mgr.prewarm(forecast as f64, &mut cluster, &mut engine, &mut rec);
+                            }
+                        }
+                    }
+                }
+                if outstanding_tasks > 0 || next_job < workload.jobs.len() {
+                    engine.schedule_after(cfg.snapshot_interval, Event::Snapshot);
+                }
+            }
+        }
+
+        if long_event {
+            if let Some(mgr) = manager.as_mut() {
+                mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+            }
+        }
+    }
+
+    let end_time = engine.now();
+    // Close out lifetimes for transients still up at simulation end.
+    let live: Vec<_> = cluster
+        .servers
+        .iter()
+        .filter(|s| {
+            s.kind == crate::cluster::ServerKind::Transient
+                && matches!(s.state, ServerState::Active | ServerState::Draining)
+        })
+        .map(|s| s.id)
+        .collect();
+    for sid in live {
+        cluster.retire(sid, end_time, &mut rec);
+    }
+    debug_assert_eq!(outstanding_tasks, 0, "tasks lost by the simulation");
+    #[cfg(debug_assertions)]
+    cluster.check_invariants();
+
+    RunResult {
+        scheduler: scheduler.name().to_string(),
+        rec,
+        end_time,
+        events: engine.processed(),
+        wall_ms: wall0.elapsed().as_secs_f64() * 1000.0,
+        manager_stats: manager.map(|m| (m.adds, m.drains, m.failed_requests)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Hybrid;
+    use crate::trace::synth::{yahoo_like, YahooLikeParams};
+    use crate::transient::Budget;
+
+    fn small_workload(seed: u64) -> Workload {
+        let mut p = YahooLikeParams::default();
+        p.horizon = 4000.0;
+        yahoo_like(&p, &mut Rng::new(seed))
+    }
+
+    fn small_cfg() -> SimConfig {
+        SimConfig { n_general: 128, n_short_reserved: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn all_tasks_complete_under_eagle() {
+        let w = small_workload(3);
+        let mut sched = Hybrid::eagle(2.0);
+        let res = simulate(&w, &mut sched, &small_cfg());
+        assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+        assert_eq!(
+            res.rec.short_delays.len() + res.rec.long_delays.len(),
+            w.num_tasks()
+        );
+        assert!(res.end_time >= w.last_arrival());
+        assert!(res.events > w.num_tasks() as u64);
+    }
+
+    #[test]
+    fn cloudcoaster_uses_transients_and_completes() {
+        let w = small_workload(3);
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        let mut cfg = small_cfg();
+        cfg.n_short_reserved = 4; // p=0.5 of an 8-server static partition
+        cfg.manager = Some(ManagerConfig {
+            threshold: 0.6,
+            ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0))
+        });
+        let res = simulate(&w, &mut sched, &cfg);
+        assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+        let (adds, _, _) = res.manager_stats.unwrap();
+        assert!(adds > 0, "manager never resized");
+        // All transients are closed out at end: every requested server
+        // eventually became active and has a recorded lifetime.
+        assert_eq!(res.rec.cost.active_now(), 0.0);
+        assert_eq!(res.rec.cost.lifetimes.len() as u64, res.rec.transients_requested);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = small_workload(9);
+        let run = || {
+            let mut sched = Hybrid::eagle(2.0);
+            simulate(&w, &mut sched, &small_cfg())
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.end_time, b.end_time);
+        assert_eq!(a.rec.short_delays.as_slice(), b.rec.short_delays.as_slice());
+    }
+
+    #[test]
+    fn empty_workload_is_a_noop() {
+        let w = Workload::default();
+        let mut sched = Hybrid::eagle(2.0);
+        let res = simulate(&w, &mut sched, &small_cfg());
+        assert_eq!(res.events, 0);
+        assert_eq!(res.rec.tasks_finished, 0);
+    }
+
+    #[test]
+    fn revocations_do_not_lose_tasks() {
+        let w = small_workload(5);
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        let mut cfg = small_cfg();
+        cfg.n_short_reserved = 4;
+        let mut mgr = ManagerConfig {
+            threshold: 0.5,
+            ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0))
+        };
+        mgr.market.mttf = Some(600.0); // aggressive revocations
+        cfg.manager = Some(mgr);
+        let res = simulate(&w, &mut sched, &cfg);
+        // Every task finishes exactly once even under heavy revocation.
+        assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+    }
+}

@@ -1,0 +1,193 @@
+//! Parameter sweeps: the paper's evaluation grid (Baseline + r ∈ {1,2,3})
+//! and the ablation grids (threshold, revocation MTTF, shrink policy).
+//! One workload + one analytics engine are shared across the whole sweep
+//! so runs differ only in the swept parameter.
+
+use anyhow::Result;
+
+use crate::coordinator::config::{ExperimentConfig, SchedulerKind};
+use crate::coordinator::report::{build_workload, run_experiment_on, Report};
+use crate::runtime::AnalyticsEngine;
+
+/// The paper's §4 grid: Eagle baseline, then CloudCoaster at each r.
+pub fn paper_sweep(base: &ExperimentConfig, ratios: &[f64]) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+
+    let mut baseline = base.clone();
+    baseline.scheduler = SchedulerKind::Eagle;
+    let mut rep = run_experiment_on(&baseline, &workload, analytics.as_dyn())?;
+    rep.name = "baseline(eagle)".to_string();
+    reports.push(rep);
+
+    for &r in ratios {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::CloudCoaster;
+        cfg.r = r;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = format!("cloudcoaster r={r:.0}");
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+/// Ablation: sensitivity to the long-load-ratio threshold L_r^T.
+pub fn threshold_sweep(base: &ExperimentConfig, thresholds: &[f64]) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+    for &t in thresholds {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::CloudCoaster;
+        cfg.threshold = t;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = format!("L_r^T={t:.2}");
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+/// Ablation: behaviour under forced revocations (§3.3 resilience path).
+pub fn revocation_sweep(base: &ExperimentConfig, mttfs: &[Option<f64>]) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+    for &mttf in mttfs {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::CloudCoaster;
+        cfg.mttf = mttf;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = match mttf {
+            Some(m) => format!("mttf={:.1}h", m / 3600.0),
+            None => "mttf=inf".to_string(),
+        };
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+/// Ablation: the paper's asymmetric grow/shrink policy vs. a symmetric
+/// aggressive one.
+pub fn policy_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+    for (name, removals, aggressive, cooldown) in [
+        ("paper(asym+cooldown)", 1usize, true, 120.0),
+        ("paper-literal(no-cooldown)", 1, true, 0.0),
+        ("symmetric-aggressive", usize::MAX, true, 0.0),
+        ("symmetric-slow", 1, false, 120.0),
+    ] {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::CloudCoaster;
+        cfg.max_removals_per_recalc = removals;
+        cfg.aggressive_add = aggressive;
+        cfg.drain_cooldown = cooldown;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = name.to_string();
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+/// Ablation: bid level on the dynamic spot market (§2.4's Amazon model;
+/// the paper's evaluation uses fixed 1/r pricing, `bid = None`).
+pub fn bid_sweep(base: &ExperimentConfig, bids: &[Option<f64>]) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+    for &bid in bids {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::CloudCoaster;
+        cfg.bid = bid;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = match bid {
+            Some(b) => format!("bid={b:.2}"),
+            None => "fixed-1/r".to_string(),
+        };
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+/// Ablation: reactive (§3.2) vs predictive (lr_forecast artifact)
+/// resizing.
+pub fn forecast_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+    for (name, predictive) in [("reactive(paper)", false), ("predictive(forecast)", true)] {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::CloudCoaster;
+        cfg.predictive = predictive;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = name.to_string();
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+/// Scheduler-family comparison (context for §5 related work).
+pub fn scheduler_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
+    let workload = build_workload(base)?;
+    let mut reports = Vec::new();
+    for kind in [
+        SchedulerKind::Centralized,
+        SchedulerKind::Sparrow,
+        SchedulerKind::Hawk,
+        SchedulerKind::Eagle,
+        SchedulerKind::CloudCoaster,
+    ] {
+        let mut cfg = base.clone();
+        cfg.scheduler = kind;
+        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
+        rep.name = kind.name().to_string();
+        reports.push(rep);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::WorkloadSource;
+    use crate::trace::synth::YahooLikeParams;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.cluster_size = 120;
+        cfg.short_partition = 8;
+        cfg.threshold = 0.5;
+        let mut p = YahooLikeParams::default();
+        p.horizon = 2000.0;
+        cfg.workload = WorkloadSource::YahooLike(p);
+        cfg
+    }
+
+    #[test]
+    fn paper_sweep_shapes() {
+        let reports = paper_sweep(&tiny_base(), &[1.0, 3.0]).unwrap();
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].name, "baseline(eagle)");
+        assert_eq!(reports[0].avg_transients, 0.0);
+        assert!(reports[2].transients_requested > 0);
+        // Same workload: identical sample counts across runs.
+        assert_eq!(reports[0].short_delay.n, reports[1].short_delay.n);
+    }
+
+    #[test]
+    fn threshold_sweep_runs() {
+        let reports = threshold_sweep(&tiny_base(), &[0.3, 0.9]).unwrap();
+        assert_eq!(reports.len(), 2);
+        // Lower threshold -> at least as many transients requested.
+        assert!(reports[0].transients_requested >= reports[1].transients_requested);
+    }
+
+    #[test]
+    fn policy_sweep_runs() {
+        let reports = policy_sweep(&tiny_base()).unwrap();
+        assert_eq!(reports.len(), 4);
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimal TOML-subset parser for experiment config files (no external
+//! TOML crate is available in this build environment; see DESIGN.md §3).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / inline scalar array values, `#` comments. That is
+//! the full surface the config files in `examples/` and the CLI use.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map (keys in the root section have no prefix).
+pub type Table = BTreeMap<String, Value>;
+
+fn parse_scalar(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+        return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if raw.starts_with('[') && raw.ends_with(']') {
+        let inner = &raw[1..raw.len() - 1];
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(parse_scalar)
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {raw:?}")
+}
+
+/// Parse TOML-subset text into a flat `section.key` table.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut table = Table::new();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = match line.find('#') {
+            // Strip comments, but not inside quoted strings.
+            Some(idx) if !line[..idx].contains('"') || line[..idx].matches('"').count() % 2 == 0 => {
+                &line[..idx]
+            }
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let full_key = if section.is_empty() {
+            key.trim().to_string()
+        } else {
+            format!("{section}.{}", key.trim())
+        };
+        let value =
+            parse_scalar(value).with_context(|| format!("line {}", lineno + 1))?;
+        table.insert(full_key, value);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            r#"
+            # experiment
+            seed = 42
+            [cluster]
+            servers = 4000
+            threshold = 0.95
+            name = "paper"
+            enabled = true
+            ratios = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["seed"], Value::Int(42));
+        assert_eq!(t["cluster.servers"].as_usize(), Some(4000));
+        assert_eq!(t["cluster.threshold"].as_f64(), Some(0.95));
+        assert_eq!(t["cluster.name"].as_str(), Some("paper"));
+        assert_eq!(t["cluster.enabled"].as_bool(), Some(true));
+        assert_eq!(
+            t["cluster.ratios"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let t = parse("x = 3").unwrap();
+        assert_eq!(t["x"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let t = parse("# hi\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(t["a"], Value::Int(1));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just words").is_err());
+        assert!(parse("x = @nope").is_err());
+    }
+
+    #[test]
+    fn string_with_hash_preserved() {
+        let t = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(t["s"].as_str(), Some("a#b"));
+    }
+}

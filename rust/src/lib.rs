@@ -1,0 +1,48 @@
+//! # CloudCoaster
+//!
+//! Production-grade reproduction of *"CloudCoaster: Transient-aware Bursty
+//! Datacenter Workload Scheduling"* (Ogden & Guo, 2019).
+//!
+//! CloudCoaster is a hybrid datacenter scheduler that dynamically resizes
+//! the short-job-only cluster partition with cheap **transient servers**
+//! (spot / preemptible instances), driven by the **long-load ratio**
+//! `l_r = N_long / N_total` (paper §3.2). This crate contains the complete
+//! system: a deterministic discrete-event cluster simulator, the scheduler
+//! family (centralized, Sparrow, Eagle, CloudCoaster), the transient-market
+//! substrate (pricing, provisioning delay, revocations, budget), synthetic
+//! workload generators calibrated to the Yahoo/Google traces the paper
+//! uses, a metrics pipeline, and a PJRT runtime that executes the
+//! AOT-compiled JAX/Pallas analytics artifacts from `artifacts/`.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — event loop, cluster state, schedulers, transient
+//!   manager, experiment coordinator. Python-free at runtime.
+//! * **L2/L1 (python/compile)** — JAX cluster-state analytics + Pallas
+//!   kernels, AOT-lowered to HLO text and executed through
+//!   [`runtime::XlaAnalytics`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cloudcoaster::coordinator::{ExperimentConfig, run_experiment};
+//!
+//! let cfg = ExperimentConfig::paper_defaults();
+//! let report = run_experiment(&cfg).unwrap();
+//! println!("avg short queueing delay: {:.1}s", report.short_delay.mean());
+//! ```
+
+pub mod benchkit;
+pub mod cluster;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testkit;
+pub mod trace;
+pub mod transient;
+pub mod util;
+
+pub use coordinator::{run_experiment, ExperimentConfig};
+

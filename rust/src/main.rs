@@ -1,0 +1,193 @@
+//! `cloudcoaster` — CLI launcher for the CloudCoaster reproduction.
+//!
+//! ```text
+//! cloudcoaster run      [--config FILE] [--scheduler KIND] [--r R] [--seed N]
+//! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3]
+//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler
+//! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
+//! cloudcoaster replicate [--seeds N]   # headline across N seeds
+//! cloudcoaster version
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use cloudcoaster::coordinator::config::{ExperimentConfig, SchedulerKind, WorkloadSource};
+use cloudcoaster::coordinator::report::{
+    fig3_cdf_csv, fig3_markdown, run_experiment, summary_line, table1_markdown,
+    workload_summary,
+};
+use cloudcoaster::coordinator::sweep;
+use cloudcoaster::sim::Rng;
+use cloudcoaster::trace::synth::{google_like, yahoo_like, GoogleLikeParams, YahooLikeParams};
+use cloudcoaster::trace::{write_csv, TraceStats};
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let Some(cmd) = argv.first() else {
+            bail!("usage: cloudcoaster <run|sweep|ablate|trace|version> [--flag value ...]");
+        };
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            let value = argv.get(i + 1).with_context(|| format!("--{key} needs a value"))?;
+            flags.push((key.to_string(), value.clone()));
+            i += 2;
+        }
+        Ok(Args { cmd: cmd.clone(), flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(Path::new(path))?,
+        None => ExperimentConfig::paper_defaults(),
+    };
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(s)?;
+    }
+    if let Some(r) = args.get("r") {
+        cfg.r = r.parse().context("--r")?;
+    }
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed.parse().context("--seed")?;
+    }
+    if let Some(t) = args.get("threshold") {
+        cfg.threshold = t.parse().context("--threshold")?;
+    }
+    if let Some(h) = args.get("horizon") {
+        let horizon: f64 = h.parse().context("--horizon")?;
+        if let WorkloadSource::YahooLike(p) = &mut cfg.workload {
+            p.horizon = horizon;
+        }
+    }
+    if let Some(n) = args.get("servers") {
+        cfg.cluster_size = n.parse().context("--servers")?;
+    }
+    if let Some(n) = args.get("short-partition") {
+        cfg.short_partition = n.parse().context("--short-partition")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_ratios(s: &str) -> Result<Vec<f64>> {
+    s.split(',').map(|x| x.trim().parse::<f64>().context("ratio list")).collect()
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    eprintln!("workload: {}", workload_summary(&cfg)?);
+    let rep = run_experiment(&cfg)?;
+    println!("{}", summary_line(&rep));
+    if let Some(out) = args.get("cdf-out") {
+        std::fs::write(out, rep.cdf.to_csv())?;
+        eprintln!("wrote CDF to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ratios = match args.get("ratios") {
+        Some(s) => parse_ratios(s)?,
+        None => vec![1.0, 2.0, 3.0],
+    };
+    eprintln!("workload: {}", workload_summary(&cfg)?);
+    let reports = sweep::paper_sweep(&cfg, &ratios)?;
+    println!("\n== Figure 3: short-task queueing delay ==\n{}", fig3_markdown(&reports));
+    println!("== Table 1: transient lifetimes & counts ==\n{}", table1_markdown(&reports));
+    if let Some(out) = args.get("cdf-out") {
+        std::fs::write(out, fig3_cdf_csv(&reports))?;
+        eprintln!("wrote CDF series to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let what = args.get("what").unwrap_or("threshold");
+    let reports = match what {
+        "threshold" => sweep::threshold_sweep(&cfg, &[0.5, 0.75, 0.9, 0.95, 0.99])?,
+        "revocation" => sweep::revocation_sweep(
+            &cfg,
+            &[None, Some(4.0 * 3600.0), Some(3600.0)],
+        )?,
+        "policy" => sweep::policy_sweep(&cfg)?,
+        "scheduler" => sweep::scheduler_sweep(&cfg)?,
+        "market" => sweep::bid_sweep(&cfg, &[None, Some(2.0), Some(0.5), Some(0.35)])?,
+        "forecast" => sweep::forecast_sweep(&cfg)?,
+        other => bail!(
+            "unknown ablation {other:?} (threshold|revocation|policy|scheduler|market|forecast)"
+        ),
+    };
+    println!("\n== ablation: {what} ==\n{}", fig3_markdown(&reports));
+    println!("{}", table1_markdown(&reports));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let kind = args.get("kind").unwrap_or("yahoo");
+    let out = args.get("out").unwrap_or("trace.csv");
+    let seed: u64 = args.get("seed").unwrap_or("42").parse()?;
+    let mut rng = Rng::new(seed);
+    let workload = match kind {
+        "yahoo" => {
+            let mut p = YahooLikeParams::default();
+            if let Some(h) = args.get("horizon") {
+                p.horizon = h.parse()?;
+            }
+            yahoo_like(&p, &mut rng)
+        }
+        "google" => {
+            let mut p = GoogleLikeParams::default();
+            if let Some(h) = args.get("horizon") {
+                p.horizon = h.parse()?;
+            }
+            google_like(&p, &mut rng)
+        }
+        other => bail!("unknown trace kind {other:?} (yahoo|google)"),
+    };
+    println!("{}", TraceStats::of(&workload).summary());
+    write_csv(&workload, Path::new(out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "run" => cmd_run(&args),
+        "replicate" => {
+            let cfg = load_config(&args)?;
+            let n: u64 = args.get("seeds").unwrap_or("5").parse()?;
+            let seeds: Vec<u64> = (0..n).map(|i| cfg.seed + i).collect();
+            let rep = cloudcoaster::coordinator::replicate::replicate(&cfg, &seeds)?;
+            println!("{}", rep.summary());
+            Ok(())
+        }
+        "sweep" => cmd_sweep(&args),
+        "ablate" => cmd_ablate(&args),
+        "trace" => cmd_trace(&args),
+        "version" => {
+            println!("cloudcoaster {} (paper reproduction)", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (run|sweep|ablate|trace|replicate|version)"),
+    }
+}

@@ -1,0 +1,95 @@
+//! Empirical CDF construction — the representation behind the paper's
+//! Figure 3 ("CDFs of short tasks queueing delay").
+
+/// An empirical CDF evaluated at a fixed set of edges.
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    pub edges: Vec<f64>,
+    /// P(X <= edge) for each edge.
+    pub values: Vec<f64>,
+    pub n_samples: usize,
+}
+
+impl Cdf {
+    /// Build from samples at `n_edges` points spanning [0, max(sample)].
+    pub fn from_samples(samples: &[f64], n_edges: usize) -> Cdf {
+        let max = samples.iter().copied().fold(0.0, f64::max).max(1e-9);
+        let edges: Vec<f64> =
+            (0..n_edges).map(|i| max * i as f64 / (n_edges - 1) as f64).collect();
+        Cdf::from_samples_at(samples, edges)
+    }
+
+    /// Build from samples evaluated at the given (sorted) edges.
+    pub fn from_samples_at(samples: &[f64], edges: Vec<f64>) -> Cdf {
+        debug_assert!(edges.windows(2).all(|w| w[0] <= w[1]), "edges must be sorted");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let n = sorted.len().max(1);
+        let values = edges
+            .iter()
+            .map(|&e| sorted.partition_point(|&s| s <= e) as f64 / n as f64)
+            .collect();
+        Cdf { edges, values, n_samples: samples.len() }
+    }
+
+    /// Inverse CDF: the smallest edge with CDF >= q.
+    pub fn quantile(&self, q: f64) -> f64 {
+        for (e, v) in self.edges.iter().zip(&self.values) {
+            if *v >= q {
+                return *e;
+            }
+        }
+        *self.edges.last().unwrap_or(&0.0)
+    }
+
+    /// Render as `edge,value` CSV rows (for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("edge,cdf\n");
+        for (e, v) in self.edges.iter().zip(&self.values) {
+            out.push_str(&format!("{e:.4},{v:.6}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_monotone_and_complete() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let cdf = Cdf::from_samples(&samples, 51);
+        assert!(cdf.values.windows(2).all(|w| w[0] <= w[1]));
+        assert!((cdf.values.last().unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(cdf.n_samples, 100);
+    }
+
+    #[test]
+    fn quantile_inverts() {
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let cdf = Cdf::from_samples(&samples, 1001);
+        let median = cdf.quantile(0.5);
+        assert!((median - 500.0).abs() < 2.0, "median={median}");
+    }
+
+    #[test]
+    fn custom_edges() {
+        let cdf = Cdf::from_samples_at(&[5.0, 15.0, 25.0], vec![0.0, 10.0, 20.0, 30.0]);
+        assert_eq!(cdf.values, vec![0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_samples() {
+        let cdf = Cdf::from_samples(&[], 10);
+        assert!(cdf.values.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn csv_renders() {
+        let cdf = Cdf::from_samples_at(&[1.0], vec![0.0, 2.0]);
+        let csv = cdf.to_csv();
+        assert!(csv.starts_with("edge,cdf\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,140 @@
+//! Cost accounting for the short-only partition (paper §4.2, Table 1).
+//!
+//! On-demand servers cost 1 unit/hour; transient servers cost `1/r`
+//! units/hour where `r = c_static / c_trans` (§3.1). The paper's headline
+//! cost metric is the *r-normalized average on-demand equivalent*: the
+//! time-weighted average number of active transient servers divided by r,
+//! compared against the `N_s * p` on-demand servers the static baseline
+//! dedicates to the same role.
+
+use crate::metrics::StepIntegrator;
+use crate::util::Time;
+
+/// Ledger of transient-server usage + derived cost numbers.
+#[derive(Clone, Debug)]
+pub struct CostLedger {
+    /// Cost ratio r = c_static / c_trans.
+    pub r: f64,
+    /// Active transient count as an exact step function of time.
+    active: StepIntegrator,
+    /// Completed transient lifetimes (active -> retired), seconds.
+    pub lifetimes: Vec<f64>,
+    /// Total transient server-seconds consumed (integral of active count).
+    start: Time,
+}
+
+impl CostLedger {
+    pub fn new(r: f64) -> Self {
+        CostLedger { r, active: StepIntegrator::new(0.0, 0.0), lifetimes: Vec::new(), start: 0.0 }
+    }
+
+    /// A transient server became active at `t`.
+    pub fn transient_up(&mut self, t: Time) {
+        self.active.add(t, 1.0);
+    }
+
+    /// A transient server retired at `t` after `lifetime` seconds active.
+    pub fn transient_down(&mut self, t: Time, lifetime: f64) {
+        self.active.add(t, -1.0);
+        self.lifetimes.push(lifetime);
+    }
+
+    pub fn active_now(&self) -> f64 {
+        self.active.value()
+    }
+
+    pub fn max_active(&self) -> f64 {
+        self.active.max()
+    }
+
+    /// Time-weighted average active transient count over `[start, end]`
+    /// (Table 1 "Average transient").
+    pub fn avg_active(&self, end: Time) -> f64 {
+        self.active.mean_to(self.start, end)
+    }
+
+    /// Table 1 "r-normalized avg. on-demand": average transients / r.
+    pub fn r_normalized_avg(&self, end: Time) -> f64 {
+        self.avg_active(end) / self.r
+    }
+
+    /// Transient server-hours consumed up to `end`.
+    pub fn transient_hours(&self, end: Time) -> f64 {
+        self.active.integral_to(end) / 3600.0
+    }
+
+    /// Cost (in on-demand-server-hour units) of the dynamic partition.
+    pub fn transient_cost(&self, end: Time) -> f64 {
+        self.transient_hours(end) / self.r
+    }
+
+    /// Mean / max lifetime of retired transient servers, hours (Table 1
+    /// "Active time"). Servers still active at `end` are not included —
+    /// callers should retire them at simulation end first.
+    pub fn mean_lifetime_hours(&self) -> f64 {
+        crate::util::mean(&self.lifetimes) / 3600.0
+    }
+
+    pub fn max_lifetime_hours(&self) -> f64 {
+        self.lifetimes.iter().copied().fold(0.0, f64::max) / 3600.0
+    }
+
+    /// Cost saving vs. a static baseline that keeps `baseline_servers`
+    /// on-demand servers running for the whole interval: the paper's
+    /// "29.5% reduction in short partition budget".
+    pub fn saving_vs_static(&self, baseline_servers: f64, end: Time) -> f64 {
+        if baseline_servers <= 0.0 {
+            return 0.0;
+        }
+        (baseline_servers - self.r_normalized_avg(end)) / baseline_servers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accounting() {
+        let mut c = CostLedger::new(3.0);
+        c.transient_up(0.0);
+        c.transient_up(0.0);
+        c.transient_down(3600.0, 3600.0);
+        // One server for the second hour.
+        assert!((c.avg_active(7200.0) - 1.5).abs() < 1e-12);
+        assert!((c.r_normalized_avg(7200.0) - 0.5).abs() < 1e-12);
+        assert!((c.transient_hours(7200.0) - 3.0).abs() < 1e-12);
+        assert!((c.transient_cost(7200.0) - 1.0).abs() < 1e-12);
+        assert_eq!(c.max_active(), 2.0);
+        assert!((c.mean_lifetime_hours() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_scenario_saving() {
+        // r=3, avg 84.5 transients -> 28.2 normalized vs 40 baseline
+        // => 29.5% saving (Table 1).
+        let mut c = CostLedger::new(3.0);
+        c.transient_up(0.0);
+        // Fake the integral: 84.5 servers on average over 10h by setting
+        // up/down aggregates — emulate with direct step moves.
+        let mut c2 = CostLedger::new(3.0);
+        for _ in 0..845 {
+            c2.transient_up(0.0);
+        }
+        for _ in 0..845 {
+            c2.transient_down(36_000.0, 36_000.0);
+        }
+        let avg = c2.avg_active(36_000.0 * 10.0);
+        assert!((avg - 84.5).abs() < 1e-9, "avg={avg}");
+        let saving = c2.saving_vs_static(40.0, 36_000.0 * 10.0);
+        assert!((saving - (40.0 - 84.5 / 3.0) / 40.0).abs() < 1e-9);
+        drop(c);
+    }
+
+    #[test]
+    fn zero_usage_full_saving() {
+        let c = CostLedger::new(2.0);
+        assert_eq!(c.saving_vs_static(40.0, 1000.0), 1.0);
+        assert_eq!(c.mean_lifetime_hours(), 0.0);
+    }
+}

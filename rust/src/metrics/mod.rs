@@ -1,0 +1,15 @@
+//! Metrics pipeline: streaming statistics, exact empirical CDFs,
+//! time-series recording with exact step integration, transient cost
+//! accounting, and the per-run [`Recorder`].
+
+mod cdf;
+mod cost;
+mod recorder;
+mod stats;
+mod timeseries;
+
+pub use cdf::Cdf;
+pub use cost::CostLedger;
+pub use recorder::Recorder;
+pub use stats::{DelaySamples, StreamingStats};
+pub use timeseries::{StepIntegrator, TimeSeries};

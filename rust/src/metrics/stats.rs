@@ -1,0 +1,168 @@
+//! Streaming and sample-based statistics.
+
+/// Constant-memory running statistics (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct StreamingStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl StreamingStats {
+    pub fn new() -> Self {
+        StreamingStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Full-sample container for metrics we need exact percentiles/CDFs of
+/// (short-task queueing delays: one f64 per task, fine at trace scale).
+#[derive(Clone, Debug, Default)]
+pub struct DelaySamples {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl DelaySamples {
+    pub fn new() -> Self {
+        DelaySamples { samples: Vec::new(), sorted: true }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.total_cmp(b));
+            self.sorted = true;
+        }
+    }
+
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let pos = (q.clamp(0.0, 1.0) * (self.samples.len() - 1) as f64).round() as usize;
+        self.samples[pos]
+    }
+
+    /// Empirical CDF value at `x` (fraction of samples <= x).
+    pub fn cdf_at(&mut self, x: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let idx = self.samples.partition_point(|&s| s <= x);
+        idx as f64 / self.samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_matches_closed_form() {
+        let mut s = StreamingStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std_dev() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn empty_streaming_is_zeroes() {
+        let s = StreamingStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.variance(), 0.0);
+    }
+
+    #[test]
+    fn delay_samples_percentiles() {
+        let mut d = DelaySamples::new();
+        for i in (0..=100).rev() {
+            d.push(i as f64);
+        }
+        assert_eq!(d.percentile(0.5), 50.0);
+        assert_eq!(d.percentile(1.0), 100.0);
+        assert_eq!(d.percentile(0.0), 0.0);
+        assert_eq!(d.max(), 100.0);
+        assert!((d.mean() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_at_boundaries() {
+        let mut d = DelaySamples::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            d.push(x);
+        }
+        assert_eq!(d.cdf_at(0.5), 0.0);
+        assert_eq!(d.cdf_at(2.0), 0.5);
+        assert_eq!(d.cdf_at(10.0), 1.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Time-series recording: sampled series (for plots) and exact
+//! step-function integration (for time-weighted averages like the paper's
+//! "average number of active transient servers").
+
+use crate::util::Time;
+
+/// A sampled time series (snapshot points for plotting / reports).
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(Time, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        TimeSeries { points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: Time, v: f64) {
+        debug_assert!(self.points.last().map_or(true, |&(pt, _)| t >= pt));
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.points.iter().map(|&(_, v)| v).collect::<Vec<_>>())
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Rebucket into fixed windows by averaging (the paper's Figure 1 does
+    /// 100 s averages then 4 h averages; apply this twice).
+    pub fn rebucket(&self, window: f64) -> TimeSeries {
+        let mut out = TimeSeries::new();
+        if self.points.is_empty() {
+            return out;
+        }
+        let t0 = self.points[0].0;
+        let mut bucket_end = t0 + window;
+        let (mut sum, mut n) = (0.0, 0u32);
+        for &(t, v) in &self.points {
+            while t >= bucket_end {
+                if n > 0 {
+                    out.push(bucket_end - window / 2.0, sum / n as f64);
+                }
+                sum = 0.0;
+                n = 0;
+                bucket_end += window;
+            }
+            sum += v;
+            n += 1;
+        }
+        if n > 0 {
+            out.push(bucket_end - window / 2.0, sum / n as f64);
+        }
+        out
+    }
+}
+
+/// Exact integrator for a step function of time (e.g. active transient
+/// count): record value changes, read off the time-weighted average.
+#[derive(Clone, Debug)]
+pub struct StepIntegrator {
+    value: f64,
+    last_change: Time,
+    integral: f64,
+    max: f64,
+}
+
+impl StepIntegrator {
+    pub fn new(start: Time, initial: f64) -> Self {
+        StepIntegrator { value: initial, last_change: start, integral: 0.0, max: initial }
+    }
+
+    /// Record that the tracked quantity changed to `value` at time `t`.
+    pub fn set(&mut self, t: Time, value: f64) {
+        debug_assert!(t >= self.last_change, "time went backwards");
+        self.integral += self.value * (t - self.last_change);
+        self.last_change = t;
+        self.value = value;
+        self.max = self.max.max(value);
+    }
+
+    pub fn add(&mut self, t: Time, delta: f64) {
+        self.set(t, self.value + delta);
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Integral of the step function from start to `end`.
+    pub fn integral_to(&self, end: Time) -> f64 {
+        self.integral + self.value * (end - self.last_change)
+    }
+
+    /// Time-weighted average over `[start, end]`.
+    pub fn mean_to(&self, start: Time, end: Time) -> f64 {
+        if end <= start {
+            return self.value;
+        }
+        self.integral_to(end) / (end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_integrator_exact() {
+        let mut s = StepIntegrator::new(0.0, 0.0);
+        s.set(10.0, 5.0); // 0 for [0,10)
+        s.set(20.0, 2.0); // 5 for [10,20)
+        // 2 for [20,30)
+        assert!((s.integral_to(30.0) - (0.0 * 10.0 + 5.0 * 10.0 + 2.0 * 10.0)).abs() < 1e-12);
+        assert!((s.mean_to(0.0, 30.0) - 70.0 / 30.0).abs() < 1e-12);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn add_tracks_deltas() {
+        let mut s = StepIntegrator::new(0.0, 0.0);
+        s.add(5.0, 3.0);
+        s.add(10.0, -1.0);
+        assert_eq!(s.value(), 2.0);
+        assert!((s.integral_to(20.0) - (0.0 * 5.0 + 3.0 * 5.0 + 2.0 * 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rebucket_averages() {
+        let mut ts = TimeSeries::new();
+        for i in 0..100 {
+            ts.push(i as f64, if i < 50 { 10.0 } else { 20.0 });
+        }
+        let rb = ts.rebucket(50.0);
+        assert_eq!(rb.len(), 2);
+        assert!((rb.points[0].1 - 10.0).abs() < 1e-12);
+        assert!((rb.points[1].1 - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rebucket_handles_gaps() {
+        let mut ts = TimeSeries::new();
+        ts.push(0.0, 1.0);
+        ts.push(1000.0, 3.0);
+        let rb = ts.rebucket(100.0);
+        assert_eq!(rb.len(), 2);
+    }
+
+    #[test]
+    fn empty_series() {
+        let ts = TimeSeries::new();
+        assert!(ts.rebucket(10.0).is_empty());
+        assert_eq!(ts.mean(), 0.0);
+    }
+}

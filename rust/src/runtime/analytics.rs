@@ -1,0 +1,367 @@
+//! The analytics API the coordinator calls on the epoch path, with two
+//! interchangeable engines:
+//!
+//! * [`XlaAnalytics`] — loads the AOT-compiled HLO artifacts (L2 JAX
+//!   graphs wrapping the L1 Pallas kernels) and executes them on the PJRT
+//!   CPU client. Python is never involved at runtime.
+//! * [`NativeAnalytics`] — pure-rust reference implementation of the same
+//!   semantics; used when `artifacts/` is absent and as the equivalence
+//!   oracle in tests (`runtime_roundtrip`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::{
+    artifact_file, pad_to, validate_manifest, ALPHA, ARTIFACT_NAMES, BUCKETS, DELAY_CHUNK,
+    EDGES, FORECAST_ALPHA, FORECAST_WINDOW, PAD_SENTINEL, SERVERS, TASK_CHUNK,
+};
+
+/// Outputs of the cluster-state pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterStateOut {
+    /// Per-server probe score (estimated wait; PAD_SENTINEL for padding).
+    pub scores: Vec<f32>,
+    /// [n_long_servers, total_backlog, total_queued, n_active].
+    pub stats: [f32; 4],
+    /// The long-load ratio l_r.
+    pub l_r: f32,
+}
+
+/// Engine-agnostic analytics interface.
+pub trait Analytics {
+    /// One fused pass over the (padded) server vectors.
+    fn cluster_state(
+        &mut self,
+        remaining_work: &[f32],
+        long_counts: &[f32],
+        queue_len: &[f32],
+        active: &[f32],
+    ) -> Result<ClusterStateOut>;
+
+    /// Figure 1: concurrent tasks at each sample point. Streams task
+    /// chunks; `starts.len() == ends.len()` arbitrary, `times.len()` must
+    /// be <= BUCKETS.
+    fn concurrency(&mut self, starts: &[f32], ends: &[f32], times: &[f32]) -> Result<Vec<f32>>;
+
+    /// Figure 3: cumulative counts + CDF of `delays` at `edges`
+    /// (`edges.len() <= EDGES`).
+    fn delay_cdf(&mut self, delays: &[f32], edges: &[f32]) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Predictive resizing: Holt level+trend forecast of l_r,
+    /// `horizon_steps` snapshot intervals ahead. `history` must hold
+    /// exactly [`FORECAST_WINDOW`] samples, oldest first.
+    /// Returns `(forecast, level, slope)`.
+    fn lr_forecast(&mut self, history: &[f32], horizon_steps: f32) -> Result<(f32, f32, f32)>;
+
+    fn name(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------------ native
+
+/// Pure-rust reference engine (same semantics as kernels/ref.py).
+#[derive(Default)]
+pub struct NativeAnalytics;
+
+impl Analytics for NativeAnalytics {
+    fn cluster_state(
+        &mut self,
+        remaining_work: &[f32],
+        long_counts: &[f32],
+        queue_len: &[f32],
+        active: &[f32],
+    ) -> Result<ClusterStateOut> {
+        let n = remaining_work.len();
+        anyhow::ensure!(long_counts.len() == n && queue_len.len() == n && active.len() == n);
+        let mut scores = Vec::with_capacity(n);
+        let mut stats = [0f32; 4];
+        for i in 0..n {
+            let act = active[i] > 0.0;
+            scores.push(if act { remaining_work[i] + ALPHA * queue_len[i] } else { PAD_SENTINEL });
+            if act {
+                if long_counts[i] > 0.0 {
+                    stats[0] += 1.0;
+                }
+                stats[1] += remaining_work[i];
+                stats[2] += queue_len[i];
+                stats[3] += 1.0;
+            }
+        }
+        let l_r = stats[0] / stats[3].max(1.0);
+        Ok(ClusterStateOut { scores, stats, l_r })
+    }
+
+    fn concurrency(&mut self, starts: &[f32], ends: &[f32], times: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(starts.len() == ends.len());
+        let mut counts = vec![0f32; times.len()];
+        for (j, &t) in times.iter().enumerate() {
+            let mut c = 0f32;
+            for i in 0..starts.len() {
+                if starts[i] <= t && ends[i] > t {
+                    c += 1.0;
+                }
+            }
+            counts[j] = c;
+        }
+        Ok(counts)
+    }
+
+    fn delay_cdf(&mut self, delays: &[f32], edges: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = delays.len().max(1) as f32;
+        let counts: Vec<f32> = edges
+            .iter()
+            .map(|&e| delays.iter().filter(|&&d| d <= e).count() as f32)
+            .collect();
+        let cdf = counts.iter().map(|&c| c / n).collect();
+        Ok((counts, cdf))
+    }
+
+    fn lr_forecast(&mut self, history: &[f32], horizon_steps: f32) -> Result<(f32, f32, f32)> {
+        anyhow::ensure!(history.len() == FORECAST_WINDOW, "history must be FORECAST_WINDOW");
+        let w = history.len();
+        let mut wsum = 0.0f64;
+        let mut level = 0.0f64;
+        let mut kbar = 0.0f64;
+        for (k, &x) in history.iter().enumerate() {
+            let weight = (1.0 - FORECAST_ALPHA as f64).powi((w - 1 - k) as i32);
+            wsum += weight;
+            level += weight * x as f64;
+            kbar += weight * k as f64;
+        }
+        level /= wsum;
+        kbar /= wsum;
+        let (mut var, mut cov) = (0.0f64, 0.0f64);
+        for (k, &x) in history.iter().enumerate() {
+            let weight = (1.0 - FORECAST_ALPHA as f64).powi((w - 1 - k) as i32);
+            var += weight * (k as f64 - kbar) * (k as f64 - kbar);
+            cov += weight * (k as f64 - kbar) * (x as f64 - level);
+        }
+        let slope = cov / var.max(1e-9);
+        let forecast = (level + slope * (horizon_steps as f64 + (w - 1) as f64 - kbar))
+            .clamp(0.0, 1.0);
+        Ok((forecast as f32, level as f32, slope as f32))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// --------------------------------------------------------------------- xla
+
+/// PJRT-backed engine executing the AOT artifacts.
+pub struct XlaAnalytics {
+    client: xla::PjRtClient,
+    executables: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaAnalytics {
+    /// Load and compile all artifacts from `dir` (e.g. `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        validate_manifest(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for name in ARTIFACT_NAMES {
+            let path = dir.join(artifact_file(name));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            executables.insert(name, exe);
+        }
+        Ok(XlaAnalytics { client, executables })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn execute(&self, name: &'static str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executables.get(name).context("unknown artifact")?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: always a tuple, even for 1 output.
+        Ok(result.to_tuple()?)
+    }
+}
+
+fn lit(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+impl Analytics for XlaAnalytics {
+    fn cluster_state(
+        &mut self,
+        remaining_work: &[f32],
+        long_counts: &[f32],
+        queue_len: &[f32],
+        active: &[f32],
+    ) -> Result<ClusterStateOut> {
+        let n = remaining_work.len();
+        anyhow::ensure!(n <= SERVERS, "cluster exceeds artifact capacity");
+        let rw = pad_to(remaining_work, SERVERS, 0.0);
+        let lc = pad_to(long_counts, SERVERS, 0.0);
+        let ql = pad_to(queue_len, SERVERS, 0.0);
+        let act = pad_to(active, SERVERS, 0.0);
+        let outs =
+            self.execute("cluster_state", &[lit(&rw), lit(&lc), lit(&ql), lit(&act)])?;
+        anyhow::ensure!(outs.len() == 3, "cluster_state arity");
+        let mut scores = outs[0].to_vec::<f32>()?;
+        scores.truncate(n);
+        let stats_v = outs[1].to_vec::<f32>()?;
+        let l_r = outs[2].to_vec::<f32>()?[0];
+        Ok(ClusterStateOut {
+            scores,
+            stats: [stats_v[0], stats_v[1], stats_v[2], stats_v[3]],
+            l_r,
+        })
+    }
+
+    fn concurrency(&mut self, starts: &[f32], ends: &[f32], times: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(starts.len() == ends.len());
+        anyhow::ensure!(times.len() <= BUCKETS, "too many sample points");
+        let t = pad_to(times, BUCKETS, PAD_SENTINEL * 0.5); // finite, beyond all tasks
+        let mut acc = vec![0f32; BUCKETS];
+        // Stream tasks through the fixed-shape kernel in chunks; partial
+        // counts add exactly (verified against ref in python tests).
+        for chunk in 0..starts.len().div_ceil(TASK_CHUNK).max(1) {
+            let lo = chunk * TASK_CHUNK;
+            let hi = (lo + TASK_CHUNK).min(starts.len());
+            let s = pad_to(&starts[lo..hi], TASK_CHUNK, PAD_SENTINEL);
+            let e = pad_to(&ends[lo..hi], TASK_CHUNK, PAD_SENTINEL);
+            let outs = self.execute("interval_count", &[lit(&s), lit(&e), lit(&t)])?;
+            let counts = outs[0].to_vec::<f32>()?;
+            for (a, c) in acc.iter_mut().zip(&counts) {
+                *a += c;
+            }
+        }
+        acc.truncate(times.len());
+        Ok(acc)
+    }
+
+    fn delay_cdf(&mut self, delays: &[f32], edges: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(edges.len() <= EDGES, "too many edges");
+        let e = pad_to(edges, EDGES, PAD_SENTINEL * 0.5);
+        let n_valid = delays.len().max(1) as f32;
+        let mut counts_acc = vec![0f32; EDGES];
+        for chunk in 0..delays.len().div_ceil(DELAY_CHUNK).max(1) {
+            let lo = chunk * DELAY_CHUNK;
+            let hi = (lo + DELAY_CHUNK).min(delays.len());
+            let d = pad_to(&delays[lo..hi], DELAY_CHUNK, PAD_SENTINEL);
+            // n_valid is only used for the in-graph CDF normalisation of a
+            // single chunk; we re-normalise after accumulation.
+            let outs =
+                self.execute("delay_hist", &[lit(&d), lit(&e), lit(&[n_valid])])?;
+            let counts = outs[0].to_vec::<f32>()?;
+            for (a, c) in counts_acc.iter_mut().zip(&counts) {
+                *a += c;
+            }
+        }
+        counts_acc.truncate(edges.len());
+        let cdf = counts_acc.iter().map(|&c| c / n_valid).collect();
+        Ok((counts_acc, cdf))
+    }
+
+    fn lr_forecast(&mut self, history: &[f32], horizon_steps: f32) -> Result<(f32, f32, f32)> {
+        anyhow::ensure!(history.len() == FORECAST_WINDOW, "history must be FORECAST_WINDOW");
+        let outs = self.execute("lr_forecast", &[lit(history), lit(&[horizon_steps])])?;
+        let v = outs[0].to_vec::<f32>()?;
+        Ok((v[0], v[1], v[2]))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// ---------------------------------------------------------------- dispatch
+
+/// Engine selection: XLA when artifacts are present, else native.
+pub enum AnalyticsEngine {
+    Xla(XlaAnalytics),
+    Native(NativeAnalytics),
+}
+
+impl AnalyticsEngine {
+    /// Load XLA artifacts from `dir` if it exists, else fall back.
+    pub fn auto(dir: &Path) -> AnalyticsEngine {
+        match XlaAnalytics::load(dir) {
+            Ok(x) => AnalyticsEngine::Xla(x),
+            Err(err) => {
+                log::warn!("falling back to native analytics: {err:#}");
+                AnalyticsEngine::Native(NativeAnalytics)
+            }
+        }
+    }
+
+    pub fn as_dyn(&mut self) -> &mut dyn Analytics {
+        match self {
+            AnalyticsEngine::Xla(x) => x,
+            AnalyticsEngine::Native(n) => n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_cluster_state_semantics() {
+        let mut eng = NativeAnalytics;
+        let out = eng
+            .cluster_state(
+                &[10.0, 0.0, 5.0, 7.0],
+                &[1.0, 0.0, 2.0, 0.0],
+                &[2.0, 0.0, 1.0, 0.0],
+                &[1.0, 1.0, 1.0, 0.0],
+            )
+            .unwrap();
+        assert_eq!(out.stats[0], 2.0); // two active long servers
+        assert_eq!(out.stats[3], 3.0); // three active
+        assert!((out.l_r - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(out.scores[3], PAD_SENTINEL); // inactive
+        assert!((out.scores[0] - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_concurrency_boundaries() {
+        let mut eng = NativeAnalytics;
+        let counts =
+            eng.concurrency(&[10.0], &[20.0], &[9.0, 10.0, 15.0, 20.0, 25.0]).unwrap();
+        assert_eq!(counts, vec![0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn native_delay_cdf_normalises() {
+        let mut eng = NativeAnalytics;
+        let (counts, cdf) =
+            eng.delay_cdf(&[1.0, 2.0, 3.0, 4.0], &[0.0, 2.0, 4.0]).unwrap();
+        assert_eq!(counts, vec![0.0, 2.0, 4.0]);
+        assert_eq!(cdf, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn native_forecast_constant_series() {
+        let mut eng = NativeAnalytics;
+        let hist = vec![0.6f32; FORECAST_WINDOW];
+        let (f, l, s) = eng.lr_forecast(&hist, 10.0).unwrap();
+        assert!((f - 0.6).abs() < 1e-5);
+        assert!((l - 0.6).abs() < 1e-5);
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_forecast_rejects_wrong_window() {
+        let mut eng = NativeAnalytics;
+        assert!(eng.lr_forecast(&[0.5; 10], 1.0).is_err());
+    }
+
+    #[test]
+    fn auto_falls_back_without_artifacts() {
+        let mut eng = AnalyticsEngine::auto(Path::new("/nonexistent"));
+        assert_eq!(eng.as_dyn().name(), "native");
+    }
+}

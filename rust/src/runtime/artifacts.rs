@@ -1,0 +1,110 @@
+//! Artifact shapes and manifest validation.
+//!
+//! These constants mirror `python/compile/shapes.py`. The AOT artifacts
+//! are lowered with *fixed* shapes; the rust side pads inputs up to them
+//! and streams larger workloads in chunks. `validate_manifest` cross-checks
+//! the JSON manifest written by `aot.py` against these constants so a
+//! shape drift between the two layers fails loudly at load time.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Max servers per cluster-state snapshot.
+pub const SERVERS: usize = 4096;
+/// Tasks per interval-count kernel invocation.
+pub const TASK_CHUNK: usize = 16384;
+/// Time buckets per interval-count invocation.
+pub const BUCKETS: usize = 2048;
+/// Delay samples per delay-hist invocation.
+pub const DELAY_CHUNK: usize = 16384;
+/// CDF edges per delay-hist invocation.
+pub const EDGES: usize = 512;
+/// Padding sentinel for "never counted" entries (mirrors shapes.py).
+pub const PAD_SENTINEL: f32 = 1e30;
+/// Probe-score weight (mirrors shapes.ALPHA).
+pub const ALPHA: f32 = 1.0;
+/// l_r forecast window (mirrors shapes.FORECAST_WINDOW).
+pub const FORECAST_WINDOW: usize = 128;
+/// EWMA gain of the forecast (mirrors shapes.FORECAST_ALPHA).
+pub const FORECAST_ALPHA: f32 = 0.1;
+
+/// The artifacts the runtime loads.
+pub const ARTIFACT_NAMES: [&str; 4] =
+    ["cluster_state", "interval_count", "lr_forecast", "delay_hist"];
+
+/// File name of an artifact.
+pub fn artifact_file(name: &str) -> String {
+    format!("{name}.hlo.txt")
+}
+
+/// Cheap structural validation of `manifest.json` against the constants
+/// above (no JSON dependency available — we check the canonical
+/// substrings the python side is guaranteed to emit).
+pub fn validate_manifest(dir: &Path) -> Result<()> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    for name in ARTIFACT_NAMES {
+        if !text.contains(&format!("\"{name}\"")) {
+            bail!("manifest missing artifact {name:?}");
+        }
+    }
+    for (label, dim) in [
+        ("SERVERS", SERVERS),
+        ("TASK_CHUNK", TASK_CHUNK),
+        ("BUCKETS", BUCKETS),
+        ("EDGES", EDGES),
+    ] {
+        let needle = format!("[\n          {dim}\n        ]");
+        let flat = format!("[{dim}]");
+        if !text.contains(&needle) && !text.contains(&flat) && !text.contains(&format!(" {dim}")) {
+            bail!("manifest shape mismatch: expected {label}={dim} somewhere in manifest");
+        }
+    }
+    Ok(())
+}
+
+/// Pad `data` to `len` with `fill`.
+pub fn pad_to(data: &[f32], len: usize, fill: f32) -> Vec<f32> {
+    assert!(data.len() <= len, "input {} exceeds artifact capacity {len}", data.len());
+    let mut v = Vec::with_capacity(len);
+    v.extend_from_slice(data);
+    v.resize(len, fill);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_extends_with_fill() {
+        let v = pad_to(&[1.0, 2.0], 4, 9.0);
+        assert_eq!(v, vec![1.0, 2.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds artifact capacity")]
+    fn pad_to_rejects_oversize() {
+        pad_to(&[1.0; 10], 5, 0.0);
+    }
+
+    #[test]
+    fn artifact_files_named() {
+        assert_eq!(artifact_file("cluster_state"), "cluster_state.hlo.txt");
+    }
+
+    #[test]
+    fn validate_manifest_on_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            validate_manifest(&dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_manifest_rejects_missing() {
+        assert!(validate_manifest(Path::new("/nonexistent")).is_err());
+    }
+}

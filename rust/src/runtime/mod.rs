@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (L2 JAX graphs wrapping L1 Pallas kernels)
+//! and executes them from rust — python never runs on the request path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (serialized protos from jax ≥ 0.5 use 64-bit ids that xla_extension
+//! 0.5.1 rejects).
+
+mod analytics;
+pub mod artifacts;
+
+pub use analytics::{Analytics, AnalyticsEngine, ClusterStateOut, NativeAnalytics, XlaAnalytics};

@@ -1,0 +1,55 @@
+//! Fully centralized scheduler (YARN-like, §2.1): every task of every job
+//! is placed with global knowledge on the least-loaded general-partition
+//! server. Optimal placement, but short jobs inherit the same queues as
+//! long ones — the head-of-line-blocking baseline the hybrid designs beat.
+
+use crate::sched::{SchedCtx, Scheduler};
+use crate::trace::Job;
+use crate::util::TaskId;
+
+/// Global least-loaded placement over the general partition.
+#[derive(Default)]
+pub struct Centralized;
+
+impl Scheduler for Centralized {
+    fn name(&self) -> &'static str {
+        "centralized"
+    }
+
+    fn place_job(&mut self, _job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+        for &tid in task_ids {
+            let target = ctx.cluster.least_loaded_general();
+            ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, QueuePolicy};
+    use crate::metrics::Recorder;
+    use crate::sim::{Engine, Rng};
+    use crate::util::JobId;
+
+    #[test]
+    fn spreads_tasks_across_least_loaded() {
+        let mut cluster = Cluster::new(4, 0, QueuePolicy::Fifo);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(1.0);
+        let mut rng = Rng::new(1);
+        let job = Job { id: JobId(0), arrival: 0.0, task_durations: vec![10.0; 4], is_long: false };
+        let tids: Vec<_> =
+            (0..4).map(|_| cluster.add_task(JobId(0), 10.0, false, 0.0)).collect();
+        let mut ctx = SchedCtx {
+            cluster: &mut cluster,
+            engine: &mut engine,
+            rec: &mut rec,
+            rng: &mut rng,
+        };
+        Centralized.place_job(&job, &tids, &mut ctx);
+        // Equal tasks over 4 idle servers -> one each, all running.
+        assert!(cluster.servers.iter().all(|s| s.running.is_some()));
+        cluster.check_invariants();
+    }
+}

@@ -1,0 +1,393 @@
+//! The hybrid scheduler (Eagle, SoCC'16) — the paper's baseline and the
+//! placement engine inside CloudCoaster.
+//!
+//! * **Long jobs** go through the centralized scheduler: exact
+//!   least-loaded placement over the general partition (it alone may run
+//!   long tasks).
+//! * **Short jobs** go through decentralized schedulers: batch-sampling
+//!   probes over the whole cluster, *filtered by the long-server bitmap*
+//!   (succinct state) so shorts never queue behind longs ("divide"), with
+//!   the short-only partition as the guaranteed fallback when the cluster
+//!   is crowded with longs ("stick to your probes").
+//!
+//! CloudCoaster reuses this placement unchanged (§3: "utilizes the same
+//! centralized/decentralized paradigm") — the dynamic short partition
+//! just grows the fallback pool with transient servers. When
+//! `duplicate_to_ondemand` is set (§3.3), any short task whose chosen
+//! server is transient also enqueues a copy on an on-demand short server
+//! so revocation can never lose work.
+
+use crate::cluster::ServerKind;
+use crate::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
+use crate::sched::{SchedCtx, Scheduler};
+use crate::trace::Job;
+use crate::util::{ServerId, TaskId};
+
+/// Eagle-style hybrid placement (also CloudCoaster's placement engine).
+pub struct Hybrid {
+    /// Probes per short task (Eagle/Sparrow default: 2).
+    pub probe_ratio: f64,
+    /// §3.3: mirror transient-placed shorts onto an on-demand server.
+    pub duplicate_to_ondemand: bool,
+    /// Eagle's succinct state: filter probe candidates by the long-server
+    /// bitmap. `false` recovers Hawk (probes land blindly; only the short
+    /// partition and stealing protect shorts).
+    pub use_succinct_state: bool,
+    name: &'static str,
+    buf: ProbeBuffers,
+    out: Vec<ServerId>,
+    pool: Vec<ServerId>,
+}
+
+impl Hybrid {
+    pub fn eagle(probe_ratio: f64) -> Self {
+        Hybrid {
+            probe_ratio,
+            duplicate_to_ondemand: false,
+            use_succinct_state: true,
+            name: "eagle",
+            buf: ProbeBuffers::new(),
+            out: Vec::new(),
+            pool: Vec::new(),
+        }
+    }
+
+    /// Hawk (ATC'15): Eagle's predecessor — same hybrid split and short
+    /// partition, but no succinct state, so short probes can land behind
+    /// long tasks. Here as the lineage baseline for the abl-scheduler
+    /// comparison.
+    pub fn hawk(probe_ratio: f64) -> Self {
+        Hybrid { use_succinct_state: false, name: "hawk", ..Hybrid::eagle(probe_ratio) }
+    }
+
+    /// CloudCoaster placement: Eagle + on-demand duplication for
+    /// transient-placed short tasks.
+    pub fn cloudcoaster(probe_ratio: f64) -> Self {
+        Hybrid { duplicate_to_ondemand: true, name: "cloudcoaster", ..Hybrid::eagle(probe_ratio) }
+    }
+
+    fn place_long(&mut self, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+        for &tid in task_ids {
+            let target = ctx.cluster.least_loaded_general();
+            ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);
+        }
+    }
+
+    fn place_short(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+        let m = task_ids.len();
+        let probes = ((m as f64 * self.probe_ratio).ceil() as usize).max(1);
+
+        // Probe the whole cluster (general + short partitions)...
+        self.pool.clear();
+        self.pool.extend_from_slice(&ctx.cluster.general);
+        self.pool.extend_from_slice(&ctx.cluster.short_reserved);
+        self.pool.extend_from_slice(&ctx.cluster.transient_pool);
+        self.buf.candidates.clear();
+        sample_from_pool(&self.pool, probes, ctx.cluster, ctx.rng, &mut self.buf);
+        // ...and discard servers hosting long tasks (succinct state —
+        // Eagle's addition over Hawk).
+        if self.use_succinct_state {
+            filter_long(ctx.cluster, &mut self.buf);
+        }
+
+        // Crowded cluster: fall back to the short-only partition, which by
+        // construction never hosts longs. This is where CloudCoaster's
+        // dynamic partition pays off — the pool below grows with l_r.
+        if self.buf.candidates.len() < m {
+            self.pool.clear();
+            self.pool.extend_from_slice(&ctx.cluster.short_reserved);
+            self.pool.extend_from_slice(&ctx.cluster.transient_pool);
+            let extra = (2 * (m - self.buf.candidates.len())).max(2);
+            sample_from_pool(&self.pool, extra, ctx.cluster, ctx.rng, &mut self.buf);
+        }
+        if self.buf.candidates.is_empty() {
+            // Pathological: every probe hit a non-accepting server. Place
+            // on the least-loaded on-demand short server directly.
+            self.buf
+                .candidates
+                .extend(ctx.cluster.short_reserved.iter().copied().take(1));
+            if self.buf.candidates.is_empty() {
+                self.buf.candidates.push(ctx.cluster.least_loaded_general());
+            }
+        }
+
+        assign_least_loaded(ctx.cluster, &job.task_durations, &mut self.buf, &mut self.out);
+        for (&tid, &sid) in task_ids.iter().zip(&self.out) {
+            ctx.cluster.enqueue(tid, sid, ctx.engine, ctx.rec);
+            // §3.3: at least one copy of every short task on on-demand.
+            if self.duplicate_to_ondemand
+                && ctx.cluster.server(sid).kind == ServerKind::Transient
+                && ctx.cluster.task(tid).copies > 0
+            {
+                if let Some(od) = least_loaded_short_ondemand(ctx) {
+                    ctx.cluster.enqueue(tid, od, ctx.engine, ctx.rec);
+                }
+            }
+        }
+    }
+}
+
+/// Least-loaded accepting on-demand short-partition server.
+fn least_loaded_short_ondemand(ctx: &SchedCtx) -> Option<ServerId> {
+    ctx.cluster
+        .short_reserved
+        .iter()
+        .copied()
+        .filter(|&s| ctx.cluster.server(s).accepting())
+        .min_by(|&a, &b| {
+            ctx.cluster.server(a).est_work.total_cmp(&ctx.cluster.server(b).est_work)
+        })
+}
+
+impl Scheduler for Hybrid {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn place_job(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+        if job.is_long {
+            self.place_long(task_ids, ctx);
+        } else {
+            self.place_short(job, task_ids, ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Pool, QueuePolicy, TaskState};
+    use crate::metrics::Recorder;
+    use crate::sim::{Engine, Rng};
+    use crate::util::JobId;
+
+    fn ctx_parts(general: usize, short: usize) -> (Cluster, Engine, Recorder, Rng) {
+        (
+            Cluster::new(general, short, QueuePolicy::Fifo),
+            Engine::new(),
+            Recorder::new(3.0),
+            Rng::new(7),
+        )
+    }
+
+    fn short_job(n: usize, dur: f64) -> Job {
+        Job { id: JobId(0), arrival: 0.0, task_durations: vec![dur; n], is_long: false }
+    }
+
+    fn long_job(n: usize, dur: f64) -> Job {
+        Job { id: JobId(0), arrival: 0.0, task_durations: vec![dur; n], is_long: true }
+    }
+
+    fn add_tasks(cluster: &mut Cluster, job: &Job) -> Vec<TaskId> {
+        job.task_durations
+            .iter()
+            .map(|&d| cluster.add_task(job.id, d, job.is_long, 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn long_jobs_stay_in_general_partition() {
+        let (mut cluster, mut engine, mut rec, mut rng) = ctx_parts(8, 4);
+        let mut sched = Hybrid::eagle(2.0);
+        let job = long_job(8, 500.0);
+        let tids = add_tasks(&mut cluster, &job);
+        let mut ctx = SchedCtx {
+            cluster: &mut cluster,
+            engine: &mut engine,
+            rec: &mut rec,
+            rng: &mut rng,
+        };
+        sched.place_job(&job, &tids, &mut ctx);
+        for sid in &cluster.short_reserved {
+            assert!(cluster.server(*sid).is_idle(), "long task leaked into short partition");
+        }
+        assert_eq!(cluster.n_long_servers(), 8);
+        cluster.check_invariants();
+    }
+
+    #[test]
+    fn shorts_avoid_long_servers() {
+        let (mut cluster, mut engine, mut rec, mut rng) = ctx_parts(8, 4);
+        let mut sched = Hybrid::eagle(2.0);
+        // Fill half the general partition with longs.
+        let lj = long_job(4, 1000.0);
+        let ltids = add_tasks(&mut cluster, &lj);
+        {
+            let mut ctx = SchedCtx {
+                cluster: &mut cluster,
+                engine: &mut engine,
+                rec: &mut rec,
+                rng: &mut rng,
+            };
+            sched.place_job(&lj, &ltids, &mut ctx);
+        }
+        // Now a burst of short jobs; none may land behind a long.
+        for _ in 0..20 {
+            let sj = short_job(3, 10.0);
+            let stids = add_tasks(&mut cluster, &sj);
+            let mut ctx = SchedCtx {
+                cluster: &mut cluster,
+                engine: &mut engine,
+                rec: &mut rec,
+                rng: &mut rng,
+            };
+            sched.place_job(&sj, &stids, &mut ctx);
+            for &tid in &stids {
+                if let Some(sid) = cluster.task(tid).ran_on {
+                    assert!(!cluster.has_long(sid) || cluster.task(tid).is_long);
+                }
+            }
+        }
+        // Every queued short task sits on a long-free server.
+        for s in &cluster.servers {
+            if s.long_tasks > 0 {
+                for &tid in &s.queue {
+                    assert!(cluster.task(tid).is_long, "short queued behind long");
+                }
+            }
+        }
+        cluster.check_invariants();
+    }
+
+    #[test]
+    fn crowded_cluster_falls_back_to_short_partition() {
+        let (mut cluster, mut engine, mut rec, mut rng) = ctx_parts(4, 2);
+        let mut sched = Hybrid::eagle(2.0);
+        // Saturate ALL general servers with longs.
+        let lj = long_job(4, 10_000.0);
+        let ltids = add_tasks(&mut cluster, &lj);
+        {
+            let mut ctx = SchedCtx {
+                cluster: &mut cluster,
+                engine: &mut engine,
+                rec: &mut rec,
+                rng: &mut rng,
+            };
+            sched.place_job(&lj, &ltids, &mut ctx);
+        }
+        let sj = short_job(4, 5.0);
+        let stids = add_tasks(&mut cluster, &sj);
+        let mut ctx = SchedCtx {
+            cluster: &mut cluster,
+            engine: &mut engine,
+            rec: &mut rec,
+            rng: &mut rng,
+        };
+        sched.place_job(&sj, &stids, &mut ctx);
+        // All shorts must be on the short partition.
+        for &tid in &stids {
+            let t = cluster.task(tid);
+            let on_short = cluster.short_reserved.iter().any(|&sid| {
+                cluster.server(sid).running == Some(tid)
+                    || cluster.server(sid).queue.contains(&tid)
+                    || t.ran_on == Some(sid)
+            });
+            assert!(on_short, "short task escaped to a long-crowded server");
+        }
+        cluster.check_invariants();
+    }
+
+    #[test]
+    fn cloudcoaster_duplicates_transient_placed_shorts() {
+        let (mut cluster, mut engine, mut rec, mut rng) = ctx_parts(4, 2);
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        // Saturate general with longs so shorts go to the short pool.
+        let lj = long_job(4, 10_000.0);
+        let ltids = add_tasks(&mut cluster, &lj);
+        {
+            let mut ctx = SchedCtx {
+                cluster: &mut cluster,
+                engine: &mut engine,
+                rec: &mut rec,
+                rng: &mut rng,
+            };
+            sched.place_job(&lj, &ltids, &mut ctx);
+        }
+        // Bring up transient servers and occupy the short partition so
+        // placements favour transients.
+        for _ in 0..4 {
+            let sid = cluster.request_transient(0.0);
+            cluster.transient_ready(sid, 0.0, &mut rec);
+        }
+        for &sid in &cluster.short_reserved.clone() {
+            let b = cluster.add_task(JobId(9), 500.0, false, 0.0);
+            cluster.enqueue(b, sid, &mut engine, &mut rec);
+        }
+        let sj = short_job(6, 5.0);
+        let stids = add_tasks(&mut cluster, &sj);
+        let mut ctx = SchedCtx {
+            cluster: &mut cluster,
+            engine: &mut engine,
+            rec: &mut rec,
+            rng: &mut rng,
+        };
+        sched.place_job(&sj, &stids, &mut ctx);
+        // Any task queued (not yet running) on a transient must hold a
+        // second copy on an on-demand server.
+        for &tid in &stids {
+            let t = cluster.task(tid);
+            if t.state == TaskState::Queued {
+                let on_transient = cluster
+                    .transient_pool
+                    .iter()
+                    .any(|&sid| cluster.server(sid).queue.contains(&tid));
+                if on_transient {
+                    assert!(t.copies >= 2, "transient-queued short lacks on-demand copy");
+                    let on_od = cluster
+                        .short_reserved
+                        .iter()
+                        .any(|&sid| cluster.server(sid).queue.contains(&tid));
+                    assert!(on_od);
+                }
+            }
+        }
+        cluster.check_invariants();
+    }
+
+    #[test]
+    fn transient_pool_grows_short_candidates() {
+        let (mut cluster, mut engine, mut rec, mut rng) = ctx_parts(4, 1);
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        // Saturate general.
+        let lj = long_job(4, 10_000.0);
+        let ltids = add_tasks(&mut cluster, &lj);
+        {
+            let mut ctx = SchedCtx {
+                cluster: &mut cluster,
+                engine: &mut engine,
+                rec: &mut rec,
+                rng: &mut rng,
+            };
+            sched.place_job(&lj, &ltids, &mut ctx);
+        }
+        for _ in 0..8 {
+            let sid = cluster.request_transient(0.0);
+            cluster.transient_ready(sid, 0.0, &mut rec);
+        }
+        let sj = short_job(8, 10.0);
+        let stids = add_tasks(&mut cluster, &sj);
+        let mut ctx = SchedCtx {
+            cluster: &mut cluster,
+            engine: &mut engine,
+            rec: &mut rec,
+            rng: &mut rng,
+        };
+        sched.place_job(&sj, &stids, &mut ctx);
+        let transient_running = cluster
+            .transient_pool
+            .iter()
+            .filter(|&&sid| cluster.server(sid).running.is_some())
+            .count();
+        assert!(transient_running > 0, "transients unused despite crowded cluster");
+        cluster.check_invariants();
+    }
+
+    #[test]
+    fn pools_are_disjoint() {
+        let (cluster, ..) = ctx_parts(8, 4);
+        for sid in &cluster.short_reserved {
+            assert_eq!(cluster.server(*sid).pool, Pool::ShortReserved);
+            assert!(!cluster.general.contains(sid));
+        }
+    }
+}

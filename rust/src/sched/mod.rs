@@ -1,0 +1,16 @@
+//! Scheduler family: the [`Scheduler`] trait, shared probe machinery, and
+//! the four policies the evaluation compares — fully centralized,
+//! Sparrow-style decentralized, the Eagle hybrid baseline, and
+//! CloudCoaster's placement (Eagle + on-demand duplication; the dynamic
+//! partition itself lives in [`crate::transient`]).
+
+mod centralized;
+mod hybrid;
+pub mod probe;
+mod sparrow;
+mod types;
+
+pub use centralized::Centralized;
+pub use hybrid::Hybrid;
+pub use sparrow::Sparrow;
+pub use types::{SchedCtx, Scheduler};

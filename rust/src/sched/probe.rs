@@ -1,0 +1,157 @@
+//! Shared probe machinery for decentralized (Sparrow-style) placement:
+//! random candidate sampling, long-bitmap filtering, and greedy
+//! least-estimated-wait assignment.
+//!
+//! Buffers are owned by the caller and reused across jobs — the probe
+//! path runs once per job and must not allocate in steady state.
+
+use crate::cluster::Cluster;
+use crate::sim::Rng;
+use crate::util::ServerId;
+
+/// Reusable scratch buffers for probe-based placement.
+#[derive(Default)]
+pub struct ProbeBuffers {
+    pub candidates: Vec<ServerId>,
+    pub loads: Vec<f64>,
+}
+
+impl ProbeBuffers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Sample `k` servers (with replacement, as Sparrow probes do) from
+/// `pool`, keeping only servers that are currently accepting work, and
+/// append them to `buf.candidates`.
+pub fn sample_from_pool(
+    pool: &[ServerId],
+    k: usize,
+    cluster: &Cluster,
+    rng: &mut Rng,
+    buf: &mut ProbeBuffers,
+) {
+    if pool.is_empty() {
+        return;
+    }
+    for _ in 0..k {
+        let sid = pool[rng.below(pool.len() as u64) as usize];
+        if cluster.server(sid).accepting() {
+            buf.candidates.push(sid);
+        }
+    }
+}
+
+/// Drop candidates currently hosting a long task (Eagle's "divide" rule:
+/// succinct-state filtering avoids head-of-line blocking behind longs).
+pub fn filter_long(cluster: &Cluster, buf: &mut ProbeBuffers) {
+    buf.candidates.retain(|&sid| !cluster.has_long(sid));
+}
+
+/// Greedily assign `m` tasks to the least-loaded candidates: repeatedly
+/// pick the candidate with the smallest estimated wait, bump its local
+/// load estimate by `task_cost`, repeat. Writes the chosen server per
+/// task into `out`.
+///
+/// This mirrors batch-sampling placement: the probe response is the
+/// estimated wait (est_work), and each placed task updates the local
+/// estimate so a single job spreads over its probe set.
+pub fn assign_least_loaded(
+    cluster: &Cluster,
+    task_costs: &[f64],
+    buf: &mut ProbeBuffers,
+    out: &mut Vec<ServerId>,
+) {
+    out.clear();
+    buf.loads.clear();
+    buf.loads
+        .extend(buf.candidates.iter().map(|&sid| cluster.server(sid).est_work));
+    for &cost in task_costs {
+        // Linear argmin over the probe set (probe sets are O(2m), small).
+        let (mut best, mut best_load) = (0usize, f64::INFINITY);
+        for (i, &load) in buf.loads.iter().enumerate() {
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        out.push(buf.candidates[best]);
+        buf.loads[best] += cost;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::QueuePolicy;
+    use crate::metrics::Recorder;
+    use crate::sim::Engine;
+    use crate::util::JobId;
+
+    fn cluster_with_load() -> (Cluster, Engine, Recorder) {
+        let mut c = Cluster::new(8, 2, QueuePolicy::Fifo);
+        let mut e = Engine::new();
+        let mut r = Recorder::new(1.0);
+        // Server 0 busy with a long task; server 1 busy with a short one.
+        let t0 = c.add_task(JobId(0), 1000.0, true, 0.0);
+        c.enqueue(t0, ServerId(0), &mut e, &mut r);
+        let t1 = c.add_task(JobId(0), 10.0, false, 0.0);
+        c.enqueue(t1, ServerId(1), &mut e, &mut r);
+        (c, e, r)
+    }
+
+    #[test]
+    fn sampling_respects_pool_and_accepting() {
+        let (c, _, _) = cluster_with_load();
+        let mut rng = Rng::new(1);
+        let mut buf = ProbeBuffers::new();
+        let pool: Vec<ServerId> = c.general.clone();
+        sample_from_pool(&pool, 64, &c, &mut rng, &mut buf);
+        assert!(!buf.candidates.is_empty());
+        assert!(buf.candidates.iter().all(|s| c.general.contains(s)));
+    }
+
+    #[test]
+    fn long_filter_removes_long_servers() {
+        let (c, _, _) = cluster_with_load();
+        let mut buf = ProbeBuffers::new();
+        buf.candidates = c.general.clone();
+        filter_long(&c, &mut buf);
+        assert!(!buf.candidates.contains(&ServerId(0)));
+        assert!(buf.candidates.contains(&ServerId(1)));
+    }
+
+    #[test]
+    fn least_loaded_spreads_over_probe_set() {
+        let (c, _, _) = cluster_with_load();
+        let mut buf = ProbeBuffers::new();
+        buf.candidates = vec![ServerId(2), ServerId(3)];
+        let mut out = Vec::new();
+        // Four equal tasks over two idle candidates -> 2 each.
+        assign_least_loaded(&c, &[5.0, 5.0, 5.0, 5.0], &mut buf, &mut out);
+        let on2 = out.iter().filter(|&&s| s == ServerId(2)).count();
+        let on3 = out.iter().filter(|&&s| s == ServerId(3)).count();
+        assert_eq!(on2, 2);
+        assert_eq!(on3, 2);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_over_busy() {
+        let (c, _, _) = cluster_with_load();
+        let mut buf = ProbeBuffers::new();
+        buf.candidates = vec![ServerId(1), ServerId(2)]; // 1 busy, 2 idle
+        let mut out = Vec::new();
+        assign_least_loaded(&c, &[1.0], &mut buf, &mut out);
+        assert_eq!(out, vec![ServerId(2)]);
+    }
+
+    #[test]
+    fn empty_pool_produces_no_candidates() {
+        let (c, _, _) = cluster_with_load();
+        let mut rng = Rng::new(2);
+        let mut buf = ProbeBuffers::new();
+        sample_from_pool(&[], 16, &c, &mut rng, &mut buf);
+        assert!(buf.candidates.is_empty());
+    }
+}

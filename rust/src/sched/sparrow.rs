@@ -1,0 +1,84 @@
+//! Sparrow-style fully decentralized scheduler (§2.1): batch sampling
+//! with power-of-d probes, no global state, no short/long awareness.
+//! Fast for shorts, but long tasks land blindly — the other end of the
+//! design space the hybrid schedulers interpolate.
+
+use crate::sched::probe::{assign_least_loaded, sample_from_pool, ProbeBuffers};
+use crate::sched::{SchedCtx, Scheduler};
+use crate::trace::Job;
+use crate::util::{ServerId, TaskId};
+
+/// Batch-sampling decentralized placement over the whole cluster.
+pub struct Sparrow {
+    /// Probes per task (d in power-of-d; Sparrow uses 2).
+    pub probe_ratio: f64,
+    buf: ProbeBuffers,
+    out: Vec<ServerId>,
+    pool: Vec<ServerId>,
+}
+
+impl Sparrow {
+    pub fn new(probe_ratio: f64) -> Self {
+        Sparrow { probe_ratio, buf: ProbeBuffers::new(), out: Vec::new(), pool: Vec::new() }
+    }
+}
+
+impl Scheduler for Sparrow {
+    fn name(&self) -> &'static str {
+        "sparrow"
+    }
+
+    fn place_job(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+        // Whole cluster is fair game: general + short partitions.
+        self.pool.clear();
+        self.pool.extend_from_slice(&ctx.cluster.general);
+        self.pool.extend_from_slice(&ctx.cluster.short_reserved);
+        self.pool.extend_from_slice(&ctx.cluster.transient_pool);
+        let m = task_ids.len();
+        let probes = ((m as f64 * self.probe_ratio).ceil() as usize).max(1);
+        self.buf.candidates.clear();
+        sample_from_pool(&self.pool, probes, ctx.cluster, ctx.rng, &mut self.buf);
+        if self.buf.candidates.is_empty() {
+            // Degenerate fallback: probe set entirely non-accepting.
+            self.buf.candidates.push(ctx.cluster.least_loaded_general());
+        }
+        assign_least_loaded(ctx.cluster, &job.task_durations, &mut self.buf, &mut self.out);
+        for (&tid, &sid) in task_ids.iter().zip(&self.out) {
+            ctx.cluster.enqueue(tid, sid, ctx.engine, ctx.rec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, QueuePolicy, TaskState};
+    use crate::metrics::Recorder;
+    use crate::sim::{Engine, Rng};
+    use crate::util::JobId;
+
+    #[test]
+    fn places_every_task() {
+        let mut cluster = Cluster::new(16, 4, QueuePolicy::Fifo);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(1.0);
+        let mut rng = Rng::new(5);
+        let mut sched = Sparrow::new(2.0);
+        let durs = vec![5.0; 10];
+        let job = Job { id: JobId(0), arrival: 0.0, task_durations: durs.clone(), is_long: false };
+        let tids: Vec<_> =
+            durs.iter().map(|&d| cluster.add_task(JobId(0), d, false, 0.0)).collect();
+        let mut ctx = SchedCtx {
+            cluster: &mut cluster,
+            engine: &mut engine,
+            rec: &mut rec,
+            rng: &mut rng,
+        };
+        sched.place_job(&job, &tids, &mut ctx);
+        for tid in tids {
+            assert_ne!(cluster.task(tid).state, TaskState::Finished);
+            assert!(cluster.task(tid).copies == 1 || cluster.task(tid).state == TaskState::Running);
+        }
+        cluster.check_invariants();
+    }
+}

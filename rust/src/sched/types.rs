@@ -1,0 +1,50 @@
+//! The scheduler abstraction: placement policy invoked by the simulation
+//! runner on job arrival (and on revocation-orphaned tasks).
+
+use crate::cluster::Cluster;
+use crate::metrics::Recorder;
+use crate::sim::{Engine, Rng};
+use crate::trace::Job;
+use crate::util::TaskId;
+
+/// Mutable simulation context handed to schedulers.
+pub struct SchedCtx<'a> {
+    pub cluster: &'a mut Cluster,
+    pub engine: &'a mut Engine,
+    pub rec: &'a mut Recorder,
+    pub rng: &'a mut Rng,
+}
+
+/// A job-placement policy. Schedulers only *place* tasks onto server
+/// queues; execution, queue discipline and metrics are the cluster's job.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Place all tasks of `job` (already materialised in the task arena as
+    /// `task_ids`) onto server queues.
+    fn place_job(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx);
+
+    /// Re-place tasks orphaned by a transient revocation (tasks whose only
+    /// queue copy lived on the revoked server). Default: least-loaded
+    /// on-demand short-partition server — the §3.3 on-demand fallback.
+    fn replace_orphans(&mut self, orphans: &[TaskId], ctx: &mut SchedCtx) {
+        for &tid in orphans {
+            ctx.rec.tasks_rescheduled += 1;
+            let target = ctx
+                .cluster
+                .short_reserved
+                .iter()
+                .copied()
+                .filter(|&s| ctx.cluster.server(s).accepting())
+                .min_by(|&a, &b| {
+                    ctx.cluster
+                        .server(a)
+                        .est_work
+                        .total_cmp(&ctx.cluster.server(b).est_work)
+                })
+                .or_else(|| ctx.cluster.general.first().copied())
+                .expect("cluster has no on-demand servers");
+            ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);
+        }
+    }
+}

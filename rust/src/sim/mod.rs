@@ -1,0 +1,11 @@
+//! Deterministic discrete-event simulation core: the event queue and
+//! clock ([`Engine`]), the event vocabulary ([`Event`]), and the
+//! reproducible PRNG ([`Rng`]).
+
+mod engine;
+mod event;
+mod rng;
+
+pub use engine::Engine;
+pub use event::Event;
+pub use rng::Rng;

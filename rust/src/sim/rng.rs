@@ -1,0 +1,213 @@
+//! Deterministic PRNG for the simulator: xoshiro256++ seeded via splitmix64.
+//!
+//! The whole evaluation is reproducible from a single `u64` seed; every
+//! subsystem (trace synthesis, probe sampling, market revocations) derives
+//! an independent stream with [`Rng::fork`] so adding randomness in one
+//! subsystem never perturbs another.
+
+/// xoshiro256++ (Blackman & Vigna). Passes BigCrush; 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream (label keeps forks distinct even from
+    /// identical parent states).
+    pub fn fork(&mut self, label: u64) -> Rng {
+        let seed = self.next_u64() ^ label.wrapping_mul(0x9E3779B97F4A7C15);
+        Rng::new(seed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Lemire's unbiased method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Exponential with the given mean (inverse-CDF).
+    #[inline]
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Standard normal (Box–Muller; one value per call, simple & branchless
+    /// enough for trace synthesis which is off the hot path).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Log-normal: exp(N(mu, sigma^2)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Pareto with scale `xm` and shape `alpha` (heavy-tailed task counts).
+    pub fn pareto(&mut self, xm: f64, alpha: f64) -> f64 {
+        let u = 1.0 - self.f64();
+        xm / u.powf(1.0 / alpha)
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates over a
+    /// scratch buffer provided by the caller to keep the hot path
+    /// allocation-free). `scratch` must have length `n` and contain
+    /// `0..n as u32` in any order; it is left permuted.
+    pub fn sample_distinct_into(&mut self, scratch: &mut [u32], k: usize, out: &mut Vec<u32>) {
+        let n = scratch.len();
+        let k = k.min(n);
+        out.clear();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            scratch.swap(i, j);
+            out.push(scratch[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_independent() {
+        let mut root = Rng::new(7);
+        let mut f1 = root.fork(1);
+        let mut f2 = root.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean_close() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| r.exponential(10.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 10.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.lognormal(3.0, 1.5) > 0.0);
+        }
+    }
+
+    #[test]
+    fn pareto_exceeds_scale() {
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            assert!(r.pareto(2.0, 1.5) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn sample_distinct_unique_and_in_range() {
+        let mut r = Rng::new(17);
+        let mut scratch: Vec<u32> = (0..100).collect();
+        let mut out = Vec::new();
+        r.sample_distinct_into(&mut scratch, 20, &mut out);
+        assert_eq!(out.len(), 20);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(out.iter().all(|&x| x < 100));
+    }
+
+    #[test]
+    fn sample_distinct_caps_at_n() {
+        let mut r = Rng::new(19);
+        let mut scratch: Vec<u32> = (0..5).collect();
+        let mut out = Vec::new();
+        r.sample_distinct_into(&mut scratch, 50, &mut out);
+        assert_eq!(out.len(), 5);
+    }
+}

@@ -1,0 +1,73 @@
+//! Property-testing support (proptest is not available in this build
+//! environment; this provides the same style of randomized invariant
+//! checking with explicit seeds so failures reproduce exactly).
+//!
+//! ```no_run
+//! use cloudcoaster::testkit::property;
+//! property("queue never loses tasks", 50, |rng| {
+//!     let n = rng.below(100) + 1;
+//!     // ... build a random scenario, assert invariants ...
+//! });
+//! ```
+
+use crate::sim::Rng;
+
+/// Run `check` against `cases` independently-seeded RNGs. On panic, the
+/// failing seed is printed so the case replays deterministically.
+pub fn property<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, check: F) {
+    for case in 0..cases {
+        let seed = 0xC10D_C0A5_7E00_0000u64 | case;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            check(&mut rng);
+        });
+        if let Err(err) = result {
+            eprintln!("property {name:?} FAILED at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn uniform(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.f64()
+}
+
+/// Random usize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        property("counting", 10, |_| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failures() {
+        property("fails", 5, |rng| {
+            assert!(rng.f64() < -1.0, "impossible");
+        });
+    }
+
+    #[test]
+    fn helpers_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = uniform(&mut rng, 5.0, 10.0);
+            assert!((5.0..10.0).contains(&x));
+            let u = usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Trace persistence: a simple CSV format (one row per task) so synthetic
+//! workloads can be saved, diffed, and replayed byte-identically, and so
+//! users can feed in their own traces.
+//!
+//! Format (header + rows):
+//! ```text
+//! job_id,arrival,is_long,duration
+//! 0,12.500,0,37.2
+//! ```
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::{Job, Workload};
+use crate::util::JobId;
+
+/// Write a workload to CSV (one row per task).
+pub fn write_csv(w: &Workload, path: &Path) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut out = BufWriter::new(file);
+    writeln!(out, "job_id,arrival,is_long,duration")?;
+    for job in &w.jobs {
+        for &d in &job.task_durations {
+            // `{}` on f64 prints the shortest representation that parses
+            // back to the same bits — traces roundtrip exactly.
+            writeln!(out, "{},{},{},{}", job.id.0, job.arrival, job.is_long as u8, d)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a workload from CSV produced by [`write_csv`] (or hand-authored).
+pub fn read_csv(path: &Path, cutoff: f64) -> Result<Workload> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut lines = reader.lines();
+    let header = lines.next().context("empty trace file")??;
+    if header.trim() != "job_id,arrival,is_long,duration" {
+        bail!("unexpected trace header: {header:?}");
+    }
+    // job_id -> (arrival, is_long, durations); ids may be interleaved.
+    let mut jobs: Vec<Option<Job>> = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut fields = line.split(',');
+        let parse_err = || format!("trace line {}: {line:?}", lineno + 2);
+        let id: usize = fields.next().context("missing job_id")?.trim().parse().with_context(parse_err)?;
+        let arrival: f64 = fields.next().context("missing arrival")?.trim().parse().with_context(parse_err)?;
+        let is_long: u8 = fields.next().context("missing is_long")?.trim().parse().with_context(parse_err)?;
+        let duration: f64 = fields.next().context("missing duration")?.trim().parse().with_context(parse_err)?;
+        if duration <= 0.0 || arrival < 0.0 {
+            bail!("trace line {}: non-positive duration or negative arrival", lineno + 2);
+        }
+        if id >= jobs.len() {
+            jobs.resize_with(id + 1, || None);
+        }
+        let job = jobs[id].get_or_insert_with(|| Job {
+            id: JobId(id as u32),
+            arrival,
+            task_durations: Vec::new(),
+            is_long: is_long != 0,
+        });
+        if (job.arrival - arrival).abs() > 1e-9 {
+            bail!("trace line {}: job {id} has inconsistent arrival times", lineno + 2);
+        }
+        job.task_durations.push(duration);
+    }
+    let jobs: Vec<Job> = jobs.into_iter().flatten().collect();
+    if jobs.is_empty() {
+        bail!("trace file {} contains no tasks", path.display());
+    }
+    Ok(Workload::new(jobs, cutoff))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+    use crate::trace::synth::{yahoo_like, YahooLikeParams};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cloudcoaster_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_workload() {
+        let mut rng = Rng::new(77);
+        let mut params = YahooLikeParams::default();
+        params.horizon = 2000.0; // small trace for the test
+        let w = yahoo_like(&params, &mut rng);
+        let path = tmp("roundtrip.csv");
+        write_csv(&w, &path).unwrap();
+        let r = read_csv(&path, w.cutoff).unwrap();
+        assert_eq!(w.num_jobs(), r.num_jobs());
+        assert_eq!(w.num_tasks(), r.num_tasks());
+        for (a, b) in w.jobs.iter().zip(&r.jobs) {
+            assert!((a.arrival - b.arrival).abs() < 1e-5);
+            assert_eq!(a.is_long, b.is_long);
+            assert_eq!(a.num_tasks(), b.num_tasks());
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_header() {
+        let path = tmp("badheader.csv");
+        std::fs::write(&path, "nope\n1,2,3,4\n").unwrap();
+        assert!(read_csv(&path, 90.0).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_negative_duration() {
+        let path = tmp("negdur.csv");
+        std::fs::write(&path, "job_id,arrival,is_long,duration\n0,1.0,0,-5.0\n").unwrap();
+        assert!(read_csv(&path, 90.0).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        assert!(read_csv(Path::new("/nonexistent/trace.csv"), 90.0).is_err());
+    }
+}

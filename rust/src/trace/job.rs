@@ -1,0 +1,110 @@
+//! Workload records: jobs, their tasks, and the short/long classification
+//! that drives every hybrid scheduler in the paper.
+
+use crate::util::{JobId, Time};
+
+/// A job from the workload trace: an arrival time plus a bag of tasks.
+///
+/// Following the Eagle/Hawk simulators (which the paper builds on), each
+/// task has its own duration and the job is classified short or long once,
+/// at trace level, by its mean task duration vs. the cutoff — hybrid
+/// schedulers are assumed to know the class on arrival (estimated runtimes
+/// from recurring-job history).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub arrival: Time,
+    /// Per-task durations, seconds.
+    pub task_durations: Vec<f64>,
+    pub is_long: bool,
+}
+
+impl Job {
+    pub fn num_tasks(&self) -> usize {
+        self.task_durations.len()
+    }
+
+    /// Total work (sum of task durations), seconds.
+    pub fn total_work(&self) -> f64 {
+        self.task_durations.iter().sum()
+    }
+
+    pub fn mean_duration(&self) -> f64 {
+        if self.task_durations.is_empty() {
+            0.0
+        } else {
+            self.total_work() / self.task_durations.len() as f64
+        }
+    }
+}
+
+/// A full workload: jobs sorted by arrival time.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    pub jobs: Vec<Job>,
+    /// Short/long classification cutoff (seconds of mean task duration)
+    /// used when the workload was built; recorded for reports.
+    pub cutoff: f64,
+}
+
+impl Workload {
+    pub fn new(mut jobs: Vec<Job>, cutoff: f64) -> Self {
+        jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (i, job) in jobs.iter_mut().enumerate() {
+            job.id = JobId(i as u32);
+        }
+        Workload { jobs, cutoff }
+    }
+
+    pub fn num_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.jobs.iter().map(Job::num_tasks).sum()
+    }
+
+    /// Simulation horizon: last arrival (the run itself continues until
+    /// the event queue quiesces).
+    pub fn last_arrival(&self) -> Time {
+        self.jobs.last().map(|j| j.arrival).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(arrival: f64, durs: &[f64], is_long: bool) -> Job {
+        Job { id: JobId(0), arrival, task_durations: durs.to_vec(), is_long }
+    }
+
+    #[test]
+    fn workload_sorts_and_reindexes() {
+        let w = Workload::new(
+            vec![job(5.0, &[1.0], false), job(1.0, &[2.0], true), job(3.0, &[3.0], false)],
+            90.0,
+        );
+        let arrivals: Vec<f64> = w.jobs.iter().map(|j| j.arrival).collect();
+        assert_eq!(arrivals, vec![1.0, 3.0, 5.0]);
+        let ids: Vec<u32> = w.jobs.iter().map(|j| j.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(w.last_arrival(), 5.0);
+    }
+
+    #[test]
+    fn job_work_accounting() {
+        let j = job(0.0, &[10.0, 20.0, 30.0], false);
+        assert_eq!(j.num_tasks(), 3);
+        assert!((j.total_work() - 60.0).abs() < 1e-12);
+        assert!((j.mean_duration() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_workload() {
+        let w = Workload::new(vec![], 90.0);
+        assert_eq!(w.num_jobs(), 0);
+        assert_eq!(w.num_tasks(), 0);
+        assert_eq!(w.last_arrival(), 0.0);
+    }
+}

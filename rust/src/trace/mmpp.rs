@@ -1,0 +1,128 @@
+//! Markov-modulated Poisson process (MMPP) — the burstiness substrate.
+//!
+//! The paper's motivation (§2.3, Figure 1) is that job arrivals are
+//! *bursty*: phases of calm interleaved with phases where the arrival rate
+//! spikes. A 2-state MMPP is the standard minimal model for this: a hidden
+//! Markov chain alternates between a CALM and a BURST state, each with its
+//! own Poisson arrival rate and exponentially-distributed dwell time.
+
+use crate::sim::Rng;
+use crate::util::Time;
+
+/// Two-state Markov-modulated Poisson arrival process.
+#[derive(Clone, Debug)]
+pub struct Mmpp {
+    /// Arrivals per second in the calm state.
+    pub calm_rate: f64,
+    /// Arrivals per second in the burst state.
+    pub burst_rate: f64,
+    /// Mean dwell time in the calm state, seconds.
+    pub calm_dwell: f64,
+    /// Mean dwell time in the burst state, seconds.
+    pub burst_dwell: f64,
+}
+
+impl Mmpp {
+    /// A plain Poisson process (burstiness disabled) at `rate`/s.
+    pub fn poisson(rate: f64) -> Self {
+        Mmpp { calm_rate: rate, burst_rate: rate, calm_dwell: 1.0, burst_dwell: 1.0 }
+    }
+
+    /// Long-run average arrival rate.
+    pub fn mean_rate(&self) -> f64 {
+        let p_burst = self.burst_dwell / (self.calm_dwell + self.burst_dwell);
+        self.calm_rate * (1.0 - p_burst) + self.burst_rate * p_burst
+    }
+
+    /// Generate all arrival times in `[0, horizon)`.
+    pub fn arrivals(&self, horizon: Time, rng: &mut Rng) -> Vec<Time> {
+        let mut out = Vec::with_capacity((self.mean_rate() * horizon) as usize + 16);
+        let mut t = 0.0;
+        let mut in_burst = false;
+        // Time at which the modulating chain next flips state.
+        let mut phase_end = rng.exponential(self.calm_dwell);
+        while t < horizon {
+            let rate = if in_burst { self.burst_rate } else { self.calm_rate };
+            let dt = if rate > 0.0 { rng.exponential(1.0 / rate) } else { f64::INFINITY };
+            if t + dt < phase_end {
+                t += dt;
+                if t < horizon {
+                    out.push(t);
+                }
+            } else {
+                // Jump to the phase boundary and flip the modulating state.
+                t = phase_end;
+                in_burst = !in_burst;
+                let dwell = if in_burst { self.burst_dwell } else { self.calm_dwell };
+                phase_end = t + rng.exponential(dwell);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_matches() {
+        let p = Mmpp::poisson(0.5);
+        assert!((p.mean_rate() - 0.5).abs() < 1e-12);
+        let mut rng = Rng::new(1);
+        let arrivals = p.arrivals(100_000.0, &mut rng);
+        let rate = arrivals.len() as f64 / 100_000.0;
+        assert!((rate - 0.5).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_horizon() {
+        let m = Mmpp { calm_rate: 0.1, burst_rate: 2.0, calm_dwell: 300.0, burst_dwell: 60.0 };
+        let mut rng = Rng::new(2);
+        let a = m.arrivals(10_000.0, &mut rng);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&t| (0.0..10_000.0).contains(&t)));
+    }
+
+    #[test]
+    fn mmpp_mean_rate_between_states() {
+        let m = Mmpp { calm_rate: 0.1, burst_rate: 2.0, calm_dwell: 300.0, burst_dwell: 100.0 };
+        let mean = m.mean_rate();
+        assert!(mean > 0.1 && mean < 2.0);
+        let mut rng = Rng::new(3);
+        let a = m.arrivals(500_000.0, &mut rng);
+        let emp = a.len() as f64 / 500_000.0;
+        assert!((emp - mean).abs() / mean < 0.1, "emp={emp} mean={mean}");
+    }
+
+    #[test]
+    fn bursty_process_has_higher_variance_than_poisson() {
+        // Count arrivals in 100 s windows; MMPP should have a higher
+        // index of dispersion than a Poisson process of the same mean rate.
+        let m = Mmpp { calm_rate: 0.05, burst_rate: 1.0, calm_dwell: 500.0, burst_dwell: 100.0 };
+        let p = Mmpp::poisson(m.mean_rate());
+        let dispersion = |a: &[f64]| {
+            let horizon = 200_000.0;
+            let bins = (horizon / 100.0) as usize;
+            let mut counts = vec![0.0f64; bins];
+            for &t in a {
+                counts[(t / 100.0) as usize] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / bins as f64;
+            let var =
+                counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / bins as f64;
+            var / mean
+        };
+        let mut rng = Rng::new(4);
+        let dm = dispersion(&m.arrivals(200_000.0, &mut rng));
+        let dp = dispersion(&p.arrivals(200_000.0, &mut rng));
+        assert!(dm > 2.0 * dp, "mmpp dispersion {dm} vs poisson {dp}");
+    }
+
+    #[test]
+    fn zero_rate_produces_no_arrivals() {
+        let m = Mmpp::poisson(0.0);
+        let mut rng = Rng::new(5);
+        assert!(m.arrivals(1000.0, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload traces: job/task records, bursty arrival processes, synthetic
+//! generators calibrated to the paper's traces, CSV persistence, and
+//! shape statistics.
+
+mod io;
+mod job;
+mod mmpp;
+mod stats;
+pub mod synth;
+
+pub use io::{read_csv, write_csv};
+pub use job::{Job, Workload};
+pub use mmpp::Mmpp;
+pub use stats::TraceStats;

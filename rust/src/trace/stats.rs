@@ -1,0 +1,110 @@
+//! Trace shape statistics — used by reports and by the calibration tests
+//! that check synthetic workloads match the published trace shapes.
+
+use crate::trace::{Job, Workload};
+
+/// Summary statistics of a workload, mirroring the numbers the Hawk/Eagle
+/// papers report for their traces.
+#[derive(Clone, Debug)]
+pub struct TraceStats {
+    pub jobs: usize,
+    pub tasks: usize,
+    pub short_jobs: usize,
+    pub long_jobs: usize,
+    /// Fraction of jobs that are short.
+    pub short_job_frac: f64,
+    /// Fraction of total cluster time consumed by long jobs.
+    pub long_work_frac: f64,
+    pub mean_tasks_per_job: f64,
+    pub max_tasks_per_job: usize,
+    pub mean_short_duration: f64,
+    pub mean_long_duration: f64,
+    pub horizon: f64,
+    /// Total work / horizon — servers' worth of average demand.
+    pub mean_demand_servers: f64,
+}
+
+impl TraceStats {
+    pub fn of(w: &Workload) -> TraceStats {
+        let jobs = w.num_jobs();
+        let tasks = w.num_tasks();
+        let long_jobs = w.jobs.iter().filter(|j| j.is_long).count();
+        let short_jobs = jobs - long_jobs;
+        let total_work: f64 = w.jobs.iter().map(Job::total_work).sum();
+        let long_work: f64 = w.jobs.iter().filter(|j| j.is_long).map(Job::total_work).sum();
+        let short_durs: Vec<f64> = w
+            .jobs
+            .iter()
+            .filter(|j| !j.is_long)
+            .flat_map(|j| j.task_durations.iter().copied())
+            .collect();
+        let long_durs: Vec<f64> = w
+            .jobs
+            .iter()
+            .filter(|j| j.is_long)
+            .flat_map(|j| j.task_durations.iter().copied())
+            .collect();
+        let horizon = w.last_arrival().max(1.0);
+        TraceStats {
+            jobs,
+            tasks,
+            short_jobs,
+            long_jobs,
+            short_job_frac: if jobs == 0 { 0.0 } else { short_jobs as f64 / jobs as f64 },
+            long_work_frac: if total_work > 0.0 { long_work / total_work } else { 0.0 },
+            mean_tasks_per_job: if jobs == 0 { 0.0 } else { tasks as f64 / jobs as f64 },
+            max_tasks_per_job: w.jobs.iter().map(Job::num_tasks).max().unwrap_or(0),
+            mean_short_duration: crate::util::mean(&short_durs),
+            mean_long_duration: crate::util::mean(&long_durs),
+            horizon,
+            mean_demand_servers: total_work / horizon,
+        }
+    }
+
+    /// One-line human-readable summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} jobs ({} short / {} long, {:.1}% short), {} tasks \
+             (mean {:.1}/job, max {}), short μ={:.1}s long μ={:.0}s, \
+             long-work {:.1}%, mean demand {:.0} servers over {:.1}h",
+            self.jobs,
+            self.short_jobs,
+            self.long_jobs,
+            100.0 * self.short_job_frac,
+            self.tasks,
+            self.mean_tasks_per_job,
+            self.max_tasks_per_job,
+            self.mean_short_duration,
+            self.mean_long_duration,
+            100.0 * self.long_work_frac,
+            self.mean_demand_servers,
+            self.horizon / 3600.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+    use crate::trace::synth::{yahoo_like, YahooLikeParams};
+
+    #[test]
+    fn stats_consistency() {
+        let mut rng = Rng::new(5);
+        let w = yahoo_like(&YahooLikeParams::default(), &mut rng);
+        let s = TraceStats::of(&w);
+        assert_eq!(s.jobs, s.short_jobs + s.long_jobs);
+        assert_eq!(s.tasks, w.num_tasks());
+        assert!(s.long_work_frac >= 0.0 && s.long_work_frac <= 1.0);
+        assert!(s.mean_demand_servers > 0.0);
+        assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn empty_workload_stats() {
+        let s = TraceStats::of(&Workload::default());
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.mean_tasks_per_job, 0.0);
+    }
+}

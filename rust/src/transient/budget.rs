@@ -1,0 +1,86 @@
+//! Budget arithmetic from §3.1: how many transient servers a fixed
+//! short-partition budget buys.
+//!
+//! With `N` on-demand short servers, replacing fraction `p` of them with
+//! transients at cost ratio `r` yields `K = r·N·p` transient servers and
+//! a managed short partition of up to `T = N((r-1)p + 1)` servers.
+
+/// Short-partition budget: the paper's (N, p, r) triple.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// On-demand servers in a purely static short partition (paper: 80).
+    pub n_static: usize,
+    /// Fraction replaced with transients (paper: 0.5).
+    pub p: f64,
+    /// Cost ratio r = c_static / c_trans (paper: 1..3).
+    pub r: f64,
+}
+
+impl Budget {
+    pub fn new(n_static: usize, p: f64, r: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0,1]");
+        assert!(r >= 1.0, "cost ratio must be >= 1");
+        Budget { n_static, p, r }
+    }
+
+    /// On-demand short servers kept as the §3.1 buffer: (1-p)·N.
+    pub fn ondemand_short(&self) -> usize {
+        ((1.0 - self.p) * self.n_static as f64).round() as usize
+    }
+
+    /// Max transient servers the budget buys: K = ⌊r·N·p⌋.
+    pub fn max_transients(&self) -> usize {
+        (self.r * self.n_static as f64 * self.p).floor() as usize
+    }
+
+    /// Max managed short-partition size: T = N((r-1)p + 1).
+    pub fn max_partition(&self) -> usize {
+        self.ondemand_short() + self.max_transients()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_r3_p05() {
+        // §3.1: "convert 50% ... r=3 ... T = 2N"
+        let b = Budget::new(80, 0.5, 3.0);
+        assert_eq!(b.ondemand_short(), 40);
+        assert_eq!(b.max_transients(), 120);
+        assert_eq!(b.max_partition(), 160); // = 2N
+    }
+
+    #[test]
+    fn paper_sweep_k_values() {
+        // §4: "CloudCoaster can use up to 40, 80 and 120 transient
+        // servers" for r = 1, 2, 3 with N=80, p=0.5.
+        for (r, k) in [(1.0, 40), (2.0, 80), (3.0, 120)] {
+            assert_eq!(Budget::new(80, 0.5, r).max_transients(), k);
+        }
+    }
+
+    #[test]
+    fn p_zero_disables_transients() {
+        let b = Budget::new(80, 0.0, 3.0);
+        assert_eq!(b.max_transients(), 0);
+        assert_eq!(b.ondemand_short(), 80);
+        assert_eq!(b.max_partition(), 80);
+    }
+
+    #[test]
+    fn formula_t_matches_closed_form() {
+        for &(n, p, r) in &[(80usize, 0.5, 3.0), (100, 0.25, 2.0), (64, 0.75, 4.0)] {
+            let b = Budget::new(n, p, r);
+            let t_closed = (n as f64 * ((r - 1.0) * p + 1.0)).round() as i64;
+            assert!((b.max_partition() as i64 - t_closed).abs() <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_p() {
+        Budget::new(80, 1.5, 3.0);
+    }
+}

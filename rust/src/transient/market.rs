@@ -1,0 +1,233 @@
+//! The transient-server market substrate (§2.4, §3.3).
+//!
+//! Models the provider-side behaviour the paper depends on: discounted
+//! price (the cost ratio `r`), a provisioning delay, occasional request
+//! failures ("some types of transient servers might not be available upon
+//! being requested" [22]), and MTTF-driven revocations with a short
+//! warning window (EC2 gives ~30 s; historical spot MTTF ≫ 18 h per
+//! Flint [25], which is why the paper's simulations never lose a server).
+
+use crate::sim::Rng;
+use crate::transient::price::{PriceModel, PriceTrace};
+use crate::util::Time;
+
+/// Bid-based dynamic pricing (Amazon-style, §2.4): the customer bids a
+/// fraction of the on-demand price; requests fail while the market is
+/// above the bid, and running servers are revoked when it crosses.
+#[derive(Clone, Debug)]
+pub struct PricingConfig {
+    pub model: PriceModel,
+    /// Bid, fraction of the on-demand price.
+    pub bid: f64,
+    /// Horizon of the simulated price trace, seconds.
+    pub horizon: f64,
+}
+
+impl Default for PricingConfig {
+    fn default() -> Self {
+        PricingConfig { model: PriceModel::default(), bid: 0.5, horizon: 7.0 * 86_400.0 }
+    }
+}
+
+/// Market configuration.
+#[derive(Clone, Debug)]
+pub struct MarketConfig {
+    /// Cost ratio r = c_static / c_trans (paper sweeps 1..3).
+    pub cost_ratio: f64,
+    /// Seconds from request to usable server (paper: 120 s).
+    pub provisioning_delay: f64,
+    /// Mean time to (involuntary) revocation; `None` = never revoked —
+    /// the paper's observed regime (lifetimes ≤ 12.8 h ≪ MTTF > 18 h).
+    pub mttf: Option<f64>,
+    /// Warning lead time before a revocation lands (EC2: 30 s... [§3.3]).
+    pub revocation_warning: f64,
+    /// Probability a request fails outright (capacity unavailable).
+    pub unavailable_p: f64,
+    /// Bid-based dynamic pricing; `None` = fixed 1/r pricing (the
+    /// paper's model). When set, price crossings add revocations and
+    /// request failures on top of `mttf`/`unavailable_p`.
+    pub pricing: Option<PricingConfig>,
+}
+
+impl Default for MarketConfig {
+    fn default() -> Self {
+        MarketConfig {
+            cost_ratio: 3.0,
+            provisioning_delay: 120.0,
+            mttf: None,
+            revocation_warning: 30.0,
+            unavailable_p: 0.0,
+            pricing: None,
+        }
+    }
+}
+
+/// Outcome of a successful acquisition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Lease {
+    /// When the server becomes usable.
+    pub ready_at: Time,
+    /// Absolute revocation time, if this lease will be revoked.
+    pub revoke_at: Option<Time>,
+}
+
+/// The market: answers acquisition requests, samples revocations.
+#[derive(Clone, Debug)]
+pub struct Market {
+    pub config: MarketConfig,
+    trace: Option<PriceTrace>,
+    rng: Rng,
+}
+
+impl Market {
+    pub fn new(config: MarketConfig, mut rng: Rng) -> Self {
+        let trace = config
+            .pricing
+            .as_ref()
+            .map(|p| PriceTrace::simulate(&p.model, p.horizon, &mut rng));
+        Market { config, trace, rng }
+    }
+
+    /// Current market price (fraction of on-demand); `1/r` flat when
+    /// dynamic pricing is disabled.
+    pub fn price_at(&self, t: Time) -> f64 {
+        match &self.trace {
+            Some(trace) => trace.at(t),
+            None => 1.0 / self.config.cost_ratio,
+        }
+    }
+
+    /// Effective mean price paid for a server held over `[a, b)`.
+    pub fn effective_price(&self, a: Time, b: Time) -> f64 {
+        match &self.trace {
+            Some(trace) => trace.mean_over(a, b),
+            None => 1.0 / self.config.cost_ratio,
+        }
+    }
+
+    /// Try to lease one transient server at time `now`.
+    pub fn try_acquire(&mut self, now: Time) -> Option<Lease> {
+        if self.config.unavailable_p > 0.0 && self.rng.f64() < self.config.unavailable_p {
+            return None;
+        }
+        let bid = self.config.pricing.as_ref().map(|p| p.bid);
+        if let (Some(trace), Some(bid)) = (&self.trace, bid) {
+            if trace.at(now) > bid {
+                return None; // market above our bid: no capacity at this price
+            }
+        }
+        let ready_at = now + self.config.provisioning_delay;
+        // Revocation clock starts when the server is up; the earlier of
+        // the MTTF sample and the next price crossing wins.
+        let mttf_revoke = self.config.mttf.map(|mttf| ready_at + self.rng.exponential(mttf));
+        let price_revoke = match (&self.trace, bid) {
+            (Some(trace), Some(bid)) => trace.next_crossing(ready_at, bid),
+            _ => None,
+        };
+        let revoke_at = match (mttf_revoke, price_revoke) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        Some(Lease { ready_at, revoke_at })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_has_provisioning_delay() {
+        let mut m = Market::new(MarketConfig::default(), Rng::new(1));
+        let lease = m.try_acquire(100.0).unwrap();
+        assert_eq!(lease.ready_at, 220.0);
+        assert_eq!(lease.revoke_at, None); // default: never revoked
+    }
+
+    #[test]
+    fn mttf_samples_revocations_with_right_mean() {
+        let cfg = MarketConfig { mttf: Some(10_000.0), ..Default::default() };
+        let mut m = Market::new(cfg, Rng::new(2));
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| m.try_acquire(0.0).unwrap().revoke_at.unwrap() - 120.0)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 10_000.0).abs() / 10_000.0 < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn unavailability_rate_respected() {
+        let cfg = MarketConfig { unavailable_p: 0.3, ..Default::default() };
+        let mut m = Market::new(cfg, Rng::new(3));
+        let fails = (0..10_000).filter(|_| m.try_acquire(0.0).is_none()).count();
+        let rate = fails as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn revocation_after_ready() {
+        let cfg = MarketConfig { mttf: Some(100.0), ..Default::default() };
+        let mut m = Market::new(cfg, Rng::new(4));
+        for _ in 0..1000 {
+            let lease = m.try_acquire(50.0).unwrap();
+            assert!(lease.revoke_at.unwrap() >= lease.ready_at);
+        }
+    }
+
+    #[test]
+    fn fixed_pricing_is_one_over_r() {
+        let m = Market::new(MarketConfig::default(), Rng::new(5));
+        assert!((m.price_at(0.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.effective_price(0.0, 1e4) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bid_pricing_revokes_on_crossing() {
+        let cfg = MarketConfig {
+            pricing: Some(PricingConfig { bid: 0.35, ..Default::default() }),
+            ..Default::default()
+        };
+        let mut m = Market::new(cfg, Rng::new(6));
+        // Across a week-long trace, a tight bid must produce at least one
+        // acquirable window with a finite revocation time.
+        let mut revoked = false;
+        for hour in 0..24 * 7 {
+            if let Some(lease) = m.try_acquire(hour as f64 * 3600.0) {
+                if lease.revoke_at.is_some() {
+                    revoked = true;
+                    assert!(lease.revoke_at.unwrap() >= lease.ready_at);
+                }
+            }
+        }
+        assert!(revoked, "tight bid never crossed by a price spike");
+    }
+
+    #[test]
+    fn high_bid_rarely_fails_low_bid_often_fails() {
+        let mk = |bid: f64, seed: u64| {
+            let cfg = MarketConfig {
+                pricing: Some(PricingConfig { bid, ..Default::default() }),
+                ..Default::default()
+            };
+            let mut m = Market::new(cfg, Rng::new(seed));
+            (0..1000)
+                .filter(|i| m.try_acquire(*i as f64 * 600.0).is_none())
+                .count()
+        };
+        assert!(mk(2.0, 7) <= mk(0.31, 7), "higher bid should fail no more often");
+    }
+
+    #[test]
+    fn price_revocation_combines_with_mttf() {
+        let cfg = MarketConfig {
+            mttf: Some(10.0), // extremely short MTTF dominates
+            pricing: Some(PricingConfig { bid: 5.0, ..Default::default() }),
+            ..Default::default()
+        };
+        let mut m = Market::new(cfg, Rng::new(8));
+        let lease = m.try_acquire(0.0).unwrap();
+        // bid=5.0 is never crossed, so the MTTF sample must be the cause.
+        assert!(lease.revoke_at.is_some());
+    }
+}

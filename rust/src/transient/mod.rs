@@ -1,0 +1,13 @@
+//! Transient-server substrate: the market model (pricing, provisioning,
+//! revocations), the §3.1 budget arithmetic, and the §3.2 Transient
+//! Manager that drives CloudCoaster's dynamic short partition.
+
+mod budget;
+mod manager;
+mod market;
+mod price;
+
+pub use budget::Budget;
+pub use manager::{ManagerConfig, TransientManager};
+pub use market::{Lease, Market, MarketConfig, PricingConfig};
+pub use price::{PriceModel, PriceTrace};

@@ -1,0 +1,174 @@
+//! Spot-market price process (§2.4): Amazon-style dynamic pricing where
+//! customers bid and are revoked when the market price crosses their bid.
+//!
+//! The process is a regime-switching mean-reverting walk, the standard
+//! shape reported by spot-market measurement studies (e.g. Spotlight
+//! [22], SpotCheck [27]): long quiet stretches near a base discount with
+//! occasional demand spikes that can exceed the on-demand price. Prices
+//! are normalised to the on-demand price (1.0 = on-demand).
+
+use crate::sim::Rng;
+use crate::util::Time;
+
+/// Regime-switching mean-reverting price model.
+#[derive(Clone, Debug)]
+pub struct PriceModel {
+    /// Base (quiet-regime) price, fraction of on-demand (e.g. 0.3 = 70% off).
+    pub base: f64,
+    /// Spike-regime mean price (can exceed 1.0 = on-demand).
+    pub spike: f64,
+    /// Mean-reversion strength per step (0..1).
+    pub reversion: f64,
+    /// Per-step noise amplitude.
+    pub noise: f64,
+    /// Mean dwell in the quiet regime, seconds.
+    pub quiet_dwell: f64,
+    /// Mean dwell in the spike regime, seconds.
+    pub spike_dwell: f64,
+    /// Price update period, seconds.
+    pub step: f64,
+}
+
+impl Default for PriceModel {
+    fn default() -> Self {
+        PriceModel {
+            base: 0.30, // "effective average cost of only 30%" [25]
+            spike: 1.10,
+            reversion: 0.15,
+            noise: 0.02,
+            quiet_dwell: 6.0 * 3600.0,
+            spike_dwell: 20.0 * 60.0,
+            step: 60.0,
+        }
+    }
+}
+
+/// A realised price trace: step function sampled on a fixed grid.
+#[derive(Clone, Debug)]
+pub struct PriceTrace {
+    pub step: f64,
+    pub prices: Vec<f64>,
+}
+
+impl PriceTrace {
+    /// Simulate a trace over `[0, horizon)`.
+    pub fn simulate(model: &PriceModel, horizon: Time, rng: &mut Rng) -> PriceTrace {
+        let n = (horizon / model.step).ceil() as usize + 1;
+        let mut prices = Vec::with_capacity(n);
+        let mut price = model.base;
+        let mut in_spike = false;
+        let mut regime_left = rng.exponential(model.quiet_dwell);
+        for _ in 0..n {
+            let target = if in_spike { model.spike } else { model.base };
+            price += model.reversion * (target - price) + model.noise * rng.normal();
+            price = price.clamp(0.05, 5.0);
+            prices.push(price);
+            regime_left -= model.step;
+            if regime_left <= 0.0 {
+                in_spike = !in_spike;
+                regime_left = rng
+                    .exponential(if in_spike { model.spike_dwell } else { model.quiet_dwell });
+            }
+        }
+        PriceTrace { step: model.step, prices }
+    }
+
+    /// Market price at time `t` (clamped to the trace).
+    #[inline]
+    pub fn at(&self, t: Time) -> f64 {
+        let idx = ((t / self.step) as usize).min(self.prices.len() - 1);
+        self.prices[idx]
+    }
+
+    /// First time strictly after `t` at which the price exceeds `bid`,
+    /// or None if it never does within the trace.
+    pub fn next_crossing(&self, t: Time, bid: f64) -> Option<Time> {
+        let start = ((t / self.step) as usize + 1).min(self.prices.len());
+        for (i, &p) in self.prices.iter().enumerate().skip(start) {
+            if p > bid {
+                return Some(i as f64 * self.step);
+            }
+        }
+        None
+    }
+
+    /// Time-average price over `[a, b)` — the effective cost of a server
+    /// held over that interval.
+    pub fn mean_over(&self, a: Time, b: Time) -> f64 {
+        if b <= a {
+            return self.at(a);
+        }
+        let i0 = (a / self.step) as usize;
+        let i1 = (((b / self.step).ceil() as usize).max(i0 + 1)).min(self.prices.len());
+        let slice = &self.prices[i0.min(self.prices.len() - 1)..i1];
+        slice.iter().sum::<f64>() / slice.len() as f64
+    }
+
+    /// Fraction of time the price stays at or below `bid`.
+    pub fn availability(&self, bid: f64) -> f64 {
+        let below = self.prices.iter().filter(|&&p| p <= bid).count();
+        below as f64 / self.prices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(seed: u64) -> PriceTrace {
+        PriceTrace::simulate(&PriceModel::default(), 86_400.0, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn prices_positive_and_bounded() {
+        let t = trace(1);
+        assert!(t.prices.iter().all(|&p| (0.05..=5.0).contains(&p)));
+        assert_eq!(t.prices.len(), (86_400.0 / 60.0) as usize + 1);
+    }
+
+    #[test]
+    fn quiet_regime_dominates() {
+        // Most of the day should sit near the base discount.
+        let t = trace(2);
+        let near_base = t.prices.iter().filter(|&&p| p < 0.5).count() as f64;
+        assert!(near_base / t.prices.len() as f64 > 0.7);
+    }
+
+    #[test]
+    fn spikes_exist_and_cross_reasonable_bids() {
+        // Across seeds, some spike should exceed a 0.6 bid.
+        let crossed = (0..10).any(|s| trace(s).next_crossing(0.0, 0.6).is_some());
+        assert!(crossed, "no price spike in 10 seeded days");
+    }
+
+    #[test]
+    fn crossing_is_after_query_time() {
+        let t = trace(3);
+        if let Some(c) = t.next_crossing(10_000.0, 0.4) {
+            assert!(c > 10_000.0);
+        }
+    }
+
+    #[test]
+    fn availability_monotone_in_bid() {
+        let t = trace(4);
+        assert!(t.availability(0.2) <= t.availability(0.5));
+        assert!(t.availability(0.5) <= t.availability(2.0));
+        assert!((t.availability(5.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_over_interval_sane() {
+        let t = trace(5);
+        let m = t.mean_over(0.0, 86_400.0);
+        assert!(m > 0.05 && m < 1.5, "mean price {m}");
+        // Degenerate interval falls back to the spot value.
+        assert_eq!(t.mean_over(100.0, 100.0), t.at(100.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(trace(7).prices, trace(7).prices);
+        assert_ne!(trace(7).prices, trace(8).prices);
+    }
+}

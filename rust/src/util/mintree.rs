@@ -1,0 +1,152 @@
+//! Fixed-size argmin segment tree over per-server load estimates.
+//!
+//! The centralized long-job scheduler places every long task on the
+//! least-loaded general-partition server. A linear scan per task is
+//! O(N·tasks) (~10^9 ops at paper scale); this tree makes placement
+//! O(log N) per task and update O(log N) per load change.
+
+/// Argmin segment tree over `n` f64 keys.
+#[derive(Clone, Debug)]
+pub struct MinTree {
+    n: usize,
+    /// tree[i] = index (into 0..n) of the min key in node i's range.
+    tree: Vec<u32>,
+    keys: Vec<f64>,
+}
+
+impl MinTree {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "empty MinTree");
+        let size = n.next_power_of_two();
+        let mut t = MinTree { n, tree: vec![0; 2 * size], keys: vec![0.0; size] };
+        // Keys beyond n are +inf so they never win argmin.
+        for i in n..size {
+            t.keys[i] = f64::INFINITY;
+        }
+        for i in 0..size {
+            t.tree[size + i] = i as u32;
+        }
+        for i in (1..size).rev() {
+            t.tree[i] = t.argmin_children(i);
+        }
+        t
+    }
+
+    #[inline]
+    fn size(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    fn argmin_children(&self, node: usize) -> u32 {
+        let l = self.tree[2 * node];
+        let r = self.tree[2 * node + 1];
+        if self.keys[l as usize] <= self.keys[r as usize] {
+            l
+        } else {
+            r
+        }
+    }
+
+    /// Set the key at `idx` and repair the path to the root.
+    #[inline]
+    pub fn update(&mut self, idx: usize, key: f64) {
+        debug_assert!(idx < self.n);
+        self.keys[idx] = key;
+        // Repair the path to the root, stopping early once a node's
+        // winner is unchanged AND is not the changed leaf — from there on
+        // every ancestor compares the same (index, key) pairs as before.
+        // (Measured: cuts the mean repair from log N to ~1.6 levels on
+        // the simulator's workload; see EXPERIMENTS.md §Perf.)
+        let mut node = (self.size() + idx) >> 1;
+        while node >= 1 {
+            let new = self.argmin_children(node);
+            if self.tree[node] == new && new as usize != idx {
+                return;
+            }
+            self.tree[node] = new;
+            node >>= 1;
+        }
+    }
+
+    /// Index of the global minimum key.
+    #[inline]
+    pub fn argmin(&self) -> usize {
+        self.tree[1] as usize
+    }
+
+    /// The minimum key value.
+    pub fn min_key(&self) -> f64 {
+        self.keys[self.argmin()]
+    }
+
+    pub fn key(&self, idx: usize) -> f64 {
+        self.keys[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_argmin_under_updates() {
+        let mut t = MinTree::new(10);
+        for i in 0..10 {
+            t.update(i, (10 - i) as f64);
+        }
+        assert_eq!(t.argmin(), 9);
+        t.update(9, 100.0);
+        assert_eq!(t.argmin(), 8);
+        t.update(3, 0.5);
+        assert_eq!(t.argmin(), 3);
+        assert_eq!(t.min_key(), 0.5);
+    }
+
+    #[test]
+    fn non_power_of_two_sizes() {
+        let mut t = MinTree::new(7);
+        for i in 0..7 {
+            t.update(i, i as f64 + 1.0);
+        }
+        assert_eq!(t.argmin(), 0);
+        t.update(0, 50.0);
+        assert_eq!(t.argmin(), 1);
+        // Phantom slots (7..8) must never win.
+        for i in 0..7 {
+            t.update(i, 1e12);
+        }
+        assert!(t.argmin() < 7);
+    }
+
+    #[test]
+    fn matches_linear_scan_randomized() {
+        let mut rng = crate::sim::Rng::new(99);
+        let n = 37;
+        let mut t = MinTree::new(n);
+        let mut keys = vec![0.0f64; n];
+        for step in 0..2000 {
+            let i = rng.below(n as u64) as usize;
+            let k = rng.f64() * 1000.0;
+            t.update(i, k);
+            keys[i] = k;
+            if step % 10 == 0 {
+                let lin = keys
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0;
+                assert_eq!(keys[t.argmin()], keys[lin]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let mut t = MinTree::new(1);
+        t.update(0, 42.0);
+        assert_eq!(t.argmin(), 0);
+        assert_eq!(t.min_key(), 42.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Small shared utilities: typed ids, total-ordered simulation time, and
+//! numeric helpers used across the simulator.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+mod mintree;
+pub use mintree::MinTree;
+
+/// Simulation time in seconds since simulation start.
+pub type Time = f64;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            #[inline]
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!(stringify!($name), "({})"), self.0)
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}", self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// Identifies a server slot in the [`crate::cluster::Cluster`] arena.
+    ServerId
+);
+id_type!(
+    /// Identifies a job in the workload trace.
+    JobId
+);
+id_type!(
+    /// Identifies a task in the global task arena.
+    TaskId
+);
+
+/// `f64` wrapper with a total order, used as the event-queue key.
+///
+/// Simulation times are always finite (the engine rejects NaN), so the
+/// total order is the natural one.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub struct OrderedTime(pub Time);
+
+impl Eq for OrderedTime {}
+
+impl PartialOrd for OrderedTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrderedTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Exact percentile via sorting a copy; `q` in [0,1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+    v[pos]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_time_sorts_naturally() {
+        let mut v = vec![OrderedTime(3.0), OrderedTime(1.0), OrderedTime(2.0)];
+        v.sort();
+        assert_eq!(v, vec![OrderedTime(1.0), OrderedTime(2.0), OrderedTime(3.0)]);
+    }
+
+    #[test]
+    fn ids_are_compact() {
+        assert_eq!(std::mem::size_of::<ServerId>(), 4);
+        assert_eq!(ServerId(7).index(), 7);
+    }
+
+    #[test]
+    fn mean_and_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

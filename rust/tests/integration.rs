@@ -1,0 +1,269 @@
+//! Cross-module integration tests: full simulations through the public
+//! API, scheduler comparisons on crowded workloads, trace persistence
+//! round-trips, config-to-report pipelines.
+
+use cloudcoaster::cluster::QueuePolicy;
+use cloudcoaster::coordinator::config::{ExperimentConfig, WorkloadSource};
+use cloudcoaster::coordinator::report::{build_workload, run_experiment_on};
+use cloudcoaster::coordinator::runner::{simulate, SimConfig};
+use cloudcoaster::coordinator::sweep::paper_sweep;
+use cloudcoaster::runtime::NativeAnalytics;
+use cloudcoaster::sched::{Centralized, Hybrid, Scheduler, Sparrow};
+use cloudcoaster::sim::Rng;
+use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
+use cloudcoaster::trace::{read_csv, write_csv, Job, Workload};
+use cloudcoaster::transient::{Budget, ManagerConfig};
+use cloudcoaster::util::JobId;
+
+/// A small crowded workload: long jobs saturate most of the general
+/// partition while shorts keep arriving.
+fn crowded_workload(seed: u64, horizon: f64) -> Workload {
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::new();
+    let mut t = 0.0;
+    while t < horizon {
+        t += rng.exponential(3.0);
+        let n = 1 + rng.below(6) as usize;
+        let durs = (0..n).map(|_| rng.lognormal(2.8, 0.5)).collect();
+        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false });
+    }
+    // Continuous heavy long load.
+    let mut t = 0.0;
+    while t < horizon {
+        t += rng.exponential(40.0);
+        let n = 20 + rng.below(30) as usize;
+        let durs = (0..n).map(|_| rng.lognormal(6.8, 0.5)).collect();
+        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: true });
+    }
+    Workload::new(jobs, 90.0)
+}
+
+fn small_cfg(manager: Option<ManagerConfig>) -> SimConfig {
+    SimConfig {
+        n_general: 96,
+        n_short_reserved: if manager.is_some() { 4 } else { 8 },
+        queue_policy: QueuePolicy::Srpt { starvation_limit: 600.0 },
+        manager,
+        snapshot_interval: 60.0,
+        steal_probes: 8,
+        steal_batch: 8,
+        seed: 5,
+    }
+}
+
+fn cc_manager() -> ManagerConfig {
+    ManagerConfig { threshold: 0.8, ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0)) }
+}
+
+#[test]
+fn every_scheduler_completes_the_workload() {
+    let w = crowded_workload(1, 1800.0);
+    let schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Centralized),
+        Box::new(Sparrow::new(2.0)),
+        Box::new(Hybrid::eagle(2.0)),
+        Box::new(Hybrid::cloudcoaster(2.0)),
+    ];
+    for mut s in schedulers {
+        let manager =
+            (s.name() == "cloudcoaster").then(cc_manager);
+        let res = simulate(&w, s.as_mut(), &small_cfg(manager));
+        assert_eq!(
+            res.rec.tasks_finished as usize,
+            w.num_tasks(),
+            "scheduler {} lost tasks",
+            res.scheduler
+        );
+    }
+}
+
+#[test]
+fn cloudcoaster_beats_eagle_on_crowded_cluster() {
+    let w = crowded_workload(2, 3600.0);
+    let mut eagle = Hybrid::eagle(2.0);
+    let eagle_res = simulate(&w, &mut eagle, &small_cfg(None));
+    let mut cc = Hybrid::cloudcoaster(2.0);
+    let cc_res = simulate(&w, &mut cc, &small_cfg(Some(cc_manager())));
+    let eagle_mean = eagle_res.rec.short_delays.mean();
+    let cc_mean = cc_res.rec.short_delays.mean();
+    assert!(
+        cc_mean < eagle_mean,
+        "cloudcoaster ({cc_mean:.1}s) should beat eagle ({eagle_mean:.1}s)"
+    );
+    // And transients were actually used, within budget at all times.
+    assert!(cc_res.rec.transients_requested > 0);
+    assert!(cc_res.rec.cost.max_active() <= 12.0); // K = 3 * 8 * 0.5
+}
+
+#[test]
+fn long_job_performance_is_maintained() {
+    // §Abstract: "while maintaining long job performance".
+    let w = crowded_workload(3, 3600.0);
+    let mut eagle = Hybrid::eagle(2.0);
+    let eagle_res = simulate(&w, &mut eagle, &small_cfg(None));
+    let mut cc = Hybrid::cloudcoaster(2.0);
+    let cc_res = simulate(&w, &mut cc, &small_cfg(Some(cc_manager())));
+    let eagle_long = eagle_res.rec.long_delays.mean();
+    let cc_long = cc_res.rec.long_delays.mean();
+    // Longs never run on transients, so their delay moves only via noise
+    // (the general partition shrinks by 4 servers in the CC config).
+    assert!(
+        (cc_long - eagle_long).abs() / eagle_long.max(1.0) < 0.25,
+        "long delay drifted: eagle {eagle_long:.0}s vs cc {cc_long:.0}s"
+    );
+}
+
+#[test]
+fn no_short_ever_queues_behind_a_long_under_hybrid() {
+    // The hybrid invariant ("divide"): shorts avoid long-occupied servers
+    // at placement time. Verify via the per-task record: every short task
+    // that ran on a server marked long at its *start* must have been the
+    // long-free one... simpler: spot-check queues during a paused sim is
+    // impossible here, so assert the outcome instead — short p50 under
+    // hybrid is far below centralized on the same crowded workload.
+    let w = crowded_workload(4, 1800.0);
+    let mut eagle = Hybrid::eagle(2.0);
+    let eagle_res = simulate(&w, &mut eagle, &small_cfg(None));
+    let mut cent = Centralized;
+    let cent_res = simulate(&w, &mut cent, &small_cfg(None));
+    let mut e = eagle_res.rec.short_delays.clone();
+    let mut c = cent_res.rec.short_delays.clone();
+    assert!(
+        e.percentile(0.5) <= c.percentile(0.5),
+        "eagle p50 {:.1} vs centralized p50 {:.1}",
+        e.percentile(0.5),
+        c.percentile(0.5)
+    );
+}
+
+#[test]
+fn succinct_state_is_worth_having() {
+    // Eagle = Hawk + succinct state; on a long-crowded cluster the
+    // long-bitmap filter must cut short-task delays (the SoCC'16 claim).
+    let w = crowded_workload(7, 3600.0);
+    let mut hawk = Hybrid::hawk(2.0);
+    let hawk_res = simulate(&w, &mut hawk, &small_cfg(None));
+    let mut eagle = Hybrid::eagle(2.0);
+    let eagle_res = simulate(&w, &mut eagle, &small_cfg(None));
+    let h = hawk_res.rec.short_delays.mean();
+    let e = eagle_res.rec.short_delays.mean();
+    assert!(e < h, "eagle ({e:.1}s) should beat hawk ({h:.1}s)");
+}
+
+#[test]
+fn spot_market_bids_trade_cost_for_churn() {
+    // Dynamic pricing: a tight bid must never lose tasks even when the
+    // price crosses it repeatedly.
+    let w = crowded_workload(8, 3600.0);
+    let mut cfg = small_cfg(Some(cc_manager()));
+    cfg.manager.as_mut().unwrap().market.pricing =
+        Some(cloudcoaster::transient::PricingConfig { bid: 0.35, ..Default::default() });
+    let mut cc = Hybrid::cloudcoaster(2.0);
+    let res = simulate(&w, &mut cc, &cfg);
+    assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+}
+
+#[test]
+fn trace_roundtrip_preserves_simulation_results() {
+    let w = crowded_workload(6, 900.0);
+    let path = std::env::temp_dir().join(format!("cc_it_{}.csv", std::process::id()));
+    write_csv(&w, &path).unwrap();
+    let w2 = read_csv(&path, 90.0).unwrap();
+    std::fs::remove_file(&path).ok();
+    let run = |w: &Workload| {
+        let mut s = Hybrid::eagle(2.0);
+        simulate(w, &mut s, &small_cfg(None))
+    };
+    let a = run(&w);
+    let b = run(&w2);
+    assert_eq!(a.rec.tasks_finished, b.rec.tasks_finished);
+    // write_csv uses shortest-roundtrip float formatting, so the replay
+    // is bit-identical.
+    assert_eq!(a.rec.short_delays.as_slice(), b.rec.short_delays.as_slice());
+}
+
+#[test]
+fn config_pipeline_toml_to_report() {
+    let cfg = ExperimentConfig::from_toml(
+        r#"
+        seed = 11
+        [cluster]
+        servers = 150
+        short_partition = 10
+        [transient]
+        r = 3
+        threshold = 0.7
+        [scheduler]
+        kind = "cloudcoaster"
+        [workload]
+        horizon = 1200
+        "#,
+    )
+    .unwrap();
+    let w = build_workload(&cfg).unwrap();
+    let mut analytics = NativeAnalytics;
+    let rep = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
+    assert!(rep.short_delay.n > 0);
+    assert!(rep.cdf.values.last().copied().unwrap() > 0.999);
+}
+
+#[test]
+fn paper_sweep_reproduces_figure3_ordering() {
+    // Scaled-down version of the paper grid: r=3 must dominate the
+    // baseline; r=1 must be in the baseline's neighbourhood.
+    let mut base = ExperimentConfig::paper_defaults();
+    base.cluster_size = 400;
+    base.short_partition = 16;
+    base.threshold = 0.8;
+    let mut p = YahooLikeParams::default();
+    p.horizon = 3.0 * 3600.0;
+    p.short_arrivals.calm_rate /= 10.0;
+    p.short_arrivals.burst_rate /= 10.0;
+    p.long_arrivals.calm_rate /= 5.0;
+    p.long_arrivals.burst_rate /= 5.0;
+    p.long_arrivals.calm_dwell /= 6.0;
+    p.long_arrivals.burst_dwell /= 6.0;
+    base.workload = WorkloadSource::YahooLike(p);
+    let reports = paper_sweep(&base, &[1.0, 3.0]).unwrap();
+    let baseline = &reports[0];
+    let r3 = &reports[2];
+    assert!(baseline.short_delay.mean > 0.0);
+    assert!(
+        r3.short_delay.mean < baseline.short_delay.mean,
+        "r=3 ({:.1}s) must beat baseline ({:.1}s)",
+        r3.short_delay.mean,
+        baseline.short_delay.mean
+    );
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.cluster_size = 200;
+    cfg.short_partition = 10;
+    cfg.threshold = 0.8;
+    if let WorkloadSource::YahooLike(p) = &mut cfg.workload {
+        p.horizon = 1200.0;
+        p.short_arrivals.calm_rate /= 10.0;
+        p.short_arrivals.burst_rate /= 10.0;
+    }
+    let w = build_workload(&cfg).unwrap();
+    let mut analytics = NativeAnalytics;
+    let a = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
+    let b = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
+    assert_eq!(a.short_delay.n, b.short_delay.n);
+    assert_eq!(a.short_delay.mean, b.short_delay.mean);
+    assert_eq!(a.events, b.events);
+}
+
+#[test]
+fn yahoo_like_trace_matches_published_shape() {
+    // DESIGN.md §3 substitution: the synthetic trace must match the shape
+    // statistics Eagle/Hawk report for the Yahoo trace.
+    let w = yahoo_like(&YahooLikeParams::default(), &mut Rng::new(42));
+    let stats = cloudcoaster::trace::TraceStats::of(&w);
+    assert!(stats.short_job_frac > 0.9, "short fraction {}", stats.short_job_frac);
+    assert!(stats.long_work_frac > 0.9, "long work {}", stats.long_work_frac);
+    assert!(stats.mean_long_duration / stats.mean_short_duration > 20.0);
+    assert!(stats.jobs > 15_000 && stats.jobs < 40_000, "jobs {}", stats.jobs);
+}

@@ -1,0 +1,184 @@
+//! Paper-fidelity tests: every closed-form statement in §3 and every
+//! configuration constant in §4 is checked against the implementation.
+
+use cloudcoaster::cluster::{Cluster, QueuePolicy};
+use cloudcoaster::coordinator::config::ExperimentConfig;
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::sim::{Engine, Rng};
+use cloudcoaster::transient::{Budget, ManagerConfig, MarketConfig, TransientManager};
+use cloudcoaster::util::JobId;
+
+// ----------------------------------------------------------------- §3.1
+
+#[test]
+fn sec31_cost_ratio_formula_t() {
+    // T = N((r-1)p + 1); the §3.1 worked example: N=80? the paper uses
+    // T = 2N for r=3, p=0.5.
+    for n in [40usize, 80, 160] {
+        let b = Budget::new(n, 0.5, 3.0);
+        assert_eq!(b.max_partition(), 2 * n);
+    }
+}
+
+#[test]
+fn sec31_k_equals_rnp() {
+    for (r, p, n, k) in [(3.0, 0.5, 80, 120), (2.0, 0.5, 80, 80), (1.0, 0.5, 80, 40)] {
+        assert_eq!(Budget::new(n, p, r).max_transients(), k);
+    }
+}
+
+// ----------------------------------------------------------------- §3.2
+
+#[test]
+fn sec32_lr_definition() {
+    // l_r = N_long / N_total where N_long counts servers *with* long
+    // tasks (not long tasks themselves).
+    let mut cluster = Cluster::new(10, 0, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(1.0);
+    // Two long tasks on the same server count once.
+    for _ in 0..2 {
+        let t = cluster.add_task(JobId(0), 100.0, true, 0.0);
+        cluster.enqueue(t, cloudcoaster::util::ServerId(0), &mut engine, &mut rec);
+    }
+    assert_eq!(cluster.n_long_servers(), 1);
+    assert!((cluster.long_load_ratio() - 0.1).abs() < 1e-12);
+}
+
+#[test]
+fn sec32_lr_initialised_to_zero() {
+    let cluster = Cluster::new(100, 10, QueuePolicy::Fifo);
+    assert_eq!(cluster.long_load_ratio(), 0.0);
+}
+
+#[test]
+fn sec32_add_above_remove_below_threshold() {
+    let mut cluster = Cluster::new(10, 2, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(3.0);
+    let cfg = ManagerConfig {
+        threshold: 0.5,
+        drain_cooldown: 0.0,
+        ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0))
+    };
+    let mut mgr = TransientManager::new(cfg, Rng::new(1));
+    // Below threshold with no transients: no-op.
+    mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+    assert_eq!(mgr.pending(), 0);
+    // Push l_r to 0.7 (> 0.5): manager must lease.
+    for i in 0..7 {
+        let t = cluster.add_task(JobId(0), 1e4, true, 0.0);
+        cluster.enqueue(t, cloudcoaster::util::ServerId(i), &mut engine, &mut rec);
+    }
+    mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+    assert!(mgr.pending() > 0, "no lease despite l_r > L_r^T");
+}
+
+#[test]
+fn sec32_graceful_release_completes_queue() {
+    // "CloudCoaster instructs the server to complete all of its currently
+    // enqueued tasks before shutting down."
+    let mut cluster = Cluster::new(4, 0, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(3.0);
+    let sid = cluster.request_transient(0.0);
+    cluster.transient_ready(sid, 0.0, &mut rec);
+    for _ in 0..3 {
+        let t = cluster.add_task(JobId(0), 10.0, false, 0.0);
+        cluster.enqueue(t, sid, &mut engine, &mut rec);
+    }
+    assert!(!cluster.begin_drain(sid)); // busy -> drains later
+    let mut finished = 0;
+    while let Some((_, ev)) = engine.pop() {
+        if let cloudcoaster::sim::Event::TaskFinish { server, task } = ev {
+            finished += 1;
+            if cluster.on_task_finish(server, task, &mut engine, &mut rec) {
+                cluster.retire(server, engine.now(), &mut rec);
+            }
+        }
+    }
+    assert_eq!(finished, 3); // every enqueued task completed
+    assert_eq!(rec.cost.lifetimes.len(), 1); // then it shut down
+}
+
+// ----------------------------------------------------------------- §3.3
+
+#[test]
+fn sec33_at_least_one_ondemand_copy_survives_revocation() {
+    // A short task enqueued on a transient with an on-demand copy must
+    // survive revocation without rescheduling.
+    let mut cluster = Cluster::new(4, 2, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(3.0);
+    let sid = cluster.request_transient(0.0);
+    cluster.transient_ready(sid, 0.0, &mut rec);
+    let od = cluster.short_reserved[0];
+    // Busy both so the copies queue.
+    for target in [sid, od] {
+        let b = cluster.add_task(JobId(0), 100.0, false, 0.0);
+        cluster.enqueue(b, target, &mut engine, &mut rec);
+    }
+    let t = cluster.add_task(JobId(1), 10.0, false, 0.0);
+    cluster.enqueue(t, sid, &mut engine, &mut rec);
+    cluster.enqueue(t, od, &mut engine, &mut rec);
+    let orphans = cluster.revoke(sid, 1.0, &mut rec);
+    assert!(!orphans.contains(&t), "duplicated task must not orphan");
+    // World completes; the task runs exactly once (on the od copy).
+    while let Some((_, ev)) = engine.pop() {
+        if let cloudcoaster::sim::Event::TaskFinish { server, task } = ev {
+            if cluster.task(task).state == cloudcoaster::cluster::TaskState::Running
+                && cluster.task(task).ran_on == Some(server)
+            {
+                cluster.on_task_finish(server, task, &mut engine, &mut rec);
+            }
+        }
+    }
+    assert_eq!(cluster.task(t).state, cloudcoaster::cluster::TaskState::Finished);
+    assert_eq!(rec.tasks_rescheduled, 0);
+}
+
+#[test]
+fn sec33_revocation_warning_is_30s_by_default() {
+    assert_eq!(MarketConfig::default().revocation_warning, 30.0);
+}
+
+// ------------------------------------------------------------------- §4
+
+#[test]
+fn sec4_paper_configuration_constants() {
+    let cfg = ExperimentConfig::paper_defaults();
+    assert_eq!(cfg.cluster_size, 4000, "4000 on-demand servers");
+    assert_eq!(cfg.short_partition, 80, "80 used for short jobs");
+    assert_eq!(cfg.p, 0.5, "p = 0.5");
+    assert_eq!(cfg.threshold, 0.95, "L_r^T = 0.95");
+    assert_eq!(cfg.provisioning_delay, 120.0, "120 s provisioning delay");
+    assert_eq!(cfg.mttf, None, "paper regime: no revocations observed");
+}
+
+#[test]
+fn sec4_transient_caps_by_ratio() {
+    // "CloudCoaster can use up to 40, 80 and 120 transient servers."
+    for (r, cap) in [(1.0, 40), (2.0, 80), (3.0, 120)] {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.r = r;
+        let sim = cfg.to_sim_config();
+        assert_eq!(sim.manager.unwrap().budget.max_transients(), cap);
+        assert_eq!(sim.n_short_reserved, 40); // (1-p) * 80 buffer servers
+    }
+}
+
+#[test]
+fn sec42_r_normalised_accounting() {
+    // Table 1's metric: avg transients / r, compared to 40 on-demand.
+    let mut ledger = cloudcoaster::metrics::CostLedger::new(3.0);
+    for _ in 0..90 {
+        ledger.transient_up(0.0);
+    }
+    for _ in 0..90 {
+        ledger.transient_down(3600.0, 3600.0);
+    }
+    // 90 transients for 1h of a 1h sim -> avg 90, r-norm 30, saving 25%.
+    assert!((ledger.avg_active(3600.0) - 90.0).abs() < 1e-9);
+    assert!((ledger.r_normalized_avg(3600.0) - 30.0).abs() < 1e-9);
+    assert!((ledger.saving_vs_static(40.0, 3600.0) - 0.25).abs() < 1e-9);
+}

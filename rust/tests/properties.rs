@@ -1,0 +1,279 @@
+//! Property-based tests (via `testkit::property` — seeded randomized
+//! invariant checks, our stand-in for proptest in this offline build):
+//! conservation laws, budget bounds, l_r bounds and full cluster
+//! invariants across randomized scenarios.
+
+use cloudcoaster::cluster::{Cluster, QueuePolicy, ServerState, TaskState};
+use cloudcoaster::coordinator::runner::{simulate, SimConfig};
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::sched::Hybrid;
+use cloudcoaster::sim::{Engine, Event, Rng};
+use cloudcoaster::testkit::{property, usize_in};
+use cloudcoaster::trace::{Job, Workload};
+use cloudcoaster::transient::{Budget, ManagerConfig};
+use cloudcoaster::util::JobId;
+
+fn random_workload(rng: &mut Rng, horizon: f64) -> Workload {
+    let mut jobs = Vec::new();
+    let mut t = 0.0;
+    while t < horizon {
+        t += rng.exponential(5.0);
+        let is_long = rng.f64() < 0.1;
+        let n = 1 + rng.below(if is_long { 24 } else { 8 }) as usize;
+        let (mu, sigma) = if is_long { (6.5, 0.6) } else { (2.8, 0.6) };
+        let durs = (0..n).map(|_| rng.lognormal(mu, sigma)).collect();
+        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long });
+    }
+    Workload::new(jobs, 90.0)
+}
+
+fn random_cfg(rng: &mut Rng, with_manager: bool) -> SimConfig {
+    let n_general = usize_in(rng, 24, 128);
+    let n_short = usize_in(rng, 2, 12);
+    let manager = with_manager.then(|| ManagerConfig {
+        threshold: 0.3 + 0.65 * rng.f64(),
+        drain_cooldown: if rng.f64() < 0.5 { 0.0 } else { 120.0 },
+        max_removals_per_recalc: usize_in(rng, 1, 3),
+        ..ManagerConfig::paper(Budget::new(
+            n_short.max(2),
+            0.25 + 0.5 * rng.f64(),
+            1.0 + 3.0 * rng.f64(),
+        ))
+    });
+    SimConfig {
+        n_general,
+        n_short_reserved: n_short,
+        queue_policy: if rng.f64() < 0.3 {
+            QueuePolicy::Fifo
+        } else {
+            QueuePolicy::Srpt { starvation_limit: 100.0 + 900.0 * rng.f64() }
+        },
+        manager,
+        snapshot_interval: 60.0,
+        steal_probes: usize_in(rng, 0, 8),
+        steal_batch: usize_in(rng, 1, 16),
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_every_task_finishes_exactly_once() {
+    property("conservation of tasks", 25, |rng| {
+        let horizon = 400.0 + 800.0 * rng.f64();
+        let w = random_workload(rng, horizon);
+        let with_manager = rng.f64() < 0.7;
+        let cfg = random_cfg(rng, with_manager);
+        let mut sched = if rng.f64() < 0.5 {
+            Hybrid::eagle(2.0)
+        } else {
+            Hybrid::cloudcoaster(2.0)
+        };
+        let res = simulate(&w, &mut sched, &cfg);
+        assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+        assert_eq!(
+            res.rec.short_delays.len() + res.rec.long_delays.len() as usize,
+            w.num_tasks(),
+            "delay samples != tasks"
+        );
+    });
+}
+
+#[test]
+fn prop_budget_cap_never_exceeded() {
+    property("budget cap", 15, |rng| {
+        let w = random_workload(rng, 800.0);
+        let cfg = random_cfg(rng, true);
+        let cap = cfg.manager.as_ref().unwrap().budget.max_transients() as f64;
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        let res = simulate(&w, &mut sched, &cfg);
+        assert!(
+            res.rec.cost.max_active() <= cap,
+            "fleet {} exceeded K={cap}",
+            res.rec.cost.max_active()
+        );
+    });
+}
+
+#[test]
+fn prop_delays_nonnegative_and_lr_bounded() {
+    property("delay & l_r bounds", 15, |rng| {
+        let w = random_workload(rng, 600.0);
+        let cfg = random_cfg(rng, true);
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        let res = simulate(&w, &mut sched, &cfg);
+        assert!(res.rec.short_delays.as_slice().iter().all(|&d| d >= 0.0));
+        assert!(res.rec.long_delays.as_slice().iter().all(|&d| d >= 0.0));
+        for &(_, lr) in &res.rec.lr_series.points {
+            assert!((0.0..=1.0).contains(&lr), "l_r out of bounds: {lr}");
+        }
+    });
+}
+
+#[test]
+fn prop_revocations_never_lose_tasks() {
+    property("revocation safety", 15, |rng| {
+        let w = random_workload(rng, 600.0);
+        let mut cfg = random_cfg(rng, true);
+        let mgr = cfg.manager.as_mut().unwrap();
+        mgr.threshold = 0.4; // keep transients in play
+        mgr.market.mttf = Some(120.0 + 1200.0 * rng.f64()); // heavy revocations
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        let res = simulate(&w, &mut sched, &cfg);
+        assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+    });
+}
+
+#[test]
+fn prop_cluster_invariants_hold_under_random_ops() {
+    // Drive the Cluster state machine directly with random operations and
+    // check the full invariant set after every step.
+    property("cluster state machine", 20, |rng| {
+        let mut cluster = Cluster::new(usize_in(rng, 4, 16), usize_in(rng, 1, 4), QueuePolicy::Fifo);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(2.0);
+        let mut transients: Vec<cloudcoaster::util::ServerId> = Vec::new();
+        for step in 0..200 {
+            match rng.below(10) {
+                0..=4 => {
+                    // Enqueue a task on a random accepting server.
+                    let accepting: Vec<_> = cluster
+                        .servers
+                        .iter()
+                        .filter(|s| s.accepting())
+                        .map(|s| s.id)
+                        .collect();
+                    if let Some(&sid) =
+                        accepting.get(rng.below(accepting.len().max(1) as u64) as usize)
+                    {
+                        let is_long = rng.f64() < 0.3;
+                        let t = cluster.add_task(
+                            JobId(step),
+                            1.0 + rng.f64() * 50.0,
+                            is_long,
+                            engine.now(),
+                        );
+                        cluster.enqueue(t, sid, &mut engine, &mut rec);
+                    }
+                }
+                5..=6 => {
+                    // Advance the world one event (guarding stale finish
+                    // events from revoked executions, as the runner does).
+                    if let Some((_, ev)) = engine.pop() {
+                        if let Event::TaskFinish { server, task } = ev {
+                            if cluster.task(task).state == TaskState::Running
+                                && cluster.task(task).ran_on == Some(server)
+                            {
+                                let drained =
+                                    cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                                if drained {
+                                    cluster.retire(server, engine.now(), &mut rec);
+                                }
+                            }
+                        }
+                    }
+                }
+                7 => {
+                    let sid = cluster.request_transient(engine.now());
+                    cluster.transient_ready(sid, engine.now(), &mut rec);
+                    transients.push(sid);
+                }
+                8 => {
+                    if let Some(pos) =
+                        (!cluster.transient_pool.is_empty()).then(|| rng.below(cluster.transient_pool.len() as u64) as usize)
+                    {
+                        let sid = cluster.transient_pool[pos];
+                        if cluster.begin_drain(sid) {
+                            cluster.retire(sid, engine.now(), &mut rec);
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(pos) =
+                        (!cluster.transient_pool.is_empty()).then(|| rng.below(cluster.transient_pool.len() as u64) as usize)
+                    {
+                        let sid = cluster.transient_pool[pos];
+                        let orphans = cluster.revoke(sid, engine.now(), &mut rec);
+                        // Re-place orphans on the first on-demand server.
+                        for tid in orphans {
+                            if cluster.task(tid).state == TaskState::Queued {
+                                let target = cluster.short_reserved[0];
+                                cluster.enqueue(tid, target, &mut engine, &mut rec);
+                            }
+                        }
+                    }
+                }
+            }
+            cluster.check_invariants();
+        }
+        // Drain the world and re-check.
+        while let Some((_, ev)) = engine.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                if cluster.task(task).state == TaskState::Running
+                    && cluster.task(task).ran_on == Some(server)
+                {
+                    let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                    if drained {
+                        cluster.retire(server, engine.now(), &mut rec);
+                    }
+                }
+            }
+        }
+        cluster.check_invariants();
+        // No task left behind in a live queue.
+        for s in &cluster.servers {
+            if matches!(s.state, ServerState::Active | ServerState::Draining) {
+                for &tid in &s.queue {
+                    assert_ne!(
+                        cluster.task(tid).state,
+                        TaskState::Queued,
+                        "live queued task stranded after quiesce"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_steal_preserves_accounting() {
+    property("steal accounting", 20, |rng| {
+        let mut cluster = Cluster::new(8, 2, QueuePolicy::Fifo);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(1.0);
+        // Load one victim with many shorts.
+        let victim = cluster.short_reserved[0];
+        let n = usize_in(rng, 2, 20);
+        for i in 0..n {
+            let t = cluster.add_task(JobId(i as u32), 5.0 + rng.f64() * 20.0, false, 0.0);
+            cluster.enqueue(t, victim, &mut engine, &mut rec);
+        }
+        let thief = cluster.short_reserved[1];
+        let moved = cluster.steal_short_tasks(victim, thief, usize_in(rng, 1, 8), &mut engine, &mut rec);
+        assert!(moved <= n.saturating_sub(1)); // running task not stolen
+        cluster.check_invariants();
+        // Everything still completes.
+        while let Some((_, ev)) = engine.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                cluster.on_task_finish(server, task, &mut engine, &mut rec);
+            }
+        }
+        assert_eq!(rec.tasks_finished as usize, n);
+    });
+}
+
+#[test]
+fn prop_simulation_is_deterministic() {
+    property("determinism", 8, |rng| {
+        let w = random_workload(rng, 500.0);
+        let cfg = random_cfg(rng, true);
+        let run = || {
+            let mut s = Hybrid::cloudcoaster(2.0);
+            simulate(&w, &mut s, &cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.rec.short_delays.as_slice(), b.rec.short_delays.as_slice());
+        assert_eq!(a.rec.transients_requested, b.rec.transients_requested);
+    });
+}

@@ -1,0 +1,136 @@
+//! XLA ⇄ native equivalence: the AOT-compiled artifacts (L2 JAX graphs
+//! wrapping L1 Pallas kernels, executed via PJRT) must agree with the
+//! pure-rust reference engine on randomized inputs. This is the rust-side
+//! half of the correctness story (the python side checks Pallas vs jnp).
+//!
+//! Tests are skipped (pass trivially) when `artifacts/` has not been
+//! built — run `make artifacts` first for full coverage.
+
+use cloudcoaster::coordinator::report::artifacts_dir;
+use cloudcoaster::runtime::{Analytics, NativeAnalytics, XlaAnalytics};
+use cloudcoaster::sim::Rng;
+
+fn xla() -> Option<XlaAnalytics> {
+    match XlaAnalytics::load(&artifacts_dir()) {
+        Ok(x) => Some(x),
+        Err(err) => {
+            eprintln!("skipping XLA roundtrip (artifacts not built?): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn cluster_state_matches_native() {
+    let Some(mut xla) = xla() else { return };
+    let mut native = NativeAnalytics;
+    let mut rng = Rng::new(1);
+    for case in 0..5 {
+        let n = [64usize, 512, 1000, 4000, 4096][case];
+        let rw: Vec<f32> = (0..n).map(|_| (rng.f64() * 500.0) as f32).collect();
+        let lc: Vec<f32> = (0..n).map(|_| rng.below(3) as f32).collect();
+        let ql: Vec<f32> = (0..n).map(|_| rng.below(20) as f32).collect();
+        let act: Vec<f32> = (0..n).map(|_| rng.below(2) as f32).collect();
+        let a = xla.cluster_state(&rw, &lc, &ql, &act).unwrap();
+        let b = native.cluster_state(&rw, &lc, &ql, &act).unwrap();
+        assert_eq!(a.scores.len(), b.scores.len());
+        for (x, y) in a.scores.iter().zip(&b.scores) {
+            assert!((x - y).abs() <= 1e-3 * y.abs().max(1.0), "{x} vs {y}");
+        }
+        for (x, y) in a.stats.iter().zip(&b.stats) {
+            assert!((x - y).abs() <= 1e-2 * y.abs().max(1.0), "stats {x} vs {y}");
+        }
+        assert!((a.l_r - b.l_r).abs() < 1e-5, "l_r {} vs {}", a.l_r, b.l_r);
+    }
+}
+
+#[test]
+fn cluster_state_lr_is_papers_formula() {
+    let Some(mut xla) = xla() else { return };
+    // 3800 of 4000 servers long-occupied -> l_r = 0.95 exactly (the
+    // paper's threshold scenario).
+    let n = 4000;
+    let rw = vec![1.0f32; n];
+    let mut lc = vec![1.0f32; n];
+    for slot in lc.iter_mut().skip(3800) {
+        *slot = 0.0;
+    }
+    let ql = vec![0.0f32; n];
+    let act = vec![1.0f32; n];
+    let out = xla.cluster_state(&rw, &lc, &ql, &act).unwrap();
+    assert!((out.l_r - 0.95).abs() < 1e-6, "l_r = {}", out.l_r);
+}
+
+#[test]
+fn concurrency_matches_native_with_chunking() {
+    let Some(mut xla) = xla() else { return };
+    let mut native = NativeAnalytics;
+    let mut rng = Rng::new(2);
+    // 40k tasks forces multi-chunk streaming (TASK_CHUNK = 16384).
+    let n = 40_000;
+    let starts: Vec<f32> = (0..n).map(|_| (rng.f64() * 10_000.0) as f32).collect();
+    let ends: Vec<f32> =
+        starts.iter().map(|&s| s + (rng.exponential(300.0) as f32)).collect();
+    let times: Vec<f32> = (0..512).map(|i| i as f32 * 20.0).collect();
+    let a = xla.concurrency(&starts, &ends, &times).unwrap();
+    let b = native.concurrency(&starts, &ends, &times).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 0.5, "{x} vs {y}"); // exact counts in f32
+    }
+}
+
+#[test]
+fn delay_cdf_matches_native_with_chunking() {
+    let Some(mut xla) = xla() else { return };
+    let mut native = NativeAnalytics;
+    let mut rng = Rng::new(3);
+    let n = 50_000; // multi-chunk (DELAY_CHUNK = 16384)
+    let delays: Vec<f32> = (0..n).map(|_| rng.exponential(200.0) as f32).collect();
+    let max = delays.iter().copied().fold(0.0f32, f32::max);
+    let edges: Vec<f32> = (0..512).map(|i| max * i as f32 / 511.0).collect();
+    let (ca, cdfa) = xla.delay_cdf(&delays, &edges).unwrap();
+    let (cb, cdfb) = native.delay_cdf(&delays, &edges).unwrap();
+    for (x, y) in ca.iter().zip(&cb) {
+        assert!((x - y).abs() < 0.5, "counts {x} vs {y}");
+    }
+    for (x, y) in cdfa.iter().zip(&cdfb) {
+        assert!((x - y).abs() < 1e-4, "cdf {x} vs {y}");
+    }
+    assert!((cdfa.last().unwrap() - 1.0).abs() < 1e-4);
+}
+
+#[test]
+fn lr_forecast_matches_native() {
+    let Some(mut xla) = xla() else { return };
+    let mut native = NativeAnalytics;
+    let mut rng = Rng::new(4);
+    let w = cloudcoaster::runtime::artifacts::FORECAST_WINDOW;
+    for h in [0.0f32, 2.0, 16.0] {
+        let hist: Vec<f32> = (0..w).map(|_| rng.f64() as f32).collect();
+        let (fa, la, sa) = xla.lr_forecast(&hist, h).unwrap();
+        let (fb, lb, sb) = native.lr_forecast(&hist, h).unwrap();
+        assert!((fa - fb).abs() < 1e-4, "forecast {fa} vs {fb}");
+        assert!((la - lb).abs() < 1e-4, "level {la} vs {lb}");
+        assert!((sa - sb).abs() < 1e-4, "slope {sa} vs {sb}");
+        assert!((0.0..=1.0).contains(&fa));
+    }
+}
+
+#[test]
+fn lr_forecast_extrapolates_ramp() {
+    let Some(mut xla) = xla() else { return };
+    let w = cloudcoaster::runtime::artifacts::FORECAST_WINDOW;
+    // Linear climb toward crowding: forecast ahead must exceed the last
+    // sample — that's the pre-provisioning signal.
+    let hist: Vec<f32> = (0..w).map(|k| 0.5 + 0.3 * k as f32 / w as f32).collect();
+    let (forecast, _, slope) = xla.lr_forecast(&hist, 8.0).unwrap();
+    assert!(slope > 0.0);
+    assert!(forecast > *hist.last().unwrap(), "{forecast} <= {}", hist.last().unwrap());
+}
+
+#[test]
+fn xla_runs_on_cpu_pjrt() {
+    let Some(xla) = xla() else { return };
+    assert!(xla.platform().to_lowercase().contains("cpu") || !xla.platform().is_empty());
+}
