@@ -23,7 +23,7 @@ use cloudcoaster::coordinator::config::ExperimentConfig;
 use cloudcoaster::coordinator::report::{
     fig3_cdf_csv, fig3_markdown, summary_line, table1_markdown, workload_summary,
 };
-use cloudcoaster::coordinator::sweep::paper_sweep;
+use cloudcoaster::coordinator::sweep::{paper_points, run_sweep_parallel};
 
 fn main() -> Result<()> {
     let what = std::env::args().nth(1).unwrap_or_else(|| "all".to_string());
@@ -32,8 +32,12 @@ fn main() -> Result<()> {
     println!("workload: {}", workload_summary(&cfg)?);
 
     let wall = std::time::Instant::now();
-    let reports = paper_sweep(&cfg, &[1.0, 2.0, 3.0])?;
-    println!("\n4 simulations in {:.1}s:", wall.elapsed().as_secs_f64());
+    let threads = cloudcoaster::coordinator::sweep::default_threads();
+    let reports = run_sweep_parallel(&cfg, &paper_points(&cfg, &[1.0, 2.0, 3.0]), threads)?;
+    println!(
+        "\n4 simulations in {:.1}s on {threads} threads:",
+        wall.elapsed().as_secs_f64()
+    );
     for rep in &reports {
         println!("  {}", summary_line(rep));
     }

@@ -7,9 +7,13 @@
 
 use anyhow::Result;
 
+use cloudcoaster::cluster::Cluster;
 use cloudcoaster::coordinator::config::{ExperimentConfig, SchedulerKind, WorkloadSource};
 use cloudcoaster::coordinator::report::{build_workload, run_experiment_on, summary_line};
+use cloudcoaster::metrics::Recorder;
 use cloudcoaster::runtime::AnalyticsEngine;
+use cloudcoaster::sched::Hybrid;
+use cloudcoaster::sim::{SchedulerComponent, SnapshotSampler, World};
 use cloudcoaster::trace::synth::YahooLikeParams;
 use cloudcoaster::trace::TraceStats;
 
@@ -61,6 +65,25 @@ fn main() -> Result<()> {
         cc.avg_transients,
         cc.r_normalized_avg,
         cfg.short_partition / 2,
+    );
+
+    // Custom-scenario composition: the same simulation as a `World` with
+    // hand-picked components — here an Eagle run with *no* work stealer
+    // wired in, something that used to require a runner code change.
+    let sim_cfg = baseline_cfg.to_sim_config();
+    let mut sched = Hybrid::eagle(2.0);
+    let cluster = Cluster::new(sim_cfg.n_general, sim_cfg.n_short_reserved, sim_cfg.queue_policy);
+    let mut world = World::new(&workload, cluster, Recorder::new(1.0), sim_cfg.seed);
+    world.add_component(Box::new(SnapshotSampler::new(sim_cfg.snapshot_interval)));
+    world.add_component(Box::new(SchedulerComponent::new(&mut sched)));
+    world.run();
+    println!(
+        "\ncustom world (eagle, stealing disabled): {} tasks in {} events, \
+         mean short delay {:.1}s (vs {:.1}s with stealing)",
+        world.rec.tasks_finished,
+        world.engine.processed(),
+        world.rec.short_delays.mean(),
+        baseline.short_delay.mean,
     );
     Ok(())
 }

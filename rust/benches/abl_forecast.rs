@@ -9,11 +9,12 @@
 mod bench_common;
 
 use cloudcoaster::benchkit::bench;
-use cloudcoaster::coordinator::sweep::forecast_sweep;
+use cloudcoaster::coordinator::sweep::{forecast_points, forecast_sweep, run_sweep_parallel};
 
 fn main() {
     let base = bench_common::bench_base();
-    let reports = forecast_sweep(&base).unwrap();
+    let threads = bench_common::default_threads();
+    let reports = run_sweep_parallel(&base, &forecast_points(&base), threads).unwrap();
     println!("== Ablation: reactive vs predictive resizing (bench scale) ==");
     println!(
         "{:>24} {:>12} {:>12} {:>14} {:>11}",

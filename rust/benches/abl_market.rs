@@ -9,12 +9,13 @@
 mod bench_common;
 
 use cloudcoaster::benchkit::bench;
-use cloudcoaster::coordinator::sweep::bid_sweep;
+use cloudcoaster::coordinator::sweep::{bid_points, bid_sweep, run_sweep_parallel};
 
 fn main() {
     let base = bench_common::bench_base();
+    let threads = bench_common::default_threads();
     let bids = [None, Some(2.0), Some(0.50), Some(0.35)];
-    let reports = bid_sweep(&base, &bids).unwrap();
+    let reports = run_sweep_parallel(&base, &bid_points(&base, &bids), threads).unwrap();
     println!("== Ablation: spot bid sweep (bench scale) ==");
     println!(
         "{:>12} {:>12} {:>12} {:>10} {:>12} {:>12}",

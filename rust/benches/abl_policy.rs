@@ -8,11 +8,12 @@
 mod bench_common;
 
 use cloudcoaster::benchkit::bench;
-use cloudcoaster::coordinator::sweep::policy_sweep;
+use cloudcoaster::coordinator::sweep::{policy_points, policy_sweep, run_sweep_parallel};
 
 fn main() {
     let base = bench_common::bench_base();
-    let reports = policy_sweep(&base).unwrap();
+    let threads = bench_common::default_threads();
+    let reports = run_sweep_parallel(&base, &policy_points(&base), threads).unwrap();
     println!("== Ablation: resize-policy sweep (bench scale) ==");
     println!(
         "{:>28} {:>12} {:>12} {:>12} {:>11}",

@@ -8,12 +8,13 @@
 mod bench_common;
 
 use cloudcoaster::benchkit::bench;
-use cloudcoaster::coordinator::sweep::revocation_sweep;
+use cloudcoaster::coordinator::sweep::{revocation_points, revocation_sweep, run_sweep_parallel};
 
 fn main() {
     let base = bench_common::bench_base();
+    let threads = bench_common::default_threads();
     let mttfs = [None, Some(4.0 * 3600.0), Some(3600.0)];
-    let reports = revocation_sweep(&base, &mttfs).unwrap();
+    let reports = run_sweep_parallel(&base, &revocation_points(&base, &mttfs), threads).unwrap();
     println!("== Ablation: revocation MTTF sweep (bench scale) ==");
     println!(
         "{:>12} {:>12} {:>12} {:>10} {:>14}",

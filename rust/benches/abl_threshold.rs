@@ -7,12 +7,14 @@
 mod bench_common;
 
 use cloudcoaster::benchkit::bench;
-use cloudcoaster::coordinator::sweep::threshold_sweep;
+use cloudcoaster::coordinator::sweep::{run_sweep_parallel, threshold_points, threshold_sweep};
 
 fn main() {
     let base = bench_common::bench_base();
+    let threads = bench_common::default_threads();
     let thresholds = [0.5, 0.75, 0.9, 0.95, 0.99];
-    let reports = threshold_sweep(&base, &thresholds).unwrap();
+    let reports =
+        run_sweep_parallel(&base, &threshold_points(&base, &thresholds), threads).unwrap();
     println!("== Ablation: L_r^T sweep (bench scale) ==");
     println!(
         "{:>10} {:>12} {:>12} {:>14} {:>12}",

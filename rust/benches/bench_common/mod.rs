@@ -7,6 +7,13 @@
 use cloudcoaster::coordinator::config::{ExperimentConfig, WorkloadSource};
 use cloudcoaster::trace::synth::YahooLikeParams;
 
+/// Worker threads for grid fan-out. (`allow(dead_code)`: each bench
+/// binary compiles this module independently and not all of them sweep.)
+#[allow(dead_code)]
+pub fn default_threads() -> usize {
+    cloudcoaster::coordinator::sweep::default_threads()
+}
+
 pub fn bench_base() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_defaults();
     cfg.cluster_size = 1000;

@@ -1,0 +1,150 @@
+//! Before/after micro-benchmark for the PoolIndex + parallel-sweep
+//! refactor, recorded to `BENCH_refactor.json` at the repo root so the
+//! perf trajectory has a data point per run.
+//!
+//! Measures:
+//! * indexed `least_loaded_general` / `least_loaded_short_reserved`
+//!   queries vs the naive linear scans they replaced ("before" is the
+//!   scan, re-implemented here verbatim);
+//! * a paper-grid sweep executed serially vs fanned out with
+//!   `run_sweep_parallel` across all cores.
+//!
+//! `cargo bench --offline --bench refactor_perf`
+
+mod bench_common;
+
+use cloudcoaster::benchkit::{bench, black_box, BenchResult};
+use cloudcoaster::cluster::{Cluster, QueuePolicy};
+use cloudcoaster::coordinator::sweep::{paper_points, run_sweep_parallel};
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::sim::{Engine, Rng};
+use cloudcoaster::util::{JobId, ServerId};
+
+/// The pre-refactor short-pool scan (what `least_loaded_short_ondemand`
+/// and `replace_orphans` did per placement).
+fn naive_short_scan(cluster: &Cluster) -> Option<ServerId> {
+    cluster
+        .short_reserved
+        .iter()
+        .copied()
+        .filter(|&s| cluster.server(s).accepting())
+        .min_by(|&a, &b| {
+            cluster.server(a).est_work.total_cmp(&cluster.server(b).est_work)
+        })
+}
+
+/// The pre-refactor general-pool scan (what a tree-less least-loaded
+/// placement costs at paper scale).
+fn naive_general_scan(cluster: &Cluster) -> ServerId {
+    *cluster
+        .general
+        .iter()
+        .min_by(|&&a, &&b| cluster.server(a).est_work.total_cmp(&cluster.server(b).est_work))
+        .unwrap()
+}
+
+fn loaded_cluster(n_general: usize, n_short: usize) -> (Cluster, Engine, Recorder) {
+    let mut cluster = Cluster::new(n_general, n_short, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(3.0);
+    let mut rng = Rng::new(7);
+    for i in 0..(n_general + n_short) * 2 {
+        let sid = ServerId((i % (n_general + n_short)) as u32);
+        let t = cluster.add_task(JobId(0), 1.0 + rng.f64() * 100.0, false, 0.0);
+        cluster.enqueue(t, sid, &mut engine, &mut rec);
+    }
+    (cluster, engine, rec)
+}
+
+fn json_entry(name: &str, r: &BenchResult) -> String {
+    format!(
+        "    {{\"name\": \"{name}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \"std_ns\": {:.0}, \"n\": {}}}",
+        r.median_ns(),
+        r.mean_ns(),
+        r.std_ns(),
+        r.samples_ns.len()
+    )
+}
+
+fn main() {
+    let mut entries: Vec<String> = Vec::new();
+    let iters = 5000u64;
+
+    // ---- placement queries: indexed vs naive scan -------------------
+    {
+        let (mut cluster, mut engine, mut rec) = loaded_cluster(3920, 80);
+
+        let r = bench("refactor/least_loaded_general_indexed_x5000", 2, 10, || {
+            for _ in 0..iters {
+                black_box(cluster.least_loaded_general());
+            }
+        });
+        entries.push(json_entry("least_loaded_general_indexed", &r));
+
+        let r = bench("refactor/least_loaded_general_scan_x5000", 2, 10, || {
+            for _ in 0..iters {
+                black_box(naive_general_scan(&cluster));
+            }
+        });
+        entries.push(json_entry("least_loaded_general_scan_before", &r));
+
+        let r = bench("refactor/short_pool_indexed_x5000", 2, 10, || {
+            for _ in 0..iters {
+                black_box(cluster.least_loaded_short_reserved());
+            }
+        });
+        entries.push(json_entry("short_pool_indexed", &r));
+
+        let r = bench("refactor/short_pool_scan_x5000", 2, 10, || {
+            for _ in 0..iters {
+                black_box(naive_short_scan(&cluster));
+            }
+        });
+        entries.push(json_entry("short_pool_scan_before", &r));
+
+        // Mixed query+update churn (placement hot loop shape).
+        let r = bench("refactor/indexed_query_update_x5000", 2, 10, || {
+            for _ in 0..iters {
+                let sid = cluster.least_loaded_general();
+                let t = cluster.add_task(JobId(1), 1.0, false, engine.now());
+                cluster.enqueue(t, sid, &mut engine, &mut rec);
+                black_box(sid);
+            }
+        });
+        entries.push(json_entry("indexed_query_update_churn", &r));
+    }
+
+    // ---- sweep: serial vs parallel ----------------------------------
+    let mut base = bench_common::bench_base();
+    // Shrink to keep the bench under a minute while preserving dynamics.
+    if let cloudcoaster::coordinator::config::WorkloadSource::YahooLike(p) =
+        &mut base.workload
+    {
+        p.horizon = 2.0 * 3600.0;
+    }
+    let points = paper_points(&base, &[1.0, 2.0, 3.0]);
+    let threads = bench_common::default_threads();
+
+    let serial = bench("refactor/sweep_4runs_serial", 0, 3, || {
+        let _ = run_sweep_parallel(&base, &points, 1).unwrap();
+    });
+    entries.push(json_entry("sweep_4runs_serial", &serial));
+
+    let parallel = bench(&format!("refactor/sweep_4runs_{threads}threads"), 0, 3, || {
+        let _ = run_sweep_parallel(&base, &points, threads).unwrap();
+    });
+    entries.push(json_entry("sweep_4runs_parallel", &parallel));
+
+    let speedup = serial.median_ns() / parallel.median_ns().max(1.0);
+    println!("\nsweep parallel speedup: {speedup:.2}x on {threads} threads");
+
+    // ---- record ------------------------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"refactor_perf\",\n  \"threads\": {threads},\n  \
+         \"sweep_parallel_speedup\": {speedup:.3},\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_refactor.json");
+    std::fs::write(out, &json).expect("write BENCH_refactor.json");
+    println!("wrote {out}");
+}

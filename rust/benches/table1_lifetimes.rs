@@ -6,8 +6,8 @@
 mod bench_common;
 
 use cloudcoaster::benchkit::bench;
-use cloudcoaster::coordinator::sweep::paper_sweep;
 use cloudcoaster::coordinator::report::table1_markdown;
+use cloudcoaster::coordinator::sweep::{paper_points, paper_sweep, run_sweep_parallel};
 
 fn main() {
     let base = bench_common::bench_base();
@@ -26,7 +26,12 @@ fn main() {
         );
     }
 
-    bench("table1/full_sweep_4_runs", 0, 3, || {
+    bench("table1/full_sweep_4_runs_serial", 0, 3, || {
         let _ = paper_sweep(&base, &[1.0, 2.0, 3.0]).unwrap();
+    });
+    let threads = bench_common::default_threads();
+    let points = paper_points(&base, &[1.0, 2.0, 3.0]);
+    bench(&format!("table1/full_sweep_4_runs_{threads}threads"), 0, 3, || {
+        let _ = run_sweep_parallel(&base, &points, threads).unwrap();
     });
 }

@@ -12,10 +12,12 @@
 //! * a server's `running` task is always in state `Running` with
 //!   `ran_on == server`.
 
-use crate::cluster::{Pool, QueuePolicy, Server, ServerKind, ServerState, Task, TaskState};
+use crate::cluster::{
+    Pool, PoolIndex, QueuePolicy, Server, ServerKind, ServerState, Task, TaskState,
+};
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event};
-use crate::util::{JobId, MinTree, ServerId, TaskId, Time};
+use crate::util::{JobId, ServerId, TaskId, Time};
 
 /// Full simulated-cluster state.
 pub struct Cluster {
@@ -32,9 +34,9 @@ pub struct Cluster {
     pub short_reserved: Vec<ServerId>,
     /// Active transient servers (dynamic short-only partition).
     pub transient_pool: Vec<ServerId>,
-    /// Argmin index over general-partition `est_work` — O(log N) exact
-    /// least-loaded placement for the centralized long-job scheduler.
-    gen_tree: MinTree,
+    /// Per-pool argmin indexes (general / short-reserved / transient) —
+    /// O(log N) exact least-loaded queries for every placement path.
+    index: PoolIndex,
 }
 
 impl Cluster {
@@ -63,17 +65,25 @@ impl Cluster {
             general,
             short_reserved,
             transient_pool: Vec::new(),
-            gen_tree: MinTree::new(n_general.max(1)),
+            index: PoolIndex::new(n_general, n_short_reserved),
         }
     }
 
-    /// Keep the general-partition argmin tree in sync after an `est_work`
-    /// change. No-op for servers outside the general prefix.
+    /// Keep the per-pool argmin indexes in sync after any load change on
+    /// `sid` (est_work, queue depth, or running slot).
     #[inline]
-    fn sync_tree(&mut self, sid: ServerId) {
-        let idx = sid.index();
-        if idx < self.general.len() {
-            self.gen_tree.update(idx, self.servers[idx].est_work);
+    fn sync_index(&mut self, sid: ServerId) {
+        let (pool, est_work, depth) = {
+            let s = &self.servers[sid.index()];
+            (s.pool, s.est_work, s.depth() as u32)
+        };
+        match pool {
+            Pool::General => self.index.update_general(sid.index(), est_work),
+            Pool::ShortReserved => {
+                self.index.update_short(sid.index() - self.general.len(), est_work)
+            }
+            // No-op unless the server is indexed (i.e. Active).
+            Pool::TransientPool => self.index.update_transient(sid, (depth, est_work)),
         }
     }
 
@@ -81,7 +91,30 @@ impl Cluster {
     /// centralized scheduler's placement target for long tasks.
     #[inline]
     pub fn least_loaded_general(&self) -> ServerId {
-        self.general[self.gen_tree.argmin()]
+        let slot = self.index.least_loaded_general_slot().expect("empty general partition");
+        self.general[slot]
+    }
+
+    /// The least-loaded on-demand short-partition server (always
+    /// accepting — on-demand servers never drain). `None` only when the
+    /// short partition has size zero. The §3.3 duplication target and
+    /// the revocation-orphan fallback.
+    #[inline]
+    pub fn least_loaded_short_reserved(&self) -> Option<ServerId> {
+        self.index.least_loaded_short_slot().map(|slot| self.short_reserved[slot])
+    }
+
+    /// The Active transient server minimizing `(depth, est_work)` — the
+    /// transient manager's drain victim (fastest to free).
+    #[inline]
+    pub fn transient_drain_victim(&self) -> Option<ServerId> {
+        self.index.transient_argmin()
+    }
+
+    /// Read-only view of the per-pool load indexes (tests, tooling).
+    #[inline]
+    pub fn pool_index(&self) -> &PoolIndex {
+        &self.index
     }
 
     // ------------------------------------------------------------ queries
@@ -161,7 +194,7 @@ impl Cluster {
                 self.n_long_servers += 1;
             }
         }
-        self.sync_tree(server_id);
+        self.sync_index(server_id);
         if self.servers[server_id.index()].running.is_none() {
             self.try_start_next(server_id, engine, rec);
         }
@@ -195,7 +228,11 @@ impl Cluster {
                 t.remove_location(server_id);
                 rec.stale_copies_skipped += 1;
             }
-            let Some(idx) = idx else { return };
+            let Some(idx) = idx else {
+                // Pruning may have shortened the queue — resync depth.
+                self.sync_index(server_id);
+                return;
+            };
             let server = &mut self.servers[server_id.index()];
             let task_id = server.queue.remove(idx).expect("index from select_next");
             let task = &mut self.tasks[task_id.index()];
@@ -228,8 +265,9 @@ impl Cluster {
             if let Some(other_sid) = other {
                 let o = &mut self.servers[other_sid.index()];
                 o.est_work = (o.est_work - dur).max(0.0);
-                self.sync_tree(other_sid);
+                self.sync_index(other_sid);
             }
+            self.sync_index(server_id);
             return;
         }
     }
@@ -265,7 +303,7 @@ impl Cluster {
             }
         }
         rec.tasks_finished += 1;
-        self.sync_tree(server_id);
+        self.sync_index(server_id);
         self.try_start_next(server_id, engine, rec);
         let server = &self.servers[server_id.index()];
         server.state == ServerState::Draining && server.is_idle()
@@ -317,7 +355,7 @@ impl Cluster {
             let server = &mut self.servers[victim.index()];
             server.est_work = (server.est_work - freed).max(0.0);
         }
-        self.sync_tree(victim);
+        self.sync_index(victim);
         let n = stolen.len();
         for tid in stolen {
             self.enqueue(tid, thief, engine, rec);
@@ -348,13 +386,18 @@ impl Cluster {
             .count()
     }
 
-    /// Provisioning finished: the server joins the dynamic short pool.
+    /// Provisioning finished: the server joins the dynamic short pool
+    /// (and the transient load index, in ready order).
     pub fn transient_ready(&mut self, id: ServerId, now: Time, rec: &mut Recorder) {
-        let server = &mut self.servers[id.index()];
-        debug_assert_eq!(server.state, ServerState::Provisioning);
-        server.state = ServerState::Active;
-        server.active_at = now;
+        let key = {
+            let server = &mut self.servers[id.index()];
+            debug_assert_eq!(server.state, ServerState::Provisioning);
+            server.state = ServerState::Active;
+            server.active_at = now;
+            (server.depth() as u32, server.est_work)
+        };
         self.transient_pool.push(id);
+        self.index.insert_transient(id, key);
         self.n_total += 1;
         rec.cost.transient_up(now);
     }
@@ -366,8 +409,9 @@ impl Cluster {
         debug_assert_eq!(server.state, ServerState::Active);
         debug_assert_eq!(server.kind, ServerKind::Transient);
         server.state = ServerState::Draining;
-        // Remove from the probe-candidate pool immediately.
+        // Remove from the probe-candidate pool and load index immediately.
         self.transient_pool.retain(|&s| s != id);
+        self.index.remove_transient(id);
         self.servers[id.index()].is_idle()
     }
 
@@ -381,9 +425,11 @@ impl Cluster {
         }
         server.state = ServerState::Retired;
         server.retired_at = now;
+        let lifetime = now - server.active_at;
         self.transient_pool.retain(|&s| s != id);
+        self.index.remove_transient(id); // no-op if drain already removed it
         self.n_total -= 1;
-        rec.cost.transient_down(now, now - server.active_at);
+        rec.cost.transient_down(now, lifetime);
     }
 
     /// Revoke a transient server immediately (provider reclaim, §3.3).
@@ -424,7 +470,7 @@ impl Cluster {
                 let locs: Vec<ServerId> = task.placed_on.iter().flatten().copied().collect();
                 for loc in locs {
                     self.servers[loc.index()].est_work += dur;
-                    self.sync_tree(loc);
+                    self.sync_index(loc);
                 }
             } else {
                 orphans.push(tid);
@@ -455,9 +501,33 @@ impl Cluster {
         for (i, s) in self.servers.iter().enumerate() {
             if i < self.general.len() {
                 assert!(
-                    (self.gen_tree.key(i) - s.est_work).abs() < 1e-9,
-                    "gen_tree drift on server {i}"
+                    (self.index.general_key(i) - s.est_work).abs() < 1e-9,
+                    "general index drift on server {i}"
                 );
+            } else if i < self.general.len() + self.short_reserved.len() {
+                assert!(
+                    (self.index.short_key(i - self.general.len()) - s.est_work).abs() < 1e-9,
+                    "short index drift on server {i}"
+                );
+            }
+            if s.kind == ServerKind::Transient {
+                // Indexed iff Active; key mirrors (depth, est_work).
+                let indexed = self.index.contains_transient(s.id);
+                assert_eq!(
+                    indexed,
+                    s.state == ServerState::Active,
+                    "transient index membership drift on {:?} ({:?})",
+                    s.id,
+                    s.state
+                );
+                if let Some((depth, est)) = self.index.transient_key(s.id) {
+                    assert_eq!(depth as usize, s.depth(), "transient depth drift on {:?}", s.id);
+                    assert!(
+                        (est - s.est_work).abs() < 1e-9,
+                        "transient est_work drift on {:?}",
+                        s.id
+                    );
+                }
             }
             if matches!(s.state, ServerState::Active | ServerState::Draining) {
                 n_total += 1;
@@ -494,6 +564,11 @@ impl Cluster {
         }
         assert_eq!(n_long, self.n_long_servers, "N_long drift");
         assert_eq!(n_total, self.n_total, "N_total drift");
+        assert_eq!(
+            self.index.transient_len(),
+            self.transient_pool.len(),
+            "transient index / pool size drift"
+        );
         let lr = self.long_load_ratio();
         assert!((0.0..=1.0).contains(&lr), "l_r out of [0,1]: {lr}");
     }

@@ -1,0 +1,283 @@
+//! Per-pool least-loaded indexes.
+//!
+//! One [`MinTree`]-backed argmin index per partition (§3.1's three pools:
+//! general, on-demand short-only, transient), kept incrementally up to
+//! date by the cluster's mutators. Every least-loaded query the
+//! schedulers and the transient manager used to answer with an O(n)
+//! scan is O(log n) here, with tie-breaking identical to the scans they
+//! replace (`Iterator::min_by` first-minimal == lowest slot index):
+//!
+//! * **general** — keyed by `est_work`; slot = position in
+//!   `Cluster::general` (== the server id for the id-compact prefix).
+//!   Serves the centralized long-task placement and the degenerate
+//!   probe fallbacks.
+//! * **short-reserved** — keyed by `est_work`; slot = position in
+//!   `Cluster::short_reserved`. Serves the §3.3 on-demand duplication
+//!   target and revocation-orphan replacement.
+//! * **transient** — keyed by lexicographic `(depth, est_work)`; slots
+//!   are assigned append-only in `TransientReady` order and tombstoned
+//!   on drain/retire (never reused), so the argmin's lowest-slot
+//!   tie-break reproduces the manager's first-minimal scan over
+//!   `transient_pool` exactly. Serves the drain-victim query.
+
+use crate::util::{IndexKey, MinTree, ServerId};
+
+const NO_SLOT: u32 = u32::MAX;
+
+/// Transient-tree key: `(queue depth, est_work)` — "fastest to free".
+pub type TransientKey = (u32, f64);
+
+/// The cluster's three per-pool argmin indexes.
+#[derive(Clone, Debug)]
+pub struct PoolIndex {
+    n_general: usize,
+    n_short: usize,
+    general: MinTree<f64>,
+    short: MinTree<f64>,
+    transient: MinTree<TransientKey>,
+    /// First transient server id (= n_general + n_short at construction).
+    t_base: usize,
+    /// `server_id.index() - t_base` -> slot in the transient tree.
+    t_slot: Vec<u32>,
+    /// slot -> server id (grows append-only with inserts).
+    t_server: Vec<ServerId>,
+    /// Occupied (non-tombstoned) transient slots.
+    t_len: usize,
+}
+
+impl PoolIndex {
+    pub fn new(n_general: usize, n_short: usize) -> Self {
+        PoolIndex {
+            n_general,
+            n_short,
+            // Live slots start at ZERO (an idle server has est_work 0);
+            // `.max(1)` keeps the tree non-empty for degenerate configs
+            // (queries are gated on the real pool size below).
+            general: MinTree::new(n_general.max(1)),
+            short: MinTree::new(n_short.max(1)),
+            transient: tombstoned_tree(8),
+            t_base: n_general + n_short,
+            t_slot: Vec::new(),
+            t_server: Vec::new(),
+            t_len: 0,
+        }
+    }
+
+    // ------------------------------------------------------------ general
+
+    #[inline]
+    pub fn update_general(&mut self, slot: usize, est_work: f64) {
+        debug_assert!(slot < self.n_general);
+        self.general.update(slot, est_work);
+    }
+
+    /// Slot (== position in `Cluster::general`) of the least-loaded
+    /// general server. `None` only for an empty general partition.
+    #[inline]
+    pub fn least_loaded_general_slot(&self) -> Option<usize> {
+        (self.n_general > 0).then(|| self.general.argmin())
+    }
+
+    #[inline]
+    pub fn general_key(&self, slot: usize) -> f64 {
+        self.general.key(slot)
+    }
+
+    // ------------------------------------------------------ short-reserved
+
+    #[inline]
+    pub fn update_short(&mut self, slot: usize, est_work: f64) {
+        debug_assert!(slot < self.n_short);
+        self.short.update(slot, est_work);
+    }
+
+    /// Slot (== position in `Cluster::short_reserved`) of the
+    /// least-loaded on-demand short server.
+    #[inline]
+    pub fn least_loaded_short_slot(&self) -> Option<usize> {
+        (self.n_short > 0).then(|| self.short.argmin())
+    }
+
+    #[inline]
+    pub fn short_key(&self, slot: usize) -> f64 {
+        self.short.key(slot)
+    }
+
+    // ----------------------------------------------------------- transient
+
+    /// Register a transient server that just became Active.
+    pub fn insert_transient(&mut self, sid: ServerId, key: TransientKey) {
+        let rel = sid.index() - self.t_base;
+        if rel >= self.t_slot.len() {
+            self.t_slot.resize(rel + 1, NO_SLOT);
+        }
+        debug_assert_eq!(self.t_slot[rel], NO_SLOT, "double insert of {sid:?}");
+        let slot = self.t_server.len();
+        if slot == self.transient.len() {
+            self.grow_transient();
+        }
+        self.t_slot[rel] = slot as u32;
+        self.t_server.push(sid);
+        self.transient.update(slot, key);
+        self.t_len += 1;
+    }
+
+    /// Drop a transient server from the index (drain begun, retired or
+    /// revoked). Idempotent: the drain and retire paths may both call it.
+    pub fn remove_transient(&mut self, sid: ServerId) {
+        let Some(rel) = sid.index().checked_sub(self.t_base) else { return };
+        let Some(&slot) = self.t_slot.get(rel) else { return };
+        if slot == NO_SLOT {
+            return;
+        }
+        self.t_slot[rel] = NO_SLOT;
+        self.transient.update(slot as usize, TransientKey::MAX_KEY);
+        self.t_len -= 1;
+    }
+
+    /// Refresh a transient server's key; no-op if it is not indexed
+    /// (provisioning, draining or retired).
+    #[inline]
+    pub fn update_transient(&mut self, sid: ServerId, key: TransientKey) {
+        let Some(rel) = sid.index().checked_sub(self.t_base) else { return };
+        if let Some(&slot) = self.t_slot.get(rel) {
+            if slot != NO_SLOT {
+                self.transient.update(slot as usize, key);
+            }
+        }
+    }
+
+    /// Is this transient server currently indexed?
+    #[inline]
+    pub fn contains_transient(&self, sid: ServerId) -> bool {
+        sid.index()
+            .checked_sub(self.t_base)
+            .and_then(|rel| self.t_slot.get(rel))
+            .is_some_and(|&slot| slot != NO_SLOT)
+    }
+
+    /// Number of indexed (Active) transient servers.
+    #[inline]
+    pub fn transient_len(&self) -> usize {
+        self.t_len
+    }
+
+    /// The Active transient server minimizing `(depth, est_work)` — the
+    /// manager's drain victim ("fastest to free"). First-minimal in
+    /// `TransientReady` order on exact ties, like the scan it replaces.
+    #[inline]
+    pub fn transient_argmin(&self) -> Option<ServerId> {
+        (self.t_len > 0).then(|| self.t_server[self.transient.argmin()])
+    }
+
+    #[inline]
+    pub fn transient_key(&self, sid: ServerId) -> Option<TransientKey> {
+        let rel = sid.index().checked_sub(self.t_base)?;
+        let &slot = self.t_slot.get(rel)?;
+        (slot != NO_SLOT).then(|| self.transient.key(slot as usize))
+    }
+
+    /// Double the transient tree, carrying over live keys and tombstones
+    /// (slot order — and therefore tie-breaking — is preserved).
+    fn grow_transient(&mut self) {
+        let old_cap = self.transient.len();
+        let mut bigger = tombstoned_tree(old_cap * 2);
+        for slot in 0..old_cap {
+            bigger.update(slot, self.transient.key(slot));
+        }
+        self.transient = bigger;
+    }
+}
+
+/// A tree whose every slot starts as a tombstone (MAX_KEY).
+fn tombstoned_tree(cap: usize) -> MinTree<TransientKey> {
+    let mut t = MinTree::new(cap.max(1));
+    for i in 0..t.len() {
+        t.update(i, TransientKey::MAX_KEY);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sid(i: usize) -> ServerId {
+        ServerId(i as u32)
+    }
+
+    #[test]
+    fn general_and_short_argmin() {
+        let mut idx = PoolIndex::new(4, 2);
+        assert_eq!(idx.least_loaded_general_slot(), Some(0)); // all zero -> first
+        idx.update_general(0, 10.0);
+        idx.update_general(1, 3.0);
+        idx.update_general(2, 7.0);
+        assert_eq!(idx.least_loaded_general_slot(), Some(3)); // still 0.0
+        idx.update_general(3, 4.0);
+        assert_eq!(idx.least_loaded_general_slot(), Some(1));
+        idx.update_short(0, 5.0);
+        assert_eq!(idx.least_loaded_short_slot(), Some(1));
+        idx.update_short(1, 2.0);
+        assert_eq!(idx.least_loaded_short_slot(), Some(1));
+    }
+
+    #[test]
+    fn empty_pools_answer_none() {
+        let idx = PoolIndex::new(2, 0);
+        assert_eq!(idx.least_loaded_short_slot(), None);
+        assert_eq!(idx.transient_argmin(), None);
+        let idx2 = PoolIndex::new(0, 0);
+        assert_eq!(idx2.least_loaded_general_slot(), None);
+    }
+
+    #[test]
+    fn transient_lifecycle_and_tiebreak() {
+        let mut idx = PoolIndex::new(3, 1); // transients start at id 4
+        idx.insert_transient(sid(4), (0, 0.0));
+        idx.insert_transient(sid(5), (0, 0.0));
+        idx.insert_transient(sid(6), (0, 0.0));
+        // Exact tie -> first in ready order.
+        assert_eq!(idx.transient_argmin(), Some(sid(4)));
+        idx.update_transient(sid(4), (2, 40.0));
+        idx.update_transient(sid(5), (1, 99.0));
+        idx.update_transient(sid(6), (1, 98.0));
+        // depth dominates est_work; 6 beats 5 on est_work.
+        assert_eq!(idx.transient_argmin(), Some(sid(6)));
+        idx.remove_transient(sid(6));
+        assert_eq!(idx.transient_argmin(), Some(sid(5)));
+        assert_eq!(idx.transient_len(), 2);
+        // Removal is idempotent; keys of removed servers are gone.
+        idx.remove_transient(sid(6));
+        assert_eq!(idx.transient_len(), 2);
+        assert_eq!(idx.transient_key(sid(6)), None);
+        assert!(!idx.contains_transient(sid(6)));
+        assert!(idx.contains_transient(sid(5)));
+        // Updates to removed servers are no-ops.
+        idx.update_transient(sid(6), (0, 0.0));
+        assert_eq!(idx.transient_argmin(), Some(sid(5)));
+    }
+
+    #[test]
+    fn transient_slots_are_never_reused() {
+        let mut idx = PoolIndex::new(1, 1); // transients start at id 2
+        for i in 0..40 {
+            idx.insert_transient(sid(2 + i), (0, i as f64));
+            if i % 2 == 0 {
+                idx.remove_transient(sid(2 + i));
+            }
+        }
+        assert_eq!(idx.transient_len(), 20);
+        // Lowest surviving (depth, est_work) is id 3 (est 1.0).
+        assert_eq!(idx.transient_argmin(), Some(sid(3)));
+        // Growth preserved every live key.
+        for i in 0..40 {
+            let key = idx.transient_key(sid(2 + i));
+            if i % 2 == 0 {
+                assert_eq!(key, None);
+            } else {
+                assert_eq!(key, Some((0, i as f64)));
+            }
+        }
+    }
+}

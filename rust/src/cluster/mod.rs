@@ -4,9 +4,11 @@
 
 #[allow(clippy::module_inception)]
 mod cluster;
+mod index;
 mod server;
 mod task;
 
 pub use cluster::Cluster;
+pub use index::{PoolIndex, TransientKey};
 pub use server::{Pool, QueuePolicy, Server, ServerKind, ServerState};
 pub use task::{Task, TaskState};

@@ -10,4 +10,5 @@ pub mod toml;
 
 pub use config::{ExperimentConfig, SchedulerKind, WorkloadSource};
 pub use report::{run_experiment, Report};
-pub use runner::{simulate, simulate_with, RunResult, SimConfig};
+pub use runner::{build_world, simulate, simulate_with, RunResult, SimConfig};
+pub use sweep::{run_grid, run_sweep_parallel, GridPoint};

@@ -1,16 +1,26 @@
-//! The simulation runner: drives the event loop over a workload, wiring
-//! the scheduler, the cluster, the transient manager and the metrics
-//! recorder together.
+//! The simulation runner: composes a [`World`] (engine + cluster +
+//! recorder + RNG streams) with the standard component wiring — snapshot
+//! sampler, optional transient manager, scheduler adapter, work stealer
+//! — and distills a [`RunResult`].
+//!
+//! The event loop itself lives in [`crate::sim::World`]; this module is
+//! pure wiring, so alternative scenarios (manager-less baselines, custom
+//! samplers, injected burst storms) are a different `add_component`
+//! sequence, not a different runner. Component dispatch order matters
+//! for determinism and mirrors the original monolithic loop: sampler →
+//! manager → scheduler → stealer.
 
 use std::time::Instant;
 
-use crate::cluster::{Cluster, QueuePolicy, ServerState};
+use crate::cluster::{Cluster, QueuePolicy};
 use crate::metrics::Recorder;
-use crate::sched::{SchedCtx, Scheduler};
-use crate::sim::{Engine, Event, Rng};
+use crate::sched::Scheduler;
+use crate::sim::{
+    SchedulerComponent, SnapshotSampler, TransientManagerComponent, WorkStealer, World,
+};
 use crate::trace::Workload;
-use crate::transient::{ManagerConfig, TransientManager};
-use crate::util::{JobId, TaskId, Time};
+use crate::transient::ManagerConfig;
+use crate::util::Time;
 
 /// Low-level simulation parameters (cluster geometry + hooks).
 #[derive(Clone, Debug)]
@@ -68,41 +78,55 @@ impl RunResult {
     }
 }
 
-/// Steal probes for a newly idle server: sample candidates from the
-/// short pools (where load-spike queues live) and the general partition,
-/// steal from the first victim with queued work.
-fn try_steal(
-    cluster: &mut Cluster,
-    thief: crate::util::ServerId,
+/// Build the standard component wiring for `cfg` on a fresh [`World`].
+///
+/// Exposed so custom scenarios can start from the canonical composition
+/// and add/replace components.
+pub fn build_world<'a>(
+    workload: &'a Workload,
+    scheduler: &'a mut (dyn Scheduler + 'a),
     cfg: &SimConfig,
-    rng: &mut Rng,
-    engine: &mut Engine,
-    rec: &mut Recorder,
-) {
-    // Long-hosting victims are fine: we only take their *short* tasks.
-    for probe in 0..cfg.steal_probes {
-        // Alternate between short pools and the general partition.
-        let victim = if probe % 2 == 0 {
-            let shorts = cluster.short_reserved.len() + cluster.transient_pool.len();
-            if shorts == 0 {
-                continue;
-            }
-            let k = rng.below(shorts as u64) as usize;
-            if k < cluster.short_reserved.len() {
-                cluster.short_reserved[k]
-            } else {
-                cluster.transient_pool[k - cluster.short_reserved.len()]
-            }
-        } else {
-            cluster.general[rng.below(cluster.general.len() as u64) as usize]
-        };
-        if cluster.server(victim).queue.is_empty() {
-            continue;
-        }
-        if cluster.steal_short_tasks(victim, thief, cfg.steal_batch, engine, rec) > 0 {
-            return;
-        }
+    analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
+) -> World<'a> {
+    let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
+    let cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
+    let rec = Recorder::new(r);
+    let mut world = World::new(workload, cluster, rec, cfg.seed);
+
+    // Snapshot sampler first: it records l_r before any same-event
+    // mutation and publishes the prewarm forecast the manager consumes.
+    let predictive = cfg.manager.as_ref().map(|m| m.predictive).unwrap_or(false);
+    if predictive {
+        let horizon_steps = cfg
+            .manager
+            .as_ref()
+            .map(|m| (m.market.provisioning_delay / cfg.snapshot_interval).ceil() as f32)
+            .unwrap_or(1.0);
+        world.add_component(Box::new(SnapshotSampler::predictive(
+            cfg.snapshot_interval,
+            horizon_steps,
+            analytics,
+        )));
+    } else {
+        world.add_component(Box::new(SnapshotSampler::new(cfg.snapshot_interval)));
     }
+
+    // Transient manager (market RNG stream forks with label 0x7A, after
+    // the scheduler stream's 0x5C — the original runner's fork order).
+    if let Some(mcfg) = cfg.manager.clone() {
+        let market_rng = world.fork_rng(0x7A);
+        world.add_component(Box::new(TransientManagerComponent::new(mcfg, market_rng)));
+    }
+
+    world.add_component(Box::new(SchedulerComponent::new(scheduler)));
+
+    if cfg.steal_probes > 0 {
+        world.add_component(Box::new(WorkStealer {
+            probes: cfg.steal_probes,
+            batch: cfg.steal_batch,
+        }));
+    }
+    world
 }
 
 /// Run `workload` under `scheduler` with the given config.
@@ -118,198 +142,26 @@ pub fn simulate(
 /// predictive-resizing path (the l_r forecast runs on the snapshot/epoch
 /// cadence through the AOT-compiled artifact when the manager has
 /// `predictive = true`).
-pub fn simulate_with(
-    workload: &Workload,
-    scheduler: &mut dyn Scheduler,
+pub fn simulate_with<'a>(
+    workload: &'a Workload,
+    scheduler: &'a mut (dyn Scheduler + 'a),
     cfg: &SimConfig,
-    mut analytics: Option<&mut dyn crate::runtime::Analytics>,
+    analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
 ) -> RunResult {
     let wall0 = Instant::now();
-    let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
-    let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
-    let mut engine = Engine::new();
-    let mut rec = Recorder::new(r);
-    let mut root_rng = Rng::new(cfg.seed);
-    let mut sched_rng = root_rng.fork(0x5C); // probe sampling stream
-    let mut manager = cfg
-        .manager
-        .clone()
-        .map(|m| TransientManager::new(m, root_rng.fork(0x7A)));
-
-    // Per-job bookkeeping for response-time metrics.
-    let mut job_remaining: Vec<u32> =
-        workload.jobs.iter().map(|j| j.num_tasks() as u32).collect();
-    let mut outstanding_tasks: u64 = workload.num_tasks() as u64;
-    let mut next_job = 0usize;
-    let mut task_ids: Vec<TaskId> = Vec::new();
-
-    // Predictive resizing state: l_r history ring + forecast horizon in
-    // snapshot steps.
-    let predictive = cfg.manager.as_ref().map(|m| m.predictive).unwrap_or(false);
-    let window = crate::runtime::artifacts::FORECAST_WINDOW;
-    let mut lr_history: Vec<f32> = Vec::with_capacity(window);
-    let horizon_steps = cfg
-        .manager
-        .as_ref()
-        .map(|m| (m.market.provisioning_delay / cfg.snapshot_interval).ceil() as f32)
-        .unwrap_or(1.0);
-
-    if !workload.jobs.is_empty() {
-        engine.schedule(workload.jobs[0].arrival, Event::JobArrival(JobId(0)));
-        engine.schedule(cfg.snapshot_interval, Event::Snapshot);
-    }
-
-    while let Some((now, event)) = engine.pop() {
-        // Did this event change long-task occupancy? (The paper's §3.2
-        // recalculation trigger.)
-        let mut long_event = false;
-
-        match event {
-            Event::JobArrival(jid) => {
-                let job = &workload.jobs[jid.index()];
-                task_ids.clear();
-                for &d in &job.task_durations {
-                    task_ids.push(cluster.add_task(job.id, d, job.is_long, now));
-                }
-                let mut ctx = SchedCtx {
-                    cluster: &mut cluster,
-                    engine: &mut engine,
-                    rec: &mut rec,
-                    rng: &mut sched_rng,
-                };
-                scheduler.place_job(job, &task_ids, &mut ctx);
-                long_event = job.is_long;
-                next_job = jid.index() + 1;
-                if next_job < workload.jobs.len() {
-                    engine.schedule(
-                        workload.jobs[next_job].arrival,
-                        Event::JobArrival(JobId(next_job as u32)),
-                    );
-                }
-            }
-            Event::TaskFinish { server, task } => {
-                // A revocation may have killed this execution after its
-                // finish event was scheduled (the task restarts elsewhere
-                // with a new finish event) — ignore the stale one.
-                let (is_long, jid) = {
-                    let t = cluster.task(task);
-                    if t.state != crate::cluster::TaskState::Running || t.ran_on != Some(server)
-                    {
-                        continue;
-                    }
-                    (t.is_long, t.job)
-                };
-                let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
-                if drained {
-                    cluster.retire(server, now, &mut rec);
-                } else if cfg.steal_probes > 0
-                    && cluster.server(server).is_idle()
-                    && cluster.server(server).accepting()
-                {
-                    // Hawk-lineage randomized stealing: the newly idle
-                    // server probes for a busy victim and takes a batch of
-                    // its queued shorts.
-                    try_steal(&mut cluster, server, cfg, &mut sched_rng, &mut engine, &mut rec);
-                }
-                outstanding_tasks -= 1;
-                let rem = &mut job_remaining[jid.index()];
-                *rem -= 1;
-                if *rem == 0 {
-                    let job = &workload.jobs[jid.index()];
-                    rec.job_finished(job.is_long, now - job.arrival);
-                }
-                long_event = is_long;
-            }
-            Event::TransientReady(sid) => {
-                if let Some(mgr) = manager.as_mut() {
-                    mgr.on_ready(sid, &mut cluster, &engine, &mut rec);
-                }
-            }
-            Event::RevocationWarning(sid) => {
-                if let Some(mgr) = manager.as_mut() {
-                    mgr.on_warning(sid, &mut cluster, &engine, &mut rec);
-                }
-            }
-            Event::Revoked(sid) => {
-                let state = cluster.server(sid).state;
-                if matches!(state, ServerState::Active | ServerState::Draining) {
-                    let orphans = cluster.revoke(sid, now, &mut rec);
-                    if !orphans.is_empty() {
-                        let mut ctx = SchedCtx {
-                            cluster: &mut cluster,
-                            engine: &mut engine,
-                            rec: &mut rec,
-                            rng: &mut sched_rng,
-                        };
-                        scheduler.replace_orphans(&orphans, &mut ctx);
-                    }
-                }
-            }
-            Event::DrainComplete(sid) => {
-                if cluster.server(sid).state == ServerState::Draining
-                    && cluster.server(sid).is_idle()
-                {
-                    cluster.retire(sid, now, &mut rec);
-                }
-            }
-            Event::Snapshot => {
-                let lr = cluster.long_load_ratio();
-                rec.snapshot(now, lr, cluster.transient_pool.len() as f64);
-                if predictive {
-                    if lr_history.len() == window {
-                        lr_history.rotate_left(1);
-                        lr_history.pop();
-                    }
-                    lr_history.push(lr as f32);
-                    if lr_history.len() == window {
-                        if let (Some(mgr), Some(eng)) = (manager.as_mut(), analytics.as_deref_mut())
-                        {
-                            if let Ok((forecast, _, _)) =
-                                eng.lr_forecast(&lr_history, horizon_steps)
-                            {
-                                mgr.prewarm(forecast as f64, &mut cluster, &mut engine, &mut rec);
-                            }
-                        }
-                    }
-                }
-                if outstanding_tasks > 0 || next_job < workload.jobs.len() {
-                    engine.schedule_after(cfg.snapshot_interval, Event::Snapshot);
-                }
-            }
-        }
-
-        if long_event {
-            if let Some(mgr) = manager.as_mut() {
-                mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
-            }
-        }
-    }
-
-    let end_time = engine.now();
-    // Close out lifetimes for transients still up at simulation end.
-    let live: Vec<_> = cluster
-        .servers
-        .iter()
-        .filter(|s| {
-            s.kind == crate::cluster::ServerKind::Transient
-                && matches!(s.state, ServerState::Active | ServerState::Draining)
-        })
-        .map(|s| s.id)
-        .collect();
-    for sid in live {
-        cluster.retire(sid, end_time, &mut rec);
-    }
-    debug_assert_eq!(outstanding_tasks, 0, "tasks lost by the simulation");
-    #[cfg(debug_assertions)]
-    cluster.check_invariants();
-
+    let name = scheduler.name().to_string();
+    let mut world = build_world(workload, scheduler, cfg, analytics);
+    world.run();
+    let manager_stats = world.component::<TransientManagerComponent>().map(|m| m.stats());
+    let end_time = world.engine.now();
+    let events = world.engine.processed();
     RunResult {
-        scheduler: scheduler.name().to_string(),
-        rec,
+        scheduler: name,
+        rec: world.rec,
         end_time,
-        events: engine.processed(),
+        events,
         wall_ms: wall0.elapsed().as_secs_f64() * 1000.0,
-        manager_stats: manager.map(|m| (m.adds, m.drains, m.failed_requests)),
+        manager_stats,
     }
 }
 
@@ -317,6 +169,7 @@ pub fn simulate_with(
 mod tests {
     use super::*;
     use crate::sched::Hybrid;
+    use crate::sim::Rng;
     use crate::trace::synth::{yahoo_like, YahooLikeParams};
     use crate::transient::Budget;
 
@@ -401,6 +254,24 @@ mod tests {
         cfg.manager = Some(mgr);
         let res = simulate(&w, &mut sched, &cfg);
         // Every task finishes exactly once even under heavy revocation.
+        assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
+    }
+
+    #[test]
+    fn manager_less_world_has_no_manager_stats() {
+        let w = small_workload(7);
+        let mut sched = Hybrid::eagle(2.0);
+        let res = simulate(&w, &mut sched, &small_cfg());
+        assert!(res.manager_stats.is_none());
+    }
+
+    #[test]
+    fn stealing_disabled_is_a_valid_wiring() {
+        let w = small_workload(11);
+        let mut cfg = small_cfg();
+        cfg.steal_probes = 0;
+        let mut sched = Hybrid::eagle(2.0);
+        let res = simulate(&w, &mut sched, &cfg);
         assert_eq!(res.rec.tasks_finished as usize, w.num_tasks());
     }
 }

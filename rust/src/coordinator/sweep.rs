@@ -1,152 +1,273 @@
 //! Parameter sweeps: the paper's evaluation grid (Baseline + r ∈ {1,2,3})
-//! and the ablation grids (threshold, revocation MTTF, shrink policy).
-//! One workload + one analytics engine are shared across the whole sweep
-//! so runs differ only in the swept parameter.
+//! and the ablation grids (threshold, revocation MTTF, shrink policy,
+//! market bid, forecast, scheduler family).
+//!
+//! All grids go through one generic driver: a named list of
+//! [`GridPoint`]s (config variants) executed over a single shared
+//! workload, either serially or fanned out across OS threads by
+//! [`run_sweep_parallel`]. Runs are embarrassingly parallel — every RNG
+//! stream forks off the per-run config seed, so every *simulation*
+//! field of a report (delays, CDFs, events, end times, transient
+//! counts) is bit-identical regardless of thread count; only the
+//! wall-clock fields (`wall_ms`, `events_per_sec`) vary run to run.
+//! Results are written slot-addressed so output order never depends on
+//! scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::coordinator::config::{ExperimentConfig, SchedulerKind};
-use crate::coordinator::report::{build_workload, run_experiment_on, Report};
+use crate::coordinator::report::{artifacts_dir, build_workload, run_experiment_on, Report};
 use crate::runtime::AnalyticsEngine;
+use crate::trace::Workload;
+
+/// Worker threads for grid fan-out: all cores (1 if undetectable).
+/// Shared by the CLI default, the benches and the examples.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One cell of a sweep grid: a report name plus the config to run.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub name: String,
+    pub cfg: ExperimentConfig,
+}
+
+impl GridPoint {
+    pub fn new(name: impl Into<String>, cfg: ExperimentConfig) -> Self {
+        GridPoint { name: name.into(), cfg }
+    }
+}
+
+/// Run a grid serially (thread count 1) — the generic driver every named
+/// sweep uses.
+pub fn run_grid(base: &ExperimentConfig, points: &[GridPoint]) -> Result<Vec<Report>> {
+    run_sweep_parallel(base, points, 1)
+}
+
+/// Run a grid across up to `threads` OS threads. The workload is built
+/// once from `base` and shared (read-only) by every run; each worker
+/// owns its analytics engine. Reports come back in grid order with all
+/// simulation fields identical to a serial run (wall-clock timing
+/// fields excepted).
+pub fn run_sweep_parallel(
+    base: &ExperimentConfig,
+    points: &[GridPoint],
+    threads: usize,
+) -> Result<Vec<Report>> {
+    let workload = build_workload(base)?;
+    run_points_on(&workload, points, threads)
+}
+
+/// Like [`run_sweep_parallel`] with a caller-supplied workload.
+pub fn run_points_on(
+    workload: &Workload,
+    points: &[GridPoint],
+    threads: usize,
+) -> Result<Vec<Report>> {
+    if points.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = threads.max(1).min(points.len());
+    if threads == 1 {
+        let mut analytics = AnalyticsEngine::auto(&artifacts_dir());
+        let mut reports = Vec::with_capacity(points.len());
+        for point in points {
+            let mut rep = run_experiment_on(&point.cfg, workload, analytics.as_dyn())?;
+            rep.name = point.name.clone();
+            reports.push(rep);
+        }
+        return Ok(reports);
+    }
+
+    // Work-stealing over point indices; slot-addressed results keep the
+    // output order independent of thread interleaving.
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<Report>>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut analytics = AnalyticsEngine::auto(&artifacts_dir());
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let point = &points[i];
+                    let rep =
+                        run_experiment_on(&point.cfg, workload, analytics.as_dyn()).map(
+                            |mut r| {
+                                r.name = point.name.clone();
+                                r
+                            },
+                        );
+                    *slots[i].lock().unwrap() = Some(rep);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every claimed slot"))
+        .collect()
+}
+
+// ------------------------------------------------------- grid builders
 
 /// The paper's §4 grid: Eagle baseline, then CloudCoaster at each r.
-pub fn paper_sweep(base: &ExperimentConfig, ratios: &[f64]) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-
+pub fn paper_points(base: &ExperimentConfig, ratios: &[f64]) -> Vec<GridPoint> {
+    let mut points = Vec::with_capacity(1 + ratios.len());
     let mut baseline = base.clone();
     baseline.scheduler = SchedulerKind::Eagle;
-    let mut rep = run_experiment_on(&baseline, &workload, analytics.as_dyn())?;
-    rep.name = "baseline(eagle)".to_string();
-    reports.push(rep);
-
+    points.push(GridPoint::new("baseline(eagle)", baseline));
     for &r in ratios {
         let mut cfg = base.clone();
         cfg.scheduler = SchedulerKind::CloudCoaster;
         cfg.r = r;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = format!("cloudcoaster r={r:.0}");
-        reports.push(rep);
+        points.push(GridPoint::new(format!("cloudcoaster r={r:.0}"), cfg));
     }
-    Ok(reports)
+    points
 }
 
 /// Ablation: sensitivity to the long-load-ratio threshold L_r^T.
-pub fn threshold_sweep(base: &ExperimentConfig, thresholds: &[f64]) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-    for &t in thresholds {
-        let mut cfg = base.clone();
-        cfg.scheduler = SchedulerKind::CloudCoaster;
-        cfg.threshold = t;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = format!("L_r^T={t:.2}");
-        reports.push(rep);
-    }
-    Ok(reports)
+pub fn threshold_points(base: &ExperimentConfig, thresholds: &[f64]) -> Vec<GridPoint> {
+    thresholds
+        .iter()
+        .map(|&t| {
+            let mut cfg = base.clone();
+            cfg.scheduler = SchedulerKind::CloudCoaster;
+            cfg.threshold = t;
+            GridPoint::new(format!("L_r^T={t:.2}"), cfg)
+        })
+        .collect()
 }
 
 /// Ablation: behaviour under forced revocations (§3.3 resilience path).
-pub fn revocation_sweep(base: &ExperimentConfig, mttfs: &[Option<f64>]) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-    for &mttf in mttfs {
-        let mut cfg = base.clone();
-        cfg.scheduler = SchedulerKind::CloudCoaster;
-        cfg.mttf = mttf;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = match mttf {
-            Some(m) => format!("mttf={:.1}h", m / 3600.0),
-            None => "mttf=inf".to_string(),
-        };
-        reports.push(rep);
-    }
-    Ok(reports)
+pub fn revocation_points(base: &ExperimentConfig, mttfs: &[Option<f64>]) -> Vec<GridPoint> {
+    mttfs
+        .iter()
+        .map(|&mttf| {
+            let mut cfg = base.clone();
+            cfg.scheduler = SchedulerKind::CloudCoaster;
+            cfg.mttf = mttf;
+            let name = match mttf {
+                Some(m) => format!("mttf={:.1}h", m / 3600.0),
+                None => "mttf=inf".to_string(),
+            };
+            GridPoint::new(name, cfg)
+        })
+        .collect()
 }
 
 /// Ablation: the paper's asymmetric grow/shrink policy vs. a symmetric
 /// aggressive one.
-pub fn policy_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-    for (name, removals, aggressive, cooldown) in [
+pub fn policy_points(base: &ExperimentConfig) -> Vec<GridPoint> {
+    [
         ("paper(asym+cooldown)", 1usize, true, 120.0),
         ("paper-literal(no-cooldown)", 1, true, 0.0),
         ("symmetric-aggressive", usize::MAX, true, 0.0),
         ("symmetric-slow", 1, false, 120.0),
-    ] {
+    ]
+    .into_iter()
+    .map(|(name, removals, aggressive, cooldown)| {
         let mut cfg = base.clone();
         cfg.scheduler = SchedulerKind::CloudCoaster;
         cfg.max_removals_per_recalc = removals;
         cfg.aggressive_add = aggressive;
         cfg.drain_cooldown = cooldown;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = name.to_string();
-        reports.push(rep);
-    }
-    Ok(reports)
+        GridPoint::new(name, cfg)
+    })
+    .collect()
 }
 
 /// Ablation: bid level on the dynamic spot market (§2.4's Amazon model;
 /// the paper's evaluation uses fixed 1/r pricing, `bid = None`).
-pub fn bid_sweep(base: &ExperimentConfig, bids: &[Option<f64>]) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-    for &bid in bids {
-        let mut cfg = base.clone();
-        cfg.scheduler = SchedulerKind::CloudCoaster;
-        cfg.bid = bid;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = match bid {
-            Some(b) => format!("bid={b:.2}"),
-            None => "fixed-1/r".to_string(),
-        };
-        reports.push(rep);
-    }
-    Ok(reports)
+pub fn bid_points(base: &ExperimentConfig, bids: &[Option<f64>]) -> Vec<GridPoint> {
+    bids.iter()
+        .map(|&bid| {
+            let mut cfg = base.clone();
+            cfg.scheduler = SchedulerKind::CloudCoaster;
+            cfg.bid = bid;
+            let name = match bid {
+                Some(b) => format!("bid={b:.2}"),
+                None => "fixed-1/r".to_string(),
+            };
+            GridPoint::new(name, cfg)
+        })
+        .collect()
 }
 
 /// Ablation: reactive (§3.2) vs predictive (lr_forecast artifact)
 /// resizing.
-pub fn forecast_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-    for (name, predictive) in [("reactive(paper)", false), ("predictive(forecast)", true)] {
-        let mut cfg = base.clone();
-        cfg.scheduler = SchedulerKind::CloudCoaster;
-        cfg.predictive = predictive;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = name.to_string();
-        reports.push(rep);
-    }
-    Ok(reports)
+pub fn forecast_points(base: &ExperimentConfig) -> Vec<GridPoint> {
+    [("reactive(paper)", false), ("predictive(forecast)", true)]
+        .into_iter()
+        .map(|(name, predictive)| {
+            let mut cfg = base.clone();
+            cfg.scheduler = SchedulerKind::CloudCoaster;
+            cfg.predictive = predictive;
+            GridPoint::new(name, cfg)
+        })
+        .collect()
 }
 
 /// Scheduler-family comparison (context for §5 related work).
-pub fn scheduler_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
-    let mut analytics = AnalyticsEngine::auto(&crate::coordinator::report::artifacts_dir());
-    let workload = build_workload(base)?;
-    let mut reports = Vec::new();
-    for kind in [
+pub fn scheduler_points(base: &ExperimentConfig) -> Vec<GridPoint> {
+    [
         SchedulerKind::Centralized,
         SchedulerKind::Sparrow,
         SchedulerKind::Hawk,
         SchedulerKind::Eagle,
         SchedulerKind::CloudCoaster,
-    ] {
+    ]
+    .into_iter()
+    .map(|kind| {
         let mut cfg = base.clone();
         cfg.scheduler = kind;
-        let mut rep = run_experiment_on(&cfg, &workload, analytics.as_dyn())?;
-        rep.name = kind.name().to_string();
-        reports.push(rep);
-    }
-    Ok(reports)
+        GridPoint::new(kind.name(), cfg)
+    })
+    .collect()
+}
+
+// ------------------------------------------------ named sweep wrappers
+
+/// The paper's §4 grid: Eagle baseline, then CloudCoaster at each r.
+pub fn paper_sweep(base: &ExperimentConfig, ratios: &[f64]) -> Result<Vec<Report>> {
+    run_grid(base, &paper_points(base, ratios))
+}
+
+/// Ablation: sensitivity to the long-load-ratio threshold L_r^T.
+pub fn threshold_sweep(base: &ExperimentConfig, thresholds: &[f64]) -> Result<Vec<Report>> {
+    run_grid(base, &threshold_points(base, thresholds))
+}
+
+/// Ablation: behaviour under forced revocations (§3.3 resilience path).
+pub fn revocation_sweep(base: &ExperimentConfig, mttfs: &[Option<f64>]) -> Result<Vec<Report>> {
+    run_grid(base, &revocation_points(base, mttfs))
+}
+
+/// Ablation: asymmetric vs symmetric grow/shrink policies.
+pub fn policy_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    run_grid(base, &policy_points(base))
+}
+
+/// Ablation: bid level on the dynamic spot market.
+pub fn bid_sweep(base: &ExperimentConfig, bids: &[Option<f64>]) -> Result<Vec<Report>> {
+    run_grid(base, &bid_points(base, bids))
+}
+
+/// Ablation: reactive vs predictive resizing.
+pub fn forecast_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    run_grid(base, &forecast_points(base))
+}
+
+/// Scheduler-family comparison.
+pub fn scheduler_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    run_grid(base, &scheduler_points(base))
 }
 
 #[cfg(test)]
@@ -164,6 +285,20 @@ mod tests {
         p.horizon = 2000.0;
         cfg.workload = WorkloadSource::YahooLike(p);
         cfg
+    }
+
+    #[test]
+    fn sweep_types_are_send() {
+        fn assert_send<T: Send>() {}
+        fn assert_sync<T: Sync>() {}
+        assert_send::<Workload>();
+        assert_sync::<Workload>();
+        assert_send::<ExperimentConfig>();
+        assert_send::<crate::coordinator::runner::SimConfig>();
+        assert_send::<Report>();
+        assert_send::<AnalyticsEngine>();
+        assert_send::<GridPoint>();
+        assert_sync::<GridPoint>();
     }
 
     #[test]
@@ -189,5 +324,34 @@ mod tests {
     fn policy_sweep_runs() {
         let reports = policy_sweep(&tiny_base()).unwrap();
         assert_eq!(reports.len(), 4);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_exactly() {
+        let base = tiny_base();
+        let points = paper_points(&base, &[1.0, 2.0, 3.0]);
+        let serial = run_sweep_parallel(&base, &points, 1).unwrap();
+        for threads in [2, 4, 7] {
+            let parallel = run_sweep_parallel(&base, &points, threads).unwrap();
+            assert_eq!(serial.len(), parallel.len());
+            for (a, b) in serial.iter().zip(&parallel) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.events, b.events);
+                assert_eq!(a.end_time, b.end_time);
+                assert_eq!(a.short_delay.n, b.short_delay.n);
+                assert_eq!(a.short_delay.mean, b.short_delay.mean);
+                assert_eq!(a.short_delay.p99, b.short_delay.p99);
+                assert_eq!(a.long_delay.mean, b.long_delay.mean);
+                assert_eq!(a.transients_requested, b.transients_requested);
+                assert_eq!(a.cdf.values, b.cdf.values);
+                assert_eq!(a.cdf.edges, b.cdf.edges);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let base = tiny_base();
+        assert!(run_sweep_parallel(&base, &[], 4).unwrap().is_empty());
     }
 }

@@ -8,19 +8,50 @@
 //! (spot / preemptible instances), driven by the **long-load ratio**
 //! `l_r = N_long / N_total` (paper §3.2). This crate contains the complete
 //! system: a deterministic discrete-event cluster simulator, the scheduler
-//! family (centralized, Sparrow, Eagle, CloudCoaster), the transient-market
-//! substrate (pricing, provisioning delay, revocations, budget), synthetic
-//! workload generators calibrated to the Yahoo/Google traces the paper
-//! uses, a metrics pipeline, and a PJRT runtime that executes the
-//! AOT-compiled JAX/Pallas analytics artifacts from `artifacts/`.
+//! family (centralized, Sparrow, Hawk, Eagle, CloudCoaster), the
+//! transient-market substrate (pricing, provisioning delay, revocations,
+//! budget), synthetic workload generators calibrated to the Yahoo/Google
+//! traces the paper uses, a metrics pipeline, and (behind the `xla`
+//! feature) a PJRT runtime that executes the AOT-compiled JAX/Pallas
+//! analytics artifacts from `artifacts/`.
 //!
-//! ## Architecture (three layers)
+//! ## Architecture
 //!
-//! * **L3 (this crate)** — event loop, cluster state, schedulers, transient
-//!   manager, experiment coordinator. Python-free at runtime.
-//! * **L2/L1 (python/compile)** — JAX cluster-state analytics + Pallas
-//!   kernels, AOT-lowered to HLO text and executed through
-//!   [`runtime::XlaAnalytics`].
+//! The simulator is composed from four layers:
+//!
+//! * **sim** — the deterministic core: event queue + clock
+//!   ([`sim::Engine`]), forked PRNG streams ([`sim::Rng`]), and the
+//!   composable [`sim::World`]. A `World` owns engine, cluster, recorder
+//!   and RNG streams, and dispatches every [`sim::Event`] through an
+//!   ordered list of pluggable [`sim::Component`]s — the scheduler
+//!   adapter, transient manager, work stealer and snapshot/forecast
+//!   sampler are all components ([`sim::components`]), so new scenarios
+//!   are component wiring, not runner changes.
+//! * **cluster** — server + task arenas, partitions, queue disciplines,
+//!   and the [`cluster::PoolIndex`]: one MinTree-backed least-loaded
+//!   index per pool (general / short-reserved / transient) kept
+//!   incrementally up to date by every mutator, so all placement and
+//!   drain-victim queries are O(log n) with scan-identical tie-breaking.
+//! * **coordinator** — experiment configuration
+//!   ([`coordinator::ExperimentConfig`]), the canonical component wiring
+//!   ([`coordinator::runner::build_world`] / `simulate_with`), reports,
+//!   and sweeps: every evaluation grid is a list of
+//!   [`coordinator::GridPoint`]s run through one generic driver, either
+//!   serially or fanned out across cores by
+//!   [`coordinator::run_sweep_parallel`]. Runs derive all randomness
+//!   from their own config seed, so every simulation field of a sweep
+//!   report is bit-identical at any thread count (only wall-clock
+//!   timing fields vary).
+//! * **runtime / metrics / trace / transient** — analytics engines
+//!   (pure-rust [`runtime::NativeAnalytics`] by default; PJRT/XLA under
+//!   `--features xla`), the recorder + cost ledger behind every paper
+//!   number, trace synthesis/persistence, and the §3.2 transient
+//!   manager + market model.
+//!
+//! Determinism is load-bearing: `tests/golden_determinism.rs` pins the
+//! `World` decomposition bit-exactly to the original monolithic runner,
+//! and `tests/pool_index_props.rs` pins every indexed least-loaded
+//! answer to the naive linear scan it replaced.
 //!
 //! ## Quickstart
 //!
@@ -30,6 +61,39 @@
 //! let cfg = ExperimentConfig::paper_defaults();
 //! let report = run_experiment(&cfg).unwrap();
 //! println!("avg short queueing delay: {:.1}s", report.short_delay.mean());
+//! ```
+//!
+//! Composing a custom scenario (an Eagle run with stealing disabled and
+//! a custom snapshot cadence) is component wiring on a [`sim::World`]:
+//!
+//! ```no_run
+//! use cloudcoaster::cluster::{Cluster, QueuePolicy};
+//! use cloudcoaster::metrics::Recorder;
+//! use cloudcoaster::sched::Hybrid;
+//! use cloudcoaster::sim::{SchedulerComponent, SnapshotSampler, World};
+//! use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
+//! use cloudcoaster::sim::Rng;
+//!
+//! let workload = yahoo_like(&YahooLikeParams::default(), &mut Rng::new(42));
+//! let mut sched = Hybrid::eagle(2.0);
+//! let cluster = Cluster::new(512, 16, QueuePolicy::Fifo);
+//! let mut world = World::new(&workload, cluster, Recorder::new(1.0), 42);
+//! world.add_component(Box::new(SnapshotSampler::new(30.0)));
+//! world.add_component(Box::new(SchedulerComponent::new(&mut sched)));
+//! world.run();
+//! println!("{} events, {} tasks", world.engine.processed(), world.rec.tasks_finished);
+//! ```
+//!
+//! Sweeping a grid across all cores:
+//!
+//! ```no_run
+//! use cloudcoaster::coordinator::{ExperimentConfig, run_sweep_parallel};
+//! use cloudcoaster::coordinator::sweep::paper_points;
+//!
+//! let cfg = ExperimentConfig::paper_defaults();
+//! let points = paper_points(&cfg, &[1.0, 2.0, 3.0]);
+//! let reports = run_sweep_parallel(&cfg, &points, 8).unwrap();
+//! assert_eq!(reports.len(), 4);
 //! ```
 
 pub mod benchkit;
@@ -44,5 +108,4 @@ pub mod trace;
 pub mod transient;
 pub mod util;
 
-pub use coordinator::{run_experiment, ExperimentConfig};
-
+pub use coordinator::{run_experiment, run_sweep_parallel, ExperimentConfig};

@@ -2,12 +2,17 @@
 //!
 //! ```text
 //! cloudcoaster run      [--config FILE] [--scheduler KIND] [--r R] [--seed N]
-//! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3]
-//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler
+//! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3] [--threads N]
+//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler [--threads N]
 //! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
 //! cloudcoaster replicate [--seeds N]   # headline across N seeds
 //! cloudcoaster version
 //! ```
+//!
+//! Sweeps and ablations fan their runs out across `--threads` OS threads
+//! (default: all cores). Simulation results are bit-identical at any
+//! thread count — every run's RNG streams fork off its own config seed;
+//! only wall-clock timing fields vary.
 
 use std::path::Path;
 
@@ -90,6 +95,14 @@ fn parse_ratios(s: &str) -> Result<Vec<f64>> {
     s.split(',').map(|x| x.trim().parse::<f64>().context("ratio list")).collect()
 }
 
+/// Worker threads for grid execution: `--threads N`, default all cores.
+fn parse_threads(args: &Args) -> Result<usize> {
+    Ok(match args.get("threads") {
+        Some(n) => n.parse().context("--threads")?,
+        None => sweep::default_threads(),
+    })
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     eprintln!("workload: {}", workload_summary(&cfg)?);
@@ -108,8 +121,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(s) => parse_ratios(s)?,
         None => vec![1.0, 2.0, 3.0],
     };
+    let threads = parse_threads(args)?;
     eprintln!("workload: {}", workload_summary(&cfg)?);
-    let reports = sweep::paper_sweep(&cfg, &ratios)?;
+    let reports = sweep::run_sweep_parallel(&cfg, &sweep::paper_points(&cfg, &ratios), threads)?;
     println!("\n== Figure 3: short-task queueing delay ==\n{}", fig3_markdown(&reports));
     println!("== Table 1: transient lifetimes & counts ==\n{}", table1_markdown(&reports));
     if let Some(out) = args.get("cdf-out") {
@@ -122,20 +136,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_ablate(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let what = args.get("what").unwrap_or("threshold");
-    let reports = match what {
-        "threshold" => sweep::threshold_sweep(&cfg, &[0.5, 0.75, 0.9, 0.95, 0.99])?,
-        "revocation" => sweep::revocation_sweep(
-            &cfg,
-            &[None, Some(4.0 * 3600.0), Some(3600.0)],
-        )?,
-        "policy" => sweep::policy_sweep(&cfg)?,
-        "scheduler" => sweep::scheduler_sweep(&cfg)?,
-        "market" => sweep::bid_sweep(&cfg, &[None, Some(2.0), Some(0.5), Some(0.35)])?,
-        "forecast" => sweep::forecast_sweep(&cfg)?,
+    let threads = parse_threads(args)?;
+    let points = match what {
+        "threshold" => sweep::threshold_points(&cfg, &[0.5, 0.75, 0.9, 0.95, 0.99]),
+        "revocation" => {
+            sweep::revocation_points(&cfg, &[None, Some(4.0 * 3600.0), Some(3600.0)])
+        }
+        "policy" => sweep::policy_points(&cfg),
+        "scheduler" => sweep::scheduler_points(&cfg),
+        "market" => sweep::bid_points(&cfg, &[None, Some(2.0), Some(0.5), Some(0.35)]),
+        "forecast" => sweep::forecast_points(&cfg),
         other => bail!(
             "unknown ablation {other:?} (threshold|revocation|policy|scheduler|market|forecast)"
         ),
     };
+    let reports = sweep::run_sweep_parallel(&cfg, &points, threads)?;
     println!("\n== ablation: {what} ==\n{}", fig3_markdown(&reports));
     println!("{}", table1_markdown(&reports));
     Ok(())

@@ -1,22 +1,30 @@
 //! The analytics API the coordinator calls on the epoch path, with two
 //! interchangeable engines:
 //!
-//! * [`XlaAnalytics`] — loads the AOT-compiled HLO artifacts (L2 JAX
-//!   graphs wrapping the L1 Pallas kernels) and executes them on the PJRT
-//!   CPU client. Python is never involved at runtime.
+//! * `XlaAnalytics` (feature `xla`) — loads the AOT-compiled HLO
+//!   artifacts (L2 JAX graphs wrapping the L1 Pallas kernels) and
+//!   executes them on the PJRT CPU client. Python is never involved at
+//!   runtime. The `xla` crate is not vendored in this offline build, so
+//!   the engine is feature-gated; enabling `--features xla` additionally
+//!   requires adding the prebuilt `xla` (xla_extension) dependency.
 //! * [`NativeAnalytics`] — pure-rust reference implementation of the same
-//!   semantics; used when `artifacts/` is absent and as the equivalence
-//!   oracle in tests (`runtime_roundtrip`).
+//!   semantics; the default engine, and the equivalence oracle in tests
+//!   (`runtime_roundtrip`, gated on the same feature).
 
-use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use crate::runtime::artifacts::{ALPHA, FORECAST_ALPHA, FORECAST_WINDOW, PAD_SENTINEL};
+#[cfg(feature = "xla")]
 use crate::runtime::artifacts::{
-    artifact_file, pad_to, validate_manifest, ALPHA, ARTIFACT_NAMES, BUCKETS, DELAY_CHUNK,
-    EDGES, FORECAST_ALPHA, FORECAST_WINDOW, PAD_SENTINEL, SERVERS, TASK_CHUNK,
+    artifact_file, pad_to, validate_manifest, ARTIFACT_NAMES, BUCKETS, DELAY_CHUNK, EDGES,
+    SERVERS, TASK_CHUNK,
 };
+#[cfg(feature = "xla")]
+use anyhow::Context;
+#[cfg(feature = "xla")]
+use std::collections::HashMap;
 
 /// Outputs of the cluster-state pass.
 #[derive(Clone, Debug, PartialEq)]
@@ -29,8 +37,9 @@ pub struct ClusterStateOut {
     pub l_r: f32,
 }
 
-/// Engine-agnostic analytics interface.
-pub trait Analytics {
+/// Engine-agnostic analytics interface. `Send` so per-run engines can
+/// move into worker threads for parallel sweeps.
+pub trait Analytics: Send {
     /// One fused pass over the (padded) server vectors.
     fn cluster_state(
         &mut self,
@@ -151,11 +160,13 @@ impl Analytics for NativeAnalytics {
 // --------------------------------------------------------------------- xla
 
 /// PJRT-backed engine executing the AOT artifacts.
+#[cfg(feature = "xla")]
 pub struct XlaAnalytics {
     client: xla::PjRtClient,
     executables: HashMap<&'static str, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaAnalytics {
     /// Load and compile all artifacts from `dir` (e.g. `artifacts/`).
     pub fn load(dir: &Path) -> Result<Self> {
@@ -187,10 +198,12 @@ impl XlaAnalytics {
     }
 }
 
+#[cfg(feature = "xla")]
 fn lit(v: &[f32]) -> xla::Literal {
     xla::Literal::vec1(v)
 }
 
+#[cfg(feature = "xla")]
 impl Analytics for XlaAnalytics {
     fn cluster_state(
         &mut self,
@@ -278,26 +291,43 @@ impl Analytics for XlaAnalytics {
 
 // ---------------------------------------------------------------- dispatch
 
-/// Engine selection: XLA when artifacts are present, else native.
+/// Engine selection: XLA when built with the `xla` feature and the
+/// artifacts are present, else native.
 pub enum AnalyticsEngine {
+    #[cfg(feature = "xla")]
     Xla(XlaAnalytics),
     Native(NativeAnalytics),
 }
 
 impl AnalyticsEngine {
-    /// Load XLA artifacts from `dir` if it exists, else fall back.
+    /// Load XLA artifacts from `dir` if possible, else fall back to the
+    /// native engine (silently when `dir` simply doesn't exist).
     pub fn auto(dir: &Path) -> AnalyticsEngine {
-        match XlaAnalytics::load(dir) {
-            Ok(x) => AnalyticsEngine::Xla(x),
-            Err(err) => {
-                log::warn!("falling back to native analytics: {err:#}");
-                AnalyticsEngine::Native(NativeAnalytics)
+        #[cfg(feature = "xla")]
+        {
+            match XlaAnalytics::load(dir) {
+                Ok(x) => return AnalyticsEngine::Xla(x),
+                Err(err) => {
+                    if dir.exists() {
+                        eprintln!("falling back to native analytics: {err:#}");
+                    }
+                }
             }
         }
+        #[cfg(not(feature = "xla"))]
+        if dir.exists() {
+            eprintln!(
+                "artifacts present at {} but built without the `xla` feature; \
+                 using native analytics",
+                dir.display()
+            );
+        }
+        AnalyticsEngine::Native(NativeAnalytics)
     }
 
     pub fn as_dyn(&mut self) -> &mut dyn Analytics {
         match self {
+            #[cfg(feature = "xla")]
             AnalyticsEngine::Xla(x) => x,
             AnalyticsEngine::Native(n) => n,
         }

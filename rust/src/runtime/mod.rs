@@ -11,4 +11,6 @@
 mod analytics;
 pub mod artifacts;
 
-pub use analytics::{Analytics, AnalyticsEngine, ClusterStateOut, NativeAnalytics, XlaAnalytics};
+pub use analytics::{Analytics, AnalyticsEngine, ClusterStateOut, NativeAnalytics};
+#[cfg(feature = "xla")]
+pub use analytics::XlaAnalytics;

@@ -102,11 +102,12 @@ impl Hybrid {
         }
         if self.buf.candidates.is_empty() {
             // Pathological: every probe hit a non-accepting server. Place
-            // on the least-loaded on-demand short server directly.
-            self.buf
-                .candidates
-                .extend(ctx.cluster.short_reserved.iter().copied().take(1));
-            if self.buf.candidates.is_empty() {
+            // on the least-loaded on-demand short server directly (via
+            // the short-pool index; the old code grabbed the *first*
+            // short server regardless of load).
+            if let Some(od) = ctx.cluster.least_loaded_short_reserved() {
+                self.buf.candidates.push(od);
+            } else {
                 self.buf.candidates.push(ctx.cluster.least_loaded_general());
             }
         }
@@ -115,28 +116,18 @@ impl Hybrid {
         for (&tid, &sid) in task_ids.iter().zip(&self.out) {
             ctx.cluster.enqueue(tid, sid, ctx.engine, ctx.rec);
             // §3.3: at least one copy of every short task on on-demand.
+            // The duplication target is an O(log n) short-pool index
+            // query, not a partition scan.
             if self.duplicate_to_ondemand
                 && ctx.cluster.server(sid).kind == ServerKind::Transient
                 && ctx.cluster.task(tid).copies > 0
             {
-                if let Some(od) = least_loaded_short_ondemand(ctx) {
+                if let Some(od) = ctx.cluster.least_loaded_short_reserved() {
                     ctx.cluster.enqueue(tid, od, ctx.engine, ctx.rec);
                 }
             }
         }
     }
-}
-
-/// Least-loaded accepting on-demand short-partition server.
-fn least_loaded_short_ondemand(ctx: &SchedCtx) -> Option<ServerId> {
-    ctx.cluster
-        .short_reserved
-        .iter()
-        .copied()
-        .filter(|&s| ctx.cluster.server(s).accepting())
-        .min_by(|&a, &b| {
-            ctx.cluster.server(a).est_work.total_cmp(&ctx.cluster.server(b).est_work)
-        })
 }
 
 impl Scheduler for Hybrid {

@@ -26,22 +26,14 @@ pub trait Scheduler {
 
     /// Re-place tasks orphaned by a transient revocation (tasks whose only
     /// queue copy lived on the revoked server). Default: least-loaded
-    /// on-demand short-partition server — the §3.3 on-demand fallback.
+    /// on-demand short-partition server — the §3.3 on-demand fallback —
+    /// answered by the short-pool index in O(log n).
     fn replace_orphans(&mut self, orphans: &[TaskId], ctx: &mut SchedCtx) {
         for &tid in orphans {
             ctx.rec.tasks_rescheduled += 1;
             let target = ctx
                 .cluster
-                .short_reserved
-                .iter()
-                .copied()
-                .filter(|&s| ctx.cluster.server(s).accepting())
-                .min_by(|&a, &b| {
-                    ctx.cluster
-                        .server(a)
-                        .est_work
-                        .total_cmp(&ctx.cluster.server(b).est_work)
-                })
+                .least_loaded_short_reserved()
                 .or_else(|| ctx.cluster.general.first().copied())
                 .expect("cluster has no on-demand servers");
             ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);

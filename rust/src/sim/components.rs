@@ -1,0 +1,287 @@
+//! Standard [`Component`]s for composing simulation scenarios:
+//!
+//! * [`SchedulerComponent`] — adapts any [`Scheduler`] (placement on job
+//!   arrival, orphan replacement on revocation).
+//! * [`TransientManagerComponent`] — the §3.2 Transient Manager
+//!   (resize on long-occupancy changes, provisioning/warning/prewarm
+//!   handling).
+//! * [`WorkStealer`] — Hawk-lineage randomized task stealing by newly
+//!   idle servers.
+//! * [`SnapshotSampler`] — the periodic metrics snapshot and (optional)
+//!   predictive l_r forecast that feeds the manager's prewarm path.
+//!
+//! The canonical wirings — Eagle baseline, CloudCoaster, manager-less
+//! Sparrow/Centralized — live in `coordinator::runner::build_world`;
+//! custom scenarios compose the same pieces differently (see the crate
+//! docs for a quickstart).
+
+use crate::cluster::Cluster;
+use crate::runtime::Analytics;
+use crate::sched::{SchedCtx, Scheduler};
+use crate::sim::{Component, Engine, Event, Rng, WorldCtx};
+use crate::transient::{ManagerConfig, TransientManager};
+use crate::util::{ServerId, Time};
+
+// ------------------------------------------------------------- scheduler
+
+/// Adapts a [`Scheduler`] to the component interface: places arriving
+/// jobs and re-places revocation orphans.
+pub struct SchedulerComponent<'s> {
+    scheduler: &'s mut dyn Scheduler,
+}
+
+impl<'s> SchedulerComponent<'s> {
+    pub fn new(scheduler: &'s mut dyn Scheduler) -> Self {
+        SchedulerComponent { scheduler }
+    }
+}
+
+impl Component for SchedulerComponent<'_> {
+    fn name(&self) -> &'static str {
+        "scheduler"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &Event, ctx: &mut WorldCtx) {
+        match event {
+            Event::JobArrival(jid) => {
+                let job = &ctx.workload.jobs[jid.index()];
+                let mut sctx = SchedCtx {
+                    cluster: &mut *ctx.cluster,
+                    engine: &mut *ctx.engine,
+                    rec: &mut *ctx.rec,
+                    rng: &mut *ctx.rng,
+                };
+                self.scheduler.place_job(job, ctx.arrived, &mut sctx);
+            }
+            Event::Revoked(_) if !ctx.orphans.is_empty() => {
+                let mut sctx = SchedCtx {
+                    cluster: &mut *ctx.cluster,
+                    engine: &mut *ctx.engine,
+                    rec: &mut *ctx.rec,
+                    rng: &mut *ctx.rng,
+                };
+                self.scheduler.replace_orphans(ctx.orphans, &mut sctx);
+            }
+            _ => {}
+        }
+    }
+}
+
+// ------------------------------------------------------------- transient
+
+/// The §3.2 Transient Manager as a component: resizes the dynamic short
+/// partition on long-occupancy changes and handles the transient-server
+/// lifecycle events.
+pub struct TransientManagerComponent {
+    pub manager: TransientManager,
+}
+
+impl TransientManagerComponent {
+    pub fn new(cfg: ManagerConfig, rng: Rng) -> Self {
+        TransientManagerComponent { manager: TransientManager::new(cfg, rng) }
+    }
+
+    /// `(adds, drains, failed_requests)` — the run-report triple.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.manager.adds, self.manager.drains, self.manager.failed_requests)
+    }
+}
+
+impl Component for TransientManagerComponent {
+    fn name(&self) -> &'static str {
+        "transient-manager"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &Event, ctx: &mut WorldCtx) {
+        match event {
+            Event::TransientReady(sid) => {
+                self.manager.on_ready(*sid, &mut *ctx.cluster, &*ctx.engine, &mut *ctx.rec);
+            }
+            Event::RevocationWarning(sid) => {
+                self.manager.on_warning(*sid, &mut *ctx.cluster, &*ctx.engine, &mut *ctx.rec);
+            }
+            Event::Snapshot => {
+                // Forecast published by an upstream SnapshotSampler.
+                if let Some(lr) = ctx.take_prewarm() {
+                    self.manager.prewarm(lr, &mut *ctx.cluster, &mut *ctx.engine, &mut *ctx.rec);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_long_change(&mut self, _now: Time, ctx: &mut WorldCtx) {
+        self.manager.maybe_resize(&mut *ctx.cluster, &mut *ctx.engine, &mut *ctx.rec);
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+// ---------------------------------------------------------- work stealer
+
+/// Hawk-lineage randomized stealing: a newly idle server probes for a
+/// busy victim and takes a batch of its queued short tasks.
+pub struct WorkStealer {
+    /// Probes an idle server sends looking for a victim (0 disables).
+    pub probes: usize,
+    /// Max queued short tasks moved per steal.
+    pub batch: usize,
+}
+
+impl Component for WorkStealer {
+    fn name(&self) -> &'static str {
+        "work-stealer"
+    }
+
+    fn on_event(&mut self, _now: Time, event: &Event, ctx: &mut WorldCtx) {
+        let Event::TaskFinish { server, .. } = event else { return };
+        if self.probes == 0 {
+            return;
+        }
+        let thief = *server;
+        {
+            let s = ctx.cluster.server(thief);
+            // A drained server was retired by the world core and is no
+            // longer accepting; busy servers don't steal.
+            if !(s.is_idle() && s.accepting()) {
+                return;
+            }
+        }
+        try_steal(
+            &mut *ctx.cluster,
+            thief,
+            self.probes,
+            self.batch,
+            &mut *ctx.rng,
+            &mut *ctx.engine,
+            &mut *ctx.rec,
+        );
+    }
+}
+
+/// Steal probes for a newly idle server: sample candidates from the
+/// short pools (where load-spike queues live) and the general partition,
+/// steal from the first victim with queued work.
+fn try_steal(
+    cluster: &mut Cluster,
+    thief: ServerId,
+    steal_probes: usize,
+    steal_batch: usize,
+    rng: &mut Rng,
+    engine: &mut Engine,
+    rec: &mut crate::metrics::Recorder,
+) {
+    // Long-hosting victims are fine: we only take their *short* tasks.
+    for probe in 0..steal_probes {
+        // Alternate between short pools and the general partition.
+        let victim = if probe % 2 == 0 {
+            let shorts = cluster.short_reserved.len() + cluster.transient_pool.len();
+            if shorts == 0 {
+                continue;
+            }
+            let k = rng.below(shorts as u64) as usize;
+            if k < cluster.short_reserved.len() {
+                cluster.short_reserved[k]
+            } else {
+                cluster.transient_pool[k - cluster.short_reserved.len()]
+            }
+        } else {
+            cluster.general[rng.below(cluster.general.len() as u64) as usize]
+        };
+        if cluster.server(victim).queue.is_empty() {
+            continue;
+        }
+        if cluster.steal_short_tasks(victim, thief, steal_batch, engine, rec) > 0 {
+            return;
+        }
+    }
+}
+
+// -------------------------------------------------------------- sampler
+
+/// Periodic metrics snapshot (l_r and active-transient time series) and,
+/// optionally, the predictive l_r forecast (Holt level+trend through the
+/// analytics engine) published for the transient manager's prewarm.
+pub struct SnapshotSampler<'a> {
+    interval: f64,
+    predictive: bool,
+    /// Forecast horizon in snapshot steps (provisioning delay / interval).
+    horizon_steps: f32,
+    lr_history: Vec<f32>,
+    analytics: Option<&'a mut dyn Analytics>,
+}
+
+impl<'a> SnapshotSampler<'a> {
+    /// Plain reactive sampler: metrics only.
+    pub fn new(interval: f64) -> Self {
+        SnapshotSampler {
+            interval,
+            predictive: false,
+            horizon_steps: 1.0,
+            lr_history: Vec::new(),
+            analytics: None,
+        }
+    }
+
+    /// Predictive sampler: additionally forecasts l_r `horizon_steps`
+    /// snapshots ahead and publishes it via [`WorldCtx::signal_prewarm`].
+    pub fn predictive(
+        interval: f64,
+        horizon_steps: f32,
+        analytics: Option<&'a mut dyn Analytics>,
+    ) -> Self {
+        let window = crate::runtime::artifacts::FORECAST_WINDOW;
+        SnapshotSampler {
+            interval,
+            predictive: true,
+            horizon_steps,
+            lr_history: Vec::with_capacity(window),
+            analytics,
+        }
+    }
+}
+
+impl Component for SnapshotSampler<'_> {
+    fn name(&self) -> &'static str {
+        "snapshot-sampler"
+    }
+
+    fn on_start(&mut self, ctx: &mut WorldCtx) {
+        if !ctx.workload.jobs.is_empty() {
+            ctx.engine.schedule(self.interval, Event::Snapshot);
+        }
+    }
+
+    fn on_event(&mut self, now: Time, event: &Event, ctx: &mut WorldCtx) {
+        if !matches!(event, Event::Snapshot) {
+            return;
+        }
+        let lr = ctx.cluster.long_load_ratio();
+        ctx.rec.snapshot(now, lr, ctx.cluster.transient_pool.len() as f64);
+        if self.predictive {
+            let window = crate::runtime::artifacts::FORECAST_WINDOW;
+            if self.lr_history.len() == window {
+                self.lr_history.rotate_left(1);
+                self.lr_history.pop();
+            }
+            self.lr_history.push(lr as f32);
+            if self.lr_history.len() == window {
+                if let Some(eng) = self.analytics.as_mut() {
+                    if let Ok((forecast, _, _)) =
+                        eng.lr_forecast(&self.lr_history, self.horizon_steps)
+                    {
+                        ctx.signal_prewarm(forecast as f64);
+                    }
+                }
+            }
+        }
+        if ctx.work_remaining() {
+            // Deferred so the manager's prewarm provisioning events (if
+            // any) sort ahead of the next snapshot at equal timestamps —
+            // the legacy runner's scheduling order.
+            ctx.defer(now + self.interval, Event::Snapshot);
+        }
+    }
+}

@@ -1,11 +1,18 @@
 //! Deterministic discrete-event simulation core: the event queue and
-//! clock ([`Engine`]), the event vocabulary ([`Event`]), and the
-//! reproducible PRNG ([`Rng`]).
+//! clock ([`Engine`]), the event vocabulary ([`Event`]), the
+//! reproducible PRNG ([`Rng`]), and the composable simulation
+//! [`World`] with its pluggable [`Component`]s.
 
+pub mod components;
 mod engine;
 mod event;
 mod rng;
+mod world;
 
+pub use components::{
+    SchedulerComponent, SnapshotSampler, TransientManagerComponent, WorkStealer,
+};
 pub use engine::Engine;
 pub use event::Event;
 pub use rng::Rng;
+pub use world::{Component, World, WorldCtx};

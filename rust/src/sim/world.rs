@@ -1,0 +1,337 @@
+//! The composable simulation world.
+//!
+//! [`World`] owns the discrete-event [`Engine`], the [`Cluster`], the
+//! metrics [`Recorder`] and the forked RNG streams, and drives the event
+//! loop over a [`Workload`]. Everything *policy* — placement, transient
+//! management, work stealing, sampling — lives in an ordered list of
+//! pluggable [`Component`]s dispatched per [`Event`]. New scenarios
+//! (manager-less baselines, injected burst storms, custom samplers) are
+//! component wiring, not new match arms.
+//!
+//! The world itself keeps only the trace-replay responsibilities that
+//! define the simulation's semantics:
+//!
+//! * materialising each arriving job's tasks and scheduling the next
+//!   arrival (after dispatch, so placement-scheduled events keep their
+//!   legacy queue order);
+//! * cluster lifecycle bookkeeping for `TaskFinish` / `Revoked` /
+//!   `DrainComplete` (stale-finish filtering, drain retirement,
+//!   revocation orphan collection);
+//! * per-job completion accounting and the end-of-run transient
+//!   close-out.
+//!
+//! Determinism: given the same workload, seed and component wiring, the
+//! run is bitwise identical to the pre-component monolithic runner —
+//! enforced by `tests/golden_determinism.rs`.
+
+use crate::cluster::{Cluster, ServerKind, ServerState, TaskState};
+use crate::metrics::Recorder;
+use crate::sim::{Engine, Event, Rng};
+use crate::trace::Workload;
+use crate::util::{JobId, TaskId, Time};
+
+/// Mutable per-event view handed to components.
+///
+/// Fields are the world's core state; the scratch slices (`arrived`,
+/// `orphans`) carry the current event's payload between the world core
+/// and the components that act on it.
+pub struct WorldCtx<'w> {
+    pub cluster: &'w mut Cluster,
+    pub engine: &'w mut Engine,
+    pub rec: &'w mut Recorder,
+    /// The shared scheduler-side RNG stream (probe sampling, stealing) —
+    /// fork label 0x5C off the root seed, as in the original runner.
+    pub rng: &'w mut Rng,
+    pub workload: &'w Workload,
+    /// Tasks materialised for the `JobArrival` being dispatched (empty
+    /// for other events).
+    pub arrived: &'w [TaskId],
+    /// Tasks orphaned by the `Revoked` being dispatched (empty
+    /// otherwise).
+    pub orphans: &'w [TaskId],
+    outstanding_tasks: u64,
+    next_job: usize,
+    prewarm_lr: &'w mut Option<f64>,
+    deferred: &'w mut Vec<(Time, Event)>,
+}
+
+impl WorldCtx<'_> {
+    /// Is there still work in flight or jobs yet to arrive? (Periodic
+    /// components use this to decide whether to reschedule themselves.)
+    pub fn work_remaining(&self) -> bool {
+        self.outstanding_tasks > 0 || self.next_job < self.workload.jobs.len()
+    }
+
+    /// Publish a forecast long-load ratio for a downstream component
+    /// (the transient manager) to act on within this event.
+    pub fn signal_prewarm(&mut self, forecast_lr: f64) {
+        *self.prewarm_lr = Some(forecast_lr);
+    }
+
+    /// Consume the forecast published earlier in this event, if any.
+    pub fn take_prewarm(&mut self) -> Option<f64> {
+        self.prewarm_lr.take()
+    }
+
+    /// Schedule `event` at `at`, *after* every component has run for the
+    /// current event. Use this when the event must sort behind anything
+    /// a later component schedules at the same timestamp (e.g. the
+    /// snapshot sampler's own reschedule vs. the manager's prewarm
+    /// provisioning events).
+    pub fn defer(&mut self, at: Time, event: Event) {
+        self.deferred.push((at, event));
+    }
+}
+
+/// A pluggable simulation behaviour, dispatched per event in wiring
+/// order. Implementations: the scheduler adapter, the transient manager,
+/// the Hawk-lineage work stealer, the snapshot/forecast sampler (see
+/// [`crate::sim::components`]).
+pub trait Component {
+    fn name(&self) -> &'static str {
+        "component"
+    }
+
+    /// Called once before the first event — schedule initial periodic
+    /// events here.
+    fn on_start(&mut self, _ctx: &mut WorldCtx) {}
+
+    /// Called for every processed (non-stale) event, in component order.
+    fn on_event(&mut self, now: Time, event: &Event, ctx: &mut WorldCtx);
+
+    /// Called after any event that changed long-task occupancy — the
+    /// paper's §3.2 recalculation trigger.
+    fn on_long_change(&mut self, _now: Time, _ctx: &mut WorldCtx) {}
+
+    /// Downcast hook so callers can extract component-specific stats
+    /// after a run (return `Some(self)` from `'static` components).
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+}
+
+/// The composed simulation: engine + cluster + recorder + RNG streams +
+/// ordered components, run over one workload.
+pub struct World<'w> {
+    pub cluster: Cluster,
+    pub engine: Engine,
+    pub rec: Recorder,
+    workload: &'w Workload,
+    root_rng: Rng,
+    sched_rng: Rng,
+    components: Vec<Box<dyn Component + 'w>>,
+    /// Remaining unfinished tasks per job (response-time accounting).
+    job_remaining: Vec<u32>,
+    outstanding: u64,
+    next_job: usize,
+    arrived: Vec<TaskId>,
+    orphans: Vec<TaskId>,
+    prewarm_lr: Option<f64>,
+    deferred: Vec<(Time, Event)>,
+}
+
+impl<'w> World<'w> {
+    /// Build a world over `workload`. RNG streams fork off `seed` in a
+    /// fixed order: the scheduler stream first (label 0x5C), then
+    /// whatever the caller forks via [`World::fork_rng`] — matching the
+    /// original runner so fixed-seed runs stay bit-identical.
+    pub fn new(workload: &'w Workload, cluster: Cluster, rec: Recorder, seed: u64) -> Self {
+        let mut root_rng = Rng::new(seed);
+        let sched_rng = root_rng.fork(0x5C);
+        World {
+            cluster,
+            engine: Engine::new(),
+            rec,
+            workload,
+            root_rng,
+            sched_rng,
+            components: Vec::new(),
+            job_remaining: workload.jobs.iter().map(|j| j.num_tasks() as u32).collect(),
+            outstanding: workload.num_tasks() as u64,
+            next_job: 0,
+            arrived: Vec::new(),
+            orphans: Vec::new(),
+            prewarm_lr: None,
+            deferred: Vec::new(),
+        }
+    }
+
+    /// Derive an independent RNG stream for a component (e.g. the
+    /// transient market uses label 0x7A).
+    pub fn fork_rng(&mut self, label: u64) -> Rng {
+        self.root_rng.fork(label)
+    }
+
+    /// Append a component; dispatch follows insertion order.
+    pub fn add_component(&mut self, component: Box<dyn Component + 'w>) -> &mut Self {
+        self.components.push(component);
+        self
+    }
+
+    pub fn workload(&self) -> &'w Workload {
+        self.workload
+    }
+
+    /// Find a component by concrete type (post-run stat extraction).
+    pub fn component<T: 'static>(&self) -> Option<&T> {
+        self.components.iter().find_map(|c| c.as_any()?.downcast_ref::<T>())
+    }
+
+    fn ctx(&mut self) -> WorldCtx<'_> {
+        WorldCtx {
+            cluster: &mut self.cluster,
+            engine: &mut self.engine,
+            rec: &mut self.rec,
+            rng: &mut self.sched_rng,
+            workload: self.workload,
+            arrived: &self.arrived,
+            orphans: &self.orphans,
+            outstanding_tasks: self.outstanding,
+            next_job: self.next_job,
+            prewarm_lr: &mut self.prewarm_lr,
+            deferred: &mut self.deferred,
+        }
+    }
+
+    fn flush_deferred(&mut self) {
+        if self.deferred.is_empty() {
+            return;
+        }
+        let mut pending = std::mem::take(&mut self.deferred);
+        for (at, event) in pending.drain(..) {
+            self.engine.schedule(at, event);
+        }
+        self.deferred = pending; // keep the allocation
+    }
+
+    /// Drive the event loop to quiescence.
+    pub fn run(&mut self) {
+        let mut components = std::mem::take(&mut self.components);
+        if !self.workload.jobs.is_empty() {
+            self.engine.schedule(self.workload.jobs[0].arrival, Event::JobArrival(JobId(0)));
+        }
+        {
+            let mut ctx = self.ctx();
+            for c in components.iter_mut() {
+                c.on_start(&mut ctx);
+            }
+        }
+        self.flush_deferred();
+
+        while let Some((now, event)) = self.engine.pop() {
+            // ---- core pre-dispatch: trace replay + cluster lifecycle ----
+            self.arrived.clear();
+            self.orphans.clear();
+            self.prewarm_lr = None;
+            match event {
+                Event::JobArrival(jid) => {
+                    let job = &self.workload.jobs[jid.index()];
+                    for &d in &job.task_durations {
+                        let tid = self.cluster.add_task(job.id, d, job.is_long, now);
+                        self.arrived.push(tid);
+                    }
+                }
+                Event::TaskFinish { server, task } => {
+                    // A revocation may have killed this execution after
+                    // its finish event was scheduled (the task restarts
+                    // elsewhere with a new finish event) — drop the
+                    // stale one before any component sees it.
+                    {
+                        let t = self.cluster.task(task);
+                        if t.state != TaskState::Running || t.ran_on != Some(server) {
+                            continue;
+                        }
+                    }
+                    let drained =
+                        self.cluster.on_task_finish(server, task, &mut self.engine, &mut self.rec);
+                    if drained {
+                        self.cluster.retire(server, now, &mut self.rec);
+                    }
+                }
+                Event::Revoked(sid) => {
+                    let state = self.cluster.server(sid).state;
+                    if matches!(state, ServerState::Active | ServerState::Draining) {
+                        self.orphans = self.cluster.revoke(sid, now, &mut self.rec);
+                    }
+                }
+                Event::DrainComplete(sid) => {
+                    if self.cluster.server(sid).state == ServerState::Draining
+                        && self.cluster.server(sid).is_idle()
+                    {
+                        self.cluster.retire(sid, now, &mut self.rec);
+                    }
+                }
+                Event::TransientReady(_) | Event::RevocationWarning(_) | Event::Snapshot => {}
+            }
+
+            // Did this event change long-task occupancy? (`is_long` is
+            // immutable, so reading it after the state transition is
+            // equivalent to the legacy in-arm flags.)
+            let long_change = match event {
+                Event::JobArrival(jid) => self.workload.jobs[jid.index()].is_long,
+                Event::TaskFinish { task, .. } => self.cluster.task(task).is_long,
+                _ => false,
+            };
+
+            // ---- dispatch to components, in wiring order ----
+            {
+                let mut ctx = self.ctx();
+                for c in components.iter_mut() {
+                    c.on_event(now, &event, &mut ctx);
+                }
+            }
+
+            // ---- core post-dispatch: arrival cursor + completions ----
+            match event {
+                Event::JobArrival(jid) => {
+                    self.next_job = jid.index() + 1;
+                    if self.next_job < self.workload.jobs.len() {
+                        self.engine.schedule(
+                            self.workload.jobs[self.next_job].arrival,
+                            Event::JobArrival(JobId(self.next_job as u32)),
+                        );
+                    }
+                }
+                Event::TaskFinish { task, .. } => {
+                    self.outstanding -= 1;
+                    let jid = self.cluster.task(task).job;
+                    let rem = &mut self.job_remaining[jid.index()];
+                    *rem -= 1;
+                    if *rem == 0 {
+                        let job = &self.workload.jobs[jid.index()];
+                        self.rec.job_finished(job.is_long, now - job.arrival);
+                    }
+                }
+                _ => {}
+            }
+            self.flush_deferred();
+
+            if long_change {
+                let mut ctx = self.ctx();
+                for c in components.iter_mut() {
+                    c.on_long_change(now, &mut ctx);
+                }
+            }
+        }
+
+        // ---- run end: close out transients still up ----
+        let end_time = self.engine.now();
+        let live: Vec<_> = self
+            .cluster
+            .servers
+            .iter()
+            .filter(|s| {
+                s.kind == ServerKind::Transient
+                    && matches!(s.state, ServerState::Active | ServerState::Draining)
+            })
+            .map(|s| s.id)
+            .collect();
+        for sid in live {
+            self.cluster.retire(sid, end_time, &mut self.rec);
+        }
+        debug_assert_eq!(self.outstanding, 0, "tasks lost by the simulation");
+        #[cfg(debug_assertions)]
+        self.cluster.check_invariants();
+        self.components = components;
+    }
+}

@@ -211,17 +211,12 @@ impl TransientManager {
     }
 
     /// Drain victim: an idle transient if one exists, else the one with
-    /// the least estimated remaining work (fastest to free).
+    /// the least estimated remaining work (fastest to free). Answered by
+    /// the cluster's transient-pool index — an O(log n) argmin over the
+    /// lexicographic `(depth, est_work)` key with the same first-minimal
+    /// tie-break as the scan it replaced.
     fn pick_victim(&self, cluster: &Cluster) -> ServerId {
-        *cluster
-            .transient_pool
-            .iter()
-            .min_by(|&&a, &&b| {
-                let sa = cluster.server(a);
-                let sb = cluster.server(b);
-                (sa.depth(), sa.est_work).partial_cmp(&(sb.depth(), sb.est_work)).unwrap()
-            })
-            .expect("pick_victim on empty pool")
+        cluster.transient_drain_victim().expect("pick_victim on empty pool")
     }
 
     /// `TransientReady` arrived: the server joins the pool (unless it was

@@ -1,27 +1,73 @@
-//! Fixed-size argmin segment tree over per-server load estimates.
+//! Fixed-size argmin segment tree over per-server load keys.
 //!
-//! The centralized long-job scheduler places every long task on the
-//! least-loaded general-partition server. A linear scan per task is
-//! O(N·tasks) (~10^9 ops at paper scale); this tree makes placement
-//! O(log N) per task and update O(log N) per load change.
+//! Least-loaded placement over a pool is the simulator's hottest query:
+//! a linear scan per task is O(N·tasks) (~10^9 ops at paper scale); this
+//! tree makes placement O(log N) per query and O(log N) per load change.
+//! The tree is generic over the key so the cluster's [`PoolIndex`] can
+//! keep one tree per pool with pool-appropriate keys: plain `est_work`
+//! for the on-demand partitions, lexicographic `(depth, est_work)` for
+//! the transient pool's drain-victim query.
+//!
+//! [`PoolIndex`]: crate::cluster::PoolIndex
 
-/// Argmin segment tree over `n` f64 keys.
+/// A key usable in a [`MinTree`]: totally ordered via [`IndexKey::le`]
+/// (f64 keys use `total_cmp`, so no NaN surprises), with a "smallest
+/// possible" initial value and a "never wins argmin" sentinel.
+pub trait IndexKey: Copy + std::fmt::Debug {
+    /// Initial key of a live slot (an idle server carries zero load).
+    const ZERO: Self;
+    /// Sentinel for phantom/tombstoned slots; must compare `>=` every
+    /// real key so those slots never win the argmin.
+    const MAX_KEY: Self;
+    /// Total order; ties resolve to the *left* operand in the tree, so
+    /// the global argmin is the lowest-index minimal slot — matching
+    /// `Iterator::min_by`'s first-minimal convention.
+    fn le(&self, other: &Self) -> bool;
+}
+
+impl IndexKey for f64 {
+    const ZERO: Self = 0.0;
+    const MAX_KEY: Self = f64::INFINITY;
+
+    #[inline]
+    fn le(&self, other: &Self) -> bool {
+        self.total_cmp(other) != std::cmp::Ordering::Greater
+    }
+}
+
+/// Lexicographic `(queue depth, est_work)` — the transient manager's
+/// "fastest to free" drain-victim key.
+impl IndexKey for (u32, f64) {
+    const ZERO: Self = (0, 0.0);
+    const MAX_KEY: Self = (u32::MAX, f64::INFINITY);
+
+    #[inline]
+    fn le(&self, other: &Self) -> bool {
+        match self.0.cmp(&other.0) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => self.1.total_cmp(&other.1) != std::cmp::Ordering::Greater,
+        }
+    }
+}
+
+/// Argmin segment tree over `n` keys.
 #[derive(Clone, Debug)]
-pub struct MinTree {
+pub struct MinTree<K: IndexKey = f64> {
     n: usize,
     /// tree[i] = index (into 0..n) of the min key in node i's range.
     tree: Vec<u32>,
-    keys: Vec<f64>,
+    keys: Vec<K>,
 }
 
-impl MinTree {
+impl<K: IndexKey> MinTree<K> {
     pub fn new(n: usize) -> Self {
         assert!(n > 0, "empty MinTree");
         let size = n.next_power_of_two();
-        let mut t = MinTree { n, tree: vec![0; 2 * size], keys: vec![0.0; size] };
-        // Keys beyond n are +inf so they never win argmin.
+        let mut t = MinTree { n, tree: vec![0; 2 * size], keys: vec![K::ZERO; size] };
+        // Keys beyond n are the sentinel so they never win argmin.
         for i in n..size {
-            t.keys[i] = f64::INFINITY;
+            t.keys[i] = K::MAX_KEY;
         }
         for i in 0..size {
             t.tree[size + i] = i as u32;
@@ -30,6 +76,17 @@ impl MinTree {
             t.tree[i] = t.argmin_children(i);
         }
         t
+    }
+
+    /// Number of live slots.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
     }
 
     #[inline]
@@ -41,7 +98,7 @@ impl MinTree {
     fn argmin_children(&self, node: usize) -> u32 {
         let l = self.tree[2 * node];
         let r = self.tree[2 * node + 1];
-        if self.keys[l as usize] <= self.keys[r as usize] {
+        if self.keys[l as usize].le(&self.keys[r as usize]) {
             l
         } else {
             r
@@ -50,7 +107,7 @@ impl MinTree {
 
     /// Set the key at `idx` and repair the path to the root.
     #[inline]
-    pub fn update(&mut self, idx: usize, key: f64) {
+    pub fn update(&mut self, idx: usize, key: K) {
         debug_assert!(idx < self.n);
         self.keys[idx] = key;
         // Repair the path to the root, stopping early once a node's
@@ -69,18 +126,18 @@ impl MinTree {
         }
     }
 
-    /// Index of the global minimum key.
+    /// Index of the global minimum key (lowest index on ties).
     #[inline]
     pub fn argmin(&self) -> usize {
         self.tree[1] as usize
     }
 
     /// The minimum key value.
-    pub fn min_key(&self) -> f64 {
+    pub fn min_key(&self) -> K {
         self.keys[self.argmin()]
     }
 
-    pub fn key(&self, idx: usize) -> f64 {
+    pub fn key(&self, idx: usize) -> K {
         self.keys[idx]
     }
 }
@@ -91,7 +148,7 @@ mod tests {
 
     #[test]
     fn tracks_argmin_under_updates() {
-        let mut t = MinTree::new(10);
+        let mut t: MinTree = MinTree::new(10);
         for i in 0..10 {
             t.update(i, (10 - i) as f64);
         }
@@ -105,7 +162,7 @@ mod tests {
 
     #[test]
     fn non_power_of_two_sizes() {
-        let mut t = MinTree::new(7);
+        let mut t: MinTree = MinTree::new(7);
         for i in 0..7 {
             t.update(i, i as f64 + 1.0);
         }
@@ -123,7 +180,7 @@ mod tests {
     fn matches_linear_scan_randomized() {
         let mut rng = crate::sim::Rng::new(99);
         let n = 37;
-        let mut t = MinTree::new(n);
+        let mut t: MinTree = MinTree::new(n);
         let mut keys = vec![0.0f64; n];
         for step in 0..2000 {
             let i = rng.below(n as u64) as usize;
@@ -144,9 +201,39 @@ mod tests {
 
     #[test]
     fn single_element() {
-        let mut t = MinTree::new(1);
+        let mut t: MinTree = MinTree::new(1);
         t.update(0, 42.0);
         assert_eq!(t.argmin(), 0);
         assert_eq!(t.min_key(), 42.0);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        // Matches Iterator::min_by's first-minimal convention — placement
+        // tie-breaks must be identical to the legacy linear scans.
+        let mut t: MinTree = MinTree::new(8);
+        for i in 0..8 {
+            t.update(i, 5.0);
+        }
+        assert_eq!(t.argmin(), 0);
+        t.update(0, 9.0);
+        assert_eq!(t.argmin(), 1);
+        t.update(4, 5.0); // still tied with 1,2,3,...
+        assert_eq!(t.argmin(), 1);
+    }
+
+    #[test]
+    fn lexicographic_depth_estwork_keys() {
+        let mut t: MinTree<(u32, f64)> = MinTree::new(4);
+        t.update(0, (2, 1.0));
+        t.update(1, (1, 100.0));
+        t.update(2, (1, 50.0));
+        t.update(3, (3, 0.0));
+        // depth dominates; est_work breaks depth ties.
+        assert_eq!(t.argmin(), 2);
+        t.update(2, (1, 200.0));
+        assert_eq!(t.argmin(), 1);
+        t.update(1, <(u32, f64)>::MAX_KEY); // tombstone
+        assert_eq!(t.argmin(), 2);
     }
 }

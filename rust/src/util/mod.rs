@@ -5,7 +5,7 @@ use std::cmp::Ordering;
 use std::fmt;
 
 mod mintree;
-pub use mintree::MinTree;
+pub use mintree::{IndexKey, MinTree};
 
 /// Simulation time in seconds since simulation start.
 pub type Time = f64;

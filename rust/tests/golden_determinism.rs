@@ -1,0 +1,301 @@
+//! Golden equivalence: the composable `World` runner must reproduce the
+//! pre-refactor monolithic `simulate_with` loop **bit-exactly** — same
+//! event count, same end time, same per-task delay sequences — for both
+//! the Eagle baseline and CloudCoaster (manager + stealing + revocation
+//! paths) on fixed-seed workloads.
+//!
+//! The oracle below (`legacy_simulate`) is a line-faithful copy of the
+//! monolithic event loop the refactor decomposed (match-dispatch over
+//! events, inline stealing, in-loop manager calls), driven through the
+//! same public cluster/scheduler/manager APIs. Any divergence in event
+//! ordering, RNG stream usage or bookkeeping introduced by the
+//! `World`/`Component` decomposition shows up here as a hard failure.
+
+use cloudcoaster::cluster::{Cluster, ServerState};
+use cloudcoaster::coordinator::runner::{simulate, SimConfig};
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::sched::{Hybrid, SchedCtx, Scheduler};
+use cloudcoaster::sim::{Engine, Event, Rng};
+use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
+use cloudcoaster::trace::Workload;
+use cloudcoaster::transient::{Budget, ManagerConfig, TransientManager};
+use cloudcoaster::util::{JobId, TaskId, Time};
+
+/// What the oracle produces for comparison.
+struct LegacyResult {
+    end_time: Time,
+    events: u64,
+    short_delays: Vec<f64>,
+    long_delays: Vec<f64>,
+    tasks_finished: u64,
+    transients_requested: u64,
+    manager_stats: Option<(u64, u64, u64)>,
+}
+
+/// Verbatim port of the pre-refactor steal helper.
+fn legacy_try_steal(
+    cluster: &mut Cluster,
+    thief: cloudcoaster::util::ServerId,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+    engine: &mut Engine,
+    rec: &mut Recorder,
+) {
+    for probe in 0..cfg.steal_probes {
+        let victim = if probe % 2 == 0 {
+            let shorts = cluster.short_reserved.len() + cluster.transient_pool.len();
+            if shorts == 0 {
+                continue;
+            }
+            let k = rng.below(shorts as u64) as usize;
+            if k < cluster.short_reserved.len() {
+                cluster.short_reserved[k]
+            } else {
+                cluster.transient_pool[k - cluster.short_reserved.len()]
+            }
+        } else {
+            cluster.general[rng.below(cluster.general.len() as u64) as usize]
+        };
+        if cluster.server(victim).queue.is_empty() {
+            continue;
+        }
+        if cluster.steal_short_tasks(victim, thief, cfg.steal_batch, engine, rec) > 0 {
+            return;
+        }
+    }
+}
+
+/// Verbatim port of the pre-refactor monolithic event loop (reactive
+/// path; the golden configs don't use predictive resizing).
+fn legacy_simulate(
+    workload: &Workload,
+    scheduler: &mut dyn Scheduler,
+    cfg: &SimConfig,
+) -> LegacyResult {
+    assert!(
+        !cfg.manager.as_ref().map(|m| m.predictive).unwrap_or(false),
+        "oracle covers the reactive path only"
+    );
+    let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
+    let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(r);
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut sched_rng = root_rng.fork(0x5C); // probe sampling stream
+    let mut manager = cfg
+        .manager
+        .clone()
+        .map(|m| TransientManager::new(m, root_rng.fork(0x7A)));
+
+    let mut job_remaining: Vec<u32> =
+        workload.jobs.iter().map(|j| j.num_tasks() as u32).collect();
+    let mut outstanding_tasks: u64 = workload.num_tasks() as u64;
+    let mut next_job = 0usize;
+    let mut task_ids: Vec<TaskId> = Vec::new();
+
+    if !workload.jobs.is_empty() {
+        engine.schedule(workload.jobs[0].arrival, Event::JobArrival(JobId(0)));
+        engine.schedule(cfg.snapshot_interval, Event::Snapshot);
+    }
+
+    while let Some((now, event)) = engine.pop() {
+        let mut long_event = false;
+        match event {
+            Event::JobArrival(jid) => {
+                let job = &workload.jobs[jid.index()];
+                task_ids.clear();
+                for &d in &job.task_durations {
+                    task_ids.push(cluster.add_task(job.id, d, job.is_long, now));
+                }
+                let mut ctx = SchedCtx {
+                    cluster: &mut cluster,
+                    engine: &mut engine,
+                    rec: &mut rec,
+                    rng: &mut sched_rng,
+                };
+                scheduler.place_job(job, &task_ids, &mut ctx);
+                long_event = job.is_long;
+                next_job = jid.index() + 1;
+                if next_job < workload.jobs.len() {
+                    engine.schedule(
+                        workload.jobs[next_job].arrival,
+                        Event::JobArrival(JobId(next_job as u32)),
+                    );
+                }
+            }
+            Event::TaskFinish { server, task } => {
+                let (is_long, jid) = {
+                    let t = cluster.task(task);
+                    if t.state != cloudcoaster::cluster::TaskState::Running
+                        || t.ran_on != Some(server)
+                    {
+                        continue;
+                    }
+                    (t.is_long, t.job)
+                };
+                let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                if drained {
+                    cluster.retire(server, now, &mut rec);
+                } else if cfg.steal_probes > 0
+                    && cluster.server(server).is_idle()
+                    && cluster.server(server).accepting()
+                {
+                    legacy_try_steal(&mut cluster, server, cfg, &mut sched_rng, &mut engine, &mut rec);
+                }
+                outstanding_tasks -= 1;
+                let rem = &mut job_remaining[jid.index()];
+                *rem -= 1;
+                if *rem == 0 {
+                    let job = &workload.jobs[jid.index()];
+                    rec.job_finished(job.is_long, now - job.arrival);
+                }
+                long_event = is_long;
+            }
+            Event::TransientReady(sid) => {
+                if let Some(mgr) = manager.as_mut() {
+                    mgr.on_ready(sid, &mut cluster, &engine, &mut rec);
+                }
+            }
+            Event::RevocationWarning(sid) => {
+                if let Some(mgr) = manager.as_mut() {
+                    mgr.on_warning(sid, &mut cluster, &engine, &mut rec);
+                }
+            }
+            Event::Revoked(sid) => {
+                let state = cluster.server(sid).state;
+                if matches!(state, ServerState::Active | ServerState::Draining) {
+                    let orphans = cluster.revoke(sid, now, &mut rec);
+                    if !orphans.is_empty() {
+                        let mut ctx = SchedCtx {
+                            cluster: &mut cluster,
+                            engine: &mut engine,
+                            rec: &mut rec,
+                            rng: &mut sched_rng,
+                        };
+                        scheduler.replace_orphans(&orphans, &mut ctx);
+                    }
+                }
+            }
+            Event::DrainComplete(sid) => {
+                if cluster.server(sid).state == ServerState::Draining
+                    && cluster.server(sid).is_idle()
+                {
+                    cluster.retire(sid, now, &mut rec);
+                }
+            }
+            Event::Snapshot => {
+                let lr = cluster.long_load_ratio();
+                rec.snapshot(now, lr, cluster.transient_pool.len() as f64);
+                if outstanding_tasks > 0 || next_job < workload.jobs.len() {
+                    engine.schedule_after(cfg.snapshot_interval, Event::Snapshot);
+                }
+            }
+        }
+        if long_event {
+            if let Some(mgr) = manager.as_mut() {
+                mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+            }
+        }
+    }
+
+    let end_time = engine.now();
+    let live: Vec<_> = cluster
+        .servers
+        .iter()
+        .filter(|s| {
+            s.kind == cloudcoaster::cluster::ServerKind::Transient
+                && matches!(s.state, ServerState::Active | ServerState::Draining)
+        })
+        .map(|s| s.id)
+        .collect();
+    for sid in live {
+        cluster.retire(sid, end_time, &mut rec);
+    }
+    assert_eq!(outstanding_tasks, 0, "oracle lost tasks");
+
+    LegacyResult {
+        end_time,
+        events: engine.processed(),
+        short_delays: rec.short_delays.as_slice().to_vec(),
+        long_delays: rec.long_delays.as_slice().to_vec(),
+        tasks_finished: rec.tasks_finished,
+        transients_requested: rec.transients_requested,
+        manager_stats: manager.map(|m| (m.adds, m.drains, m.failed_requests)),
+    }
+}
+
+fn golden_workload(seed: u64) -> Workload {
+    let mut p = YahooLikeParams::default();
+    p.horizon = 4000.0;
+    yahoo_like(&p, &mut Rng::new(seed))
+}
+
+fn assert_equivalent(workload: &Workload, cfg: &SimConfig, mk: impl Fn() -> Hybrid) {
+    let mut legacy_sched = mk();
+    let legacy = legacy_simulate(workload, &mut legacy_sched, cfg);
+    let mut world_sched = mk();
+    let world = simulate(workload, &mut world_sched, cfg);
+
+    assert_eq!(world.events, legacy.events, "event count diverged");
+    assert_eq!(world.end_time, legacy.end_time, "end time diverged");
+    assert_eq!(world.rec.tasks_finished, legacy.tasks_finished);
+    assert_eq!(world.rec.transients_requested, legacy.transients_requested);
+    assert_eq!(
+        world.rec.short_delays.as_slice(),
+        legacy.short_delays.as_slice(),
+        "short-delay sequence diverged"
+    );
+    assert_eq!(
+        world.rec.long_delays.as_slice(),
+        legacy.long_delays.as_slice(),
+        "long-delay sequence diverged"
+    );
+    assert_eq!(world.manager_stats, legacy.manager_stats);
+}
+
+#[test]
+fn world_matches_legacy_eagle() {
+    for seed in [3u64, 9, 17] {
+        let w = golden_workload(seed);
+        let mut cfg = SimConfig { n_general: 128, n_short_reserved: 8, ..Default::default() };
+        cfg.seed = seed;
+        assert_equivalent(&w, &cfg, || Hybrid::eagle(2.0));
+    }
+}
+
+#[test]
+fn world_matches_legacy_cloudcoaster() {
+    for seed in [3u64, 5] {
+        let w = golden_workload(seed);
+        let mut cfg = SimConfig { n_general: 128, n_short_reserved: 4, ..Default::default() };
+        cfg.seed = seed;
+        cfg.manager = Some(ManagerConfig {
+            threshold: 0.6,
+            ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0))
+        });
+        assert_equivalent(&w, &cfg, || Hybrid::cloudcoaster(2.0));
+    }
+}
+
+#[test]
+fn world_matches_legacy_under_revocations() {
+    let w = golden_workload(5);
+    let mut cfg = SimConfig { n_general: 128, n_short_reserved: 4, ..Default::default() };
+    cfg.seed = 5;
+    let mut mgr = ManagerConfig {
+        threshold: 0.5,
+        ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0))
+    };
+    mgr.market.mttf = Some(600.0); // aggressive revocations: orphan path
+    cfg.manager = Some(mgr);
+    assert_equivalent(&w, &cfg, || Hybrid::cloudcoaster(2.0));
+}
+
+#[test]
+fn world_matches_legacy_without_stealing() {
+    let w = golden_workload(11);
+    let mut cfg = SimConfig { n_general: 96, n_short_reserved: 8, ..Default::default() };
+    cfg.seed = 11;
+    cfg.steal_probes = 0;
+    assert_equivalent(&w, &cfg, || Hybrid::eagle(2.0));
+}

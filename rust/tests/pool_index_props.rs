@@ -1,0 +1,189 @@
+//! Property tests for the per-pool load indexes: under randomized
+//! enqueue / finish / steal / provision / drain / revoke sequences, every
+//! indexed least-loaded answer must equal the naive linear scan it
+//! replaced — including tie-breaking (`Iterator::min_by` first-minimal).
+
+use cloudcoaster::cluster::{Cluster, QueuePolicy, TaskState};
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::sim::{Engine, Event, Rng};
+use cloudcoaster::testkit::{property, usize_in};
+use cloudcoaster::util::{JobId, ServerId};
+
+/// The scan `least_loaded_general` replaced.
+fn naive_general(cluster: &Cluster) -> ServerId {
+    *cluster
+        .general
+        .iter()
+        .min_by(|&&a, &&b| cluster.server(a).est_work.total_cmp(&cluster.server(b).est_work))
+        .expect("non-empty general partition")
+}
+
+/// The scan `least_loaded_short_reserved` replaced (accepting filter is
+/// vacuous for on-demand servers but kept for faithfulness).
+fn naive_short(cluster: &Cluster) -> Option<ServerId> {
+    cluster
+        .short_reserved
+        .iter()
+        .copied()
+        .filter(|&s| cluster.server(s).accepting())
+        .min_by(|&a, &b| {
+            cluster.server(a).est_work.total_cmp(&cluster.server(b).est_work)
+        })
+}
+
+/// The scan `transient_drain_victim` replaced: first-minimal
+/// `(depth, est_work)` in transient-pool (ready) order.
+fn naive_victim(cluster: &Cluster) -> Option<ServerId> {
+    cluster
+        .transient_pool
+        .iter()
+        .min_by(|&&a, &&b| {
+            let sa = cluster.server(a);
+            let sb = cluster.server(b);
+            (sa.depth(), sa.est_work)
+                .partial_cmp(&(sb.depth(), sb.est_work))
+                .expect("est_work is never NaN")
+        })
+        .copied()
+}
+
+fn check_index_matches_scans(cluster: &Cluster) {
+    assert_eq!(
+        cluster.least_loaded_general(),
+        naive_general(cluster),
+        "general index diverged from linear scan"
+    );
+    assert_eq!(
+        cluster.least_loaded_short_reserved(),
+        naive_short(cluster),
+        "short index diverged from linear scan"
+    );
+    assert_eq!(
+        cluster.transient_drain_victim(),
+        naive_victim(cluster),
+        "transient index diverged from linear scan"
+    );
+}
+
+/// A server the scheduler may legally target (accepting).
+fn random_target(cluster: &Cluster, rng: &mut Rng) -> ServerId {
+    let n_candidates =
+        cluster.general.len() + cluster.short_reserved.len() + cluster.transient_pool.len();
+    let k = rng.below(n_candidates as u64) as usize;
+    if k < cluster.general.len() {
+        cluster.general[k]
+    } else if k < cluster.general.len() + cluster.short_reserved.len() {
+        cluster.short_reserved[k - cluster.general.len()]
+    } else {
+        cluster.transient_pool[k - cluster.general.len() - cluster.short_reserved.len()]
+    }
+}
+
+#[test]
+fn pool_index_matches_naive_scans_under_random_ops() {
+    property("pool index == linear scan", 40, |rng| {
+        let n_general = usize_in(rng, 2, 24);
+        let n_short = usize_in(rng, 1, 6);
+        let policy = if rng.f64() < 0.5 {
+            QueuePolicy::Fifo
+        } else {
+            QueuePolicy::Srpt { starvation_limit: 100.0 }
+        };
+        let mut cluster = Cluster::new(n_general, n_short, policy);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(3.0);
+
+        for _ in 0..250 {
+            match rng.below(12) {
+                // Place a task (ties are common: many idle servers with
+                // est_work 0, exercising first-minimal tie-breaks).
+                0..=5 => {
+                    let sid = random_target(&cluster, rng);
+                    let is_long =
+                        cluster.general.contains(&sid) && rng.f64() < 0.3;
+                    let dur = if rng.f64() < 0.2 {
+                        10.0 // deliberate exact-duration ties
+                    } else {
+                        0.5 + rng.f64() * 50.0
+                    };
+                    let t = cluster.add_task(JobId(0), dur, is_long, engine.now());
+                    cluster.enqueue(t, sid, &mut engine, &mut rec);
+                    // Occasionally mirror a short onto an on-demand
+                    // server (the §3.3 duplicate-copy path).
+                    if !is_long && rng.f64() < 0.2 {
+                        if let Some(od) = cluster.least_loaded_short_reserved() {
+                            if od != sid && cluster.task(t).state == TaskState::Queued {
+                                cluster.enqueue(t, od, &mut engine, &mut rec);
+                            }
+                        }
+                    }
+                }
+                // Advance the simulation: process one finish event.
+                6..=8 => {
+                    if let Some((now, ev)) = engine.pop() {
+                        if let Event::TaskFinish { server, task } = ev {
+                            let t = cluster.task(task);
+                            if t.state == TaskState::Running && t.ran_on == Some(server) {
+                                let drained =
+                                    cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                                if drained {
+                                    cluster.retire(server, now, &mut rec);
+                                }
+                            }
+                        }
+                    }
+                }
+                // Lease a transient.
+                9 => {
+                    if cluster.transient_pool.len() < 12 {
+                        let sid = cluster.request_transient(engine.now());
+                        cluster.transient_ready(sid, engine.now(), &mut rec);
+                    }
+                }
+                // Gracefully drain one.
+                10 => {
+                    if !cluster.transient_pool.is_empty() {
+                        let k = rng.below(cluster.transient_pool.len() as u64) as usize;
+                        let sid = cluster.transient_pool[k];
+                        if cluster.begin_drain(sid) {
+                            cluster.retire(sid, engine.now(), &mut rec);
+                        }
+                    }
+                }
+                // Revoke one; re-place any orphans like the default
+                // scheduler fallback does.
+                _ => {
+                    if !cluster.transient_pool.is_empty() {
+                        let k = rng.below(cluster.transient_pool.len() as u64) as usize;
+                        let sid = cluster.transient_pool[k];
+                        let orphans = cluster.revoke(sid, engine.now(), &mut rec);
+                        for tid in orphans {
+                            let target = cluster
+                                .least_loaded_short_reserved()
+                                .unwrap_or_else(|| cluster.general[0]);
+                            cluster.enqueue(tid, target, &mut engine, &mut rec);
+                        }
+                    }
+                }
+            }
+            check_index_matches_scans(&cluster);
+            cluster.check_invariants();
+        }
+
+        // Drain the world to quiescence; the index must stay exact the
+        // whole way down.
+        while let Some((now, ev)) = engine.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                let t = cluster.task(task);
+                if t.state == TaskState::Running && t.ran_on == Some(server) {
+                    let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                    if drained {
+                        cluster.retire(server, now, &mut rec);
+                    }
+                }
+            }
+            check_index_matches_scans(&cluster);
+        }
+        cluster.check_invariants();
+    });
+}

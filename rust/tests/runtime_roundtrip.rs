@@ -3,8 +3,11 @@
 //! pure-rust reference engine on randomized inputs. This is the rust-side
 //! half of the correctness story (the python side checks Pallas vs jnp).
 //!
-//! Tests are skipped (pass trivially) when `artifacts/` has not been
-//! built — run `make artifacts` first for full coverage.
+//! The whole suite is gated on the `xla` feature (the PJRT crate is not
+//! vendored in this offline build); tests are additionally skipped (pass
+//! trivially) when `artifacts/` has not been built — run `make artifacts`
+//! first for full coverage.
+#![cfg(feature = "xla")]
 
 use cloudcoaster::coordinator::report::artifacts_dir;
 use cloudcoaster::runtime::{Analytics, NativeAnalytics, XlaAnalytics};

@@ -1,0 +1,198 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build environment has no crate registry access, so the simulator
+//! vendors the small slice of anyhow's API it actually uses: the opaque
+//! [`Error`] type, the [`Result`] alias, the [`Context`] extension trait
+//! (on `Result` and `Option`), and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match upstream for this surface:
+//!
+//! * `?` converts any `E: std::error::Error + Send + Sync + 'static`.
+//! * `.context(..)` / `.with_context(..)` prepend a message layer.
+//! * `Display` prints the outermost message; `{:#}` prints the whole
+//!   chain separated by `": "`; `Debug` prints the chain with a
+//!   "Caused by" block (what `fn main() -> Result<()>` shows on exit).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque, context-carrying error. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: StdError>` conversion
+/// below cannot overlap the reflexive `From<Error> for Error`.
+pub struct Error {
+    /// Message layers, outermost context first; the last entry is the
+    /// root cause's rendering.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context layer (what `.context(..)` does).
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message layers, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("error"))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_prepends_layers() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let err = r.context("reading config").unwrap_err();
+        assert_eq!(err.to_string(), "reading config");
+        assert_eq!(format!("{err:#}"), "reading config: missing file");
+        assert!(format!("{err:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(err.to_string(), "slot 3");
+        assert_eq!(Some(5).context("never").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            ensure!(x != 1);
+            if x == 2 {
+                bail!("two is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(1).unwrap_err().to_string().contains("condition failed"));
+        assert!(f(2).unwrap_err().to_string().contains("two"));
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn error_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
