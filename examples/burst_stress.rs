@@ -1,7 +1,9 @@
-//! Flash-crowd stress scenario: a hand-built workload with one extreme
-//! long-job burst, showing the transient manager's adaptation timeline —
-//! the l_r trajectory, the transient fleet ramp, the provisioning lag,
-//! and the graceful drain afterwards.
+//! Flash-crowd stress scenario, composed from streaming combinators: a
+//! steady short-job stream [`Merge`]d with a hand-built long-job flash
+//! crowd, then intensified with a [`BurstStorm`] window — showing the
+//! transient manager's adaptation timeline (the l_r trajectory, the
+//! transient fleet ramp, the provisioning lag, and the graceful drain
+//! afterwards) and the streaming core's bounded memory.
 //!
 //! ```bash
 //! cargo run --release --offline --example burst_stress
@@ -10,10 +12,10 @@
 use anyhow::Result;
 
 use cloudcoaster::cluster::QueuePolicy;
-use cloudcoaster::coordinator::runner::{simulate, SimConfig};
+use cloudcoaster::coordinator::runner::{simulate_source, SimConfig};
 use cloudcoaster::sched::Hybrid;
 use cloudcoaster::sim::Rng;
-use cloudcoaster::trace::{Job, Workload};
+use cloudcoaster::trace::{BurstStorm, Job, Merge, VecSource};
 use cloudcoaster::transient::{Budget, ManagerConfig};
 use cloudcoaster::util::JobId;
 
@@ -23,29 +25,42 @@ fn main() -> Result<()> {
     let n_servers = 400;
     let n_short = 16;
     let mut rng = Rng::new(7);
-    let mut jobs: Vec<Job> = Vec::new();
 
     // Steady short-job stream over 4 hours.
     let horizon = 4.0 * 3600.0;
+    let mut shorts: Vec<Job> = Vec::new();
     let mut t = 0.0;
     while t < horizon {
         t += rng.exponential(4.0);
         let n = 1 + rng.below(8) as usize;
         let durs = (0..n).map(|_| rng.lognormal(3.0, 0.5)).collect();
-        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false });
+        shorts.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false });
     }
     // The flash crowd: at t=1h, a burst of long jobs saturates the
     // general partition within minutes.
-    for i in 0..40 {
-        let durs = (0..12).map(|_| rng.lognormal(7.2, 0.4)).collect();
-        jobs.push(Job {
-            id: JobId(0),
-            arrival: 3600.0 + i as f64 * 10.0,
-            task_durations: durs,
-            is_long: true,
-        });
-    }
-    let workload = Workload::new(jobs, 90.0);
+    let longs: Vec<Job> = (0..20)
+        .map(|i| {
+            let durs = (0..12).map(|_| rng.lognormal(7.2, 0.4)).collect();
+            Job {
+                id: JobId(0),
+                arrival: 3600.0 + i as f64 * 10.0,
+                task_durations: durs,
+                is_long: true,
+            }
+        })
+        .collect();
+
+    // Combinator pipeline: merge the streams, then double the arrival
+    // rate inside the crowd window — 40 long jobs land without ever
+    // materialising a combined trace.
+    let source = BurstStorm::new(
+        Box::new(Merge::new(
+            Box::new(VecSource::new(shorts, 90.0)),
+            Box::new(VecSource::new(longs, 90.0)),
+        )),
+        vec![(3600.0, 3800.0)],
+        2.0,
+    );
 
     let cfg = SimConfig {
         n_general: n_servers - n_short,
@@ -58,7 +73,7 @@ fn main() -> Result<()> {
         seed: 7,
     };
     let mut sched = Hybrid::cloudcoaster(2.0);
-    let res = simulate(&workload, &mut sched, &cfg);
+    let res = simulate_source(Box::new(source), &mut sched, &cfg, None);
 
     println!("flash-crowd adaptation timeline (one row per 5 min):");
     println!("{:>8} {:>8} {:>12}  fleet", "min", "l_r", "transients");
@@ -73,7 +88,7 @@ fn main() -> Result<()> {
     let (adds, drains, _) = res.manager_stats.unwrap();
     println!(
         "\n{} transients requested, {} drained; short delay mean {:.1}s p99 {:.1}s; \
-         {} stale copies skipped; {:.0}k events/s",
+         {} stale copies skipped; peak {} resident jobs; {:.0}k events/s",
         adds,
         drains,
         res.rec.short_delays.mean(),
@@ -82,6 +97,7 @@ fn main() -> Result<()> {
             d.percentile(0.99)
         },
         res.rec.stale_copies_skipped,
+        res.peak_resident_jobs,
         res.events_per_sec() / 1000.0,
     );
     Ok(())

@@ -69,11 +69,13 @@ fn main() -> Result<()> {
 
     // Custom-scenario composition: the same simulation as a `World` with
     // hand-picked components — here an Eagle run with *no* work stealer
-    // wired in, something that used to require a runner code change.
+    // wired in, something that used to require a runner code change. The
+    // world streams its arrivals from the eager workload built above
+    // (`World::from_workload`); a lazy source works identically.
     let sim_cfg = baseline_cfg.to_sim_config();
     let mut sched = Hybrid::eagle(2.0);
     let cluster = Cluster::new(sim_cfg.n_general, sim_cfg.n_short_reserved, sim_cfg.queue_policy);
-    let mut world = World::new(&workload, cluster, Recorder::new(1.0), sim_cfg.seed);
+    let mut world = World::from_workload(&workload, cluster, Recorder::new(1.0), sim_cfg.seed);
     world.add_component(Box::new(SnapshotSampler::new(sim_cfg.snapshot_interval)));
     world.add_component(Box::new(SchedulerComponent::new(&mut sched)));
     world.run();
@@ -84,6 +86,33 @@ fn main() -> Result<()> {
         world.engine.processed(),
         world.rec.short_delays.mean(),
         baseline.short_delay.mean,
+    );
+
+    // Declarative scenarios: the same workload with a 3x burst storm
+    // injected mid-run and the transient manager removed, straight from
+    // a `[scenario]` TOML block (the CLI equivalent is
+    // `cloudcoaster run --config FILE` or `--scenario burst-storm`).
+    // The scenario pipeline streams: peak resident jobs stay bounded by
+    // cluster load no matter how long the trace is.
+    let scenario_toml = r#"
+        [cluster]
+        servers = 500
+        short_partition = 16
+
+        [scenario]
+        name = "storm-managerless"
+        storm_windows = [3600, 5400]   # one storm hour into the run
+        storm_intensity = 3.0          # 3x arrival rate in-window
+        manager = "none"               # scheduler only, no TransientManager
+    "#;
+    let mut storm_cfg = ExperimentConfig::from_toml(scenario_toml)?;
+    storm_cfg.workload = cfg.workload.clone(); // same synthetic trace params
+    let storm = run_experiment_on(&storm_cfg, &workload, analytics.as_dyn())?;
+    println!("\n[scenario] {}", summary_line(&storm));
+    println!(
+        "storm scenario streamed {} tasks with at most {} jobs resident",
+        storm.short_delay.n + storm.long_delay.n,
+        storm.peak_resident_jobs,
     );
     Ok(())
 }

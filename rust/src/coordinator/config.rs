@@ -8,6 +8,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::QueuePolicy;
 use crate::coordinator::runner::SimConfig;
+use crate::coordinator::scenario::ScenarioSpec;
 use crate::coordinator::toml::{parse, Table};
 use crate::trace::synth::{GoogleLikeParams, YahooLikeParams};
 use crate::transient::{Budget, ManagerConfig, MarketConfig};
@@ -91,6 +92,9 @@ pub struct ExperimentConfig {
     pub snapshot_interval: f64,
     pub seed: u64,
     pub workload: WorkloadSource,
+    /// Declarative workload scenario (source + combinator stack +
+    /// optional manager-less override). `None` = plain workload.
+    pub scenario: Option<ScenarioSpec>,
 }
 
 impl ExperimentConfig {
@@ -115,6 +119,7 @@ impl ExperimentConfig {
             snapshot_interval: 60.0,
             seed: 42,
             workload: WorkloadSource::YahooLike(YahooLikeParams::default()),
+            scenario: None,
         }
     }
 
@@ -132,6 +137,17 @@ impl ExperimentConfig {
     /// `(1-p)·N_s` on-demand and manages up to `K = r·N_s·p` transients.
     pub fn to_sim_config(&self) -> SimConfig {
         let n_general = self.cluster_size - self.short_partition;
+        let mut sim = self.to_sim_config_inner(n_general);
+        // Scenario override: manager-less baseline keeps the cluster
+        // geometry of its scheduler but drops the TransientManager
+        // component entirely (scheduler-only wiring).
+        if self.scenario.as_ref().map(|s| s.manager_off).unwrap_or(false) {
+            sim.manager = None;
+        }
+        sim
+    }
+
+    fn to_sim_config_inner(&self, n_general: usize) -> SimConfig {
         match self.scheduler {
             SchedulerKind::CloudCoaster => {
                 let budget = Budget::new(self.short_partition, self.p, self.r);
@@ -240,6 +256,7 @@ impl ExperimentConfig {
         if let Some(v) = t.get("workload.csv").and_then(|v| v.as_str()) {
             cfg.workload = WorkloadSource::Csv(v.to_string());
         }
+        cfg.scenario = ScenarioSpec::from_table(&t)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -256,6 +273,9 @@ impl ExperimentConfig {
         }
         if !(0.0..=1.0).contains(&self.threshold) {
             bail!("threshold must be in [0,1]");
+        }
+        if let Some(scenario) = &self.scenario {
+            scenario.validate()?;
         }
         Ok(())
     }
@@ -316,6 +336,39 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[cluster]\nservers = 10\nshort_partition = 10\n").is_err());
         assert!(ExperimentConfig::from_toml("[transient]\nr = 0.5\n").is_err());
         assert!(ExperimentConfig::from_toml("[scheduler]\nkind = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn scenario_section_parses_and_overrides_manager() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [scenario]
+            name = "storm"
+            storm_windows = [600, 1200]
+            storm_intensity = 4
+            manager = "none"
+            "#,
+        )
+        .unwrap();
+        let spec = cfg.scenario.as_ref().unwrap();
+        assert_eq!(spec.name, "storm");
+        assert!(spec.manager_off);
+        assert!(spec.reshapes_workload());
+        // CloudCoaster geometry, but the manager component is dropped.
+        let sim = cfg.to_sim_config();
+        assert!(sim.manager.is_none());
+        assert_eq!(sim.n_short_reserved, 40); // still (1-p)·N_s
+    }
+
+    #[test]
+    fn config_without_scenario_has_none() {
+        let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
+        assert!(cfg.scenario.is_none());
+    }
+
+    #[test]
+    fn invalid_scenario_rejected_by_config() {
+        assert!(ExperimentConfig::from_toml("[scenario]\nstorm_windows = [9, 1]\n").is_err());
     }
 
     #[test]

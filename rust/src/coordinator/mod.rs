@@ -1,14 +1,20 @@
 //! The experiment coordinator: configuration (TOML-subset + programmatic),
-//! the simulation runner, parameter sweeps, and report generation.
+//! the declarative scenario registry, the simulation runner, parameter
+//! sweeps, and report generation.
 
 pub mod config;
 pub mod replicate;
 pub mod report;
 pub mod runner;
+pub mod scenario;
 pub mod sweep;
 pub mod toml;
 
 pub use config::{ExperimentConfig, SchedulerKind, WorkloadSource};
 pub use report::{run_experiment, Report};
-pub use runner::{build_world, simulate, simulate_with, RunResult, SimConfig};
+pub use runner::{
+    build_world, build_world_from_source, simulate, simulate_source, simulate_with,
+    RunResult, SimConfig,
+};
+pub use scenario::{CombinatorSpec, ScenarioSpec, SourceSpec};
 pub use sweep::{run_grid, run_sweep_parallel, GridPoint};

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::coordinator::config::{ExperimentConfig, SchedulerKind, WorkloadSource};
-use crate::coordinator::runner::{simulate_with, RunResult, SimConfig};
+use crate::coordinator::runner::{simulate_source, simulate_with, RunResult, SimConfig};
 use crate::metrics::Cdf;
 use crate::runtime::{Analytics, AnalyticsEngine};
 use crate::sched::{Centralized, Hybrid, Scheduler, Sparrow};
@@ -66,6 +66,8 @@ pub struct Report {
     pub events: u64,
     pub wall_ms: f64,
     pub events_per_sec: f64,
+    /// Streaming-memory high-water mark: jobs concurrently resident.
+    pub peak_resident_jobs: usize,
     /// Which analytics engine produced the CDF ("xla" or "native").
     pub analytics_engine: &'static str,
 }
@@ -101,13 +103,26 @@ pub fn build_scheduler(kind: SchedulerKind, probe_ratio: f64) -> Box<dyn Schedul
 /// Run one experiment end-to-end (workload synthesis → simulation →
 /// analytics) and distill the report.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Report> {
-    let workload = build_workload(cfg)?;
     let mut analytics = AnalyticsEngine::auto(&artifacts_dir());
+    if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
+        // Streaming scenario: no eager workload is ever materialised —
+        // memory stays O(active jobs) regardless of trace length.
+        return run_experiment_on(cfg, &Workload::default(), analytics.as_dyn());
+    }
+    let workload = build_workload(cfg)?;
     run_experiment_on(cfg, &workload, analytics.as_dyn())
 }
 
 /// Like [`run_experiment`] but with a shared workload + analytics engine
 /// (sweeps reuse both across runs).
+///
+/// When the config carries a scenario that reshapes the workload
+/// (non-`workload` source or a combinator stack), the run streams its
+/// own [`crate::trace::ArrivalSource`] pipeline and `workload` is
+/// ignored — scenario points on a sweep grid each synthesize lazily in
+/// O(active-jobs) memory. Passthrough scenarios (e.g. the manager-less
+/// baseline) keep the shared eager workload: the streamed and eager
+/// paths are bit-identical, and sharing skips re-synthesis.
 pub fn run_experiment_on(
     cfg: &ExperimentConfig,
     workload: &Workload,
@@ -115,7 +130,13 @@ pub fn run_experiment_on(
 ) -> Result<Report> {
     let sim_cfg: SimConfig = cfg.to_sim_config();
     let mut scheduler = build_scheduler(cfg.scheduler, cfg.probe_ratio);
-    let result = simulate_with(workload, scheduler.as_mut(), &sim_cfg, Some(&mut *analytics));
+    let result = match &cfg.scenario {
+        Some(spec) if spec.reshapes_workload() => {
+            let source = spec.build_source(cfg)?;
+            simulate_source(source, scheduler.as_mut(), &sim_cfg, Some(&mut *analytics))
+        }
+        _ => simulate_with(workload, scheduler.as_mut(), &sim_cfg, Some(&mut *analytics)),
+    };
     distill(cfg, result, analytics)
 }
 
@@ -144,8 +165,14 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         "sparrow" => "sparrow",
         _ => "centralized",
     };
+    let name = match &cfg.scenario {
+        Some(spec) if spec.name != "default" => {
+            format!("{} r={} [{}]", scheduler, cfg.r, spec.name)
+        }
+        _ => format!("{} r={}", scheduler, cfg.r),
+    };
     Ok(Report {
-        name: format!("{} r={}", scheduler, cfg.r),
+        name,
         scheduler,
         r: cfg.r,
         short_delay: DelayStats::of(&mut run.rec.short_delays),
@@ -163,6 +190,7 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         events: run.events,
         wall_ms: run.wall_ms,
         events_per_sec: run.events as f64 / (run.wall_ms / 1000.0).max(1e-9),
+        peak_resident_jobs: run.peak_resident_jobs,
         analytics_engine: analytics.name(),
     })
 }
@@ -245,8 +273,20 @@ pub fn summary_line(rep: &Report) -> String {
     )
 }
 
-/// Workload description for reports.
+/// Workload description for reports. Streaming scenarios are described
+/// by their spec instead of materialised (that would defeat the O(1)
+/// memory point of replaying a long trace).
 pub fn workload_summary(cfg: &ExperimentConfig) -> Result<String> {
+    if let Some(spec) = &cfg.scenario {
+        if spec.reshapes_workload() {
+            return Ok(format!(
+                "scenario '{}' ({} combinator{}, streamed)",
+                spec.name,
+                spec.stack.len(),
+                if spec.stack.len() == 1 { "" } else { "s" },
+            ));
+        }
+    }
     Ok(TraceStats::of(&build_workload(cfg)?).summary())
 }
 

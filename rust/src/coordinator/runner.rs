@@ -6,9 +6,16 @@
 //! The event loop itself lives in [`crate::sim::World`]; this module is
 //! pure wiring, so alternative scenarios (manager-less baselines, custom
 //! samplers, injected burst storms) are a different `add_component`
-//! sequence, not a different runner. Component dispatch order matters
-//! for determinism and mirrors the original monolithic loop: sampler →
-//! manager → scheduler → stealer.
+//! sequence — or a different [`ArrivalSource`] pipeline — not a
+//! different runner. Component dispatch order matters for determinism
+//! and mirrors the original monolithic loop: sampler → manager →
+//! scheduler → stealer.
+//!
+//! Entry points: [`simulate`] / [`simulate_with`] replay an eager
+//! [`Workload`] (back-compat; internally a [`WorkloadReplay`] stream),
+//! [`simulate_source`] streams any [`ArrivalSource`] — including the
+//! declarative `[scenario]` pipelines resolved by
+//! [`crate::coordinator::scenario`].
 
 use std::time::Instant;
 
@@ -18,7 +25,7 @@ use crate::sched::Scheduler;
 use crate::sim::{
     SchedulerComponent, SnapshotSampler, TransientManagerComponent, WorkStealer, World,
 };
-use crate::trace::Workload;
+use crate::trace::{ArrivalSource, Workload, WorkloadReplay};
 use crate::transient::ManagerConfig;
 use crate::util::Time;
 
@@ -69,6 +76,9 @@ pub struct RunResult {
     pub wall_ms: f64,
     /// (adds, drains, failed_requests) if a manager ran.
     pub manager_stats: Option<(u64, u64, u64)>,
+    /// High-water mark of concurrently resident job records — bounded
+    /// by cluster load, not trace length, on the streaming path.
+    pub peak_resident_jobs: usize,
 }
 
 impl RunResult {
@@ -78,12 +88,25 @@ impl RunResult {
     }
 }
 
-/// Build the standard component wiring for `cfg` on a fresh [`World`].
-///
-/// Exposed so custom scenarios can start from the canonical composition
-/// and add/replace components.
+/// Build the standard component wiring for `cfg` on a fresh [`World`]
+/// replaying an eager workload (back-compat wrapper over
+/// [`build_world_from_source`]).
 pub fn build_world<'a>(
     workload: &'a Workload,
+    scheduler: &'a mut (dyn Scheduler + 'a),
+    cfg: &SimConfig,
+    analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
+) -> World<'a> {
+    build_world_from_source(Box::new(WorkloadReplay::new(workload)), scheduler, cfg, analytics)
+}
+
+/// Build the standard component wiring for `cfg` on a fresh [`World`]
+/// over any streaming [`ArrivalSource`].
+///
+/// Exposed so custom scenarios can start from the canonical composition
+/// and add/replace components (or swap in a combinator pipeline).
+pub fn build_world_from_source<'a>(
+    source: Box<dyn ArrivalSource + 'a>,
     scheduler: &'a mut (dyn Scheduler + 'a),
     cfg: &SimConfig,
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
@@ -91,7 +114,7 @@ pub fn build_world<'a>(
     let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
     let cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
     let rec = Recorder::new(r);
-    let mut world = World::new(workload, cluster, rec, cfg.seed);
+    let mut world = World::new(source, cluster, rec, cfg.seed);
 
     // Snapshot sampler first: it records l_r before any same-event
     // mutation and publishes the prewarm forecast the manager consumes.
@@ -148,13 +171,26 @@ pub fn simulate_with<'a>(
     cfg: &SimConfig,
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
 ) -> RunResult {
+    simulate_source(Box::new(WorkloadReplay::new(workload)), scheduler, cfg, analytics)
+}
+
+/// Run a streaming [`ArrivalSource`] under `scheduler` with the given
+/// config — the scenario-pipeline entry point. Memory stays O(active
+/// tasks): the source is pulled one job ahead of the simulation clock.
+pub fn simulate_source<'a>(
+    source: Box<dyn ArrivalSource + 'a>,
+    scheduler: &'a mut (dyn Scheduler + 'a),
+    cfg: &SimConfig,
+    analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
+) -> RunResult {
     let wall0 = Instant::now();
     let name = scheduler.name().to_string();
-    let mut world = build_world(workload, scheduler, cfg, analytics);
+    let mut world = build_world_from_source(source, scheduler, cfg, analytics);
     world.run();
     let manager_stats = world.component::<TransientManagerComponent>().map(|m| m.stats());
     let end_time = world.engine.now();
     let events = world.engine.processed();
+    let peak_resident_jobs = world.peak_resident_jobs();
     RunResult {
         scheduler: name,
         rec: world.rec,
@@ -162,6 +198,7 @@ pub fn simulate_with<'a>(
         events,
         wall_ms: wall0.elapsed().as_secs_f64() * 1000.0,
         manager_stats,
+        peak_resident_jobs,
     }
 }
 
@@ -263,6 +300,28 @@ mod tests {
         let mut sched = Hybrid::eagle(2.0);
         let res = simulate(&w, &mut sched, &small_cfg());
         assert!(res.manager_stats.is_none());
+    }
+
+    #[test]
+    fn streaming_source_matches_eager_replay() {
+        use crate::trace::synth::YahooSource;
+        let mut p = YahooLikeParams::default();
+        p.horizon = 4000.0;
+        let cfg = SimConfig { seed: 3, ..small_cfg() };
+        let w = yahoo_like(&p, &mut Rng::new(3));
+        let mut eager_sched = Hybrid::eagle(2.0);
+        let eager = simulate(&w, &mut eager_sched, &cfg);
+        let mut stream_sched = Hybrid::eagle(2.0);
+        let source = Box::new(YahooSource::new(&p, &mut Rng::new(3)));
+        let streamed = simulate_source(source, &mut stream_sched, &cfg, None);
+        assert_eq!(eager.events, streamed.events);
+        assert_eq!(eager.end_time, streamed.end_time);
+        assert_eq!(
+            eager.rec.short_delays.as_slice(),
+            streamed.rec.short_delays.as_slice()
+        );
+        // Resident jobs are bounded by load, not the trace.
+        assert!(streamed.peak_resident_jobs < w.num_jobs());
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! The declarative scenario registry: a [`ScenarioSpec`] names an
+//! arrival source, an ordered combinator stack, and an optional
+//! manager-less override — everything the runner needs to stream a
+//! workload scenario, so new arrival patterns are registry wiring, not
+//! new code paths.
+//!
+//! A spec comes from one of two places:
+//!
+//! * the `[scenario]` section of a config file (see
+//!   [`ScenarioSpec::from_table`]) — fully declarative:
+//!
+//!   ```toml
+//!   [workload]
+//!   csv = "trace.csv"            # base trace (any workload source works)
+//!
+//!   [scenario]
+//!   name = "storm-replay"
+//!   storm_windows = [3600, 7200] # start,end pairs (seconds)
+//!   storm_intensity = 3.0        # arrival-rate multiplier in-window
+//!   manager = "none"             # manager-less baseline wiring
+//!   ```
+//!
+//! * the named registry ([`named`], CLI `--scenario NAME`) — canned
+//!   compositions over the experiment's configured workload:
+//!   `default`, `managerless` (scheduler only, no `TransientManager`
+//!   component — the ROADMAP's manager-less baseline), `burst-storm`
+//!   (storm windows injected into the configured workload; over a CSV
+//!   workload this is a burst-storm trace replay).
+//!
+//! Combinators declared in one `[scenario]` block apply in a fixed
+//! canonical order: `TimeWindow` → `RateScale` → `MergeCsv` →
+//! `SpliceCsv` → `BurstStorm` → `Take` (slice, scale, compose, inject,
+//! cap). Scenario parameters are plain config data, so sweeps can put
+//! them on a grid axis like any other knob (see
+//! [`crate::coordinator::sweep::storm_intensity_points`]).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{ExperimentConfig, WorkloadSource};
+use crate::coordinator::toml::{Table, Value};
+use crate::sim::Rng;
+use crate::trace::synth::{GoogleLikeParams, GoogleSource, YahooLikeParams, YahooSource};
+use crate::trace::{self, ArrivalSource, CsvStream};
+use crate::util::Time;
+
+/// Scenario names resolvable by [`named`] / the CLI `--scenario` flag.
+pub const SCENARIO_NAMES: &[&str] = &["default", "managerless", "burst-storm"];
+
+/// Every key the `[scenario]` TOML section understands (closed set:
+/// unknown keys are config errors, not silent no-ops).
+const SCENARIO_KEYS: &[&str] = &[
+    "name",
+    "source",
+    "csv",
+    "manager",
+    "window_start",
+    "window_end",
+    "rate_scale",
+    "merge_csv",
+    "splice_csv",
+    "splice_at",
+    "storm_windows",
+    "storm_intensity",
+    "take",
+];
+
+/// Which base source a scenario streams from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SourceSpec {
+    /// Inherit the experiment's `[workload]` selection (default).
+    Workload,
+    /// Yahoo-like synthesis (the experiment's params when its workload
+    /// is Yahoo-like, calibrated defaults otherwise).
+    Yahoo,
+    /// Google-like synthesis (same inheritance rule).
+    Google,
+    /// Streaming CSV replay of the given trace file.
+    Csv(String),
+}
+
+/// One combinator in a scenario's stack.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CombinatorSpec {
+    /// Slice `[start, end)` out of the source, rebased to t = 0.
+    TimeWindow { start: Time, end: Time },
+    /// Multiply the arrival rate by compressing time.
+    RateScale { factor: f64 },
+    /// Merge a second, CSV-replayed source by arrival time.
+    MergeCsv { path: String },
+    /// Switch to a CSV-replayed source at time `at` (regime change).
+    SpliceCsv { path: String, at: Time },
+    /// Inject rate-multiplied storm windows.
+    BurstStorm { windows: Vec<(Time, Time)>, intensity: f64 },
+    /// Cap the stream at `jobs` jobs.
+    Take { jobs: usize },
+}
+
+impl CombinatorSpec {
+    fn validate(&self) -> Result<()> {
+        match self {
+            CombinatorSpec::TimeWindow { start, end } => {
+                if !(*start >= 0.0 && start < end && end.is_finite()) {
+                    bail!("scenario window must satisfy 0 <= start < end (got {start}..{end})");
+                }
+            }
+            CombinatorSpec::RateScale { factor } => {
+                if !(*factor > 0.0 && factor.is_finite()) {
+                    bail!("scenario rate_scale must be positive (got {factor})");
+                }
+            }
+            CombinatorSpec::MergeCsv { .. } => {}
+            CombinatorSpec::SpliceCsv { at, .. } => {
+                if !(*at >= 0.0 && at.is_finite()) {
+                    bail!("scenario splice_at must be finite and >= 0 (got {at})");
+                }
+            }
+            CombinatorSpec::BurstStorm { windows, intensity } => {
+                if windows.is_empty() {
+                    bail!("burst storm needs at least one window");
+                }
+                for &(s, e) in windows {
+                    if !(s.is_finite() && e.is_finite() && s >= 0.0 && s < e) {
+                        bail!("storm window must satisfy 0 <= start < end (got {s}..{e})");
+                    }
+                }
+                if !(*intensity >= 1.0 && intensity.is_finite()) {
+                    bail!("storm intensity must be >= 1 (got {intensity})");
+                }
+            }
+            CombinatorSpec::Take { jobs } => {
+                if *jobs == 0 {
+                    bail!("scenario take must be > 0");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply<'a>(
+        &self,
+        src: Box<dyn ArrivalSource + 'a>,
+    ) -> Result<Box<dyn ArrivalSource + 'a>> {
+        Ok(match self {
+            CombinatorSpec::TimeWindow { start, end } => {
+                Box::new(trace::TimeWindow::new(src, *start, *end))
+            }
+            CombinatorSpec::RateScale { factor } => {
+                Box::new(trace::RateScale::new(src, *factor))
+            }
+            CombinatorSpec::MergeCsv { path } => Box::new(trace::Merge::new(
+                src,
+                Box::new(CsvStream::open(Path::new(path), 90.0)?),
+            )),
+            CombinatorSpec::SpliceCsv { path, at } => Box::new(trace::Splice::new(
+                src,
+                Box::new(CsvStream::open(Path::new(path), 90.0)?),
+                *at,
+            )),
+            CombinatorSpec::BurstStorm { windows, intensity } => {
+                Box::new(trace::BurstStorm::new(src, windows.clone(), *intensity))
+            }
+            CombinatorSpec::Take { jobs } => Box::new(trace::Take::new(src, *jobs)),
+        })
+    }
+}
+
+/// A declarative workload scenario: base source + combinator stack +
+/// optional manager-less override.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub source: SourceSpec,
+    /// Combinators, applied innermost-first.
+    pub stack: Vec<CombinatorSpec>,
+    /// Force the transient manager off (`manager = "none"`): scheduler
+    /// only, no `TransientManager` component — the manager-less
+    /// baseline wiring.
+    pub manager_off: bool,
+}
+
+impl ScenarioSpec {
+    /// The identity scenario: the configured workload, no combinators,
+    /// manager wiring inherited.
+    pub fn passthrough() -> Self {
+        ScenarioSpec {
+            name: "default".to_string(),
+            source: SourceSpec::Workload,
+            stack: Vec::new(),
+            manager_off: false,
+        }
+    }
+
+    /// Does this scenario change the *workload* at all? (A passthrough
+    /// scenario can keep using the eager shared-workload path — e.g. in
+    /// sweeps — because the streamed and eager runs are bit-identical.)
+    pub fn reshapes_workload(&self) -> bool {
+        self.source != SourceSpec::Workload || !self.stack.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for c in &self.stack {
+            c.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Build the streaming source for this scenario. All randomness
+    /// forks off `cfg.seed`, exactly as the eager workload builder's
+    /// generators do, so a passthrough scenario streams the bit-same
+    /// trace the eager path materialises.
+    pub fn build_source(&self, cfg: &ExperimentConfig) -> Result<Box<dyn ArrivalSource>> {
+        // Programmatically-built specs (sweep axes, library callers)
+        // may never have passed config validation — check here so a bad
+        // spec is an `Err`, not a combinator assert in a worker thread.
+        self.validate()?;
+        let mut root = Rng::new(cfg.seed);
+        let mut src: Box<dyn ArrivalSource> = match &self.source {
+            SourceSpec::Workload => workload_source(&cfg.workload, &mut root)?,
+            SourceSpec::Yahoo => {
+                let p = match &cfg.workload {
+                    WorkloadSource::YahooLike(p) => p.clone(),
+                    _ => YahooLikeParams::default(),
+                };
+                Box::new(YahooSource::new(&p, &mut root))
+            }
+            SourceSpec::Google => {
+                let p = match &cfg.workload {
+                    WorkloadSource::GoogleLike(p) => p.clone(),
+                    _ => GoogleLikeParams::default(),
+                };
+                Box::new(GoogleSource::new(&p, &mut root))
+            }
+            SourceSpec::Csv(path) => Box::new(CsvStream::open(Path::new(path), 90.0)?),
+        };
+        for c in &self.stack {
+            src = c.apply(src)?;
+        }
+        Ok(src)
+    }
+
+    /// Parse the `[scenario]` section out of a parsed config table.
+    /// Returns `None` when the file has no scenario keys. A key that is
+    /// present with the wrong type is an error, never a silent no-op —
+    /// a mistyped combinator must not run the unmodified workload.
+    pub fn from_table(t: &Table) -> Result<Option<ScenarioSpec>> {
+        if !t.keys().any(|k| k.starts_with("scenario.")) {
+            return Ok(None);
+        }
+        // The key set is closed — reject unknown keys so a typo'd
+        // combinator (`window_strat`, `manger`) cannot silently run the
+        // unmodified workload.
+        for k in t.keys() {
+            if let Some(rest) = k.strip_prefix("scenario.") {
+                if !SCENARIO_KEYS.contains(&rest) {
+                    bail!("unknown scenario key {rest:?} (known keys: {SCENARIO_KEYS:?})");
+                }
+            }
+        }
+        let mut spec = ScenarioSpec::passthrough();
+        if let Some(v) = key_str(t, "name")? {
+            spec.name = v.to_string();
+        }
+        match key_str(t, "source")? {
+            None | Some("workload") => {}
+            Some("yahoo") => spec.source = SourceSpec::Yahoo,
+            Some("google") => spec.source = SourceSpec::Google,
+            Some("csv") => {
+                let path = key_str(t, "csv")?
+                    .context("scenario.source = \"csv\" needs scenario.csv = \"<path>\"")?;
+                spec.source = SourceSpec::Csv(path.to_string());
+            }
+            Some(other) => bail!("unknown scenario source {other:?} (workload|yahoo|google|csv)"),
+        }
+        match key_str(t, "manager")? {
+            Some("none") => spec.manager_off = true,
+            None | Some("inherit") => {}
+            Some(other) => bail!("scenario.manager must be \"none\" or \"inherit\", got {other:?}"),
+        }
+
+        // Combinators, in the canonical application order.
+        match (key_f64(t, "window_start")?, key_f64(t, "window_end")?) {
+            (Some(start), Some(end)) => {
+                spec.stack.push(CombinatorSpec::TimeWindow { start, end });
+            }
+            (None, None) => {}
+            _ => bail!("scenario window needs both window_start and window_end"),
+        }
+        if let Some(factor) = key_f64(t, "rate_scale")? {
+            spec.stack.push(CombinatorSpec::RateScale { factor });
+        }
+        if let Some(path) = key_str(t, "merge_csv")? {
+            spec.stack.push(CombinatorSpec::MergeCsv { path: path.to_string() });
+        }
+        if let Some(path) = key_str(t, "splice_csv")? {
+            let at = key_f64(t, "splice_at")?
+                .context("scenario.splice_csv needs scenario.splice_at = <seconds>")?;
+            spec.stack.push(CombinatorSpec::SpliceCsv { path: path.to_string(), at });
+        }
+        if let Some(v) = key(t, "storm_windows") {
+            let Value::Array(items) = v else {
+                bail!("scenario.storm_windows must be an array of start,end pairs");
+            };
+            let flat: Vec<f64> = items
+                .iter()
+                .map(|v| v.as_f64().context("storm_windows entries must be numbers"))
+                .collect::<Result<_>>()?;
+            if flat.len() % 2 != 0 {
+                bail!("scenario.storm_windows must hold start,end pairs");
+            }
+            let windows: Vec<(Time, Time)> =
+                flat.chunks(2).map(|w| (w[0], w[1])).collect();
+            let intensity = key_f64(t, "storm_intensity")?.unwrap_or(3.0);
+            spec.stack.push(CombinatorSpec::BurstStorm { windows, intensity });
+        } else if key(t, "storm_intensity").is_some() {
+            bail!("scenario.storm_intensity needs scenario.storm_windows = [start, end, ...]");
+        }
+        if let Some(v) = key(t, "take") {
+            let jobs = v.as_usize().context("scenario.take must be a positive integer")?;
+            spec.stack.push(CombinatorSpec::Take { jobs });
+        }
+
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+}
+
+/// `scenario.<k>` lookup in a parsed config table.
+fn key<'t>(t: &'t Table, k: &str) -> Option<&'t Value> {
+    t.get(&format!("scenario.{k}"))
+}
+
+/// Typed lookup: present-but-mistyped keys are errors, never no-ops.
+fn key_f64(t: &Table, k: &str) -> Result<Option<f64>> {
+    match key(t, k) {
+        None => Ok(None),
+        Some(v) => {
+            Ok(Some(v.as_f64().with_context(|| format!("scenario.{k} must be a number"))?))
+        }
+    }
+}
+
+fn key_str<'t>(t: &'t Table, k: &str) -> Result<Option<&'t str>> {
+    match key(t, k) {
+        None => Ok(None),
+        Some(v) => {
+            Ok(Some(v.as_str().with_context(|| format!("scenario.{k} must be a string"))?))
+        }
+    }
+}
+
+/// Stream the experiment's `[workload]` selection — the streaming twin
+/// of `report::build_workload` (same seeds, same forks, bit-identical
+/// jobs).
+pub fn workload_source(
+    ws: &WorkloadSource,
+    root: &mut Rng,
+) -> Result<Box<dyn ArrivalSource>> {
+    Ok(match ws {
+        WorkloadSource::YahooLike(p) => Box::new(YahooSource::new(p, root)),
+        WorkloadSource::GoogleLike(p) => Box::new(GoogleSource::new(p, root)),
+        WorkloadSource::Csv(path) => Box::new(CsvStream::open(Path::new(path), 90.0)?),
+    })
+}
+
+/// The scenario's workload horizon, used to size default storm windows.
+/// For a CSV workload the trace file's last arrival is read (one
+/// validation pass, O(1) memory) so registry storms land *inside* the
+/// replayed trace instead of past its end.
+fn default_horizon(cfg: &ExperimentConfig) -> Result<f64> {
+    Ok(match &cfg.workload {
+        WorkloadSource::YahooLike(p) => p.horizon,
+        WorkloadSource::GoogleLike(p) => p.horizon,
+        WorkloadSource::Csv(path) => {
+            CsvStream::open(Path::new(path), 90.0)?.last_arrival().max(1.0)
+        }
+    })
+}
+
+/// Resolve a registry scenario by name against an experiment config
+/// (CLI `--scenario NAME`).
+pub fn named(name: &str, cfg: &ExperimentConfig) -> Result<ScenarioSpec> {
+    Ok(match name {
+        "default" => ScenarioSpec::passthrough(),
+        "managerless" => ScenarioSpec {
+            name: "managerless".to_string(),
+            manager_off: true,
+            ..ScenarioSpec::passthrough()
+        },
+        "burst-storm" => {
+            let h = default_horizon(cfg)?;
+            ScenarioSpec {
+                name: "burst-storm".to_string(),
+                stack: vec![CombinatorSpec::BurstStorm {
+                    windows: vec![(0.25 * h, 0.40 * h)],
+                    intensity: 3.0,
+                }],
+                ..ScenarioSpec::passthrough()
+            }
+        }
+        other => bail!("unknown scenario {other:?} (available: {SCENARIO_NAMES:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::toml::parse;
+    use crate::trace::collect_jobs;
+
+    #[test]
+    fn passthrough_does_not_reshape() {
+        let s = ScenarioSpec::passthrough();
+        assert!(!s.reshapes_workload());
+        assert!(!s.manager_off);
+        let mut m = ScenarioSpec::passthrough();
+        m.manager_off = true;
+        assert!(!m.reshapes_workload()); // manager-off alone keeps the workload
+    }
+
+    #[test]
+    fn named_registry_resolves_all_names() {
+        let cfg = ExperimentConfig::paper_defaults();
+        for name in SCENARIO_NAMES {
+            let spec = named(name, &cfg).unwrap();
+            spec.validate().unwrap();
+        }
+        assert!(named("nope", &cfg).is_err());
+        assert!(named("managerless", &cfg).unwrap().manager_off);
+        assert!(named("burst-storm", &cfg).unwrap().reshapes_workload());
+    }
+
+    #[test]
+    fn from_table_parses_a_full_stack() {
+        let t = parse(
+            r#"
+            [scenario]
+            name = "kitchen-sink"
+            source = "yahoo"
+            manager = "none"
+            window_start = 0
+            window_end = 7200
+            rate_scale = 1.5
+            storm_windows = [600, 1200, 3000, 3600]
+            storm_intensity = 2.5
+            take = 500
+            "#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.name, "kitchen-sink");
+        assert_eq!(spec.source, SourceSpec::Yahoo);
+        assert!(spec.manager_off);
+        assert_eq!(spec.stack.len(), 4);
+        assert_eq!(spec.stack[0], CombinatorSpec::TimeWindow { start: 0.0, end: 7200.0 });
+        assert_eq!(spec.stack[1], CombinatorSpec::RateScale { factor: 1.5 });
+        assert_eq!(
+            spec.stack[2],
+            CombinatorSpec::BurstStorm {
+                windows: vec![(600.0, 1200.0), (3000.0, 3600.0)],
+                intensity: 2.5
+            }
+        );
+        assert_eq!(spec.stack[3], CombinatorSpec::Take { jobs: 500 });
+    }
+
+    #[test]
+    fn from_table_absent_section_is_none() {
+        let t = parse("[cluster]\nservers = 100\n").unwrap();
+        assert!(ScenarioSpec::from_table(&t).unwrap().is_none());
+    }
+
+    #[test]
+    fn from_table_rejects_bad_specs() {
+        for text in [
+            "[scenario]\nsource = \"csv\"\n",             // missing csv path
+            "[scenario]\nwindow_start = 5\n",             // half a window
+            "[scenario]\nstorm_intensity = 2\n",          // storm without windows
+            "[scenario]\nstorm_windows = [5, 1]\n",       // start >= end
+            "[scenario]\nstorm_windows = [1, 5, 9]\n",    // odd pair list
+            "[scenario]\nsplice_csv = \"x.csv\"\n",       // missing splice_at
+            "[scenario]\nrate_scale = 0\n",               // non-positive
+            "[scenario]\nmanager = \"maybe\"\n",          // unknown mode
+            "[scenario]\nsource = \"martian\"\n",         // unknown source
+            "[scenario]\ntake = 5.5\n",                   // mistyped: float take
+            "[scenario]\ntake = -5\n",                    // mistyped: negative take
+            "[scenario]\nrate_scale = \"2\"\n",           // mistyped: string number
+            "[scenario]\nstorm_windows = 600\n",          // mistyped: scalar windows
+            "[scenario]\nname = 5\n",                     // mistyped: numeric name
+            "[scenario]\nmanger = \"none\"\n",            // typo'd key
+            "[scenario]\nwindow_strat = 600\n",           // typo'd key
+        ] {
+            let t = parse(text).unwrap();
+            assert!(ScenarioSpec::from_table(&t).is_err(), "accepted: {text}");
+        }
+    }
+
+    #[test]
+    fn build_source_rejects_unvalidated_programmatic_specs() {
+        // A library caller can build any spec; build_source must return
+        // Err (not panic in a combinator assert) for invalid ones.
+        let cfg = ExperimentConfig::paper_defaults();
+        let mut spec = ScenarioSpec::passthrough();
+        spec.stack.push(CombinatorSpec::BurstStorm {
+            windows: vec![(0.0, 100.0)],
+            intensity: 0.5,
+        });
+        assert!(spec.build_source(&cfg).is_err());
+    }
+
+    #[test]
+    fn build_source_streams_a_storm_scenario() {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        if let WorkloadSource::YahooLike(p) = &mut cfg.workload {
+            p.horizon = 2000.0;
+        }
+        let spec = named("burst-storm", &cfg).unwrap();
+        let mut src = spec.build_source(&cfg).unwrap();
+        let jobs = collect_jobs(src.as_mut(), &mut Rng::new(cfg.seed));
+        assert!(!jobs.is_empty());
+        assert!(jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        // Deterministic per seed.
+        let mut src2 = named("burst-storm", &cfg).unwrap().build_source(&cfg).unwrap();
+        let jobs2 = collect_jobs(src2.as_mut(), &mut Rng::new(cfg.seed));
+        assert_eq!(jobs.len(), jobs2.len());
+    }
+}

@@ -58,7 +58,13 @@ pub fn run_sweep_parallel(
     points: &[GridPoint],
     threads: usize,
 ) -> Result<Vec<Report>> {
-    let workload = build_workload(base)?;
+    // When every point streams its own scenario pipeline, the shared
+    // eager workload would never be read — skip materialising it.
+    let all_streaming = !points.is_empty()
+        && points
+            .iter()
+            .all(|p| p.cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false));
+    let workload = if all_streaming { Workload::default() } else { build_workload(base)? };
     run_points_on(&workload, points, threads)
 }
 
@@ -215,6 +221,62 @@ pub fn forecast_points(base: &ExperimentConfig) -> Vec<GridPoint> {
         .collect()
 }
 
+/// Scenario axis: burst-storm intensity over the configured workload —
+/// scenario parameters sweep like any other grid knob. Each point
+/// carries its own spec; the runs stream their sources lazily (no
+/// shared eager workload is consulted).
+pub fn storm_intensity_points(
+    base: &ExperimentConfig,
+    intensities: &[f64],
+) -> Result<Vec<GridPoint>> {
+    // Resolve the registry storm once (for a CSV workload this scans
+    // the trace to place the windows inside it — fallible).
+    let storm = crate::coordinator::scenario::named("burst-storm", base)?;
+    Ok(intensities
+        .iter()
+        .map(|&k| {
+            let mut cfg = base.clone();
+            let mut spec = storm.clone();
+            for c in &mut spec.stack {
+                if let crate::coordinator::scenario::CombinatorSpec::BurstStorm {
+                    intensity,
+                    ..
+                } = c
+                {
+                    *intensity = k;
+                }
+            }
+            spec.name = format!("storm-x{k:.1}");
+            cfg.scenario = Some(spec);
+            GridPoint::new(format!("storm-intensity={k:.1}"), cfg)
+        })
+        .collect())
+}
+
+/// Scenario axis: splice point (as a fraction of `horizon`) at which the
+/// workload switches to a replayed CSV regime.
+pub fn splice_points(
+    base: &ExperimentConfig,
+    csv: &str,
+    horizon: f64,
+    fractions: &[f64],
+) -> Vec<GridPoint> {
+    fractions
+        .iter()
+        .map(|&f| {
+            let mut cfg = base.clone();
+            let mut spec = crate::coordinator::scenario::ScenarioSpec::passthrough();
+            spec.name = format!("splice@{f:.2}");
+            spec.stack.push(crate::coordinator::scenario::CombinatorSpec::SpliceCsv {
+                path: csv.to_string(),
+                at: f * horizon,
+            });
+            cfg.scenario = Some(spec);
+            GridPoint::new(format!("splice-at={f:.2}"), cfg)
+        })
+        .collect()
+}
+
 /// Scheduler-family comparison (context for §5 related work).
 pub fn scheduler_points(base: &ExperimentConfig) -> Vec<GridPoint> {
     [
@@ -268,6 +330,11 @@ pub fn forecast_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
 /// Scheduler-family comparison.
 pub fn scheduler_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
     run_grid(base, &scheduler_points(base))
+}
+
+/// Scenario sweep: burst-storm intensity axis.
+pub fn storm_sweep(base: &ExperimentConfig, intensities: &[f64]) -> Result<Vec<Report>> {
+    run_grid(base, &storm_intensity_points(base, intensities)?)
 }
 
 #[cfg(test)]
@@ -353,5 +420,31 @@ mod tests {
     fn empty_grid_is_fine() {
         let base = tiny_base();
         assert!(run_sweep_parallel(&base, &[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn storm_intensity_sweeps_like_any_other_axis() {
+        let reports = storm_sweep(&tiny_base(), &[1.0, 3.0]).unwrap();
+        assert_eq!(reports.len(), 2);
+        // Intensity 1 = the plain workload; intensity 3 injects copies
+        // inside the storm window, so strictly more tasks complete.
+        let n1 = reports[0].short_delay.n + reports[0].long_delay.n;
+        let n3 = reports[1].short_delay.n + reports[1].long_delay.n;
+        assert!(n3 > n1, "storm did not inject work ({n1} vs {n3})");
+        assert!(reports[1].peak_resident_jobs > 0);
+    }
+
+    #[test]
+    fn storm_sweep_is_deterministic_across_thread_counts() {
+        let base = tiny_base();
+        let points = storm_intensity_points(&base, &[1.5, 2.5]).unwrap();
+        let serial = run_sweep_parallel(&base, &points, 1).unwrap();
+        let parallel = run_sweep_parallel(&base, &points, 4).unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.end_time, b.end_time);
+            assert_eq!(a.short_delay.n, b.short_delay.n);
+            assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
+        }
     }
 }

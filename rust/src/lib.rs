@@ -22,36 +22,54 @@
 //! * **sim** — the deterministic core: event queue + clock
 //!   ([`sim::Engine`]), forked PRNG streams ([`sim::Rng`]), and the
 //!   composable [`sim::World`]. A `World` owns engine, cluster, recorder
-//!   and RNG streams, and dispatches every [`sim::Event`] through an
-//!   ordered list of pluggable [`sim::Component`]s — the scheduler
-//!   adapter, transient manager, work stealer and snapshot/forecast
-//!   sampler are all components ([`sim::components`]), so new scenarios
-//!   are component wiring, not runner changes.
+//!   and RNG streams, pulls arrivals lazily from a streaming
+//!   [`trace::ArrivalSource`] (one job of lookahead — memory is
+//!   O(active tasks), not O(trace)), and dispatches every [`sim::Event`]
+//!   through an ordered list of pluggable [`sim::Component`]s — the
+//!   scheduler adapter, transient manager, work stealer and
+//!   snapshot/forecast sampler are all components ([`sim::components`]),
+//!   so new scenarios are component wiring plus source combinators, not
+//!   runner changes.
+//! * **trace** — workloads, eager and streaming: synthetic generators
+//!   calibrated to the paper's traces (eager `yahoo_like` /
+//!   `google_like` are collectors over their streaming twins
+//!   [`trace::synth::YahooSource`] / [`trace::synth::GoogleSource`], so
+//!   the two paths are bit-identical per seed), a CSV persistence layer
+//!   whose floats round-trip bit-exactly, an O(1)-memory CSV replayer
+//!   ([`trace::CsvStream`]), and the [`trace::ArrivalSource`] combinator
+//!   algebra — [`trace::BurstStorm`], [`trace::RateScale`],
+//!   [`trace::TimeWindow`], [`trace::Splice`], [`trace::Merge`],
+//!   [`trace::Take`] — for composing arrival patterns declaratively.
 //! * **cluster** — server + task arenas, partitions, queue disciplines,
 //!   and the [`cluster::PoolIndex`]: one MinTree-backed least-loaded
 //!   index per pool (general / short-reserved / transient) kept
 //!   incrementally up to date by every mutator, so all placement and
 //!   drain-victim queries are O(log n) with scan-identical tie-breaking.
 //! * **coordinator** — experiment configuration
-//!   ([`coordinator::ExperimentConfig`]), the canonical component wiring
-//!   ([`coordinator::runner::build_world`] / `simulate_with`), reports,
-//!   and sweeps: every evaluation grid is a list of
-//!   [`coordinator::GridPoint`]s run through one generic driver, either
-//!   serially or fanned out across cores by
-//!   [`coordinator::run_sweep_parallel`]. Runs derive all randomness
-//!   from their own config seed, so every simulation field of a sweep
-//!   report is bit-identical at any thread count (only wall-clock
-//!   timing fields vary).
-//! * **runtime / metrics / trace / transient** — analytics engines
-//!   (pure-rust [`runtime::NativeAnalytics`] by default; PJRT/XLA under
+//!   ([`coordinator::ExperimentConfig`]), the declarative scenario
+//!   registry ([`coordinator::scenario`]: a `[scenario]` TOML block or
+//!   the CLI `--scenario` names resolve to a source + combinator stack +
+//!   optional manager-less override), the canonical component wiring
+//!   ([`coordinator::runner::build_world`] / `simulate_with` /
+//!   [`coordinator::runner::simulate_source`]), reports, and sweeps:
+//!   every evaluation grid is a list of [`coordinator::GridPoint`]s run
+//!   through one generic driver, either serially or fanned out across
+//!   cores by [`coordinator::run_sweep_parallel`] — scenario parameters
+//!   (storm intensity, splice points) sweep like any other grid axis.
+//!   Runs derive all randomness from their own config seed, so every
+//!   simulation field of a sweep report is bit-identical at any thread
+//!   count (only wall-clock timing fields vary).
+//! * **runtime / metrics / transient** — analytics engines (pure-rust
+//!   [`runtime::NativeAnalytics`] by default; PJRT/XLA under
 //!   `--features xla`), the recorder + cost ledger behind every paper
-//!   number, trace synthesis/persistence, and the §3.2 transient
-//!   manager + market model.
+//!   number, and the §3.2 transient manager + market model.
 //!
 //! Determinism is load-bearing: `tests/golden_determinism.rs` pins the
 //! `World` decomposition bit-exactly to the original monolithic runner,
-//! and `tests/pool_index_props.rs` pins every indexed least-loaded
-//! answer to the naive linear scan it replaced.
+//! `tests/streaming_golden.rs` pins the streaming arrival path
+//! bit-exactly to the eager replay (and the combinators to fixed
+//! seeds), and `tests/pool_index_props.rs` pins every indexed
+//! least-loaded answer to the naive linear scan it replaced.
 //!
 //! ## Quickstart
 //!
@@ -71,17 +89,34 @@
 //! use cloudcoaster::metrics::Recorder;
 //! use cloudcoaster::sched::Hybrid;
 //! use cloudcoaster::sim::{SchedulerComponent, SnapshotSampler, World};
-//! use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
+//! use cloudcoaster::trace::synth::{YahooLikeParams, YahooSource};
 //! use cloudcoaster::sim::Rng;
 //!
-//! let workload = yahoo_like(&YahooLikeParams::default(), &mut Rng::new(42));
+//! // Streaming source: the trace is synthesized lazily as the
+//! // simulation advances — nothing is materialised up front.
+//! let source = YahooSource::new(&YahooLikeParams::default(), &mut Rng::new(42));
 //! let mut sched = Hybrid::eagle(2.0);
 //! let cluster = Cluster::new(512, 16, QueuePolicy::Fifo);
-//! let mut world = World::new(&workload, cluster, Recorder::new(1.0), 42);
+//! let mut world = World::new(Box::new(source), cluster, Recorder::new(1.0), 42);
 //! world.add_component(Box::new(SnapshotSampler::new(30.0)));
 //! world.add_component(Box::new(SchedulerComponent::new(&mut sched)));
 //! world.run();
-//! println!("{} events, {} tasks", world.engine.processed(), world.rec.tasks_finished);
+//! println!("{} events, {} tasks, peak {} resident jobs",
+//!     world.engine.processed(), world.rec.tasks_finished, world.peak_resident_jobs());
+//! ```
+//!
+//! Declaratively, the same ideas are a `[scenario]` block in a config
+//! file (or `--scenario NAME` on the CLI):
+//!
+//! ```toml
+//! [workload]
+//! csv = "trace.csv"              # replayed in O(1) memory
+//!
+//! [scenario]
+//! name = "storm-replay"
+//! storm_windows = [3600, 7200]   # start,end pairs (seconds)
+//! storm_intensity = 3.0          # arrival-rate multiplier in-window
+//! manager = "none"               # manager-less baseline wiring
 //! ```
 //!
 //! Sweeping a grid across all cores:

@@ -2,12 +2,20 @@
 //!
 //! ```text
 //! cloudcoaster run      [--config FILE] [--scheduler KIND] [--r R] [--seed N]
+//!                       [--scenario default|managerless|burst-storm]
 //! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3] [--threads N]
-//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler [--threads N]
+//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler|storm [--threads N]
 //! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
 //! cloudcoaster replicate [--seeds N]   # headline across N seeds
 //! cloudcoaster version
 //! ```
+//!
+//! `--scenario` resolves a registry scenario against the loaded config
+//! (manager-less baseline wiring, injected burst storms over whatever
+//! `[workload]` selects — including CSV trace replay). Fully custom
+//! pipelines go in the config file's `[scenario]` section; either way
+//! the workload streams through the simulation in O(active-jobs)
+//! memory, so trace length is not capped by RAM.
 //!
 //! Sweeps and ablations fan their runs out across `--threads` OS threads
 //! (default: all cores). Simulation results are bit-identical at any
@@ -87,6 +95,13 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(n) = args.get("short-partition") {
         cfg.short_partition = n.parse().context("--short-partition")?;
     }
+    if let Some(name) = args.get("scenario") {
+        // Registry scenarios compose with the configured workload (so
+        // `--scenario burst-storm` over a CSV workload is a burst-storm
+        // trace replay). A `[scenario]` section in the config file is
+        // replaced by the named one.
+        cfg.scenario = Some(cloudcoaster::coordinator::scenario::named(name, &cfg)?);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -108,6 +123,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     eprintln!("workload: {}", workload_summary(&cfg)?);
     let rep = run_experiment(&cfg)?;
     println!("{}", summary_line(&rep));
+    if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
+        eprintln!("peak resident jobs (streaming): {}", rep.peak_resident_jobs);
+    }
     if let Some(out) = args.get("cdf-out") {
         std::fs::write(out, rep.cdf.to_csv())?;
         eprintln!("wrote CDF to {out}");
@@ -146,8 +164,10 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         "scheduler" => sweep::scheduler_points(&cfg),
         "market" => sweep::bid_points(&cfg, &[None, Some(2.0), Some(0.5), Some(0.35)]),
         "forecast" => sweep::forecast_points(&cfg),
+        "storm" => sweep::storm_intensity_points(&cfg, &[1.0, 2.0, 3.0, 5.0])?,
         other => bail!(
-            "unknown ablation {other:?} (threshold|revocation|policy|scheduler|market|forecast)"
+            "unknown ablation {other:?} \
+             (threshold|revocation|policy|scheduler|market|forecast|storm)"
         ),
     };
     let reports = sweep::run_sweep_parallel(&cfg, &points, threads)?;

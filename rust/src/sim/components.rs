@@ -43,8 +43,8 @@ impl Component for SchedulerComponent<'_> {
 
     fn on_event(&mut self, _now: Time, event: &Event, ctx: &mut WorldCtx) {
         match event {
-            Event::JobArrival(jid) => {
-                let job = &ctx.workload.jobs[jid.index()];
+            Event::JobArrival(_) => {
+                let job = ctx.job.expect("JobArrival dispatched without its job");
                 let mut sctx = SchedCtx {
                     cluster: &mut *ctx.cluster,
                     engine: &mut *ctx.engine,
@@ -249,7 +249,9 @@ impl Component for SnapshotSampler<'_> {
     }
 
     fn on_start(&mut self, ctx: &mut WorldCtx) {
-        if !ctx.workload.jobs.is_empty() {
+        // `work_remaining` at start == "the source has at least one job"
+        // (the world primes its lookahead before components start).
+        if ctx.work_remaining() {
             ctx.engine.schedule(self.interval, Event::Snapshot);
         }
     }

@@ -2,13 +2,23 @@
 //!
 //! [`World`] owns the discrete-event [`Engine`], the [`Cluster`], the
 //! metrics [`Recorder`] and the forked RNG streams, and drives the event
-//! loop over a [`Workload`]. Everything *policy* — placement, transient
-//! management, work stealing, sampling — lives in an ordered list of
-//! pluggable [`Component`]s dispatched per [`Event`]. New scenarios
-//! (manager-less baselines, injected burst storms, custom samplers) are
-//! component wiring, not new match arms.
+//! loop over a streaming [`ArrivalSource`]. Everything *policy* —
+//! placement, transient management, work stealing, sampling — lives in
+//! an ordered list of pluggable [`Component`]s dispatched per [`Event`].
+//! New scenarios (manager-less baselines, injected burst storms, custom
+//! samplers) are component wiring plus source combinators, not new match
+//! arms.
 //!
-//! The world itself keeps only the trace-replay responsibilities that
+//! **Streaming arrivals**: the world keeps exactly one job of lookahead
+//! pulled from the source — the job whose `JobArrival` event is in the
+//! queue. Its task durations are materialised into the cluster arena at
+//! dispatch and the `Job` itself is dropped at the end of the event;
+//! only a small per-job metadata record (arrival, class, remaining task
+//! count) survives until the job completes. Peak resident job count is
+//! therefore set by cluster load, not trace length (tracked by
+//! [`World::peak_resident_jobs`]).
+//!
+//! The world core keeps only the trace-replay responsibilities that
 //! define the simulation's semantics:
 //!
 //! * materialising each arriving job's tasks and scheduling the next
@@ -20,21 +30,24 @@
 //! * per-job completion accounting and the end-of-run transient
 //!   close-out.
 //!
-//! Determinism: given the same workload, seed and component wiring, the
+//! Determinism: given the same source, seed and component wiring, the
 //! run is bitwise identical to the pre-component monolithic runner —
-//! enforced by `tests/golden_determinism.rs`.
+//! enforced by `tests/golden_determinism.rs` (eager replay) and
+//! `tests/streaming_golden.rs` (streaming synthesis + combinators).
+
+use std::collections::HashMap;
 
 use crate::cluster::{Cluster, ServerKind, ServerState, TaskState};
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event, Rng};
-use crate::trace::Workload;
+use crate::trace::{ArrivalSource, Job, Workload, WorkloadReplay};
 use crate::util::{JobId, TaskId, Time};
 
 /// Mutable per-event view handed to components.
 ///
-/// Fields are the world's core state; the scratch slices (`arrived`,
-/// `orphans`) carry the current event's payload between the world core
-/// and the components that act on it.
+/// Fields are the world's core state; the scratch fields (`job`,
+/// `arrived`, `orphans`) carry the current event's payload between the
+/// world core and the components that act on it.
 pub struct WorldCtx<'w> {
     pub cluster: &'w mut Cluster,
     pub engine: &'w mut Engine,
@@ -42,7 +55,10 @@ pub struct WorldCtx<'w> {
     /// The shared scheduler-side RNG stream (probe sampling, stealing) —
     /// fork label 0x5C off the root seed, as in the original runner.
     pub rng: &'w mut Rng,
-    pub workload: &'w Workload,
+    /// The job whose `JobArrival` is being dispatched (`None` for every
+    /// other event). Dropped when the event ends — components must copy
+    /// what they need.
+    pub job: Option<&'w Job>,
     /// Tasks materialised for the `JobArrival` being dispatched (empty
     /// for other events).
     pub arrived: &'w [TaskId],
@@ -50,7 +66,7 @@ pub struct WorldCtx<'w> {
     /// otherwise).
     pub orphans: &'w [TaskId],
     outstanding_tasks: u64,
-    next_job: usize,
+    more_jobs: bool,
     prewarm_lr: &'w mut Option<f64>,
     deferred: &'w mut Vec<(Time, Event)>,
 }
@@ -59,7 +75,7 @@ impl WorldCtx<'_> {
     /// Is there still work in flight or jobs yet to arrive? (Periodic
     /// components use this to decide whether to reschedule themselves.)
     pub fn work_remaining(&self) -> bool {
-        self.outstanding_tasks > 0 || self.next_job < self.workload.jobs.len()
+        self.outstanding_tasks > 0 || self.more_jobs
     }
 
     /// Publish a forecast long-load ratio for a downstream component
@@ -110,20 +126,39 @@ pub trait Component {
     }
 }
 
+/// Completion-accounting record for a job with unfinished tasks — all
+/// that survives of a job once its arrival event has been dispatched.
+struct JobMeta {
+    arrival: Time,
+    is_long: bool,
+    remaining: u32,
+}
+
 /// The composed simulation: engine + cluster + recorder + RNG streams +
-/// ordered components, run over one workload.
+/// ordered components, run over one streaming arrival source.
 pub struct World<'w> {
     pub cluster: Cluster,
     pub engine: Engine,
     pub rec: Recorder,
-    workload: &'w Workload,
+    source: Box<dyn ArrivalSource + 'w>,
     root_rng: Rng,
     sched_rng: Rng,
     components: Vec<Box<dyn Component + 'w>>,
-    /// Remaining unfinished tasks per job (response-time accounting).
-    job_remaining: Vec<u32>,
+    /// Per-job completion accounting, keyed by `JobId.0` — entries live
+    /// from arrival to last task finish (O(active jobs), not O(trace)).
+    job_meta: HashMap<u32, JobMeta>,
+    /// Tasks materialised but not yet finished.
     outstanding: u64,
-    next_job: usize,
+    /// Sequential id assigned to the next job pulled from the source.
+    next_id: u32,
+    /// Arrival of the last pulled job (source-ordering assertion).
+    last_arrival: Time,
+    /// One-job lookahead: pulled from the source, arrival event queued.
+    lookahead: Option<Job>,
+    source_done: bool,
+    /// The job being dispatched in the current `JobArrival` event.
+    current_job: Option<Job>,
+    peak_resident: usize,
     arrived: Vec<TaskId>,
     orphans: Vec<TaskId>,
     prewarm_lr: Option<f64>,
@@ -131,29 +166,51 @@ pub struct World<'w> {
 }
 
 impl<'w> World<'w> {
-    /// Build a world over `workload`. RNG streams fork off `seed` in a
-    /// fixed order: the scheduler stream first (label 0x5C), then
-    /// whatever the caller forks via [`World::fork_rng`] — matching the
-    /// original runner so fixed-seed runs stay bit-identical.
-    pub fn new(workload: &'w Workload, cluster: Cluster, rec: Recorder, seed: u64) -> Self {
+    /// Build a world over a streaming `source`. RNG streams fork off
+    /// `seed` in a fixed order: the scheduler stream first (label 0x5C),
+    /// then whatever the caller forks via [`World::fork_rng`], then the
+    /// arrival stream (label 0xAE, forked at [`World::run`]) — matching
+    /// the original runner so fixed-seed runs stay bit-identical.
+    pub fn new(
+        source: Box<dyn ArrivalSource + 'w>,
+        cluster: Cluster,
+        rec: Recorder,
+        seed: u64,
+    ) -> Self {
         let mut root_rng = Rng::new(seed);
         let sched_rng = root_rng.fork(0x5C);
         World {
             cluster,
             engine: Engine::new(),
             rec,
-            workload,
+            source,
             root_rng,
             sched_rng,
             components: Vec::new(),
-            job_remaining: workload.jobs.iter().map(|j| j.num_tasks() as u32).collect(),
-            outstanding: workload.num_tasks() as u64,
-            next_job: 0,
+            job_meta: HashMap::new(),
+            outstanding: 0,
+            next_id: 0,
+            last_arrival: f64::NEG_INFINITY,
+            lookahead: None,
+            source_done: false,
+            current_job: None,
+            peak_resident: 0,
             arrived: Vec::new(),
             orphans: Vec::new(),
             prewarm_lr: None,
             deferred: Vec::new(),
         }
+    }
+
+    /// Build a world replaying an eager [`Workload`] (back-compat
+    /// convenience over [`WorkloadReplay`]).
+    pub fn from_workload(
+        workload: &'w Workload,
+        cluster: Cluster,
+        rec: Recorder,
+        seed: u64,
+    ) -> Self {
+        Self::new(Box::new(WorkloadReplay::new(workload)), cluster, rec, seed)
     }
 
     /// Derive an independent RNG stream for a component (e.g. the
@@ -168,13 +225,21 @@ impl<'w> World<'w> {
         self
     }
 
-    pub fn workload(&self) -> &'w Workload {
-        self.workload
-    }
-
     /// Find a component by concrete type (post-run stat extraction).
     pub fn component<T: 'static>(&self) -> Option<&T> {
         self.components.iter().find_map(|c| c.as_any()?.downcast_ref::<T>())
+    }
+
+    /// Jobs pulled from the source so far.
+    pub fn jobs_seen(&self) -> u64 {
+        self.next_id as u64
+    }
+
+    /// High-water mark of concurrently-resident job records — bounded by
+    /// cluster load, independent of trace length (the streaming-memory
+    /// guarantee; pinned by `tests/streaming_golden.rs`).
+    pub fn peak_resident_jobs(&self) -> usize {
+        self.peak_resident
     }
 
     fn ctx(&mut self) -> WorldCtx<'_> {
@@ -183,11 +248,11 @@ impl<'w> World<'w> {
             engine: &mut self.engine,
             rec: &mut self.rec,
             rng: &mut self.sched_rng,
-            workload: self.workload,
+            job: self.current_job.as_ref(),
             arrived: &self.arrived,
             orphans: &self.orphans,
             outstanding_tasks: self.outstanding,
-            next_job: self.next_job,
+            more_jobs: self.lookahead.is_some(),
             prewarm_lr: &mut self.prewarm_lr,
             deferred: &mut self.deferred,
         }
@@ -204,11 +269,42 @@ impl<'w> World<'w> {
         self.deferred = pending; // keep the allocation
     }
 
+    /// Pull the next job into the lookahead slot, assigning it the next
+    /// sequential id. Enforces the source's nondecreasing-arrival
+    /// contract (a violation would corrupt the event queue).
+    fn advance_source(&mut self, arrivals_rng: &mut Rng) {
+        debug_assert!(self.lookahead.is_none(), "lookahead overwritten");
+        if self.source_done {
+            return;
+        }
+        match self.source.next_job(arrivals_rng) {
+            Some(mut job) => {
+                assert!(
+                    job.arrival >= self.last_arrival,
+                    "ArrivalSource produced out-of-order arrival {} after {}",
+                    job.arrival,
+                    self.last_arrival
+                );
+                self.last_arrival = job.arrival;
+                job.id = JobId(self.next_id);
+                self.next_id = self.next_id.checked_add(1).expect("more than u32::MAX jobs");
+                self.lookahead = Some(job);
+            }
+            None => self.source_done = true,
+        }
+    }
+
     /// Drive the event loop to quiescence.
     pub fn run(&mut self) {
         let mut components = std::mem::take(&mut self.components);
-        if !self.workload.jobs.is_empty() {
-            self.engine.schedule(self.workload.jobs[0].arrival, Event::JobArrival(JobId(0)));
+        // The arrival stream forks off the root *after* the scheduler
+        // stream (0x5C, at construction) and any component streams the
+        // caller forked while wiring (e.g. the market's 0x7A) — so the
+        // streaming refactor leaves every legacy stream bit-identical.
+        let mut arrivals_rng = self.root_rng.fork(0xAE);
+        self.advance_source(&mut arrivals_rng);
+        if let Some(job) = &self.lookahead {
+            self.engine.schedule(job.arrival, Event::JobArrival(job.id));
         }
         {
             let mut ctx = self.ctx();
@@ -219,17 +315,30 @@ impl<'w> World<'w> {
         self.flush_deferred();
 
         while let Some((now, event)) = self.engine.pop() {
-            // ---- core pre-dispatch: trace replay + cluster lifecycle ----
+            // ---- core pre-dispatch: arrival intake + cluster lifecycle ----
             self.arrived.clear();
             self.orphans.clear();
             self.prewarm_lr = None;
+            self.current_job = None;
             match event {
                 Event::JobArrival(jid) => {
-                    let job = &self.workload.jobs[jid.index()];
+                    let job =
+                        self.lookahead.take().expect("JobArrival without a pulled job");
+                    debug_assert_eq!(job.id, jid, "arrival event out of step with source");
                     for &d in &job.task_durations {
                         let tid = self.cluster.add_task(job.id, d, job.is_long, now);
                         self.arrived.push(tid);
                     }
+                    let n = job.num_tasks() as u32;
+                    if n > 0 {
+                        self.outstanding += n as u64;
+                        self.job_meta.insert(
+                            jid.0,
+                            JobMeta { arrival: job.arrival, is_long: job.is_long, remaining: n },
+                        );
+                        self.peak_resident = self.peak_resident.max(self.job_meta.len());
+                    }
+                    self.current_job = Some(job);
                 }
                 Event::TaskFinish { server, task } => {
                     // A revocation may have killed this execution after
@@ -268,7 +377,9 @@ impl<'w> World<'w> {
             // immutable, so reading it after the state transition is
             // equivalent to the legacy in-arm flags.)
             let long_change = match event {
-                Event::JobArrival(jid) => self.workload.jobs[jid.index()].is_long,
+                Event::JobArrival(_) => {
+                    self.current_job.as_ref().map(|j| j.is_long).unwrap_or(false)
+                }
                 Event::TaskFinish { task, .. } => self.cluster.task(task).is_long,
                 _ => false,
             };
@@ -281,25 +392,28 @@ impl<'w> World<'w> {
                 }
             }
 
-            // ---- core post-dispatch: arrival cursor + completions ----
+            // ---- core post-dispatch: arrival lookahead + completions ----
             match event {
-                Event::JobArrival(jid) => {
-                    self.next_job = jid.index() + 1;
-                    if self.next_job < self.workload.jobs.len() {
-                        self.engine.schedule(
-                            self.workload.jobs[self.next_job].arrival,
-                            Event::JobArrival(JobId(self.next_job as u32)),
-                        );
+                Event::JobArrival(_) => {
+                    self.advance_source(&mut arrivals_rng);
+                    if let Some(job) = &self.lookahead {
+                        self.engine.schedule(job.arrival, Event::JobArrival(job.id));
                     }
                 }
                 Event::TaskFinish { task, .. } => {
                     self.outstanding -= 1;
                     let jid = self.cluster.task(task).job;
-                    let rem = &mut self.job_remaining[jid.index()];
-                    *rem -= 1;
-                    if *rem == 0 {
-                        let job = &self.workload.jobs[jid.index()];
-                        self.rec.job_finished(job.is_long, now - job.arrival);
+                    let done = {
+                        let meta = self
+                            .job_meta
+                            .get_mut(&jid.0)
+                            .expect("task finish for unknown job");
+                        meta.remaining -= 1;
+                        meta.remaining == 0
+                    };
+                    if done {
+                        let meta = self.job_meta.remove(&jid.0).expect("meta vanished");
+                        self.rec.job_finished(meta.is_long, now - meta.arrival);
                     }
                 }
                 _ => {}
@@ -330,6 +444,7 @@ impl<'w> World<'w> {
             self.cluster.retire(sid, end_time, &mut self.rec);
         }
         debug_assert_eq!(self.outstanding, 0, "tasks lost by the simulation");
+        debug_assert!(self.job_meta.is_empty(), "jobs left incomplete");
         #[cfg(debug_assertions)]
         self.cluster.check_invariants();
         self.components = components;

@@ -7,22 +7,42 @@
 //! job_id,arrival,is_long,duration
 //! 0,12.500,0,37.2
 //! ```
+//!
+//! Float round-trip is **bit-exact**: `{}` on `f64` prints the shortest
+//! decimal that parses back to the same bits, so write → read preserves
+//! arrival times and durations exactly — the property the streaming
+//! replayer's golden-determinism guarantee rests on. Non-finite values
+//! (NaN/inf) are rejected on read: they would otherwise slip past the
+//! sign checks and poison the event queue.
+//!
+//! Two readers:
+//!
+//! * [`read_csv`] — eager, tolerant of rows interleaved across jobs;
+//!   materialises a full [`Workload`] (O(trace) memory).
+//! * [`CsvStream`] — a streaming [`ArrivalSource`]: O(1) memory replay
+//!   for rows grouped by job and sorted by arrival (what [`write_csv`]
+//!   emits). The file is validated end-to-end at `open` time, so the
+//!   pull path is infallible.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::trace::{Job, Workload};
+use crate::sim::Rng;
+use crate::trace::{ArrivalSource, Job, Workload};
 use crate::util::JobId;
+
+const HEADER: &str = "job_id,arrival,is_long,duration";
 
 /// Write a workload to CSV (one row per task).
 pub fn write_csv(w: &Workload, path: &Path) -> Result<()> {
     let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
     let mut out = BufWriter::new(file);
-    writeln!(out, "job_id,arrival,is_long,duration")?;
+    writeln!(out, "{HEADER}")?;
     for job in &w.jobs {
+        debug_assert!(job.arrival.is_finite());
         for &d in &job.task_durations {
             // `{}` on f64 prints the shortest representation that parses
             // back to the same bits — traces roundtrip exactly.
@@ -32,13 +52,43 @@ pub fn write_csv(w: &Workload, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// One parsed task row.
+#[derive(Clone, Copy, Debug)]
+struct RawRow {
+    id: u64,
+    arrival: f64,
+    is_long: bool,
+    duration: f64,
+}
+
+fn parse_row(line: &str, lineno: usize) -> Result<RawRow> {
+    let mut fields = line.split(',');
+    let parse_err = || format!("trace line {lineno}: {line:?}");
+    let id: u64 =
+        fields.next().context("missing job_id")?.trim().parse().with_context(parse_err)?;
+    let arrival: f64 =
+        fields.next().context("missing arrival")?.trim().parse().with_context(parse_err)?;
+    let is_long: u8 =
+        fields.next().context("missing is_long")?.trim().parse().with_context(parse_err)?;
+    let duration: f64 =
+        fields.next().context("missing duration")?.trim().parse().with_context(parse_err)?;
+    if !arrival.is_finite() || !duration.is_finite() {
+        bail!("trace line {lineno}: non-finite arrival or duration");
+    }
+    if duration <= 0.0 || arrival < 0.0 {
+        bail!("trace line {lineno}: non-positive duration or negative arrival");
+    }
+    Ok(RawRow { id, arrival, is_long: is_long != 0, duration })
+}
+
 /// Read a workload from CSV produced by [`write_csv`] (or hand-authored).
+/// Rows of one job may be interleaved with other jobs' rows.
 pub fn read_csv(path: &Path, cutoff: f64) -> Result<Workload> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let reader = BufReader::new(file);
     let mut lines = reader.lines();
     let header = lines.next().context("empty trace file")??;
-    if header.trim() != "job_id,arrival,is_long,duration" {
+    if header.trim() != HEADER {
         bail!("unexpected trace header: {header:?}");
     }
     // job_id -> (arrival, is_long, durations); ids may be interleaved.
@@ -48,28 +98,21 @@ pub fn read_csv(path: &Path, cutoff: f64) -> Result<Workload> {
         if line.trim().is_empty() {
             continue;
         }
-        let mut fields = line.split(',');
-        let parse_err = || format!("trace line {}: {line:?}", lineno + 2);
-        let id: usize = fields.next().context("missing job_id")?.trim().parse().with_context(parse_err)?;
-        let arrival: f64 = fields.next().context("missing arrival")?.trim().parse().with_context(parse_err)?;
-        let is_long: u8 = fields.next().context("missing is_long")?.trim().parse().with_context(parse_err)?;
-        let duration: f64 = fields.next().context("missing duration")?.trim().parse().with_context(parse_err)?;
-        if duration <= 0.0 || arrival < 0.0 {
-            bail!("trace line {}: non-positive duration or negative arrival", lineno + 2);
-        }
+        let row = parse_row(&line, lineno + 2)?;
+        let id = row.id as usize;
         if id >= jobs.len() {
             jobs.resize_with(id + 1, || None);
         }
         let job = jobs[id].get_or_insert_with(|| Job {
             id: JobId(id as u32),
-            arrival,
+            arrival: row.arrival,
             task_durations: Vec::new(),
-            is_long: is_long != 0,
+            is_long: row.is_long,
         });
-        if (job.arrival - arrival).abs() > 1e-9 {
+        if (job.arrival - row.arrival).abs() > 1e-9 {
             bail!("trace line {}: job {id} has inconsistent arrival times", lineno + 2);
         }
-        job.task_durations.push(duration);
+        job.task_durations.push(row.duration);
     }
     let jobs: Vec<Job> = jobs.into_iter().flatten().collect();
     if jobs.is_empty() {
@@ -78,10 +121,183 @@ pub fn read_csv(path: &Path, cutoff: f64) -> Result<Workload> {
     Ok(Workload::new(jobs, cutoff))
 }
 
+/// Streaming CSV replayer: an [`ArrivalSource`] that reads one job's rows
+/// at a time, so arbitrarily long traces replay in O(1) memory.
+///
+/// Requires rows grouped by job and nondecreasing in arrival across
+/// groups — exactly what [`write_csv`] emits. [`CsvStream::open`] runs a
+/// full validation pass (parse every row, check grouping/ordering) before
+/// the replay handle is returned, so configuration errors surface at
+/// scenario-build time and the streaming pull path never fails. (If the
+/// file is mutated between validation and replay, the pull path panics
+/// rather than yielding garbage.)
+pub struct CsvStream {
+    lines: std::io::Lines<BufReader<File>>,
+    lineno: usize,
+    cutoff: f64,
+    lookahead: Option<RawRow>,
+    num_jobs: usize,
+    num_tasks: usize,
+    last_arrival: f64,
+    path: PathBuf,
+}
+
+impl CsvStream {
+    /// Validate `path` end-to-end, then open it for streaming replay.
+    pub fn open(path: &Path, cutoff: f64) -> Result<Self> {
+        // ---- validation pass: O(1) memory, full parse ----
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut lines = BufReader::new(file).lines();
+        let header = lines.next().context("empty trace file")??;
+        if header.trim() != HEADER {
+            bail!("unexpected trace header: {header:?}");
+        }
+        let mut num_jobs = 0usize;
+        let mut num_tasks = 0usize;
+        let mut group: Option<RawRow> = None;
+        for (lineno, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row = parse_row(&line, lineno + 2)?;
+            // `RawRow` is Copy, so the group head can be inspected by
+            // value with no borrow held across the reassignment below.
+            let new_group = match group {
+                Some(g) if g.id == row.id => {
+                    if (g.arrival - row.arrival).abs() > 1e-9 {
+                        bail!(
+                            "trace line {}: job {} has inconsistent arrival times",
+                            lineno + 2,
+                            row.id
+                        );
+                    }
+                    false
+                }
+                Some(g) => {
+                    // Strictly increasing ids across groups: catches a
+                    // job id split into non-adjacent groups (which the
+                    // eager reader would merge — a silent divergence)
+                    // in O(1) memory. write_csv always satisfies this.
+                    if row.id <= g.id {
+                        bail!(
+                            "trace line {}: streaming replay requires strictly \
+                             increasing job ids (job {} after job {}); use the eager \
+                             reader (`[workload] csv`) for interleaved traces",
+                            lineno + 2,
+                            row.id,
+                            g.id
+                        );
+                    }
+                    if row.arrival < g.arrival {
+                        bail!(
+                            "trace line {}: streaming replay requires rows grouped by job \
+                             and sorted by arrival (job {} at {} after job {} at {})",
+                            lineno + 2,
+                            row.id,
+                            row.arrival,
+                            g.id,
+                            g.arrival
+                        );
+                    }
+                    true
+                }
+                None => true,
+            };
+            if new_group {
+                num_jobs += 1;
+                group = Some(row);
+            }
+            num_tasks += 1;
+        }
+        if num_tasks == 0 {
+            bail!("trace file {} contains no tasks", path.display());
+        }
+
+        // ---- reopen for the replay pass ----
+        let file = File::open(path).with_context(|| format!("reopen {}", path.display()))?;
+        let mut lines = BufReader::new(file).lines();
+        let _ = lines.next(); // header, already validated
+        Ok(CsvStream {
+            lines,
+            lineno: 1,
+            cutoff,
+            lookahead: None,
+            num_jobs,
+            num_tasks,
+            last_arrival: group.map(|g| g.arrival).unwrap_or(0.0),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Jobs in the file (counted during validation).
+    pub fn num_jobs(&self) -> usize {
+        self.num_jobs
+    }
+
+    /// Arrival time of the last job in the file — the trace's effective
+    /// horizon (recorded during validation; scenario defaults use it to
+    /// place storm windows inside the replayed trace).
+    pub fn last_arrival(&self) -> f64 {
+        self.last_arrival
+    }
+
+    /// Tasks (rows) in the file.
+    pub fn num_tasks(&self) -> usize {
+        self.num_tasks
+    }
+
+    fn read_row(&mut self) -> Option<RawRow> {
+        loop {
+            let line = match self.lines.next()? {
+                Ok(l) => l,
+                Err(e) => panic!("{}: I/O error mid-replay: {e}", self.path.display()),
+            };
+            self.lineno += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let lineno = self.lineno;
+            return Some(parse_row(&line, lineno).unwrap_or_else(|e| {
+                panic!("{}: file changed since validation: {e:#}", self.path.display())
+            }));
+        }
+    }
+}
+
+impl ArrivalSource for CsvStream {
+    fn next_job(&mut self, _rng: &mut Rng) -> Option<Job> {
+        let first = match self.lookahead.take() {
+            Some(row) => row,
+            None => self.read_row()?,
+        };
+        let mut durs = vec![first.duration];
+        loop {
+            match self.read_row() {
+                Some(row) if row.id == first.id => durs.push(row.duration),
+                other => {
+                    self.lookahead = other;
+                    break;
+                }
+            }
+        }
+        Some(Job {
+            id: JobId(0),
+            arrival: first.arrival,
+            task_durations: durs,
+            is_long: first.is_long,
+        })
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.cutoff
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::Rng;
+    use crate::trace::collect_jobs;
     use crate::trace::synth::{yahoo_like, YahooLikeParams};
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -90,21 +306,43 @@ mod tests {
         p
     }
 
-    #[test]
-    fn roundtrip_preserves_workload() {
-        let mut rng = Rng::new(77);
+    fn small_workload() -> Workload {
         let mut params = YahooLikeParams::default();
         params.horizon = 2000.0; // small trace for the test
-        let w = yahoo_like(&params, &mut rng);
+        yahoo_like(&params, &mut Rng::new(77))
+    }
+
+    #[test]
+    fn roundtrip_preserves_workload_bit_exactly() {
+        let w = small_workload();
         let path = tmp("roundtrip.csv");
         write_csv(&w, &path).unwrap();
         let r = read_csv(&path, w.cutoff).unwrap();
         assert_eq!(w.num_jobs(), r.num_jobs());
         assert_eq!(w.num_tasks(), r.num_tasks());
         for (a, b) in w.jobs.iter().zip(&r.jobs) {
-            assert!((a.arrival - b.arrival).abs() < 1e-5);
+            // `{}` printing guarantees bit-exact float round-trips.
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
             assert_eq!(a.is_long, b.is_long);
-            assert_eq!(a.num_tasks(), b.num_tasks());
+            assert_eq!(a.task_durations, b.task_durations);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stream_roundtrip_matches_workload_bit_exactly() {
+        let w = small_workload();
+        let path = tmp("stream_roundtrip.csv");
+        write_csv(&w, &path).unwrap();
+        let mut stream = CsvStream::open(&path, w.cutoff).unwrap();
+        assert_eq!(stream.num_jobs(), w.num_jobs());
+        assert_eq!(stream.num_tasks(), w.num_tasks());
+        let jobs = collect_jobs(&mut stream, &mut Rng::new(0));
+        assert_eq!(jobs.len(), w.num_jobs());
+        for (a, b) in w.jobs.iter().zip(&jobs) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.is_long, b.is_long);
+            assert_eq!(a.task_durations, b.task_durations);
         }
         std::fs::remove_file(path).ok();
     }
@@ -114,6 +352,7 @@ mod tests {
         let path = tmp("badheader.csv");
         std::fs::write(&path, "nope\n1,2,3,4\n").unwrap();
         assert!(read_csv(&path, 90.0).is_err());
+        assert!(CsvStream::open(&path, 90.0).is_err());
         std::fs::remove_file(path).ok();
     }
 
@@ -122,11 +361,65 @@ mod tests {
         let path = tmp("negdur.csv");
         std::fs::write(&path, "job_id,arrival,is_long,duration\n0,1.0,0,-5.0\n").unwrap();
         assert!(read_csv(&path, 90.0).is_err());
+        assert!(CsvStream::open(&path, 90.0).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_non_finite_values() {
+        for row in ["0,NaN,0,5.0", "0,1.0,0,NaN", "0,inf,0,5.0", "0,1.0,0,inf"] {
+            let path = tmp("nonfinite.csv");
+            std::fs::write(&path, format!("job_id,arrival,is_long,duration\n{row}\n"))
+                .unwrap();
+            assert!(read_csv(&path, 90.0).is_err(), "eager accepted {row:?}");
+            assert!(CsvStream::open(&path, 90.0).is_err(), "stream accepted {row:?}");
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn stream_rejects_split_job_groups() {
+        // Job 0's rows split around job 1: the eager reader merges them
+        // into one 2-task job; the streaming reader must refuse rather
+        // than silently emit two 1-task jobs.
+        let path = tmp("splitgroup.csv");
+        std::fs::write(
+            &path,
+            "job_id,arrival,is_long,duration\n0,5.0,0,1.0\n1,5.0,0,1.0\n0,5.0,0,2.0\n",
+        )
+        .unwrap();
+        assert!(CsvStream::open(&path, 90.0).is_err());
+        assert!(read_csv(&path, 90.0).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stream_records_trace_horizon() {
+        let w = small_workload();
+        let path = tmp("horizon.csv");
+        write_csv(&w, &path).unwrap();
+        let stream = CsvStream::open(&path, w.cutoff).unwrap();
+        assert_eq!(stream.last_arrival(), w.last_arrival());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stream_rejects_unsorted_groups() {
+        let path = tmp("unsorted.csv");
+        std::fs::write(
+            &path,
+            "job_id,arrival,is_long,duration\n0,5.0,0,1.0\n1,2.0,0,1.0\n",
+        )
+        .unwrap();
+        assert!(CsvStream::open(&path, 90.0).is_err());
+        // The eager reader tolerates it (it sorts).
+        assert!(read_csv(&path, 90.0).is_ok());
         std::fs::remove_file(path).ok();
     }
 
     #[test]
     fn rejects_missing_file() {
         assert!(read_csv(Path::new("/nonexistent/trace.csv"), 90.0).is_err());
+        assert!(CsvStream::open(Path::new("/nonexistent/trace.csv"), 90.0).is_err());
     }
 }

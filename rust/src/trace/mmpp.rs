@@ -35,29 +35,72 @@ impl Mmpp {
     }
 
     /// Generate all arrival times in `[0, horizon)`.
+    ///
+    /// Eager convenience over [`MmppStream`]: drains the stream and
+    /// propagates the consumed RNG state back to `rng`, so call sites
+    /// that interleave other draws on the same stream are unaffected by
+    /// the streaming refactor.
     pub fn arrivals(&self, horizon: Time, rng: &mut Rng) -> Vec<Time> {
         let mut out = Vec::with_capacity((self.mean_rate() * horizon) as usize + 16);
-        let mut t = 0.0;
-        let mut in_burst = false;
-        // Time at which the modulating chain next flips state.
-        let mut phase_end = rng.exponential(self.calm_dwell);
-        while t < horizon {
-            let rate = if in_burst { self.burst_rate } else { self.calm_rate };
-            let dt = if rate > 0.0 { rng.exponential(1.0 / rate) } else { f64::INFINITY };
-            if t + dt < phase_end {
-                t += dt;
-                if t < horizon {
-                    out.push(t);
+        let mut stream = MmppStream::new(self.clone(), horizon, rng.clone());
+        while let Some(t) = stream.next_arrival() {
+            out.push(t);
+        }
+        *rng = stream.into_rng();
+        out
+    }
+}
+
+/// Streaming MMPP arrival generator: the same state machine as
+/// [`Mmpp::arrivals`], one arrival per pull, O(1) memory.
+///
+/// Draw-for-draw identical to the eager generator: pulling the stream to
+/// exhaustion consumes exactly the RNG sequence the eager loop consumed,
+/// so a fixed-seed streamed trace is bit-identical to its eager twin.
+#[derive(Clone, Debug)]
+pub struct MmppStream {
+    mmpp: Mmpp,
+    rng: Rng,
+    horizon: Time,
+    t: Time,
+    in_burst: bool,
+    /// Time at which the modulating chain next flips state.
+    phase_end: Time,
+}
+
+impl MmppStream {
+    pub fn new(mmpp: Mmpp, horizon: Time, mut rng: Rng) -> Self {
+        let phase_end = rng.exponential(mmpp.calm_dwell);
+        MmppStream { mmpp, rng, horizon, t: 0.0, in_burst: false, phase_end }
+    }
+
+    /// The next arrival time in `[0, horizon)`, or `None` once the
+    /// process has run past the horizon. Nondecreasing across calls.
+    pub fn next_arrival(&mut self) -> Option<Time> {
+        while self.t < self.horizon {
+            let rate = if self.in_burst { self.mmpp.burst_rate } else { self.mmpp.calm_rate };
+            let dt =
+                if rate > 0.0 { self.rng.exponential(1.0 / rate) } else { f64::INFINITY };
+            if self.t + dt < self.phase_end {
+                self.t += dt;
+                if self.t < self.horizon {
+                    return Some(self.t);
                 }
             } else {
                 // Jump to the phase boundary and flip the modulating state.
-                t = phase_end;
-                in_burst = !in_burst;
-                let dwell = if in_burst { self.burst_dwell } else { self.calm_dwell };
-                phase_end = t + rng.exponential(dwell);
+                self.t = self.phase_end;
+                self.in_burst = !self.in_burst;
+                let dwell =
+                    if self.in_burst { self.mmpp.burst_dwell } else { self.mmpp.calm_dwell };
+                self.phase_end = self.t + self.rng.exponential(dwell);
             }
         }
-        out
+        None
+    }
+
+    /// Recover the RNG (with its consumed state) after draining.
+    pub fn into_rng(self) -> Rng {
+        self.rng
     }
 }
 
@@ -124,5 +167,30 @@ mod tests {
         let m = Mmpp::poisson(0.0);
         let mut rng = Rng::new(5);
         assert!(m.arrivals(1000.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn stream_matches_eager_bit_exactly() {
+        let m = Mmpp { calm_rate: 0.1, burst_rate: 2.0, calm_dwell: 300.0, burst_dwell: 60.0 };
+        let mut eager_rng = Rng::new(21);
+        let eager = m.arrivals(20_000.0, &mut eager_rng);
+        let mut stream = MmppStream::new(m, 20_000.0, Rng::new(21));
+        let mut streamed = Vec::new();
+        while let Some(t) = stream.next_arrival() {
+            streamed.push(t);
+        }
+        assert_eq!(eager.len(), streamed.len());
+        for (a, b) in eager.iter().zip(&streamed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Draining consumed the same RNG state on both paths.
+        assert_eq!(eager_rng.next_u64(), stream.into_rng().next_u64());
+    }
+
+    #[test]
+    fn stream_is_exhausted_after_horizon() {
+        let mut s = MmppStream::new(Mmpp::poisson(0.5), 100.0, Rng::new(3));
+        while s.next_arrival().is_some() {}
+        assert!(s.next_arrival().is_none());
     }
 }

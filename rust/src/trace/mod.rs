@@ -1,14 +1,37 @@
 //! Workload traces: job/task records, bursty arrival processes, synthetic
-//! generators calibrated to the paper's traces, CSV persistence, and
-//! shape statistics.
+//! generators calibrated to the paper's traces, CSV persistence, shape
+//! statistics — and the streaming [`ArrivalSource`] layer the simulator
+//! pulls from.
+//!
+//! Two ways to describe a workload:
+//!
+//! * **Eager**: a [`Workload`] (`Vec<Job>` sorted by arrival) — built by
+//!   [`synth::yahoo_like`] / [`synth::google_like`] / [`read_csv`],
+//!   persisted with [`write_csv`]. Memory is O(trace).
+//! * **Streaming**: an [`ArrivalSource`] pulled one job at a time —
+//!   [`synth::YahooSource`] / [`synth::GoogleSource`] (bit-identical per
+//!   seed to their eager twins), [`CsvStream`] (replay a trace file in
+//!   O(1) memory), or a [`WorkloadReplay`] / [`VecSource`] adapter over
+//!   an eager workload. Combinators ([`BurstStorm`], [`RateScale`],
+//!   [`TimeWindow`], [`Splice`], [`Merge`], [`Take`]) compose sources
+//!   into scenarios; see [`crate::coordinator::scenario`] for the
+//!   declarative `[scenario]` registry on top.
+//!
+//! The eager generators are thin collectors over the streaming ones, so
+//! the two paths cannot drift.
 
 mod io;
 mod job;
 mod mmpp;
+mod source;
 mod stats;
 pub mod synth;
 
-pub use io::{read_csv, write_csv};
+pub use io::{read_csv, write_csv, CsvStream};
 pub use job::{Job, Workload};
-pub use mmpp::Mmpp;
+pub use mmpp::{Mmpp, MmppStream};
+pub use source::{
+    collect_jobs, collect_workload, ArrivalSource, BurstStorm, Merge, RateScale, Splice,
+    Take, TimeWindow, VecSource, WorkloadReplay,
+};
 pub use stats::TraceStats;

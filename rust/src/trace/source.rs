@@ -1,0 +1,502 @@
+//! Streaming workloads: the [`ArrivalSource`] pull abstraction and the
+//! combinator algebra on top of it.
+//!
+//! A source yields jobs one at a time, **nondecreasing in arrival time**,
+//! so the simulation can pull arrivals lazily into its event queue with a
+//! single job of lookahead — peak resident job count is set by cluster
+//! load, not trace length. Implementations:
+//!
+//! * the synthetic generators ([`crate::trace::synth::YahooSource`],
+//!   [`crate::trace::synth::GoogleSource`]) — streaming twins of
+//!   `yahoo_like` / `google_like`, bit-identical per seed;
+//! * the CSV trace replayer ([`crate::trace::CsvStream`]);
+//! * eager back-compat adapters ([`WorkloadReplay`], [`VecSource`]).
+//!
+//! Combinators compose sources declaratively — [`BurstStorm`] (inject
+//! rate-multiplied storm windows), [`RateScale`], [`TimeWindow`],
+//! [`Splice`] / [`Merge`] of heterogeneous sources, [`Take`] — each
+//! deterministic under the forked-RNG scheme: sources own their forked
+//! streams, and the driver's arrival stream passed to [`next_job`] is
+//! consumed only by combinators that inject randomness (in a fixed pull
+//! order), so a fixed seed pins the whole pipeline.
+//!
+//! Job ids emitted by sources are placeholders; the simulation driver
+//! (or [`collect_workload`]) assigns sequential ids in emission order.
+//!
+//! [`next_job`]: ArrivalSource::next_job
+
+use crate::sim::Rng;
+use crate::trace::{Job, Workload};
+use crate::util::Time;
+
+/// A pull-based stream of jobs, nondecreasing in arrival time.
+pub trait ArrivalSource {
+    /// Pull the next job, or `None` when the trace is exhausted.
+    ///
+    /// `rng` is the driver-owned arrival stream; replay and synthetic
+    /// sources ignore it (they own their forked streams), combinators
+    /// that inject randomness draw from it.
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job>;
+
+    /// Short/long classification cutoff (seconds of mean task duration)
+    /// this source was built with; recorded on collected workloads.
+    fn cutoff(&self) -> f64 {
+        90.0
+    }
+}
+
+/// Drain a source into a job vector (ids are left as emitted).
+pub fn collect_jobs(source: &mut dyn ArrivalSource, rng: &mut Rng) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    while let Some(job) = source.next_job(rng) {
+        jobs.push(job);
+    }
+    jobs
+}
+
+/// Drain a source into an eager [`Workload`] (sorted, ids reassigned).
+pub fn collect_workload(source: &mut dyn ArrivalSource, rng: &mut Rng) -> Workload {
+    let cutoff = source.cutoff();
+    Workload::new(collect_jobs(source, rng), cutoff)
+}
+
+// ------------------------------------------------- back-compat adapters
+
+/// Streams a borrowed eager [`Workload`] — the back-compat adapter that
+/// lets every `&Workload` call site run through the streaming core.
+///
+/// Each pull clones the job (one allocation + memcpy of its durations);
+/// that constant factor is small next to per-task placement work, but a
+/// borrowed-lookahead fast path is a known follow-up (see ROADMAP).
+pub struct WorkloadReplay<'w> {
+    workload: &'w Workload,
+    next: usize,
+}
+
+impl<'w> WorkloadReplay<'w> {
+    pub fn new(workload: &'w Workload) -> Self {
+        WorkloadReplay { workload, next: 0 }
+    }
+}
+
+impl ArrivalSource for WorkloadReplay<'_> {
+    fn next_job(&mut self, _rng: &mut Rng) -> Option<Job> {
+        let job = self.workload.jobs.get(self.next)?.clone();
+        self.next += 1;
+        Some(job)
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.workload.cutoff
+    }
+}
+
+/// Streams an owned job vector (must be sorted by arrival; asserted).
+pub struct VecSource {
+    jobs: std::vec::IntoIter<Job>,
+    cutoff: f64,
+}
+
+impl VecSource {
+    /// `jobs` must be nondecreasing in arrival time.
+    pub fn new(jobs: Vec<Job>, cutoff: f64) -> Self {
+        assert!(
+            jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "VecSource jobs must be sorted by arrival"
+        );
+        VecSource { jobs: jobs.into_iter(), cutoff }
+    }
+}
+
+impl From<Workload> for VecSource {
+    fn from(w: Workload) -> Self {
+        let cutoff = w.cutoff;
+        VecSource { jobs: w.jobs.into_iter(), cutoff }
+    }
+}
+
+impl ArrivalSource for VecSource {
+    fn next_job(&mut self, _rng: &mut Rng) -> Option<Job> {
+        self.jobs.next()
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.cutoff
+    }
+}
+
+// -------------------------------------------------------- combinators
+
+/// Inject rate-multiplied storm windows: every job whose arrival falls
+/// inside a `[start, end)` window is emitted `intensity` times (copies
+/// share the arrival and task durations but are distinct jobs), so the
+/// arrival rate inside the window is multiplied by `intensity` while the
+/// trace outside is untouched.
+///
+/// Fractional intensities are resolved probabilistically per job from
+/// the driver's arrival stream (e.g. 2.5 → one guaranteed extra copy
+/// plus another with probability 0.5), which keeps storms exactly
+/// reproducible under a fixed seed.
+pub struct BurstStorm<'a> {
+    inner: Box<dyn ArrivalSource + 'a>,
+    /// `(start, end)` storm windows, seconds.
+    windows: Vec<(Time, Time)>,
+    intensity: f64,
+    /// Copies of the current in-window job still owed.
+    pending: Option<(Job, usize)>,
+}
+
+impl<'a> BurstStorm<'a> {
+    pub fn new(
+        inner: Box<dyn ArrivalSource + 'a>,
+        windows: Vec<(Time, Time)>,
+        intensity: f64,
+    ) -> Self {
+        assert!(intensity >= 1.0, "storm intensity must be >= 1 (got {intensity})");
+        assert!(
+            windows.iter().all(|&(s, e)| s.is_finite() && e.is_finite() && s < e),
+            "storm windows must be finite with start < end"
+        );
+        BurstStorm { inner, windows, intensity, pending: None }
+    }
+
+    fn in_window(&self, t: Time) -> bool {
+        self.windows.iter().any(|&(s, e)| t >= s && t < e)
+    }
+}
+
+impl ArrivalSource for BurstStorm<'_> {
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job> {
+        if let Some((job, left)) = self.pending.take() {
+            if left > 1 {
+                self.pending = Some((job.clone(), left - 1));
+            }
+            return Some(job);
+        }
+        let job = self.inner.next_job(rng)?;
+        if self.in_window(job.arrival) {
+            let extra_f = self.intensity - 1.0;
+            let mut extra = extra_f.floor() as usize;
+            let frac = extra_f - extra_f.floor();
+            if frac > 0.0 && rng.f64() < frac {
+                extra += 1;
+            }
+            if extra > 0 {
+                self.pending = Some((job.clone(), extra));
+            }
+        }
+        Some(job)
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.inner.cutoff()
+    }
+}
+
+/// Multiply the arrival rate by `factor` by compressing arrival times
+/// (`arrival / factor`); task durations are untouched.
+pub struct RateScale<'a> {
+    inner: Box<dyn ArrivalSource + 'a>,
+    factor: f64,
+}
+
+impl<'a> RateScale<'a> {
+    pub fn new(inner: Box<dyn ArrivalSource + 'a>, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor.is_finite(), "rate factor must be positive");
+        RateScale { inner, factor }
+    }
+}
+
+impl ArrivalSource for RateScale<'_> {
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job> {
+        let mut job = self.inner.next_job(rng)?;
+        job.arrival /= self.factor;
+        Some(job)
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.inner.cutoff()
+    }
+}
+
+/// Slice `[start, end)` out of a source and rebase it to t = 0 (jobs
+/// before `start` are skipped; the stream ends at the first arrival at
+/// or past `end`).
+pub struct TimeWindow<'a> {
+    inner: Box<dyn ArrivalSource + 'a>,
+    start: Time,
+    end: Time,
+    done: bool,
+}
+
+impl<'a> TimeWindow<'a> {
+    pub fn new(inner: Box<dyn ArrivalSource + 'a>, start: Time, end: Time) -> Self {
+        assert!(start >= 0.0 && start < end, "window must satisfy 0 <= start < end");
+        TimeWindow { inner, start, end, done: false }
+    }
+}
+
+impl ArrivalSource for TimeWindow<'_> {
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job> {
+        if self.done {
+            return None;
+        }
+        loop {
+            let Some(mut job) = self.inner.next_job(rng) else {
+                self.done = true;
+                return None;
+            };
+            if job.arrival < self.start {
+                continue;
+            }
+            if job.arrival >= self.end {
+                // Arrivals are nondecreasing: nothing later can qualify.
+                self.done = true;
+                return None;
+            }
+            job.arrival -= self.start;
+            return Some(job);
+        }
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.inner.cutoff()
+    }
+}
+
+/// Pass through the first `n` jobs, then end the stream.
+pub struct Take<'a> {
+    inner: Box<dyn ArrivalSource + 'a>,
+    left: usize,
+}
+
+impl<'a> Take<'a> {
+    pub fn new(inner: Box<dyn ArrivalSource + 'a>, n: usize) -> Self {
+        Take { inner, left: n }
+    }
+}
+
+impl ArrivalSource for Take<'_> {
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        self.inner.next_job(rng)
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.inner.cutoff()
+    }
+}
+
+/// Merge two heterogeneous sources by arrival time (ties go to `a`) —
+/// e.g. a Yahoo-like interactive stream over a replayed batch trace.
+pub struct Merge<'a> {
+    a: Box<dyn ArrivalSource + 'a>,
+    b: Box<dyn ArrivalSource + 'a>,
+    /// One-job lookahead per side; outer `None` = not pulled yet.
+    peek_a: Option<Option<Job>>,
+    peek_b: Option<Option<Job>>,
+}
+
+impl<'a> Merge<'a> {
+    pub fn new(a: Box<dyn ArrivalSource + 'a>, b: Box<dyn ArrivalSource + 'a>) -> Self {
+        Merge { a, b, peek_a: None, peek_b: None }
+    }
+}
+
+impl ArrivalSource for Merge<'_> {
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job> {
+        if self.peek_a.is_none() {
+            self.peek_a = Some(self.a.next_job(rng));
+        }
+        if self.peek_b.is_none() {
+            self.peek_b = Some(self.b.next_job(rng));
+        }
+        let take_a = match (self.peek_a.as_ref().unwrap(), self.peek_b.as_ref().unwrap()) {
+            (Some(ja), Some(jb)) => ja.arrival <= jb.arrival,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return None,
+        };
+        if take_a {
+            self.peek_a.take().unwrap()
+        } else {
+            self.peek_b.take().unwrap()
+        }
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.a.cutoff()
+    }
+}
+
+/// Regime change at time `at`: jobs from `first` with arrival < `at`,
+/// then `second`'s trace appended starting at `at` (its arrivals are
+/// shifted by `at`) — the Alibaba-style mixed-regime composition.
+pub struct Splice<'a> {
+    first: Box<dyn ArrivalSource + 'a>,
+    second: Box<dyn ArrivalSource + 'a>,
+    at: Time,
+    in_second: bool,
+}
+
+impl<'a> Splice<'a> {
+    pub fn new(
+        first: Box<dyn ArrivalSource + 'a>,
+        second: Box<dyn ArrivalSource + 'a>,
+        at: Time,
+    ) -> Self {
+        assert!(at >= 0.0 && at.is_finite(), "splice point must be finite and >= 0");
+        Splice { first, second, at, in_second: false }
+    }
+}
+
+impl ArrivalSource for Splice<'_> {
+    fn next_job(&mut self, rng: &mut Rng) -> Option<Job> {
+        if !self.in_second {
+            match self.first.next_job(rng) {
+                Some(job) if job.arrival < self.at => return Some(job),
+                // First regime over (past the splice point or exhausted).
+                _ => self.in_second = true,
+            }
+        }
+        let mut job = self.second.next_job(rng)?;
+        job.arrival += self.at;
+        Some(job)
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.first.cutoff()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::JobId;
+
+    fn job(arrival: f64) -> Job {
+        Job { id: JobId(0), arrival, task_durations: vec![1.0], is_long: false }
+    }
+
+    fn jobs_of(src: &mut dyn ArrivalSource, seed: u64) -> Vec<Job> {
+        collect_jobs(src, &mut Rng::new(seed))
+    }
+
+    fn arrivals_of(src: &mut dyn ArrivalSource, seed: u64) -> Vec<f64> {
+        jobs_of(src, seed).iter().map(|j| j.arrival).collect()
+    }
+
+    #[test]
+    fn workload_replay_streams_in_order() {
+        let w = Workload::new(vec![job(3.0), job(1.0), job(2.0)], 90.0);
+        let mut src = WorkloadReplay::new(&w);
+        assert_eq!(arrivals_of(&mut src, 0), vec![1.0, 2.0, 3.0]);
+        assert_eq!(src.cutoff(), 90.0);
+    }
+
+    #[test]
+    fn vec_source_accepts_sorted_input() {
+        let mut ok = VecSource::new(vec![job(1.0), job(1.0), job(2.0)], 90.0);
+        assert_eq!(jobs_of(&mut ok, 0).len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted by arrival")]
+    fn vec_source_rejects_unsorted_input() {
+        VecSource::new(vec![job(2.0), job(1.0)], 90.0);
+    }
+
+    #[test]
+    fn burst_storm_multiplies_in_window_only() {
+        let base: Vec<Job> = (0..100).map(|i| job(i as f64)).collect();
+        let mut storm =
+            BurstStorm::new(Box::new(VecSource::new(base, 90.0)), vec![(20.0, 40.0)], 3.0);
+        let arrivals = arrivals_of(&mut storm, 1);
+        let inside = arrivals.iter().filter(|&&t| (20.0..40.0).contains(&t)).count();
+        let outside = arrivals.len() - inside;
+        assert_eq!(inside, 20 * 3);
+        assert_eq!(outside, 80);
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "storm broke ordering");
+    }
+
+    #[test]
+    fn burst_storm_fractional_intensity_is_seed_deterministic() {
+        let mk = || {
+            let base: Vec<Job> = (0..200).map(|i| job(i as f64 * 0.5)).collect();
+            BurstStorm::new(Box::new(VecSource::new(base, 90.0)), vec![(10.0, 60.0)], 2.5)
+        };
+        let a = arrivals_of(&mut mk(), 9);
+        let b = arrivals_of(&mut mk(), 9);
+        assert_eq!(a, b);
+        // Expected count: 100 in-window jobs x 2.5 on average; strictly
+        // between the floor (x2) and ceiling (x3) shows the fractional
+        // coin actually flipped both ways.
+        let inside = a.iter().filter(|&&t| (10.0..60.0).contains(&t)).count();
+        assert!((200..300).contains(&inside), "inside={inside}");
+    }
+
+    #[test]
+    fn rate_scale_compresses_time() {
+        let base: Vec<Job> = (0..10).map(|i| job(i as f64 * 10.0)).collect();
+        let mut scaled = RateScale::new(Box::new(VecSource::new(base, 90.0)), 2.0);
+        let arrivals = arrivals_of(&mut scaled, 0);
+        assert_eq!(arrivals[1], 5.0);
+        assert_eq!(arrivals[9], 45.0);
+    }
+
+    #[test]
+    fn time_window_slices_and_rebases() {
+        let base: Vec<Job> = (0..100).map(|i| job(i as f64)).collect();
+        let mut win = TimeWindow::new(Box::new(VecSource::new(base, 90.0)), 30.0, 50.0);
+        let arrivals = arrivals_of(&mut win, 0);
+        assert_eq!(arrivals.len(), 20);
+        assert_eq!(arrivals[0], 0.0);
+        assert_eq!(arrivals[19], 19.0);
+    }
+
+    #[test]
+    fn take_caps_the_stream() {
+        let base: Vec<Job> = (0..100).map(|i| job(i as f64)).collect();
+        let mut take = Take::new(Box::new(VecSource::new(base, 90.0)), 7);
+        assert_eq!(arrivals_of(&mut take, 0).len(), 7);
+    }
+
+    #[test]
+    fn merge_interleaves_by_arrival_with_ties_to_a() {
+        let a: Vec<Job> = vec![job(1.0), job(4.0), job(6.0)];
+        let b: Vec<Job> = vec![job(2.0), job(4.0), job(9.0)];
+        let mut m = Merge::new(
+            Box::new(VecSource::new(a, 90.0)),
+            Box::new(VecSource::new(b, 50.0)),
+        );
+        assert_eq!(m.cutoff(), 90.0); // first source's cutoff wins
+        let arrivals = arrivals_of(&mut m, 0);
+        assert_eq!(arrivals, vec![1.0, 2.0, 4.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn splice_switches_regime_and_shifts() {
+        let a: Vec<Job> = vec![job(1.0), job(2.0), job(50.0)];
+        let b: Vec<Job> = vec![job(0.5), job(3.0)];
+        let mut s = Splice::new(
+            Box::new(VecSource::new(a, 90.0)),
+            Box::new(VecSource::new(b, 90.0)),
+            10.0,
+        );
+        // 50.0 >= splice point: dropped, second regime starts shifted.
+        assert_eq!(arrivals_of(&mut s, 0), vec![1.0, 2.0, 10.5, 13.0]);
+    }
+
+    #[test]
+    fn collect_workload_reassigns_ids() {
+        let base: Vec<Job> = vec![job(0.0), job(1.0), job(2.0)];
+        let mut src = VecSource::new(base, 42.0);
+        let w = collect_workload(&mut src, &mut Rng::new(0));
+        assert_eq!(w.cutoff, 42.0);
+        let ids: Vec<u32> = w.jobs.iter().map(|j| j.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+}

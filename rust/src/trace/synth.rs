@@ -15,8 +15,8 @@
 //! behaviour the paper measures.
 
 use crate::sim::Rng;
-use crate::trace::{Job, Mmpp, Workload};
-use crate::util::JobId;
+use crate::trace::{ArrivalSource, Job, Mmpp, MmppStream, Workload};
+use crate::util::{JobId, Time};
 
 /// Parameters for the Yahoo-like evaluation workload.
 ///
@@ -98,31 +98,103 @@ fn pareto_count(rng: &mut Rng, mean: f64, alpha: f64, max: usize) -> usize {
     (x.round() as usize).clamp(1, max)
 }
 
-/// Synthesize the Yahoo-like evaluation workload.
-pub fn yahoo_like(params: &YahooLikeParams, rng: &mut Rng) -> Workload {
-    let mut jobs = Vec::new();
-    // Independent streams per class: tuning the short-job knobs must not
-    // reshuffle the long jobs (and vice versa) or calibration thrashes.
-    let mut short_arr_rng = rng.fork(0xA11);
-    let mut long_arr_rng = rng.fork(0xA22);
-    let mut short_size_rng = rng.fork(0xB22);
-    let mut long_size_rng = rng.fork(0xB33);
+/// Streaming Yahoo-like generator: two class streams (short / long), each
+/// an [`MmppStream`] plus an independent size stream, merged by arrival
+/// time with ties going to the short class — exactly the order the eager
+/// [`yahoo_like`] sort produced, so a fixed-seed streamed trace is
+/// bit-identical to its eager twin (pinned by tests below).
+///
+/// Independent streams per class: tuning the short-job knobs must not
+/// reshuffle the long jobs (and vice versa) or calibration thrashes.
+pub struct YahooSource {
+    params: YahooLikeParams,
+    short_arr: MmppStream,
+    long_arr: MmppStream,
+    short_size: Rng,
+    long_size: Rng,
+    next_short: Option<Time>,
+    next_long: Option<Time>,
+}
 
-    for t in params.short_arrivals.arrivals(params.horizon, &mut short_arr_rng) {
-        let n = pareto_count(&mut short_size_rng, params.short_tasks_mean, params.short_tasks_alpha, params.short_tasks_max);
-        let durs: Vec<f64> = (0..n)
-            .map(|_| short_size_rng.lognormal(params.short_dur_mu, params.short_dur_sigma))
-            .collect();
-        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false });
+impl YahooSource {
+    /// Fork order off `rng` matches the eager generator exactly
+    /// (0xA11, 0xA22, 0xB22, 0xB33).
+    pub fn new(params: &YahooLikeParams, rng: &mut Rng) -> Self {
+        let short_arr_rng = rng.fork(0xA11);
+        let long_arr_rng = rng.fork(0xA22);
+        let short_size = rng.fork(0xB22);
+        let long_size = rng.fork(0xB33);
+        let mut short_arr =
+            MmppStream::new(params.short_arrivals.clone(), params.horizon, short_arr_rng);
+        let mut long_arr =
+            MmppStream::new(params.long_arrivals.clone(), params.horizon, long_arr_rng);
+        let next_short = short_arr.next_arrival();
+        let next_long = long_arr.next_arrival();
+        YahooSource {
+            params: params.clone(),
+            short_arr,
+            long_arr,
+            short_size,
+            long_size,
+            next_short,
+            next_long,
+        }
     }
-    for t in params.long_arrivals.arrivals(params.horizon, &mut long_arr_rng) {
-        let n = pareto_count(&mut long_size_rng, params.long_tasks_mean, params.long_tasks_alpha, params.long_tasks_max);
-        let durs: Vec<f64> = (0..n)
-            .map(|_| long_size_rng.lognormal(params.long_dur_mu, params.long_dur_sigma))
-            .collect();
-        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: true });
+}
+
+impl ArrivalSource for YahooSource {
+    fn next_job(&mut self, _rng: &mut Rng) -> Option<Job> {
+        // Merge the class streams; ties go short-first, matching the
+        // stable sort over [shorts..., longs...] in the eager path.
+        let take_short = match (self.next_short, self.next_long) {
+            (Some(s), Some(l)) => s <= l,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return None,
+        };
+        let p = &self.params;
+        if take_short {
+            let t = self.next_short.take().expect("short head checked above");
+            self.next_short = self.short_arr.next_arrival();
+            let n = pareto_count(
+                &mut self.short_size,
+                p.short_tasks_mean,
+                p.short_tasks_alpha,
+                p.short_tasks_max,
+            );
+            let durs: Vec<f64> = (0..n)
+                .map(|_| self.short_size.lognormal(p.short_dur_mu, p.short_dur_sigma))
+                .collect();
+            Some(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false })
+        } else {
+            let t = self.next_long.take().expect("long head checked above");
+            self.next_long = self.long_arr.next_arrival();
+            let n = pareto_count(
+                &mut self.long_size,
+                p.long_tasks_mean,
+                p.long_tasks_alpha,
+                p.long_tasks_max,
+            );
+            let durs: Vec<f64> = (0..n)
+                .map(|_| self.long_size.lognormal(p.long_dur_mu, p.long_dur_sigma))
+                .collect();
+            Some(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: true })
+        }
     }
-    Workload::new(jobs, params.cutoff)
+
+    fn cutoff(&self) -> f64 {
+        self.params.cutoff
+    }
+}
+
+/// Synthesize the Yahoo-like evaluation workload (eager: drains a
+/// [`YahooSource`] into a sorted [`Workload`]).
+pub fn yahoo_like(params: &YahooLikeParams, rng: &mut Rng) -> Workload {
+    let mut source = YahooSource::new(params, rng);
+    // The synthetic source owns its forked streams and never draws from
+    // the driver stream, so a throwaway sink is fine here.
+    let mut sink = Rng::new(0);
+    Workload::new(crate::trace::collect_jobs(&mut source, &mut sink), params.cutoff)
 }
 
 /// Parameters for the Google-like motivation workload (Figure 1).
@@ -157,26 +229,49 @@ impl Default for GoogleLikeParams {
     }
 }
 
-/// Synthesize the Google-like workload used for the Figure 1 analysis
-/// and the future-work scheduler evaluation (jobs are classified short /
-/// long by mean task duration against the standard 90 s cutoff, as the
-/// hybrid schedulers require).
-pub fn google_like(params: &GoogleLikeParams, rng: &mut Rng) -> Workload {
-    let cutoff = 90.0;
-    let mut arr_rng = rng.fork(0xC33);
-    let mut size_rng = rng.fork(0xD44);
-    let mut jobs = Vec::new();
-    for t in params.arrivals.arrivals(params.horizon, &mut arr_rng) {
-        // Pareto with alpha near 1 gives the 1..50k spread with mean ~35.
-        let n = (size_rng.pareto(1.0, params.tasks_alpha).round() as usize)
-            .clamp(1, params.tasks_max);
-        let durs: Vec<f64> = (0..n)
-            .map(|_| size_rng.lognormal(params.dur_mu, params.dur_sigma))
-            .collect();
-        let is_long = durs.iter().sum::<f64>() / n as f64 >= cutoff;
-        jobs.push(Job { id: JobId(0), arrival: t, task_durations: durs, is_long });
+/// Streaming Google-like generator: one MMPP arrival stream plus one
+/// size stream (forks 0xC33 / 0xD44, as in the eager path). Jobs are
+/// classified short / long by mean task duration against the standard
+/// 90 s cutoff, as the hybrid schedulers require.
+pub struct GoogleSource {
+    params: GoogleLikeParams,
+    arr: MmppStream,
+    size: Rng,
+    next_arrival: Option<Time>,
+}
+
+impl GoogleSource {
+    pub fn new(params: &GoogleLikeParams, rng: &mut Rng) -> Self {
+        let arr_rng = rng.fork(0xC33);
+        let size = rng.fork(0xD44);
+        let mut arr = MmppStream::new(params.arrivals.clone(), params.horizon, arr_rng);
+        let next_arrival = arr.next_arrival();
+        GoogleSource { params: params.clone(), arr, size, next_arrival }
     }
-    Workload::new(jobs, cutoff)
+}
+
+impl ArrivalSource for GoogleSource {
+    fn next_job(&mut self, _rng: &mut Rng) -> Option<Job> {
+        let t = self.next_arrival.take()?;
+        self.next_arrival = self.arr.next_arrival();
+        let p = &self.params;
+        // Pareto with alpha near 1 gives the 1..50k spread with mean ~35.
+        let n =
+            (self.size.pareto(1.0, p.tasks_alpha).round() as usize).clamp(1, p.tasks_max);
+        let durs: Vec<f64> =
+            (0..n).map(|_| self.size.lognormal(p.dur_mu, p.dur_sigma)).collect();
+        let is_long = durs.iter().sum::<f64>() / n as f64 >= 90.0;
+        Some(Job { id: JobId(0), arrival: t, task_durations: durs, is_long })
+    }
+}
+
+/// Synthesize the Google-like workload used for the Figure 1 analysis
+/// and the future-work scheduler evaluation (eager: drains a
+/// [`GoogleSource`]).
+pub fn google_like(params: &GoogleLikeParams, rng: &mut Rng) -> Workload {
+    let mut source = GoogleSource::new(params, rng);
+    let mut sink = Rng::new(0);
+    Workload::new(crate::trace::collect_jobs(&mut source, &mut sink), 90.0)
 }
 
 #[cfg(test)]
@@ -247,5 +342,61 @@ mod tests {
         for j in &w.jobs {
             assert!(j.task_durations.iter().all(|&d| d > 0.0));
         }
+    }
+
+    /// The streaming source IS the eager generator (the eager fn drains
+    /// it), but pin the contract anyway: pulling a fresh source job by
+    /// job reproduces the eager workload bit-exactly, in order, without
+    /// touching the driver RNG stream.
+    #[test]
+    fn yahoo_source_streams_eager_workload_bit_exactly() {
+        let mut p = YahooLikeParams::default();
+        p.horizon = 3000.0;
+        let eager = yahoo_like(&p, &mut Rng::new(77));
+        let mut src = YahooSource::new(&p, &mut Rng::new(77));
+        let mut sink = Rng::new(123);
+        let sink_probe = Rng::new(123).next_u64();
+        let mut n = 0usize;
+        while let Some(job) = src.next_job(&mut sink) {
+            let e = &eager.jobs[n];
+            assert_eq!(job.arrival.to_bits(), e.arrival.to_bits(), "job {n} arrival");
+            assert_eq!(job.task_durations, e.task_durations, "job {n} durations");
+            assert_eq!(job.is_long, e.is_long, "job {n} class");
+            n += 1;
+        }
+        assert_eq!(n, eager.num_jobs());
+        assert_eq!(sink.next_u64(), sink_probe, "source drew from the driver stream");
+    }
+
+    #[test]
+    fn yahoo_source_arrivals_nondecreasing() {
+        let mut p = YahooLikeParams::default();
+        p.horizon = 3000.0;
+        let mut src = YahooSource::new(&p, &mut Rng::new(5));
+        let mut sink = Rng::new(0);
+        let mut last = f64::NEG_INFINITY;
+        while let Some(job) = src.next_job(&mut sink) {
+            assert!(job.arrival >= last);
+            last = job.arrival;
+        }
+    }
+
+    #[test]
+    fn google_source_streams_eager_workload_bit_exactly() {
+        let mut p = GoogleLikeParams::default();
+        p.horizon = 40_000.0;
+        let eager = google_like(&p, &mut Rng::new(23));
+        let mut src = GoogleSource::new(&p, &mut Rng::new(23));
+        let mut sink = Rng::new(0);
+        let mut n = 0usize;
+        while let Some(job) = src.next_job(&mut sink) {
+            let e = &eager.jobs[n];
+            assert_eq!(job.arrival.to_bits(), e.arrival.to_bits());
+            assert_eq!(job.task_durations, e.task_durations);
+            assert_eq!(job.is_long, e.is_long);
+            n += 1;
+        }
+        assert_eq!(n, eager.num_jobs());
+        assert_eq!(src.cutoff(), 90.0);
     }
 }
