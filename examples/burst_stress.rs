@@ -70,6 +70,7 @@ fn main() -> Result<()> {
         snapshot_interval: 60.0,
         steal_probes: 8,
         steal_batch: 8,
+        recycle_task_slots: true,
         seed: 7,
     };
     let mut sched = Hybrid::cloudcoaster(2.0);
@@ -88,7 +89,7 @@ fn main() -> Result<()> {
     let (adds, drains, _) = res.manager_stats.unwrap();
     println!(
         "\n{} transients requested, {} drained; short delay mean {:.1}s p99 {:.1}s; \
-         {} stale copies skipped; peak {} resident jobs; {:.0}k events/s",
+         {} stale copies skipped; peak {} resident jobs / {} task slots; {:.0}k events/s",
         adds,
         drains,
         res.rec.short_delays.mean(),
@@ -98,6 +99,7 @@ fn main() -> Result<()> {
         },
         res.rec.stale_copies_skipped,
         res.peak_resident_jobs,
+        res.peak_resident_tasks,
         res.events_per_sec() / 1000.0,
     );
     Ok(())

@@ -110,9 +110,10 @@ fn main() -> Result<()> {
     let storm = run_experiment_on(&storm_cfg, &workload, analytics.as_dyn())?;
     println!("\n[scenario] {}", summary_line(&storm));
     println!(
-        "storm scenario streamed {} tasks with at most {} jobs resident",
+        "storm scenario streamed {} tasks with at most {} jobs / {} task slots resident",
         storm.short_delay.n + storm.long_delay.n,
         storm.peak_resident_jobs,
+        storm.peak_resident_tasks,
     );
     Ok(())
 }

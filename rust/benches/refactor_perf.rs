@@ -114,6 +114,45 @@ fn main() {
         entries.push(json_entry("indexed_query_update_churn", &r));
     }
 
+    // ---- arena churn: recycling vs append-only ----------------------
+    // Steady-state enqueue->finish churn through the generational arena:
+    // the recycling path pays the free-list push/pop + generation bump,
+    // the append-only path pays unbounded Vec growth instead. Tracks the
+    // recycle overhead per task (and the memory win is what the CI
+    // memory-bound smoke pins).
+    for (label, recycle) in
+        [("arena_churn_recycling", true), ("arena_churn_append_only", false)]
+    {
+        let mut cluster = Cluster::new(64, 8, QueuePolicy::Fifo);
+        cluster.set_task_recycling(recycle);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(3.0);
+        let mut rng = Rng::new(11);
+        let r = bench(&format!("refactor/{label}_x5000"), 2, 10, || {
+            for i in 0..iters {
+                let sid = ServerId((i % 72) as u32);
+                let t = cluster.add_task(JobId(0), 0.5 + rng.f64(), false, engine.now());
+                cluster.enqueue(t, sid, &mut engine, &mut rec);
+                // Drain one finish per enqueue: steady state, so the
+                // recycling arena stays at O(servers) slots.
+                if let Some((_, ev)) = engine.pop() {
+                    if let cloudcoaster::sim::Event::TaskFinish { server, task } = ev {
+                        cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                    }
+                }
+                black_box(t);
+            }
+        });
+        entries.push(json_entry(label, &r));
+        // Record the arena footprint each mode ended with (slots, not
+        // ns — the memory side of the churn trade).
+        entries.push(format!(
+            "    {{\"name\": \"{label}_final_slots\", \"slots\": {}, \"peak_resident\": {}}}",
+            cluster.task_slots(),
+            cluster.peak_resident_tasks()
+        ));
+    }
+
     // ---- sweep: serial vs parallel ----------------------------------
     let mut base = bench_common::bench_base();
     // Shrink to keep the bench under a minute while preserving dynamics.

@@ -1,6 +1,6 @@
-//! The cluster: server + task arenas, partitions, and the incremental
-//! state the schedulers and the transient manager read (`N_long`,
-//! `N_total`, the long-load ratio).
+//! The cluster: the server arena, the **generational task arena**,
+//! partitions, and the incremental state the schedulers and the
+//! transient manager read (`N_long`, `N_total`, the long-load ratio).
 //!
 //! All mutation goes through methods here so the invariants hold by
 //! construction:
@@ -11,18 +11,65 @@
 //!   `N_total`).
 //! * a server's `running` task is always in state `Running` with
 //!   `ran_on == server`.
+//!
+//! ## The task arena
+//!
+//! Tasks are slot-allocated; a [`TaskRef`] (slot + generation) is the
+//! only way to address one. A slot is pushed onto the free list — and
+//! its generation bumped — exactly when the task is `Finished` *and*
+//! its liveness count (queue copies + pending `TaskFinish` events) hits
+//! zero, so the *task arena* is O(peak active tasks), not O(trace).
+//! (Per-task delay samples in the `Recorder` and the server arena —
+//! one slot per transient ever requested — still grow with the run;
+//! see the ROADMAP item on trace-scale memory.) Every settle site
+//! ([`Cluster::try_start_next`] pruning, [`Cluster::on_task_finish`],
+//! [`Cluster::revoke`]) releases its ref through [`Cluster::maybe_free`].
+//! Recycling can be disabled ([`Cluster::set_task_recycling`]) for
+//! golden comparisons; liveness accounting is identical in both modes,
+//! so every simulation observable — including `peak_resident_tasks` —
+//! is bit-identical with recycling on or off.
 
 use crate::cluster::{
     Pool, PoolIndex, QueuePolicy, Server, ServerKind, ServerState, Task, TaskState,
 };
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event};
-use crate::util::{JobId, ServerId, TaskId, Time};
+use crate::util::{JobId, ServerId, TaskRef, Time};
+
+/// What a popped `TaskFinish` event resolved to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FinishOutcome {
+    /// The event outlived its execution (the §3.3 revocation race): the
+    /// task was revoked mid-run and restarted — or already finished —
+    /// elsewhere. Its liveness ref has been consumed; skip the event.
+    Stale,
+    /// The running task completed. Fields are extracted *here*, before
+    /// the slot can be recycled — callers must not read them back
+    /// through the (possibly freed) `TaskRef`.
+    Finished {
+        job: JobId,
+        is_long: bool,
+        /// The server is draining and has gone idle — the caller should
+        /// retire it.
+        drained: bool,
+    },
+}
 
 /// Full simulated-cluster state.
 pub struct Cluster {
     pub servers: Vec<Server>,
-    pub tasks: Vec<Task>,
+    /// Task arena slots. Addressed only through generation-checked
+    /// [`TaskRef`]s ([`Cluster::task`] / [`Cluster::get_task`]).
+    tasks: Vec<Task>,
+    /// Recycled slot indices awaiting reuse (LIFO).
+    free_slots: Vec<u32>,
+    /// Recycle freed slots (default). Off = append-only reference mode
+    /// for the recycling-vs-not golden pin.
+    recycle: bool,
+    /// Slots currently holding a live (not yet released) task.
+    resident_tasks: usize,
+    /// High-water mark of `resident_tasks` — the arena-memory headline.
+    peak_resident_tasks: usize,
     pub policy: QueuePolicy,
     /// Servers (Active or Draining) currently hosting >= 1 long task.
     n_long_servers: usize,
@@ -60,6 +107,10 @@ impl Cluster {
             n_total: servers.len(),
             servers,
             tasks: Vec::new(),
+            free_slots: Vec::new(),
+            recycle: true,
+            resident_tasks: 0,
+            peak_resident_tasks: 0,
             policy,
             n_long_servers: 0,
             general,
@@ -67,6 +118,14 @@ impl Cluster {
             transient_pool: Vec::new(),
             index: PoolIndex::new(n_general, n_short_reserved),
         }
+    }
+
+    /// Toggle slot recycling. Off keeps the arena append-only (the
+    /// pre-arena reference behaviour) while leaving every simulation
+    /// observable — including liveness accounting and
+    /// `peak_resident_tasks` — bit-identical; the golden tests pin that.
+    pub fn set_task_recycling(&mut self, on: bool) {
+        self.recycle = on;
     }
 
     /// Keep the per-pool argmin indexes in sync after any load change on
@@ -144,9 +203,44 @@ impl Cluster {
         &self.servers[id.index()]
     }
 
+    /// Dereference a task handle. Panics if the slot was recycled —
+    /// holding a `TaskRef` across a release point is a caller bug; use
+    /// [`Cluster::get_task`] when staleness is an expected outcome.
     #[inline]
-    pub fn task(&self, id: TaskId) -> &Task {
-        &self.tasks[id.index()]
+    pub fn task(&self, r: TaskRef) -> &Task {
+        let t = &self.tasks[r.index()];
+        assert_eq!(t.id, r, "stale TaskRef {r:?}: slot was recycled (now {:?})", t.id);
+        t
+    }
+
+    /// Generation-checked dereference: `None` iff the slot has been
+    /// released (and possibly reused) since `r` was issued — i.e. the
+    /// task finished and all its liveness refs settled.
+    #[inline]
+    pub fn get_task(&self, r: TaskRef) -> Option<&Task> {
+        let t = self.tasks.get(r.index())?;
+        (t.id == r).then_some(t)
+    }
+
+    /// Tasks currently resident in the arena (allocated, not released).
+    #[inline]
+    pub fn resident_tasks(&self) -> usize {
+        self.resident_tasks
+    }
+
+    /// High-water mark of resident tasks — with recycling on this also
+    /// bounds the arena's slot count, so it is the O(active) memory
+    /// headline reported next to `peak_resident_jobs`.
+    #[inline]
+    pub fn peak_resident_tasks(&self) -> usize {
+        self.peak_resident_tasks
+    }
+
+    /// Arena slots ever allocated (== `peak_resident_tasks` with
+    /// recycling on; == total tasks with recycling off).
+    #[inline]
+    pub fn task_slots(&self) -> usize {
+        self.tasks.len()
     }
 
     /// Does this server currently host any long task? (The "succinct
@@ -159,18 +253,51 @@ impl Cluster {
 
     // ---------------------------------------------------------- tasks
 
-    /// Create a task in the arena (does not enqueue it).
-    pub fn add_task(&mut self, job: JobId, duration: f64, is_long: bool, now: Time) -> TaskId {
-        let id = TaskId(self.tasks.len() as u32);
-        self.tasks.push(Task::new(id, job, duration, is_long, now));
-        id
+    /// Create a task in the arena (does not enqueue it), reusing a
+    /// recycled slot when one is free.
+    pub fn add_task(&mut self, job: JobId, duration: f64, is_long: bool, now: Time) -> TaskRef {
+        self.resident_tasks += 1;
+        self.peak_resident_tasks = self.peak_resident_tasks.max(self.resident_tasks);
+        if let Some(slot) = self.free_slots.pop() {
+            // The generation was bumped at release; reuse it as-is so
+            // every pre-release handle stays invalid.
+            let gen = self.tasks[slot as usize].id.gen;
+            let id = TaskRef { slot, gen };
+            self.tasks[slot as usize] = Task::new(id, job, duration, is_long, now);
+            id
+        } else {
+            let id = TaskRef { slot: self.tasks.len() as u32, gen: 0 };
+            self.tasks.push(Task::new(id, job, duration, is_long, now));
+            id
+        }
+    }
+
+    /// Release one liveness ref's worth of bookkeeping: if the task is
+    /// finished and no queue copy or pending finish event pins it, the
+    /// slot is released (and, with recycling on, its generation bumped
+    /// and the slot queued for reuse). Safe to call speculatively after
+    /// any ref drop; no-ops while any ref remains.
+    fn maybe_free(&mut self, r: TaskRef) {
+        let t = &mut self.tasks[r.index()];
+        if t.id != r {
+            debug_assert!(false, "maybe_free on already-recycled {r:?}");
+            return;
+        }
+        if t.state != TaskState::Finished || t.copies != 0 || t.pending_finishes != 0 {
+            return;
+        }
+        self.resident_tasks -= 1;
+        if self.recycle {
+            t.id.gen = t.id.gen.wrapping_add(1);
+            self.free_slots.push(r.slot);
+        }
     }
 
     /// Enqueue (a copy of) `task` on `server`; starts it immediately if
     /// the server is idle. Panics if the server is not accepting work.
     pub fn enqueue(
         &mut self,
-        task_id: TaskId,
+        task_id: TaskRef,
         server_id: ServerId,
         engine: &mut Engine,
         rec: &mut Recorder,
@@ -178,6 +305,7 @@ impl Cluster {
         let is_long;
         {
             let task = &mut self.tasks[task_id.index()];
+            debug_assert_eq!(task.id, task_id, "enqueue through a stale TaskRef");
             debug_assert_eq!(task.state, TaskState::Queued, "enqueue of non-queued task");
             task.copies += 1;
             task.add_location(server_id);
@@ -212,7 +340,7 @@ impl Cluster {
         if self.servers[server_id.index()].running.is_some() {
             return;
         }
-        let mut pruned: Vec<TaskId> = Vec::new();
+        let mut pruned: Vec<TaskRef> = Vec::new();
         loop {
             let idx = {
                 let server = &mut self.servers[server_id.index()];
@@ -222,11 +350,15 @@ impl Cluster {
             };
             for &tid in &pruned {
                 // Settle the stale copy: its est_work contribution was
-                // already discounted when the live copy started.
+                // already discounted when the live copy started. Dropping
+                // the copy may release the slot (a §3.3 shadow whose twin
+                // already finished).
                 let t = &mut self.tasks[tid.index()];
+                debug_assert_eq!(t.id, tid, "queue entry outlived its slot");
                 t.copies -= 1;
                 t.remove_location(server_id);
                 rec.stale_copies_skipped += 1;
+                self.maybe_free(tid);
             }
             let Some(idx) = idx else {
                 // Pruning may have shortened the queue — resync depth.
@@ -236,18 +368,23 @@ impl Cluster {
             let server = &mut self.servers[server_id.index()];
             let task_id = server.queue.remove(idx).expect("index from select_next");
             let task = &mut self.tasks[task_id.index()];
+            debug_assert_eq!(task.id, task_id, "queue entry outlived its slot");
             if task.state != TaskState::Queued {
                 // Stale copy (non-front selection path): settle like the
                 // pruned entries above.
                 task.copies -= 1;
                 task.remove_location(server_id);
                 rec.stale_copies_skipped += 1;
+                self.maybe_free(task_id);
                 continue;
             }
             task.state = TaskState::Running;
             task.started_at = now;
             task.ran_on = Some(server_id);
             task.copies -= 1;
+            // The execution's finish event becomes the liveness ref that
+            // replaces the consumed queue copy.
+            task.pending_finishes += 1;
             task.remove_location(server_id);
             let other = task.other_location(server_id);
             let dur = task.duration;
@@ -272,22 +409,39 @@ impl Cluster {
         }
     }
 
-    /// Handle a `TaskFinish` event. Returns true if the server has gone
-    /// idle *and* is draining (caller should complete the drain).
+    /// Consume a popped `TaskFinish` event: drop its liveness ref, filter
+    /// stale finishes (a revocation killed the execution after the event
+    /// was scheduled), and on a live finish run the completion
+    /// bookkeeping. Completion fields are extracted into the returned
+    /// [`FinishOutcome`] *before* the slot can be recycled — never read
+    /// them back through the `TaskRef`.
     pub fn on_task_finish(
         &mut self,
         server_id: ServerId,
-        task_id: TaskId,
+        task_id: TaskRef,
         engine: &mut Engine,
         rec: &mut Recorder,
-    ) -> bool {
-        let is_long = {
+    ) -> FinishOutcome {
+        let (live, job, is_long) = {
             let task = &mut self.tasks[task_id.index()];
-            debug_assert_eq!(task.state, TaskState::Running);
-            debug_assert_eq!(task.ran_on, Some(server_id));
-            task.state = TaskState::Finished;
-            task.is_long
+            // The pending-finish ref pins the slot, so a popped event's
+            // generation always matches; a mismatch is a refcount bug.
+            debug_assert_eq!(task.id, task_id, "TaskFinish outlived its arena slot");
+            debug_assert!(task.pending_finishes > 0, "unaccounted TaskFinish");
+            task.pending_finishes -= 1;
+            (
+                task.state == TaskState::Running && task.ran_on == Some(server_id),
+                task.job,
+                task.is_long,
+            )
         };
+        if !live {
+            // Execution superseded (revocation) or generation drift: the
+            // ref drop above may have been the last pin.
+            self.maybe_free(task_id);
+            return FinishOutcome::Stale;
+        }
+        self.tasks[task_id.index()].state = TaskState::Finished;
         let dur = self.tasks[task_id.index()].duration;
         {
             let server = &mut self.servers[server_id.index()];
@@ -305,8 +459,12 @@ impl Cluster {
         rec.tasks_finished += 1;
         self.sync_index(server_id);
         self.try_start_next(server_id, engine, rec);
+        // A §3.3 shadow copy may still pin the slot; it settles when its
+        // host dequeues (or revokes) it.
+        self.maybe_free(task_id);
         let server = &self.servers[server_id.index()];
-        server.state == ServerState::Draining && server.is_idle()
+        let drained = server.state == ServerState::Draining && server.is_idle();
+        FinishOutcome::Finished { job, is_long, drained }
     }
 
     /// Hawk/Eagle-style randomized task stealing: move up to `max_n`
@@ -328,14 +486,14 @@ impl Cluster {
         if victim == thief || !self.servers[thief.index()].accepting() {
             return 0;
         }
-        let mut stolen: Vec<TaskId> = Vec::with_capacity(max_n);
+        let mut stolen: Vec<TaskRef> = Vec::with_capacity(max_n);
         {
             let queue = &mut self.servers[victim.index()].queue;
             let mut i = 0;
             while i < queue.len() && stolen.len() < max_n {
                 let tid = queue[i];
                 let t = &self.tasks[tid.index()];
-                if !t.is_long && t.state == TaskState::Queued {
+                if t.id == tid && !t.is_long && t.state == TaskState::Queued {
                     queue.remove(i);
                     stolen.push(tid);
                 } else {
@@ -347,7 +505,8 @@ impl Cluster {
         for &tid in &stolen {
             freed += self.tasks[tid.index()].duration;
             // The queue entry moves servers; `copies` nets out against the
-            // re-enqueue below.
+            // re-enqueue below (a Queued task is never releasable, so the
+            // transient zero-copies state cannot free the slot).
             self.tasks[tid.index()].copies -= 1;
             self.tasks[tid.index()].remove_location(victim);
         }
@@ -435,15 +594,20 @@ impl Cluster {
     /// Revoke a transient server immediately (provider reclaim, §3.3).
     ///
     /// Queued copies on it become stale; tasks whose *only* copy lived
-    /// here (including a task mid-execution) are returned for rescheduling.
-    pub fn revoke(&mut self, id: ServerId, now: Time, rec: &mut Recorder) -> Vec<TaskId> {
+    /// here (including a task mid-execution) are returned for
+    /// rescheduling. The interrupted execution's already-scheduled
+    /// `TaskFinish` event stays in the queue as a liveness ref — it pops
+    /// later, resolves [`FinishOutcome::Stale`], and only then can the
+    /// slot recycle.
+    pub fn revoke(&mut self, id: ServerId, now: Time, rec: &mut Recorder) -> Vec<TaskRef> {
         let mut orphans = Vec::new();
-        let (queued, running): (Vec<TaskId>, Option<TaskId>) = {
+        let (queued, running): (Vec<TaskRef>, Option<TaskRef>) = {
             let server = &self.servers[id.index()];
             (server.queue.iter().copied().collect(), server.running)
         };
         for tid in queued {
             let task = &mut self.tasks[tid.index()];
+            debug_assert_eq!(task.id, tid, "queue entry outlived its slot");
             if task.state == TaskState::Queued {
                 task.copies -= 1;
                 task.remove_location(id);
@@ -452,14 +616,18 @@ impl Cluster {
                 }
             } else {
                 // Stale entry on the revoked server: settle it here since
-                // its queue is being destroyed.
+                // its queue is being destroyed. May release the slot.
                 task.copies -= 1;
                 task.remove_location(id);
+                self.maybe_free(tid);
             }
         }
         if let Some(tid) = running {
             // Mid-execution work is lost; the task restarts elsewhere.
+            // (Its pending finish event keeps the slot pinned until it
+            // pops as Stale.)
             let task = &mut self.tasks[tid.index()];
+            debug_assert_eq!(task.id, tid, "running slot outlived its arena slot");
             task.state = TaskState::Queued;
             task.ran_on = None;
             if task.copies > 0 {
@@ -496,6 +664,20 @@ impl Cluster {
 
     /// Exhaustive invariant check (tests / debug builds only — O(cluster)).
     pub fn check_invariants(&self) {
+        use std::collections::HashSet;
+        let free: HashSet<u32> = self.free_slots.iter().copied().collect();
+        assert_eq!(free.len(), self.free_slots.len(), "duplicate slots on the free list");
+        if self.recycle {
+            assert_eq!(
+                self.resident_tasks + self.free_slots.len(),
+                self.tasks.len(),
+                "resident/free accounting drift"
+            );
+        } else {
+            assert!(self.free_slots.is_empty(), "free list populated with recycling off");
+            assert!(self.resident_tasks <= self.tasks.len());
+        }
+        assert!(self.peak_resident_tasks >= self.resident_tasks);
         let mut n_long = 0;
         let mut n_total = 0;
         for (i, s) in self.servers.iter().enumerate() {
@@ -536,16 +718,21 @@ impl Cluster {
                 }
             }
             if let Some(tid) = s.running {
-                let t = &self.tasks[tid.index()];
+                let t = self
+                    .get_task(tid)
+                    .expect("running slot references a recycled task");
                 assert_eq!(t.state, TaskState::Running, "running slot holds non-running task");
                 assert_eq!(t.ran_on, Some(s.id));
+                assert!(t.pending_finishes > 0, "running task without a pending finish");
             }
             assert!(s.est_work >= -1e-9, "negative est_work on {:?}", s.id);
             // est_work == running duration + live queued entries (stale
             // copies were discounted when their live twin started).
-            let mut expect = s.running.map(|t| self.tasks[t.index()].duration).unwrap_or(0.0);
+            let mut expect = s.running.map(|t| self.task(t).duration).unwrap_or(0.0);
             for &tid in &s.queue {
-                let t = &self.tasks[tid.index()];
+                let t = self
+                    .get_task(tid)
+                    .expect("server queue references a recycled task");
                 if t.state == TaskState::Queued {
                     expect += t.duration;
                 }
@@ -558,9 +745,22 @@ impl Cluster {
                 expect
             );
         }
-        for t in &self.tasks {
+        for (slot, t) in self.tasks.iter().enumerate() {
+            if free.contains(&(slot as u32)) {
+                continue; // recycled payload, no invariants
+            }
+            assert_eq!(t.id.index(), slot, "task id/slot drift at {slot}");
             let locs = t.placed_on.iter().flatten().count() as u8;
             assert_eq!(t.copies, locs, "copies/placed_on drift on {:?}", t.id);
+            if self.recycle {
+                // Eager-release invariant: a finished task with no
+                // liveness refs never lingers.
+                assert!(
+                    t.state != TaskState::Finished || t.copies > 0 || t.pending_finishes > 0,
+                    "releasable task {:?} not released",
+                    t.id
+                );
+            }
         }
         assert_eq!(n_long, self.n_long_servers, "N_long drift");
         assert_eq!(n_total, self.n_total, "N_total drift");
@@ -581,6 +781,14 @@ mod tests {
     fn setup() -> (Cluster, Engine, Recorder) {
         let cluster = Cluster::new(4, 2, QueuePolicy::Fifo);
         (cluster, Engine::new(), Recorder::new(3.0))
+    }
+
+    fn drain_events(c: &mut Cluster, e: &mut Engine, r: &mut Recorder) {
+        while let Some((_, ev)) = e.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                c.on_task_finish(server, task, e, r);
+            }
+        }
     }
 
     #[test]
@@ -618,14 +826,54 @@ mod tests {
         let (_, ev) = e.pop().unwrap(); // t1 finish at 10.0
         match ev {
             Event::TaskFinish { server, task } => {
-                let drained = c.on_task_finish(server, task, &mut e, &mut r);
-                assert!(!drained);
+                let out = c.on_task_finish(server, task, &mut e, &mut r);
+                assert!(matches!(out, FinishOutcome::Finished { drained: false, .. }));
             }
             _ => panic!(),
         }
         assert_eq!(c.task(t2).state, TaskState::Running);
         assert!((c.task(t2).queueing_delay() - 10.0).abs() < 1e-12);
         c.check_invariants();
+    }
+
+    #[test]
+    fn finished_slots_recycle_and_peak_tracks_active() {
+        let (mut c, mut e, mut r) = setup();
+        // Three sequential waves of one task each: the arena should
+        // recycle a single slot, not grow per task.
+        let mut refs = Vec::new();
+        for wave in 0..3 {
+            let t = c.add_task(JobId(wave), 5.0, false, 0.0);
+            refs.push(t);
+            c.enqueue(t, ServerId(0), &mut e, &mut r);
+            drain_events(&mut c, &mut e, &mut r);
+            c.check_invariants();
+        }
+        assert_eq!(r.tasks_finished, 3);
+        assert_eq!(c.task_slots(), 1, "slots grew despite recycling");
+        assert_eq!(c.peak_resident_tasks(), 1);
+        assert_eq!(c.resident_tasks(), 0);
+        // All handles are stale now; generations distinguish the waves.
+        for t in refs {
+            assert!(c.get_task(t).is_none(), "recycled slot still dereferences");
+        }
+    }
+
+    #[test]
+    fn recycling_off_keeps_arena_append_only() {
+        let (mut c, mut e, mut r) = setup();
+        c.set_task_recycling(false);
+        for wave in 0..3 {
+            let t = c.add_task(JobId(wave), 5.0, false, 0.0);
+            c.enqueue(t, ServerId(0), &mut e, &mut r);
+            drain_events(&mut c, &mut e, &mut r);
+            c.check_invariants();
+        }
+        assert_eq!(c.task_slots(), 3);
+        // Liveness accounting is mode-independent: same peak, same
+        // post-run residency.
+        assert_eq!(c.peak_resident_tasks(), 1);
+        assert_eq!(c.resident_tasks(), 0);
     }
 
     #[test]
@@ -640,11 +888,7 @@ mod tests {
         c.enqueue(t2, ServerId(1), &mut e, &mut r);
         assert_eq!(c.n_long_servers(), 1);
         // Finish both -> ratio back to 0.
-        while let Some((_, ev)) = e.pop() {
-            if let Event::TaskFinish { server, task } = ev {
-                c.on_task_finish(server, task, &mut e, &mut r);
-            }
-        }
+        drain_events(&mut c, &mut e, &mut r);
         assert_eq!(c.n_long_servers(), 0);
         assert_eq!(c.long_load_ratio(), 0.0);
         c.check_invariants();
@@ -685,13 +929,52 @@ mod tests {
         assert_eq!(c.task(t).ran_on, Some(ServerId(1)));
         assert_eq!(c.task(t).copies, 1); // stale copy still queued on 0
         // Run the world; the stale copy must be skipped, not re-run.
-        while let Some((_, ev)) = e.pop() {
-            if let Event::TaskFinish { server, task } = ev {
-                c.on_task_finish(server, task, &mut e, &mut r);
-            }
-        }
+        drain_events(&mut c, &mut e, &mut r);
         assert_eq!(r.tasks_finished, 2);
         assert!(r.stale_copies_skipped >= 1);
+        // Both slots released once the shadow copy settled.
+        assert_eq!(c.resident_tasks(), 0);
+        assert!(c.get_task(t).is_none());
+        c.check_invariants();
+    }
+
+    #[test]
+    fn stale_finish_event_cannot_resurrect_recycled_slot() {
+        let (mut c, mut e, mut r) = setup();
+        let sid = c.request_transient(0.0);
+        c.transient_ready(sid, 0.0, &mut r);
+        // A task running on the transient, with no shadow copy.
+        let t = c.add_task(JobId(0), 30.0, false, 0.0);
+        c.enqueue(t, sid, &mut e, &mut r);
+        assert_eq!(c.task(t).state, TaskState::Running);
+        // Revoke mid-run: the finish event at t=30 is now stale, and the
+        // orphan is re-placed on an on-demand server.
+        let orphans = c.revoke(sid, 10.0, &mut r);
+        assert_eq!(orphans, vec![t]);
+        assert_eq!(c.task(t).pending_finishes, 1, "stale finish must pin the slot");
+        c.enqueue(t, ServerId(0), &mut e, &mut r);
+        // Drain: the stale finish pops first (t=30), then the real one
+        // (t=40). The task finishes exactly once, and only after the
+        // stale event settles can the slot recycle.
+        let mut finishes = 0;
+        let mut stales = 0;
+        while let Some((_, ev)) = e.pop() {
+            if let Event::TaskFinish { server, task } = ev {
+                match c.on_task_finish(server, task, &mut e, &mut r) {
+                    FinishOutcome::Stale => stales += 1,
+                    FinishOutcome::Finished { .. } => finishes += 1,
+                }
+            }
+        }
+        assert_eq!((stales, finishes), (1, 1));
+        assert_eq!(r.tasks_finished, 1);
+        assert!(c.get_task(t).is_none(), "slot still pinned after all refs settled");
+        // A new task may now reuse the slot under a fresh generation.
+        let t2 = c.add_task(JobId(1), 5.0, false, 50.0);
+        assert_eq!(t2.slot, t.slot);
+        assert_ne!(t2.gen, t.gen);
+        assert!(c.get_task(t).is_none());
+        assert!(c.get_task(t2).is_some());
         c.check_invariants();
     }
 

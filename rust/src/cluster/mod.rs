@@ -1,5 +1,7 @@
 //! Cluster substrate: servers (on-demand + transient), per-server queues
-//! with Eagle-style SRPT discipline, partitions, the task arena, and the
+//! with Eagle-style SRPT discipline, partitions, the **generational task
+//! arena** (finished slots recycle once their queue copies and pending
+//! finish events settle, so memory is O(active tasks)), and the
 //! incrementally-maintained long-load-ratio state.
 
 #[allow(clippy::module_inception)]
@@ -8,7 +10,7 @@ mod index;
 mod server;
 mod task;
 
-pub use cluster::Cluster;
+pub use cluster::{Cluster, FinishOutcome};
 pub use index::{PoolIndex, TransientKey};
 pub use server::{Pool, QueuePolicy, Server, ServerKind, ServerState};
 pub use task::{Task, TaskState};

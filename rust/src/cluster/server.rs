@@ -4,7 +4,7 @@
 use std::collections::VecDeque;
 
 use crate::cluster::{Task, TaskState};
-use crate::util::{ServerId, TaskId, Time};
+use crate::util::{ServerId, TaskRef, Time};
 
 /// Purchase class of a server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,8 +58,8 @@ pub struct Server {
     pub kind: ServerKind,
     pub pool: Pool,
     pub state: ServerState,
-    pub running: Option<TaskId>,
-    pub queue: VecDeque<TaskId>,
+    pub running: Option<TaskRef>,
+    pub queue: VecDeque<TaskRef>,
     /// Long tasks on this server (running + queued). `> 0` marks the
     /// server in the long-bitmap Eagle shares with distributed schedulers,
     /// and feeds the cluster's incremental `N_long` for `l_r`.
@@ -110,21 +110,23 @@ impl Server {
     }
 
     /// Select the next runnable task index in `queue` under `policy`,
-    /// skipping stale copies (tasks already running/finished elsewhere).
-    /// Returns the queue index to pop, or None if the queue has no
-    /// runnable entry. Stale entries pruned off the front are pushed to
-    /// `pruned` so the cluster can settle their copy accounting.
+    /// skipping stale copies (tasks already running/finished elsewhere,
+    /// or — defensively — entries whose generation no longer matches the
+    /// slot). Returns the queue index to pop, or None if the queue has
+    /// no runnable entry. Stale entries pruned off the front are pushed
+    /// to `pruned` so the cluster can settle their liveness accounting.
     pub fn select_next(
         &mut self,
         tasks: &[Task],
         policy: QueuePolicy,
         now: Time,
-        pruned: &mut Vec<TaskId>,
+        pruned: &mut Vec<TaskRef>,
     ) -> Option<usize> {
         // Prune stale copies from the front first — cheap and keeps FIFO
         // semantics exact for the common case.
         while let Some(&front) = self.queue.front() {
-            if tasks[front.index()].state == TaskState::Queued {
+            let t = &tasks[front.index()];
+            if t.id == front && t.state == TaskState::Queued {
                 break;
             }
             pruned.push(front);
@@ -140,7 +142,7 @@ impl Server {
                 let mut starved: Option<usize> = None;
                 for (i, &tid) in self.queue.iter().enumerate() {
                     let t = &tasks[tid.index()];
-                    if t.state != TaskState::Queued {
+                    if t.id != tid || t.state != TaskState::Queued {
                         continue; // stale copy, skipped (pruned on pop)
                     }
                     if now - t.enqueued_at > starvation_limit && starved.is_none() {
@@ -162,8 +164,12 @@ mod tests {
     use super::*;
     use crate::util::JobId;
 
+    fn tref(slot: u32) -> TaskRef {
+        TaskRef { slot, gen: 0 }
+    }
+
     fn mk_task(id: u32, duration: f64, is_long: bool, enq: f64) -> Task {
-        Task::new(TaskId(id), JobId(0), duration, is_long, enq)
+        Task::new(tref(id), JobId(0), duration, is_long, enq)
     }
 
     fn mk_server() -> Server {
@@ -174,8 +180,8 @@ mod tests {
     fn fifo_picks_front() {
         let tasks = vec![mk_task(0, 10.0, false, 0.0), mk_task(1, 1.0, false, 0.0)];
         let mut s = mk_server();
-        s.queue.push_back(TaskId(0));
-        s.queue.push_back(TaskId(1));
+        s.queue.push_back(tref(0));
+        s.queue.push_back(tref(1));
         assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 5.0, &mut vec![]), Some(0));
     }
 
@@ -188,7 +194,7 @@ mod tests {
         ];
         let mut s = mk_server();
         for i in 0..3 {
-            s.queue.push_back(TaskId(i));
+            s.queue.push_back(tref(i));
         }
         let policy = QueuePolicy::Srpt { starvation_limit: 1e9 };
         assert_eq!(s.select_next(&tasks, policy, 1.0, &mut vec![]), Some(1));
@@ -198,8 +204,8 @@ mod tests {
     fn srpt_longs_yield_to_shorts() {
         let tasks = vec![mk_task(0, 1000.0, true, 0.0), mk_task(1, 30.0, false, 0.0)];
         let mut s = mk_server();
-        s.queue.push_back(TaskId(0));
-        s.queue.push_back(TaskId(1));
+        s.queue.push_back(tref(0));
+        s.queue.push_back(tref(1));
         let policy = QueuePolicy::Srpt { starvation_limit: 1e9 };
         assert_eq!(s.select_next(&tasks, policy, 1.0, &mut vec![]), Some(1));
     }
@@ -208,8 +214,8 @@ mod tests {
     fn srpt_starvation_guard_restores_fifo() {
         let tasks = vec![mk_task(0, 1000.0, true, 0.0), mk_task(1, 30.0, false, 400.0)];
         let mut s = mk_server();
-        s.queue.push_back(TaskId(0));
-        s.queue.push_back(TaskId(1));
+        s.queue.push_back(tref(0));
+        s.queue.push_back(tref(1));
         // Long task has waited 500 s > limit, so it runs despite SRPT.
         let policy = QueuePolicy::Srpt { starvation_limit: 300.0 };
         assert_eq!(s.select_next(&tasks, policy, 500.0, &mut vec![]), Some(0));
@@ -220,13 +226,13 @@ mod tests {
         let mut tasks = vec![mk_task(0, 10.0, false, 0.0), mk_task(1, 10.0, false, 0.0)];
         tasks[0].state = TaskState::Running; // copy started elsewhere
         let mut s = mk_server();
-        s.queue.push_back(TaskId(0));
-        s.queue.push_back(TaskId(1));
+        s.queue.push_back(tref(0));
+        s.queue.push_back(tref(1));
         let mut pruned = Vec::new();
         assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 0.0, &mut pruned), Some(0));
         // After pruning, front is task 1 and the stale copy is reported.
-        assert_eq!(s.queue.front(), Some(&TaskId(1)));
-        assert_eq!(pruned, vec![TaskId(0)]);
+        assert_eq!(s.queue.front(), Some(&tref(1)));
+        assert_eq!(pruned, vec![tref(0)]);
     }
 
     #[test]
@@ -234,10 +240,32 @@ mod tests {
         let mut tasks = vec![mk_task(0, 10.0, false, 0.0)];
         tasks[0].state = TaskState::Finished;
         let mut s = mk_server();
-        s.queue.push_back(TaskId(0));
+        s.queue.push_back(tref(0));
         let mut pruned = Vec::new();
         assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 0.0, &mut pruned), None);
         assert!(s.queue.is_empty());
         assert_eq!(pruned.len(), 1);
+    }
+
+    #[test]
+    fn generation_mismatch_is_pruned_as_stale() {
+        // A queue entry whose slot was recycled (generation bumped, new
+        // Queued payload) must be treated as stale, not run: the entry
+        // refers to the *old* task, not the slot's new tenant.
+        let mut tasks = vec![mk_task(0, 10.0, false, 0.0), mk_task(1, 10.0, false, 0.0)];
+        tasks[0].id.gen = 3; // slot 0 recycled under a later generation
+        let mut s = mk_server();
+        s.queue.push_back(tref(0)); // stale handle: gen 0
+        s.queue.push_back(tref(1));
+        let mut pruned = Vec::new();
+        assert_eq!(s.select_next(&tasks, QueuePolicy::Fifo, 0.0, &mut pruned), Some(0));
+        assert_eq!(pruned, vec![tref(0)]);
+        assert_eq!(s.queue.front(), Some(&tref(1)));
+        // SRPT skips mismatched entries in the scan as well.
+        let mut s2 = mk_server();
+        s2.queue.push_back(tref(1));
+        s2.queue.push_back(tref(0)); // stale, not at front
+        let policy = QueuePolicy::Srpt { starvation_limit: 1e9 };
+        assert_eq!(s2.select_next(&tasks, policy, 1.0, &mut vec![]), Some(0));
     }
 }

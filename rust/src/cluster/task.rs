@@ -1,14 +1,39 @@
 //! Task lifecycle: the unit of scheduled work.
 //!
-//! Tasks are arena-allocated in [`crate::cluster::Cluster`] and referenced
-//! by [`TaskId`] everywhere — no per-event allocation on the hot path.
+//! Tasks live in a **generational slot arena** owned by
+//! [`crate::cluster::Cluster`] and are referenced by [`TaskRef`]
+//! (slot + generation) everywhere — no per-event allocation on the hot
+//! path, and resident memory is O(active tasks), not O(trace).
 //!
-//! A short task may be enqueued on *multiple* servers at once: CloudCoaster
-//! guarantees at least one copy of every short task lives on an on-demand
-//! server so transient revocation can never lose work (paper §3.3). The
-//! first copy a server dequeues wins; stale copies are skipped at dequeue.
+//! ## Liveness and recycling
+//!
+//! A slot is recycled only when the task's *liveness count* drops to
+//! zero. Liveness has two components, both tracked on the task itself:
+//!
+//! * [`Task::copies`] — outstanding queue entries across all servers
+//!   (mirrored exactly by [`Task::placed_on`]);
+//! * [`Task::pending_finishes`] — `TaskFinish` events scheduled but not
+//!   yet popped. A transient revocation can kill an execution *after*
+//!   its finish event entered the queue; that stale event must keep the
+//!   slot pinned until it pops, or it would dereference a recycled slot.
+//!
+//! A task therefore frees exactly when `state == Finished`,
+//! `copies == 0` and `pending_finishes == 0` — which is how a §3.3
+//! shadow copy that outlives its finished twin, or a stale finish event
+//! from a revoked run, resolves to "stale, skip" instead of resurrecting
+//! whatever task reuses the slot. On free the slot's generation is
+//! bumped, so any handle that escaped the refcount (a bug) fails the
+//! generation check loudly rather than aliasing.
+//!
+//! ## Copies (§3.3)
+//!
+//! A short task may be enqueued on *multiple* servers at once:
+//! CloudCoaster guarantees at least one copy of every short task lives
+//! on an on-demand server so transient revocation can never lose work
+//! (paper §3.3). The first copy a server dequeues wins; stale copies are
+//! skipped (and their liveness refs settled) at dequeue.
 
-use crate::util::{JobId, ServerId, TaskId, Time};
+use crate::util::{JobId, ServerId, TaskRef, Time};
 
 /// Where a task is in its lifecycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -17,14 +42,17 @@ pub enum TaskState {
     Queued,
     /// Executing on exactly one server.
     Running,
-    /// Completed.
+    /// Completed. The slot frees once all liveness refs settle.
     Finished,
 }
 
-/// A schedulable task.
+/// A schedulable task (one arena slot's payload).
 #[derive(Clone, Debug)]
 pub struct Task {
-    pub id: TaskId,
+    /// The slot's current identity: `id.slot` is this slot's index,
+    /// `id.gen` its live generation. A [`TaskRef`] is valid iff it
+    /// equals `id`.
+    pub id: TaskRef,
     pub job: JobId,
     pub duration: f64,
     pub is_long: bool,
@@ -37,6 +65,10 @@ pub struct Task {
     pub ran_on: Option<ServerId>,
     /// Outstanding queue entries across all servers (copies, §3.3).
     pub copies: u8,
+    /// `TaskFinish` events scheduled for this task and not yet popped.
+    /// Each pins the slot: a revoked execution's finish event stays in
+    /// the queue after the task restarts elsewhere.
+    pub pending_finishes: u16,
     /// Where the outstanding queue entries live (at most two: the primary
     /// placement plus the §3.3 on-demand shadow copy). Kept exact so a
     /// task's start can immediately discount its other copy from that
@@ -45,7 +77,7 @@ pub struct Task {
 }
 
 impl Task {
-    pub fn new(id: TaskId, job: JobId, duration: f64, is_long: bool, now: Time) -> Self {
+    pub fn new(id: TaskRef, job: JobId, duration: f64, is_long: bool, now: Time) -> Self {
         Task {
             id,
             job,
@@ -56,6 +88,7 @@ impl Task {
             started_at: 0.0,
             ran_on: None,
             copies: 0,
+            pending_finishes: 0,
             placed_on: [None, None],
         }
     }
@@ -73,6 +106,11 @@ impl Task {
     }
 
     /// Forget a queue-entry location (entry consumed, stolen or revoked).
+    ///
+    /// A miss means `copies`/`placed_on` accounting drifted (e.g. a
+    /// double-remove masked by a steal/revocation race) — every queue
+    /// entry records its location at enqueue, so exactly one matching
+    /// removal must exist.
     pub fn remove_location(&mut self, sid: ServerId) {
         for slot in &mut self.placed_on {
             if *slot == Some(sid) {
@@ -80,6 +118,11 @@ impl Task {
                 return;
             }
         }
+        debug_assert!(
+            false,
+            "remove_location miss: task {:?} has no queue entry on {:?} (placed_on {:?})",
+            self.id, sid, self.placed_on
+        );
     }
 
     /// The other live copy's server, if any.
@@ -88,6 +131,8 @@ impl Task {
     }
 
     /// Queueing delay (start - enqueue); the paper's headline metric.
+    /// Extracted into the recorder the moment the task starts — nothing
+    /// reads delay samples back through a (possibly recycled) slot.
     pub fn queueing_delay(&self) -> f64 {
         debug_assert!(self.state != TaskState::Queued);
         self.started_at - self.enqueued_at
@@ -98,11 +143,37 @@ impl Task {
 mod tests {
     use super::*;
 
+    fn tref(slot: u32) -> TaskRef {
+        TaskRef { slot, gen: 0 }
+    }
+
     #[test]
     fn queueing_delay_from_timestamps() {
-        let mut t = Task::new(TaskId(0), JobId(0), 30.0, false, 100.0);
+        let mut t = Task::new(tref(0), JobId(0), 30.0, false, 100.0);
         t.state = TaskState::Running;
         t.started_at = 160.0;
         assert!((t.queueing_delay() - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn locations_roundtrip() {
+        let mut t = Task::new(tref(1), JobId(0), 5.0, false, 0.0);
+        t.add_location(ServerId(3));
+        t.add_location(ServerId(7));
+        assert_eq!(t.other_location(ServerId(3)), Some(ServerId(7)));
+        t.remove_location(ServerId(3));
+        assert_eq!(t.placed_on, [None, Some(ServerId(7))]);
+        t.remove_location(ServerId(7));
+        assert_eq!(t.placed_on, [None, None]);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "remove_location miss"))]
+    fn remove_location_miss_is_a_bug() {
+        let mut t = Task::new(tref(2), JobId(0), 5.0, false, 0.0);
+        t.add_location(ServerId(1));
+        t.remove_location(ServerId(9));
+        // Release builds skip the debug_assert; nothing changed.
+        assert_eq!(t.placed_on, [Some(ServerId(1)), None]);
     }
 }

@@ -68,6 +68,10 @@ pub struct Report {
     pub events_per_sec: f64,
     /// Streaming-memory high-water mark: jobs concurrently resident.
     pub peak_resident_jobs: usize,
+    /// Arena-memory high-water mark: task slots concurrently resident
+    /// (the generational arena recycles finished slots, so this is
+    /// load-bound, not trace-bound).
+    pub peak_resident_tasks: usize,
     /// Which analytics engine produced the CDF ("xla" or "native").
     pub analytics_engine: &'static str,
 }
@@ -191,6 +195,7 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         wall_ms: run.wall_ms,
         events_per_sec: run.events as f64 / (run.wall_ms / 1000.0).max(1e-9),
         peak_resident_jobs: run.peak_resident_jobs,
+        peak_resident_tasks: run.peak_resident_tasks,
         analytics_engine: analytics.name(),
     })
 }

@@ -12,10 +12,11 @@
 //! scheduler → stealer.
 //!
 //! Entry points: [`simulate`] / [`simulate_with`] replay an eager
-//! [`Workload`] (back-compat; internally a [`WorkloadReplay`] stream),
-//! [`simulate_source`] streams any [`ArrivalSource`] — including the
-//! declarative `[scenario]` pipelines resolved by
-//! [`crate::coordinator::scenario`].
+//! [`Workload`] through the world's borrowed-lookahead fast path (jobs
+//! dispatched by reference — no per-pull clone), [`simulate_source`]
+//! streams any [`ArrivalSource`] — including the declarative
+//! `[scenario]` pipelines resolved by [`crate::coordinator::scenario`].
+//! Either way the generational task arena keeps memory O(active tasks).
 
 use std::time::Instant;
 
@@ -25,7 +26,7 @@ use crate::sched::Scheduler;
 use crate::sim::{
     SchedulerComponent, SnapshotSampler, TransientManagerComponent, WorkStealer, World,
 };
-use crate::trace::{ArrivalSource, Workload, WorkloadReplay};
+use crate::trace::{ArrivalSource, Workload};
 use crate::transient::ManagerConfig;
 use crate::util::Time;
 
@@ -46,6 +47,11 @@ pub struct SimConfig {
     pub steal_probes: usize,
     /// Max queued short tasks moved per steal.
     pub steal_batch: usize,
+    /// Recycle finished task-arena slots (default). `false` keeps the
+    /// arena append-only — the pre-arena reference behaviour used by the
+    /// recycling golden tests; every simulation field is bit-identical
+    /// either way, only resident memory differs.
+    pub recycle_task_slots: bool,
     pub seed: u64,
 }
 
@@ -59,6 +65,7 @@ impl Default for SimConfig {
             snapshot_interval: 60.0,
             steal_probes: 8,
             steal_batch: 8,
+            recycle_task_slots: true,
             seed: 1,
         }
     }
@@ -79,6 +86,10 @@ pub struct RunResult {
     /// High-water mark of concurrently resident job records — bounded
     /// by cluster load, not trace length, on the streaming path.
     pub peak_resident_jobs: usize,
+    /// High-water mark of concurrently resident task-arena slots — the
+    /// generational arena recycles finished slots, so this (not total
+    /// task count) bounds task memory.
+    pub peak_resident_tasks: usize,
 }
 
 impl RunResult {
@@ -89,15 +100,20 @@ impl RunResult {
 }
 
 /// Build the standard component wiring for `cfg` on a fresh [`World`]
-/// replaying an eager workload (back-compat wrapper over
-/// [`build_world_from_source`]).
+/// replaying an eager workload through the borrowed-lookahead fast path
+/// (each job is dispatched by reference — no per-pull clone, unlike
+/// routing through a [`crate::trace::WorkloadReplay`]; bit-identical
+/// results).
 pub fn build_world<'a>(
     workload: &'a Workload,
     scheduler: &'a mut (dyn Scheduler + 'a),
     cfg: &SimConfig,
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
 ) -> World<'a> {
-    build_world_from_source(Box::new(WorkloadReplay::new(workload)), scheduler, cfg, analytics)
+    let mut world =
+        World::from_workload(workload, build_cluster(cfg), build_recorder(cfg), cfg.seed);
+    wire_standard(&mut world, scheduler, cfg, analytics);
+    world
 }
 
 /// Build the standard component wiring for `cfg` on a fresh [`World`]
@@ -111,11 +127,30 @@ pub fn build_world_from_source<'a>(
     cfg: &SimConfig,
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
 ) -> World<'a> {
-    let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
-    let cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
-    let rec = Recorder::new(r);
-    let mut world = World::new(source, cluster, rec, cfg.seed);
+    let mut world = World::new(source, build_cluster(cfg), build_recorder(cfg), cfg.seed);
+    wire_standard(&mut world, scheduler, cfg, analytics);
+    world
+}
 
+fn build_cluster(cfg: &SimConfig) -> Cluster {
+    let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
+    cluster.set_task_recycling(cfg.recycle_task_slots);
+    cluster
+}
+
+fn build_recorder(cfg: &SimConfig) -> Recorder {
+    let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
+    Recorder::new(r)
+}
+
+/// The canonical component composition shared by the eager and streaming
+/// entry points.
+fn wire_standard<'a>(
+    world: &mut World<'a>,
+    scheduler: &'a mut (dyn Scheduler + 'a),
+    cfg: &SimConfig,
+    analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
+) {
     // Snapshot sampler first: it records l_r before any same-event
     // mutation and publishes the prewarm forecast the manager consumes.
     let predictive = cfg.manager.as_ref().map(|m| m.predictive).unwrap_or(false);
@@ -149,7 +184,6 @@ pub fn build_world_from_source<'a>(
             batch: cfg.steal_batch,
         }));
     }
-    world
 }
 
 /// Run `workload` under `scheduler` with the given config.
@@ -164,19 +198,24 @@ pub fn simulate(
 /// Like [`simulate`], with an optional analytics engine for the
 /// predictive-resizing path (the l_r forecast runs on the snapshot/epoch
 /// cadence through the AOT-compiled artifact when the manager has
-/// `predictive = true`).
+/// `predictive = true`). Eager workloads replay through the
+/// borrowed-lookahead fast path — no per-job clone.
 pub fn simulate_with<'a>(
     workload: &'a Workload,
     scheduler: &'a mut (dyn Scheduler + 'a),
     cfg: &SimConfig,
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
 ) -> RunResult {
-    simulate_source(Box::new(WorkloadReplay::new(workload)), scheduler, cfg, analytics)
+    let wall0 = Instant::now();
+    let name = scheduler.name().to_string();
+    let world = build_world(workload, scheduler, cfg, analytics);
+    run_and_distill(world, name, wall0)
 }
 
 /// Run a streaming [`ArrivalSource`] under `scheduler` with the given
 /// config — the scenario-pipeline entry point. Memory stays O(active
-/// tasks): the source is pulled one job ahead of the simulation clock.
+/// tasks): the source is pulled one job ahead of the simulation clock
+/// and finished task slots recycle through the generational arena.
 pub fn simulate_source<'a>(
     source: Box<dyn ArrivalSource + 'a>,
     scheduler: &'a mut (dyn Scheduler + 'a),
@@ -185,12 +224,17 @@ pub fn simulate_source<'a>(
 ) -> RunResult {
     let wall0 = Instant::now();
     let name = scheduler.name().to_string();
-    let mut world = build_world_from_source(source, scheduler, cfg, analytics);
+    let world = build_world_from_source(source, scheduler, cfg, analytics);
+    run_and_distill(world, name, wall0)
+}
+
+fn run_and_distill(mut world: World<'_>, name: String, wall0: Instant) -> RunResult {
     world.run();
     let manager_stats = world.component::<TransientManagerComponent>().map(|m| m.stats());
     let end_time = world.engine.now();
     let events = world.engine.processed();
     let peak_resident_jobs = world.peak_resident_jobs();
+    let peak_resident_tasks = world.peak_resident_tasks();
     RunResult {
         scheduler: name,
         rec: world.rec,
@@ -199,6 +243,7 @@ pub fn simulate_source<'a>(
         wall_ms: wall0.elapsed().as_secs_f64() * 1000.0,
         manager_stats,
         peak_resident_jobs,
+        peak_resident_tasks,
     }
 }
 
@@ -320,8 +365,12 @@ mod tests {
             eager.rec.short_delays.as_slice(),
             streamed.rec.short_delays.as_slice()
         );
-        // Resident jobs are bounded by load, not the trace.
+        // Resident jobs and task slots are bounded by load, not the
+        // trace — and identically on the eager (borrowed-lookahead) and
+        // streaming paths.
         assert!(streamed.peak_resident_jobs < w.num_jobs());
+        assert_eq!(eager.peak_resident_tasks, streamed.peak_resident_tasks);
+        assert!(streamed.peak_resident_tasks < w.num_tasks());
     }
 
     #[test]

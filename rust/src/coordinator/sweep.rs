@@ -445,6 +445,7 @@ mod tests {
             assert_eq!(a.end_time, b.end_time);
             assert_eq!(a.short_delay.n, b.short_delay.n);
             assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
+            assert_eq!(a.peak_resident_tasks, b.peak_resident_tasks);
         }
     }
 }

@@ -23,13 +23,18 @@
 //!   ([`sim::Engine`]), forked PRNG streams ([`sim::Rng`]), and the
 //!   composable [`sim::World`]. A `World` owns engine, cluster, recorder
 //!   and RNG streams, pulls arrivals lazily from a streaming
-//!   [`trace::ArrivalSource`] (one job of lookahead — memory is
-//!   O(active tasks), not O(trace)), and dispatches every [`sim::Event`]
-//!   through an ordered list of pluggable [`sim::Component`]s — the
-//!   scheduler adapter, transient manager, work stealer and
-//!   snapshot/forecast sampler are all components ([`sim::components`]),
-//!   so new scenarios are component wiring plus source combinators, not
-//!   runner changes.
+//!   [`trace::ArrivalSource`] (one job of lookahead; eager workloads
+//!   replay through a borrowed-lookahead fast path with no per-job
+//!   clone), and dispatches every [`sim::Event`] through an ordered list
+//!   of pluggable [`sim::Component`]s — the scheduler adapter, transient
+//!   manager, work stealer and snapshot/forecast sampler are all
+//!   components ([`sim::components`]), so new scenarios are component
+//!   wiring plus source combinators, not runner changes. Together with
+//!   the cluster's generational task arena, job records and task slots
+//!   are O(active), not O(trace) (`peak_resident_jobs` /
+//!   `peak_resident_tasks` report the high-water marks; per-task delay
+//!   samples in the recorder still accumulate over a run — see
+//!   ROADMAP).
 //! * **trace** — workloads, eager and streaming: synthetic generators
 //!   calibrated to the paper's traces (eager `yahoo_like` /
 //!   `google_like` are collectors over their streaming twins
@@ -40,11 +45,16 @@
 //!   algebra — [`trace::BurstStorm`], [`trace::RateScale`],
 //!   [`trace::TimeWindow`], [`trace::Splice`], [`trace::Merge`],
 //!   [`trace::Take`] — for composing arrival patterns declaratively.
-//! * **cluster** — server + task arenas, partitions, queue disciplines,
-//!   and the [`cluster::PoolIndex`]: one MinTree-backed least-loaded
-//!   index per pool (general / short-reserved / transient) kept
-//!   incrementally up to date by every mutator, so all placement and
-//!   drain-victim queries are O(log n) with scan-identical tie-breaking.
+//! * **cluster** — servers, partitions, queue disciplines, the
+//!   **generational task arena** (tasks addressed by
+//!   [`util::TaskRef`]-style slot+generation handles; a finished slot
+//!   recycles once its liveness count — §3.3 queue copies plus pending
+//!   `TaskFinish` events — hits zero, so stale events and shadow copies
+//!   resolve to "stale, skip" instead of aliasing a reused slot), and
+//!   the [`cluster::PoolIndex`]: one MinTree-backed least-loaded index
+//!   per pool (general / short-reserved / transient) kept incrementally
+//!   up to date by every mutator, so all placement and drain-victim
+//!   queries are O(log n) with scan-identical tie-breaking.
 //! * **coordinator** — experiment configuration
 //!   ([`coordinator::ExperimentConfig`]), the declarative scenario
 //!   registry ([`coordinator::scenario`]: a `[scenario]` TOML block or
@@ -68,7 +78,11 @@
 //! `World` decomposition bit-exactly to the original monolithic runner,
 //! `tests/streaming_golden.rs` pins the streaming arrival path
 //! bit-exactly to the eager replay (and the combinators to fixed
-//! seeds), and `tests/pool_index_props.rs` pins every indexed
+//! seeds), plus arena recycling bit-exactly to the append-only build
+//! with `peak_resident_tasks` flat under 10x trace scaling,
+//! `tests/arena_props.rs` stress-tests slot recycling under randomized
+//! enqueue/steal/revoke/drain interleavings (no resurrection, slots <=
+//! peak-active), and `tests/pool_index_props.rs` pins every indexed
 //! least-loaded answer to the naive linear scan it replaced.
 //!
 //! ## Quickstart

@@ -126,6 +126,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
         eprintln!("peak resident jobs (streaming): {}", rep.peak_resident_jobs);
     }
+    // The arena-memory headline: finished task slots recycle, so this is
+    // bounded by cluster load, not trace length (CI pins it flat under
+    // 10x trace scaling).
+    println!("peak resident tasks (arena): {}", rep.peak_resident_tasks);
     if let Some(out) = args.get("cdf-out") {
         std::fs::write(out, rep.cdf.to_csv())?;
         eprintln!("wrote CDF to {out}");

@@ -1,6 +1,14 @@
 //! The simulation-wide metrics recorder: every number in the paper's
 //! evaluation (Figure 3, Table 1, headline ratios) is derived from what
 //! this collects.
+//!
+//! Arena contract: the recorder holds **values, never `TaskRef`s**.
+//! Per-task queueing delays are pushed at task start
+//! ([`Recorder::task_started`]) and per-job responses at the last task's
+//! finish ([`Recorder::job_finished`]), with every field extracted at
+//! the state transition — so recycling a finished task's arena slot can
+//! never invalidate a recorded sample, and nothing here reads back
+//! through the task arena.
 
 use crate::metrics::{Cdf, CostLedger, DelaySamples, StreamingStats, TimeSeries};
 use crate::util::Time;

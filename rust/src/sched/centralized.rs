@@ -5,7 +5,7 @@
 
 use crate::sched::{SchedCtx, Scheduler};
 use crate::trace::Job;
-use crate::util::TaskId;
+use crate::util::TaskRef;
 
 /// Global least-loaded placement over the general partition.
 #[derive(Default)]
@@ -16,7 +16,7 @@ impl Scheduler for Centralized {
         "centralized"
     }
 
-    fn place_job(&mut self, _job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+    fn place_job(&mut self, _job: &Job, task_ids: &[TaskRef], ctx: &mut SchedCtx) {
         for &tid in task_ids {
             let target = ctx.cluster.least_loaded_general();
             ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);

@@ -21,7 +21,7 @@ use crate::cluster::ServerKind;
 use crate::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
 use crate::sched::{SchedCtx, Scheduler};
 use crate::trace::Job;
-use crate::util::{ServerId, TaskId};
+use crate::util::{ServerId, TaskRef};
 
 /// Eagle-style hybrid placement (also CloudCoaster's placement engine).
 pub struct Hybrid {
@@ -66,14 +66,14 @@ impl Hybrid {
         Hybrid { duplicate_to_ondemand: true, name: "cloudcoaster", ..Hybrid::eagle(probe_ratio) }
     }
 
-    fn place_long(&mut self, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+    fn place_long(&mut self, task_ids: &[TaskRef], ctx: &mut SchedCtx) {
         for &tid in task_ids {
             let target = ctx.cluster.least_loaded_general();
             ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);
         }
     }
 
-    fn place_short(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+    fn place_short(&mut self, job: &Job, task_ids: &[TaskRef], ctx: &mut SchedCtx) {
         let m = task_ids.len();
         let probes = ((m as f64 * self.probe_ratio).ceil() as usize).max(1);
 
@@ -135,7 +135,7 @@ impl Scheduler for Hybrid {
         self.name
     }
 
-    fn place_job(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+    fn place_job(&mut self, job: &Job, task_ids: &[TaskRef], ctx: &mut SchedCtx) {
         if job.is_long {
             self.place_long(task_ids, ctx);
         } else {
@@ -169,7 +169,7 @@ mod tests {
         Job { id: JobId(0), arrival: 0.0, task_durations: vec![dur; n], is_long: true }
     }
 
-    fn add_tasks(cluster: &mut Cluster, job: &Job) -> Vec<TaskId> {
+    fn add_tasks(cluster: &mut Cluster, job: &Job) -> Vec<TaskRef> {
         job.task_durations
             .iter()
             .map(|&d| cluster.add_task(job.id, d, job.is_long, 0.0))

@@ -6,7 +6,7 @@
 use crate::sched::probe::{assign_least_loaded, sample_from_pool, ProbeBuffers};
 use crate::sched::{SchedCtx, Scheduler};
 use crate::trace::Job;
-use crate::util::{ServerId, TaskId};
+use crate::util::{ServerId, TaskRef};
 
 /// Batch-sampling decentralized placement over the whole cluster.
 pub struct Sparrow {
@@ -28,7 +28,7 @@ impl Scheduler for Sparrow {
         "sparrow"
     }
 
-    fn place_job(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx) {
+    fn place_job(&mut self, job: &Job, task_ids: &[TaskRef], ctx: &mut SchedCtx) {
         // Whole cluster is fair game: general + short partitions.
         self.pool.clear();
         self.pool.extend_from_slice(&ctx.cluster.general);

@@ -5,7 +5,7 @@ use crate::cluster::Cluster;
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Rng};
 use crate::trace::Job;
-use crate::util::TaskId;
+use crate::util::TaskRef;
 
 /// Mutable simulation context handed to schedulers.
 pub struct SchedCtx<'a> {
@@ -22,13 +22,13 @@ pub trait Scheduler {
 
     /// Place all tasks of `job` (already materialised in the task arena as
     /// `task_ids`) onto server queues.
-    fn place_job(&mut self, job: &Job, task_ids: &[TaskId], ctx: &mut SchedCtx);
+    fn place_job(&mut self, job: &Job, task_ids: &[TaskRef], ctx: &mut SchedCtx);
 
     /// Re-place tasks orphaned by a transient revocation (tasks whose only
     /// queue copy lived on the revoked server). Default: least-loaded
     /// on-demand short-partition server — the §3.3 on-demand fallback —
     /// answered by the short-pool index in O(log n).
-    fn replace_orphans(&mut self, orphans: &[TaskId], ctx: &mut SchedCtx) {
+    fn replace_orphans(&mut self, orphans: &[TaskRef], ctx: &mut SchedCtx) {
         for &tid in orphans {
             ctx.rec.tasks_rescheduled += 1;
             let target = ctx

@@ -6,15 +6,19 @@
 //! processed in the order they were scheduled, which keeps runs bitwise
 //! deterministic.
 
-use crate::util::{JobId, ServerId, TaskId};
+use crate::util::{JobId, ServerId, TaskRef};
 
 /// A discrete event in the cluster simulation.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Event {
     /// A job from the trace arrives at the scheduler front-end.
     JobArrival(JobId),
-    /// The task currently running on `server` completes.
-    TaskFinish { server: ServerId, task: TaskId },
+    /// The task currently running on `server` completes. Carries a
+    /// generation-tagged [`TaskRef`]: the scheduled event holds a
+    /// liveness ref on the arena slot, and a revocation that kills the
+    /// execution leaves this event to resolve as stale at pop — it can
+    /// never alias a recycled slot.
+    TaskFinish { server: ServerId, task: TaskRef },
     /// A requested transient server finishes provisioning and joins the
     /// dynamic short partition (paper: 120 s provisioning delay).
     TransientReady(ServerId),
@@ -55,7 +59,7 @@ mod tests {
     fn kinds_are_distinct() {
         let kinds = [
             Event::JobArrival(JobId(0)).kind(),
-            Event::TaskFinish { server: ServerId(0), task: TaskId(0) }.kind(),
+            Event::TaskFinish { server: ServerId(0), task: TaskRef { slot: 0, gen: 0 } }.kind(),
             Event::TransientReady(ServerId(0)).kind(),
             Event::RevocationWarning(ServerId(0)).kind(),
             Event::Revoked(ServerId(0)).kind(),

@@ -16,7 +16,20 @@
 //! only a small per-job metadata record (arrival, class, remaining task
 //! count) survives until the job completes. Peak resident job count is
 //! therefore set by cluster load, not trace length (tracked by
-//! [`World::peak_resident_jobs`]).
+//! [`World::peak_resident_jobs`]); the cluster's generational task arena
+//! bounds task slots the same way ([`World::peak_resident_tasks`]).
+//! (The remaining O(trace) growth is per-task delay samples in the
+//! recorder and one server slot per transient ever requested — see the
+//! ROADMAP item on trace-scale memory.)
+//!
+//! **Borrowed lookahead**: a world built over an eager [`Workload`]
+//! ([`World::from_workload`]) borrows each job straight from the
+//! workload slice instead of pulling owned clones through a
+//! [`crate::trace::WorkloadReplay`] — zero per-job allocation or
+//! durations memcpy on
+//! the eager/shared-workload path, with pull order, id assignment and
+//! RNG usage identical to the streaming path (fixed-seed runs are
+//! bit-identical either way).
 //!
 //! The world core keeps only the trace-replay responsibilities that
 //! define the simulation's semantics:
@@ -25,23 +38,25 @@
 //!   arrival (after dispatch, so placement-scheduled events keep their
 //!   legacy queue order);
 //! * cluster lifecycle bookkeeping for `TaskFinish` / `Revoked` /
-//!   `DrainComplete` (stale-finish filtering, drain retirement,
-//!   revocation orphan collection);
-//! * per-job completion accounting and the end-of-run transient
-//!   close-out.
+//!   `DrainComplete` (stale-finish filtering via the arena's
+//!   [`FinishOutcome`], drain retirement, revocation orphan collection);
+//! * per-job completion accounting — keyed off fields extracted *at*
+//!   the finish event, never read back through a possibly-recycled
+//!   [`TaskRef`] — and the end-of-run transient close-out.
 //!
 //! Determinism: given the same source, seed and component wiring, the
 //! run is bitwise identical to the pre-component monolithic runner —
 //! enforced by `tests/golden_determinism.rs` (eager replay) and
-//! `tests/streaming_golden.rs` (streaming synthesis + combinators).
+//! `tests/streaming_golden.rs` (streaming synthesis + combinators +
+//! arena recycling on/off).
 
 use std::collections::HashMap;
 
-use crate::cluster::{Cluster, ServerKind, ServerState, TaskState};
+use crate::cluster::{Cluster, FinishOutcome, ServerKind, ServerState};
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event, Rng};
-use crate::trace::{ArrivalSource, Job, Workload, WorkloadReplay};
-use crate::util::{JobId, TaskId, Time};
+use crate::trace::{ArrivalSource, Job, Workload};
+use crate::util::{JobId, TaskRef, Time};
 
 /// Mutable per-event view handed to components.
 ///
@@ -61,10 +76,10 @@ pub struct WorldCtx<'w> {
     pub job: Option<&'w Job>,
     /// Tasks materialised for the `JobArrival` being dispatched (empty
     /// for other events).
-    pub arrived: &'w [TaskId],
+    pub arrived: &'w [TaskRef],
     /// Tasks orphaned by the `Revoked` being dispatched (empty
     /// otherwise).
-    pub orphans: &'w [TaskId],
+    pub orphans: &'w [TaskRef],
     outstanding_tasks: u64,
     more_jobs: bool,
     prewarm_lr: &'w mut Option<f64>,
@@ -134,13 +149,39 @@ struct JobMeta {
     remaining: u32,
 }
 
+/// Where arrivals come from: a boxed streaming source, or — the
+/// borrowed-lookahead fast path — direct iteration over an eager
+/// workload slice (no per-job clone).
+enum Feed<'w> {
+    Stream(Box<dyn ArrivalSource + 'w>),
+    Eager { workload: &'w Workload, next: usize },
+}
+
+/// One job of lookahead: owned (streamed) or borrowed from an eager
+/// workload.
+enum JobRef<'w> {
+    Owned(Job),
+    Borrowed(&'w Job),
+}
+
+impl JobRef<'_> {
+    #[inline]
+    fn job(&self) -> &Job {
+        match *self {
+            JobRef::Owned(ref j) => j,
+            JobRef::Borrowed(j) => j,
+        }
+    }
+}
+
 /// The composed simulation: engine + cluster + recorder + RNG streams +
-/// ordered components, run over one streaming arrival source.
+/// ordered components, run over one streaming arrival source (or an
+/// eager workload via the borrowed fast path).
 pub struct World<'w> {
     pub cluster: Cluster,
     pub engine: Engine,
     pub rec: Recorder,
-    source: Box<dyn ArrivalSource + 'w>,
+    feed: Feed<'w>,
     root_rng: Rng,
     sched_rng: Rng,
     components: Vec<Box<dyn Component + 'w>>,
@@ -153,14 +194,18 @@ pub struct World<'w> {
     next_id: u32,
     /// Arrival of the last pulled job (source-ordering assertion).
     last_arrival: Time,
-    /// One-job lookahead: pulled from the source, arrival event queued.
-    lookahead: Option<Job>,
+    /// One-job lookahead: pulled from the feed, arrival event queued.
+    lookahead: Option<JobRef<'w>>,
     source_done: bool,
     /// The job being dispatched in the current `JobArrival` event.
-    current_job: Option<Job>,
+    current_job: Option<JobRef<'w>>,
     peak_resident: usize,
-    arrived: Vec<TaskId>,
-    orphans: Vec<TaskId>,
+    /// `(job, is_long)` of the task completed by the `TaskFinish` being
+    /// dispatched — extracted at the finish so completion accounting
+    /// never dereferences a recycled arena slot.
+    finished: Option<(JobId, bool)>,
+    arrived: Vec<TaskRef>,
+    orphans: Vec<TaskRef>,
     prewarm_lr: Option<f64>,
     deferred: Vec<(Time, Event)>,
 }
@@ -177,13 +222,31 @@ impl<'w> World<'w> {
         rec: Recorder,
         seed: u64,
     ) -> Self {
+        Self::with_feed(Feed::Stream(source), cluster, rec, seed)
+    }
+
+    /// Build a world replaying an eager [`Workload`] through the
+    /// borrowed-lookahead fast path: jobs are handed to dispatch by
+    /// reference, skipping the per-pull clone a
+    /// [`crate::trace::WorkloadReplay`] adapter would pay. Bit-identical
+    /// to streaming the same jobs.
+    pub fn from_workload(
+        workload: &'w Workload,
+        cluster: Cluster,
+        rec: Recorder,
+        seed: u64,
+    ) -> Self {
+        Self::with_feed(Feed::Eager { workload, next: 0 }, cluster, rec, seed)
+    }
+
+    fn with_feed(feed: Feed<'w>, cluster: Cluster, rec: Recorder, seed: u64) -> Self {
         let mut root_rng = Rng::new(seed);
         let sched_rng = root_rng.fork(0x5C);
         World {
             cluster,
             engine: Engine::new(),
             rec,
-            source,
+            feed,
             root_rng,
             sched_rng,
             components: Vec::new(),
@@ -195,22 +258,12 @@ impl<'w> World<'w> {
             source_done: false,
             current_job: None,
             peak_resident: 0,
+            finished: None,
             arrived: Vec::new(),
             orphans: Vec::new(),
             prewarm_lr: None,
             deferred: Vec::new(),
         }
-    }
-
-    /// Build a world replaying an eager [`Workload`] (back-compat
-    /// convenience over [`WorkloadReplay`]).
-    pub fn from_workload(
-        workload: &'w Workload,
-        cluster: Cluster,
-        rec: Recorder,
-        seed: u64,
-    ) -> Self {
-        Self::new(Box::new(WorkloadReplay::new(workload)), cluster, rec, seed)
     }
 
     /// Derive an independent RNG stream for a component (e.g. the
@@ -242,13 +295,20 @@ impl<'w> World<'w> {
         self.peak_resident
     }
 
+    /// High-water mark of concurrently-resident task-arena slots — the
+    /// arena-recycling twin of [`World::peak_resident_jobs`]: bounded by
+    /// cluster load, independent of trace length.
+    pub fn peak_resident_tasks(&self) -> usize {
+        self.cluster.peak_resident_tasks()
+    }
+
     fn ctx(&mut self) -> WorldCtx<'_> {
         WorldCtx {
             cluster: &mut self.cluster,
             engine: &mut self.engine,
             rec: &mut self.rec,
             rng: &mut self.sched_rng,
-            job: self.current_job.as_ref(),
+            job: self.current_job.as_ref().map(|j| j.job()),
             arrived: &self.arrived,
             orphans: &self.orphans,
             outstanding_tasks: self.outstanding,
@@ -271,24 +331,52 @@ impl<'w> World<'w> {
 
     /// Pull the next job into the lookahead slot, assigning it the next
     /// sequential id. Enforces the source's nondecreasing-arrival
-    /// contract (a violation would corrupt the event queue).
+    /// contract (a violation would corrupt the event queue). The eager
+    /// feed borrows the job in place; streams hand over owned jobs.
     fn advance_source(&mut self, arrivals_rng: &mut Rng) {
         debug_assert!(self.lookahead.is_none(), "lookahead overwritten");
         if self.source_done {
             return;
         }
-        match self.source.next_job(arrivals_rng) {
-            Some(mut job) => {
+        let pulled: Option<JobRef<'w>> = match &mut self.feed {
+            Feed::Eager { workload, next } => {
+                let w: &'w Workload = *workload;
+                match w.jobs.get(*next) {
+                    Some(job) => {
+                        *next += 1;
+                        if job.id.0 == self.next_id {
+                            Some(JobRef::Borrowed(job))
+                        } else {
+                            // Non-canonical ids (hand-built Workload):
+                            // fall back to an owned, re-id'd clone.
+                            let mut j = job.clone();
+                            j.id = JobId(self.next_id);
+                            Some(JobRef::Owned(j))
+                        }
+                    }
+                    None => None,
+                }
+            }
+            Feed::Stream(source) => match source.next_job(arrivals_rng) {
+                Some(mut job) => {
+                    job.id = JobId(self.next_id);
+                    Some(JobRef::Owned(job))
+                }
+                None => None,
+            },
+        };
+        match pulled {
+            Some(jobref) => {
+                let arrival = jobref.job().arrival;
                 assert!(
-                    job.arrival >= self.last_arrival,
+                    arrival >= self.last_arrival,
                     "ArrivalSource produced out-of-order arrival {} after {}",
-                    job.arrival,
+                    arrival,
                     self.last_arrival
                 );
-                self.last_arrival = job.arrival;
-                job.id = JobId(self.next_id);
+                self.last_arrival = arrival;
                 self.next_id = self.next_id.checked_add(1).expect("more than u32::MAX jobs");
-                self.lookahead = Some(job);
+                self.lookahead = Some(jobref);
             }
             None => self.source_done = true,
         }
@@ -303,7 +391,8 @@ impl<'w> World<'w> {
         // streaming refactor leaves every legacy stream bit-identical.
         let mut arrivals_rng = self.root_rng.fork(0xAE);
         self.advance_source(&mut arrivals_rng);
-        if let Some(job) = &self.lookahead {
+        if let Some(jobref) = &self.lookahead {
+            let job = jobref.job();
             self.engine.schedule(job.arrival, Event::JobArrival(job.id));
         }
         {
@@ -320,41 +409,50 @@ impl<'w> World<'w> {
             self.orphans.clear();
             self.prewarm_lr = None;
             self.current_job = None;
+            self.finished = None;
             match event {
                 Event::JobArrival(jid) => {
-                    let job =
+                    let jobref =
                         self.lookahead.take().expect("JobArrival without a pulled job");
-                    debug_assert_eq!(job.id, jid, "arrival event out of step with source");
-                    for &d in &job.task_durations {
-                        let tid = self.cluster.add_task(job.id, d, job.is_long, now);
-                        self.arrived.push(tid);
-                    }
-                    let n = job.num_tasks() as u32;
-                    if n > 0 {
-                        self.outstanding += n as u64;
-                        self.job_meta.insert(
-                            jid.0,
-                            JobMeta { arrival: job.arrival, is_long: job.is_long, remaining: n },
-                        );
-                        self.peak_resident = self.peak_resident.max(self.job_meta.len());
-                    }
-                    self.current_job = Some(job);
-                }
-                Event::TaskFinish { server, task } => {
-                    // A revocation may have killed this execution after
-                    // its finish event was scheduled (the task restarts
-                    // elsewhere with a new finish event) — drop the
-                    // stale one before any component sees it.
                     {
-                        let t = self.cluster.task(task);
-                        if t.state != TaskState::Running || t.ran_on != Some(server) {
-                            continue;
+                        let job = jobref.job();
+                        debug_assert_eq!(job.id, jid, "arrival event out of step with source");
+                        for &d in &job.task_durations {
+                            let tid = self.cluster.add_task(job.id, d, job.is_long, now);
+                            self.arrived.push(tid);
+                        }
+                        let n = job.num_tasks() as u32;
+                        if n > 0 {
+                            self.outstanding += n as u64;
+                            self.job_meta.insert(
+                                jid.0,
+                                JobMeta {
+                                    arrival: job.arrival,
+                                    is_long: job.is_long,
+                                    remaining: n,
+                                },
+                            );
+                            self.peak_resident = self.peak_resident.max(self.job_meta.len());
                         }
                     }
-                    let drained =
-                        self.cluster.on_task_finish(server, task, &mut self.engine, &mut self.rec);
-                    if drained {
-                        self.cluster.retire(server, now, &mut self.rec);
+                    self.current_job = Some(jobref);
+                }
+                Event::TaskFinish { server, task } => {
+                    // The arena consumes the event's liveness ref and
+                    // filters stale finishes (a revocation killed this
+                    // execution after its event was scheduled; the task
+                    // restarted elsewhere with a new finish event).
+                    // Completion fields come out of the outcome — the
+                    // slot may recycle any time after this call.
+                    match self.cluster.on_task_finish(server, task, &mut self.engine, &mut self.rec)
+                    {
+                        FinishOutcome::Stale => continue,
+                        FinishOutcome::Finished { job, is_long, drained } => {
+                            if drained {
+                                self.cluster.retire(server, now, &mut self.rec);
+                            }
+                            self.finished = Some((job, is_long));
+                        }
                     }
                 }
                 Event::Revoked(sid) => {
@@ -373,14 +471,16 @@ impl<'w> World<'w> {
                 Event::TransientReady(_) | Event::RevocationWarning(_) | Event::Snapshot => {}
             }
 
-            // Did this event change long-task occupancy? (`is_long` is
-            // immutable, so reading it after the state transition is
-            // equivalent to the legacy in-arm flags.)
+            // Did this event change long-task occupancy? (Extracted
+            // payloads, never a task-arena read-back: the finished
+            // task's slot may already be recycled.)
             let long_change = match event {
                 Event::JobArrival(_) => {
-                    self.current_job.as_ref().map(|j| j.is_long).unwrap_or(false)
+                    self.current_job.as_ref().map(|j| j.job().is_long).unwrap_or(false)
                 }
-                Event::TaskFinish { task, .. } => self.cluster.task(task).is_long,
+                Event::TaskFinish { .. } => {
+                    self.finished.map(|(_, is_long)| is_long).unwrap_or(false)
+                }
                 _ => false,
             };
 
@@ -396,13 +496,15 @@ impl<'w> World<'w> {
             match event {
                 Event::JobArrival(_) => {
                     self.advance_source(&mut arrivals_rng);
-                    if let Some(job) = &self.lookahead {
+                    if let Some(jobref) = &self.lookahead {
+                        let job = jobref.job();
                         self.engine.schedule(job.arrival, Event::JobArrival(job.id));
                     }
                 }
-                Event::TaskFinish { task, .. } => {
+                Event::TaskFinish { .. } => {
+                    let (jid, _) =
+                        self.finished.expect("stale finishes are filtered pre-dispatch");
                     self.outstanding -= 1;
-                    let jid = self.cluster.task(task).job;
                     let done = {
                         let meta = self
                             .job_meta
@@ -445,6 +547,11 @@ impl<'w> World<'w> {
         }
         debug_assert_eq!(self.outstanding, 0, "tasks lost by the simulation");
         debug_assert!(self.job_meta.is_empty(), "jobs left incomplete");
+        debug_assert_eq!(
+            self.cluster.resident_tasks(),
+            0,
+            "task slots still pinned at quiescence"
+        );
         #[cfg(debug_assertions)]
         self.cluster.check_invariants();
         self.components = components;

@@ -63,11 +63,15 @@ pub fn collect_workload(source: &mut dyn ArrivalSource, rng: &mut Rng) -> Worklo
 // ------------------------------------------------- back-compat adapters
 
 /// Streams a borrowed eager [`Workload`] — the back-compat adapter that
-/// lets every `&Workload` call site run through the streaming core.
+/// lets a `&Workload` run through any `ArrivalSource` consumer (e.g. as
+/// the base of a combinator stack).
 ///
-/// Each pull clones the job (one allocation + memcpy of its durations);
-/// that constant factor is small next to per-task placement work, but a
-/// borrowed-lookahead fast path is a known follow-up (see ROADMAP).
+/// Each pull clones the job (one allocation + memcpy of its durations).
+/// The simulation itself no longer pays that: `World::from_workload`
+/// (used by `simulate` / `simulate_with` / `build_world`) replays eager
+/// workloads through a borrowed-lookahead fast path that hands jobs to
+/// dispatch by reference, bit-identically. This adapter remains for
+/// combinator pipelines over eager data.
 pub struct WorkloadReplay<'w> {
     workload: &'w Workload,
     next: usize,

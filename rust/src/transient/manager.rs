@@ -367,8 +367,11 @@ mod tests {
         // Finish the task -> caller notices drain completion.
         let (_, ev) = engine.pop().unwrap();
         if let Event::TaskFinish { server, task } = ev {
-            let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
-            assert!(drained);
+            let out = cluster.on_task_finish(server, task, &mut engine, &mut rec);
+            assert!(matches!(
+                out,
+                crate::cluster::FinishOutcome::Finished { drained: true, .. }
+            ));
             cluster.retire(server, engine.now(), &mut rec);
         }
         assert_eq!(cluster.server(sid).state, ServerState::Retired);

@@ -45,10 +45,42 @@ id_type!(
     /// Identifies a job in the workload trace.
     JobId
 );
-id_type!(
-    /// Identifies a task in the global task arena.
-    TaskId
-);
+
+/// A generation-tagged handle into the [`crate::cluster::Cluster`] task
+/// arena.
+///
+/// `slot` indexes the arena; `gen` is the slot's generation at the time
+/// the handle was issued. The arena recycles the slot of a finished task
+/// once its liveness count (outstanding queue copies + pending
+/// `TaskFinish` events) reaches zero, bumping the generation — so any
+/// handle that outlives its task (a §3.3 shadow copy, a revoked
+/// execution's stale finish event) fails the generation check instead of
+/// silently aliasing whatever task reuses the slot.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskRef {
+    pub slot: u32,
+    pub gen: u32,
+}
+
+impl TaskRef {
+    /// Arena slot as a `usize` index.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.slot as usize
+    }
+}
+
+impl fmt::Debug for TaskRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TaskRef({}@{})", self.slot, self.gen)
+    }
+}
+
+impl fmt::Display for TaskRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.slot, self.gen)
+    }
+}
 
 /// `f64` wrapper with a total order, used as the event-queue key.
 ///
@@ -106,6 +138,9 @@ mod tests {
     fn ids_are_compact() {
         assert_eq!(std::mem::size_of::<ServerId>(), 4);
         assert_eq!(ServerId(7).index(), 7);
+        assert_eq!(std::mem::size_of::<TaskRef>(), 8);
+        assert_eq!(TaskRef { slot: 7, gen: 3 }.index(), 7);
+        assert_ne!(TaskRef { slot: 7, gen: 3 }, TaskRef { slot: 7, gen: 4 });
     }
 
     #[test]

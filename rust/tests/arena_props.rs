@@ -1,0 +1,264 @@
+//! Generational task-arena stress tests: randomized interleavings of
+//! enqueue (with §3.3 duplicate copies), finish, steal, revoke, drain
+//! and provision, asserting that
+//!
+//! * a recycled slot is **never resurrected** — every task finishes at
+//!   most once, stale handles stay stale forever, and a stale finish
+//!   event from a revoked execution resolves to `Stale`;
+//! * the arena's slot count stays bounded by peak-active tasks (the
+//!   O(active) memory guarantee), while with recycling off it grows with
+//!   total tasks;
+//! * recycling is **observationally invisible**: the same op sequence
+//!   against a recycling and a non-recycling cluster produces the exact
+//!   same delays, finish counts, stale-copy counts and
+//!   `peak_resident_tasks`.
+
+use std::collections::HashMap;
+
+use cloudcoaster::cluster::{Cluster, FinishOutcome, QueuePolicy, TaskState};
+use cloudcoaster::metrics::Recorder;
+use cloudcoaster::sim::{Engine, Event, Rng};
+use cloudcoaster::testkit::{property, usize_in};
+use cloudcoaster::util::{JobId, ServerId, TaskRef};
+
+/// Everything observable a driver run produces (minus slot counts, which
+/// legitimately differ between arena modes).
+#[derive(Debug, PartialEq)]
+struct RunObservables {
+    tasks_finished: u64,
+    stale_copies_skipped: u64,
+    tasks_rescheduled: u64,
+    short_delays: Vec<f64>,
+    peak_resident_tasks: usize,
+    end_time_bits: u64,
+}
+
+/// Drive a random but fully seed-determined interleaving of cluster ops.
+/// Returns the observables plus the final slot count.
+fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
+    let mut rng = Rng::new(seed);
+    let mut cluster = Cluster::new(6, 3, QueuePolicy::Fifo);
+    cluster.set_task_recycling(recycle);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(2.0);
+
+    // Per-ref bookkeeping: how many times each issued handle finished.
+    let mut finish_counts: HashMap<TaskRef, u32> = HashMap::new();
+    let mut issued: Vec<TaskRef> = Vec::new();
+
+    let mut process_finish = |cluster: &mut Cluster,
+                              engine: &mut Engine,
+                              rec: &mut Recorder,
+                              finish_counts: &mut HashMap<TaskRef, u32>,
+                              server: ServerId,
+                              task: TaskRef| {
+        match cluster.on_task_finish(server, task, engine, rec) {
+            FinishOutcome::Stale => {}
+            FinishOutcome::Finished { drained, .. } => {
+                let n = finish_counts.entry(task).or_insert(0);
+                *n += 1;
+                assert_eq!(*n, 1, "task {task:?} finished more than once (resurrected slot)");
+                if drained {
+                    cluster.retire(server, engine.now(), rec);
+                }
+            }
+        }
+    };
+
+    for step in 0..steps {
+        match rng.below(12) {
+            // Enqueue a fresh short/long task; sometimes mirror a §3.3
+            // duplicate copy onto an on-demand short server.
+            0..=5 => {
+                let accepting: Vec<ServerId> = cluster
+                    .servers
+                    .iter()
+                    .filter(|s| s.accepting())
+                    .map(|s| s.id)
+                    .collect();
+                let sid = accepting[rng.below(accepting.len() as u64) as usize];
+                let is_long = cluster.general.contains(&sid) && rng.f64() < 0.25;
+                let dur = 0.5 + rng.f64() * 40.0;
+                let t = cluster.add_task(JobId(step as u32), dur, is_long, engine.now());
+                issued.push(t);
+                cluster.enqueue(t, sid, &mut engine, &mut rec);
+                if !is_long && rng.f64() < 0.35 && cluster.task(t).state == TaskState::Queued {
+                    if let Some(od) = cluster.least_loaded_short_reserved() {
+                        if od != sid {
+                            cluster.enqueue(t, od, &mut engine, &mut rec);
+                        }
+                    }
+                }
+            }
+            // Advance one event.
+            6..=7 => {
+                if let Some((_, ev)) = engine.pop() {
+                    if let Event::TaskFinish { server, task } = ev {
+                        process_finish(
+                            &mut cluster,
+                            &mut engine,
+                            &mut rec,
+                            &mut finish_counts,
+                            server,
+                            task,
+                        );
+                    }
+                }
+            }
+            // Steal between random servers.
+            8 => {
+                let n = cluster.servers.len() as u64;
+                let victim = ServerId(rng.below(n) as u32);
+                let thief = ServerId(rng.below(n) as u32);
+                if cluster.server(victim).state != cloudcoaster::cluster::ServerState::Retired
+                    && cluster.server(victim).state
+                        != cloudcoaster::cluster::ServerState::Provisioning
+                {
+                    let batch = usize_in(&mut rng, 1, 4);
+                    cluster.steal_short_tasks(victim, thief, batch, &mut engine, &mut rec);
+                }
+            }
+            // Provision a transient.
+            9 => {
+                if cluster.transient_pool.len() < 6 {
+                    let sid = cluster.request_transient(engine.now());
+                    cluster.transient_ready(sid, engine.now(), &mut rec);
+                }
+            }
+            // Graceful drain.
+            10 => {
+                if !cluster.transient_pool.is_empty() {
+                    let k = rng.below(cluster.transient_pool.len() as u64) as usize;
+                    let sid = cluster.transient_pool[k];
+                    if cluster.begin_drain(sid) {
+                        cluster.retire(sid, engine.now(), &mut rec);
+                    }
+                }
+            }
+            // Revoke (the stale-finish / shadow-copy gauntlet); re-place
+            // orphans like the default scheduler fallback.
+            _ => {
+                if !cluster.transient_pool.is_empty() {
+                    let k = rng.below(cluster.transient_pool.len() as u64) as usize;
+                    let sid = cluster.transient_pool[k];
+                    let orphans = cluster.revoke(sid, engine.now(), &mut rec);
+                    for tid in orphans {
+                        rec.tasks_rescheduled += 1;
+                        let target = cluster
+                            .least_loaded_short_reserved()
+                            .unwrap_or_else(|| cluster.general[0]);
+                        cluster.enqueue(tid, target, &mut engine, &mut rec);
+                    }
+                }
+            }
+        }
+        cluster.check_invariants();
+        if recycle {
+            // The memory headline: the arena never holds more slots than
+            // the peak number of simultaneously live tasks.
+            assert!(
+                cluster.task_slots() <= cluster.peak_resident_tasks(),
+                "arena grew past peak-active: {} slots vs peak {}",
+                cluster.task_slots(),
+                cluster.peak_resident_tasks()
+            );
+        }
+    }
+
+    // Quiesce.
+    while let Some((_, ev)) = engine.pop() {
+        if let Event::TaskFinish { server, task } = ev {
+            process_finish(&mut cluster, &mut engine, &mut rec, &mut finish_counts, server, task);
+        }
+    }
+    cluster.check_invariants();
+
+    // Conservation: every issued task finished exactly once — revocation,
+    // duplication and stealing never lose or duplicate work. A handle may
+    // have been re-used (recycling), so count by handle identity.
+    assert_eq!(
+        finish_counts.values().sum::<u32>() as usize,
+        issued.len(),
+        "finish count != issued tasks"
+    );
+    assert_eq!(rec.tasks_finished as usize, issued.len());
+    if recycle {
+        // Everything settled at quiescence -> every slot released, and no
+        // stale handle dereferences.
+        assert_eq!(cluster.resident_tasks(), 0, "slots still pinned after quiesce");
+        for &r in &issued {
+            assert!(
+                cluster.get_task(r).is_none(),
+                "released handle {r:?} still (or again) dereferences — resurrection"
+            );
+        }
+        assert_eq!(
+            cluster.task_slots(),
+            cluster.peak_resident_tasks(),
+            "slot count != peak-active"
+        );
+    }
+
+    (
+        RunObservables {
+            tasks_finished: rec.tasks_finished,
+            stale_copies_skipped: rec.stale_copies_skipped,
+            tasks_rescheduled: rec.tasks_rescheduled,
+            short_delays: rec.short_delays.as_slice().to_vec(),
+            peak_resident_tasks: cluster.peak_resident_tasks(),
+            end_time_bits: engine.now().to_bits(),
+        },
+        cluster.task_slots(),
+    )
+}
+
+#[test]
+fn arena_stress_no_resurrection_and_bounded_slots() {
+    property("arena stress", 30, |rng| {
+        let seed = rng.next_u64();
+        drive(seed, true, 300);
+    });
+}
+
+#[test]
+fn arena_recycling_is_observationally_invisible() {
+    // Same seed-determined op sequence, recycling on vs off: every
+    // simulation observable — including peak_resident_tasks, whose
+    // liveness accounting is mode-independent — must match bit-exactly.
+    // Only the slot count may differ (that's the point of the arena).
+    property("arena mode equivalence", 12, |rng| {
+        let seed = rng.next_u64();
+        let (with, slots_with) = drive(seed, true, 250);
+        let (without, slots_without) = drive(seed, false, 250);
+        assert_eq!(with, without, "recycling changed an observable");
+        assert!(
+            slots_with <= slots_without,
+            "recycling used more slots ({slots_with}) than append-only ({slots_without})"
+        );
+    });
+}
+
+#[test]
+fn generations_distinguish_slot_reuse() {
+    // Deterministic mini-case: run one task to completion, reuse the
+    // slot, and check the old handle stays dead across the reuse.
+    let mut cluster = Cluster::new(2, 1, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(1.0);
+    let a = cluster.add_task(JobId(0), 5.0, false, 0.0);
+    cluster.enqueue(a, ServerId(0), &mut engine, &mut rec);
+    let (_, ev) = engine.pop().unwrap();
+    if let Event::TaskFinish { server, task } = ev {
+        assert!(matches!(
+            cluster.on_task_finish(server, task, &mut engine, &mut rec),
+            FinishOutcome::Finished { .. }
+        ));
+    }
+    assert!(cluster.get_task(a).is_none(), "slot not released after full settle");
+    let b = cluster.add_task(JobId(1), 5.0, false, 10.0);
+    assert_eq!(b.slot, a.slot, "free slot not reused");
+    assert_ne!(b.gen, a.gen, "generation not bumped on reuse");
+    assert!(cluster.get_task(a).is_none(), "stale handle resurrected by reuse");
+    assert!(cluster.get_task(b).is_some());
+    cluster.check_invariants();
+}

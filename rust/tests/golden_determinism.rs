@@ -11,7 +11,7 @@
 //! ordering, RNG stream usage or bookkeeping introduced by the
 //! `World`/`Component` decomposition shows up here as a hard failure.
 
-use cloudcoaster::cluster::{Cluster, ServerState};
+use cloudcoaster::cluster::{Cluster, FinishOutcome, ServerState};
 use cloudcoaster::coordinator::runner::{simulate, SimConfig};
 use cloudcoaster::metrics::Recorder;
 use cloudcoaster::sched::{Hybrid, SchedCtx, Scheduler};
@@ -19,7 +19,7 @@ use cloudcoaster::sim::{Engine, Event, Rng};
 use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
 use cloudcoaster::trace::Workload;
 use cloudcoaster::transient::{Budget, ManagerConfig, TransientManager};
-use cloudcoaster::util::{JobId, TaskId, Time};
+use cloudcoaster::util::{JobId, TaskRef, Time};
 
 /// What the oracle produces for comparison.
 struct LegacyResult {
@@ -91,7 +91,7 @@ fn legacy_simulate(
         workload.jobs.iter().map(|j| j.num_tasks() as u32).collect();
     let mut outstanding_tasks: u64 = workload.num_tasks() as u64;
     let mut next_job = 0usize;
-    let mut task_ids: Vec<TaskId> = Vec::new();
+    let mut task_ids: Vec<TaskRef> = Vec::new();
 
     if !workload.jobs.is_empty() {
         engine.schedule(workload.jobs[0].arrival, Event::JobArrival(JobId(0)));
@@ -124,16 +124,17 @@ fn legacy_simulate(
                 }
             }
             Event::TaskFinish { server, task } => {
-                let (is_long, jid) = {
-                    let t = cluster.task(task);
-                    if t.state != cloudcoaster::cluster::TaskState::Running
-                        || t.ran_on != Some(server)
-                    {
-                        continue;
-                    }
-                    (t.is_long, t.job)
-                };
-                let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                // The arena consumes the event's liveness ref and
+                // reports staleness itself; completion fields come out
+                // of the outcome, never through the (possibly recycled)
+                // TaskRef — matching the pre-arena stale filter exactly.
+                let (is_long, jid, drained) =
+                    match cluster.on_task_finish(server, task, &mut engine, &mut rec) {
+                        FinishOutcome::Stale => continue,
+                        FinishOutcome::Finished { job, is_long, drained } => {
+                            (is_long, job, drained)
+                        }
+                    };
                 if drained {
                     cluster.retire(server, now, &mut rec);
                 } else if cfg.steal_probes > 0

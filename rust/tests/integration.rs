@@ -47,6 +47,7 @@ fn small_cfg(manager: Option<ManagerConfig>) -> SimConfig {
         snapshot_interval: 60.0,
         steal_probes: 8,
         steal_batch: 8,
+        recycle_task_slots: true,
         seed: 5,
     }
 }

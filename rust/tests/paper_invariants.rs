@@ -91,9 +91,14 @@ fn sec32_graceful_release_completes_queue() {
     let mut finished = 0;
     while let Some((_, ev)) = engine.pop() {
         if let cloudcoaster::sim::Event::TaskFinish { server, task } = ev {
-            finished += 1;
-            if cluster.on_task_finish(server, task, &mut engine, &mut rec) {
-                cluster.retire(server, engine.now(), &mut rec);
+            match cluster.on_task_finish(server, task, &mut engine, &mut rec) {
+                cloudcoaster::cluster::FinishOutcome::Finished { drained, .. } => {
+                    finished += 1;
+                    if drained {
+                        cluster.retire(server, engine.now(), &mut rec);
+                    }
+                }
+                cloudcoaster::cluster::FinishOutcome::Stale => {}
             }
         }
     }
@@ -123,17 +128,25 @@ fn sec33_at_least_one_ondemand_copy_survives_revocation() {
     cluster.enqueue(t, od, &mut engine, &mut rec);
     let orphans = cluster.revoke(sid, 1.0, &mut rec);
     assert!(!orphans.contains(&t), "duplicated task must not orphan");
-    // World completes; the task runs exactly once (on the od copy).
+    // World completes; the task runs exactly once (on the od copy). The
+    // arena filters the revoked execution's stale finish itself.
+    let mut t_finishes = 0;
     while let Some((_, ev)) = engine.pop() {
         if let cloudcoaster::sim::Event::TaskFinish { server, task } = ev {
-            if cluster.task(task).state == cloudcoaster::cluster::TaskState::Running
-                && cluster.task(task).ran_on == Some(server)
+            if let cloudcoaster::cluster::FinishOutcome::Finished { job, .. } =
+                cluster.on_task_finish(server, task, &mut engine, &mut rec)
             {
-                cluster.on_task_finish(server, task, &mut engine, &mut rec);
+                if task == t {
+                    assert_eq!(job, JobId(1));
+                    t_finishes += 1;
+                }
             }
         }
     }
-    assert_eq!(cluster.task(t).state, cloudcoaster::cluster::TaskState::Finished);
+    assert_eq!(t_finishes, 1, "duplicated task must run exactly once");
+    // All liveness refs settled: the slot has been recycled, which is
+    // the arena's way of saying "finished and fully settled".
+    assert!(cluster.get_task(t).is_none());
     assert_eq!(rec.tasks_rescheduled, 0);
 }
 

@@ -3,7 +3,7 @@
 //! indexed least-loaded answer must equal the naive linear scan it
 //! replaced — including tie-breaking (`Iterator::min_by` first-minimal).
 
-use cloudcoaster::cluster::{Cluster, QueuePolicy, TaskState};
+use cloudcoaster::cluster::{Cluster, FinishOutcome, QueuePolicy, TaskState};
 use cloudcoaster::metrics::Recorder;
 use cloudcoaster::sim::{Engine, Event, Rng};
 use cloudcoaster::testkit::{property, usize_in};
@@ -118,17 +118,15 @@ fn pool_index_matches_naive_scans_under_random_ops() {
                         }
                     }
                 }
-                // Advance the simulation: process one finish event.
+                // Advance the simulation: process one finish event (the
+                // arena filters stale finishes from revocations itself).
                 6..=8 => {
                     if let Some((now, ev)) = engine.pop() {
                         if let Event::TaskFinish { server, task } = ev {
-                            let t = cluster.task(task);
-                            if t.state == TaskState::Running && t.ran_on == Some(server) {
-                                let drained =
-                                    cluster.on_task_finish(server, task, &mut engine, &mut rec);
-                                if drained {
-                                    cluster.retire(server, now, &mut rec);
-                                }
+                            if let FinishOutcome::Finished { drained: true, .. } =
+                                cluster.on_task_finish(server, task, &mut engine, &mut rec)
+                            {
+                                cluster.retire(server, now, &mut rec);
                             }
                         }
                     }
@@ -174,12 +172,10 @@ fn pool_index_matches_naive_scans_under_random_ops() {
         // whole way down.
         while let Some((now, ev)) = engine.pop() {
             if let Event::TaskFinish { server, task } = ev {
-                let t = cluster.task(task);
-                if t.state == TaskState::Running && t.ran_on == Some(server) {
-                    let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
-                    if drained {
-                        cluster.retire(server, now, &mut rec);
-                    }
+                if let FinishOutcome::Finished { drained: true, .. } =
+                    cluster.on_task_finish(server, task, &mut engine, &mut rec)
+                {
+                    cluster.retire(server, now, &mut rec);
                 }
             }
             check_index_matches_scans(&cluster);

@@ -52,6 +52,9 @@ fn random_cfg(rng: &mut Rng, with_manager: bool) -> SimConfig {
         snapshot_interval: 60.0,
         steal_probes: usize_in(rng, 0, 8),
         steal_batch: usize_in(rng, 1, 16),
+        // Exercise both arena modes: recycling (default) and the
+        // append-only reference mode. Every property must hold in both.
+        recycle_task_slots: rng.f64() < 0.8,
         seed: rng.next_u64(),
     }
 }
@@ -156,18 +159,17 @@ fn prop_cluster_invariants_hold_under_random_ops() {
                     }
                 }
                 5..=6 => {
-                    // Advance the world one event (guarding stale finish
-                    // events from revoked executions, as the runner does).
+                    // Advance the world one event. The arena consumes the
+                    // finish event's liveness ref and filters stale
+                    // finishes from revoked executions itself.
                     if let Some((_, ev)) = engine.pop() {
                         if let Event::TaskFinish { server, task } = ev {
-                            if cluster.task(task).state == TaskState::Running
-                                && cluster.task(task).ran_on == Some(server)
+                            if let cloudcoaster::cluster::FinishOutcome::Finished {
+                                drained: true,
+                                ..
+                            } = cluster.on_task_finish(server, task, &mut engine, &mut rec)
                             {
-                                let drained =
-                                    cluster.on_task_finish(server, task, &mut engine, &mut rec);
-                                if drained {
-                                    cluster.retire(server, engine.now(), &mut rec);
-                                }
+                                cluster.retire(server, engine.now(), &mut rec);
                             }
                         }
                     }
@@ -208,13 +210,10 @@ fn prop_cluster_invariants_hold_under_random_ops() {
         // Drain the world and re-check.
         while let Some((_, ev)) = engine.pop() {
             if let Event::TaskFinish { server, task } = ev {
-                if cluster.task(task).state == TaskState::Running
-                    && cluster.task(task).ran_on == Some(server)
+                if let cloudcoaster::cluster::FinishOutcome::Finished { drained: true, .. } =
+                    cluster.on_task_finish(server, task, &mut engine, &mut rec)
                 {
-                    let drained = cluster.on_task_finish(server, task, &mut engine, &mut rec);
-                    if drained {
-                        cluster.retire(server, engine.now(), &mut rec);
-                    }
+                    cluster.retire(server, engine.now(), &mut rec);
                 }
             }
         }
