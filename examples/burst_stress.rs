@@ -71,6 +71,8 @@ fn main() -> Result<()> {
         steal_probes: 8,
         steal_batch: 8,
         recycle_task_slots: true,
+        recycle_server_slots: true,
+        exact_delay_samples: false,
         seed: 7,
     };
     let mut sched = Hybrid::cloudcoaster(2.0);
@@ -89,7 +91,8 @@ fn main() -> Result<()> {
     let (adds, drains, _) = res.manager_stats.unwrap();
     println!(
         "\n{} transients requested, {} drained; short delay mean {:.1}s p99 {:.1}s; \
-         {} stale copies skipped; peak {} resident jobs / {} task slots; {:.0}k events/s",
+         {} stale copies skipped; peak {} resident jobs / {} task slots / {} server slots; \
+         {:.0}k events/s",
         adds,
         drains,
         res.rec.short_delays.mean(),
@@ -100,6 +103,7 @@ fn main() -> Result<()> {
         res.rec.stale_copies_skipped,
         res.peak_resident_jobs,
         res.peak_resident_tasks,
+        res.peak_resident_servers,
         res.events_per_sec() / 1000.0,
     );
     Ok(())

@@ -110,10 +110,13 @@ fn main() -> Result<()> {
     let storm = run_experiment_on(&storm_cfg, &workload, analytics.as_dyn())?;
     println!("\n[scenario] {}", summary_line(&storm));
     println!(
-        "storm scenario streamed {} tasks with at most {} jobs / {} task slots resident",
+        "storm scenario streamed {} tasks with at most {} jobs / {} task slots / \
+         {} server slots resident ({} bytes of delay sketches)",
         storm.short_delay.n + storm.long_delay.n,
         storm.peak_resident_jobs,
         storm.peak_resident_tasks,
+        storm.peak_resident_servers,
+        storm.delay_struct_bytes,
     );
     Ok(())
 }

@@ -11,7 +11,7 @@ use cloudcoaster::metrics::Recorder;
 use cloudcoaster::runtime::AnalyticsEngine;
 use cloudcoaster::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
 use cloudcoaster::sim::{Engine, Event, Rng};
-use cloudcoaster::util::{JobId, MinTree, ServerId};
+use cloudcoaster::util::{JobId, MinTree, ServerRef};
 
 fn bench_event_queue() {
     // Throughput of schedule+pop on a queue with realistic depth.
@@ -50,9 +50,9 @@ fn bench_probe_placement() {
     // Pre-load some servers.
     for i in 0..2000u32 {
         let t = cluster.add_task(JobId(0), 100.0, i % 5 == 0, 0.0);
-        cluster.enqueue(t, ServerId(i), &mut engine, &mut rec);
+        cluster.enqueue(t, ServerRef::initial(i), &mut engine, &mut rec);
     }
-    let pool: Vec<ServerId> = cluster.general.clone();
+    let pool: Vec<ServerRef> = cluster.general.clone();
     let mut buf = ProbeBuffers::new();
     let mut out = Vec::new();
     let costs = vec![30.0f64; 20];

@@ -18,11 +18,11 @@ use cloudcoaster::cluster::{Cluster, QueuePolicy};
 use cloudcoaster::coordinator::sweep::{paper_points, run_sweep_parallel};
 use cloudcoaster::metrics::Recorder;
 use cloudcoaster::sim::{Engine, Rng};
-use cloudcoaster::util::{JobId, ServerId};
+use cloudcoaster::util::{JobId, ServerRef};
 
 /// The pre-refactor short-pool scan (what `least_loaded_short_ondemand`
 /// and `replace_orphans` did per placement).
-fn naive_short_scan(cluster: &Cluster) -> Option<ServerId> {
+fn naive_short_scan(cluster: &Cluster) -> Option<ServerRef> {
     cluster
         .short_reserved
         .iter()
@@ -35,7 +35,7 @@ fn naive_short_scan(cluster: &Cluster) -> Option<ServerId> {
 
 /// The pre-refactor general-pool scan (what a tree-less least-loaded
 /// placement costs at paper scale).
-fn naive_general_scan(cluster: &Cluster) -> ServerId {
+fn naive_general_scan(cluster: &Cluster) -> ServerRef {
     *cluster
         .general
         .iter()
@@ -49,7 +49,7 @@ fn loaded_cluster(n_general: usize, n_short: usize) -> (Cluster, Engine, Recorde
     let mut rec = Recorder::new(3.0);
     let mut rng = Rng::new(7);
     for i in 0..(n_general + n_short) * 2 {
-        let sid = ServerId((i % (n_general + n_short)) as u32);
+        let sid = ServerRef::initial((i % (n_general + n_short)) as u32);
         let t = cluster.add_task(JobId(0), 1.0 + rng.f64() * 100.0, false, 0.0);
         cluster.enqueue(t, sid, &mut engine, &mut rec);
     }
@@ -130,7 +130,7 @@ fn main() {
         let mut rng = Rng::new(11);
         let r = bench(&format!("refactor/{label}_x5000"), 2, 10, || {
             for i in 0..iters {
-                let sid = ServerId((i % 72) as u32);
+                let sid = ServerRef::initial((i % 72) as u32);
                 let t = cluster.add_task(JobId(0), 0.5 + rng.f64(), false, engine.now());
                 cluster.enqueue(t, sid, &mut engine, &mut rec);
                 // Drain one finish per enqueue: steady state, so the
@@ -150,6 +150,36 @@ fn main() {
             "    {{\"name\": \"{label}_final_slots\", \"slots\": {}, \"peak_resident\": {}}}",
             cluster.task_slots(),
             cluster.peak_resident_tasks()
+        ));
+    }
+
+    // ---- server-arena churn: recycling vs append-only ---------------
+    // Request->ready->drain->retire lifecycle churn: the recycling path
+    // reuses one arena slot (+ one index tree slot) per concurrent
+    // transient, the append-only path grows both per request.
+    for (label, recycle) in
+        [("server_churn_recycling", true), ("server_churn_append_only", false)]
+    {
+        let mut cluster = Cluster::new(16, 4, QueuePolicy::Fifo);
+        cluster.set_server_recycling(recycle);
+        let mut rec = Recorder::new(3.0);
+        let mut now = 0.0f64;
+        let r = bench(&format!("refactor/{label}_x2000"), 1, 10, || {
+            for _ in 0..2000 {
+                let sid = cluster.request_transient(now);
+                cluster.transient_ready(sid, now + 120.0, &mut rec);
+                if cluster.begin_drain(sid) {
+                    cluster.retire(sid, now + 240.0, &mut rec);
+                }
+                now += 300.0;
+                black_box(sid);
+            }
+        });
+        entries.push(json_entry(label, &r));
+        entries.push(format!(
+            "    {{\"name\": \"{label}_final_slots\", \"slots\": {}, \"peak_resident\": {}}}",
+            cluster.server_slots(),
+            cluster.peak_resident_servers()
         ));
     }
 

@@ -1,6 +1,7 @@
-//! The cluster: the server arena, the **generational task arena**,
-//! partitions, and the incremental state the schedulers and the
-//! transient manager read (`N_long`, `N_total`, the long-load ratio).
+//! The cluster: the **generational server arena**, the **generational
+//! task arena**, partitions, and the incremental state the schedulers
+//! and the transient manager read (`N_long`, `N_total`, the long-load
+//! ratio).
 //!
 //! All mutation goes through methods here so the invariants hold by
 //! construction:
@@ -19,22 +20,42 @@
 //! its generation bumped — exactly when the task is `Finished` *and*
 //! its liveness count (queue copies + pending `TaskFinish` events) hits
 //! zero, so the *task arena* is O(peak active tasks), not O(trace).
-//! (Per-task delay samples in the `Recorder` and the server arena —
-//! one slot per transient ever requested — still grow with the run;
-//! see the ROADMAP item on trace-scale memory.) Every settle site
-//! ([`Cluster::try_start_next`] pruning, [`Cluster::on_task_finish`],
-//! [`Cluster::revoke`]) releases its ref through [`Cluster::maybe_free`].
-//! Recycling can be disabled ([`Cluster::set_task_recycling`]) for
-//! golden comparisons; liveness accounting is identical in both modes,
-//! so every simulation observable — including `peak_resident_tasks` —
-//! is bit-identical with recycling on or off.
+//! Every settle site ([`Cluster::try_start_next`] pruning,
+//! [`Cluster::on_task_finish`], [`Cluster::revoke`]) releases its ref
+//! through [`Cluster::maybe_free`]. Recycling can be disabled
+//! ([`Cluster::set_task_recycling`]) for golden comparisons; liveness
+//! accounting is identical in both modes, so every simulation
+//! observable — including `peak_resident_tasks` — is bit-identical
+//! with recycling on or off.
+//!
+//! ## The server arena
+//!
+//! Servers get the same treatment through [`ServerRef`]
+//! (slot + generation). The on-demand prefix (general +
+//! short-reserved) is permanent — those slots never recycle and keep
+//! generation 0 for the whole run. A **retired transient's** slot is
+//! released immediately at [`Cluster::retire`]: its generation bumps
+//! and the slot joins a free list, so a revocation-heavy run's server
+//! arena is bounded by the on-demand size plus *peak concurrent*
+//! transients, not by transients ever requested. Unlike tasks, no
+//! liveness count is needed: every lifecycle event that can outlive
+//! its server (`Revoked`, `RevocationWarning`, `DrainComplete`, a
+//! revoked execution's `TaskFinish`) is generation-checked at pop
+//! ([`Cluster::get_server`]) and resolves to "stale, skip" — it can
+//! never act on the slot's next tenant. The transient pool index
+//! recycles its tree slots in lockstep (`index.rs`), with the
+//! `ready_seq` key component preserving the historical ready-order
+//! tie-break bit-exactly. Recycling is toggleable
+//! ([`Cluster::set_server_recycling`]) for golden comparisons;
+//! `peak_resident_servers` accounting is mode-independent, so every
+//! simulation observable is bit-identical either way.
 
 use crate::cluster::{
     Pool, PoolIndex, QueuePolicy, Server, ServerKind, ServerState, Task, TaskState,
 };
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event};
-use crate::util::{JobId, ServerId, TaskRef, Time};
+use crate::util::{JobId, ServerRef, TaskRef, Time};
 
 /// What a popped `TaskFinish` event resolved to.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -57,30 +78,47 @@ pub enum FinishOutcome {
 
 /// Full simulated-cluster state.
 pub struct Cluster {
+    /// Server arena slots. Addressed through generation-checked
+    /// [`ServerRef`]s ([`Cluster::server`] / [`Cluster::get_server`]);
+    /// retired transient slots recycle.
     pub servers: Vec<Server>,
     /// Task arena slots. Addressed only through generation-checked
     /// [`TaskRef`]s ([`Cluster::task`] / [`Cluster::get_task`]).
     tasks: Vec<Task>,
-    /// Recycled slot indices awaiting reuse (LIFO).
+    /// Recycled task-slot indices awaiting reuse (LIFO).
     free_slots: Vec<u32>,
-    /// Recycle freed slots (default). Off = append-only reference mode
-    /// for the recycling-vs-not golden pin.
+    /// Recycle freed task slots (default). Off = append-only reference
+    /// mode for the recycling-vs-not golden pin.
     recycle: bool,
     /// Slots currently holding a live (not yet released) task.
     resident_tasks: usize,
     /// High-water mark of `resident_tasks` — the arena-memory headline.
     peak_resident_tasks: usize,
+    /// Recycled server-slot indices awaiting reuse (LIFO).
+    free_server_slots: Vec<u32>,
+    /// Recycle retired server slots (default). Off = append-only
+    /// reference mode for the recycling-vs-not golden pin.
+    recycle_servers: bool,
+    /// Server slots currently live (on-demand prefix + transients not
+    /// yet released). Accounting is recycling-mode independent.
+    resident_servers: usize,
+    /// High-water mark of `resident_servers` — the server-arena memory
+    /// headline, bounded by on-demand size + peak concurrent transients.
+    peak_resident_servers: usize,
+    /// Global transient-activation counter: the drain-victim tie-break
+    /// (see `Server::ready_seq`).
+    next_ready_seq: u64,
     pub policy: QueuePolicy,
     /// Servers (Active or Draining) currently hosting >= 1 long task.
     n_long_servers: usize,
     /// Servers currently Active or Draining.
     n_total: usize,
     /// On-demand general partition (long + short), fixed.
-    pub general: Vec<ServerId>,
+    pub general: Vec<ServerRef>,
     /// On-demand short-only partition, fixed ("buffer", §3.1).
-    pub short_reserved: Vec<ServerId>,
+    pub short_reserved: Vec<ServerRef>,
     /// Active transient servers (dynamic short-only partition).
-    pub transient_pool: Vec<ServerId>,
+    pub transient_pool: Vec<ServerRef>,
     /// Per-pool argmin indexes (general / short-reserved / transient) —
     /// O(log N) exact least-loaded queries for every placement path.
     index: PoolIndex,
@@ -94,7 +132,7 @@ impl Cluster {
         let mut general = Vec::with_capacity(n_general);
         let mut short_reserved = Vec::with_capacity(n_short_reserved);
         for i in 0..n_general + n_short_reserved {
-            let id = ServerId(i as u32);
+            let id = ServerRef::initial(i as u32);
             let pool = if i < n_general { Pool::General } else { Pool::ShortReserved };
             servers.push(Server::new(id, ServerKind::OnDemand, pool, ServerState::Active, 0.0));
             if i < n_general {
@@ -105,12 +143,17 @@ impl Cluster {
         }
         Cluster {
             n_total: servers.len(),
+            resident_servers: servers.len(),
+            peak_resident_servers: servers.len(),
             servers,
             tasks: Vec::new(),
             free_slots: Vec::new(),
             recycle: true,
             resident_tasks: 0,
             peak_resident_tasks: 0,
+            free_server_slots: Vec::new(),
+            recycle_servers: true,
+            next_ready_seq: 0,
             policy,
             n_long_servers: 0,
             general,
@@ -120,7 +163,7 @@ impl Cluster {
         }
     }
 
-    /// Toggle slot recycling. Off keeps the arena append-only (the
+    /// Toggle task-slot recycling. Off keeps the arena append-only (the
     /// pre-arena reference behaviour) while leaving every simulation
     /// observable — including liveness accounting and
     /// `peak_resident_tasks` — bit-identical; the golden tests pin that.
@@ -128,13 +171,23 @@ impl Cluster {
         self.recycle = on;
     }
 
+    /// Toggle server-slot recycling (same golden-comparison role as
+    /// [`Cluster::set_task_recycling`]): off keeps one slot per
+    /// transient ever requested, on bounds the arena by peak concurrent
+    /// transients. `peak_resident_servers` accounting and every
+    /// simulation observable are identical in both modes.
+    pub fn set_server_recycling(&mut self, on: bool) {
+        self.recycle_servers = on;
+    }
+
     /// Keep the per-pool argmin indexes in sync after any load change on
     /// `sid` (est_work, queue depth, or running slot).
     #[inline]
-    fn sync_index(&mut self, sid: ServerId) {
-        let (pool, est_work, depth) = {
+    fn sync_index(&mut self, sid: ServerRef) {
+        let (pool, est_work, depth, seq) = {
             let s = &self.servers[sid.index()];
-            (s.pool, s.est_work, s.depth() as u32)
+            debug_assert_eq!(s.id, sid, "sync_index through a stale ServerRef");
+            (s.pool, s.est_work, s.depth() as u32, s.ready_seq)
         };
         match pool {
             Pool::General => self.index.update_general(sid.index(), est_work),
@@ -142,14 +195,14 @@ impl Cluster {
                 self.index.update_short(sid.index() - self.general.len(), est_work)
             }
             // No-op unless the server is indexed (i.e. Active).
-            Pool::TransientPool => self.index.update_transient(sid, (depth, est_work)),
+            Pool::TransientPool => self.index.update_transient(sid, (depth, est_work, seq)),
         }
     }
 
     /// The general-partition server with the least estimated wait — the
     /// centralized scheduler's placement target for long tasks.
     #[inline]
-    pub fn least_loaded_general(&self) -> ServerId {
+    pub fn least_loaded_general(&self) -> ServerRef {
         let slot = self.index.least_loaded_general_slot().expect("empty general partition");
         self.general[slot]
     }
@@ -159,14 +212,15 @@ impl Cluster {
     /// short partition has size zero. The §3.3 duplication target and
     /// the revocation-orphan fallback.
     #[inline]
-    pub fn least_loaded_short_reserved(&self) -> Option<ServerId> {
+    pub fn least_loaded_short_reserved(&self) -> Option<ServerRef> {
         self.index.least_loaded_short_slot().map(|slot| self.short_reserved[slot])
     }
 
-    /// The Active transient server minimizing `(depth, est_work)` — the
-    /// transient manager's drain victim (fastest to free).
+    /// The Active transient server minimizing
+    /// `(depth, est_work, ready_seq)` — the transient manager's drain
+    /// victim (fastest to free, earliest-activated on load ties).
     #[inline]
-    pub fn transient_drain_victim(&self) -> Option<ServerId> {
+    pub fn transient_drain_victim(&self) -> Option<ServerRef> {
         self.index.transient_argmin()
     }
 
@@ -198,9 +252,27 @@ impl Cluster {
         }
     }
 
+    /// Dereference a server handle. Panics if the slot was recycled —
+    /// holding a `ServerRef` across a retire/release point is a caller
+    /// bug; use [`Cluster::get_server`] when staleness is an expected
+    /// outcome (lifecycle events racing a revocation).
     #[inline]
-    pub fn server(&self, id: ServerId) -> &Server {
-        &self.servers[id.index()]
+    pub fn server(&self, id: ServerRef) -> &Server {
+        let s = &self.servers[id.index()];
+        assert_eq!(s.id, id, "stale ServerRef {id:?}: slot was recycled (now {:?})", s.id);
+        s
+    }
+
+    /// Generation-checked dereference: `None` iff the slot has been
+    /// released (and possibly reused) since `id` was issued — i.e. the
+    /// transient retired and its slot recycled. The lifecycle-event
+    /// handlers (`Revoked`, `RevocationWarning`, `DrainComplete`, the
+    /// work stealer's thief check) route through this, so a stale event
+    /// can never act on the slot's next tenant.
+    #[inline]
+    pub fn get_server(&self, id: ServerRef) -> Option<&Server> {
+        let s = self.servers.get(id.index())?;
+        (s.id == id).then_some(s)
     }
 
     /// Dereference a task handle. Panics if the slot was recycled —
@@ -243,11 +315,35 @@ impl Cluster {
         self.tasks.len()
     }
 
+    /// Server slots currently live (on-demand prefix + unreleased
+    /// transients). Mode-independent, like `resident_tasks`.
+    #[inline]
+    pub fn resident_servers(&self) -> usize {
+        self.resident_servers
+    }
+
+    /// High-water mark of resident server slots — with recycling on
+    /// this also bounds the server arena's slot count: on-demand size +
+    /// peak concurrent transients, reported next to
+    /// `peak_resident_tasks` as the second arena-memory headline.
+    #[inline]
+    pub fn peak_resident_servers(&self) -> usize {
+        self.peak_resident_servers
+    }
+
+    /// Server-arena slots ever allocated (== `peak_resident_servers`
+    /// with recycling on; on-demand + transients ever requested with
+    /// recycling off).
+    #[inline]
+    pub fn server_slots(&self) -> usize {
+        self.servers.len()
+    }
+
     /// Does this server currently host any long task? (The "succinct
     /// state" bit Eagle's distributed schedulers use to dodge
     /// head-of-line blocking.)
     #[inline]
-    pub fn has_long(&self, id: ServerId) -> bool {
+    pub fn has_long(&self, id: ServerRef) -> bool {
         self.servers[id.index()].long_tasks > 0
     }
 
@@ -298,7 +394,7 @@ impl Cluster {
     pub fn enqueue(
         &mut self,
         task_id: TaskRef,
-        server_id: ServerId,
+        server_id: ServerRef,
         engine: &mut Engine,
         rec: &mut Recorder,
     ) {
@@ -332,7 +428,7 @@ impl Cluster {
     /// slot is busy or the queue has no runnable entry.
     pub fn try_start_next(
         &mut self,
-        server_id: ServerId,
+        server_id: ServerRef,
         engine: &mut Engine,
         rec: &mut Recorder,
     ) {
@@ -417,7 +513,7 @@ impl Cluster {
     /// them back through the `TaskRef`.
     pub fn on_task_finish(
         &mut self,
-        server_id: ServerId,
+        server_id: ServerRef,
         task_id: TaskRef,
         engine: &mut Engine,
         rec: &mut Recorder,
@@ -477,8 +573,8 @@ impl Cluster {
     /// of their pending shorts.
     pub fn steal_short_tasks(
         &mut self,
-        victim: ServerId,
-        thief: ServerId,
+        victim: ServerRef,
+        thief: ServerRef,
         max_n: usize,
         engine: &mut Engine,
         rec: &mut Recorder,
@@ -524,16 +620,28 @@ impl Cluster {
 
     // ------------------------------------------------- transient servers
 
-    /// Request a new transient server (Provisioning until `TransientReady`).
-    pub fn request_transient(&mut self, now: Time) -> ServerId {
-        let id = ServerId(self.servers.len() as u32);
-        self.servers.push(Server::new(
-            id,
-            ServerKind::Transient,
-            Pool::TransientPool,
-            ServerState::Provisioning,
-            now,
-        ));
+    /// Request a new transient server (Provisioning until
+    /// `TransientReady`), reusing a recycled arena slot when one is
+    /// free. The returned handle carries the slot's live generation;
+    /// stale handles from earlier tenants no longer dereference.
+    pub fn request_transient(&mut self, now: Time) -> ServerRef {
+        self.resident_servers += 1;
+        self.peak_resident_servers = self.peak_resident_servers.max(self.resident_servers);
+        let id = if let Some(slot) = self.free_server_slots.pop() {
+            // The generation was bumped at release; reuse it as-is so
+            // every pre-release handle stays invalid.
+            let gen = self.servers[slot as usize].id.gen;
+            ServerRef { slot, gen }
+        } else {
+            ServerRef::initial(self.servers.len() as u32)
+        };
+        let server =
+            Server::new(id, ServerKind::Transient, Pool::TransientPool, ServerState::Provisioning, now);
+        if id.index() == self.servers.len() {
+            self.servers.push(server);
+        } else {
+            self.servers[id.index()] = server;
+        }
         id
     }
 
@@ -546,14 +654,19 @@ impl Cluster {
     }
 
     /// Provisioning finished: the server joins the dynamic short pool
-    /// (and the transient load index, in ready order).
-    pub fn transient_ready(&mut self, id: ServerId, now: Time, rec: &mut Recorder) {
+    /// (and the transient load index), stamped with the next global
+    /// activation number — the index's ready-order tie-break.
+    pub fn transient_ready(&mut self, id: ServerRef, now: Time, rec: &mut Recorder) {
+        let seq = self.next_ready_seq;
+        self.next_ready_seq += 1;
         let key = {
             let server = &mut self.servers[id.index()];
+            debug_assert_eq!(server.id, id, "transient_ready through a stale ServerRef");
             debug_assert_eq!(server.state, ServerState::Provisioning);
             server.state = ServerState::Active;
             server.active_at = now;
-            (server.depth() as u32, server.est_work)
+            server.ready_seq = seq;
+            (server.depth() as u32, server.est_work, seq)
         };
         self.transient_pool.push(id);
         self.index.insert_transient(id, key);
@@ -563,7 +676,7 @@ impl Cluster {
 
     /// Begin graceful release: stop accepting, finish queued work (§3.2).
     /// Returns true if the server was already idle (caller retires it).
-    pub fn begin_drain(&mut self, id: ServerId) -> bool {
+    pub fn begin_drain(&mut self, id: ServerRef) -> bool {
         let server = &mut self.servers[id.index()];
         debug_assert_eq!(server.state, ServerState::Active);
         debug_assert_eq!(server.kind, ServerKind::Transient);
@@ -574,11 +687,16 @@ impl Cluster {
         self.servers[id.index()].is_idle()
     }
 
-    /// Final shutdown of a drained/revoked transient server.
-    pub fn retire(&mut self, id: ServerId, now: Time, rec: &mut Recorder) {
+    /// Final shutdown of a drained/revoked transient server. The arena
+    /// slot is released here: generation bumped (recycling on) and the
+    /// slot queued for reuse, so pending lifecycle events addressed to
+    /// this incarnation resolve as stale via the generation check.
+    pub fn retire(&mut self, id: ServerRef, now: Time, rec: &mut Recorder) {
         let server = &mut self.servers[id.index()];
+        debug_assert_eq!(server.id, id, "retire through a stale ServerRef");
         debug_assert!(matches!(server.state, ServerState::Draining | ServerState::Active));
         debug_assert_eq!(server.kind, ServerKind::Transient);
+        debug_assert!(server.is_idle(), "retire of a busy server");
         if server.long_tasks > 0 {
             self.n_long_servers -= 1; // should not happen: transients are short-only
         }
@@ -589,6 +707,13 @@ impl Cluster {
         self.index.remove_transient(id); // no-op if drain already removed it
         self.n_total -= 1;
         rec.cost.transient_down(now, lifetime);
+        // Release the arena slot. Mode-independent residency accounting;
+        // only the generation bump + free-list push depend on the mode.
+        self.resident_servers -= 1;
+        if self.recycle_servers {
+            self.servers[id.index()].id.gen = id.gen.wrapping_add(1);
+            self.free_server_slots.push(id.slot);
+        }
     }
 
     /// Revoke a transient server immediately (provider reclaim, §3.3).
@@ -599,7 +724,7 @@ impl Cluster {
     /// `TaskFinish` event stays in the queue as a liveness ref — it pops
     /// later, resolves [`FinishOutcome::Stale`], and only then can the
     /// slot recycle.
-    pub fn revoke(&mut self, id: ServerId, now: Time, rec: &mut Recorder) -> Vec<TaskRef> {
+    pub fn revoke(&mut self, id: ServerRef, now: Time, rec: &mut Recorder) -> Vec<TaskRef> {
         let mut orphans = Vec::new();
         let (queued, running): (Vec<TaskRef>, Option<TaskRef>) = {
             let server = &self.servers[id.index()];
@@ -635,7 +760,7 @@ impl Cluster {
                 // on-demand server — the task resurrects there. Restore
                 // the load-estimate contribution discounted at start.
                 let dur = task.duration;
-                let locs: Vec<ServerId> = task.placed_on.iter().flatten().copied().collect();
+                let locs: Vec<ServerRef> = task.placed_on.iter().flatten().copied().collect();
                 for loc in locs {
                     self.servers[loc.index()].est_work += dur;
                     self.sync_index(loc);
@@ -678,9 +803,41 @@ impl Cluster {
             assert!(self.resident_tasks <= self.tasks.len());
         }
         assert!(self.peak_resident_tasks >= self.resident_tasks);
+        // Server-arena accounting (the server twin of the task checks).
+        let free_servers: HashSet<u32> = self.free_server_slots.iter().copied().collect();
+        assert_eq!(
+            free_servers.len(),
+            self.free_server_slots.len(),
+            "duplicate slots on the server free list"
+        );
+        if self.recycle_servers {
+            assert_eq!(
+                self.resident_servers + self.free_server_slots.len(),
+                self.servers.len(),
+                "server resident/free accounting drift"
+            );
+        } else {
+            assert!(
+                self.free_server_slots.is_empty(),
+                "server free list populated with recycling off"
+            );
+            assert!(self.resident_servers <= self.servers.len());
+        }
+        assert!(self.peak_resident_servers >= self.resident_servers);
+        assert!(
+            self.resident_servers >= self.general.len() + self.short_reserved.len(),
+            "on-demand prefix released"
+        );
         let mut n_long = 0;
         let mut n_total = 0;
         for (i, s) in self.servers.iter().enumerate() {
+            assert_eq!(s.id.index(), i, "server id/slot drift at {i}");
+            if free_servers.contains(&(i as u32)) {
+                // Released slot awaiting reuse: payload is the retired
+                // previous tenant; no live invariants apply.
+                assert_eq!(s.state, ServerState::Retired, "freed server slot not Retired");
+                continue;
+            }
             if i < self.general.len() {
                 assert!(
                     (self.index.general_key(i) - s.est_work).abs() < 1e-9,
@@ -693,7 +850,7 @@ impl Cluster {
                 );
             }
             if s.kind == ServerKind::Transient {
-                // Indexed iff Active; key mirrors (depth, est_work).
+                // Indexed iff Active; key mirrors (depth, est_work, seq).
                 let indexed = self.index.contains_transient(s.id);
                 assert_eq!(
                     indexed,
@@ -702,13 +859,14 @@ impl Cluster {
                     s.id,
                     s.state
                 );
-                if let Some((depth, est)) = self.index.transient_key(s.id) {
+                if let Some((depth, est, seq)) = self.index.transient_key(s.id) {
                     assert_eq!(depth as usize, s.depth(), "transient depth drift on {:?}", s.id);
                     assert!(
                         (est - s.est_work).abs() < 1e-9,
                         "transient est_work drift on {:?}",
                         s.id
                     );
+                    assert_eq!(seq, s.ready_seq, "transient ready_seq drift on {:?}", s.id);
                 }
             }
             if matches!(s.state, ServerState::Active | ServerState::Draining) {
@@ -778,9 +936,16 @@ impl Cluster {
 mod tests {
     use super::*;
 
+    /// Generation-0 handle for the fixed on-demand prefix (and the
+    /// first incarnation of transient slots).
+    fn sref(slot: u32) -> ServerRef {
+        ServerRef::initial(slot)
+    }
+
     fn setup() -> (Cluster, Engine, Recorder) {
         let cluster = Cluster::new(4, 2, QueuePolicy::Fifo);
-        (cluster, Engine::new(), Recorder::new(3.0))
+        // Exact delay backend: these unit tests inspect raw samples.
+        (cluster, Engine::new(), Recorder::new_exact(3.0))
     }
 
     fn drain_events(c: &mut Cluster, e: &mut Engine, r: &mut Recorder) {
@@ -806,13 +971,13 @@ mod tests {
     fn enqueue_starts_immediately_when_idle() {
         let (mut c, mut e, mut r) = setup();
         let t = c.add_task(JobId(0), 10.0, false, 0.0);
-        c.enqueue(t, ServerId(0), &mut e, &mut r);
+        c.enqueue(t, sref(0), &mut e, &mut r);
         assert_eq!(c.task(t).state, TaskState::Running);
-        assert_eq!(c.server(ServerId(0)).running, Some(t));
+        assert_eq!(c.server(sref(0)).running, Some(t));
         // TaskFinish scheduled at t=10
         assert_eq!(e.peek_time(), Some(10.0));
         assert_eq!(r.short_delays.len(), 1);
-        assert_eq!(r.short_delays.as_slice()[0], 0.0);
+        assert_eq!(r.short_delays.samples().unwrap()[0], 0.0);
         c.check_invariants();
     }
 
@@ -821,8 +986,8 @@ mod tests {
         let (mut c, mut e, mut r) = setup();
         let t1 = c.add_task(JobId(0), 10.0, false, 0.0);
         let t2 = c.add_task(JobId(0), 5.0, false, 0.0);
-        c.enqueue(t1, ServerId(0), &mut e, &mut r);
-        c.enqueue(t2, ServerId(0), &mut e, &mut r);
+        c.enqueue(t1, sref(0), &mut e, &mut r);
+        c.enqueue(t2, sref(0), &mut e, &mut r);
         let (_, ev) = e.pop().unwrap(); // t1 finish at 10.0
         match ev {
             Event::TaskFinish { server, task } => {
@@ -845,7 +1010,7 @@ mod tests {
         for wave in 0..3 {
             let t = c.add_task(JobId(wave), 5.0, false, 0.0);
             refs.push(t);
-            c.enqueue(t, ServerId(0), &mut e, &mut r);
+            c.enqueue(t, sref(0), &mut e, &mut r);
             drain_events(&mut c, &mut e, &mut r);
             c.check_invariants();
         }
@@ -865,7 +1030,7 @@ mod tests {
         c.set_task_recycling(false);
         for wave in 0..3 {
             let t = c.add_task(JobId(wave), 5.0, false, 0.0);
-            c.enqueue(t, ServerId(0), &mut e, &mut r);
+            c.enqueue(t, sref(0), &mut e, &mut r);
             drain_events(&mut c, &mut e, &mut r);
             c.check_invariants();
         }
@@ -880,12 +1045,12 @@ mod tests {
     fn long_load_ratio_tracks_long_tasks() {
         let (mut c, mut e, mut r) = setup();
         let t = c.add_task(JobId(0), 100.0, true, 0.0);
-        c.enqueue(t, ServerId(1), &mut e, &mut r);
+        c.enqueue(t, sref(1), &mut e, &mut r);
         assert_eq!(c.n_long_servers(), 1);
         assert!((c.long_load_ratio() - 1.0 / 6.0).abs() < 1e-12);
         // Second long task on the same server doesn't double count.
         let t2 = c.add_task(JobId(0), 100.0, true, 0.0);
-        c.enqueue(t2, ServerId(1), &mut e, &mut r);
+        c.enqueue(t2, sref(1), &mut e, &mut r);
         assert_eq!(c.n_long_servers(), 1);
         // Finish both -> ratio back to 0.
         drain_events(&mut c, &mut e, &mut r);
@@ -912,7 +1077,7 @@ mod tests {
         assert_eq!(c.n_total(), 6);
         assert!(c.transient_pool.is_empty());
         assert_eq!(r.cost.lifetimes.len(), 1);
-        assert!((r.cost.lifetimes[0] - 80.0).abs() < 1e-12);
+        assert!((r.cost.lifetimes.samples().unwrap()[0] - 80.0).abs() < 1e-12);
         c.check_invariants();
     }
 
@@ -921,12 +1086,12 @@ mod tests {
         let (mut c, mut e, mut r) = setup();
         // Occupy server 0 so the copy there queues.
         let blocker = c.add_task(JobId(0), 50.0, false, 0.0);
-        c.enqueue(blocker, ServerId(0), &mut e, &mut r);
+        c.enqueue(blocker, sref(0), &mut e, &mut r);
         let t = c.add_task(JobId(1), 10.0, false, 0.0);
-        c.enqueue(t, ServerId(0), &mut e, &mut r); // queued copy
-        c.enqueue(t, ServerId(1), &mut e, &mut r); // starts immediately
+        c.enqueue(t, sref(0), &mut e, &mut r); // queued copy
+        c.enqueue(t, sref(1), &mut e, &mut r); // starts immediately
         assert_eq!(c.task(t).state, TaskState::Running);
-        assert_eq!(c.task(t).ran_on, Some(ServerId(1)));
+        assert_eq!(c.task(t).ran_on, Some(sref(1)));
         assert_eq!(c.task(t).copies, 1); // stale copy still queued on 0
         // Run the world; the stale copy must be skipped, not re-run.
         drain_events(&mut c, &mut e, &mut r);
@@ -952,7 +1117,7 @@ mod tests {
         let orphans = c.revoke(sid, 10.0, &mut r);
         assert_eq!(orphans, vec![t]);
         assert_eq!(c.task(t).pending_finishes, 1, "stale finish must pin the slot");
-        c.enqueue(t, ServerId(0), &mut e, &mut r);
+        c.enqueue(t, sref(0), &mut e, &mut r);
         // Drain: the stale finish pops first (t=30), then the real one
         // (t=40). The task finishes exactly once, and only after the
         // stale event settles can the slot recycle.
@@ -988,10 +1153,10 @@ mod tests {
         // Occupy both so copies stay queued.
         let b0 = c.add_task(JobId(0), 100.0, false, 0.0);
         let b1 = c.add_task(JobId(0), 100.0, false, 0.0);
-        c.enqueue(b0, ServerId(4), &mut e, &mut r);
+        c.enqueue(b0, sref(4), &mut e, &mut r);
         c.enqueue(b1, sid, &mut e, &mut r);
         c.enqueue(a, sid, &mut e, &mut r);
-        c.enqueue(a, ServerId(4), &mut e, &mut r);
+        c.enqueue(a, sref(4), &mut e, &mut r);
         // Task C: only copy on the transient (unsafe).
         let cc = c.add_task(JobId(0), 30.0, false, 0.0);
         c.enqueue(cc, sid, &mut e, &mut r);
@@ -1017,5 +1182,95 @@ mod tests {
         c.begin_drain(sid);
         let t = c.add_task(JobId(0), 10.0, false, 0.0);
         c.enqueue(t, sid, &mut e, &mut r);
+    }
+
+    #[test]
+    fn retired_server_slots_recycle_and_peak_tracks_active() {
+        let (mut c, _, mut r) = setup();
+        // Three sequential transient lifecycles: the arena should
+        // recycle a single slot, not grow per request.
+        let mut refs = Vec::new();
+        for wave in 0..3 {
+            let sid = c.request_transient(wave as f64 * 100.0);
+            refs.push(sid);
+            c.transient_ready(sid, wave as f64 * 100.0 + 10.0, &mut r);
+            assert!(c.begin_drain(sid), "idle transient should drain instantly");
+            c.retire(sid, wave as f64 * 100.0 + 20.0, &mut r);
+            c.check_invariants();
+        }
+        assert_eq!(c.server_slots(), 7, "server slots grew despite recycling");
+        assert_eq!(c.peak_resident_servers(), 7); // 6 on-demand + 1 transient
+        assert_eq!(c.resident_servers(), 6);
+        // All three incarnations shared one slot under distinct gens.
+        assert_eq!(refs[0].slot, refs[1].slot);
+        assert_eq!(refs[1].slot, refs[2].slot);
+        assert_ne!(refs[0].gen, refs[1].gen);
+        for sid in refs {
+            assert!(c.get_server(sid).is_none(), "released server handle still dereferences");
+        }
+        // The transient index recycled its tree slot in lockstep.
+        assert_eq!(c.pool_index().transient_tree_slots(), 1);
+        assert_eq!(r.cost.lifetimes.len(), 3);
+    }
+
+    #[test]
+    fn server_recycling_off_keeps_arena_append_only() {
+        let (mut c, _, mut r) = setup();
+        c.set_server_recycling(false);
+        for wave in 0..3 {
+            let sid = c.request_transient(wave as f64 * 100.0);
+            c.transient_ready(sid, wave as f64 * 100.0 + 10.0, &mut r);
+            assert!(c.begin_drain(sid));
+            c.retire(sid, wave as f64 * 100.0 + 20.0, &mut r);
+            c.check_invariants();
+        }
+        assert_eq!(c.server_slots(), 9); // 6 on-demand + 3 appended
+        // Residency accounting is mode-independent: same peak, same
+        // post-run residency as the recycling run.
+        assert_eq!(c.peak_resident_servers(), 7);
+        assert_eq!(c.resident_servers(), 6);
+    }
+
+    #[test]
+    fn stale_server_handles_fail_generation_checks_after_reuse() {
+        let (mut c, mut e, mut r) = setup();
+        let first = c.request_transient(0.0);
+        c.transient_ready(first, 0.0, &mut r);
+        let orphans = c.revoke(first, 5.0, &mut r);
+        assert!(orphans.is_empty());
+        assert!(c.get_server(first).is_none(), "revoked server slot still live");
+        // The slot's next tenant must be invisible through the old ref.
+        let second = c.request_transient(10.0);
+        assert_eq!(second.slot, first.slot);
+        assert_ne!(second.gen, first.gen);
+        c.transient_ready(second, 10.0, &mut r);
+        assert!(c.get_server(first).is_none());
+        assert_eq!(c.get_server(second).map(|s| s.state), Some(ServerState::Active));
+        // A task placed on the new incarnation runs there; the old ref
+        // never aliases it.
+        let t = c.add_task(JobId(0), 5.0, false, 10.0);
+        c.enqueue(t, second, &mut e, &mut r);
+        assert_eq!(c.task(t).ran_on, Some(second));
+        assert_ne!(c.task(t).ran_on, Some(first));
+        c.check_invariants();
+    }
+
+    #[test]
+    fn drain_victim_tiebreak_follows_activation_order_across_reuse() {
+        let (mut c, _, mut r) = setup();
+        // a, b active; retire a (frees the lower arena slot), then c
+        // reuses it. All idle: the victim must be b (earlier activation),
+        // not c, even though c occupies the lower slot.
+        let a = c.request_transient(0.0);
+        c.transient_ready(a, 0.0, &mut r);
+        let b = c.request_transient(0.0);
+        c.transient_ready(b, 1.0, &mut r);
+        assert!(c.begin_drain(a));
+        c.retire(a, 2.0, &mut r);
+        let cc = c.request_transient(3.0);
+        assert_eq!(cc.slot, a.slot);
+        c.transient_ready(cc, 4.0, &mut r);
+        assert_eq!(c.transient_drain_victim(), Some(b));
+        c.check_invariants();
     }
 }

@@ -8,24 +8,30 @@
 //! replace (`Iterator::min_by` first-minimal == lowest slot index):
 //!
 //! * **general** — keyed by `est_work`; slot = position in
-//!   `Cluster::general` (== the server id for the id-compact prefix).
+//!   `Cluster::general` (== the server slot for the id-compact prefix).
 //!   Serves the centralized long-task placement and the degenerate
 //!   probe fallbacks.
 //! * **short-reserved** — keyed by `est_work`; slot = position in
 //!   `Cluster::short_reserved`. Serves the §3.3 on-demand duplication
 //!   target and revocation-orphan replacement.
-//! * **transient** — keyed by lexicographic `(depth, est_work)`; slots
-//!   are assigned append-only in `TransientReady` order and tombstoned
-//!   on drain/retire (never reused), so the argmin's lowest-slot
-//!   tie-break reproduces the manager's first-minimal scan over
-//!   `transient_pool` exactly. Serves the drain-victim query.
+//! * **transient** — keyed by lexicographic
+//!   `(depth, est_work, ready_seq)`; `ready_seq` is the server's global
+//!   activation number, unique per activation, so exact ties are
+//!   impossible and the argmin reproduces the manager's first-minimal
+//!   "ready order" scan regardless of how tree slots are laid out.
+//!   That independence is what lets tree slots be **recycled** through
+//!   a free list when a transient drains or retires: the index is
+//!   bounded by peak *concurrent* Active transients, not by transients
+//!   ever requested — the index-side half of the server-arena
+//!   recycling story (see `cluster.rs`).
 
-use crate::util::{IndexKey, MinTree, ServerId};
+use crate::util::{IndexKey, MinTree, ServerRef};
 
 const NO_SLOT: u32 = u32::MAX;
 
-/// Transient-tree key: `(queue depth, est_work)` — "fastest to free".
-pub type TransientKey = (u32, f64);
+/// Transient-tree key: `(queue depth, est_work, ready_seq)` —
+/// "fastest to free", activation order on exact load ties.
+pub type TransientKey = (u32, f64, u64);
 
 /// The cluster's three per-pool argmin indexes.
 #[derive(Clone, Debug)]
@@ -35,12 +41,16 @@ pub struct PoolIndex {
     general: MinTree<f64>,
     short: MinTree<f64>,
     transient: MinTree<TransientKey>,
-    /// First transient server id (= n_general + n_short at construction).
+    /// First transient server slot (= n_general + n_short at construction).
     t_base: usize,
-    /// `server_id.index() - t_base` -> slot in the transient tree.
+    /// `server.slot - t_base` -> slot in the transient tree. Entries
+    /// are per server-arena slot, so this stays bounded by the server
+    /// arena (which recycles), not by transients ever requested.
     t_slot: Vec<u32>,
-    /// slot -> server id (grows append-only with inserts).
-    t_server: Vec<ServerId>,
+    /// Tree slot -> server handle of the current occupant.
+    t_server: Vec<ServerRef>,
+    /// Recycled tree slots awaiting reuse (LIFO).
+    t_free: Vec<u32>,
     /// Occupied (non-tombstoned) transient slots.
     t_len: usize,
 }
@@ -59,6 +69,7 @@ impl PoolIndex {
             t_base: n_general + n_short,
             t_slot: Vec::new(),
             t_server: Vec::new(),
+            t_free: Vec::new(),
             t_len: 0,
         }
     }
@@ -105,43 +116,59 @@ impl PoolIndex {
 
     // ----------------------------------------------------------- transient
 
-    /// Register a transient server that just became Active.
-    pub fn insert_transient(&mut self, sid: ServerId, key: TransientKey) {
+    /// Register a transient server that just became Active, reusing a
+    /// recycled tree slot when one is free.
+    pub fn insert_transient(&mut self, sid: ServerRef, key: TransientKey) {
         let rel = sid.index() - self.t_base;
         if rel >= self.t_slot.len() {
             self.t_slot.resize(rel + 1, NO_SLOT);
         }
         debug_assert_eq!(self.t_slot[rel], NO_SLOT, "double insert of {sid:?}");
-        let slot = self.t_server.len();
-        if slot == self.transient.len() {
-            self.grow_transient();
-        }
+        let slot = match self.t_free.pop() {
+            Some(slot) => {
+                self.t_server[slot as usize] = sid;
+                slot as usize
+            }
+            None => {
+                let slot = self.t_server.len();
+                if slot == self.transient.len() {
+                    self.grow_transient();
+                }
+                self.t_server.push(sid);
+                slot
+            }
+        };
         self.t_slot[rel] = slot as u32;
-        self.t_server.push(sid);
         self.transient.update(slot, key);
         self.t_len += 1;
     }
 
     /// Drop a transient server from the index (drain begun, retired or
-    /// revoked). Idempotent: the drain and retire paths may both call it.
-    pub fn remove_transient(&mut self, sid: ServerId) {
+    /// revoked), releasing its tree slot for reuse. Idempotent (the
+    /// drain and retire paths may both call it), and generation-guarded
+    /// like the read paths: a stale handle whose arena slot has been
+    /// recycled must not tombstone — or double-free the tree slot of —
+    /// the slot's new tenant.
+    pub fn remove_transient(&mut self, sid: ServerRef) {
         let Some(rel) = sid.index().checked_sub(self.t_base) else { return };
         let Some(&slot) = self.t_slot.get(rel) else { return };
-        if slot == NO_SLOT {
+        if slot == NO_SLOT || self.t_server[slot as usize] != sid {
             return;
         }
         self.t_slot[rel] = NO_SLOT;
         self.transient.update(slot as usize, TransientKey::MAX_KEY);
+        self.t_free.push(slot);
         self.t_len -= 1;
     }
 
     /// Refresh a transient server's key; no-op if it is not indexed
-    /// (provisioning, draining or retired).
+    /// (provisioning, draining or retired). Generation-guarded: a stale
+    /// handle must not re-key the slot's new tenant.
     #[inline]
-    pub fn update_transient(&mut self, sid: ServerId, key: TransientKey) {
+    pub fn update_transient(&mut self, sid: ServerRef, key: TransientKey) {
         let Some(rel) = sid.index().checked_sub(self.t_base) else { return };
         if let Some(&slot) = self.t_slot.get(rel) {
-            if slot != NO_SLOT {
+            if slot != NO_SLOT && self.t_server[slot as usize] == sid {
                 self.transient.update(slot as usize, key);
             }
         }
@@ -149,11 +176,11 @@ impl PoolIndex {
 
     /// Is this transient server currently indexed?
     #[inline]
-    pub fn contains_transient(&self, sid: ServerId) -> bool {
+    pub fn contains_transient(&self, sid: ServerRef) -> bool {
         sid.index()
             .checked_sub(self.t_base)
             .and_then(|rel| self.t_slot.get(rel))
-            .is_some_and(|&slot| slot != NO_SLOT)
+            .is_some_and(|&slot| slot != NO_SLOT && self.t_server[slot as usize] == sid)
     }
 
     /// Number of indexed (Active) transient servers.
@@ -162,23 +189,33 @@ impl PoolIndex {
         self.t_len
     }
 
-    /// The Active transient server minimizing `(depth, est_work)` — the
-    /// manager's drain victim ("fastest to free"). First-minimal in
-    /// `TransientReady` order on exact ties, like the scan it replaces.
+    /// Tree slots ever allocated — bounded by peak concurrent Active
+    /// transients (tree slots recycle), the index-memory headline.
     #[inline]
-    pub fn transient_argmin(&self) -> Option<ServerId> {
+    pub fn transient_tree_slots(&self) -> usize {
+        self.t_server.len()
+    }
+
+    /// The Active transient server minimizing
+    /// `(depth, est_work, ready_seq)` — the manager's drain victim
+    /// ("fastest to free"), earliest-activated on load ties, exactly
+    /// like the scan it replaced.
+    #[inline]
+    pub fn transient_argmin(&self) -> Option<ServerRef> {
         (self.t_len > 0).then(|| self.t_server[self.transient.argmin()])
     }
 
     #[inline]
-    pub fn transient_key(&self, sid: ServerId) -> Option<TransientKey> {
+    pub fn transient_key(&self, sid: ServerRef) -> Option<TransientKey> {
         let rel = sid.index().checked_sub(self.t_base)?;
         let &slot = self.t_slot.get(rel)?;
-        (slot != NO_SLOT).then(|| self.transient.key(slot as usize))
+        (slot != NO_SLOT && self.t_server[slot as usize] == sid)
+            .then(|| self.transient.key(slot as usize))
     }
 
     /// Double the transient tree, carrying over live keys and tombstones
-    /// (slot order — and therefore tie-breaking — is preserved).
+    /// (slot positions are preserved; with seq-tagged keys the argmin
+    /// never depends on slot order anyway).
     fn grow_transient(&mut self) {
         let old_cap = self.transient.len();
         let mut bigger = tombstoned_tree(old_cap * 2);
@@ -202,8 +239,13 @@ fn tombstoned_tree(cap: usize) -> MinTree<TransientKey> {
 mod tests {
     use super::*;
 
-    fn sid(i: usize) -> ServerId {
-        ServerId(i as u32)
+    fn sid(i: usize) -> ServerRef {
+        ServerRef::initial(i as u32)
+    }
+
+    /// Key helper: idle server activated as the `seq`-th transient.
+    fn idle(seq: u64) -> TransientKey {
+        (0, 0.0, seq)
     }
 
     #[test]
@@ -233,15 +275,15 @@ mod tests {
 
     #[test]
     fn transient_lifecycle_and_tiebreak() {
-        let mut idx = PoolIndex::new(3, 1); // transients start at id 4
-        idx.insert_transient(sid(4), (0, 0.0));
-        idx.insert_transient(sid(5), (0, 0.0));
-        idx.insert_transient(sid(6), (0, 0.0));
-        // Exact tie -> first in ready order.
+        let mut idx = PoolIndex::new(3, 1); // transients start at slot 4
+        idx.insert_transient(sid(4), idle(0));
+        idx.insert_transient(sid(5), idle(1));
+        idx.insert_transient(sid(6), idle(2));
+        // Load tie -> earliest activation (lowest seq).
         assert_eq!(idx.transient_argmin(), Some(sid(4)));
-        idx.update_transient(sid(4), (2, 40.0));
-        idx.update_transient(sid(5), (1, 99.0));
-        idx.update_transient(sid(6), (1, 98.0));
+        idx.update_transient(sid(4), (2, 40.0, 0));
+        idx.update_transient(sid(5), (1, 99.0, 1));
+        idx.update_transient(sid(6), (1, 98.0, 2));
         // depth dominates est_work; 6 beats 5 on est_work.
         assert_eq!(idx.transient_argmin(), Some(sid(6)));
         idx.remove_transient(sid(6));
@@ -254,30 +296,65 @@ mod tests {
         assert!(!idx.contains_transient(sid(6)));
         assert!(idx.contains_transient(sid(5)));
         // Updates to removed servers are no-ops.
-        idx.update_transient(sid(6), (0, 0.0));
+        idx.update_transient(sid(6), idle(9));
         assert_eq!(idx.transient_argmin(), Some(sid(5)));
     }
 
     #[test]
-    fn transient_slots_are_never_reused() {
-        let mut idx = PoolIndex::new(1, 1); // transients start at id 2
-        for i in 0..40 {
-            idx.insert_transient(sid(2 + i), (0, i as f64));
-            if i % 2 == 0 {
-                idx.remove_transient(sid(2 + i));
-            }
+    fn tree_slots_recycle_and_stay_bounded() {
+        let mut idx = PoolIndex::new(1, 1); // transients start at slot 2
+        // Sequential lifecycle: never more than one Active at a time,
+        // so the tree must stay at one allocated slot.
+        for i in 0..40u64 {
+            let s = sid(2); // server arena would also recycle slot 2
+            idx.insert_transient(s, idle(i));
+            assert_eq!(idx.transient_argmin(), Some(s));
+            idx.remove_transient(s);
+            assert_eq!(idx.transient_len(), 0);
         }
-        assert_eq!(idx.transient_len(), 20);
-        // Lowest surviving (depth, est_work) is id 3 (est 1.0).
+        assert_eq!(idx.transient_tree_slots(), 1, "tree slots grew past peak-active");
+    }
+
+    #[test]
+    fn seq_ties_are_slot_order_independent() {
+        // Deliberately interleave removals so reused tree slots hold
+        // later activations: the argmin must still follow seq.
+        let mut idx = PoolIndex::new(1, 1);
+        idx.insert_transient(sid(2), idle(0));
+        idx.insert_transient(sid(3), idle(1));
+        idx.remove_transient(sid(2)); // frees tree slot 0
+        idx.insert_transient(sid(4), idle(2)); // lands in tree slot 0
+        // All idle: seq 1 (server 3) precedes seq 2 (server 4) even
+        // though server 4 occupies the lower tree slot.
         assert_eq!(idx.transient_argmin(), Some(sid(3)));
-        // Growth preserved every live key.
-        for i in 0..40 {
-            let key = idx.transient_key(sid(2 + i));
-            if i % 2 == 0 {
-                assert_eq!(key, None);
-            } else {
-                assert_eq!(key, Some((0, i as f64)));
-            }
-        }
+        idx.remove_transient(sid(3));
+        assert_eq!(idx.transient_argmin(), Some(sid(4)));
+        assert_eq!(idx.transient_tree_slots(), 2);
+    }
+
+    #[test]
+    fn stale_handles_cannot_mutate_a_recycled_slots_new_tenant() {
+        // Arena slot 2 recycles: the old-generation handle must be a
+        // no-op on BOTH mutating paths, not just the reads.
+        let mut idx = PoolIndex::new(1, 1);
+        let old = ServerRef { slot: 2, gen: 0 };
+        idx.insert_transient(old, idle(0));
+        idx.remove_transient(old);
+        let new = ServerRef { slot: 2, gen: 1 };
+        idx.insert_transient(new, idle(1));
+        // Stale remove: the new tenant stays indexed, no double-free.
+        idx.remove_transient(old);
+        assert_eq!(idx.transient_len(), 1);
+        assert!(idx.contains_transient(new));
+        assert_eq!(idx.transient_argmin(), Some(new));
+        // Stale update: the new tenant's key is untouched.
+        idx.update_transient(old, (9, 9.0, 9));
+        assert_eq!(idx.transient_key(new), Some(idle(1)));
+        assert_eq!(idx.transient_key(old), None);
+        // Live mutations still work.
+        idx.update_transient(new, (1, 2.0, 1));
+        assert_eq!(idx.transient_key(new), Some((1, 2.0, 1)));
+        idx.remove_transient(new);
+        assert_eq!(idx.transient_len(), 0);
     }
 }

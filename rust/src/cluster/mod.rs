@@ -1,8 +1,11 @@
 //! Cluster substrate: servers (on-demand + transient), per-server queues
-//! with Eagle-style SRPT discipline, partitions, the **generational task
-//! arena** (finished slots recycle once their queue copies and pending
-//! finish events settle, so memory is O(active tasks)), and the
-//! incrementally-maintained long-load-ratio state.
+//! with Eagle-style SRPT discipline, partitions, and the two
+//! **generational slot arenas** that make resident memory load-bound:
+//! the task arena (a finished slot recycles once its queue copies and
+//! pending finish events settle) and the server arena (a retired
+//! transient's slot recycles immediately; stale lifecycle events fail
+//! the generation check). Plus the incrementally-maintained
+//! long-load-ratio state and the per-pool argmin indexes.
 
 #[allow(clippy::module_inception)]
 mod cluster;

@@ -4,7 +4,7 @@
 use std::collections::VecDeque;
 
 use crate::cluster::{Task, TaskState};
-use crate::util::{ServerId, TaskRef, Time};
+use crate::util::{ServerRef, TaskRef, Time};
 
 /// Purchase class of a server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,9 +52,16 @@ pub enum QueuePolicy {
 }
 
 /// One simulated server: a single execution slot plus a queue.
+///
+/// Servers live in a slot arena owned by [`crate::cluster::Cluster`]:
+/// `id` is the slot's *current identity* (slot index + generation), the
+/// server twin of the task arena — a retired transient's slot is
+/// released and its generation bumped, so stale [`ServerRef`]s from
+/// already-popped lifecycle events fail the generation check instead of
+/// acting on the slot's next tenant.
 #[derive(Clone, Debug)]
 pub struct Server {
-    pub id: ServerId,
+    pub id: ServerRef,
     pub kind: ServerKind,
     pub pool: Pool,
     pub state: ServerState,
@@ -73,10 +80,15 @@ pub struct Server {
     pub active_at: Time,
     /// When the server retired.
     pub retired_at: Time,
+    /// Global activation order (assigned at `TransientReady`): the
+    /// transient drain-victim tie-break. Unique per activation, so the
+    /// pool index's argmin is independent of slot reuse and reproduces
+    /// the historical "first-minimal in ready order" scan bit-exactly.
+    pub ready_seq: u64,
 }
 
 impl Server {
-    pub fn new(id: ServerId, kind: ServerKind, pool: Pool, state: ServerState, now: Time) -> Self {
+    pub fn new(id: ServerRef, kind: ServerKind, pool: Pool, state: ServerState, now: Time) -> Self {
         Server {
             id,
             kind,
@@ -89,6 +101,7 @@ impl Server {
             requested_at: now,
             active_at: now,
             retired_at: 0.0,
+            ready_seq: 0,
         }
     }
 
@@ -173,7 +186,13 @@ mod tests {
     }
 
     fn mk_server() -> Server {
-        Server::new(ServerId(0), ServerKind::OnDemand, Pool::General, ServerState::Active, 0.0)
+        Server::new(
+            ServerRef::initial(0),
+            ServerKind::OnDemand,
+            Pool::General,
+            ServerState::Active,
+            0.0,
+        )
     }
 
     #[test]

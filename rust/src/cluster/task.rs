@@ -33,7 +33,7 @@
 //! (paper §3.3). The first copy a server dequeues wins; stale copies are
 //! skipped (and their liveness refs settled) at dequeue.
 
-use crate::util::{JobId, ServerId, TaskRef, Time};
+use crate::util::{JobId, ServerRef, TaskRef, Time};
 
 /// Where a task is in its lifecycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,7 +62,7 @@ pub struct Task {
     /// When the task started executing (valid once `state >= Running`).
     pub started_at: Time,
     /// Server executing / having executed the task.
-    pub ran_on: Option<ServerId>,
+    pub ran_on: Option<ServerRef>,
     /// Outstanding queue entries across all servers (copies, §3.3).
     pub copies: u8,
     /// `TaskFinish` events scheduled for this task and not yet popped.
@@ -73,7 +73,7 @@ pub struct Task {
     /// placement plus the §3.3 on-demand shadow copy). Kept exact so a
     /// task's start can immediately discount its other copy from that
     /// server's load estimate.
-    pub placed_on: [Option<ServerId>; 2],
+    pub placed_on: [Option<ServerRef>; 2],
 }
 
 impl Task {
@@ -95,7 +95,7 @@ impl Task {
 
     /// Record a queue-entry location. Panics beyond two live copies —
     /// the §3.3 invariant (primary + one on-demand shadow).
-    pub fn add_location(&mut self, sid: ServerId) {
+    pub fn add_location(&mut self, sid: ServerRef) {
         for slot in &mut self.placed_on {
             if slot.is_none() {
                 *slot = Some(sid);
@@ -111,7 +111,7 @@ impl Task {
     /// double-remove masked by a steal/revocation race) — every queue
     /// entry records its location at enqueue, so exactly one matching
     /// removal must exist.
-    pub fn remove_location(&mut self, sid: ServerId) {
+    pub fn remove_location(&mut self, sid: ServerRef) {
         for slot in &mut self.placed_on {
             if *slot == Some(sid) {
                 *slot = None;
@@ -126,7 +126,7 @@ impl Task {
     }
 
     /// The other live copy's server, if any.
-    pub fn other_location(&self, not: ServerId) -> Option<ServerId> {
+    pub fn other_location(&self, not: ServerRef) -> Option<ServerRef> {
         self.placed_on.iter().flatten().copied().find(|&s| s != not)
     }
 
@@ -158,12 +158,12 @@ mod tests {
     #[test]
     fn locations_roundtrip() {
         let mut t = Task::new(tref(1), JobId(0), 5.0, false, 0.0);
-        t.add_location(ServerId(3));
-        t.add_location(ServerId(7));
-        assert_eq!(t.other_location(ServerId(3)), Some(ServerId(7)));
-        t.remove_location(ServerId(3));
-        assert_eq!(t.placed_on, [None, Some(ServerId(7))]);
-        t.remove_location(ServerId(7));
+        t.add_location(ServerRef::initial(3));
+        t.add_location(ServerRef::initial(7));
+        assert_eq!(t.other_location(ServerRef::initial(3)), Some(ServerRef::initial(7)));
+        t.remove_location(ServerRef::initial(3));
+        assert_eq!(t.placed_on, [None, Some(ServerRef::initial(7))]);
+        t.remove_location(ServerRef::initial(7));
         assert_eq!(t.placed_on, [None, None]);
     }
 
@@ -171,9 +171,9 @@ mod tests {
     #[cfg_attr(debug_assertions, should_panic(expected = "remove_location miss"))]
     fn remove_location_miss_is_a_bug() {
         let mut t = Task::new(tref(2), JobId(0), 5.0, false, 0.0);
-        t.add_location(ServerId(1));
-        t.remove_location(ServerId(9));
+        t.add_location(ServerRef::initial(1));
+        t.remove_location(ServerRef::initial(9));
         // Release builds skip the debug_assert; nothing changed.
-        assert_eq!(t.placed_on, [Some(ServerId(1)), None]);
+        assert_eq!(t.placed_on, [Some(ServerRef::initial(1)), None]);
     }
 }

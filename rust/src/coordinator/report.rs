@@ -15,6 +15,13 @@ use crate::sim::Rng;
 use crate::trace::{synth, TraceStats, Workload};
 
 /// Summary statistics of one delay population.
+///
+/// Works from either [`crate::metrics::DelayDist`] backend: `n`, `mean`
+/// and `max` are exact (bit-identical across backends); `p50`/`p90`/
+/// `p99` are exact on the Vec backend and within the histogram's
+/// documented ≤1% relative bound on the default sketch, under the
+/// shared ceil-based nearest-rank convention. Empty populations (a
+/// zero-short-task run) yield well-defined zeros, never NaN.
 #[derive(Clone, Debug)]
 pub struct DelayStats {
     pub n: usize,
@@ -26,14 +33,14 @@ pub struct DelayStats {
 }
 
 impl DelayStats {
-    fn of(samples: &mut crate::metrics::DelaySamples) -> DelayStats {
+    fn of(dist: &mut crate::metrics::DelayDist) -> DelayStats {
         DelayStats {
-            n: samples.len(),
-            mean: samples.mean(),
-            max: samples.max(),
-            p50: samples.percentile(0.5),
-            p90: samples.percentile(0.9),
-            p99: samples.percentile(0.99),
+            n: dist.len(),
+            mean: dist.mean(),
+            max: dist.max(),
+            p50: dist.percentile(0.5),
+            p90: dist.percentile(0.9),
+            p99: dist.percentile(0.99),
         }
     }
 
@@ -72,6 +79,15 @@ pub struct Report {
     /// (the generational arena recycles finished slots, so this is
     /// load-bound, not trace-bound).
     pub peak_resident_tasks: usize,
+    /// Server-arena high-water mark: on-demand size + peak concurrent
+    /// transients (retired transient slots recycle, so this is
+    /// load-bound even under revocation churn).
+    pub peak_resident_servers: usize,
+    /// Resident bytes of the delay structures (short/long delays +
+    /// lifetimes): constant on the default histogram backend, O(trace)
+    /// in `exact_delay_samples` reference mode. The CI memory smoke
+    /// pins the default flat under trace scaling.
+    pub delay_struct_bytes: usize,
     /// Which analytics engine produced the CDF ("xla" or "native").
     pub analytics_engine: &'static str,
 }
@@ -146,20 +162,57 @@ pub fn run_experiment_on(
 
 fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analytics) -> Result<Report> {
     let end = run.end_time;
-    // Figure 3 CDF through the analytics engine (XLA artifacts when
-    // available): samples -> f32, evaluated at uniform edges.
-    let samples: Vec<f32> =
-        run.rec.short_delays.as_slice().iter().map(|&d| d as f32).collect();
-    let max_delay = samples.iter().copied().fold(1e-6f32, f32::max);
+    // Figure 3 CDF at uniform edges spanning [0, exact max]. The edge
+    // grid is identical on both delay backends (max is exact in the
+    // sketch, and f64->f32 casting is monotone, so the cast of the max
+    // equals the max of the casts the old per-sample fold computed).
+    let n_samples = run.rec.short_delays.len();
+    let max_delay = (run.rec.short_delays.max() as f32).max(1e-6);
     let n_edges = crate::runtime::artifacts::EDGES;
     let edges: Vec<f32> = (0..n_edges)
         .map(|i| max_delay * i as f32 / (n_edges - 1) as f32)
         .collect();
-    let (_counts, cdf_vals) = analytics.delay_cdf(&samples, &edges)?;
-    let cdf = Cdf {
-        edges: edges.iter().map(|&e| e as f64).collect(),
-        values: cdf_vals.iter().map(|&v| v as f64).collect(),
-        n_samples: samples.len(),
+    let cdf = if run.rec.short_delays.is_exact() {
+        // Exact backend: evaluate through the analytics engine (XLA
+        // artifacts when available) over the raw f32 samples, as the
+        // pre-sketch pipeline always did. Zero samples stay a defined
+        // all-zeros CDF (the engine divides by max(n, 1)).
+        let samples: Vec<f32> = run
+            .rec
+            .short_delays
+            .samples()
+            .expect("exact backend has samples")
+            .iter()
+            .map(|&d| d as f32)
+            .collect();
+        let (_counts, cdf_vals) = analytics.delay_cdf(&samples, &edges)?;
+        Cdf {
+            edges: edges.iter().map(|&e| e as f64).collect(),
+            values: cdf_vals.iter().map(|&v| v as f64).collect(),
+            n_samples,
+        }
+    } else {
+        // Sketch backend: the histogram answers the CDF directly — no
+        // per-sample pass exists to hand the analytics engine. Values
+        // are bucket-approximate (the explicitly-approximate quantile
+        // surface); edges and sample count are exact. The final edge
+        // evaluates at the *exact* f64 max (its f32 rendering may round
+        // down past the top bucket), so a non-empty CDF always closes
+        // at 1.0 like the per-sample path.
+        let exact_max = run.rec.short_delays.max();
+        let values = edges
+            .iter()
+            .enumerate()
+            .map(|(i, &e)| {
+                let at = if i + 1 == n_edges { exact_max.max(e as f64) } else { e as f64 };
+                run.rec.short_delays.cdf_at(at)
+            })
+            .collect();
+        Cdf {
+            edges: edges.iter().map(|&e| e as f64).collect(),
+            values,
+            n_samples,
+        }
     };
 
     let scheduler: &'static str = match run.scheduler.as_str() {
@@ -196,6 +249,8 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         events_per_sec: run.events as f64 / (run.wall_ms / 1000.0).max(1e-9),
         peak_resident_jobs: run.peak_resident_jobs,
         peak_resident_tasks: run.peak_resident_tasks,
+        peak_resident_servers: run.peak_resident_servers,
+        delay_struct_bytes: run.rec.delay_struct_bytes(),
         analytics_engine: analytics.name(),
     })
 }
@@ -333,6 +388,91 @@ mod tests {
         let rep = run_experiment_on(&cfg, &w, &mut analytics).unwrap();
         assert!(rep.transients_requested > 0);
         assert!(rep.max_transients > 0.0);
+    }
+
+    #[test]
+    fn zero_short_task_run_reports_defined_zeros() {
+        // Regression (empty-run audit): a long-only trace through a
+        // manager-less wiring produces NO short tasks — every short
+        // stat and the CDF must be finite, well-defined zeros.
+        use crate::coordinator::runner::{simulate_with, SimConfig};
+        use crate::trace::{Job, Workload};
+        use crate::util::JobId;
+        let jobs: Vec<Job> = (0..6)
+            .map(|i| Job {
+                id: JobId(i),
+                arrival: i as f64 * 50.0,
+                task_durations: vec![400.0, 500.0],
+                is_long: true,
+            })
+            .collect();
+        let w = Workload::new(jobs, 90.0);
+        for exact in [false, true] {
+            let cfg = SimConfig {
+                n_general: 16,
+                n_short_reserved: 2,
+                exact_delay_samples: exact,
+                ..Default::default()
+            };
+            let mut sched = crate::sched::Hybrid::eagle(2.0);
+            let run = simulate_with(&w, &mut sched, &cfg, None);
+            let mut ecfg = ExperimentConfig::paper_defaults();
+            ecfg.scheduler = SchedulerKind::Eagle;
+            let rep = super::distill(&ecfg, run, &mut NativeAnalytics).unwrap();
+            assert_eq!(rep.short_delay.n, 0);
+            for v in [
+                rep.short_delay.mean,
+                rep.short_delay.max,
+                rep.short_delay.p50,
+                rep.short_delay.p90,
+                rep.short_delay.p99,
+            ] {
+                assert_eq!(v, 0.0, "empty short-delay stat not zero (exact={exact})");
+            }
+            assert!(rep.cdf.values.iter().all(|v| v.is_finite()), "CDF has NaN");
+            assert!(rep.cdf.values.iter().all(|&v| v == 0.0), "empty CDF not all-zero");
+            assert_eq!(rep.cdf.quantile(0.99), 0.0);
+            assert!(rep.long_delay.n > 0);
+            // The markdown tables render finite text, no NaN.
+            let md = fig3_markdown(&[rep]);
+            assert!(!md.contains("NaN"), "markdown rendered NaN: {md}");
+        }
+    }
+
+    #[test]
+    fn sketch_and_exact_reports_agree_on_exact_fields() {
+        let cfg = tiny_cfg(SchedulerKind::Eagle);
+        let w = build_workload(&cfg).unwrap();
+        let run = |exact: bool| {
+            use crate::coordinator::runner::simulate_with;
+            let mut sim_cfg = cfg.to_sim_config();
+            sim_cfg.exact_delay_samples = exact;
+            let mut sched = build_scheduler(cfg.scheduler, cfg.probe_ratio);
+            let res = simulate_with(&w, sched.as_mut(), &sim_cfg, None);
+            super::distill(&cfg, res, &mut NativeAnalytics).unwrap()
+        };
+        let sk = run(false);
+        let ex = run(true);
+        assert_eq!(sk.short_delay.n, ex.short_delay.n);
+        assert_eq!(sk.short_delay.mean.to_bits(), ex.short_delay.mean.to_bits());
+        assert_eq!(sk.short_delay.max.to_bits(), ex.short_delay.max.to_bits());
+        assert_eq!(sk.events, ex.events);
+        assert_eq!(sk.end_time.to_bits(), ex.end_time.to_bits());
+        // Quantiles are the explicitly-approximate fields: within the
+        // histogram's documented relative bound (plus the sub-ms
+        // absolute floor for near-zero delays).
+        for (a, b) in [
+            (sk.short_delay.p50, ex.short_delay.p50),
+            (sk.short_delay.p90, ex.short_delay.p90),
+            (sk.short_delay.p99, ex.short_delay.p99),
+        ] {
+            assert!(
+                (a - b).abs() <= 0.011 * b.abs() + 1e-3,
+                "quantile diverged past the bucket bound: {a} vs {b}"
+            );
+        }
+        // Sketch memory is fixed; exact grows with the run.
+        assert!(sk.delay_struct_bytes < ex.delay_struct_bytes);
     }
 
     #[test]

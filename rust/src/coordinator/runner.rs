@@ -52,6 +52,18 @@ pub struct SimConfig {
     /// recycling golden tests; every simulation field is bit-identical
     /// either way, only resident memory differs.
     pub recycle_task_slots: bool,
+    /// Recycle retired server-arena slots (default). `false` keeps one
+    /// slot per transient ever requested — the append-only reference
+    /// behaviour for golden comparisons; every simulation field is
+    /// bit-identical either way, only resident memory differs.
+    pub recycle_server_slots: bool,
+    /// Record every delay sample in exact Vecs instead of the default
+    /// fixed-memory histogram sketches. Reference mode for golden
+    /// comparisons: count/mean/min/max are bit-identical either way;
+    /// only the explicitly-approximate quantile fields differ, within
+    /// the histogram's documented ≤1% bound. Exact mode's memory grows
+    /// with the trace.
+    pub exact_delay_samples: bool,
     pub seed: u64,
 }
 
@@ -66,6 +78,8 @@ impl Default for SimConfig {
             steal_probes: 8,
             steal_batch: 8,
             recycle_task_slots: true,
+            recycle_server_slots: true,
+            exact_delay_samples: false,
             seed: 1,
         }
     }
@@ -90,6 +104,11 @@ pub struct RunResult {
     /// generational arena recycles finished slots, so this (not total
     /// task count) bounds task memory.
     pub peak_resident_tasks: usize,
+    /// High-water mark of concurrently resident server-arena slots:
+    /// on-demand size + peak concurrent transients — retired transient
+    /// slots recycle, so this (not transients ever requested) bounds
+    /// server memory even under revocation churn.
+    pub peak_resident_servers: usize,
 }
 
 impl RunResult {
@@ -135,12 +154,13 @@ pub fn build_world_from_source<'a>(
 fn build_cluster(cfg: &SimConfig) -> Cluster {
     let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
     cluster.set_task_recycling(cfg.recycle_task_slots);
+    cluster.set_server_recycling(cfg.recycle_server_slots);
     cluster
 }
 
 fn build_recorder(cfg: &SimConfig) -> Recorder {
     let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
-    Recorder::new(r)
+    Recorder::with_backend(r, cfg.exact_delay_samples)
 }
 
 /// The canonical component composition shared by the eager and streaming
@@ -235,6 +255,7 @@ fn run_and_distill(mut world: World<'_>, name: String, wall0: Instant) -> RunRes
     let events = world.engine.processed();
     let peak_resident_jobs = world.peak_resident_jobs();
     let peak_resident_tasks = world.peak_resident_tasks();
+    let peak_resident_servers = world.peak_resident_servers();
     RunResult {
         scheduler: name,
         rec: world.rec,
@@ -244,6 +265,7 @@ fn run_and_distill(mut world: World<'_>, name: String, wall0: Instant) -> RunRes
         manager_stats,
         peak_resident_jobs,
         peak_resident_tasks,
+        peak_resident_servers,
     }
 }
 
@@ -310,7 +332,7 @@ mod tests {
         let b = run();
         assert_eq!(a.events, b.events);
         assert_eq!(a.end_time, b.end_time);
-        assert_eq!(a.rec.short_delays.as_slice(), b.rec.short_delays.as_slice());
+        assert_eq!(a.rec.short_delays, b.rec.short_delays);
     }
 
     #[test]
@@ -361,16 +383,14 @@ mod tests {
         let streamed = simulate_source(source, &mut stream_sched, &cfg, None);
         assert_eq!(eager.events, streamed.events);
         assert_eq!(eager.end_time, streamed.end_time);
-        assert_eq!(
-            eager.rec.short_delays.as_slice(),
-            streamed.rec.short_delays.as_slice()
-        );
-        // Resident jobs and task slots are bounded by load, not the
-        // trace — and identically on the eager (borrowed-lookahead) and
-        // streaming paths.
+        assert_eq!(eager.rec.short_delays, streamed.rec.short_delays);
+        // Resident jobs, task slots and server slots are bounded by
+        // load, not the trace — and identically on the eager
+        // (borrowed-lookahead) and streaming paths.
         assert!(streamed.peak_resident_jobs < w.num_jobs());
         assert_eq!(eager.peak_resident_tasks, streamed.peak_resident_tasks);
         assert!(streamed.peak_resident_tasks < w.num_tasks());
+        assert_eq!(eager.peak_resident_servers, streamed.peak_resident_servers);
     }
 
     #[test]

@@ -446,6 +446,7 @@ mod tests {
             assert_eq!(a.short_delay.n, b.short_delay.n);
             assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
             assert_eq!(a.peak_resident_tasks, b.peak_resident_tasks);
+            assert_eq!(a.peak_resident_servers, b.peak_resident_servers);
         }
     }
 }

@@ -30,11 +30,13 @@
 //!   manager, work stealer and snapshot/forecast sampler are all
 //!   components ([`sim::components`]), so new scenarios are component
 //!   wiring plus source combinators, not runner changes. Together with
-//!   the cluster's generational task arena, job records and task slots
-//!   are O(active), not O(trace) (`peak_resident_jobs` /
-//!   `peak_resident_tasks` report the high-water marks; per-task delay
-//!   samples in the recorder still accumulate over a run — see
-//!   ROADMAP).
+//!   the cluster's generational task and server arenas and the
+//!   recorder's fixed-memory delay sketches, job records, task slots,
+//!   server slots and per-sample metrics are all O(active), not
+//!   O(trace) (`peak_resident_jobs` / `peak_resident_tasks` /
+//!   `peak_resident_servers` report the high-water marks). The only
+//!   remaining horizon-proportional state is the sampled snapshot
+//!   time series (one point per `snapshot_interval` — see ROADMAP).
 //! * **trace** — workloads, eager and streaming: synthetic generators
 //!   calibrated to the paper's traces (eager `yahoo_like` /
 //!   `google_like` are collectors over their streaming twins
@@ -45,16 +47,20 @@
 //!   algebra — [`trace::BurstStorm`], [`trace::RateScale`],
 //!   [`trace::TimeWindow`], [`trace::Splice`], [`trace::Merge`],
 //!   [`trace::Take`] — for composing arrival patterns declaratively.
-//! * **cluster** — servers, partitions, queue disciplines, the
-//!   **generational task arena** (tasks addressed by
-//!   [`util::TaskRef`]-style slot+generation handles; a finished slot
-//!   recycles once its liveness count — §3.3 queue copies plus pending
-//!   `TaskFinish` events — hits zero, so stale events and shadow copies
-//!   resolve to "stale, skip" instead of aliasing a reused slot), and
-//!   the [`cluster::PoolIndex`]: one MinTree-backed least-loaded index
-//!   per pool (general / short-reserved / transient) kept incrementally
-//!   up to date by every mutator, so all placement and drain-victim
-//!   queries are O(log n) with scan-identical tie-breaking.
+//! * **cluster** — servers, partitions, queue disciplines, the twin
+//!   **generational slot arenas**: tasks addressed by [`util::TaskRef`]
+//!   (a finished slot recycles once its liveness count — §3.3 queue
+//!   copies plus pending `TaskFinish` events — hits zero) and servers
+//!   addressed by [`util::ServerRef`] (a retired transient's slot
+//!   recycles immediately; stale lifecycle events fail the generation
+//!   check at pop), so stale events and shadow copies resolve to
+//!   "stale, skip" instead of aliasing a reused slot; and the
+//!   [`cluster::PoolIndex`]: one MinTree-backed least-loaded index per
+//!   pool (general / short-reserved / transient) kept incrementally up
+//!   to date by every mutator, so all placement and drain-victim
+//!   queries are O(log n) with scan-identical tie-breaking — the
+//!   transient index recycles its tree slots too, with a `ready_seq`
+//!   key component pinning the historical ready-order tie-break.
 //! * **coordinator** — experiment configuration
 //!   ([`coordinator::ExperimentConfig`]), the declarative scenario
 //!   registry ([`coordinator::scenario`]: a `[scenario]` TOML block or
@@ -72,17 +78,25 @@
 //! * **runtime / metrics / transient** — analytics engines (pure-rust
 //!   [`runtime::NativeAnalytics`] by default; PJRT/XLA under
 //!   `--features xla`), the recorder + cost ledger behind every paper
-//!   number, and the §3.2 transient manager + market model.
+//!   number — per-sample populations (queueing delays, transient
+//!   lifetimes) stream through the fixed-memory log-bucketed
+//!   [`metrics::DelayHistogram`] by default (count/mean/min/max exact,
+//!   quantiles within a documented ≤1% bound; the exact-Vec backend
+//!   survives behind `SimConfig::exact_delay_samples` for golden
+//!   comparisons) — and the §3.2 transient manager + market model.
 //!
 //! Determinism is load-bearing: `tests/golden_determinism.rs` pins the
 //! `World` decomposition bit-exactly to the original monolithic runner,
 //! `tests/streaming_golden.rs` pins the streaming arrival path
 //! bit-exactly to the eager replay (and the combinators to fixed
-//! seeds), plus arena recycling bit-exactly to the append-only build
-//! with `peak_resident_tasks` flat under 10x trace scaling,
-//! `tests/arena_props.rs` stress-tests slot recycling under randomized
+//! seeds), plus task/server-arena recycling and the histogram backend
+//! bit-exactly to the append-only / exact-Vec reference builds with
+//! `peak_resident_tasks`, `peak_resident_servers` and delay-structure
+//! bytes flat under 10x trace scaling, `tests/arena_props.rs`
+//! stress-tests both arenas under randomized
 //! enqueue/steal/revoke/drain interleavings (no resurrection, slots <=
-//! peak-active), and `tests/pool_index_props.rs` pins every indexed
+//! peak-active, all four recycling-mode combinations observationally
+//! identical), and `tests/pool_index_props.rs` pins every indexed
 //! least-loaded answer to the naive linear scan it replaced.
 //!
 //! ## Quickstart

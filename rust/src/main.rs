@@ -126,10 +126,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
         eprintln!("peak resident jobs (streaming): {}", rep.peak_resident_jobs);
     }
-    // The arena-memory headline: finished task slots recycle, so this is
-    // bounded by cluster load, not trace length (CI pins it flat under
-    // 10x trace scaling).
+    // The arena-memory headlines: finished task slots and retired
+    // server slots recycle, and delay samples stream through fixed-size
+    // histogram sketches — all three are bounded by cluster load, not
+    // trace length (CI pins each flat under 10x trace scaling).
     println!("peak resident tasks (arena): {}", rep.peak_resident_tasks);
+    println!("peak resident servers (arena): {}", rep.peak_resident_servers);
+    println!("delay structures (bytes): {}", rep.delay_struct_bytes);
     if let Some(out) = args.get("cdf-out") {
         std::fs::write(out, rep.cdf.to_csv())?;
         eprintln!("wrote CDF to {out}");

@@ -20,6 +20,13 @@ impl Cdf {
     }
 
     /// Build from samples evaluated at the given (sorted) edges.
+    ///
+    /// Empty-input convention (audited for zero-short-task runs, e.g. a
+    /// manager-less replay of a long-only trace): with no samples every
+    /// value is a well-defined **0.0** — the `len().max(1)` divisor
+    /// exists precisely so the empty CDF is all-zeros rather than NaN.
+    /// Downstream consumers ([`Cdf::quantile`], the report tables)
+    /// treat an all-zero CDF as "no population" and render zeros.
     pub fn from_samples_at(samples: &[f64], edges: Vec<f64>) -> Cdf {
         debug_assert!(edges.windows(2).all(|w| w[0] <= w[1]), "edges must be sorted");
         let mut sorted: Vec<f64> = samples.to_vec();
@@ -32,8 +39,13 @@ impl Cdf {
         Cdf { edges, values, n_samples: samples.len() }
     }
 
-    /// Inverse CDF: the smallest edge with CDF >= q.
+    /// Inverse CDF: the smallest edge with CDF >= q. An empty CDF (no
+    /// samples: every value 0.0) answers 0.0 for all q — not the last
+    /// edge, which the all-zero fallthrough would otherwise hit.
     pub fn quantile(&self, q: f64) -> f64 {
+        if self.n_samples == 0 {
+            return 0.0;
+        }
         for (e, v) in self.edges.iter().zip(&self.values) {
             if *v >= q {
                 return *e;
@@ -83,6 +95,13 @@ mod tests {
     fn empty_samples() {
         let cdf = Cdf::from_samples(&[], 10);
         assert!(cdf.values.iter().all(|&v| v == 0.0));
+        assert!(cdf.values.iter().all(|v| v.is_finite()), "empty CDF must never be NaN");
+        assert_eq!(cdf.n_samples, 0);
+        // Quantiles of an empty population are defined zeros, not the
+        // top edge.
+        assert_eq!(cdf.quantile(0.5), 0.0);
+        assert_eq!(cdf.quantile(1.0), 0.0);
+        assert!(cdf.to_csv().lines().count() == 11);
     }
 
     #[test]

@@ -6,8 +6,15 @@
 //! time-weighted average number of active transient servers divided by r,
 //! compared against the `N_s * p` on-demand servers the static baseline
 //! dedicates to the same role.
+//!
+//! All time-averaged quantities are measured **from t = 0** (simulation
+//! start) to the caller-supplied `end` — there is no configurable
+//! measurement-window start. (An earlier revision carried a dead
+//! `start` field that was initialized to 0.0 and never written; it has
+//! been removed rather than wired, since every caller and every Table 1
+//! number wants whole-run averages.)
 
-use crate::metrics::StepIntegrator;
+use crate::metrics::{DelayDist, StepIntegrator};
 use crate::util::Time;
 
 /// Ledger of transient-server usage + derived cost numbers.
@@ -18,14 +25,29 @@ pub struct CostLedger {
     /// Active transient count as an exact step function of time.
     active: StepIntegrator,
     /// Completed transient lifetimes (active -> retired), seconds.
-    pub lifetimes: Vec<f64>,
-    /// Total transient server-seconds consumed (integral of active count).
-    start: Time,
+    /// Streams through the fixed-memory histogram by default (one
+    /// sample per retired transient used to make this O(trace));
+    /// `CostLedger::new_exact` keeps the reference Vec backend.
+    pub lifetimes: DelayDist,
 }
 
 impl CostLedger {
+    /// Ledger with the default fixed-memory lifetime sketch.
     pub fn new(r: f64) -> Self {
-        CostLedger { r, active: StepIntegrator::new(0.0, 0.0), lifetimes: Vec::new(), start: 0.0 }
+        Self::with_backend(r, false)
+    }
+
+    /// Ledger with the exact-Vec lifetime backend (golden comparisons).
+    pub fn new_exact(r: f64) -> Self {
+        Self::with_backend(r, true)
+    }
+
+    pub fn with_backend(r: f64, exact_samples: bool) -> Self {
+        CostLedger {
+            r,
+            active: StepIntegrator::new(0.0, 0.0),
+            lifetimes: DelayDist::new(exact_samples),
+        }
     }
 
     /// A transient server became active at `t`.
@@ -47,10 +69,10 @@ impl CostLedger {
         self.active.max()
     }
 
-    /// Time-weighted average active transient count over `[start, end]`
-    /// (Table 1 "Average transient").
+    /// Time-weighted average active transient count over `[0, end]`
+    /// (Table 1 "Average transient"); averages always start at t = 0.
     pub fn avg_active(&self, end: Time) -> f64 {
-        self.active.mean_to(self.start, end)
+        self.active.mean_to(0.0, end)
     }
 
     /// Table 1 "r-normalized avg. on-demand": average transients / r.
@@ -70,13 +92,14 @@ impl CostLedger {
 
     /// Mean / max lifetime of retired transient servers, hours (Table 1
     /// "Active time"). Servers still active at `end` are not included —
-    /// callers should retire them at simulation end first.
+    /// callers should retire them at simulation end first. Exact on
+    /// both lifetime backends (mean and max are exact in the sketch).
     pub fn mean_lifetime_hours(&self) -> f64 {
-        crate::util::mean(&self.lifetimes) / 3600.0
+        self.lifetimes.mean() / 3600.0
     }
 
     pub fn max_lifetime_hours(&self) -> f64 {
-        self.lifetimes.iter().copied().fold(0.0, f64::max) / 3600.0
+        self.lifetimes.max() / 3600.0
     }
 
     /// Cost saving vs. a static baseline that keeps `baseline_servers`
@@ -113,10 +136,6 @@ mod tests {
     fn paper_scenario_saving() {
         // r=3, avg 84.5 transients -> 28.2 normalized vs 40 baseline
         // => 29.5% saving (Table 1).
-        let mut c = CostLedger::new(3.0);
-        c.transient_up(0.0);
-        // Fake the integral: 84.5 servers on average over 10h by setting
-        // up/down aggregates — emulate with direct step moves.
         let mut c2 = CostLedger::new(3.0);
         for _ in 0..845 {
             c2.transient_up(0.0);
@@ -128,7 +147,6 @@ mod tests {
         assert!((avg - 84.5).abs() < 1e-9, "avg={avg}");
         let saving = c2.saving_vs_static(40.0, 36_000.0 * 10.0);
         assert!((saving - (40.0 - 84.5 / 3.0) / 40.0).abs() < 1e-9);
-        drop(c);
     }
 
     #[test]
@@ -136,5 +154,30 @@ mod tests {
         let c = CostLedger::new(2.0);
         assert_eq!(c.saving_vs_static(40.0, 1000.0), 1.0);
         assert_eq!(c.mean_lifetime_hours(), 0.0);
+        assert_eq!(c.max_lifetime_hours(), 0.0);
+    }
+
+    #[test]
+    fn lifetime_backends_agree_on_exact_fields() {
+        let mut sketch = CostLedger::new(3.0);
+        let mut exact = CostLedger::new_exact(3.0);
+        for (i, life) in [120.0, 3600.0, 777.5, 0.0, 46_000.0].iter().enumerate() {
+            let t = i as f64 * 10.0;
+            sketch.transient_up(t);
+            exact.transient_up(t);
+            sketch.transient_down(t + 50.0, *life);
+            exact.transient_down(t + 50.0, *life);
+        }
+        assert_eq!(sketch.lifetimes.len(), exact.lifetimes.len());
+        assert_eq!(
+            sketch.mean_lifetime_hours().to_bits(),
+            exact.mean_lifetime_hours().to_bits()
+        );
+        assert_eq!(
+            sketch.max_lifetime_hours().to_bits(),
+            exact.max_lifetime_hours().to_bits()
+        );
+        assert!(exact.lifetimes.samples().is_some());
+        assert!(sketch.lifetimes.samples().is_none());
     }
 }

@@ -1,0 +1,486 @@
+//! Streaming delay distributions: a fixed-width log-bucketed quantile
+//! histogram ([`DelayHistogram`]) and the backend-selecting
+//! [`DelayDist`] the recorder and cost ledger store their per-task /
+//! per-transient populations in.
+//!
+//! ## Why
+//!
+//! The paper's headline numbers (Figure 3's short-delay CDF, Table 1's
+//! transient lifetimes) were computed from unbounded `Vec<f64>`s — one
+//! push per task / per retired transient — so whole-run memory scaled
+//! with trace length even after jobs and tasks became O(active). The
+//! histogram makes every per-run delay structure **load-independent and
+//! trace-independent**: a fixed array of [`N_BUCKETS`] counters
+//! (~9 KiB) regardless of how many samples stream through.
+//!
+//! ## Bucket scheme and error bound
+//!
+//! Geometric buckets with ratio [`GAMMA`] = 1.02 spanning
+//! [`MIN_TRACKED`] = 1 ms to [`MAX_TRACKED`] = 10^7 s: bucket `i`
+//! covers `[MIN·γ^i, MIN·γ^(i+1))` and reports its midpoint
+//! `MIN·γ^i·(1+γ)/2`, clamped into the exact observed `[min, max]`.
+//! For any sample `v` inside a bucket the reported value `rep`
+//! satisfies `rep/v ∈ [(1+γ)/(2γ), (1+γ)/2]`, i.e. **relative quantile
+//! error ≤ (γ−1)/2 = 1%** (double-sided). Samples below 1 ms (queueing
+//! delays of exactly 0.0 dominate here) collapse into a dedicated
+//! low bucket reported as the exact observed minimum — absolute error
+//! < 1 ms. Samples above 10^7 s (~115 days — beyond any simulated
+//! delay or transient lifetime) clamp into the top bucket; the exact
+//! max is tracked separately, so `percentile(1.0)` is always exact.
+//!
+//! `count`, `sum` (and therefore `mean`), `min` and `max` are **exact**
+//! and — because `sum` accumulates in push order exactly like summing
+//! the equivalent `Vec` — bit-identical to the exact-Vec backend.
+//! Quantiles (`percentile`, `cdf_at`) are the only approximate fields,
+//! within the bound above. Both backends share the crate-wide
+//! ceil-based nearest-rank quantile convention
+//! ([`crate::util::nearest_rank_index`]).
+//!
+//! Histograms with identical bucketing are mergeable
+//! ([`DelayHistogram::merge`]) for cross-run aggregation.
+
+use crate::metrics::stats::DelaySamples;
+
+/// Geometric bucket ratio: 2% wide buckets, ≤1% quantile error.
+pub const GAMMA: f64 = 1.02;
+/// Lower edge of bucket 0; smaller samples land in the low bucket.
+pub const MIN_TRACKED: f64 = 1e-3;
+/// Upper range of the bucket array; larger samples clamp to the top.
+pub const MAX_TRACKED: f64 = 1e7;
+/// Bucket count: `ceil(ln(MAX/MIN)/ln(GAMMA))` = 1163, +1 slack.
+pub const N_BUCKETS: usize = 1164;
+
+/// Fixed-memory streaming quantile histogram (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DelayHistogram {
+    count: u64,
+    /// Running sum in push order — mean is exact and bit-identical to
+    /// summing the equivalent Vec.
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Samples below [`MIN_TRACKED`] (typically exact-zero delays).
+    low: u64,
+    buckets: Vec<u64>,
+}
+
+impl Default for DelayHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DelayHistogram {
+    pub fn new() -> Self {
+        DelayHistogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            low: 0,
+            buckets: vec![0u64; N_BUCKETS],
+        }
+    }
+
+    #[inline]
+    fn bucket_index(x: f64) -> usize {
+        debug_assert!(x >= MIN_TRACKED);
+        let i = ((x / MIN_TRACKED).ln() / GAMMA.ln()).floor();
+        (i.max(0.0) as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Midpoint representative of bucket `i` (pre-clamping).
+    #[inline]
+    fn bucket_rep(i: usize) -> f64 {
+        MIN_TRACKED * GAMMA.powi(i as i32) * (1.0 + GAMMA) / 2.0
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "non-finite delay sample {x}");
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x < MIN_TRACKED {
+            self.low += 1;
+        } else {
+            self.buckets[Self::bucket_index(x)] += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean (0.0 when empty; never NaN).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact maximum (0.0 when empty, matching the Vec backend).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact minimum (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Approximate quantile, ceil-based nearest-rank convention:
+    /// the bucket holding rank `clamp(ceil(q·n), 1, n)` reports its
+    /// midpoint clamped into the exact `[min, max]`. Relative error
+    /// ≤ 1% (see module docs); 0.0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        // Same rank as the exact backend: the crate-wide ceil-based
+        // convention, via the shared helper so the two can never drift.
+        let rank = crate::util::nearest_rank_index(self.count as usize, q) as u64 + 1;
+        // The extreme ranks are tracked exactly — this also covers
+        // samples clamped into the top bucket from beyond MAX_TRACKED.
+        if rank >= self.count {
+            return self.max;
+        }
+        if rank == 1 {
+            return self.min;
+        }
+        let mut cum = self.low;
+        if rank <= cum {
+            // Low bucket: every sample here is < 1 ms; the exact min is
+            // within 1 ms of any quantile that lands here.
+            return self.min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if rank <= cum {
+                return Self::bucket_rep(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Approximate empirical CDF at `x`: the fraction of samples in
+    /// buckets whose (clamped) representative is ≤ `x`. Monotone in
+    /// `x`, exactly 0.0 below the observed minimum's bucket, exactly
+    /// 1.0 at and above the observed maximum; 0.0 when empty.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mut acc = if x >= self.min { self.low } else { 0 };
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if Self::bucket_rep(i).clamp(self.min, self.max) <= x {
+                acc += c;
+            }
+        }
+        acc as f64 / self.count as f64
+    }
+
+    /// Merge another histogram into this one (same fixed bucketing, so
+    /// it is exact bucket-wise addition; min/max/sum/count stay exact).
+    pub fn merge(&mut self, other: &DelayHistogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.low += other.low;
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Resident size — fixed at construction, independent of sample
+    /// count (the CI memory smoke pins this flat under trace scaling).
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.buckets.len() * std::mem::size_of::<u64>()
+    }
+}
+
+/// A delay population behind one of two backends: the fixed-memory
+/// [`DelayHistogram`] sketch (the default) or the exact append-only
+/// [`DelaySamples`] Vec, kept alive purely for golden comparisons
+/// (`SimConfig::exact_delay_samples`) — mirroring the task arena's
+/// `recycle_task_slots` pattern. `count`/`mean`/`min`/`max` are
+/// bit-identical across backends; quantiles differ only within the
+/// histogram's documented ≤1% bound.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DelayDist {
+    Exact(DelaySamples),
+    Sketch(DelayHistogram),
+}
+
+impl DelayDist {
+    /// The default fixed-memory backend.
+    pub fn sketch() -> Self {
+        DelayDist::Sketch(DelayHistogram::new())
+    }
+
+    /// The exact-Vec reference backend (memory grows with the run).
+    pub fn exact() -> Self {
+        DelayDist::Exact(DelaySamples::new())
+    }
+
+    pub fn new(exact: bool) -> Self {
+        if exact {
+            Self::exact()
+        } else {
+            Self::sketch()
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        matches!(self, DelayDist::Exact(_))
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        match self {
+            DelayDist::Exact(s) => s.push(x),
+            DelayDist::Sketch(h) => h.push(x),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DelayDist::Exact(s) => s.len(),
+            DelayDist::Sketch(h) => h.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            DelayDist::Exact(s) => s.mean(),
+            DelayDist::Sketch(h) => h.mean(),
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        match self {
+            DelayDist::Exact(s) => s.max(),
+            DelayDist::Sketch(h) => h.max(),
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        match self {
+            DelayDist::Exact(s) => s.min(),
+            DelayDist::Sketch(h) => h.min(),
+        }
+    }
+
+    /// Quantile under the shared ceil-based nearest-rank convention:
+    /// exact on the Vec backend, within the documented ≤1% relative
+    /// bound on the sketch. (`&mut` because the exact backend sorts
+    /// lazily.)
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        match self {
+            DelayDist::Exact(s) => s.percentile(q),
+            DelayDist::Sketch(h) => h.percentile(q),
+        }
+    }
+
+    /// Empirical CDF value at `x` (exact / bucket-approximate).
+    pub fn cdf_at(&mut self, x: f64) -> f64 {
+        match self {
+            DelayDist::Exact(s) => s.cdf_at(x),
+            DelayDist::Sketch(h) => h.cdf_at(x),
+        }
+    }
+
+    /// Raw samples, only available on the exact backend.
+    pub fn samples(&self) -> Option<&[f64]> {
+        match self {
+            DelayDist::Exact(s) => Some(s.as_slice()),
+            DelayDist::Sketch(_) => None,
+        }
+    }
+
+    /// Resident size of the backing structure: fixed for the sketch,
+    /// O(samples) — counted at Vec *capacity*, the truly resident
+    /// allocation — for the exact backend.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            DelayDist::Exact(s) => std::mem::size_of::<Self>() + s.memory_bytes(),
+            DelayDist::Sketch(h) => h.memory_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn exact_fields_match_vec_backend_bitwise() {
+        let mut exact = DelayDist::exact();
+        let mut sketch = DelayDist::sketch();
+        let mut rng = Rng::new(42);
+        for _ in 0..5000 {
+            // Mix of exact zeros (idle-start tasks), sub-ms noise and
+            // lognormal-ish delays.
+            let x = match rng.below(4) {
+                0 => 0.0,
+                1 => rng.f64() * 5e-4,
+                _ => rng.f64() * rng.f64() * 3000.0,
+            };
+            exact.push(x);
+            sketch.push(x);
+        }
+        assert_eq!(exact.len(), sketch.len());
+        assert_eq!(exact.mean().to_bits(), sketch.mean().to_bits(), "mean not bit-identical");
+        assert_eq!(exact.max().to_bits(), sketch.max().to_bits());
+        assert_eq!(exact.min().to_bits(), sketch.min().to_bits());
+    }
+
+    #[test]
+    fn quantile_error_within_documented_bound() {
+        let mut exact = DelayDist::exact();
+        let mut sketch = DelayDist::sketch();
+        let mut rng = Rng::new(7);
+        for _ in 0..20_000 {
+            let x = (rng.f64() * 8.0).exp(); // ~[1, 3000] s, log-uniform
+            exact.push(x);
+            sketch.push(x);
+        }
+        for q in [0.0, 0.01, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let e = exact.percentile(q);
+            let s = sketch.percentile(q);
+            let rel = (s - e).abs() / e.max(MIN_TRACKED);
+            // Documented bound (γ-1)/2 = 1%, plus fp slack for samples
+            // landing exactly on bucket edges.
+            assert!(rel <= 0.0105, "q={q}: exact {e} vs sketch {s} (rel {rel})");
+        }
+        // Extremes are exact.
+        assert_eq!(exact.percentile(0.0), sketch.percentile(0.0));
+        assert_eq!(exact.percentile(1.0), sketch.percentile(1.0));
+    }
+
+    #[test]
+    fn zero_dominated_population() {
+        // The common Figure-3 regime: most short tasks start instantly.
+        let mut h = DelayHistogram::new();
+        for _ in 0..900 {
+            h.push(0.0);
+        }
+        for i in 1..=100 {
+            h.push(i as f64);
+        }
+        assert_eq!(h.percentile(0.5), 0.0); // rank 500 of 1000 -> low bucket
+        assert_eq!(h.percentile(0.9), 0.0); // rank 900 -> still low
+        let p99 = h.percentile(0.99); // rank 990 -> ~90 s
+        assert!((p99 - 90.0).abs() / 90.0 < 0.011, "p99={p99}");
+        assert_eq!(h.percentile(1.0), 100.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = DelayHistogram::new();
+        assert_eq!(h.len(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.cdf_at(10.0), 0.0);
+        assert!(h.mean().is_finite() && h.percentile(0.99).is_finite());
+    }
+
+    #[test]
+    fn cdf_monotone_and_complete() {
+        let mut h = DelayHistogram::new();
+        for i in 0..1000 {
+            h.push(i as f64 * 0.7 + 0.5);
+        }
+        let mut prev = -1.0;
+        for k in 0..50 {
+            let x = k as f64 * 16.0;
+            let v = h.cdf_at(x);
+            assert!(v >= prev, "CDF not monotone at {x}");
+            assert!((0.0..=1.0).contains(&v));
+            prev = v;
+        }
+        assert_eq!(h.cdf_at(h.max()), 1.0, "CDF must reach 1.0 at the observed max");
+        assert_eq!(h.cdf_at(-1.0), 0.0);
+    }
+
+    #[test]
+    fn memory_is_fixed_regardless_of_samples() {
+        let mut h = DelayHistogram::new();
+        let before = h.memory_bytes();
+        for i in 0..100_000 {
+            h.push((i % 977) as f64);
+        }
+        assert_eq!(h.memory_bytes(), before, "sketch memory grew with samples");
+        let mut exact = DelayDist::exact();
+        let b0 = exact.memory_bytes();
+        for i in 0..1000 {
+            exact.push(i as f64);
+        }
+        assert!(exact.memory_bytes() > b0, "exact backend should grow (reference mode)");
+    }
+
+    #[test]
+    fn merge_is_bucketwise_exact() {
+        let mut a = DelayHistogram::new();
+        let mut b = DelayHistogram::new();
+        let mut all = DelayHistogram::new();
+        let mut rng = Rng::new(3);
+        for i in 0..4000 {
+            let x = rng.f64() * 500.0;
+            if i % 2 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), all.len());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(q), all.percentile(q), "merged quantile diverged at {q}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_without_panicking() {
+        let mut h = DelayHistogram::new();
+        h.push(MAX_TRACKED * 100.0);
+        h.push(MIN_TRACKED / 2.0);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.max(), MAX_TRACKED * 100.0); // exact max survives
+        assert_eq!(h.percentile(1.0), MAX_TRACKED * 100.0);
+        assert_eq!(h.percentile(0.0), MIN_TRACKED / 2.0);
+    }
+}

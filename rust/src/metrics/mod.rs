@@ -1,15 +1,27 @@
-//! Metrics pipeline: streaming statistics, exact empirical CDFs,
-//! time-series recording with exact step integration, transient cost
-//! accounting, and the per-run [`Recorder`].
+//! Metrics pipeline: streaming statistics, fixed-memory log-bucketed
+//! delay sketches (with an exact-Vec reference backend for golden
+//! comparisons), empirical CDFs, time-series recording with exact step
+//! integration, transient cost accounting, and the per-run
+//! [`Recorder`].
+//!
+//! Memory model: everything the recorder accumulates per *sample* (one
+//! short/long queueing delay per task, one lifetime per retired
+//! transient) streams through a [`DelayDist`] — by default the
+//! fixed-size [`DelayHistogram`], so a run's metrics footprint is
+//! constant no matter how long the trace is. Count, mean, min and max
+//! are exact (and bit-identical to the exact backend); quantiles are
+//! approximate within the histogram's documented ≤1% relative bound.
 
 mod cdf;
 mod cost;
+mod histogram;
 mod recorder;
-mod stats;
+pub(crate) mod stats;
 mod timeseries;
 
 pub use cdf::Cdf;
 pub use cost::CostLedger;
+pub use histogram::{DelayDist, DelayHistogram, GAMMA, MAX_TRACKED, MIN_TRACKED, N_BUCKETS};
 pub use recorder::Recorder;
 pub use stats::{DelaySamples, StreamingStats};
 pub use timeseries::{StepIntegrator, TimeSeries};

@@ -9,8 +9,16 @@
 //! the state transition — so recycling a finished task's arena slot can
 //! never invalidate a recorded sample, and nothing here reads back
 //! through the task arena.
+//!
+//! Memory contract: every per-sample population streams through a
+//! [`DelayDist`] — by default the fixed-memory log-bucketed
+//! [`crate::metrics::DelayHistogram`] sketch, so recorder memory is
+//! **constant**, independent of trace length. The exact-Vec backend
+//! ([`Recorder::new_exact`], `SimConfig::exact_delay_samples`) is kept
+//! purely for golden comparisons; count/mean/min/max are bit-identical
+//! across backends, quantiles within the documented ≤1% bucket bound.
 
-use crate::metrics::{Cdf, CostLedger, DelaySamples, StreamingStats, TimeSeries};
+use crate::metrics::{Cdf, CostLedger, DelayDist, StreamingStats, TimeSeries};
 use crate::util::Time;
 
 /// Collects per-task delays, cluster time series and transient cost
@@ -18,10 +26,10 @@ use crate::util::Time;
 #[derive(Clone, Debug)]
 pub struct Recorder {
     /// Queueing delay of every *short* task (Figure 3's variable).
-    pub short_delays: DelaySamples,
+    pub short_delays: DelayDist,
     /// Queueing delay of every long task ("maintains long job
     /// performance", §Abstract).
-    pub long_delays: DelaySamples,
+    pub long_delays: DelayDist,
     /// Per-job makespan-style stats (arrival -> last task finish).
     pub short_job_response: StreamingStats,
     pub long_job_response: StreamingStats,
@@ -45,15 +53,26 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// Recorder with the default fixed-memory delay sketches.
     pub fn new(r: f64) -> Self {
+        Self::with_backend(r, false)
+    }
+
+    /// Recorder with exact-Vec delay samples (reference mode for golden
+    /// comparisons; memory grows with the run).
+    pub fn new_exact(r: f64) -> Self {
+        Self::with_backend(r, true)
+    }
+
+    pub fn with_backend(r: f64, exact_delay_samples: bool) -> Self {
         Recorder {
-            short_delays: DelaySamples::new(),
-            long_delays: DelaySamples::new(),
+            short_delays: DelayDist::new(exact_delay_samples),
+            long_delays: DelayDist::new(exact_delay_samples),
             short_job_response: StreamingStats::new(),
             long_job_response: StreamingStats::new(),
             lr_series: TimeSeries::new(),
             transient_series: TimeSeries::new(),
-            cost: CostLedger::new(r),
+            cost: CostLedger::with_backend(r, exact_delay_samples),
             tasks_finished: 0,
             tasks_rescheduled: 0,
             stale_copies_skipped: 0,
@@ -86,9 +105,37 @@ impl Recorder {
         self.transient_series.push(t, active_transients);
     }
 
-    /// Figure 3: CDF of short-task queueing delay.
-    pub fn short_delay_cdf(&self, n_edges: usize) -> Cdf {
-        Cdf::from_samples(self.short_delays.as_slice(), n_edges)
+    /// Resident bytes of the per-sample delay structures (short + long
+    /// delays + lifetimes). Constant on the sketch backends; O(samples)
+    /// in exact mode — the CI memory smoke pins the default flat.
+    pub fn delay_struct_bytes(&self) -> usize {
+        self.short_delays.memory_bytes()
+            + self.long_delays.memory_bytes()
+            + self.cost.lifetimes.memory_bytes()
+    }
+
+    /// Figure 3: CDF of short-task queueing delay at `n_edges` uniform
+    /// edges spanning `[0, max]` — works from either backend (exact on
+    /// the Vec path, bucket-approximate on the sketch). Library-side
+    /// convenience on f64 edges; the report pipeline builds its own
+    /// (f32, analytics-engine-compatible) grid in `coordinator::report`.
+    pub fn short_delay_cdf(&mut self, n_edges: usize) -> Cdf {
+        let max = self.short_delays.max().max(1e-9);
+        // n_edges < 2 degenerates to the single edge at max (the old
+        // `max * 0/0` formulation produced a NaN edge).
+        let edges: Vec<f64> = if n_edges < 2 {
+            vec![max; n_edges]
+        } else {
+            (0..n_edges).map(|i| max * i as f64 / (n_edges - 1) as f64).collect()
+        };
+        if self.short_delays.is_exact() {
+            let s = self.short_delays.samples().expect("exact backend has samples");
+            Cdf::from_samples_at(s, edges)
+        } else {
+            let n = self.short_delays.len();
+            let values = edges.iter().map(|&e| self.short_delays.cdf_at(e)).collect();
+            Cdf { edges, values, n_samples: n }
+        }
     }
 }
 
@@ -108,14 +155,21 @@ mod tests {
     }
 
     #[test]
-    fn cdf_export() {
-        let mut r = Recorder::new(1.0);
-        for i in 0..100 {
-            r.task_started(false, i as f64);
+    fn cdf_export_from_both_backends() {
+        for exact in [true, false] {
+            let mut r = Recorder::with_backend(1.0, exact);
+            for i in 0..100 {
+                r.task_started(false, i as f64);
+            }
+            let cdf = r.short_delay_cdf(11);
+            assert_eq!(cdf.edges.len(), 11);
+            assert_eq!(cdf.n_samples, 100);
+            assert!(cdf.values.windows(2).all(|w| w[0] <= w[1]), "CDF not monotone");
+            assert!(
+                (cdf.values.last().unwrap() - 1.0).abs() < 1e-12,
+                "CDF must reach 1.0 (exact={exact})"
+            );
         }
-        let cdf = r.short_delay_cdf(11);
-        assert_eq!(cdf.edges.len(), 11);
-        assert!((cdf.values.last().unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -125,5 +179,21 @@ mod tests {
         r.snapshot(60.0, 0.9, 10.0);
         assert_eq!(r.lr_series.len(), 2);
         assert_eq!(r.transient_series.len(), 2);
+    }
+
+    #[test]
+    fn default_backend_is_fixed_memory() {
+        let mut r = Recorder::new(1.0);
+        let before = r.delay_struct_bytes();
+        for i in 0..10_000 {
+            r.task_started(i % 7 == 0, (i % 313) as f64);
+        }
+        assert_eq!(r.delay_struct_bytes(), before, "sketch recorder memory grew");
+        let mut rx = Recorder::new_exact(1.0);
+        let b0 = rx.delay_struct_bytes();
+        for i in 0..1000 {
+            rx.task_started(false, i as f64);
+        }
+        assert!(rx.delay_struct_bytes() > b0);
     }
 }

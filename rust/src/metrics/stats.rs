@@ -50,22 +50,43 @@ impl StreamingStats {
     }
 }
 
-/// Full-sample container for metrics we need exact percentiles/CDFs of
-/// (short-task queueing delays: one f64 per task, fine at trace scale).
+/// Full-sample container for metrics we need exact percentiles/CDFs of.
+///
+/// This is the **exact reference backend** behind
+/// [`crate::metrics::DelayDist`]: one f64 per sample, so memory grows
+/// with the run. The default simulation path uses the fixed-memory
+/// [`crate::metrics::DelayHistogram`] sketch instead; this Vec path is
+/// kept alive purely for golden comparisons
+/// (`SimConfig::exact_delay_samples`). `mean` accumulates a running sum
+/// in push order so it is bit-identical to the sketch backend's.
 #[derive(Clone, Debug, Default)]
 pub struct DelaySamples {
     samples: Vec<f64>,
+    /// Running sum in push order (exact mean, sort-state independent).
+    sum: f64,
     sorted: bool,
+}
+
+impl PartialEq for DelaySamples {
+    /// Sample-*sequence* equality, excluding the sort flag itself. Note
+    /// that quantile queries (`percentile`/`cdf_at`) sort `samples` in
+    /// place, so equality IS sensitive to sort state: golden
+    /// comparisons must compare distributions *before* querying
+    /// quantiles on either side (all in-tree goldens do).
+    fn eq(&self, other: &Self) -> bool {
+        self.samples == other.samples
+    }
 }
 
 impl DelaySamples {
     pub fn new() -> Self {
-        DelaySamples { samples: Vec::new(), sorted: true }
+        DelaySamples { samples: Vec::new(), sum: 0.0, sorted: true }
     }
 
     #[inline]
     pub fn push(&mut self, x: f64) {
         self.samples.push(x);
+        self.sum += x;
         self.sorted = false;
     }
 
@@ -81,12 +102,31 @@ impl DelaySamples {
         &self.samples
     }
 
+    /// Bytes of the backing allocation (Vec capacity, not just length —
+    /// growth-doubling means the resident block can be ~2x the samples).
+    pub fn memory_bytes(&self) -> usize {
+        self.samples.capacity() * std::mem::size_of::<f64>()
+    }
+
     pub fn mean(&self) -> f64 {
-        crate::util::mean(&self.samples)
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum / self.samples.len() as f64
+        }
     }
 
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Exact minimum (0.0 when empty, mirroring [`DelaySamples::max`]).
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        }
     }
 
     fn ensure_sorted(&mut self) {
@@ -96,13 +136,17 @@ impl DelaySamples {
         }
     }
 
+    /// Exact quantile under the crate-wide ceil-based nearest-rank
+    /// convention ([`crate::util::nearest_rank_index`]): q = 0 is the
+    /// minimum, q = 1 the maximum, and half-ranks are *defined* (n = 2,
+    /// q = 0.5 is the lower sample) — no `.round()` half-away
+    /// ambiguity. The histogram backend uses the identical convention.
     pub fn percentile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         self.ensure_sorted();
-        let pos = (q.clamp(0.0, 1.0) * (self.samples.len() - 1) as f64).round() as usize;
-        self.samples[pos]
+        self.samples[crate::util::nearest_rank_index(self.samples.len(), q)]
     }
 
     /// Empirical CDF value at `x` (fraction of samples <= x).
@@ -152,7 +196,43 @@ mod tests {
         assert_eq!(d.percentile(1.0), 100.0);
         assert_eq!(d.percentile(0.0), 0.0);
         assert_eq!(d.max(), 100.0);
+        assert_eq!(d.min(), 0.0);
         assert!((d.mean() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_convention_is_ceil_nearest_rank() {
+        // n = 2, q = 0.5: rank ceil(1.0) = 1 -> the LOWER sample. The
+        // old `(q*(n-1)).round()` hit an exact .5 here and depended on
+        // platform round-half-away behaviour.
+        let mut d = DelaySamples::new();
+        d.push(10.0);
+        d.push(20.0);
+        assert_eq!(d.percentile(0.5), 10.0);
+        // n = 10, q = 0.99: rank ceil(9.9) = 10 -> the maximum.
+        let mut d10 = DelaySamples::new();
+        for i in 1..=10 {
+            d10.push(i as f64);
+        }
+        assert_eq!(d10.percentile(0.99), 10.0);
+        // n = 10, q = 0.9: rank ceil(9.0) = 9 -> the 9th sample, not max.
+        assert_eq!(d10.percentile(0.9), 9.0);
+    }
+
+    #[test]
+    fn mean_is_push_order_sum_even_after_sorting() {
+        // The running sum makes mean independent of percentile()'s lazy
+        // sort — and bit-identical to the histogram backend's.
+        let xs = [5.0, 1.0, 3.5, 0.25, 9.0];
+        let mut d = DelaySamples::new();
+        for &x in &xs {
+            d.push(x);
+        }
+        let before = d.mean();
+        d.percentile(0.5); // sorts internally
+        assert_eq!(before.to_bits(), d.mean().to_bits());
+        let seq_sum: f64 = xs.iter().sum();
+        assert_eq!(before.to_bits(), (seq_sum / 5.0).to_bits());
     }
 
     #[test]

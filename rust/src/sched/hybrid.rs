@@ -21,7 +21,7 @@ use crate::cluster::ServerKind;
 use crate::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
 use crate::sched::{SchedCtx, Scheduler};
 use crate::trace::Job;
-use crate::util::{ServerId, TaskRef};
+use crate::util::{ServerRef, TaskRef};
 
 /// Eagle-style hybrid placement (also CloudCoaster's placement engine).
 pub struct Hybrid {
@@ -35,8 +35,8 @@ pub struct Hybrid {
     pub use_succinct_state: bool,
     name: &'static str,
     buf: ProbeBuffers,
-    out: Vec<ServerId>,
-    pool: Vec<ServerId>,
+    out: Vec<ServerRef>,
+    pool: Vec<ServerRef>,
 }
 
 impl Hybrid {

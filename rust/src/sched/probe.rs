@@ -7,12 +7,12 @@
 
 use crate::cluster::Cluster;
 use crate::sim::Rng;
-use crate::util::ServerId;
+use crate::util::ServerRef;
 
 /// Reusable scratch buffers for probe-based placement.
 #[derive(Default)]
 pub struct ProbeBuffers {
-    pub candidates: Vec<ServerId>,
+    pub candidates: Vec<ServerRef>,
     pub loads: Vec<f64>,
 }
 
@@ -26,7 +26,7 @@ impl ProbeBuffers {
 /// `pool`, keeping only servers that are currently accepting work, and
 /// append them to `buf.candidates`.
 pub fn sample_from_pool(
-    pool: &[ServerId],
+    pool: &[ServerRef],
     k: usize,
     cluster: &Cluster,
     rng: &mut Rng,
@@ -61,7 +61,7 @@ pub fn assign_least_loaded(
     cluster: &Cluster,
     task_costs: &[f64],
     buf: &mut ProbeBuffers,
-    out: &mut Vec<ServerId>,
+    out: &mut Vec<ServerRef>,
 ) {
     out.clear();
     buf.loads.clear();
@@ -95,9 +95,9 @@ mod tests {
         let mut r = Recorder::new(1.0);
         // Server 0 busy with a long task; server 1 busy with a short one.
         let t0 = c.add_task(JobId(0), 1000.0, true, 0.0);
-        c.enqueue(t0, ServerId(0), &mut e, &mut r);
+        c.enqueue(t0, ServerRef::initial(0), &mut e, &mut r);
         let t1 = c.add_task(JobId(0), 10.0, false, 0.0);
-        c.enqueue(t1, ServerId(1), &mut e, &mut r);
+        c.enqueue(t1, ServerRef::initial(1), &mut e, &mut r);
         (c, e, r)
     }
 
@@ -106,7 +106,7 @@ mod tests {
         let (c, _, _) = cluster_with_load();
         let mut rng = Rng::new(1);
         let mut buf = ProbeBuffers::new();
-        let pool: Vec<ServerId> = c.general.clone();
+        let pool: Vec<ServerRef> = c.general.clone();
         sample_from_pool(&pool, 64, &c, &mut rng, &mut buf);
         assert!(!buf.candidates.is_empty());
         assert!(buf.candidates.iter().all(|s| c.general.contains(s)));
@@ -118,20 +118,20 @@ mod tests {
         let mut buf = ProbeBuffers::new();
         buf.candidates = c.general.clone();
         filter_long(&c, &mut buf);
-        assert!(!buf.candidates.contains(&ServerId(0)));
-        assert!(buf.candidates.contains(&ServerId(1)));
+        assert!(!buf.candidates.contains(&ServerRef::initial(0)));
+        assert!(buf.candidates.contains(&ServerRef::initial(1)));
     }
 
     #[test]
     fn least_loaded_spreads_over_probe_set() {
         let (c, _, _) = cluster_with_load();
         let mut buf = ProbeBuffers::new();
-        buf.candidates = vec![ServerId(2), ServerId(3)];
+        buf.candidates = vec![ServerRef::initial(2), ServerRef::initial(3)];
         let mut out = Vec::new();
         // Four equal tasks over two idle candidates -> 2 each.
         assign_least_loaded(&c, &[5.0, 5.0, 5.0, 5.0], &mut buf, &mut out);
-        let on2 = out.iter().filter(|&&s| s == ServerId(2)).count();
-        let on3 = out.iter().filter(|&&s| s == ServerId(3)).count();
+        let on2 = out.iter().filter(|&&s| s == ServerRef::initial(2)).count();
+        let on3 = out.iter().filter(|&&s| s == ServerRef::initial(3)).count();
         assert_eq!(on2, 2);
         assert_eq!(on3, 2);
     }
@@ -140,10 +140,10 @@ mod tests {
     fn least_loaded_prefers_idle_over_busy() {
         let (c, _, _) = cluster_with_load();
         let mut buf = ProbeBuffers::new();
-        buf.candidates = vec![ServerId(1), ServerId(2)]; // 1 busy, 2 idle
+        buf.candidates = vec![ServerRef::initial(1), ServerRef::initial(2)]; // 1 busy, 2 idle
         let mut out = Vec::new();
         assign_least_loaded(&c, &[1.0], &mut buf, &mut out);
-        assert_eq!(out, vec![ServerId(2)]);
+        assert_eq!(out, vec![ServerRef::initial(2)]);
     }
 
     #[test]

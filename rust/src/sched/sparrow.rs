@@ -6,15 +6,15 @@
 use crate::sched::probe::{assign_least_loaded, sample_from_pool, ProbeBuffers};
 use crate::sched::{SchedCtx, Scheduler};
 use crate::trace::Job;
-use crate::util::{ServerId, TaskRef};
+use crate::util::{ServerRef, TaskRef};
 
 /// Batch-sampling decentralized placement over the whole cluster.
 pub struct Sparrow {
     /// Probes per task (d in power-of-d; Sparrow uses 2).
     pub probe_ratio: f64,
     buf: ProbeBuffers,
-    out: Vec<ServerId>,
-    pool: Vec<ServerId>,
+    out: Vec<ServerRef>,
+    pool: Vec<ServerRef>,
 }
 
 impl Sparrow {

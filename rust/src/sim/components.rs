@@ -20,7 +20,7 @@ use crate::runtime::Analytics;
 use crate::sched::{SchedCtx, Scheduler};
 use crate::sim::{Component, Engine, Event, Rng, WorldCtx};
 use crate::transient::{ManagerConfig, TransientManager};
-use crate::util::{ServerId, Time};
+use crate::util::{ServerRef, Time};
 
 // ------------------------------------------------------------- scheduler
 
@@ -142,9 +142,11 @@ impl Component for WorkStealer {
         }
         let thief = *server;
         {
-            let s = ctx.cluster.server(thief);
-            // A drained server was retired by the world core and is no
-            // longer accepting; busy servers don't steal.
+            // Generation-checked: a drained server was retired by the
+            // world core within this event — its slot may already be
+            // released (and later recycled), so the stale handle must
+            // not dereference. Busy servers don't steal either.
+            let Some(s) = ctx.cluster.get_server(thief) else { return };
             if !(s.is_idle() && s.accepting()) {
                 return;
             }
@@ -166,7 +168,7 @@ impl Component for WorkStealer {
 /// steal from the first victim with queued work.
 fn try_steal(
     cluster: &mut Cluster,
-    thief: ServerId,
+    thief: ServerRef,
     steal_probes: usize,
     steal_batch: usize,
     rng: &mut Rng,

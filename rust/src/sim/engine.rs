@@ -112,7 +112,7 @@ impl Default for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::{JobId, ServerId, TaskRef};
+    use crate::util::{JobId, ServerRef, TaskRef};
 
     #[test]
     fn pops_in_time_order() {
@@ -147,7 +147,7 @@ mod tests {
         e.pop();
         assert_eq!(e.now(), 1.0);
         // schedule_after is relative to the advanced clock
-        e.schedule_after(1.5, Event::TaskFinish { server: ServerId(0), task: TaskRef { slot: 0, gen: 0 } });
+        e.schedule_after(1.5, Event::TaskFinish { server: ServerRef::initial(0), task: TaskRef { slot: 0, gen: 0 } });
         let (t, _) = e.pop().unwrap();
         assert_eq!(t, 2.5);
         let (t, _) = e.pop().unwrap();

@@ -6,9 +6,15 @@
 //! processed in the order they were scheduled, which keeps runs bitwise
 //! deterministic.
 
-use crate::util::{JobId, ServerId, TaskRef};
+use crate::util::{JobId, ServerRef, TaskRef};
 
 /// A discrete event in the cluster simulation.
+///
+/// Every server-addressed event carries a generation-tagged
+/// [`ServerRef`]: the server arena recycles retired transient slots, so
+/// an event that outlives its server (a `Revoked` racing a drain, a
+/// warning for an already-retired lease) fails the generation check at
+/// pop and is skipped — it can never act on the slot's next tenant.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Event {
     /// A job from the trace arrives at the scheduler front-end.
@@ -18,18 +24,18 @@ pub enum Event {
     /// liveness ref on the arena slot, and a revocation that kills the
     /// execution leaves this event to resolve as stale at pop — it can
     /// never alias a recycled slot.
-    TaskFinish { server: ServerId, task: TaskRef },
+    TaskFinish { server: ServerRef, task: TaskRef },
     /// A requested transient server finishes provisioning and joins the
     /// dynamic short partition (paper: 120 s provisioning delay).
-    TransientReady(ServerId),
+    TransientReady(ServerRef),
     /// The cloud provider signals an upcoming revocation (e.g. the 30 s
     /// spot warning); the server stops accepting new tasks.
-    RevocationWarning(ServerId),
+    RevocationWarning(ServerRef),
     /// The transient server is revoked: its queue is lost; running and
     /// queued tasks survive only through their on-demand copies (§3.3).
-    Revoked(ServerId),
+    Revoked(ServerRef),
     /// A draining transient server has emptied its queue and shuts down.
-    DrainComplete(ServerId),
+    DrainComplete(ServerRef),
     /// Periodic metrics snapshot (timeseries of l_r, active transients,
     /// cost accounting) and the epoch hook for the XLA analytics path.
     Snapshot,
@@ -59,11 +65,11 @@ mod tests {
     fn kinds_are_distinct() {
         let kinds = [
             Event::JobArrival(JobId(0)).kind(),
-            Event::TaskFinish { server: ServerId(0), task: TaskRef { slot: 0, gen: 0 } }.kind(),
-            Event::TransientReady(ServerId(0)).kind(),
-            Event::RevocationWarning(ServerId(0)).kind(),
-            Event::Revoked(ServerId(0)).kind(),
-            Event::DrainComplete(ServerId(0)).kind(),
+            Event::TaskFinish { server: ServerRef::initial(0), task: TaskRef { slot: 0, gen: 0 } }.kind(),
+            Event::TransientReady(ServerRef::initial(0)).kind(),
+            Event::RevocationWarning(ServerRef::initial(0)).kind(),
+            Event::Revoked(ServerRef::initial(0)).kind(),
+            Event::DrainComplete(ServerRef::initial(0)).kind(),
             Event::Snapshot.kind(),
         ];
         let mut sorted = kinds.to_vec();

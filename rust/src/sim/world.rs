@@ -16,11 +16,14 @@
 //! only a small per-job metadata record (arrival, class, remaining task
 //! count) survives until the job completes. Peak resident job count is
 //! therefore set by cluster load, not trace length (tracked by
-//! [`World::peak_resident_jobs`]); the cluster's generational task arena
-//! bounds task slots the same way ([`World::peak_resident_tasks`]).
-//! (The remaining O(trace) growth is per-task delay samples in the
-//! recorder and one server slot per transient ever requested — see the
-//! ROADMAP item on trace-scale memory.)
+//! [`World::peak_resident_jobs`]); the cluster's generational task and
+//! server arenas bound task and server slots the same way
+//! ([`World::peak_resident_tasks`] / [`World::peak_resident_servers`]),
+//! and the recorder's per-sample delay populations stream through
+//! fixed-memory histogram sketches — so per-job, per-task and
+//! per-transient state is load-bound, not trace-bound. (The sampled
+//! snapshot time series still collects one point per
+//! `snapshot_interval`; see the ROADMAP item.)
 //!
 //! **Borrowed lookahead**: a world built over an eager [`Workload`]
 //! ([`World::from_workload`]) borrows each job straight from the
@@ -302,6 +305,14 @@ impl<'w> World<'w> {
         self.cluster.peak_resident_tasks()
     }
 
+    /// High-water mark of concurrently-resident server-arena slots:
+    /// on-demand size + peak concurrent transients — with slot
+    /// recycling this bounds the server arena even under heavy
+    /// revocation churn, independent of transients ever requested.
+    pub fn peak_resident_servers(&self) -> usize {
+        self.cluster.peak_resident_servers()
+    }
+
     fn ctx(&mut self) -> WorldCtx<'_> {
         WorldCtx {
             cluster: &mut self.cluster,
@@ -456,15 +467,20 @@ impl<'w> World<'w> {
                     }
                 }
                 Event::Revoked(sid) => {
-                    let state = self.cluster.server(sid).state;
-                    if matches!(state, ServerState::Active | ServerState::Draining) {
+                    // Generation-checked: a stale Revoked (the server
+                    // already drained/retired and its slot possibly
+                    // recycled) must not touch the slot's next tenant.
+                    let state = self.cluster.get_server(sid).map(|s| s.state);
+                    if matches!(state, Some(ServerState::Active | ServerState::Draining)) {
                         self.orphans = self.cluster.revoke(sid, now, &mut self.rec);
                     }
                 }
                 Event::DrainComplete(sid) => {
-                    if self.cluster.server(sid).state == ServerState::Draining
-                        && self.cluster.server(sid).is_idle()
-                    {
+                    let ok = self
+                        .cluster
+                        .get_server(sid)
+                        .is_some_and(|s| s.state == ServerState::Draining && s.is_idle());
+                    if ok {
                         self.cluster.retire(sid, now, &mut self.rec);
                     }
                 }

@@ -18,7 +18,7 @@ use crate::cluster::{Cluster, ServerState};
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event, Rng};
 use crate::transient::{Budget, Market, MarketConfig};
-use crate::util::ServerId;
+use crate::util::ServerRef;
 
 /// Resize-policy configuration.
 #[derive(Clone, Debug)]
@@ -215,23 +215,27 @@ impl TransientManager {
     /// the cluster's transient-pool index — an O(log n) argmin over the
     /// lexicographic `(depth, est_work)` key with the same first-minimal
     /// tie-break as the scan it replaced.
-    fn pick_victim(&self, cluster: &Cluster) -> ServerId {
+    fn pick_victim(&self, cluster: &Cluster) -> ServerRef {
         cluster.transient_drain_victim().expect("pick_victim on empty pool")
     }
 
-    /// `TransientReady` arrived: the server joins the pool (unless it was
-    /// cancelled by an early revocation — cannot happen with the default
-    /// market, but guard anyway).
-    pub fn on_ready(&mut self, sid: ServerId, cluster: &mut Cluster, engine: &Engine, rec: &mut Recorder) {
+    /// `TransientReady` arrived: the server joins the pool. The handle
+    /// is generation-checked — a Provisioning server is never retired,
+    /// so a stale ready event cannot happen with the current lifecycle,
+    /// but the check keeps the slot's next tenant safe regardless.
+    pub fn on_ready(&mut self, sid: ServerRef, cluster: &mut Cluster, engine: &Engine, rec: &mut Recorder) {
         self.pending = self.pending.saturating_sub(1);
-        if cluster.server(sid).state == ServerState::Provisioning {
+        if cluster.get_server(sid).map(|s| s.state) == Some(ServerState::Provisioning) {
             cluster.transient_ready(sid, engine.now(), rec);
         }
     }
 
     /// `RevocationWarning` arrived: stop accepting work; try to finish.
-    pub fn on_warning(&mut self, sid: ServerId, cluster: &mut Cluster, engine: &Engine, rec: &mut Recorder) {
-        if cluster.server(sid).state == ServerState::Active {
+    /// Generation-checked: the lease may have been drained and retired
+    /// (and its slot recycled) before the warning popped — a stale
+    /// warning must not drain the slot's next tenant.
+    pub fn on_warning(&mut self, sid: ServerRef, cluster: &mut Cluster, engine: &Engine, rec: &mut Recorder) {
+        if cluster.get_server(sid).map(|s| s.state) == Some(ServerState::Active) {
             if cluster.begin_drain(sid) {
                 cluster.retire(sid, engine.now(), rec);
             }
@@ -374,7 +378,9 @@ mod tests {
             ));
             cluster.retire(server, engine.now(), &mut rec);
         }
-        assert_eq!(cluster.server(sid).state, ServerState::Retired);
+        // Retired -> the arena slot released, so the handle is dead
+        // (generation-checked), not merely pointing at a Retired state.
+        assert!(cluster.get_server(sid).is_none(), "retired slot not released");
         assert_eq!(rec.cost.lifetimes.len(), 1);
         cluster.check_invariants();
     }

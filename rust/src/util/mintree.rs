@@ -51,6 +51,31 @@ impl IndexKey for (u32, f64) {
     }
 }
 
+/// Lexicographic `(queue depth, est_work, ready_seq)` — the transient
+/// drain-victim key with an explicit activation-order tie-break. The
+/// trailing `ready_seq` (unique per transient activation) makes exact
+/// key ties impossible, so the argmin is independent of *tree-slot*
+/// order — which lets the transient index recycle tree slots while
+/// preserving the historical "first-minimal in `TransientReady` order"
+/// tie-break bit-exactly.
+impl IndexKey for (u32, f64, u64) {
+    const ZERO: Self = (0, 0.0, 0);
+    const MAX_KEY: Self = (u32::MAX, f64::INFINITY, u64::MAX);
+
+    #[inline]
+    fn le(&self, other: &Self) -> bool {
+        match self.0.cmp(&other.0) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => match self.1.total_cmp(&other.1) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => self.2 <= other.2,
+            },
+        }
+    }
+}
+
 /// Argmin segment tree over `n` keys.
 #[derive(Clone, Debug)]
 pub struct MinTree<K: IndexKey = f64> {
@@ -235,5 +260,21 @@ mod tests {
         assert_eq!(t.argmin(), 1);
         t.update(1, <(u32, f64)>::MAX_KEY); // tombstone
         assert_eq!(t.argmin(), 2);
+    }
+
+    #[test]
+    fn seq_tagged_keys_break_ties_by_activation_order() {
+        let mut t: MinTree<(u32, f64, u64)> = MinTree::new(4);
+        // Equal (depth, est_work); seq decides — independent of slot
+        // order, so reusing tree slots cannot change the winner.
+        t.update(0, (0, 0.0, 7));
+        t.update(1, (0, 0.0, 3));
+        t.update(2, (0, 0.0, 5));
+        t.update(3, <(u32, f64, u64)>::MAX_KEY);
+        assert_eq!(t.argmin(), 1);
+        t.update(1, (1, 0.0, 3)); // deeper queue loses despite lower seq
+        assert_eq!(t.argmin(), 2);
+        t.update(0, (0, -1.0, 7)); // est_work dominates seq
+        assert_eq!(t.argmin(), 0);
     }
 }

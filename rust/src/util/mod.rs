@@ -38,13 +38,54 @@ macro_rules! id_type {
 }
 
 id_type!(
-    /// Identifies a server slot in the [`crate::cluster::Cluster`] arena.
-    ServerId
-);
-id_type!(
     /// Identifies a job in the workload trace.
     JobId
 );
+
+/// A generation-tagged handle into the [`crate::cluster::Cluster`]
+/// **server** arena — the server twin of [`TaskRef`], superseding the
+/// old raw `ServerId`.
+///
+/// `slot` indexes the arena; `gen` is the slot's generation at the time
+/// the handle was issued. On-demand servers live forever in the arena
+/// prefix (generation 0); a *retired transient's* slot is released —
+/// and its generation bumped — so any handle that outlives the server
+/// (a stale `Revoked`/`RevocationWarning` event, a revoked execution's
+/// `TaskFinish`) fails the generation check instead of silently acting
+/// on whatever transient reuses the slot.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServerRef {
+    pub slot: u32,
+    pub gen: u32,
+}
+
+impl ServerRef {
+    /// Arena slot as a `usize` index.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.slot as usize
+    }
+
+    /// Generation-0 handle — the identity every on-demand server keeps
+    /// for the whole run (their slots never recycle), and the first
+    /// incarnation of each transient slot.
+    #[inline]
+    pub fn initial(slot: u32) -> Self {
+        ServerRef { slot, gen: 0 }
+    }
+}
+
+impl fmt::Debug for ServerRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ServerRef({}@{})", self.slot, self.gen)
+    }
+}
+
+impl fmt::Display for ServerRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.slot, self.gen)
+    }
+}
 
 /// A generation-tagged handle into the [`crate::cluster::Cluster`] task
 /// arena.
@@ -112,15 +153,30 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
-/// Exact percentile via sorting a copy; `q` in [0,1].
+/// Ceil-based nearest-rank index for quantile `q` over `n` samples:
+/// `rank = clamp(ceil(q·n), 1, n)`, returned as a 0-based index.
+///
+/// This is the crate-wide quantile convention (pinned by unit tests in
+/// `metrics::stats`): q = 0 is the minimum, q = 1 the maximum, and the
+/// returned value is always an observed sample — no interpolation, no
+/// platform-dependent `.round()` half-away behaviour on exact .5 ranks
+/// (e.g. n = 2, q = 0.5 is *defined* to be the lower sample).
+#[inline]
+pub fn nearest_rank_index(n: usize, q: f64) -> usize {
+    debug_assert!(n > 0);
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    rank.clamp(1, n) - 1
+}
+
+/// Exact percentile via sorting a copy; `q` in [0,1]. Ceil-based
+/// nearest-rank (see [`nearest_rank_index`]); 0.0 on empty input.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
-    let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
-    v[pos]
+    v[nearest_rank_index(v.len(), q)]
 }
 
 #[cfg(test)]
@@ -136,11 +192,15 @@ mod tests {
 
     #[test]
     fn ids_are_compact() {
-        assert_eq!(std::mem::size_of::<ServerId>(), 4);
-        assert_eq!(ServerId(7).index(), 7);
+        assert_eq!(std::mem::size_of::<JobId>(), 4);
+        assert_eq!(JobId(7).index(), 7);
         assert_eq!(std::mem::size_of::<TaskRef>(), 8);
         assert_eq!(TaskRef { slot: 7, gen: 3 }.index(), 7);
         assert_ne!(TaskRef { slot: 7, gen: 3 }, TaskRef { slot: 7, gen: 4 });
+        assert_eq!(std::mem::size_of::<ServerRef>(), 8);
+        assert_eq!(ServerRef { slot: 7, gen: 3 }.index(), 7);
+        assert_ne!(ServerRef { slot: 7, gen: 3 }, ServerRef { slot: 7, gen: 4 });
+        assert_eq!(ServerRef::initial(7), ServerRef { slot: 7, gen: 0 });
     }
 
     #[test]
@@ -151,5 +211,22 @@ mod tests {
         assert_eq!(percentile(&xs, 1.0), 4.0);
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn nearest_rank_is_ceil_based_and_defined_on_half_ranks() {
+        // n = 2, q = 0.5 -> ceil(1.0) = rank 1 -> the LOWER sample; the
+        // old `(q*(n-1)).round()` formulation hit .5 and depended on
+        // round-half-away semantics.
+        assert_eq!(nearest_rank_index(2, 0.5), 0);
+        // n = 10, q = 0.99 -> ceil(9.9) = rank 10 -> the maximum.
+        assert_eq!(nearest_rank_index(10, 0.99), 9);
+        // n = 10, q = 0.9 -> ceil(9.0) = rank 9 (not 10).
+        assert_eq!(nearest_rank_index(10, 0.9), 8);
+        assert_eq!(nearest_rank_index(5, 0.0), 0);
+        assert_eq!(nearest_rank_index(5, 1.0), 4);
+        assert_eq!(nearest_rank_index(1, 0.37), 0);
+        let xs = [1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.5), 1.0);
     }
 }

@@ -1,17 +1,23 @@
-//! Generational task-arena stress tests: randomized interleavings of
-//! enqueue (with §3.3 duplicate copies), finish, steal, revoke, drain
-//! and provision, asserting that
+//! Generational arena stress tests (tasks AND servers): randomized
+//! interleavings of enqueue (with §3.3 duplicate copies), finish,
+//! steal, revoke, drain and provision, asserting that
 //!
 //! * a recycled slot is **never resurrected** — every task finishes at
-//!   most once, stale handles stay stale forever, and a stale finish
-//!   event from a revoked execution resolves to `Stale`;
-//! * the arena's slot count stays bounded by peak-active tasks (the
-//!   O(active) memory guarantee), while with recycling off it grows with
-//!   total tasks;
+//!   most once, stale task/server handles stay stale forever, and a
+//!   stale finish event from a revoked execution resolves to `Stale`;
+//! * both arenas stay bounded by their peak-active counts (the
+//!   O(active) memory guarantee), while with recycling off they grow
+//!   with totals (tasks ever created / transients ever requested);
 //! * recycling is **observationally invisible**: the same op sequence
-//!   against a recycling and a non-recycling cluster produces the exact
-//!   same delays, finish counts, stale-copy counts and
-//!   `peak_resident_tasks`.
+//!   against recycling and non-recycling clusters — any combination of
+//!   the task and server toggles — produces the exact same delays,
+//!   finish counts, stale-copy counts, `peak_resident_tasks` and
+//!   `peak_resident_servers`. Only slot counts may differ.
+//!
+//! Every operation selects its targets through the *pools* (general /
+//! short-reserved / transient, in ready order), never through raw slot
+//! indices — pool contents and order are recycling-mode independent,
+//! so the same seed drives the identical op sequence in every mode.
 
 use std::collections::HashMap;
 
@@ -19,7 +25,7 @@ use cloudcoaster::cluster::{Cluster, FinishOutcome, QueuePolicy, TaskState};
 use cloudcoaster::metrics::Recorder;
 use cloudcoaster::sim::{Engine, Event, Rng};
 use cloudcoaster::testkit::{property, usize_in};
-use cloudcoaster::util::{JobId, ServerId, TaskRef};
+use cloudcoaster::util::{JobId, ServerRef, TaskRef};
 
 /// Everything observable a driver run produces (minus slot counts, which
 /// legitimately differ between arena modes).
@@ -28,29 +34,65 @@ struct RunObservables {
     tasks_finished: u64,
     stale_copies_skipped: u64,
     tasks_rescheduled: u64,
+    transients_requested: u64,
+    transients_revoked: u64,
     short_delays: Vec<f64>,
     peak_resident_tasks: usize,
+    peak_resident_servers: usize,
     end_time_bits: u64,
 }
 
+/// Slot counts, which are exactly what the modes are allowed to change.
+#[derive(Debug, Clone, Copy)]
+struct SlotCounts {
+    task_slots: usize,
+    server_slots: usize,
+}
+
+/// A live server the driver may target, chosen by pool position (mode
+/// independent): index into general ++ short_reserved ++ transient_pool.
+fn pool_member(cluster: &Cluster, k: usize) -> ServerRef {
+    let g = cluster.general.len();
+    let s = cluster.short_reserved.len();
+    if k < g {
+        cluster.general[k]
+    } else if k < g + s {
+        cluster.short_reserved[k - g]
+    } else {
+        cluster.transient_pool[k - g - s]
+    }
+}
+
+fn pool_size(cluster: &Cluster) -> usize {
+    cluster.general.len() + cluster.short_reserved.len() + cluster.transient_pool.len()
+}
+
 /// Drive a random but fully seed-determined interleaving of cluster ops.
-/// Returns the observables plus the final slot count.
-fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
+fn drive(
+    seed: u64,
+    recycle_tasks: bool,
+    recycle_servers: bool,
+    steps: usize,
+) -> (RunObservables, SlotCounts) {
     let mut rng = Rng::new(seed);
     let mut cluster = Cluster::new(6, 3, QueuePolicy::Fifo);
-    cluster.set_task_recycling(recycle);
+    cluster.set_task_recycling(recycle_tasks);
+    cluster.set_server_recycling(recycle_servers);
     let mut engine = Engine::new();
-    let mut rec = Recorder::new(2.0);
+    // Exact delay backend: observables compare the raw sample sequence.
+    let mut rec = Recorder::new_exact(2.0);
 
-    // Per-ref bookkeeping: how many times each issued handle finished.
+    // Per-ref bookkeeping: how many times each issued handle finished,
+    // and every transient handle ever issued (for resurrection checks).
     let mut finish_counts: HashMap<TaskRef, u32> = HashMap::new();
     let mut issued: Vec<TaskRef> = Vec::new();
+    let mut leased: Vec<ServerRef> = Vec::new();
 
     let mut process_finish = |cluster: &mut Cluster,
                               engine: &mut Engine,
                               rec: &mut Recorder,
                               finish_counts: &mut HashMap<TaskRef, u32>,
-                              server: ServerId,
+                              server: ServerRef,
                               task: TaskRef| {
         match cluster.on_task_finish(server, task, engine, rec) {
             FinishOutcome::Stale => {}
@@ -67,16 +109,11 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
 
     for step in 0..steps {
         match rng.below(12) {
-            // Enqueue a fresh short/long task; sometimes mirror a §3.3
-            // duplicate copy onto an on-demand short server.
+            // Enqueue a fresh short/long task on a random accepting pool
+            // member; sometimes mirror a §3.3 duplicate copy onto an
+            // on-demand short server.
             0..=5 => {
-                let accepting: Vec<ServerId> = cluster
-                    .servers
-                    .iter()
-                    .filter(|s| s.accepting())
-                    .map(|s| s.id)
-                    .collect();
-                let sid = accepting[rng.below(accepting.len() as u64) as usize];
+                let sid = pool_member(&cluster, rng.below(pool_size(&cluster) as u64) as usize);
                 let is_long = cluster.general.contains(&sid) && rng.f64() < 0.25;
                 let dur = 0.5 + rng.f64() * 40.0;
                 let t = cluster.add_task(JobId(step as u32), dur, is_long, engine.now());
@@ -105,23 +142,20 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
                     }
                 }
             }
-            // Steal between random servers.
+            // Steal between random live pool members.
             8 => {
-                let n = cluster.servers.len() as u64;
-                let victim = ServerId(rng.below(n) as u32);
-                let thief = ServerId(rng.below(n) as u32);
-                if cluster.server(victim).state != cloudcoaster::cluster::ServerState::Retired
-                    && cluster.server(victim).state
-                        != cloudcoaster::cluster::ServerState::Provisioning
-                {
-                    let batch = usize_in(&mut rng, 1, 4);
-                    cluster.steal_short_tasks(victim, thief, batch, &mut engine, &mut rec);
-                }
+                let n = pool_size(&cluster) as u64;
+                let victim = pool_member(&cluster, rng.below(n) as usize);
+                let thief = pool_member(&cluster, rng.below(n) as usize);
+                let batch = usize_in(&mut rng, 1, 4);
+                cluster.steal_short_tasks(victim, thief, batch, &mut engine, &mut rec);
             }
             // Provision a transient.
             9 => {
                 if cluster.transient_pool.len() < 6 {
                     let sid = cluster.request_transient(engine.now());
+                    rec.transients_requested += 1;
+                    leased.push(sid);
                     cluster.transient_ready(sid, engine.now(), &mut rec);
                 }
             }
@@ -135,13 +169,23 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
                     }
                 }
             }
-            // Revoke (the stale-finish / shadow-copy gauntlet); re-place
-            // orphans like the default scheduler fallback.
+            // Revoke (the stale-finish / shadow-copy / stale-handle
+            // gauntlet); re-place orphans like the default scheduler
+            // fallback.
             _ => {
                 if !cluster.transient_pool.is_empty() {
                     let k = rng.below(cluster.transient_pool.len() as u64) as usize;
                     let sid = cluster.transient_pool[k];
                     let orphans = cluster.revoke(sid, engine.now(), &mut rec);
+                    // The revoked handle must be dead immediately with
+                    // recycling on; with it off the payload is Retired.
+                    match cluster.get_server(sid) {
+                        None => assert!(recycle_servers, "slot released with recycling off"),
+                        Some(s) => {
+                            assert!(!recycle_servers, "revoked slot still live with recycling on");
+                            assert_eq!(s.state, cloudcoaster::cluster::ServerState::Retired);
+                        }
+                    }
                     for tid in orphans {
                         rec.tasks_rescheduled += 1;
                         let target = cluster
@@ -153,14 +197,22 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
             }
         }
         cluster.check_invariants();
-        if recycle {
+        if recycle_tasks {
             // The memory headline: the arena never holds more slots than
             // the peak number of simultaneously live tasks.
             assert!(
                 cluster.task_slots() <= cluster.peak_resident_tasks(),
-                "arena grew past peak-active: {} slots vs peak {}",
+                "task arena grew past peak-active: {} slots vs peak {}",
                 cluster.task_slots(),
                 cluster.peak_resident_tasks()
+            );
+        }
+        if recycle_servers {
+            assert!(
+                cluster.server_slots() <= cluster.peak_resident_servers(),
+                "server arena grew past peak-active: {} slots vs peak {}",
+                cluster.server_slots(),
+                cluster.peak_resident_servers()
             );
         }
     }
@@ -182,7 +234,7 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
         "finish count != issued tasks"
     );
     assert_eq!(rec.tasks_finished as usize, issued.len());
-    if recycle {
+    if recycle_tasks {
         // Everything settled at quiescence -> every slot released, and no
         // stale handle dereferences.
         assert_eq!(cluster.resident_tasks(), 0, "slots still pinned after quiesce");
@@ -198,17 +250,38 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
             "slot count != peak-active"
         );
     }
+    if recycle_servers {
+        // Retired leases released their slots; handles of *currently
+        // Active* transients still resolve, all others are dead.
+        for &sid in &leased {
+            if let Some(s) = cluster.get_server(sid) {
+                assert_ne!(
+                    s.state,
+                    cloudcoaster::cluster::ServerState::Retired,
+                    "retired lease {sid:?} still dereferences — server resurrection"
+                );
+            }
+        }
+        assert_eq!(
+            cluster.server_slots(),
+            cluster.peak_resident_servers(),
+            "server slot count != peak-active"
+        );
+    }
 
     (
         RunObservables {
             tasks_finished: rec.tasks_finished,
             stale_copies_skipped: rec.stale_copies_skipped,
             tasks_rescheduled: rec.tasks_rescheduled,
-            short_delays: rec.short_delays.as_slice().to_vec(),
+            transients_requested: rec.transients_requested,
+            transients_revoked: rec.transients_revoked,
+            short_delays: rec.short_delays.samples().expect("exact backend").to_vec(),
             peak_resident_tasks: cluster.peak_resident_tasks(),
+            peak_resident_servers: cluster.peak_resident_servers(),
             end_time_bits: engine.now().to_bits(),
         },
-        cluster.task_slots(),
+        SlotCounts { task_slots: cluster.task_slots(), server_slots: cluster.server_slots() },
     )
 }
 
@@ -216,24 +289,36 @@ fn drive(seed: u64, recycle: bool, steps: usize) -> (RunObservables, usize) {
 fn arena_stress_no_resurrection_and_bounded_slots() {
     property("arena stress", 30, |rng| {
         let seed = rng.next_u64();
-        drive(seed, true, 300);
+        drive(seed, true, true, 300);
     });
 }
 
 #[test]
 fn arena_recycling_is_observationally_invisible() {
-    // Same seed-determined op sequence, recycling on vs off: every
-    // simulation observable — including peak_resident_tasks, whose
-    // liveness accounting is mode-independent — must match bit-exactly.
-    // Only the slot count may differ (that's the point of the arena).
-    property("arena mode equivalence", 12, |rng| {
+    // Same seed-determined op sequence across all four recycling-mode
+    // combinations: every simulation observable — including both peaks,
+    // whose accounting is mode-independent — must match bit-exactly.
+    // Only the slot counts may differ (that's the point of the arenas).
+    property("arena mode equivalence", 10, |rng| {
         let seed = rng.next_u64();
-        let (with, slots_with) = drive(seed, true, 250);
-        let (without, slots_without) = drive(seed, false, 250);
-        assert_eq!(with, without, "recycling changed an observable");
+        let (both, slots_both) = drive(seed, true, true, 250);
+        let (neither, slots_neither) = drive(seed, false, false, 250);
+        let (tasks_only, _) = drive(seed, true, false, 250);
+        let (servers_only, _) = drive(seed, false, true, 250);
+        assert_eq!(both, neither, "recycling changed an observable");
+        assert_eq!(both, tasks_only, "task recycling alone changed an observable");
+        assert_eq!(both, servers_only, "server recycling alone changed an observable");
         assert!(
-            slots_with <= slots_without,
-            "recycling used more slots ({slots_with}) than append-only ({slots_without})"
+            slots_both.task_slots <= slots_neither.task_slots,
+            "task recycling used more slots ({} vs {})",
+            slots_both.task_slots,
+            slots_neither.task_slots
+        );
+        assert!(
+            slots_both.server_slots <= slots_neither.server_slots,
+            "server recycling used more slots ({} vs {})",
+            slots_both.server_slots,
+            slots_neither.server_slots
         );
     });
 }
@@ -246,7 +331,7 @@ fn generations_distinguish_slot_reuse() {
     let mut engine = Engine::new();
     let mut rec = Recorder::new(1.0);
     let a = cluster.add_task(JobId(0), 5.0, false, 0.0);
-    cluster.enqueue(a, ServerId(0), &mut engine, &mut rec);
+    cluster.enqueue(a, cluster.general[0], &mut engine, &mut rec);
     let (_, ev) = engine.pop().unwrap();
     if let Event::TaskFinish { server, task } = ev {
         assert!(matches!(
@@ -260,5 +345,50 @@ fn generations_distinguish_slot_reuse() {
     assert_ne!(b.gen, a.gen, "generation not bumped on reuse");
     assert!(cluster.get_task(a).is_none(), "stale handle resurrected by reuse");
     assert!(cluster.get_task(b).is_some());
+    cluster.check_invariants();
+}
+
+#[test]
+fn server_generations_distinguish_slot_reuse() {
+    // The server twin: lease, revoke, re-lease — the old handle must
+    // stay dead across the reuse, and the pending stale lifecycle
+    // events must not touch the new tenant.
+    let mut cluster = Cluster::new(2, 1, QueuePolicy::Fifo);
+    let mut engine = Engine::new();
+    let mut rec = Recorder::new(1.0);
+    let first = cluster.request_transient(0.0);
+    cluster.transient_ready(first, 0.0, &mut rec);
+    // A task mid-run on the lease: its finish event will pop stale.
+    let t = cluster.add_task(JobId(0), 30.0, false, 0.0);
+    cluster.enqueue(t, first, &mut engine, &mut rec);
+    let orphans = cluster.revoke(first, 5.0, &mut rec);
+    assert_eq!(orphans, vec![t]);
+    assert!(cluster.get_server(first).is_none(), "revoked slot still dereferences");
+    // Re-lease: same arena slot, new generation.
+    let second = cluster.request_transient(6.0);
+    assert_eq!(second.slot, first.slot);
+    assert_ne!(second.gen, first.gen);
+    cluster.transient_ready(second, 6.0, &mut rec);
+    // Re-place the orphan on the new tenant; drain everything. The
+    // stale finish (addressed to `first`) must resolve Stale without
+    // touching `second`, and the task finishes exactly once.
+    cluster.enqueue(t, second, &mut engine, &mut rec);
+    let (mut stale, mut finished) = (0, 0);
+    while let Some((_, ev)) = engine.pop() {
+        if let Event::TaskFinish { server, task } = ev {
+            match cluster.on_task_finish(server, task, &mut engine, &mut rec) {
+                FinishOutcome::Stale => stale += 1,
+                FinishOutcome::Finished { drained, .. } => {
+                    finished += 1;
+                    if drained {
+                        cluster.retire(server, engine.now(), &mut rec);
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!((stale, finished), (1, 1));
+    assert!(cluster.get_server(first).is_none());
+    assert!(cluster.get_server(second).is_some());
     cluster.check_invariants();
 }

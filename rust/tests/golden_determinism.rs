@@ -21,12 +21,14 @@ use cloudcoaster::trace::Workload;
 use cloudcoaster::transient::{Budget, ManagerConfig, TransientManager};
 use cloudcoaster::util::{JobId, TaskRef, Time};
 
-/// What the oracle produces for comparison.
+/// What the oracle produces for comparison. Delay populations are the
+/// whole `DelayDist` (histogram state compares bit-exactly: bucket
+/// counts, push-order sum, min/max).
 struct LegacyResult {
     end_time: Time,
     events: u64,
-    short_delays: Vec<f64>,
-    long_delays: Vec<f64>,
+    short_delays: cloudcoaster::metrics::DelayDist,
+    long_delays: cloudcoaster::metrics::DelayDist,
     tasks_finished: u64,
     transients_requested: u64,
     manager_stats: Option<(u64, u64, u64)>,
@@ -35,7 +37,7 @@ struct LegacyResult {
 /// Verbatim port of the pre-refactor steal helper.
 fn legacy_try_steal(
     cluster: &mut Cluster,
-    thief: cloudcoaster::util::ServerId,
+    thief: cloudcoaster::util::ServerRef,
     cfg: &SimConfig,
     rng: &mut Rng,
     engine: &mut Engine,
@@ -78,8 +80,12 @@ fn legacy_simulate(
     );
     let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
     let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
+    // Honor the cfg's arena/backend knobs exactly like the runner does,
+    // so the oracle stays cfg-driven if a golden flips a reference mode.
+    cluster.set_task_recycling(cfg.recycle_task_slots);
+    cluster.set_server_recycling(cfg.recycle_server_slots);
     let mut engine = Engine::new();
-    let mut rec = Recorder::new(r);
+    let mut rec = Recorder::with_backend(r, cfg.exact_delay_samples);
     let mut root_rng = Rng::new(cfg.seed);
     let mut sched_rng = root_rng.fork(0x5C); // probe sampling stream
     let mut manager = cfg
@@ -163,8 +169,11 @@ fn legacy_simulate(
                 }
             }
             Event::Revoked(sid) => {
-                let state = cluster.server(sid).state;
-                if matches!(state, ServerState::Active | ServerState::Draining) {
+                // Generation-checked, like the World core: a stale
+                // Revoked (server already drained/retired, slot maybe
+                // recycled) must not touch the slot's next tenant.
+                let state = cluster.get_server(sid).map(|s| s.state);
+                if matches!(state, Some(ServerState::Active | ServerState::Draining)) {
                     let orphans = cluster.revoke(sid, now, &mut rec);
                     if !orphans.is_empty() {
                         let mut ctx = SchedCtx {
@@ -178,9 +187,10 @@ fn legacy_simulate(
                 }
             }
             Event::DrainComplete(sid) => {
-                if cluster.server(sid).state == ServerState::Draining
-                    && cluster.server(sid).is_idle()
-                {
+                let ok = cluster
+                    .get_server(sid)
+                    .is_some_and(|s| s.state == ServerState::Draining && s.is_idle());
+                if ok {
                     cluster.retire(sid, now, &mut rec);
                 }
             }
@@ -217,8 +227,8 @@ fn legacy_simulate(
     LegacyResult {
         end_time,
         events: engine.processed(),
-        short_delays: rec.short_delays.as_slice().to_vec(),
-        long_delays: rec.long_delays.as_slice().to_vec(),
+        short_delays: rec.short_delays.clone(),
+        long_delays: rec.long_delays.clone(),
         tasks_finished: rec.tasks_finished,
         transients_requested: rec.transients_requested,
         manager_stats: manager.map(|m| (m.adds, m.drains, m.failed_requests)),
@@ -242,14 +252,12 @@ fn assert_equivalent(workload: &Workload, cfg: &SimConfig, mk: impl Fn() -> Hybr
     assert_eq!(world.rec.tasks_finished, legacy.tasks_finished);
     assert_eq!(world.rec.transients_requested, legacy.transients_requested);
     assert_eq!(
-        world.rec.short_delays.as_slice(),
-        legacy.short_delays.as_slice(),
-        "short-delay sequence diverged"
+        world.rec.short_delays, legacy.short_delays,
+        "short-delay distribution diverged"
     );
     assert_eq!(
-        world.rec.long_delays.as_slice(),
-        legacy.long_delays.as_slice(),
-        "long-delay sequence diverged"
+        world.rec.long_delays, legacy.long_delays,
+        "long-delay distribution diverged"
     );
     assert_eq!(world.manager_stats, legacy.manager_stats);
 }

@@ -39,7 +39,7 @@ fn sec32_lr_definition() {
     // Two long tasks on the same server count once.
     for _ in 0..2 {
         let t = cluster.add_task(JobId(0), 100.0, true, 0.0);
-        cluster.enqueue(t, cloudcoaster::util::ServerId(0), &mut engine, &mut rec);
+        cluster.enqueue(t, cloudcoaster::util::ServerRef::initial(0), &mut engine, &mut rec);
     }
     assert_eq!(cluster.n_long_servers(), 1);
     assert!((cluster.long_load_ratio() - 0.1).abs() < 1e-12);
@@ -68,7 +68,7 @@ fn sec32_add_above_remove_below_threshold() {
     // Push l_r to 0.7 (> 0.5): manager must lease.
     for i in 0..7 {
         let t = cluster.add_task(JobId(0), 1e4, true, 0.0);
-        cluster.enqueue(t, cloudcoaster::util::ServerId(i), &mut engine, &mut rec);
+        cluster.enqueue(t, cloudcoaster::util::ServerRef::initial(i), &mut engine, &mut rec);
     }
     mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
     assert!(mgr.pending() > 0, "no lease despite l_r > L_r^T");

@@ -7,10 +7,10 @@ use cloudcoaster::cluster::{Cluster, FinishOutcome, QueuePolicy, TaskState};
 use cloudcoaster::metrics::Recorder;
 use cloudcoaster::sim::{Engine, Event, Rng};
 use cloudcoaster::testkit::{property, usize_in};
-use cloudcoaster::util::{JobId, ServerId};
+use cloudcoaster::util::{JobId, ServerRef};
 
 /// The scan `least_loaded_general` replaced.
-fn naive_general(cluster: &Cluster) -> ServerId {
+fn naive_general(cluster: &Cluster) -> ServerRef {
     *cluster
         .general
         .iter()
@@ -20,7 +20,7 @@ fn naive_general(cluster: &Cluster) -> ServerId {
 
 /// The scan `least_loaded_short_reserved` replaced (accepting filter is
 /// vacuous for on-demand servers but kept for faithfulness).
-fn naive_short(cluster: &Cluster) -> Option<ServerId> {
+fn naive_short(cluster: &Cluster) -> Option<ServerRef> {
     cluster
         .short_reserved
         .iter()
@@ -32,8 +32,10 @@ fn naive_short(cluster: &Cluster) -> Option<ServerId> {
 }
 
 /// The scan `transient_drain_victim` replaced: first-minimal
-/// `(depth, est_work)` in transient-pool (ready) order.
-fn naive_victim(cluster: &Cluster) -> Option<ServerId> {
+/// `(depth, est_work)` in transient-pool (ready) order. The index's
+/// seq-tagged key must reproduce this exactly even while arena and
+/// tree slots recycle underneath (pool order == activation order).
+fn naive_victim(cluster: &Cluster) -> Option<ServerRef> {
     cluster
         .transient_pool
         .iter()
@@ -66,7 +68,7 @@ fn check_index_matches_scans(cluster: &Cluster) {
 }
 
 /// A server the scheduler may legally target (accepting).
-fn random_target(cluster: &Cluster, rng: &mut Rng) -> ServerId {
+fn random_target(cluster: &Cluster, rng: &mut Rng) -> ServerRef {
     let n_candidates =
         cluster.general.len() + cluster.short_reserved.len() + cluster.transient_pool.len();
     let k = rng.below(n_candidates as u64) as usize;

@@ -34,17 +34,19 @@ fn assert_same_run(eager: &RunResult, streamed: &RunResult) {
     assert_eq!(eager.end_time, streamed.end_time, "end time diverged");
     assert_eq!(eager.rec.tasks_finished, streamed.rec.tasks_finished);
     assert_eq!(eager.rec.transients_requested, streamed.rec.transients_requested);
+    // Whole-distribution equality: on the default histogram backend the
+    // bucket counts, push-order sum and min/max compare bit-exactly; on
+    // the exact backend this is the full sample sequence.
     assert_eq!(
-        eager.rec.short_delays.as_slice(),
-        streamed.rec.short_delays.as_slice(),
-        "short-delay sequence diverged"
+        eager.rec.short_delays, streamed.rec.short_delays,
+        "short-delay distribution diverged"
     );
     assert_eq!(
-        eager.rec.long_delays.as_slice(),
-        streamed.rec.long_delays.as_slice(),
-        "long-delay sequence diverged"
+        eager.rec.long_delays, streamed.rec.long_delays,
+        "long-delay distribution diverged"
     );
     assert_eq!(eager.manager_stats, streamed.manager_stats);
+    assert_eq!(eager.peak_resident_servers, streamed.peak_resident_servers);
 }
 
 #[test]
@@ -179,7 +181,8 @@ fn peak_resident_jobs_independent_of_trace_length() {
 /// Burst-storm scenario used by the arena-memory pins: an early 8x storm
 /// sets the task high-water mark, a mild tail follows for the rest of
 /// `horizon`. Extending the horizon scales total tasks but not the peak.
-fn storm_run(horizon: f64, recycle: bool) -> RunResult {
+/// `tweak` customizes the SimConfig (arena/backend reference modes).
+fn storm_run_with(horizon: f64, tweak: impl FnOnce(&mut SimConfig)) -> RunResult {
     let mut p = YahooLikeParams::default();
     p.horizon = horizon;
     p.short_arrivals = Mmpp::poisson(0.4);
@@ -193,15 +196,19 @@ fn storm_run(horizon: f64, recycle: bool) -> RunResult {
         vec![(0.0, 400.0)],
         8.0,
     ));
-    let cfg = SimConfig {
+    let mut cfg = SimConfig {
         n_general: 48,
         n_short_reserved: 16,
-        recycle_task_slots: recycle,
         seed: 7,
         ..Default::default()
     };
+    tweak(&mut cfg);
     let mut sched = Hybrid::eagle(2.0);
     simulate_source(source, &mut sched, &cfg, None)
+}
+
+fn storm_run(horizon: f64, recycle: bool) -> RunResult {
+    storm_run_with(horizon, |cfg| cfg.recycle_task_slots = recycle)
 }
 
 #[test]
@@ -223,6 +230,50 @@ fn arena_recycling_report_bits_identical_to_append_only() {
 }
 
 #[test]
+fn all_reference_modes_report_bits_identical_to_defaults() {
+    // The PR-4 acceptance golden: defaults (task + server recycling,
+    // histogram delay sketches) vs the full reference configuration
+    // (append-only arenas, exact delay Vecs). Every simulation field
+    // must agree bit-exactly except the explicitly-approximate
+    // quantile surfaces, which only exist report-side.
+    let defaults = storm_run_with(4000.0, |_| {});
+    let reference = storm_run_with(4000.0, |cfg| {
+        cfg.recycle_task_slots = false;
+        cfg.recycle_server_slots = false;
+        cfg.exact_delay_samples = true;
+    });
+    assert_eq!(defaults.events, reference.events);
+    assert_eq!(defaults.end_time.to_bits(), reference.end_time.to_bits());
+    assert_eq!(defaults.rec.tasks_finished, reference.rec.tasks_finished);
+    assert_eq!(defaults.rec.stale_copies_skipped, reference.rec.stale_copies_skipped);
+    assert_eq!(defaults.manager_stats, reference.manager_stats);
+    assert_eq!(defaults.peak_resident_jobs, reference.peak_resident_jobs);
+    assert_eq!(defaults.peak_resident_tasks, reference.peak_resident_tasks);
+    assert_eq!(defaults.peak_resident_servers, reference.peak_resident_servers);
+    // Across delay backends: count/mean/max are exact and bit-equal...
+    for (sk, ex) in [
+        (&defaults.rec.short_delays, &reference.rec.short_delays),
+        (&defaults.rec.long_delays, &reference.rec.long_delays),
+    ] {
+        assert_eq!(sk.len(), ex.len());
+        assert_eq!(sk.mean().to_bits(), ex.mean().to_bits(), "mean not bit-identical");
+        assert_eq!(sk.max().to_bits(), ex.max().to_bits(), "max not bit-identical");
+        assert_eq!(sk.min().to_bits(), ex.min().to_bits(), "min not bit-identical");
+    }
+    // ...and quantiles stay within the histogram's documented bound
+    // (≤1% relative, sub-ms absolute floor for near-zero delays).
+    let mut sk = defaults.rec.short_delays.clone();
+    let mut ex = reference.rec.short_delays.clone();
+    for q in [0.5, 0.9, 0.99] {
+        let (a, b) = (sk.percentile(q), ex.percentile(q));
+        assert!(
+            (a - b).abs() <= 0.011 * b.abs() + 1e-3,
+            "q={q} diverged past the bucket bound: sketch {a} vs exact {b}"
+        );
+    }
+}
+
+#[test]
 fn peak_resident_tasks_flat_under_10x_trace_scaling() {
     // The O(active)-memory acceptance criterion: a fixed-seed burst-storm
     // run at 10x the trace length reports the *same* peak_resident_tasks
@@ -241,8 +292,86 @@ fn peak_resident_tasks_flat_under_10x_trace_scaling() {
         long.peak_resident_tasks, short.peak_resident_tasks,
         "peak resident tasks grew with trace length"
     );
-    // Jobs stay flat too (the PR 2 guarantee, still holding).
+    // Jobs stay flat too (the PR 2 guarantee, still holding), and the
+    // fixed-size delay sketches don't grow at all.
     assert_eq!(long.peak_resident_jobs, short.peak_resident_jobs);
+    assert_eq!(
+        long.rec.delay_struct_bytes(),
+        short.rec.delay_struct_bytes(),
+        "delay-structure memory grew with trace length"
+    );
+}
+
+/// Revocation-churn scenario for the server-arena pins: CloudCoaster
+/// with an aggressive MTTF, so transients are requested, revoked and
+/// re-requested continuously for the whole horizon. Transients *ever
+/// requested* scales with the horizon; peak *concurrent* transients is
+/// capped by the budget, so the server arena must stay flat.
+fn churn_run(horizon: f64, recycle_servers: bool) -> RunResult {
+    let mut p = golden_params();
+    p.horizon = horizon;
+    let mut cfg = SimConfig {
+        n_general: 96,
+        n_short_reserved: 4,
+        recycle_server_slots: recycle_servers,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut mgr = ManagerConfig {
+        threshold: 0.5,
+        ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0)) // K = 12
+    };
+    mgr.market.mttf = Some(600.0); // heavy revocations
+    cfg.manager = Some(mgr);
+    let mut sched = Hybrid::cloudcoaster(2.0);
+    let source = Box::new(YahooSource::new(&p, &mut Rng::new(5)));
+    simulate_source(source, &mut sched, &cfg, None)
+}
+
+#[test]
+fn server_recycling_report_bits_identical_to_append_only() {
+    let with = churn_run(4000.0, true);
+    let without = churn_run(4000.0, false);
+    assert_same_run(&without, &with);
+    assert_eq!(with.rec.transients_revoked, without.rec.transients_revoked);
+    assert!(with.rec.transients_revoked > 0, "churn scenario produced no revocations");
+}
+
+#[test]
+fn peak_resident_servers_bounded_under_10x_revocation_churn() {
+    // The server-arena acceptance criterion: requested transients scale
+    // with the horizon, but the arena high-water mark stays bounded by
+    // static size + the budget cap K — slots recycle through the free
+    // list instead of accumulating one per lease.
+    let n_static = 96 + 4;
+    let cap = 12; // K = r·N_s·p = 3 · 8 · 0.5
+    let short = churn_run(4000.0, true);
+    let long = churn_run(40_000.0, true);
+    assert!(
+        long.rec.transients_requested > 3 * short.rec.transients_requested.max(1),
+        "long run did not scale transient churn ({} vs {})",
+        long.rec.transients_requested,
+        short.rec.transients_requested
+    );
+    assert!(
+        long.rec.transients_requested > (n_static + cap) as u64,
+        "not enough churn to exercise slot reuse"
+    );
+    for run in [&short, &long] {
+        assert!(
+            run.peak_resident_servers <= n_static + cap,
+            "server arena exceeded static + budget cap: {}",
+            run.peak_resident_servers
+        );
+    }
+    // Flatness under 10x: the high-water mark is set by load and the
+    // budget cap, not by how long the churn continues.
+    assert!(
+        long.peak_resident_servers <= short.peak_resident_servers.max(n_static + 1) + cap,
+        "peak resident servers grew with trace length: {} -> {}",
+        short.peak_resident_servers,
+        long.peak_resident_servers
+    );
 }
 
 #[test]
