@@ -73,6 +73,7 @@ fn main() -> Result<()> {
         recycle_task_slots: true,
         recycle_server_slots: true,
         exact_delay_samples: false,
+        exact_snapshot_series: false,
         seed: 7,
     };
     let mut sched = Hybrid::cloudcoaster(2.0);

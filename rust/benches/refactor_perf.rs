@@ -183,6 +183,48 @@ fn main() {
         ));
     }
 
+    // ---- federation: event-time merge loop vs sequential runs -------
+    // An N=2 pass-through federation interleaves two member event loops
+    // through the earliest-next-event merge (peek both engines per
+    // step); the baseline runs the same two member configs back to
+    // back. The delta is the merge-loop overhead per event.
+    {
+        use cloudcoaster::coordinator::report::build_workload;
+        use cloudcoaster::coordinator::scenario::FederationSpec;
+        use cloudcoaster::coordinator::{run_federation, simulate};
+
+        let mut base = bench_common::bench_base();
+        if let cloudcoaster::coordinator::config::WorkloadSource::YahooLike(p) =
+            &mut base.workload
+        {
+            p.horizon = 3600.0;
+        }
+        let spec = FederationSpec { clusters: 2, ..Default::default() };
+        let mut fed_cfg = base.clone();
+        fed_cfg.federation = Some(spec.clone());
+
+        let r = bench("refactor/federation_merge_2x", 1, 5, || {
+            let out = run_federation(&fed_cfg).unwrap();
+            black_box(out.runs.len());
+        });
+        entries.push(json_entry("federation_merge_2x", &r));
+
+        // Baseline: the same two member simulations, run sequentially
+        // (identical workloads and seeds, no merge loop between them).
+        let members: Vec<_> = (0..2).map(|i| spec.member_config(&base, i)).collect();
+        let workloads: Vec<_> =
+            members.iter().map(|m| build_workload(m).unwrap()).collect();
+        let r = bench("refactor/federation_sequential_baseline_2x", 1, 5, || {
+            for (mc, w) in members.iter().zip(&workloads) {
+                let mut sched =
+                    cloudcoaster::coordinator::report::build_scheduler(mc.scheduler, mc.probe_ratio);
+                let res = simulate(w, sched.as_mut(), &mc.to_sim_config());
+                black_box(res.events);
+            }
+        });
+        entries.push(json_entry("federation_sequential_baseline_2x", &r));
+    }
+
     // ---- sweep: serial vs parallel ----------------------------------
     let mut base = bench_common::bench_base();
     // Shrink to keep the bench under a minute while preserving dynamics.

@@ -108,6 +108,10 @@ pub struct Cluster {
     /// Global transient-activation counter: the drain-victim tie-break
     /// (see `Server::ready_seq`).
     next_ready_seq: u64,
+    /// Transient servers requested but not yet ready — incremental twin
+    /// of the Provisioning-state scan, kept O(1) because the federation
+    /// reads it after every member step.
+    n_provisioning: usize,
     pub policy: QueuePolicy,
     /// Servers (Active or Draining) currently hosting >= 1 long task.
     n_long_servers: usize,
@@ -154,6 +158,7 @@ impl Cluster {
             free_server_slots: Vec::new(),
             recycle_servers: true,
             next_ready_seq: 0,
+            n_provisioning: 0,
             policy,
             n_long_servers: 0,
             general,
@@ -625,6 +630,7 @@ impl Cluster {
     /// free. The returned handle carries the slot's live generation;
     /// stale handles from earlier tenants no longer dereference.
     pub fn request_transient(&mut self, now: Time) -> ServerRef {
+        self.n_provisioning += 1;
         self.resident_servers += 1;
         self.peak_resident_servers = self.peak_resident_servers.max(self.resident_servers);
         let id = if let Some(slot) = self.free_server_slots.pop() {
@@ -645,18 +651,20 @@ impl Cluster {
         id
     }
 
-    /// Number of transient servers still provisioning.
+    /// Number of transient servers still provisioning. O(1): the only
+    /// Provisioning entry is [`Cluster::request_transient`] and the only
+    /// exit is [`Cluster::transient_ready`]; `check_invariants` pins the
+    /// counter to the arena scan.
     pub fn provisioning_count(&self) -> usize {
-        self.servers
-            .iter()
-            .filter(|s| s.kind == ServerKind::Transient && s.state == ServerState::Provisioning)
-            .count()
+        self.n_provisioning
     }
 
     /// Provisioning finished: the server joins the dynamic short pool
     /// (and the transient load index), stamped with the next global
     /// activation number — the index's ready-order tie-break.
     pub fn transient_ready(&mut self, id: ServerRef, now: Time, rec: &mut Recorder) {
+        debug_assert!(self.n_provisioning > 0, "ready without a pending request");
+        self.n_provisioning -= 1;
         let seq = self.next_ready_seq;
         self.next_ready_seq += 1;
         let key = {
@@ -828,6 +836,18 @@ impl Cluster {
             self.resident_servers >= self.general.len() + self.short_reserved.len(),
             "on-demand prefix released"
         );
+        // The O(1) provisioning counter tracks the arena scan exactly.
+        let provisioning_scan = self
+            .servers
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| {
+                !free_servers.contains(&(*i as u32))
+                    && s.kind == ServerKind::Transient
+                    && s.state == ServerState::Provisioning
+            })
+            .count();
+        assert_eq!(self.n_provisioning, provisioning_scan, "provisioning counter drift");
         let mut n_long = 0;
         let mut n_total = 0;
         for (i, s) in self.servers.iter().enumerate() {

@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::QueuePolicy;
 use crate::coordinator::runner::SimConfig;
-use crate::coordinator::scenario::ScenarioSpec;
+use crate::coordinator::scenario::{FederationSpec, ScenarioSpec};
 use crate::coordinator::toml::{parse, Table};
 use crate::trace::synth::{GoogleLikeParams, YahooLikeParams};
 use crate::transient::{Budget, ManagerConfig, MarketConfig};
@@ -95,6 +95,11 @@ pub struct ExperimentConfig {
     /// Declarative workload scenario (source + combinator stack +
     /// optional manager-less override). `None` = plain workload.
     pub scenario: Option<ScenarioSpec>,
+    /// Multi-cluster federation (member count, router, budget sharing,
+    /// storm stagger). `None` = a single plain cluster. Each member
+    /// cluster gets this config with its own seed and staggered storm
+    /// windows (see [`FederationSpec::member_config`]).
+    pub federation: Option<FederationSpec>,
 }
 
 impl ExperimentConfig {
@@ -120,6 +125,7 @@ impl ExperimentConfig {
             seed: 42,
             workload: WorkloadSource::YahooLike(YahooLikeParams::default()),
             scenario: None,
+            federation: None,
         }
     }
 
@@ -257,6 +263,7 @@ impl ExperimentConfig {
             cfg.workload = WorkloadSource::Csv(v.to_string());
         }
         cfg.scenario = ScenarioSpec::from_table(&t)?;
+        cfg.federation = FederationSpec::from_table(&t)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -276,6 +283,9 @@ impl ExperimentConfig {
         }
         if let Some(scenario) = &self.scenario {
             scenario.validate()?;
+        }
+        if let Some(federation) = &self.federation {
+            federation.validate()?;
         }
         Ok(())
     }
@@ -364,6 +374,31 @@ mod tests {
     fn config_without_scenario_has_none() {
         let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
         assert!(cfg.scenario.is_none());
+        assert!(cfg.federation.is_none());
+    }
+
+    #[test]
+    fn federation_section_parses_through_config() {
+        use crate::coordinator::scenario::{BudgetSharing, RouterKind};
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [scenario]
+            storm_windows = [600, 1200]
+            [federation]
+            clusters = 2
+            router = "round-robin"
+            budget_sharing = "split"
+            stagger = 300
+            "#,
+        )
+        .unwrap();
+        let fed = cfg.federation.as_ref().unwrap();
+        assert_eq!(fed.clusters, 2);
+        assert_eq!(fed.router, RouterKind::RoundRobin);
+        assert_eq!(fed.budget_sharing, BudgetSharing::Split);
+        assert_eq!(fed.stagger, 300.0);
+        // Invalid federation blocks are config errors.
+        assert!(ExperimentConfig::from_toml("[federation]\nclusters = 0\n").is_err());
     }
 
     #[test]

@@ -11,10 +11,12 @@ pub mod sweep;
 pub mod toml;
 
 pub use config::{ExperimentConfig, SchedulerKind, WorkloadSource};
-pub use report::{run_experiment, Report};
+pub use report::{run_experiment, run_federated_experiment, FederatedReport, Report};
 pub use runner::{
-    build_world, build_world_from_source, simulate, simulate_source, simulate_with,
-    RunResult, SimConfig,
+    build_federation, build_world, build_world_from_source, run_federation, simulate,
+    simulate_source, simulate_with, FederationOutcome, RunResult, SimConfig,
 };
-pub use scenario::{CombinatorSpec, ScenarioSpec, SourceSpec};
+pub use scenario::{
+    BudgetSharing, CombinatorSpec, FederationSpec, RouterKind, ScenarioSpec, SourceSpec,
+};
 pub use sweep::{run_grid, run_sweep_parallel, GridPoint};

@@ -88,8 +88,27 @@ pub struct Report {
     /// in `exact_delay_samples` reference mode. The CI memory smoke
     /// pins the default flat under trace scaling.
     pub delay_struct_bytes: usize,
+    /// Resident bytes of the sampled snapshot series (l_r + active
+    /// transients): bounded by the rebucketing ring on the default
+    /// path, O(horizon) only in the exact reference modes.
+    pub snapshot_series_bytes: usize,
     /// Which analytics engine produced the CDF ("xla" or "native").
     pub analytics_engine: &'static str,
+}
+
+/// A federated run distilled: per-cluster reports plus the aggregate
+/// (merged delay histograms — mergeable by design — summed cost
+/// ledgers, cross-cluster transient watermarks).
+#[derive(Clone, Debug)]
+pub struct FederatedReport {
+    pub aggregate: Report,
+    pub per_cluster: Vec<Report>,
+    /// High-water mark of Σ (active + provisioning) transients across
+    /// clusters; with pooled sharing, `<= shared_cap` always.
+    pub peak_total_fleet: usize,
+    /// Total transient units the sharing mode admits (`None` =
+    /// uncoupled budgets).
+    pub shared_cap: Option<usize>,
 }
 
 /// Resolve the artifacts directory: $CLOUDCOASTER_ARTIFACTS or
@@ -124,8 +143,10 @@ pub fn build_scheduler(kind: SchedulerKind, probe_ratio: f64) -> Box<dyn Schedul
 /// analytics) and distill the report.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Report> {
     let mut analytics = AnalyticsEngine::auto(&artifacts_dir());
-    if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
-        // Streaming scenario: no eager workload is ever materialised —
+    let streams = cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false);
+    if streams || cfg.federation.is_some() {
+        // Streaming scenario or federation: no shared eager workload is
+        // ever materialised — members stream their own pipelines and
         // memory stays O(active jobs) regardless of trace length.
         return run_experiment_on(cfg, &Workload::default(), analytics.as_dyn());
     }
@@ -148,6 +169,14 @@ pub fn run_experiment_on(
     workload: &Workload,
     analytics: &mut dyn Analytics,
 ) -> Result<Report> {
+    if cfg.federation.is_some() {
+        // Federated config: the members build their own streaming
+        // pipelines (`workload` is ignored) and the grid sees the
+        // aggregate report — so router/budget-sharing axes sweep like
+        // any other knob. Per-cluster reports come from
+        // [`run_federated_experiment`].
+        return Ok(run_federated_experiment_with(cfg, analytics)?.aggregate);
+    }
     let sim_cfg: SimConfig = cfg.to_sim_config();
     let mut scheduler = build_scheduler(cfg.scheduler, cfg.probe_ratio);
     let result = match &cfg.scenario {
@@ -160,26 +189,24 @@ pub fn run_experiment_on(
     distill(cfg, result, analytics)
 }
 
-fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analytics) -> Result<Report> {
-    let end = run.end_time;
-    // Figure 3 CDF at uniform edges spanning [0, exact max]. The edge
-    // grid is identical on both delay backends (max is exact in the
-    // sketch, and f64->f32 casting is monotone, so the cast of the max
-    // equals the max of the casts the old per-sample fold computed).
-    let n_samples = run.rec.short_delays.len();
-    let max_delay = (run.rec.short_delays.max() as f32).max(1e-6);
+/// Figure 3 CDF at uniform edges spanning [0, exact max], from either
+/// delay backend (shared by the single-run and federated-aggregate
+/// distills). The edge grid is identical on both backends (max is exact
+/// in the sketch, and f64->f32 casting is monotone, so the cast of the
+/// max equals the max of the casts the old per-sample fold computed).
+fn build_cdf(short_delays: &mut crate::metrics::DelayDist, analytics: &mut dyn Analytics) -> Result<Cdf> {
+    let n_samples = short_delays.len();
+    let max_delay = (short_delays.max() as f32).max(1e-6);
     let n_edges = crate::runtime::artifacts::EDGES;
     let edges: Vec<f32> = (0..n_edges)
         .map(|i| max_delay * i as f32 / (n_edges - 1) as f32)
         .collect();
-    let cdf = if run.rec.short_delays.is_exact() {
+    Ok(if short_delays.is_exact() {
         // Exact backend: evaluate through the analytics engine (XLA
         // artifacts when available) over the raw f32 samples, as the
         // pre-sketch pipeline always did. Zero samples stay a defined
         // all-zeros CDF (the engine divides by max(n, 1)).
-        let samples: Vec<f32> = run
-            .rec
-            .short_delays
+        let samples: Vec<f32> = short_delays
             .samples()
             .expect("exact backend has samples")
             .iter()
@@ -199,13 +226,13 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         // evaluates at the *exact* f64 max (its f32 rendering may round
         // down past the top bucket), so a non-empty CDF always closes
         // at 1.0 like the per-sample path.
-        let exact_max = run.rec.short_delays.max();
+        let exact_max = short_delays.max();
         let values = edges
             .iter()
             .enumerate()
             .map(|(i, &e)| {
                 let at = if i + 1 == n_edges { exact_max.max(e as f64) } else { e as f64 };
-                run.rec.short_delays.cdf_at(at)
+                short_delays.cdf_at(at)
             })
             .collect();
         Cdf {
@@ -213,7 +240,12 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
             values,
             n_samples,
         }
-    };
+    })
+}
+
+fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analytics) -> Result<Report> {
+    let end = run.end_time;
+    let cdf = build_cdf(&mut run.rec.short_delays, analytics)?;
 
     let scheduler: &'static str = match run.scheduler.as_str() {
         "hawk" => "hawk",
@@ -251,8 +283,106 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         peak_resident_tasks: run.peak_resident_tasks,
         peak_resident_servers: run.peak_resident_servers,
         delay_struct_bytes: run.rec.delay_struct_bytes(),
+        snapshot_series_bytes: run.rec.snapshot_series_bytes(),
         analytics_engine: analytics.name(),
     })
+}
+
+/// Distill a federation's aggregate [`Report`]: delay populations and
+/// transient lifetimes merge exactly across clusters (bucket-wise on
+/// the sketch backend), cost integrals sum (the aggregate average is
+/// Σ per-cluster server·seconds over the global horizon), counters sum,
+/// the active-transient peak is the federation's cross-cluster
+/// watermark, and memory headlines sum (total resident footprint).
+fn distill_aggregate(
+    cfg: &ExperimentConfig,
+    outcome: &crate::coordinator::runner::FederationOutcome,
+    analytics: &mut dyn Analytics,
+) -> Result<Report> {
+    let runs = &outcome.runs;
+    assert!(!runs.is_empty(), "federation produced no runs");
+    let end = runs.iter().map(|r| r.end_time).fold(0.0f64, f64::max);
+    // One merge implementation: `Recorder::absorb` (delay populations,
+    // lifetimes and counters; its unit tests are the contract). Cost
+    // *integrals* deliberately stay per-run — they are recombined over
+    // the global horizon below, not pointwise mergeable.
+    let mut merged = runs[0].rec.clone();
+    for r in &runs[1..] {
+        merged.absorb(&r.rec);
+    }
+    let cdf = build_cdf(&mut merged.short_delays, analytics)?;
+    // Σ transient server·seconds across clusters, averaged over the
+    // global horizon — the federated Table 1 "average transients".
+    let total_server_secs: f64 =
+        runs.iter().map(|r| r.rec.cost.transient_hours(r.end_time) * 3600.0).sum();
+    let avg_transients = if end > 0.0 { total_server_secs / end } else { 0.0 };
+    let scheduler: &'static str = match runs[0].scheduler.as_str() {
+        "hawk" => "hawk",
+        "eagle" => "eagle",
+        "cloudcoaster" => "cloudcoaster",
+        "sparrow" => "sparrow",
+        _ => "centralized",
+    };
+    let events: u64 = runs.iter().map(|r| r.events).sum();
+    Ok(Report {
+        name: format!(
+            "federated×{} [{}] {} r={}",
+            outcome.clusters, outcome.router, scheduler, cfg.r
+        ),
+        scheduler,
+        r: cfg.r,
+        short_delay: DelayStats::of(&mut merged.short_delays),
+        long_delay: DelayStats::of(&mut merged.long_delays),
+        cdf,
+        avg_transients,
+        max_transients: outcome.peak_total_active,
+        mean_lifetime_h: merged.cost.lifetimes.mean() / 3600.0,
+        max_lifetime_h: merged.cost.lifetimes.max() / 3600.0,
+        r_normalized_avg: avg_transients / cfg.r,
+        transients_requested: merged.transients_requested,
+        transients_revoked: merged.transients_revoked,
+        tasks_rescheduled: merged.tasks_rescheduled,
+        end_time: end,
+        events,
+        wall_ms: outcome.wall_ms,
+        events_per_sec: events as f64 / (outcome.wall_ms / 1000.0).max(1e-9),
+        peak_resident_jobs: runs.iter().map(|r| r.peak_resident_jobs).sum(),
+        peak_resident_tasks: runs.iter().map(|r| r.peak_resident_tasks).sum(),
+        peak_resident_servers: runs.iter().map(|r| r.peak_resident_servers).sum(),
+        delay_struct_bytes: runs.iter().map(|r| r.rec.delay_struct_bytes()).sum(),
+        snapshot_series_bytes: runs.iter().map(|r| r.rec.snapshot_series_bytes()).sum(),
+        analytics_engine: analytics.name(),
+    })
+}
+
+/// Run a federated experiment end-to-end with a caller-supplied
+/// analytics engine: every member cluster simulated in global
+/// event-time order, then distilled into per-cluster reports plus the
+/// merged aggregate.
+pub fn run_federated_experiment_with(
+    cfg: &ExperimentConfig,
+    analytics: &mut dyn Analytics,
+) -> Result<FederatedReport> {
+    let spec = cfg.federation.clone().unwrap_or_default();
+    let outcome = crate::coordinator::runner::run_federation(cfg)?;
+    let aggregate = distill_aggregate(cfg, &outcome, analytics)?;
+    let peak_total_fleet = outcome.peak_total_fleet;
+    let shared_cap = outcome.shared_cap;
+    let per_cluster: Vec<Report> = outcome
+        .runs
+        .into_iter()
+        .enumerate()
+        .map(|(i, run)| distill(&spec.member_config(cfg, i), run, analytics))
+        .collect::<Result<_>>()?;
+    Ok(FederatedReport { aggregate, per_cluster, peak_total_fleet, shared_cap })
+}
+
+/// [`run_federated_experiment_with`] with the auto-detected analytics
+/// engine — the `[federation]` / `--scenario federated-burst` entry
+/// point.
+pub fn run_federated_experiment(cfg: &ExperimentConfig) -> Result<FederatedReport> {
+    let mut analytics = AnalyticsEngine::auto(&artifacts_dir());
+    run_federated_experiment_with(cfg, analytics.as_dyn())
 }
 
 /// Render Table 1 (plus context columns) from a set of reports.
@@ -337,17 +467,33 @@ pub fn summary_line(rep: &Report) -> String {
 /// by their spec instead of materialised (that would defeat the O(1)
 /// memory point of replaying a long trace).
 pub fn workload_summary(cfg: &ExperimentConfig) -> Result<String> {
+    let fed = match &cfg.federation {
+        Some(f) => format!(
+            "federation of {} (router {}, budget {}) over ",
+            f.clusters,
+            f.router.name(),
+            f.budget_sharing.name(),
+        ),
+        None => String::new(),
+    };
     if let Some(spec) = &cfg.scenario {
         if spec.reshapes_workload() {
             return Ok(format!(
-                "scenario '{}' ({} combinator{}, streamed)",
+                "{fed}scenario '{}' ({} combinator{}, streamed)",
                 spec.name,
                 spec.stack.len(),
                 if spec.stack.len() == 1 { "" } else { "s" },
             ));
         }
     }
-    Ok(TraceStats::of(&build_workload(cfg)?).summary())
+    if cfg.federation.is_some() {
+        // Federated members always stream their own pipelines
+        // (`run_experiment` never materialises an eager workload for
+        // them) — describing the config must not either, or a long CSV
+        // trace would be loaded into RAM just for this summary line.
+        return Ok(format!("{fed}configured workload, streamed per member"));
+    }
+    Ok(format!("{fed}{}", TraceStats::of(&build_workload(cfg)?).summary()))
 }
 
 #[cfg(test)]

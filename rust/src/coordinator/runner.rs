@@ -20,14 +20,19 @@
 
 use std::time::Instant;
 
+use anyhow::Result;
+
 use crate::cluster::{Cluster, QueuePolicy};
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::scenario::{BudgetSharing, FederationSpec, RouterKind, ScenarioSpec};
 use crate::metrics::Recorder;
 use crate::sched::Scheduler;
 use crate::sim::{
-    SchedulerComponent, SnapshotSampler, TransientManagerComponent, WorkStealer, World,
+    ClassSplit, Federation, JobRouter, LeastQueued, RoundRobin, Rng, SchedulerComponent,
+    SnapshotSampler, TransientManagerComponent, WorkStealer, World,
 };
 use crate::trace::{ArrivalSource, Workload};
-use crate::transient::ManagerConfig;
+use crate::transient::{ManagerConfig, SharedBudget};
 use crate::util::Time;
 
 /// Low-level simulation parameters (cluster geometry + hooks).
@@ -62,8 +67,16 @@ pub struct SimConfig {
     /// comparisons: count/mean/min/max are bit-identical either way;
     /// only the explicitly-approximate quantile fields differ, within
     /// the histogram's documented ≤1% bound. Exact mode's memory grows
-    /// with the trace.
+    /// with the trace. Also keeps the snapshot series unbounded (the
+    /// fully-exact reference build).
     pub exact_delay_samples: bool,
+    /// Keep the sampled snapshot series (`Recorder::lr_series` /
+    /// `transient_series`) unbounded — one point per interval for the
+    /// whole horizon — instead of the default fixed-capacity ring that
+    /// coarsens its sampling 2x when full. Reference mode for golden
+    /// comparisons of the series themselves; all *report* fields are
+    /// identical either way (nothing distilled reads the series).
+    pub exact_snapshot_series: bool,
     pub seed: u64,
 }
 
@@ -80,6 +93,7 @@ impl Default for SimConfig {
             recycle_task_slots: true,
             recycle_server_slots: true,
             exact_delay_samples: false,
+            exact_snapshot_series: false,
             seed: 1,
         }
     }
@@ -160,7 +174,12 @@ fn build_cluster(cfg: &SimConfig) -> Cluster {
 
 fn build_recorder(cfg: &SimConfig) -> Recorder {
     let r = cfg.manager.as_ref().map(|m| m.budget.r).unwrap_or(1.0);
-    Recorder::with_backend(r, cfg.exact_delay_samples)
+    let snapshot_points = if cfg.exact_delay_samples || cfg.exact_snapshot_series {
+        0 // unbounded exact series (reference modes)
+    } else {
+        crate::metrics::DEFAULT_SNAPSHOT_POINTS
+    };
+    Recorder::with_options(r, cfg.exact_delay_samples, snapshot_points)
 }
 
 /// The canonical component composition shared by the eager and streaming
@@ -170,6 +189,18 @@ fn wire_standard<'a>(
     scheduler: &'a mut (dyn Scheduler + 'a),
     cfg: &SimConfig,
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
+) {
+    wire_standard_shared(world, scheduler, cfg, analytics, None)
+}
+
+/// [`wire_standard`] plus an optional federated [`SharedBudget`] handle
+/// for the transient manager (the cross-cluster lease pool).
+fn wire_standard_shared<'a>(
+    world: &mut World<'a>,
+    scheduler: &'a mut (dyn Scheduler + 'a),
+    cfg: &SimConfig,
+    analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
+    shared: Option<SharedBudget>,
 ) {
     // Snapshot sampler first: it records l_r before any same-event
     // mutation and publishes the prewarm forecast the manager consumes.
@@ -193,7 +224,11 @@ fn wire_standard<'a>(
     // the scheduler stream's 0x5C — the original runner's fork order).
     if let Some(mcfg) = cfg.manager.clone() {
         let market_rng = world.fork_rng(0x7A);
-        world.add_component(Box::new(TransientManagerComponent::new(mcfg, market_rng)));
+        let component = match shared {
+            Some(pool) => TransientManagerComponent::with_shared_budget(mcfg, market_rng, pool),
+            None => TransientManagerComponent::new(mcfg, market_rng),
+        };
+        world.add_component(Box::new(component));
     }
 
     world.add_component(Box::new(SchedulerComponent::new(scheduler)));
@@ -250,6 +285,13 @@ pub fn simulate_source<'a>(
 
 fn run_and_distill(mut world: World<'_>, name: String, wall0: Instant) -> RunResult {
     world.run();
+    let wall_ms = wall0.elapsed().as_secs_f64() * 1000.0;
+    distill_world(world, name, wall_ms)
+}
+
+/// Extract a [`RunResult`] from a world that has already run (shared by
+/// the single-world entry points and the federation driver).
+fn distill_world(world: World<'_>, name: String, wall_ms: f64) -> RunResult {
     let manager_stats = world.component::<TransientManagerComponent>().map(|m| m.stats());
     let end_time = world.engine.now();
     let events = world.engine.processed();
@@ -261,12 +303,178 @@ fn run_and_distill(mut world: World<'_>, name: String, wall0: Instant) -> RunRes
         rec: world.rec,
         end_time,
         events,
-        wall_ms: wall0.elapsed().as_secs_f64() * 1000.0,
+        wall_ms,
         manager_stats,
         peak_resident_jobs,
         peak_resident_tasks,
         peak_resident_servers,
     }
+}
+
+// ----------------------------------------------------------- federation
+
+/// Everything a federated run produces: one [`RunResult`] per member
+/// cluster plus the cross-cluster watermarks the aggregate report and
+/// the budget-cap invariant read.
+pub struct FederationOutcome {
+    pub runs: Vec<RunResult>,
+    /// High-water mark of Σ (active + provisioning) transients — with
+    /// pooled sharing this never exceeds [`FederationOutcome::shared_cap`].
+    pub peak_total_fleet: usize,
+    /// High-water mark of Σ active transients (the aggregate's
+    /// `max_transients`).
+    pub peak_total_active: f64,
+    /// Total transient units the sharing mode admits across the
+    /// federation (`None` when budgets are uncoupled).
+    pub shared_cap: Option<usize>,
+    /// Router name, for report labels.
+    pub router: &'static str,
+    pub clusters: usize,
+    /// Wall-clock of the whole federated run, milliseconds.
+    pub wall_ms: f64,
+}
+
+/// Build the canonical federation for `cfg` + `spec`: one member world
+/// per cluster — each with its own cluster geometry, scenario-resolved
+/// arrival pipeline (storm windows staggered per member), recorder and
+/// seed-forked RNG streams — wired with the standard components,
+/// sharing one transient-lease pool when the spec says so, behind the
+/// spec's router. `scheds` must hold one scheduler per cluster (the
+/// members borrow them for the federation's lifetime).
+pub fn build_federation<'a>(
+    cfg: &ExperimentConfig,
+    spec: &FederationSpec,
+    scheds: &'a mut [Box<dyn Scheduler>],
+) -> Result<Federation<'a>> {
+    spec.validate()?;
+    let n = spec.clusters;
+    assert_eq!(scheds.len(), n, "one scheduler per member cluster");
+    let member_cfgs: Vec<ExperimentConfig> =
+        (0..n).map(|i| spec.member_config(cfg, i)).collect();
+
+    // Budget sharing: `K` is one cluster's §3.1 cap r·N_s·p. Pooled
+    // sharing stretches that single-cluster budget across the whole
+    // federation (the elasticity experiment: N clusters, one budget);
+    // split sharing gives each member a hard K/N slice of the same
+    // total; uncoupled members each keep their own full K.
+    let k = member_cfgs[0]
+        .to_sim_config()
+        .manager
+        .as_ref()
+        .map(|m| m.budget.max_transients())
+        .unwrap_or(0);
+    let (shareds, total_cap): (Vec<Option<SharedBudget>>, Option<usize>) =
+        match spec.budget_sharing {
+            BudgetSharing::None => (vec![None; n], None),
+            BudgetSharing::Pooled => {
+                let pool = SharedBudget::new(k);
+                ((0..n).map(|_| Some(pool.clone())).collect(), Some(k))
+            }
+            // Hard slices summing to exactly K: the first K mod N
+            // members absorb the remainder, so no unit is lost to
+            // integer division (with N > K the tail members get
+            // zero-transient slices — a deliberately austere split).
+            BudgetSharing::Split => (
+                (0..n)
+                    .map(|i| Some(SharedBudget::new(k / n + usize::from(i < k % n))))
+                    .collect(),
+                Some(k),
+            ),
+        };
+
+    let routed = spec.router != RouterKind::PassThrough;
+    let mut worlds: Vec<World<'a>> = Vec::with_capacity(n);
+    let mut sources: Vec<Box<dyn ArrivalSource>> = Vec::new();
+    let mut arr_rngs: Vec<Rng> = Vec::new();
+    for ((mc, sched), shared) in member_cfgs.iter().zip(scheds.iter_mut()).zip(&shareds) {
+        let sim_cfg = mc.to_sim_config();
+        let scenario = mc.scenario.clone().unwrap_or_else(ScenarioSpec::passthrough);
+        let mut world = if routed {
+            World::new_inbox(build_cluster(&sim_cfg), build_recorder(&sim_cfg), sim_cfg.seed)
+        } else {
+            World::new(
+                scenario.build_source(mc)?,
+                build_cluster(&sim_cfg),
+                build_recorder(&sim_cfg),
+                sim_cfg.seed,
+            )
+        };
+        wire_standard_shared(&mut world, sched.as_mut(), &sim_cfg, None, shared.clone());
+        if routed {
+            // The member's canonical arrival stream (0xAE, forked after
+            // wiring exactly where `World::start` would fork it) drives
+            // the federation's pull from this member's source, so a
+            // routed member consumes the identical stream a standalone
+            // run of the same config would.
+            arr_rngs.push(world.fork_rng(0xAE));
+            sources.push(scenario.build_source(mc)?);
+        }
+        worlds.push(world);
+    }
+
+    let mut federation = if routed {
+        let router: Box<dyn JobRouter> = match spec.router {
+            RouterKind::RoundRobin => Box::new(RoundRobin::default()),
+            RouterKind::LeastQueued => Box::new(LeastQueued),
+            RouterKind::ClassSplit => Box::new(ClassSplit::default()),
+            RouterKind::PassThrough => unreachable!("routed implies a non-identity router"),
+        };
+        Federation::routed(worlds, sources, arr_rngs, router)
+    } else {
+        Federation::passthrough(worlds)
+    };
+    federation.set_shared_budgets(shareds, total_cap);
+    Ok(federation)
+}
+
+/// Run `cfg`'s federation end-to-end (the `[federation]` block, or a
+/// single pass-through member when the config has none) and distill one
+/// [`RunResult`] per member plus the cross-cluster watermarks.
+pub fn run_federation(cfg: &ExperimentConfig) -> Result<FederationOutcome> {
+    let wall0 = Instant::now();
+    let spec = cfg.federation.clone().unwrap_or_default();
+    let n = spec.clusters;
+    // `member_config` never changes the scheduler kind, so one name
+    // serves every member's RunResult.
+    let scheduler_name = cfg.scheduler.name().to_string();
+    let mut scheds: Vec<Box<dyn Scheduler>> = (0..n)
+        .map(|_| crate::coordinator::report::build_scheduler(cfg.scheduler, cfg.probe_ratio))
+        .collect();
+    let mut federation = build_federation(cfg, &spec, &mut scheds)?;
+    federation.run();
+    // Read the cap off the federation: the builder that sized the pools
+    // recorded it, so the reported bound is the enforced bound.
+    let shared_cap = federation.shared_cap();
+    let peak_total_fleet = federation.peak_total_fleet();
+    let peak_total_active = federation.peak_total_active();
+    let wall_ms = wall0.elapsed().as_secs_f64() * 1000.0;
+    // The members ran interleaved in one loop, so the federation's wall
+    // clock is shared; attribute it in proportion to events processed,
+    // so each member's `events_per_sec` reflects the run's actual
+    // simulation rate instead of understating it by a factor of N.
+    let total_events: u64 =
+        federation.members().iter().map(|m| m.engine.processed()).sum();
+    let runs: Vec<RunResult> = federation
+        .into_members()
+        .into_iter()
+        .map(|world| {
+            let share = if total_events > 0 {
+                world.engine.processed() as f64 / total_events as f64
+            } else {
+                1.0 / n as f64
+            };
+            distill_world(world, scheduler_name.clone(), wall_ms * share)
+        })
+        .collect();
+    Ok(FederationOutcome {
+        runs,
+        peak_total_fleet,
+        peak_total_active,
+        shared_cap,
+        router: spec.router.name(),
+        clusters: n,
+        wall_ms,
+    })
 }
 
 #[cfg(test)]

@@ -46,7 +46,8 @@ use crate::trace::{self, ArrivalSource, CsvStream};
 use crate::util::Time;
 
 /// Scenario names resolvable by [`named`] / the CLI `--scenario` flag.
-pub const SCENARIO_NAMES: &[&str] = &["default", "managerless", "burst-storm"];
+pub const SCENARIO_NAMES: &[&str] =
+    &["default", "managerless", "burst-storm", "federated-burst"];
 
 /// Every key the `[scenario]` TOML section understands (closed set:
 /// unknown keys are config errors, not silent no-ops).
@@ -350,6 +351,209 @@ fn key_str<'t>(t: &'t Table, k: &str) -> Result<Option<&'t str>> {
     }
 }
 
+// ------------------------------------------------------------ federation
+
+/// Every key the `[federation]` TOML section understands (closed set:
+/// unknown keys are config errors, not silent no-ops).
+const FEDERATION_KEYS: &[&str] = &["clusters", "router", "budget_sharing", "stagger"];
+
+/// Which [`crate::sim::JobRouter`] fronts a federation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// No routing: each job executes on the cluster whose source
+    /// produced it (the identity front end; members own their feeds).
+    PassThrough,
+    RoundRobin,
+    LeastQueued,
+    /// Class-aware short/long split across the member halves.
+    ClassSplit,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "passthrough" | "pass-through" => RouterKind::PassThrough,
+            "round-robin" => RouterKind::RoundRobin,
+            "least-queued" => RouterKind::LeastQueued,
+            "class-split" => RouterKind::ClassSplit,
+            other => bail!(
+                "unknown federation router {other:?} \
+                 (passthrough|round-robin|least-queued|class-split)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::PassThrough => "passthrough",
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastQueued => "least-queued",
+            RouterKind::ClassSplit => "class-split",
+        }
+    }
+}
+
+/// How the transient budget couples across federated clusters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetSharing {
+    /// Uncoupled: every cluster keeps its own full budget cap K.
+    None,
+    /// One hard K/N slice per cluster (the total never exceeds K, but
+    /// idle headroom is not transferable).
+    Split,
+    /// One pooled cap K drawn from by all clusters: a quiet cluster's
+    /// headroom serves another's burst — CloudCoaster's elasticity
+    /// argument at federation scope.
+    Pooled,
+}
+
+impl BudgetSharing {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => BudgetSharing::None,
+            "split" => BudgetSharing::Split,
+            "pooled" => BudgetSharing::Pooled,
+            other => bail!("unknown budget_sharing {other:?} (none|split|pooled)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BudgetSharing::None => "none",
+            BudgetSharing::Split => "split",
+            BudgetSharing::Pooled => "pooled",
+        }
+    }
+}
+
+/// A declarative multi-cluster federation: member count, router front
+/// end, budget coupling, and the per-cluster storm stagger. Parsed from
+/// a `[federation]` TOML block or resolved from the registry
+/// (`--scenario federated-burst`); `build_federation` in
+/// `coordinator::runner` turns it plus the experiment config into wired
+/// member worlds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FederationSpec {
+    /// Member cluster count (N = 1 with a passthrough router reproduces
+    /// the single-world run bit-identically).
+    pub clusters: usize,
+    pub router: RouterKind,
+    pub budget_sharing: BudgetSharing,
+    /// Seconds added per member index to every `BurstStorm` window of
+    /// the member's scenario: member i's storms shift by `i·stagger`,
+    /// so bursts sweep across the federation instead of striking every
+    /// cluster at once.
+    pub stagger: f64,
+}
+
+impl Default for FederationSpec {
+    fn default() -> Self {
+        FederationSpec {
+            clusters: 1,
+            router: RouterKind::PassThrough,
+            budget_sharing: BudgetSharing::None,
+            stagger: 0.0,
+        }
+    }
+}
+
+impl FederationSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.clusters == 0 {
+            bail!("federation needs at least one cluster");
+        }
+        if self.clusters > 64 {
+            bail!("federation.clusters capped at 64 (got {})", self.clusters);
+        }
+        if !(self.stagger >= 0.0 && self.stagger.is_finite()) {
+            bail!("federation.stagger must be finite and >= 0 (got {})", self.stagger);
+        }
+        Ok(())
+    }
+
+    /// Parse the `[federation]` section out of a parsed config table
+    /// (`None` when the file has none; mistyped or unknown keys are
+    /// errors, never silent no-ops).
+    pub fn from_table(t: &Table) -> Result<Option<FederationSpec>> {
+        if !t.keys().any(|k| k.starts_with("federation.")) {
+            return Ok(None);
+        }
+        for k in t.keys() {
+            if let Some(rest) = k.strip_prefix("federation.") {
+                if !FEDERATION_KEYS.contains(&rest) {
+                    bail!("unknown federation key {rest:?} (known keys: {FEDERATION_KEYS:?})");
+                }
+            }
+        }
+        let mut spec = FederationSpec::default();
+        if let Some(v) = t.get("federation.clusters") {
+            spec.clusters =
+                v.as_usize().context("federation.clusters must be a positive integer")?;
+        }
+        if let Some(v) = t.get("federation.router") {
+            spec.router =
+                RouterKind::parse(v.as_str().context("federation.router must be a string")?)?;
+        }
+        if let Some(v) = t.get("federation.budget_sharing") {
+            spec.budget_sharing = BudgetSharing::parse(
+                v.as_str().context("federation.budget_sharing must be a string")?,
+            )?;
+        }
+        if let Some(v) = t.get("federation.stagger") {
+            spec.stagger = v.as_f64().context("federation.stagger must be a number")?;
+        }
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+
+    /// Derive member `i`'s experiment config: its own seed (base + i, as
+    /// `replicate` numbers its runs) and its scenario's storm windows
+    /// shifted by `i·stagger`. The member config carries no `federation`
+    /// of its own — it is exactly what a standalone run of that member
+    /// would use, which is what makes the N = 1 pass-through federation
+    /// reproduce the plain world bit-for-bit.
+    pub fn member_config(&self, base: &ExperimentConfig, i: usize) -> ExperimentConfig {
+        let mut cfg = base.clone();
+        cfg.federation = None;
+        cfg.seed = base.seed.wrapping_add(i as u64);
+        if self.stagger > 0.0 {
+            if let Some(spec) = &mut cfg.scenario {
+                for c in &mut spec.stack {
+                    if let CombinatorSpec::BurstStorm { windows, .. } = c {
+                        for w in windows.iter_mut() {
+                            w.0 += i as f64 * self.stagger;
+                            w.1 += i as f64 * self.stagger;
+                        }
+                    }
+                }
+            }
+        }
+        cfg
+    }
+}
+
+/// Registry federation for a `--scenario` name: `federated-burst`
+/// resolves to two clusters under staggered storm windows sharing one
+/// pooled transient budget (the cross-cluster elasticity scenario);
+/// every other name federates nothing (`None`).
+pub fn named_federation(
+    name: &str,
+    cfg: &ExperimentConfig,
+) -> Result<Option<FederationSpec>> {
+    Ok(match name {
+        "federated-burst" => {
+            let h = default_horizon(cfg)?;
+            Some(FederationSpec {
+                clusters: 2,
+                router: RouterKind::PassThrough,
+                budget_sharing: BudgetSharing::Pooled,
+                stagger: 0.20 * h,
+            })
+        }
+        _ => None,
+    })
+}
+
 /// Stream the experiment's `[workload]` selection — the streaming twin
 /// of `report::build_workload` (same seeds, same forks, bit-identical
 /// jobs).
@@ -392,6 +596,21 @@ pub fn named(name: &str, cfg: &ExperimentConfig) -> Result<ScenarioSpec> {
             let h = default_horizon(cfg)?;
             ScenarioSpec {
                 name: "burst-storm".to_string(),
+                stack: vec![CombinatorSpec::BurstStorm {
+                    windows: vec![(0.25 * h, 0.40 * h)],
+                    intensity: 3.0,
+                }],
+                ..ScenarioSpec::passthrough()
+            }
+        }
+        // The workload half of the federated scenario: the same storm
+        // base as `burst-storm`; the federation half (two clusters,
+        // pooled budget, per-cluster stagger applied to these windows)
+        // comes from [`named_federation`].
+        "federated-burst" => {
+            let h = default_horizon(cfg)?;
+            ScenarioSpec {
+                name: "federated-burst".to_string(),
                 stack: vec![CombinatorSpec::BurstStorm {
                     windows: vec![(0.25 * h, 0.40 * h)],
                     intensity: 3.0,
@@ -494,6 +713,87 @@ mod tests {
             let t = parse(text).unwrap();
             assert!(ScenarioSpec::from_table(&t).is_err(), "accepted: {text}");
         }
+    }
+
+    #[test]
+    fn federation_table_parses_and_rejects() {
+        let t = parse(
+            r#"
+            [federation]
+            clusters = 3
+            router = "least-queued"
+            budget_sharing = "pooled"
+            stagger = 600
+            "#,
+        )
+        .unwrap();
+        let spec = FederationSpec::from_table(&t).unwrap().unwrap();
+        assert_eq!(spec.clusters, 3);
+        assert_eq!(spec.router, RouterKind::LeastQueued);
+        assert_eq!(spec.budget_sharing, BudgetSharing::Pooled);
+        assert_eq!(spec.stagger, 600.0);
+        // Absent section is None.
+        let t = parse("[cluster]\nservers = 100\n").unwrap();
+        assert!(FederationSpec::from_table(&t).unwrap().is_none());
+        for text in [
+            "[federation]\nclusters = 0\n",             // no members
+            "[federation]\nclusters = 100\n",           // over the cap
+            "[federation]\nrouter = \"hashring\"\n",    // unknown router
+            "[federation]\nbudget_sharing = \"all\"\n", // unknown sharing
+            "[federation]\nstagger = -5\n",             // negative stagger
+            "[federation]\nclusers = 2\n",              // typo'd key
+            "[federation]\nclusters = \"two\"\n",       // mistyped value
+        ] {
+            let t = parse(text).unwrap();
+            assert!(FederationSpec::from_table(&t).is_err(), "accepted: {text}");
+        }
+    }
+
+    #[test]
+    fn member_config_staggers_storms_and_seeds() {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.seed = 100;
+        cfg.scenario = Some(ScenarioSpec {
+            name: "storm".into(),
+            source: SourceSpec::Workload,
+            stack: vec![CombinatorSpec::BurstStorm {
+                windows: vec![(1000.0, 2000.0)],
+                intensity: 3.0,
+            }],
+            manager_off: false,
+        });
+        let fed = FederationSpec { clusters: 2, stagger: 500.0, ..Default::default() };
+        let m0 = fed.member_config(&cfg, 0);
+        let m1 = fed.member_config(&cfg, 1);
+        assert_eq!(m0.seed, 100);
+        assert_eq!(m1.seed, 101);
+        assert!(m0.federation.is_none() && m1.federation.is_none());
+        let windows = |c: &ExperimentConfig| match &c.scenario.as_ref().unwrap().stack[0] {
+            CombinatorSpec::BurstStorm { windows, .. } => windows.clone(),
+            _ => unreachable!(),
+        };
+        assert_eq!(windows(&m0), vec![(1000.0, 2000.0)]);
+        assert_eq!(windows(&m1), vec![(1500.0, 2500.0)]);
+        // Member 0 of a zero-index federation is the base config exactly
+        // (scenario untouched) — the N = 1 bit-identity precondition.
+        assert_eq!(m0.scenario, cfg.scenario);
+    }
+
+    #[test]
+    fn named_federation_registry() {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        if let WorkloadSource::YahooLike(p) = &mut cfg.workload {
+            p.horizon = 10_000.0;
+        }
+        let fed = named_federation("federated-burst", &cfg).unwrap().unwrap();
+        assert_eq!(fed.clusters, 2);
+        assert_eq!(fed.budget_sharing, BudgetSharing::Pooled);
+        assert!((fed.stagger - 2000.0).abs() < 1e-9);
+        fed.validate().unwrap();
+        assert!(named_federation("burst-storm", &cfg).unwrap().is_none());
+        // And the scenario half resolves from the same name.
+        let spec = named("federated-burst", &cfg).unwrap();
+        assert!(spec.reshapes_workload());
     }
 
     #[test]

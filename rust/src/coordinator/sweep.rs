@@ -58,12 +58,14 @@ pub fn run_sweep_parallel(
     points: &[GridPoint],
     threads: usize,
 ) -> Result<Vec<Report>> {
-    // When every point streams its own scenario pipeline, the shared
-    // eager workload would never be read — skip materialising it.
+    // When every point streams its own scenario pipeline (or federates —
+    // members always build their own pipelines), the shared eager
+    // workload would never be read — skip materialising it.
     let all_streaming = !points.is_empty()
-        && points
-            .iter()
-            .all(|p| p.cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false));
+        && points.iter().all(|p| {
+            p.cfg.federation.is_some()
+                || p.cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false)
+        });
     let workload = if all_streaming { Workload::default() } else { build_workload(base)? };
     run_points_on(&workload, points, threads)
 }
@@ -277,6 +279,52 @@ pub fn splice_points(
         .collect()
 }
 
+/// Federation axis: router front end, holding cluster count and budget
+/// sharing fixed — one grid cell per [`RouterKind`]. Points whose base
+/// config has no `[federation]` get the registry's two-cluster default.
+pub fn router_points(
+    base: &ExperimentConfig,
+    routers: &[crate::coordinator::scenario::RouterKind],
+) -> Vec<GridPoint> {
+    routers
+        .iter()
+        .map(|&router| {
+            let mut cfg = base.clone();
+            let mut fed = cfg.federation.clone().unwrap_or(
+                crate::coordinator::scenario::FederationSpec {
+                    clusters: 2,
+                    ..Default::default()
+                },
+            );
+            fed.router = router;
+            cfg.federation = Some(fed);
+            GridPoint::new(format!("router={}", router.name()), cfg)
+        })
+        .collect()
+}
+
+/// Federation axis: budget sharing (none / split / pooled) across a
+/// fixed member count — the elasticity ablation: does pooling one
+/// cluster's quiet headroom into another's burst pay?
+pub fn budget_sharing_points(base: &ExperimentConfig) -> Vec<GridPoint> {
+    use crate::coordinator::scenario::BudgetSharing;
+    [BudgetSharing::None, BudgetSharing::Split, BudgetSharing::Pooled]
+        .into_iter()
+        .map(|sharing| {
+            let mut cfg = base.clone();
+            let mut fed = cfg.federation.clone().unwrap_or(
+                crate::coordinator::scenario::FederationSpec {
+                    clusters: 2,
+                    ..Default::default()
+                },
+            );
+            fed.budget_sharing = sharing;
+            cfg.federation = Some(fed);
+            GridPoint::new(format!("budget={}", sharing.name()), cfg)
+        })
+        .collect()
+}
+
 /// Scheduler-family comparison (context for §5 related work).
 pub fn scheduler_points(base: &ExperimentConfig) -> Vec<GridPoint> {
     [
@@ -335,6 +383,28 @@ pub fn scheduler_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
 /// Scenario sweep: burst-storm intensity axis.
 pub fn storm_sweep(base: &ExperimentConfig, intensities: &[f64]) -> Result<Vec<Report>> {
     run_grid(base, &storm_intensity_points(base, intensities)?)
+}
+
+/// Federation sweep: router axis (all four routers).
+pub fn router_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    use crate::coordinator::scenario::RouterKind;
+    run_grid(
+        base,
+        &router_points(
+            base,
+            &[
+                RouterKind::PassThrough,
+                RouterKind::RoundRobin,
+                RouterKind::LeastQueued,
+                RouterKind::ClassSplit,
+            ],
+        ),
+    )
+}
+
+/// Federation sweep: budget-sharing axis.
+pub fn budget_sharing_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
+    run_grid(base, &budget_sharing_points(base))
 }
 
 #[cfg(test)]

@@ -29,14 +29,26 @@
 //!   of pluggable [`sim::Component`]s — the scheduler adapter, transient
 //!   manager, work stealer and snapshot/forecast sampler are all
 //!   components ([`sim::components`]), so new scenarios are component
-//!   wiring plus source combinators, not runner changes. Together with
-//!   the cluster's generational task and server arenas and the
-//!   recorder's fixed-memory delay sketches, job records, task slots,
-//!   server slots and per-sample metrics are all O(active), not
-//!   O(trace) (`peak_resident_jobs` / `peak_resident_tasks` /
-//!   `peak_resident_servers` report the high-water marks). The only
-//!   remaining horizon-proportional state is the sampled snapshot
-//!   time series (one point per `snapshot_interval` — see ROADMAP).
+//!   wiring plus source combinators, not runner changes. The event
+//!   loop is exposed piecewise (`World::start`/`step`/`finish`;
+//!   `run()` is exactly their composition), which is what the
+//!   multi-cluster [`sim::Federation`] builds on: N member worlds —
+//!   each with its own cluster, scenario pipeline, recorder and
+//!   seed-forked RNG streams — advanced in global event-time order by
+//!   an earliest-next-event merge, with a pluggable [`sim::JobRouter`]
+//!   (pass-through / round-robin / least-queued / class-split)
+//!   dispatching arrivals across clusters and an optional
+//!   [`transient::SharedBudget`] pooling one transient budget across
+//!   all of them. An N = 1 pass-through federation is bit-identical
+//!   to the plain world. Together with the cluster's generational
+//!   task and server arenas and the recorder's fixed-memory delay
+//!   sketches, job records, task slots, server slots and per-sample
+//!   metrics are all O(active), not O(trace) (`peak_resident_jobs` /
+//!   `peak_resident_tasks` / `peak_resident_servers` report the
+//!   high-water marks), and the sampled snapshot series ride a
+//!   fixed-capacity rebucketing ring (`metrics::TimeSeries::bounded`:
+//!   2x stride coarsening when full) — no per-run structure grows
+//!   with the horizon.
 //! * **trace** — workloads, eager and streaming: synthetic generators
 //!   calibrated to the paper's traces (eager `yahoo_like` /
 //!   `google_like` are collectors over their streaming twins
@@ -71,10 +83,18 @@
 //!   every evaluation grid is a list of [`coordinator::GridPoint`]s run
 //!   through one generic driver, either serially or fanned out across
 //!   cores by [`coordinator::run_sweep_parallel`] — scenario parameters
-//!   (storm intensity, splice points) sweep like any other grid axis.
-//!   Runs derive all randomness from their own config seed, so every
-//!   simulation field of a sweep report is bit-identical at any thread
-//!   count (only wall-clock timing fields vary).
+//!   (storm intensity, splice points) and federation axes (router,
+//!   budget sharing) sweep like any other grid axis. A `[federation]`
+//!   TOML block or `--clusters N` / `--scenario federated-burst`
+//!   resolves to a [`coordinator::FederationSpec`]; the canonical
+//!   member wiring is [`coordinator::build_federation`] /
+//!   [`coordinator::run_federation`], distilled into per-cluster
+//!   reports plus a merged aggregate
+//!   ([`coordinator::FederatedReport`]: delay histograms merge
+//!   bucket-wise exactly, cost ledgers sum). Runs derive all
+//!   randomness from their own config seed, so every simulation field
+//!   of a sweep report is bit-identical at any thread count (only
+//!   wall-clock timing fields vary).
 //! * **runtime / metrics / transient** — analytics engines (pure-rust
 //!   [`runtime::NativeAnalytics`] by default; PJRT/XLA under
 //!   `--features xla`), the recorder + cost ledger behind every paper
@@ -85,7 +105,10 @@
 //!   survives behind `SimConfig::exact_delay_samples` for golden
 //!   comparisons) — and the §3.2 transient manager + market model.
 //!
-//! Determinism is load-bearing: `tests/golden_determinism.rs` pins the
+//! Determinism is load-bearing: `tests/federation_golden.rs` pins the
+//! N = 1 pass-through federation bit-exactly to the plain world (plus
+//! N = 2 determinism, sweep-thread invariance and the pooled-budget
+//! cap invariant), `tests/golden_determinism.rs` pins the
 //! `World` decomposition bit-exactly to the original monolithic runner,
 //! `tests/streaming_golden.rs` pins the streaming arrival path
 //! bit-exactly to the eager replay (and the combinators to fixed

@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! cloudcoaster run      [--config FILE] [--scheduler KIND] [--r R] [--seed N]
-//!                       [--scenario default|managerless|burst-storm]
+//!                       [--scenario default|managerless|burst-storm|federated-burst]
+//!                       [--clusters N] [--router KIND] [--budget-sharing MODE]
 //! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3] [--threads N]
-//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler|storm [--threads N]
+//! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler|storm|router|budget [--threads N]
 //! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
 //! cloudcoaster replicate [--seeds N]   # headline across N seeds
 //! cloudcoaster version
@@ -12,10 +13,18 @@
 //!
 //! `--scenario` resolves a registry scenario against the loaded config
 //! (manager-less baseline wiring, injected burst storms over whatever
-//! `[workload]` selects — including CSV trace replay). Fully custom
-//! pipelines go in the config file's `[scenario]` section; either way
-//! the workload streams through the simulation in O(active-jobs)
+//! `[workload]` selects — including CSV trace replay;
+//! `federated-burst` adds a two-cluster federation under staggered
+//! storms and one pooled transient budget). Fully custom pipelines go
+//! in the config file's `[scenario]` / `[federation]` sections; either
+//! way the workload streams through the simulation in O(active-jobs)
 //! memory, so trace length is not capped by RAM.
+//!
+//! `--clusters N` federates N clusters (pass-through router unless
+//! `--router round-robin|least-queued|class-split` picks a front end;
+//! `--budget-sharing none|split|pooled` couples the transient budgets).
+//! A federated run prints one summary line per cluster plus the
+//! aggregate (merged delay histograms, summed cost ledgers).
 //!
 //! Sweeps and ablations fan their runs out across `--threads` OS threads
 //! (default: all cores). Simulation results are bit-identical at any
@@ -99,8 +108,40 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // Registry scenarios compose with the configured workload (so
         // `--scenario burst-storm` over a CSV workload is a burst-storm
         // trace replay). A `[scenario]` section in the config file is
-        // replaced by the named one.
+        // replaced by the named one; `federated-burst` also installs
+        // its registry federation (clusters still overridable below).
         cfg.scenario = Some(cloudcoaster::coordinator::scenario::named(name, &cfg)?);
+        if let Some(fed) = cloudcoaster::coordinator::scenario::named_federation(name, &cfg)? {
+            cfg.federation = Some(fed);
+        }
+    }
+    // An explicit cluster count — from the config file's [federation]
+    // block, a registry federation, or --clusters — is never second-
+    // guessed; only when --router/--budget-sharing conjure a federation
+    // from nothing do they default to two clusters (there is nothing to
+    // route across with one).
+    let had_explicit_clusters = cfg.federation.is_some() || args.get("clusters").is_some();
+    if let Some(n) = args.get("clusters") {
+        let clusters: usize = n.parse().context("--clusters")?;
+        let mut fed = cfg.federation.clone().unwrap_or_default();
+        fed.clusters = clusters;
+        cfg.federation = Some(fed);
+    }
+    if let Some(r) = args.get("router") {
+        let mut fed = cfg.federation.clone().unwrap_or_default();
+        fed.router = cloudcoaster::coordinator::RouterKind::parse(r)?;
+        if !had_explicit_clusters {
+            fed.clusters = 2;
+        }
+        cfg.federation = Some(fed);
+    }
+    if let Some(b) = args.get("budget-sharing") {
+        let mut fed = cfg.federation.clone().unwrap_or_default();
+        fed.budget_sharing = cloudcoaster::coordinator::BudgetSharing::parse(b)?;
+        if !had_explicit_clusters {
+            fed.clusters = 2;
+        }
+        cfg.federation = Some(fed);
     }
     cfg.validate()?;
     Ok(cfg)
@@ -121,18 +162,41 @@ fn parse_threads(args: &Args) -> Result<usize> {
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     eprintln!("workload: {}", workload_summary(&cfg)?);
-    let rep = run_experiment(&cfg)?;
+    let rep = if cfg.federation.is_some() {
+        // Federated run: one line per member cluster, then the
+        // aggregate (merged delay histograms, summed cost ledgers) —
+        // which also feeds --cdf-out and the memory headlines below.
+        let fed = cloudcoaster::coordinator::run_federated_experiment(&cfg)?;
+        for (i, rep) in fed.per_cluster.iter().enumerate() {
+            println!("cluster {i}: {}", summary_line(rep));
+        }
+        match fed.shared_cap {
+            Some(cap) => println!(
+                "federation transient peak (active+provisioning): {} / shared cap {}",
+                fed.peak_total_fleet, cap
+            ),
+            None => println!(
+                "federation transient peak (active+provisioning): {} (uncoupled budgets)",
+                fed.peak_total_fleet
+            ),
+        }
+        fed.aggregate
+    } else {
+        run_experiment(&cfg)?
+    };
     println!("{}", summary_line(&rep));
     if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
         eprintln!("peak resident jobs (streaming): {}", rep.peak_resident_jobs);
     }
     // The arena-memory headlines: finished task slots and retired
-    // server slots recycle, and delay samples stream through fixed-size
-    // histogram sketches — all three are bounded by cluster load, not
-    // trace length (CI pins each flat under 10x trace scaling).
+    // server slots recycle, delay samples stream through fixed-size
+    // histogram sketches, and the snapshot series ride a bounded
+    // rebucketing ring — all bounded by cluster load, not trace length
+    // (CI pins each flat under 10x trace scaling).
     println!("peak resident tasks (arena): {}", rep.peak_resident_tasks);
     println!("peak resident servers (arena): {}", rep.peak_resident_servers);
     println!("delay structures (bytes): {}", rep.delay_struct_bytes);
+    println!("snapshot series (bytes): {}", rep.snapshot_series_bytes);
     if let Some(out) = args.get("cdf-out") {
         std::fs::write(out, rep.cdf.to_csv())?;
         eprintln!("wrote CDF to {out}");
@@ -172,9 +236,19 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         "market" => sweep::bid_points(&cfg, &[None, Some(2.0), Some(0.5), Some(0.35)]),
         "forecast" => sweep::forecast_points(&cfg),
         "storm" => sweep::storm_intensity_points(&cfg, &[1.0, 2.0, 3.0, 5.0])?,
+        "router" => sweep::router_points(
+            &cfg,
+            &[
+                cloudcoaster::coordinator::RouterKind::PassThrough,
+                cloudcoaster::coordinator::RouterKind::RoundRobin,
+                cloudcoaster::coordinator::RouterKind::LeastQueued,
+                cloudcoaster::coordinator::RouterKind::ClassSplit,
+            ],
+        ),
+        "budget" => sweep::budget_sharing_points(&cfg),
         other => bail!(
             "unknown ablation {other:?} \
-             (threshold|revocation|policy|scheduler|market|forecast|storm)"
+             (threshold|revocation|policy|scheduler|market|forecast|storm|router|budget)"
         ),
     };
     let reports = sweep::run_sweep_parallel(&cfg, &points, threads)?;

@@ -314,6 +314,21 @@ impl DelayDist {
         }
     }
 
+    /// Merge another population into this one (cross-run aggregation,
+    /// e.g. a federation's per-cluster delay populations into one
+    /// federated distribution). Bucket-wise exact on the sketch backend
+    /// (identical fixed bucketing by construction), sample concatenation
+    /// on the exact backend. Both sides must use the same backend — a
+    /// mismatch is a wiring bug (one `SimConfig` builds every member),
+    /// and panics rather than silently degrading.
+    pub fn merge_from(&mut self, other: &DelayDist) {
+        match (self, other) {
+            (DelayDist::Sketch(a), DelayDist::Sketch(b)) => a.merge(b),
+            (DelayDist::Exact(a), DelayDist::Exact(b)) => a.merge_from(b),
+            _ => panic!("DelayDist::merge_from across mismatched backends"),
+        }
+    }
+
     /// Raw samples, only available on the exact backend.
     pub fn samples(&self) -> Option<&[f64]> {
         match self {

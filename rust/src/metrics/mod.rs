@@ -24,4 +24,4 @@ pub use cost::CostLedger;
 pub use histogram::{DelayDist, DelayHistogram, GAMMA, MAX_TRACKED, MIN_TRACKED, N_BUCKETS};
 pub use recorder::Recorder;
 pub use stats::{DelaySamples, StreamingStats};
-pub use timeseries::{StepIntegrator, TimeSeries};
+pub use timeseries::{StepIntegrator, TimeSeries, DEFAULT_SNAPSHOT_POINTS};

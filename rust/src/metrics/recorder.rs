@@ -65,13 +65,33 @@ impl Recorder {
     }
 
     pub fn with_backend(r: f64, exact_delay_samples: bool) -> Self {
+        // The exact-delay reference mode keeps the snapshot series exact
+        // too (the fully-exact golden build); defaults bound them.
+        let cap = if exact_delay_samples {
+            0
+        } else {
+            crate::metrics::DEFAULT_SNAPSHOT_POINTS
+        };
+        Self::with_options(r, exact_delay_samples, cap)
+    }
+
+    /// Full-control constructor: delay backend and snapshot-series point
+    /// capacity (`0` = unbounded exact series) chosen independently.
+    pub fn with_options(r: f64, exact_delay_samples: bool, snapshot_points: usize) -> Self {
+        let series = || {
+            if snapshot_points == 0 {
+                TimeSeries::new()
+            } else {
+                TimeSeries::bounded(snapshot_points)
+            }
+        };
         Recorder {
             short_delays: DelayDist::new(exact_delay_samples),
             long_delays: DelayDist::new(exact_delay_samples),
             short_job_response: StreamingStats::new(),
             long_job_response: StreamingStats::new(),
-            lr_series: TimeSeries::new(),
-            transient_series: TimeSeries::new(),
+            lr_series: series(),
+            transient_series: series(),
             cost: CostLedger::with_backend(r, exact_delay_samples),
             tasks_finished: 0,
             tasks_rescheduled: 0,
@@ -112,6 +132,35 @@ impl Recorder {
         self.short_delays.memory_bytes()
             + self.long_delays.memory_bytes()
             + self.cost.lifetimes.memory_bytes()
+    }
+
+    /// Resident bytes of the sampled snapshot series (l_r + active
+    /// transients). Bounded by the ring capacity on the default path —
+    /// the last per-run structure that used to grow with the horizon;
+    /// O(horizon) only in the exact reference mode.
+    pub fn snapshot_series_bytes(&self) -> usize {
+        self.lr_series.memory_bytes() + self.transient_series.memory_bytes()
+    }
+
+    /// Merge another run's recorder into this one for cross-cluster
+    /// aggregation (federation reports): delay populations and transient
+    /// lifetimes merge exactly (bucket-wise on the sketch backend,
+    /// sample-concatenation on the exact backend), counters sum. The
+    /// snapshot time series and the step-integrated cost curves are
+    /// per-cluster trajectories with no meaningful pointwise merge —
+    /// they stay as-is on `self`; aggregate cost numbers are recombined
+    /// from the per-run ledgers by the report layer instead.
+    pub fn absorb(&mut self, other: &Recorder) {
+        self.short_delays.merge_from(&other.short_delays);
+        self.long_delays.merge_from(&other.long_delays);
+        self.cost.lifetimes.merge_from(&other.cost.lifetimes);
+        self.short_job_response.merge_from(&other.short_job_response);
+        self.long_job_response.merge_from(&other.long_job_response);
+        self.tasks_finished += other.tasks_finished;
+        self.tasks_rescheduled += other.tasks_rescheduled;
+        self.stale_copies_skipped += other.stale_copies_skipped;
+        self.transients_requested += other.transients_requested;
+        self.transients_revoked += other.transients_revoked;
     }
 
     /// Figure 3: CDF of short-task queueing delay at `n_edges` uniform
@@ -179,6 +228,51 @@ mod tests {
         r.snapshot(60.0, 0.9, 10.0);
         assert_eq!(r.lr_series.len(), 2);
         assert_eq!(r.transient_series.len(), 2);
+    }
+
+    #[test]
+    fn snapshot_series_bounded_by_default_unbounded_in_exact_mode() {
+        // Default: the ring caps retained points, so bytes stay bounded
+        // no matter how many snapshots the horizon produces.
+        let mut r = Recorder::new(1.0);
+        for i in 0..20_000 {
+            r.snapshot(i as f64 * 60.0, 0.5, 1.0);
+        }
+        assert!(r.lr_series.len() <= crate::metrics::DEFAULT_SNAPSHOT_POINTS);
+        assert!(
+            r.snapshot_series_bytes()
+                <= 2 * (crate::metrics::DEFAULT_SNAPSHOT_POINTS * 16 + 128)
+        );
+        // Exact reference mode keeps every point.
+        let mut rx = Recorder::new_exact(1.0);
+        for i in 0..20_000 {
+            rx.snapshot(i as f64 * 60.0, 0.5, 1.0);
+        }
+        assert_eq!(rx.lr_series.len(), 20_000);
+        assert_eq!(rx.transient_series.len(), 20_000);
+        // Both series decimate in lockstep (same offer counts), so
+        // parallel indexing stays valid for plots.
+        assert_eq!(r.lr_series.len(), r.transient_series.len());
+    }
+
+    #[test]
+    fn absorb_merges_populations_and_counters() {
+        let mut a = Recorder::new(3.0);
+        let mut b = Recorder::new(3.0);
+        a.task_started(false, 10.0);
+        a.task_started(true, 50.0);
+        a.tasks_finished = 2;
+        a.transients_requested = 1;
+        b.task_started(false, 30.0);
+        b.tasks_finished = 1;
+        b.transients_revoked = 4;
+        a.absorb(&b);
+        assert_eq!(a.short_delays.len(), 2);
+        assert_eq!(a.long_delays.len(), 1);
+        assert!((a.short_delays.mean() - 20.0).abs() < 1e-12);
+        assert_eq!(a.tasks_finished, 3);
+        assert_eq!(a.transients_requested, 1);
+        assert_eq!(a.transients_revoked, 4);
     }
 
     #[test]

@@ -48,6 +48,25 @@ impl StreamingStats {
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
     }
+
+    /// Merge another population in (Chan's parallel Welford update) —
+    /// count/mean/min/max exact; variance exact up to fp reassociation.
+    pub fn merge_from(&mut self, other: &StreamingStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Full-sample container for metrics we need exact percentiles/CDFs of.
@@ -127,6 +146,18 @@ impl DelaySamples {
         } else {
             self.samples.iter().copied().fold(f64::INFINITY, f64::min)
         }
+    }
+
+    /// Concatenate another sample set (cross-run aggregation on the
+    /// exact backend). Order is self-then-other, so the merged running
+    /// sum matches pushing the concatenated sequence.
+    pub fn merge_from(&mut self, other: &DelaySamples) {
+        if other.samples.is_empty() {
+            return;
+        }
+        self.samples.extend_from_slice(&other.samples);
+        self.sum += other.sum;
+        self.sorted = false;
     }
 
     fn ensure_sorted(&mut self) {

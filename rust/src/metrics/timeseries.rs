@@ -1,23 +1,109 @@
 //! Time-series recording: sampled series (for plots) and exact
 //! step-function integration (for time-weighted averages like the paper's
 //! "average number of active transient servers").
+//!
+//! **Memory contract**: a [`TimeSeries`] can be bounded
+//! ([`TimeSeries::bounded`]) to a fixed point capacity. When a bounded
+//! series fills, it *rebuckets on the fly*: every other retained point is
+//! dropped and the effective sampling stride doubles, so a year-long run
+//! keeps a uniformly-decimated overview in O(capacity) memory instead of
+//! one point per `snapshot_interval` (the last horizon-proportional
+//! per-run structure — see the ROADMAP item this closes). The unbounded
+//! exact path ([`TimeSeries::new`]) survives for golden comparisons,
+//! mirroring `SimConfig::exact_delay_samples`.
 
 use crate::util::Time;
 
-/// A sampled time series (snapshot points for plotting / reports).
-#[derive(Clone, Debug, Default)]
+/// Default point capacity for the recorder's bounded snapshot series
+/// (~64 KiB per series at 16 bytes/point). At the default 60 s
+/// `snapshot_interval` this holds ~2.8 simulated days before the first
+/// rebucket, so short runs — and every in-tree golden — never decimate.
+pub const DEFAULT_SNAPSHOT_POINTS: usize = 4096;
+
+/// A sampled time series (snapshot points for plotting / reports),
+/// optionally bounded by on-the-fly 2x decimation.
+#[derive(Clone, Debug)]
 pub struct TimeSeries {
     pub points: Vec<(Time, f64)>,
+    /// Point capacity; 0 = unbounded (exact reference mode).
+    max_points: usize,
+    /// Keep every `stride`-th offered sample (1 until the first rebucket;
+    /// doubles on each).
+    stride: u64,
+    /// Samples offered via [`TimeSeries::push`] since construction — the
+    /// decimation phase reference, so retained points are exactly those
+    /// with offer index ≡ 0 (mod `stride`).
+    offered: u64,
+}
+
+impl Default for TimeSeries {
+    /// The unbounded exact series (a derived `Default` would zero
+    /// `stride`, which must never be 0 — it is a modulus).
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl TimeSeries {
+    /// Unbounded exact series (reference mode): every push is retained.
     pub fn new() -> Self {
-        TimeSeries { points: Vec::new() }
+        TimeSeries { points: Vec::new(), max_points: 0, stride: 1, offered: 0 }
+    }
+
+    /// Series bounded to at most `max_points` retained points; filling up
+    /// coarsens the effective sampling interval by 2x instead of growing.
+    /// (`max_points == 0` means unbounded; a bound below 2 is clamped to
+    /// 2 — decimation needs at least two retained points to halve.)
+    pub fn bounded(max_points: usize) -> Self {
+        let max_points = if max_points == 0 { 0 } else { max_points.max(2) };
+        TimeSeries { points: Vec::new(), max_points, stride: 1, offered: 0 }
+    }
+
+    /// Is every offered sample retained (no decimation configured or
+    /// triggered yet)?
+    pub fn is_exact(&self) -> bool {
+        self.stride == 1
+    }
+
+    /// Current decimation stride: retained points are every `stride`-th
+    /// offered sample, i.e. the effective sampling interval is
+    /// `stride × snapshot_interval`.
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Samples offered over the series' lifetime (≥ retained `len`).
+    pub fn offered(&self) -> u64 {
+        self.offered
     }
 
     pub fn push(&mut self, t: Time, v: f64) {
         debug_assert!(self.points.last().map_or(true, |&(pt, _)| t >= pt));
+        let idx = self.offered;
+        self.offered += 1;
+        if idx % self.stride != 0 {
+            return; // decimated: this offer falls between retained strides
+        }
         self.points.push((t, v));
+        if self.max_points > 0 && self.points.len() >= self.max_points {
+            // Rebucket: keep offers ≡ 0 (mod 2·stride). Retained point i
+            // holds offer i·stride, so the even positions survive.
+            let mut keep = 0usize;
+            self.points.retain(|_| {
+                let kept = keep % 2 == 0;
+                keep += 1;
+                kept
+            });
+            self.stride *= 2;
+        }
+    }
+
+    /// Resident bytes of the backing point storage (counted at Vec
+    /// capacity, the truly resident allocation). Bounded series stay
+    /// O(`max_points`) regardless of run length.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.points.capacity() * std::mem::size_of::<(Time, f64)>()
     }
 
     pub fn len(&self) -> usize {
@@ -165,5 +251,64 @@ mod tests {
         let ts = TimeSeries::new();
         assert!(ts.rebucket(10.0).is_empty());
         assert_eq!(ts.mean(), 0.0);
+    }
+
+    #[test]
+    fn unbounded_series_retains_everything() {
+        let mut ts = TimeSeries::new();
+        for i in 0..10_000 {
+            ts.push(i as f64, i as f64);
+        }
+        assert_eq!(ts.len(), 10_000);
+        assert!(ts.is_exact());
+        assert_eq!(ts.stride(), 1);
+    }
+
+    #[test]
+    fn bounded_series_decimates_and_stays_bounded() {
+        let mut ts = TimeSeries::bounded(8);
+        for i in 0..10_000u64 {
+            ts.push(i as f64 * 60.0, i as f64);
+        }
+        assert!(ts.len() <= 8, "bounded series grew to {}", ts.len());
+        assert!(!ts.is_exact());
+        assert_eq!(ts.offered(), 10_000);
+        // Stride is a power of two and large enough that the retained
+        // count times the stride covers every offer.
+        assert!(ts.stride().is_power_of_two());
+        assert!(ts.stride() * 8 >= 10_000);
+        // Retained points are exactly the offers ≡ 0 (mod stride) — a
+        // uniform decimation, so times stay uniformly spaced.
+        for (k, &(t, v)) in ts.points.iter().enumerate() {
+            let offer = k as u64 * ts.stride();
+            assert_eq!(t, offer as f64 * 60.0);
+            assert_eq!(v, offer as f64);
+        }
+        // Memory is bounded by the cap, not the offer count.
+        assert!(ts.memory_bytes() < 16 * 64 + std::mem::size_of::<TimeSeries>());
+    }
+
+    #[test]
+    fn bounded_series_below_cap_is_exact() {
+        // The golden-compatibility property: a bounded series that never
+        // fills retains every point, bit-identical to the exact path.
+        let mut bounded = TimeSeries::bounded(4096);
+        let mut exact = TimeSeries::new();
+        for i in 0..100 {
+            bounded.push(i as f64, (i * 7) as f64);
+            exact.push(i as f64, (i * 7) as f64);
+        }
+        assert!(bounded.is_exact());
+        assert_eq!(bounded.points, exact.points);
+    }
+
+    #[test]
+    fn tiny_bounds_clamp_to_two() {
+        let mut ts = TimeSeries::bounded(1);
+        for i in 0..64 {
+            ts.push(i as f64, 0.0);
+        }
+        assert!(ts.len() <= 2);
+        assert!(ts.stride() >= 32);
     }
 }

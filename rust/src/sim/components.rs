@@ -81,6 +81,19 @@ impl TransientManagerComponent {
         TransientManagerComponent { manager: TransientManager::new(cfg, rng) }
     }
 
+    /// Manager wired to a federated cross-cluster transient pool: every
+    /// lease request must also take a [`SharedBudget`] unit, so the
+    /// federation's pooled cap binds across clusters.
+    pub fn with_shared_budget(
+        cfg: ManagerConfig,
+        rng: Rng,
+        shared: crate::transient::SharedBudget,
+    ) -> Self {
+        let mut c = Self::new(cfg, rng);
+        c.manager.set_shared_budget(shared);
+        c
+    }
+
     /// `(adds, drains, failed_requests)` — the run-report triple.
     pub fn stats(&self) -> (u64, u64, u64) {
         (self.manager.adds, self.manager.drains, self.manager.failed_requests)

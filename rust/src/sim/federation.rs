@@ -1,0 +1,592 @@
+//! Multi-cluster federation: N independent [`World`]s advanced in
+//! **global event-time order**, with a pluggable [`JobRouter`] front end
+//! dispatching arrivals across clusters and an optional
+//! [`SharedBudget`] coupling their transient fleets.
+//!
+//! The paper evaluates CloudCoaster on one statically-provisioned
+//! cluster; its elasticity argument is strongest when bursts are *not*
+//! uniform across clusters (the co-located-workload regime production
+//! trace studies report). A `Federation` makes that testable: each
+//! member world owns its own cluster, scenario-resolved arrival
+//! pipeline, recorder and RNG streams forked off its own seed — so each
+//! member is bit-identical to the same world run standalone — while the
+//! federation interleaves their event loops by earliest next event and,
+//! optionally, lets the members draw transient leases from one pooled
+//! budget, so one cluster's quiet period frees headroom for another's
+//! burst.
+//!
+//! Two feed topologies:
+//!
+//! * **Pass-through** ([`Federation::passthrough`]): every member pulls
+//!   from its own source exactly as a standalone [`World::run`] would.
+//!   The federation only interleaves `step()`s (and reconciles the
+//!   shared budget between them). An N = 1 pass-through federation is
+//!   therefore *bit-identical* to the plain world — pinned by
+//!   `tests/federation_golden.rs`.
+//! * **Routed** ([`Federation::routed`]): the federation owns the
+//!   per-cluster sources, merges them into one global arrival stream
+//!   (earliest arrival first, ties to the lowest source index), and
+//!   asks the [`JobRouter`] — which sees every member's queue state at
+//!   the routing instant — where each job executes. Members run on
+//!   inbox feeds ([`World::new_inbox`]); a routed arrival is injected
+//!   when global time reaches it, so router decisions are a
+//!   deterministic function of (sources, seeds, router), independent of
+//!   host threading.
+//!
+//! Determinism: the merge is a strict order on `(time, member index)`,
+//! arrivals route before equal-time member events, and every RNG stream
+//! forks off per-member config seeds — a federated run is bit-identical
+//! across repeats and sweep thread counts.
+
+use crate::sim::{Rng, World};
+use crate::trace::{ArrivalSource, Job};
+use crate::transient::SharedBudget;
+use crate::util::Time;
+
+/// A router's read-only view of one member cluster at a routing instant.
+#[derive(Clone, Copy, Debug)]
+pub struct MemberView {
+    /// Member index (the routing target space).
+    pub index: usize,
+    /// Tasks materialised but not yet finished on this member.
+    pub outstanding_tasks: u64,
+    /// Jobs resident (arrived, not fully finished).
+    pub resident_jobs: usize,
+}
+
+/// Decides which member cluster executes an arriving job.
+///
+/// `origin` is the index of the per-cluster source that produced the
+/// job (the pass-through identity); `members` is indexed by routing
+/// target. Implementations must be deterministic functions of their own
+/// state and the arguments — no wall clock, no global RNG.
+pub trait JobRouter {
+    fn name(&self) -> &'static str;
+    fn route(&mut self, job: &Job, origin: usize, members: &[MemberView]) -> usize;
+}
+
+/// Round-robin over members, ignoring origin and load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl JobRouter for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _job: &Job, _origin: usize, members: &[MemberView]) -> usize {
+        let t = self.next % members.len();
+        self.next = (self.next + 1) % members.len();
+        t
+    }
+}
+
+/// Least-queued: the member with the fewest outstanding tasks (ties to
+/// the lowest index) — the classic join-the-shortest-queue front end.
+#[derive(Debug, Default)]
+pub struct LeastQueued;
+
+impl JobRouter for LeastQueued {
+    fn name(&self) -> &'static str {
+        "least-queued"
+    }
+
+    fn route(&mut self, _job: &Job, _origin: usize, members: &[MemberView]) -> usize {
+        let mut best = 0usize;
+        for m in members {
+            if m.outstanding_tasks < members[best].outstanding_tasks {
+                best = m.index;
+            }
+        }
+        best
+    }
+}
+
+/// Class-aware short/long split: long jobs round-robin over the first
+/// half of the members, short jobs over the second half, so long-job
+/// bursts never occupy the short-serving clusters (the federation-level
+/// analogue of the paper's short-only partition). With a single member
+/// both halves collapse to it.
+#[derive(Debug, Default)]
+pub struct ClassSplit {
+    next_long: usize,
+    next_short: usize,
+}
+
+impl JobRouter for ClassSplit {
+    fn name(&self) -> &'static str {
+        "class-split"
+    }
+
+    fn route(&mut self, job: &Job, _origin: usize, members: &[MemberView]) -> usize {
+        let n = members.len();
+        let long_half = n.div_ceil(2); // members [0, long_half) serve longs
+        if job.is_long || long_half == n {
+            let t = self.next_long % long_half;
+            self.next_long = (self.next_long + 1) % long_half;
+            t
+        } else {
+            let shorts = n - long_half;
+            let t = long_half + self.next_short % shorts;
+            self.next_short = (self.next_short + 1) % shorts;
+            t
+        }
+    }
+}
+
+/// The routed-mode global arrival stream: per-cluster sources with one
+/// job of lookahead each, merged by earliest arrival.
+struct GlobalFeed {
+    sources: Vec<Box<dyn ArrivalSource>>,
+    /// Per-source arrival RNG: each member's 0xAE stream, forked by the
+    /// builder in the member's canonical order so a routed member's
+    /// source consumes the identical stream a standalone run would.
+    rngs: Vec<Rng>,
+    lookahead: Vec<Option<Job>>,
+}
+
+impl GlobalFeed {
+    /// Earliest pending arrival as `(time, source index)`; ties break to
+    /// the lowest source index (strict `<` keeps the first minimum).
+    fn earliest(&self) -> Option<(Time, usize)> {
+        let mut best: Option<(Time, usize)> = None;
+        for (i, slot) in self.lookahead.iter().enumerate() {
+            if let Some(job) = slot {
+                if best.map_or(true, |(t, _)| job.arrival < t) {
+                    best = Some((job.arrival, i));
+                }
+            }
+        }
+        best
+    }
+
+    fn refill(&mut self, i: usize) {
+        debug_assert!(self.lookahead[i].is_none());
+        self.lookahead[i] = self.sources[i].next_job(&mut self.rngs[i]);
+    }
+
+    fn exhausted(&self) -> bool {
+        self.lookahead.iter().all(Option::is_none)
+    }
+}
+
+/// N member worlds + merge loop + router + shared-budget reconciliation.
+///
+/// Built by `coordinator::runner::build_federation` (canonical wiring
+/// from an `ExperimentConfig` with a `[federation]` block) or manually
+/// from wired worlds for custom scenarios.
+pub struct Federation<'w> {
+    members: Vec<World<'w>>,
+    /// `Some` in routed mode; pass-through members own their sources.
+    feed: Option<GlobalFeed>,
+    router: Option<Box<dyn JobRouter>>,
+    /// Per-member shared-budget handles (pooled sharing: clones of one
+    /// pool; split sharing: disjoint pools; `None`: uncoupled).
+    shareds: Vec<Option<SharedBudget>>,
+    /// Total transient units the sharing mode admits across all members
+    /// (`None` = uncoupled). Recorded by the builder that sized the
+    /// pools, so the reported cap can never drift from the enforced one.
+    shared_cap: Option<usize>,
+    /// Last reconciled fleet (active + provisioning transients) per
+    /// member — the release-side bookkeeping for the shared pools.
+    last_fleet: Vec<usize>,
+    /// High-water mark of the summed fleet across members (the
+    /// cross-cluster cap invariant: never exceeds a pooled cap).
+    peak_total_fleet: usize,
+    /// High-water mark of summed *active* transients (report headline).
+    peak_total_active: f64,
+    steps: u64,
+}
+
+impl<'w> Federation<'w> {
+    /// Pass-through federation: members own their arrival sources; the
+    /// federation interleaves their event loops and (optionally) couples
+    /// their transient budgets.
+    pub fn passthrough(members: Vec<World<'w>>) -> Self {
+        let n = members.len();
+        assert!(n > 0, "federation needs at least one member");
+        Federation {
+            members,
+            feed: None,
+            router: None,
+            shareds: vec![None; n],
+            shared_cap: None,
+            last_fleet: vec![0; n],
+            peak_total_fleet: 0,
+            peak_total_active: 0.0,
+            steps: 0,
+        }
+    }
+
+    /// Routed federation: `members` must be inbox-fed
+    /// ([`World::new_inbox`]); `sources`/`rngs` are the per-cluster
+    /// arrival pipelines and their 0xAE streams (one per member, forked
+    /// from the member in canonical order), merged into one global
+    /// stream and dispatched by `router`.
+    pub fn routed(
+        members: Vec<World<'w>>,
+        sources: Vec<Box<dyn ArrivalSource>>,
+        rngs: Vec<Rng>,
+        router: Box<dyn JobRouter>,
+    ) -> Self {
+        let n = members.len();
+        assert!(n > 0, "federation needs at least one member");
+        assert_eq!(sources.len(), n, "one source per member");
+        assert_eq!(rngs.len(), n, "one arrival stream per member");
+        let lookahead = (0..n).map(|_| None).collect();
+        Federation {
+            members,
+            feed: Some(GlobalFeed { sources, rngs, lookahead }),
+            router: Some(router),
+            shareds: vec![None; n],
+            shared_cap: None,
+            last_fleet: vec![0; n],
+            peak_total_fleet: 0,
+            peak_total_active: 0.0,
+            steps: 0,
+        }
+    }
+
+    /// Attach per-member shared-budget handles (same length as members)
+    /// and the total cap they enforce together (`Σ` of the pool caps for
+    /// split sharing, the one pool's cap for pooled). The same handles
+    /// must already be wired into the members' transient managers (the
+    /// take side); the federation drives the release side.
+    pub fn set_shared_budgets(
+        &mut self,
+        shareds: Vec<Option<SharedBudget>>,
+        total_cap: Option<usize>,
+    ) {
+        assert_eq!(shareds.len(), self.members.len());
+        self.shareds = shareds;
+        self.shared_cap = total_cap;
+    }
+
+    /// Total transient units the sharing mode admits (`None` =
+    /// uncoupled budgets) — the bound [`Federation::peak_total_fleet`]
+    /// is checked against.
+    pub fn shared_cap(&self) -> Option<usize> {
+        self.shared_cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Member worlds, for post-run distillation.
+    pub fn members(&self) -> &[World<'w>] {
+        &self.members
+    }
+
+    /// High-water mark of Σ (active + provisioning) transients across
+    /// members — with a pooled [`SharedBudget`] of cap K this never
+    /// exceeds K (the federation cap invariant, pinned by
+    /// `tests/federation_golden.rs`).
+    pub fn peak_total_fleet(&self) -> usize {
+        self.peak_total_fleet
+    }
+
+    /// High-water mark of Σ active transients across members.
+    pub fn peak_total_active(&self) -> f64 {
+        self.peak_total_active
+    }
+
+    /// Events processed across all members.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Consume the federation, handing back the member worlds (call
+    /// after [`Federation::run`] to distill results).
+    pub fn into_members(self) -> Vec<World<'w>> {
+        self.members
+    }
+
+    fn views(&self) -> Vec<MemberView> {
+        self.members
+            .iter()
+            .enumerate()
+            .map(|(index, m)| MemberView {
+                index,
+                outstanding_tasks: m.outstanding_tasks(),
+                resident_jobs: m.resident_jobs(),
+            })
+            .collect()
+    }
+
+    /// Earliest member event as `(time, member index)` (ties to the
+    /// lowest index — strict `<` keeps the first minimum).
+    fn earliest_event(&self) -> Option<(Time, usize)> {
+        let mut best: Option<(Time, usize)> = None;
+        for (i, m) in self.members.iter().enumerate() {
+            if let Some(t) = m.next_event_time() {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, i));
+                }
+            }
+        }
+        best
+    }
+
+    /// Post-step bookkeeping for member `i`: release shared-budget units
+    /// for any fleet shrink (revocation, drain, retirement) and advance
+    /// the cross-cluster peak watermarks.
+    fn reconcile(&mut self, i: usize) {
+        let fleet = {
+            let c = &self.members[i].cluster;
+            c.transient_pool.len() + c.provisioning_count()
+        };
+        let last = self.last_fleet[i];
+        if fleet < last {
+            if let Some(shared) = &self.shareds[i] {
+                shared.release(last - fleet);
+            }
+        }
+        self.last_fleet[i] = fleet;
+        let total: usize = self.last_fleet.iter().sum();
+        self.peak_total_fleet = self.peak_total_fleet.max(total);
+        let active: f64 = self.members.iter().map(|m| m.rec.cost.active_now()).sum();
+        self.peak_total_active = self.peak_total_active.max(active);
+    }
+
+    /// Drive every member to quiescence in global event-time order.
+    ///
+    /// Loop invariant: each iteration consumes exactly one unit of
+    /// global progress — either the earliest pending arrival is routed
+    /// (and the producing source refilled) or the member holding the
+    /// earliest event steps once — so the run terminates whenever the
+    /// member sources do.
+    pub fn run(&mut self) {
+        for m in &mut self.members {
+            m.start();
+        }
+        if let Some(feed) = &mut self.feed {
+            for i in 0..feed.sources.len() {
+                feed.refill(i);
+            }
+            if feed.exhausted() {
+                // Zero-job global stream: nothing will ever be routed.
+                for m in &mut self.members {
+                    m.close_inbox();
+                }
+            }
+        }
+        for i in 0..self.members.len() {
+            self.reconcile(i);
+        }
+
+        loop {
+            let next_arrival = self.feed.as_ref().and_then(GlobalFeed::earliest);
+            let next_event = self.earliest_event();
+            match (next_arrival, next_event) {
+                (None, None) => break,
+                // Arrivals route when global time reaches them: strictly
+                // before later events, and before *equal-time* events so
+                // the injected arrival competes inside the target's own
+                // engine (a fixed, deterministic order).
+                (Some((arrival, si)), ev) if ev.map_or(true, |(te, _)| arrival <= te) => {
+                    let feed = self.feed.as_mut().expect("arrival without a feed");
+                    let job = feed.lookahead[si].take().expect("earliest() said Some");
+                    let views = self.views();
+                    let router = self.router.as_mut().expect("routed mode has a router");
+                    let target = router.route(&job, si, &views).min(views.len() - 1);
+                    self.members[target].inject_job(job);
+                    let feed = self.feed.as_mut().expect("feed still present");
+                    feed.refill(si);
+                    if feed.exhausted() {
+                        for m in &mut self.members {
+                            m.close_inbox();
+                        }
+                    }
+                }
+                (_, Some((_, i))) => {
+                    self.members[i].step();
+                    self.steps += 1;
+                    self.reconcile(i);
+                }
+                // No member event but an arrival exists — handled by the
+                // arrival arm above (its guard is true when ev is None).
+                (Some(_), None) => unreachable!("arrival arm covers ev == None"),
+            }
+        }
+
+        for m in &mut self.members {
+            m.finish();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, QueuePolicy};
+    use crate::metrics::Recorder;
+    use crate::sched::Hybrid;
+    use crate::sim::{SchedulerComponent, SnapshotSampler};
+    use crate::trace::synth::{YahooLikeParams, YahooSource};
+    use crate::util::JobId;
+
+    fn tiny_params() -> YahooLikeParams {
+        let mut p = YahooLikeParams::default();
+        p.horizon = 2000.0;
+        p
+    }
+
+    fn member<'s>(sched: &'s mut Hybrid, seed: u64) -> World<'s> {
+        let p = tiny_params();
+        let source = Box::new(YahooSource::new(&p, &mut Rng::new(seed)));
+        let cluster = Cluster::new(96, 8, QueuePolicy::Fifo);
+        let mut w = World::new(source, cluster, Recorder::new(1.0), seed);
+        w.add_component(Box::new(SnapshotSampler::new(60.0)));
+        w.add_component(Box::new(SchedulerComponent::new(sched)));
+        w
+    }
+
+    #[test]
+    fn n1_passthrough_matches_standalone_run() {
+        let mut solo_sched = Hybrid::eagle(2.0);
+        let mut solo = member(&mut solo_sched, 7);
+        solo.run();
+
+        let mut fed_sched = Hybrid::eagle(2.0);
+        let fed_member = member(&mut fed_sched, 7);
+        let mut fed = Federation::passthrough(vec![fed_member]);
+        fed.run();
+        let fed_world = &fed.members()[0];
+
+        assert_eq!(solo.engine.processed(), fed_world.engine.processed());
+        assert_eq!(solo.engine.now().to_bits(), fed_world.engine.now().to_bits());
+        assert_eq!(solo.rec.tasks_finished, fed_world.rec.tasks_finished);
+        assert_eq!(solo.rec.short_delays, fed_world.rec.short_delays);
+        assert_eq!(solo.rec.long_delays, fed_world.rec.long_delays);
+        assert_eq!(solo.peak_resident_jobs(), fed_world.peak_resident_jobs());
+    }
+
+    #[test]
+    fn n2_passthrough_runs_both_members_to_completion() {
+        let mut s0 = Hybrid::eagle(2.0);
+        let mut s1 = Hybrid::eagle(2.0);
+        let members = vec![member(&mut s0, 3), member(&mut s1, 4)];
+        let mut fed = Federation::passthrough(members);
+        fed.run();
+        let total: u64 = fed.members().iter().map(|m| m.rec.tasks_finished).sum();
+        assert!(total > 0);
+        for m in fed.members() {
+            assert!(m.rec.tasks_finished > 0, "a member ran no work");
+            assert_eq!(m.outstanding_tasks(), 0);
+        }
+        assert_eq!(
+            fed.steps(),
+            fed.members().iter().map(|m| m.engine.processed()).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn routed_round_robin_preserves_and_splits_work() {
+        // One real source + one empty-horizon source; round-robin must
+        // land half the jobs on each member regardless of origin.
+        let run = || {
+            let mut s0 = Hybrid::eagle(2.0);
+            let mut s1 = Hybrid::eagle(2.0);
+            let mut w0 = World::new_inbox(
+                Cluster::new(96, 8, QueuePolicy::Fifo),
+                Recorder::new(1.0),
+                11,
+            );
+            w0.add_component(Box::new(SnapshotSampler::new(60.0)));
+            w0.add_component(Box::new(SchedulerComponent::new(&mut s0)));
+            let mut w1 = World::new_inbox(
+                Cluster::new(96, 8, QueuePolicy::Fifo),
+                Recorder::new(1.0),
+                12,
+            );
+            w1.add_component(Box::new(SnapshotSampler::new(60.0)));
+            w1.add_component(Box::new(SchedulerComponent::new(&mut s1)));
+            let r0 = w0.fork_rng(0xAE);
+            let r1 = w1.fork_rng(0xAE);
+            let p = tiny_params();
+            let src0: Box<dyn ArrivalSource> =
+                Box::new(YahooSource::new(&p, &mut Rng::new(11)));
+            let mut empty = p.clone();
+            empty.horizon = 0.0;
+            let src1: Box<dyn ArrivalSource> =
+                Box::new(YahooSource::new(&empty, &mut Rng::new(12)));
+            let mut fed = Federation::routed(
+                vec![w0, w1],
+                vec![src0, src1],
+                vec![r0, r1],
+                Box::new(RoundRobin::default()),
+            );
+            fed.run();
+            let per: Vec<u64> =
+                fed.members().iter().map(|m| m.rec.tasks_finished).collect();
+            let jobs: Vec<u64> = fed.members().iter().map(|m| m.jobs_seen()).collect();
+            (per, jobs)
+        };
+        let (per, jobs) = run();
+        let total_jobs: u64 = jobs.iter().sum();
+        assert!(total_jobs > 1, "source produced too few jobs to split");
+        // Round-robin: job counts differ by at most one.
+        assert!(
+            jobs[0].abs_diff(jobs[1]) <= 1,
+            "round-robin split uneven: {jobs:?}"
+        );
+        assert!(per.iter().all(|&t| t > 0), "a member ran no tasks: {per:?}");
+        // Deterministic per seed: a second identical run is identical.
+        let (per2, jobs2) = run();
+        assert_eq!(per, per2);
+        assert_eq!(jobs, jobs2);
+    }
+
+    #[test]
+    fn class_split_routes_by_job_class() {
+        let views: Vec<MemberView> = (0..4)
+            .map(|index| MemberView { index, outstanding_tasks: 0, resident_jobs: 0 })
+            .collect();
+        let mut r = ClassSplit::default();
+        let job = |is_long: bool| Job {
+            id: JobId(0),
+            arrival: 0.0,
+            task_durations: vec![1.0],
+            is_long,
+        };
+        // Longs cycle members {0, 1}; shorts cycle members {2, 3}.
+        assert_eq!(r.route(&job(true), 0, &views), 0);
+        assert_eq!(r.route(&job(true), 0, &views), 1);
+        assert_eq!(r.route(&job(true), 0, &views), 0);
+        assert_eq!(r.route(&job(false), 0, &views), 2);
+        assert_eq!(r.route(&job(false), 0, &views), 3);
+        assert_eq!(r.route(&job(false), 0, &views), 2);
+        // Single member: everything collapses to it.
+        let one = vec![MemberView { index: 0, outstanding_tasks: 0, resident_jobs: 0 }];
+        let mut r1 = ClassSplit::default();
+        assert_eq!(r1.route(&job(false), 0, &one), 0);
+        assert_eq!(r1.route(&job(true), 0, &one), 0);
+    }
+
+    #[test]
+    fn least_queued_prefers_lowest_loaded_then_lowest_index() {
+        let mk = |loads: [u64; 3]| {
+            loads
+                .iter()
+                .enumerate()
+                .map(|(index, &outstanding_tasks)| MemberView {
+                    index,
+                    outstanding_tasks,
+                    resident_jobs: 0,
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut r = LeastQueued;
+        let j = Job { id: JobId(0), arrival: 0.0, task_durations: vec![1.0], is_long: false };
+        assert_eq!(r.route(&j, 0, &mk([5, 2, 9])), 1);
+        assert_eq!(r.route(&j, 0, &mk([4, 4, 4])), 0, "ties must break low");
+        assert_eq!(r.route(&j, 2, &mk([7, 3, 3])), 1);
+    }
+}

@@ -1,11 +1,14 @@
 //! Deterministic discrete-event simulation core: the event queue and
 //! clock ([`Engine`]), the event vocabulary ([`Event`]), the
-//! reproducible PRNG ([`Rng`]), and the composable simulation
-//! [`World`] with its pluggable [`Component`]s.
+//! reproducible PRNG ([`Rng`]), the composable simulation [`World`]
+//! with its pluggable [`Component`]s, and the multi-cluster
+//! [`Federation`] that advances several worlds in global event-time
+//! order behind a pluggable [`JobRouter`].
 
 pub mod components;
 mod engine;
 mod event;
+pub mod federation;
 mod rng;
 mod world;
 
@@ -14,5 +17,6 @@ pub use components::{
 };
 pub use engine::Engine;
 pub use event::Event;
+pub use federation::{ClassSplit, Federation, JobRouter, LeastQueued, MemberView, RoundRobin};
 pub use rng::Rng;
 pub use world::{Component, World, WorldCtx};

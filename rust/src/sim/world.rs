@@ -20,10 +20,19 @@
 //! server arenas bound task and server slots the same way
 //! ([`World::peak_resident_tasks`] / [`World::peak_resident_servers`]),
 //! and the recorder's per-sample delay populations stream through
-//! fixed-memory histogram sketches — so per-job, per-task and
-//! per-transient state is load-bound, not trace-bound. (The sampled
-//! snapshot time series still collects one point per
-//! `snapshot_interval`; see the ROADMAP item.)
+//! fixed-memory histogram sketches, and the sampled snapshot time
+//! series through bounded rebucketing rings — so per-job, per-task,
+//! per-transient *and* per-snapshot state is load-bound, not
+//! trace-bound.
+//!
+//! **Stepping**: the event loop is exposed piecewise —
+//! [`World::start`] / [`World::step`] / [`World::finish`] — and
+//! [`World::run`] is exactly their composition, so a
+//! [`crate::sim::Federation`] can interleave several worlds in global
+//! event-time order without perturbing a single world's event
+//! sequence. Externally-routed worlds use an inbox feed
+//! ([`World::new_inbox`] / [`World::inject_job`]) instead of pulling
+//! from a source they own.
 //!
 //! **Borrowed lookahead**: a world built over an eager [`Workload`]
 //! ([`World::from_workload`]) borrows each job straight from the
@@ -53,7 +62,7 @@
 //! `tests/streaming_golden.rs` (streaming synthesis + combinators +
 //! arena recycling on/off).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::cluster::{Cluster, FinishOutcome, ServerKind, ServerState};
 use crate::metrics::Recorder;
@@ -152,12 +161,17 @@ struct JobMeta {
     remaining: u32,
 }
 
-/// Where arrivals come from: a boxed streaming source, or — the
-/// borrowed-lookahead fast path — direct iteration over an eager
-/// workload slice (no per-job clone).
+/// Where arrivals come from: a boxed streaming source, the
+/// borrowed-lookahead fast path over an eager workload slice (no
+/// per-job clone), or an externally-fed inbox (federation routing:
+/// jobs are pushed by [`World::inject_job`] instead of pulled).
 enum Feed<'w> {
     Stream(Box<dyn ArrivalSource + 'w>),
     Eager { workload: &'w Workload, next: usize },
+    /// Externally fed: an open inbox may be empty *now* yet receive
+    /// more jobs later, so exhaustion is only declared once
+    /// [`World::close_inbox`] has been called and the queue drained.
+    Inbox { queue: VecDeque<Job>, closed: bool },
 }
 
 /// One job of lookahead: owned (streamed) or borrowed from an eager
@@ -200,6 +214,10 @@ pub struct World<'w> {
     /// One-job lookahead: pulled from the feed, arrival event queued.
     lookahead: Option<JobRef<'w>>,
     source_done: bool,
+    /// The arrival RNG stream (label 0xAE), forked at [`World::start`].
+    /// Held in an `Option` so [`World::step`]'s feed advance can take it
+    /// without splitting a borrow of `self`.
+    arrivals_rng: Option<Rng>,
     /// The job being dispatched in the current `JobArrival` event.
     current_job: Option<JobRef<'w>>,
     peak_resident: usize,
@@ -242,6 +260,22 @@ impl<'w> World<'w> {
         Self::with_feed(Feed::Eager { workload, next: 0 }, cluster, rec, seed)
     }
 
+    /// Build an externally-fed world (federation routing): arrivals are
+    /// pushed via [`World::inject_job`] by an outer driver instead of
+    /// pulled from a source the world owns. The driver must call
+    /// [`World::close_inbox`] once its global stream is exhausted, or
+    /// periodic components will keep the run alive forever. RNG fork
+    /// order is identical to the other constructors, so member worlds
+    /// stay stream-for-stream compatible with standalone ones.
+    pub fn new_inbox(cluster: Cluster, rec: Recorder, seed: u64) -> Self {
+        Self::with_feed(
+            Feed::Inbox { queue: VecDeque::new(), closed: false },
+            cluster,
+            rec,
+            seed,
+        )
+    }
+
     fn with_feed(feed: Feed<'w>, cluster: Cluster, rec: Recorder, seed: u64) -> Self {
         let mut root_rng = Rng::new(seed);
         let sched_rng = root_rng.fork(0x5C);
@@ -259,6 +293,7 @@ impl<'w> World<'w> {
             last_arrival: f64::NEG_INFINITY,
             lookahead: None,
             source_done: false,
+            arrivals_rng: None,
             current_job: None,
             peak_resident: 0,
             finished: None,
@@ -313,7 +348,32 @@ impl<'w> World<'w> {
         self.cluster.peak_resident_servers()
     }
 
+    /// Tasks materialised but not yet finished — the federation's
+    /// least-queued router keys on this (O(1), maintained by the core).
+    pub fn outstanding_tasks(&self) -> u64 {
+        self.outstanding
+    }
+
+    /// Jobs currently resident (arrived, not yet fully finished).
+    pub fn resident_jobs(&self) -> usize {
+        self.job_meta.len()
+    }
+
+    /// Can the feed still yield jobs beyond the current lookahead? Only
+    /// an *open* inbox can: stream and eager feeds pull eagerly into the
+    /// lookahead, so for them `lookahead == None` after an advance means
+    /// exhausted.
+    fn feed_pending(&self) -> bool {
+        match &self.feed {
+            Feed::Inbox { queue, closed } => !queue.is_empty() || !*closed,
+            Feed::Stream(_) | Feed::Eager { .. } => false,
+        }
+    }
+
     fn ctx(&mut self) -> WorldCtx<'_> {
+        // Computed before the field borrows below: a method call on
+        // `self` inside the struct literal would conflict with them.
+        let more_jobs = self.lookahead.is_some() || self.feed_pending();
         WorldCtx {
             cluster: &mut self.cluster,
             engine: &mut self.engine,
@@ -323,7 +383,7 @@ impl<'w> World<'w> {
             arrived: &self.arrived,
             orphans: &self.orphans,
             outstanding_tasks: self.outstanding,
-            more_jobs: self.lookahead.is_some(),
+            more_jobs,
             prewarm_lr: &mut self.prewarm_lr,
             deferred: &mut self.deferred,
         }
@@ -375,6 +435,17 @@ impl<'w> World<'w> {
                 }
                 None => None,
             },
+            Feed::Inbox { queue, closed } => match queue.pop_front() {
+                Some(mut job) => {
+                    job.id = JobId(self.next_id);
+                    Some(JobRef::Owned(job))
+                }
+                // An open inbox that is empty *now* is not exhausted —
+                // the driver may inject more; leave `source_done`
+                // untouched and retry at the next inject.
+                None if !*closed => return,
+                None => None,
+            },
         };
         match pulled {
             Some(jobref) => {
@@ -393,159 +464,227 @@ impl<'w> World<'w> {
         }
     }
 
-    /// Drive the event loop to quiescence.
-    pub fn run(&mut self) {
-        let mut components = std::mem::take(&mut self.components);
-        // The arrival stream forks off the root *after* the scheduler
-        // stream (0x5C, at construction) and any component streams the
-        // caller forked while wiring (e.g. the market's 0x7A) — so the
-        // streaming refactor leaves every legacy stream bit-identical.
-        let mut arrivals_rng = self.root_rng.fork(0xAE);
-        self.advance_source(&mut arrivals_rng);
+    /// Advance the feed into the lookahead slot and, if a job arrived
+    /// there, schedule its `JobArrival`. The arrival RNG is threaded
+    /// through `self.arrivals_rng` (taken/restored so the feed advance
+    /// doesn't split a `self` borrow) — state-for-state identical to the
+    /// local variable the pre-stepping `run()` threaded by `&mut`.
+    fn prime_arrival(&mut self) {
+        let mut rng = self.arrivals_rng.take().expect("prime_arrival before start()");
+        self.advance_source(&mut rng);
+        self.arrivals_rng = Some(rng);
         if let Some(jobref) = &self.lookahead {
             let job = jobref.job();
             self.engine.schedule(job.arrival, Event::JobArrival(job.id));
         }
+    }
+
+    /// Push a job into an inbox-fed world (see [`World::new_inbox`]).
+    /// Arrivals must be injected in nondecreasing arrival order and
+    /// never before the world's clock (the federation routes in global
+    /// event-time order, which guarantees both). If the world is idle on
+    /// arrivals (no lookahead), the job is primed and its arrival event
+    /// scheduled immediately.
+    pub fn inject_job(&mut self, job: Job) {
+        let Feed::Inbox { queue, closed } = &mut self.feed else {
+            panic!("inject_job on a world that owns its arrival feed");
+        };
+        assert!(!*closed, "inject_job after close_inbox");
+        queue.push_back(job);
+        if self.lookahead.is_none() && !self.source_done {
+            self.prime_arrival();
+        }
+    }
+
+    /// Declare the inbox's upstream exhausted: once the queued jobs
+    /// drain, the world treats its source as done (so periodic
+    /// components stop rescheduling and the run can quiesce).
+    pub fn close_inbox(&mut self) {
+        if let Feed::Inbox { queue, closed } = &mut self.feed {
+            *closed = true;
+            if self.lookahead.is_none() && queue.is_empty() {
+                self.source_done = true;
+            }
+        }
+    }
+
+    /// Time of the next queued event, if any (the federation's global
+    /// earliest-next-event merge keys on this).
+    pub fn next_event_time(&self) -> Option<Time> {
+        self.engine.peek_time()
+    }
+
+    /// Prepare the event loop: fork the arrival stream, prime the first
+    /// lookahead + arrival event, run every component's `on_start`.
+    /// Fork order — scheduler stream 0x5C at construction, component
+    /// streams (e.g. the market's 0x7A) while wiring, arrivals 0xAE
+    /// here — matches the original runner, so fixed-seed runs are
+    /// bit-identical. [`World::run`] is exactly `start` + `step`-loop +
+    /// `finish`; the pieces are public so a federation can interleave
+    /// several worlds in global event-time order.
+    pub fn start(&mut self) {
+        debug_assert!(self.arrivals_rng.is_none(), "start() called twice");
+        // The arrival stream forks off the root *after* the scheduler
+        // stream (0x5C, at construction) and any component streams the
+        // caller forked while wiring (e.g. the market's 0x7A) — so the
+        // streaming refactor leaves every legacy stream bit-identical.
+        self.arrivals_rng = Some(self.root_rng.fork(0xAE));
+        self.prime_arrival();
+        let mut components = std::mem::take(&mut self.components);
         {
             let mut ctx = self.ctx();
             for c in components.iter_mut() {
                 c.on_start(&mut ctx);
             }
         }
+        self.components = components;
         self.flush_deferred();
+    }
 
-        while let Some((now, event)) = self.engine.pop() {
-            // ---- core pre-dispatch: arrival intake + cluster lifecycle ----
-            self.arrived.clear();
-            self.orphans.clear();
-            self.prewarm_lr = None;
-            self.current_job = None;
-            self.finished = None;
-            match event {
-                Event::JobArrival(jid) => {
-                    let jobref =
-                        self.lookahead.take().expect("JobArrival without a pulled job");
-                    {
-                        let job = jobref.job();
-                        debug_assert_eq!(job.id, jid, "arrival event out of step with source");
-                        for &d in &job.task_durations {
-                            let tid = self.cluster.add_task(job.id, d, job.is_long, now);
-                            self.arrived.push(tid);
-                        }
-                        let n = job.num_tasks() as u32;
-                        if n > 0 {
-                            self.outstanding += n as u64;
-                            self.job_meta.insert(
-                                jid.0,
-                                JobMeta {
-                                    arrival: job.arrival,
-                                    is_long: job.is_long,
-                                    remaining: n,
-                                },
-                            );
-                            self.peak_resident = self.peak_resident.max(self.job_meta.len());
-                        }
+    /// Process exactly one event, returning its timestamp (`None` once
+    /// the engine has quiesced). A stale (generation-filtered) finish
+    /// still counts as a processed step.
+    pub fn step(&mut self) -> Option<Time> {
+        let (now, event) = self.engine.pop()?;
+        let mut components = std::mem::take(&mut self.components);
+        // ---- core pre-dispatch: arrival intake + cluster lifecycle ----
+        self.arrived.clear();
+        self.orphans.clear();
+        self.prewarm_lr = None;
+        self.current_job = None;
+        self.finished = None;
+        match event {
+            Event::JobArrival(jid) => {
+                let jobref =
+                    self.lookahead.take().expect("JobArrival without a pulled job");
+                {
+                    let job = jobref.job();
+                    debug_assert_eq!(job.id, jid, "arrival event out of step with source");
+                    for &d in &job.task_durations {
+                        let tid = self.cluster.add_task(job.id, d, job.is_long, now);
+                        self.arrived.push(tid);
                     }
-                    self.current_job = Some(jobref);
-                }
-                Event::TaskFinish { server, task } => {
-                    // The arena consumes the event's liveness ref and
-                    // filters stale finishes (a revocation killed this
-                    // execution after its event was scheduled; the task
-                    // restarted elsewhere with a new finish event).
-                    // Completion fields come out of the outcome — the
-                    // slot may recycle any time after this call.
-                    match self.cluster.on_task_finish(server, task, &mut self.engine, &mut self.rec)
-                    {
-                        FinishOutcome::Stale => continue,
-                        FinishOutcome::Finished { job, is_long, drained } => {
-                            if drained {
-                                self.cluster.retire(server, now, &mut self.rec);
-                            }
-                            self.finished = Some((job, is_long));
-                        }
+                    let n = job.num_tasks() as u32;
+                    if n > 0 {
+                        self.outstanding += n as u64;
+                        self.job_meta.insert(
+                            jid.0,
+                            JobMeta {
+                                arrival: job.arrival,
+                                is_long: job.is_long,
+                                remaining: n,
+                            },
+                        );
+                        self.peak_resident = self.peak_resident.max(self.job_meta.len());
                     }
                 }
-                Event::Revoked(sid) => {
-                    // Generation-checked: a stale Revoked (the server
-                    // already drained/retired and its slot possibly
-                    // recycled) must not touch the slot's next tenant.
-                    let state = self.cluster.get_server(sid).map(|s| s.state);
-                    if matches!(state, Some(ServerState::Active | ServerState::Draining)) {
-                        self.orphans = self.cluster.revoke(sid, now, &mut self.rec);
-                    }
-                }
-                Event::DrainComplete(sid) => {
-                    let ok = self
-                        .cluster
-                        .get_server(sid)
-                        .is_some_and(|s| s.state == ServerState::Draining && s.is_idle());
-                    if ok {
-                        self.cluster.retire(sid, now, &mut self.rec);
-                    }
-                }
-                Event::TransientReady(_) | Event::RevocationWarning(_) | Event::Snapshot => {}
+                self.current_job = Some(jobref);
             }
-
-            // Did this event change long-task occupancy? (Extracted
-            // payloads, never a task-arena read-back: the finished
-            // task's slot may already be recycled.)
-            let long_change = match event {
-                Event::JobArrival(_) => {
-                    self.current_job.as_ref().map(|j| j.job().is_long).unwrap_or(false)
-                }
-                Event::TaskFinish { .. } => {
-                    self.finished.map(|(_, is_long)| is_long).unwrap_or(false)
-                }
-                _ => false,
-            };
-
-            // ---- dispatch to components, in wiring order ----
-            {
-                let mut ctx = self.ctx();
-                for c in components.iter_mut() {
-                    c.on_event(now, &event, &mut ctx);
+            Event::TaskFinish { server, task } => {
+                // The arena consumes the event's liveness ref and
+                // filters stale finishes (a revocation killed this
+                // execution after its event was scheduled; the task
+                // restarted elsewhere with a new finish event).
+                // Completion fields come out of the outcome — the
+                // slot may recycle any time after this call.
+                match self.cluster.on_task_finish(server, task, &mut self.engine, &mut self.rec)
+                {
+                    FinishOutcome::Stale => {
+                        // Filtered pre-dispatch: components never see
+                        // the event (the old loop's `continue`).
+                        self.components = components;
+                        return Some(now);
+                    }
+                    FinishOutcome::Finished { job, is_long, drained } => {
+                        if drained {
+                            self.cluster.retire(server, now, &mut self.rec);
+                        }
+                        self.finished = Some((job, is_long));
+                    }
                 }
             }
-
-            // ---- core post-dispatch: arrival lookahead + completions ----
-            match event {
-                Event::JobArrival(_) => {
-                    self.advance_source(&mut arrivals_rng);
-                    if let Some(jobref) = &self.lookahead {
-                        let job = jobref.job();
-                        self.engine.schedule(job.arrival, Event::JobArrival(job.id));
-                    }
+            Event::Revoked(sid) => {
+                // Generation-checked: a stale Revoked (the server
+                // already drained/retired and its slot possibly
+                // recycled) must not touch the slot's next tenant.
+                let state = self.cluster.get_server(sid).map(|s| s.state);
+                if matches!(state, Some(ServerState::Active | ServerState::Draining)) {
+                    self.orphans = self.cluster.revoke(sid, now, &mut self.rec);
                 }
-                Event::TaskFinish { .. } => {
-                    let (jid, _) =
-                        self.finished.expect("stale finishes are filtered pre-dispatch");
-                    self.outstanding -= 1;
-                    let done = {
-                        let meta = self
-                            .job_meta
-                            .get_mut(&jid.0)
-                            .expect("task finish for unknown job");
-                        meta.remaining -= 1;
-                        meta.remaining == 0
-                    };
-                    if done {
-                        let meta = self.job_meta.remove(&jid.0).expect("meta vanished");
-                        self.rec.job_finished(meta.is_long, now - meta.arrival);
-                    }
-                }
-                _ => {}
             }
-            self.flush_deferred();
-
-            if long_change {
-                let mut ctx = self.ctx();
-                for c in components.iter_mut() {
-                    c.on_long_change(now, &mut ctx);
+            Event::DrainComplete(sid) => {
+                let ok = self
+                    .cluster
+                    .get_server(sid)
+                    .is_some_and(|s| s.state == ServerState::Draining && s.is_idle());
+                if ok {
+                    self.cluster.retire(sid, now, &mut self.rec);
                 }
+            }
+            Event::TransientReady(_) | Event::RevocationWarning(_) | Event::Snapshot => {}
+        }
+
+        // Did this event change long-task occupancy? (Extracted
+        // payloads, never a task-arena read-back: the finished
+        // task's slot may already be recycled.)
+        let long_change = match event {
+            Event::JobArrival(_) => {
+                self.current_job.as_ref().map(|j| j.job().is_long).unwrap_or(false)
+            }
+            Event::TaskFinish { .. } => {
+                self.finished.map(|(_, is_long)| is_long).unwrap_or(false)
+            }
+            _ => false,
+        };
+
+        // ---- dispatch to components, in wiring order ----
+        {
+            let mut ctx = self.ctx();
+            for c in components.iter_mut() {
+                c.on_event(now, &event, &mut ctx);
             }
         }
 
+        // ---- core post-dispatch: arrival lookahead + completions ----
+        match event {
+            Event::JobArrival(_) => {
+                self.prime_arrival();
+            }
+            Event::TaskFinish { .. } => {
+                let (jid, _) =
+                    self.finished.expect("stale finishes are filtered pre-dispatch");
+                self.outstanding -= 1;
+                let done = {
+                    let meta = self
+                        .job_meta
+                        .get_mut(&jid.0)
+                        .expect("task finish for unknown job");
+                    meta.remaining -= 1;
+                    meta.remaining == 0
+                };
+                if done {
+                    let meta = self.job_meta.remove(&jid.0).expect("meta vanished");
+                    self.rec.job_finished(meta.is_long, now - meta.arrival);
+                }
+            }
+            _ => {}
+        }
+        self.flush_deferred();
+
+        if long_change {
+            let mut ctx = self.ctx();
+            for c in components.iter_mut() {
+                c.on_long_change(now, &mut ctx);
+            }
+        }
+        self.components = components;
+        Some(now)
+    }
+
+    /// Close out the run after the engine quiesces: retire transients
+    /// still up, check conservation invariants. Call exactly once, after
+    /// [`World::step`] returns `None`.
+    pub fn finish(&mut self) {
         // ---- run end: close out transients still up ----
         let end_time = self.engine.now();
         let live: Vec<_> = self
@@ -570,6 +709,15 @@ impl<'w> World<'w> {
         );
         #[cfg(debug_assertions)]
         self.cluster.check_invariants();
-        self.components = components;
+    }
+
+    /// Drive the event loop to quiescence: exactly
+    /// [`World::start`] + a [`World::step`] loop + [`World::finish`],
+    /// so a stepped (federated) world and a plain `run()` are the same
+    /// code path event for event.
+    pub fn run(&mut self) {
+        self.start();
+        while self.step().is_some() {}
+        self.finish();
     }
 }

@@ -4,6 +4,15 @@
 //! With `N` on-demand short servers, replacing fraction `p` of them with
 //! transients at cost ratio `r` yields `K = r·N·p` transient servers and
 //! a managed short partition of up to `T = N((r-1)p + 1)` servers.
+//!
+//! [`SharedBudget`] extends the arithmetic across a federation: one
+//! counted pool of transient leases that several clusters' managers draw
+//! from, so one cluster's quiet period frees headroom another cluster's
+//! burst can use (pooled sharing), or a hard per-cluster slice of the
+//! same total (split sharing).
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// Short-partition budget: the paper's (N, p, r) triple.
 #[derive(Clone, Copy, Debug)]
@@ -36,6 +45,65 @@ impl Budget {
     /// Max managed short-partition size: T = N((r-1)p + 1).
     pub fn max_partition(&self) -> usize {
         self.ondemand_short() + self.max_transients()
+    }
+}
+
+/// Interior state of a [`SharedBudget`] pool.
+#[derive(Debug)]
+struct SharedPool {
+    cap: usize,
+    in_use: usize,
+    peak: usize,
+}
+
+/// A counted transient-lease pool shared across clusters in a
+/// federation (`Rc`-shared within one single-threaded federated run;
+/// sweeps parallelise across runs, never inside one, so no `Sync` is
+/// needed). Managers [`SharedBudget::try_take`] one unit per transient
+/// request; the federation driver releases units as it observes each
+/// cluster's fleet (active + provisioning) shrink after a step. The
+/// `peak` watermark records the most units ever simultaneously taken —
+/// the cross-cluster cap test pins `peak <= cap`.
+#[derive(Clone, Debug)]
+pub struct SharedBudget(Rc<RefCell<SharedPool>>);
+
+impl SharedBudget {
+    pub fn new(cap: usize) -> Self {
+        SharedBudget(Rc::new(RefCell::new(SharedPool { cap, in_use: 0, peak: 0 })))
+    }
+
+    /// Total units in the pool.
+    pub fn cap(&self) -> usize {
+        self.0.borrow().cap
+    }
+
+    /// Units currently taken across every sharing cluster.
+    pub fn in_use(&self) -> usize {
+        self.0.borrow().in_use
+    }
+
+    /// High-water mark of simultaneously taken units.
+    pub fn peak(&self) -> usize {
+        self.0.borrow().peak
+    }
+
+    /// Take one unit if headroom remains; `false` when the pool is
+    /// exhausted (the caller treats it like a failed market request).
+    pub fn try_take(&self) -> bool {
+        let mut p = self.0.borrow_mut();
+        if p.in_use >= p.cap {
+            return false;
+        }
+        p.in_use += 1;
+        p.peak = p.peak.max(p.in_use);
+        true
+    }
+
+    /// Return `n` units to the pool (saturating: a release can never
+    /// underflow even if the driver reconciles conservatively).
+    pub fn release(&self, n: usize) {
+        let mut p = self.0.borrow_mut();
+        p.in_use = p.in_use.saturating_sub(n);
     }
 }
 
@@ -82,5 +150,28 @@ mod tests {
     #[should_panic]
     fn rejects_bad_p() {
         Budget::new(80, 1.5, 3.0);
+    }
+
+    #[test]
+    fn shared_budget_counts_and_caps() {
+        let s = SharedBudget::new(3);
+        let t = s.clone(); // a second cluster's handle on the same pool
+        assert!(s.try_take());
+        assert!(t.try_take());
+        assert!(s.try_take());
+        assert!(!t.try_take(), "took past the pooled cap");
+        assert_eq!(s.in_use(), 3);
+        assert_eq!(t.peak(), 3);
+        s.release(2);
+        assert_eq!(t.in_use(), 1);
+        assert!(t.try_take(), "released headroom not reusable");
+        assert_eq!(s.peak(), 3, "peak is a high-water mark, not current");
+        // Saturating release never underflows.
+        s.release(100);
+        assert_eq!(s.in_use(), 0);
+        // Zero-cap pool: every take fails, nothing panics.
+        let z = SharedBudget::new(0);
+        assert!(!z.try_take());
+        assert_eq!(z.peak(), 0);
     }
 }

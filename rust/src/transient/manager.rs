@@ -17,7 +17,7 @@
 use crate::cluster::{Cluster, ServerState};
 use crate::metrics::Recorder;
 use crate::sim::{Engine, Event, Rng};
-use crate::transient::{Budget, Market, MarketConfig};
+use crate::transient::{Budget, Market, MarketConfig, SharedBudget};
 use crate::util::ServerRef;
 
 /// Resize-policy configuration.
@@ -73,6 +73,11 @@ pub struct TransientManager {
     pending: usize,
     /// Time of the most recent drain (cooldown bookkeeping).
     last_drain: f64,
+    /// Federated budget sharing: a counted cross-cluster lease pool this
+    /// manager must take a unit from before each request (`None` =
+    /// standalone cluster, local `budget` cap only). Released by the
+    /// federation driver as it observes the fleet shrink.
+    shared: Option<SharedBudget>,
     pub adds: u64,
     pub drains: u64,
     pub failed_requests: u64,
@@ -86,10 +91,16 @@ impl TransientManager {
             market,
             pending: 0,
             last_drain: f64::NEG_INFINITY,
+            shared: None,
             adds: 0,
             drains: 0,
             failed_requests: 0,
         }
+    }
+
+    /// Attach a federated [`SharedBudget`] pool (see the field docs).
+    pub fn set_shared_budget(&mut self, shared: SharedBudget) {
+        self.shared = Some(shared);
     }
 
     pub fn pending(&self) -> usize {
@@ -138,7 +149,21 @@ impl TransientManager {
             && proj(self, cluster) > self.cfg.threshold
             && (self.cfg.aggressive_add || requested == 0)
         {
+            // Federated sharing: take a unit from the cross-cluster pool
+            // first — an exhausted pool counts as a failed request, just
+            // like unavailable market capacity (retry at next recalc,
+            // when another cluster may have released headroom).
+            if let Some(shared) = &self.shared {
+                if !shared.try_take() {
+                    self.failed_requests += 1;
+                    break;
+                }
+            }
             let Some(lease) = self.market.try_acquire(now) else {
+                // Return the pool unit the failed request reserved.
+                if let Some(shared) = &self.shared {
+                    shared.release(1);
+                }
                 self.failed_requests += 1;
                 break; // capacity unavailable; retry at next recalc
             };
@@ -406,6 +431,28 @@ mod tests {
         assert_eq!(cluster.transient_pool.len(), 0);
         // Nothing left to remove; no panic, no change.
         mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+        cluster.check_invariants();
+    }
+
+    #[test]
+    fn shared_budget_binds_before_local_cap() {
+        // Local cap K = 12, but a shared pool of 5 units (as if other
+        // federated clusters hold the rest): the add loop must stop at
+        // 5 and count the exhausted pool as a failed request.
+        let (mut cluster, mut engine, mut rec, mut mgr) = setup(0.01, 64);
+        let shared = crate::transient::SharedBudget::new(5);
+        mgr.set_shared_budget(shared.clone());
+        saturate_with_longs(&mut cluster, &mut engine, &mut rec);
+        mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+        assert_eq!(mgr.pending(), 5);
+        assert_eq!(shared.in_use(), 5);
+        assert_eq!(shared.peak(), 5);
+        assert!(mgr.failed_requests >= 1, "exhausted pool not counted as failure");
+        // Headroom released by the (federation) driver is usable again.
+        shared.release(2);
+        mgr.maybe_resize(&mut cluster, &mut engine, &mut rec);
+        assert_eq!(mgr.pending(), 7);
+        assert!(shared.peak() <= shared.cap(), "pool overshot its cap");
         cluster.check_invariants();
     }
 

@@ -7,7 +7,7 @@ mod manager;
 mod market;
 mod price;
 
-pub use budget::Budget;
+pub use budget::{Budget, SharedBudget};
 pub use manager::{ManagerConfig, TransientManager};
 pub use market::{Lease, Market, MarketConfig, PricingConfig};
 pub use price::{PriceModel, PriceTrace};

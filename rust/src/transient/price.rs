@@ -73,17 +73,40 @@ impl PriceTrace {
         PriceTrace { step: model.step, prices }
     }
 
-    /// Market price at time `t` (clamped to the trace).
+    /// Market price at time `t`.
+    ///
+    /// Boundary contract (pinned by unit tests): queries at or past the
+    /// trace end clamp to the final sampled price (the trace's last
+    /// regime persists); negative `t` clamps to the first sample (the
+    /// `as usize` cast saturates at 0); a **zero-length trace** answers
+    /// the on-demand parity price 1.0 — defined, no panic, no wrap.
+    /// `PriceTrace::simulate` always produces at least one sample, so
+    /// the empty case only arises for hand-built traces.
     #[inline]
     pub fn at(&self, t: Time) -> f64 {
-        let idx = ((t / self.step) as usize).min(self.prices.len() - 1);
-        self.prices[idx]
+        match self.prices.len() {
+            0 => 1.0,
+            n => self.prices[((t / self.step) as usize).min(n - 1)],
+        }
     }
 
-    /// First time strictly after `t` at which the price exceeds `bid`,
-    /// or None if it never does within the trace.
+    /// First time strictly after `t` at which the price **strictly
+    /// exceeds** `bid`, or None if it never does within the trace.
+    ///
+    /// Boundary contract: a sampled price exactly equal to `bid` is NOT
+    /// a crossing (`p > bid`, matching [`PriceTrace::availability`]'s
+    /// `p <= bid` — a bidder at exactly the market price keeps the
+    /// server); queries at or past the trace end return None; the
+    /// returned time is always `> t`; empty traces return None.
     pub fn next_crossing(&self, t: Time, bid: f64) -> Option<Time> {
-        let start = ((t / self.step) as usize + 1).min(self.prices.len());
+        // A pre-trace query time must still see bucket 0 (its start,
+        // 0.0, is strictly after any negative t); the saturating cast
+        // below would otherwise skip it.
+        let start = if t < 0.0 {
+            0
+        } else {
+            ((t / self.step) as usize + 1).min(self.prices.len())
+        };
         for (i, &p) in self.prices.iter().enumerate().skip(start) {
             if p > bid {
                 return Some(i as f64 * self.step);
@@ -94,18 +117,32 @@ impl PriceTrace {
 
     /// Time-average price over `[a, b)` — the effective cost of a server
     /// held over that interval.
+    ///
+    /// Boundary contract: a degenerate interval (`b <= a`) answers the
+    /// spot price [`PriceTrace::at`]`(a)`; intervals extending past the
+    /// trace end average only the sampled prefix (the last sample is
+    /// not extrapolated); intervals entirely past the end answer the
+    /// final sampled price; empty traces answer 1.0 (on-demand parity,
+    /// via `at`).
     pub fn mean_over(&self, a: Time, b: Time) -> f64 {
-        if b <= a {
+        if b <= a || self.prices.is_empty() {
             return self.at(a);
         }
-        let i0 = (a / self.step) as usize;
+        let i0 = ((a / self.step) as usize).min(self.prices.len() - 1);
+        // i0 <= len-1, so i1 ∈ [i0+1, len]: the slice is never empty.
         let i1 = (((b / self.step).ceil() as usize).max(i0 + 1)).min(self.prices.len());
-        let slice = &self.prices[i0.min(self.prices.len() - 1)..i1];
+        let slice = &self.prices[i0..i1];
         slice.iter().sum::<f64>() / slice.len() as f64
     }
 
-    /// Fraction of time the price stays at or below `bid`.
+    /// Fraction of sampled time the price stays at or below `bid` (a
+    /// price exactly at `bid` counts as available, the complement of
+    /// [`PriceTrace::next_crossing`]'s strict crossing). Empty traces
+    /// answer 0.0 — defined, never 0/0 = NaN.
     pub fn availability(&self, bid: f64) -> f64 {
+        if self.prices.is_empty() {
+            return 0.0;
+        }
         let below = self.prices.iter().filter(|&&p| p <= bid).count();
         below as f64 / self.prices.len() as f64
     }
@@ -170,5 +207,97 @@ mod tests {
     fn deterministic_per_seed() {
         assert_eq!(trace(7).prices, trace(7).prices);
         assert_ne!(trace(7).prices, trace(8).prices);
+    }
+
+    // ---- boundary-behaviour audit (pinned: no panic, no silent wrap) ----
+
+    fn hand_trace(prices: &[f64]) -> PriceTrace {
+        PriceTrace { step: 60.0, prices: prices.to_vec() }
+    }
+
+    #[test]
+    fn at_clamps_past_trace_end_and_below_zero() {
+        let t = hand_trace(&[0.3, 0.5, 0.9]);
+        // Exactly at the last sample's start, far past the end, and at
+        // the f64 end boundary: all clamp to the final sampled price.
+        assert_eq!(t.at(120.0), 0.9);
+        assert_eq!(t.at(180.0), 0.9);
+        assert_eq!(t.at(1e12), 0.9);
+        // Negative times clamp to the first sample (saturating cast).
+        assert_eq!(t.at(-5.0), 0.3);
+        assert_eq!(t.at(0.0), 0.3);
+    }
+
+    #[test]
+    fn empty_trace_is_defined_everywhere() {
+        let t = hand_trace(&[]);
+        assert_eq!(t.at(0.0), 1.0); // on-demand parity, not a panic
+        assert_eq!(t.at(1e9), 1.0);
+        assert_eq!(t.next_crossing(0.0, 0.5), None);
+        assert_eq!(t.mean_over(0.0, 1000.0), 1.0);
+        let a = t.availability(0.5);
+        assert_eq!(a, 0.0);
+        assert!(a.is_finite(), "empty availability must not be 0/0 NaN");
+    }
+
+    #[test]
+    fn bid_exactly_at_price_is_not_a_crossing() {
+        // Price rises to exactly the bid, then above it: the equal
+        // sample must NOT revoke (strict >), the higher one must.
+        let t = hand_trace(&[0.3, 0.5, 0.5, 0.6]);
+        assert_eq!(t.next_crossing(0.0, 0.5), Some(180.0));
+        // A bid the trace only ever equals never crosses.
+        let flat = hand_trace(&[0.5, 0.5, 0.5]);
+        assert_eq!(flat.next_crossing(0.0, 0.5), None);
+        // availability is the complement: equal prices count available.
+        assert_eq!(flat.availability(0.5), 1.0);
+    }
+
+    #[test]
+    fn next_crossing_at_or_past_trace_end_is_none() {
+        let t = hand_trace(&[0.3, 0.9, 0.3]);
+        // Query inside the trace but after the last spike: None.
+        assert_eq!(t.next_crossing(120.0, 0.5), None);
+        // Query exactly at / far past the end: None, no wraparound to
+        // the spike at index 1.
+        assert_eq!(t.next_crossing(180.0, 0.5), None);
+        assert_eq!(t.next_crossing(1e12, 0.5), None);
+    }
+
+    #[test]
+    fn next_crossing_from_pre_trace_times_sees_bucket_zero() {
+        // Negative query times are in-contract (at() clamps them); the
+        // first bucket's start 0.0 is strictly after any t < 0, so a
+        // crossing there must be reported, not skipped.
+        let t = hand_trace(&[0.9, 0.3]);
+        assert_eq!(t.next_crossing(-1.0, 0.5), Some(0.0));
+        assert_eq!(t.next_crossing(-1e9, 0.5), Some(0.0));
+        // At t = 0 exactly, bucket 0 is not strictly after: skip to 1.
+        assert_eq!(t.next_crossing(0.0, 0.5), None);
+    }
+
+    #[test]
+    fn next_crossing_is_strictly_after_query_even_mid_bucket() {
+        let t = hand_trace(&[0.3, 0.9, 0.9]);
+        // Query mid-bucket 0: the crossing is bucket 1's start, > t.
+        let c = t.next_crossing(30.0, 0.5).unwrap();
+        assert_eq!(c, 60.0);
+        assert!(c > 30.0);
+        // Query exactly on the crossing bucket's start: skip to the next.
+        let c = t.next_crossing(60.0, 0.5).unwrap();
+        assert_eq!(c, 120.0);
+    }
+
+    #[test]
+    fn mean_over_boundary_intervals() {
+        let t = hand_trace(&[0.2, 0.4, 0.6]);
+        // Interval extending past the end averages the sampled prefix
+        // only (no extrapolation of the last sample).
+        assert!((t.mean_over(0.0, 1e9) - 0.4).abs() < 1e-12);
+        // Interval entirely past the end: final sampled price.
+        assert_eq!(t.mean_over(500.0, 900.0), 0.6);
+        // Degenerate interval: spot price at `a`.
+        assert_eq!(t.mean_over(70.0, 70.0), 0.4);
+        assert_eq!(t.mean_over(90.0, 70.0), 0.4); // b < a, same contract
     }
 }

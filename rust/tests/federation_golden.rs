@@ -1,0 +1,306 @@
+//! Federation goldens: the N = 1 pass-through federation reproduces the
+//! plain single-`World` report bit-identically; N = 2 federated runs are
+//! deterministic per seed and invariant under sweep thread count; a
+//! pooled shared budget is never exceeded across clusters.
+
+use cloudcoaster::coordinator::config::{ExperimentConfig, SchedulerKind, WorkloadSource};
+use cloudcoaster::coordinator::report::{
+    build_workload, run_experiment_on, run_federated_experiment_with, Report,
+};
+use cloudcoaster::coordinator::runner::run_federation;
+use cloudcoaster::coordinator::scenario::{
+    named, named_federation, BudgetSharing, FederationSpec, RouterKind,
+};
+use cloudcoaster::coordinator::sweep::{
+    budget_sharing_points, router_points, run_sweep_parallel,
+};
+use cloudcoaster::runtime::NativeAnalytics;
+use cloudcoaster::trace::synth::YahooLikeParams;
+
+fn tiny_cfg(kind: SchedulerKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.scheduler = kind;
+    cfg.cluster_size = 120;
+    cfg.short_partition = 8;
+    cfg.threshold = 0.5;
+    cfg.seed = 7;
+    let mut p = YahooLikeParams::default();
+    p.horizon = 2500.0;
+    cfg.workload = WorkloadSource::YahooLike(p);
+    cfg
+}
+
+fn assert_reports_bit_identical(a: &Report, b: &Report) {
+    assert_eq!(a.name, b.name);
+    assert_eq!(a.scheduler, b.scheduler);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.end_time.to_bits(), b.end_time.to_bits());
+    assert_eq!(a.short_delay.n, b.short_delay.n);
+    assert_eq!(a.short_delay.mean.to_bits(), b.short_delay.mean.to_bits());
+    assert_eq!(a.short_delay.max.to_bits(), b.short_delay.max.to_bits());
+    assert_eq!(a.short_delay.p50.to_bits(), b.short_delay.p50.to_bits());
+    assert_eq!(a.short_delay.p99.to_bits(), b.short_delay.p99.to_bits());
+    assert_eq!(a.long_delay.n, b.long_delay.n);
+    assert_eq!(a.long_delay.mean.to_bits(), b.long_delay.mean.to_bits());
+    assert_eq!(a.cdf.edges, b.cdf.edges);
+    assert_eq!(a.cdf.values, b.cdf.values);
+    assert_eq!(a.avg_transients.to_bits(), b.avg_transients.to_bits());
+    assert_eq!(a.max_transients.to_bits(), b.max_transients.to_bits());
+    assert_eq!(a.mean_lifetime_h.to_bits(), b.mean_lifetime_h.to_bits());
+    assert_eq!(a.transients_requested, b.transients_requested);
+    assert_eq!(a.transients_revoked, b.transients_revoked);
+    assert_eq!(a.tasks_rescheduled, b.tasks_rescheduled);
+    assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
+    assert_eq!(a.peak_resident_tasks, b.peak_resident_tasks);
+    assert_eq!(a.peak_resident_servers, b.peak_resident_servers);
+    assert_eq!(a.delay_struct_bytes, b.delay_struct_bytes);
+}
+
+/// The acceptance golden: an N = 1 federation with the pass-through
+/// router is the plain single-world run, bit for bit, through the whole
+/// report surface (wall-clock fields excepted).
+#[test]
+fn n1_passthrough_federation_reproduces_plain_world_report() {
+    for kind in [SchedulerKind::Eagle, SchedulerKind::CloudCoaster] {
+        let plain_cfg = tiny_cfg(kind);
+        let workload = build_workload(&plain_cfg).unwrap();
+        let mut analytics = NativeAnalytics;
+        let plain = run_experiment_on(&plain_cfg, &workload, &mut analytics).unwrap();
+
+        let mut fed_cfg = tiny_cfg(kind);
+        fed_cfg.federation = Some(FederationSpec {
+            clusters: 1,
+            router: RouterKind::PassThrough,
+            budget_sharing: BudgetSharing::None,
+            stagger: 0.0,
+        });
+        let fed = run_federated_experiment_with(&fed_cfg, &mut analytics).unwrap();
+        assert_eq!(fed.per_cluster.len(), 1);
+        assert_reports_bit_identical(&plain, &fed.per_cluster[0]);
+        // The aggregate of one cluster carries the same simulation
+        // numbers (only its name and label fields differ).
+        assert_eq!(fed.aggregate.events, plain.events);
+        assert_eq!(fed.aggregate.end_time.to_bits(), plain.end_time.to_bits());
+        assert_eq!(fed.aggregate.short_delay.n, plain.short_delay.n);
+        assert_eq!(
+            fed.aggregate.short_delay.mean.to_bits(),
+            plain.short_delay.mean.to_bits()
+        );
+        assert_eq!(fed.aggregate.cdf.values, plain.cdf.values);
+        assert_eq!(fed.aggregate.transients_requested, plain.transients_requested);
+    }
+}
+
+/// N = 2 federated runs: deterministic per seed (every simulation field
+/// repeats bit-exactly) across repeated runs, for both feed topologies.
+#[test]
+fn n2_federation_deterministic_per_seed() {
+    for router in [RouterKind::PassThrough, RouterKind::RoundRobin, RouterKind::LeastQueued]
+    {
+        let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+        cfg.scenario = Some(named("burst-storm", &cfg).unwrap());
+        cfg.federation = Some(FederationSpec {
+            clusters: 2,
+            router,
+            budget_sharing: BudgetSharing::Pooled,
+            stagger: 400.0,
+        });
+        let mut analytics = NativeAnalytics;
+        let a = run_federated_experiment_with(&cfg, &mut analytics).unwrap();
+        let b = run_federated_experiment_with(&cfg, &mut analytics).unwrap();
+        assert_eq!(a.per_cluster.len(), 2);
+        assert_eq!(a.peak_total_fleet, b.peak_total_fleet, "router {router:?}");
+        assert_eq!(a.aggregate.events, b.aggregate.events, "router {router:?}");
+        assert_eq!(
+            a.aggregate.end_time.to_bits(),
+            b.aggregate.end_time.to_bits(),
+            "router {router:?}"
+        );
+        assert_eq!(a.aggregate.short_delay.n, b.aggregate.short_delay.n);
+        assert_eq!(
+            a.aggregate.short_delay.mean.to_bits(),
+            b.aggregate.short_delay.mean.to_bits()
+        );
+        assert_eq!(a.aggregate.cdf.values, b.aggregate.cdf.values);
+        for (x, y) in a.per_cluster.iter().zip(&b.per_cluster) {
+            assert_reports_bit_identical(x, y);
+        }
+        // The two members differ from each other (different seeds and
+        // staggered storms) — the federation is not two copies.
+        assert_ne!(
+            a.per_cluster[0].end_time.to_bits(),
+            a.per_cluster[1].end_time.to_bits()
+        );
+        // Aggregate counters are the member sums.
+        assert_eq!(
+            a.aggregate.events,
+            a.per_cluster[0].events + a.per_cluster[1].events
+        );
+        assert_eq!(
+            a.aggregate.short_delay.n,
+            a.per_cluster[0].short_delay.n + a.per_cluster[1].short_delay.n
+        );
+        assert_eq!(
+            a.aggregate.transients_requested,
+            a.per_cluster[0].transients_requested + a.per_cluster[1].transients_requested
+        );
+    }
+}
+
+/// Federated grid points are simulation-bit-identical at any sweep
+/// thread count, like every other grid axis.
+#[test]
+fn federated_sweep_invariant_under_thread_count() {
+    let mut base = tiny_cfg(SchedulerKind::CloudCoaster);
+    base.scenario = Some(named("burst-storm", &base).unwrap());
+    base.federation = Some(FederationSpec {
+        clusters: 2,
+        router: RouterKind::PassThrough,
+        budget_sharing: BudgetSharing::Pooled,
+        stagger: 400.0,
+    });
+    let mut points = router_points(
+        &base,
+        &[RouterKind::PassThrough, RouterKind::RoundRobin],
+    );
+    points.extend(budget_sharing_points(&base));
+    let serial = run_sweep_parallel(&base, &points, 1).unwrap();
+    let parallel = run_sweep_parallel(&base, &points, 4).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.end_time.to_bits(), b.end_time.to_bits());
+        assert_eq!(a.short_delay.n, b.short_delay.n);
+        assert_eq!(a.short_delay.mean.to_bits(), b.short_delay.mean.to_bits());
+        assert_eq!(a.cdf.values, b.cdf.values);
+        assert_eq!(a.transients_requested, b.transients_requested);
+        assert_eq!(a.peak_resident_tasks, b.peak_resident_tasks);
+    }
+}
+
+/// The cross-cluster budget invariant: under a pooled budget, the sum of
+/// active + provisioning transients across clusters never exceeds the
+/// pooled cap K — even with staggered storms pushing both clusters to
+/// grow, and with aggressive revocation churning the fleet.
+#[test]
+fn pooled_shared_budget_cap_never_exceeded() {
+    let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+    cfg.threshold = 0.3; // aggressive growth: the cap must do the limiting
+    cfg.mttf = Some(900.0); // churn: request/revoke all run long
+    cfg.scenario = Some(named("burst-storm", &cfg).unwrap());
+    cfg.federation = Some(FederationSpec {
+        clusters: 2,
+        router: RouterKind::PassThrough,
+        budget_sharing: BudgetSharing::Pooled,
+        stagger: 500.0,
+    });
+    let outcome = run_federation(&cfg).unwrap();
+    let cap = outcome.shared_cap.expect("pooled sharing has a cap");
+    assert_eq!(cap, 12); // r=3 · N_s=8 · p=0.5
+    let requested: u64 = outcome.runs.iter().map(|r| r.rec.transients_requested).sum();
+    assert!(requested > 0, "storms never triggered the managers");
+    assert!(
+        outcome.peak_total_fleet <= cap,
+        "pooled budget overshot: peak {} > cap {}",
+        outcome.peak_total_fleet,
+        cap
+    );
+    // The pool actually coupled the clusters: the summed peak is also
+    // what an uncoupled federation could have exceeded — verify the
+    // uncoupled twin for contrast (it may legally go up to 2K).
+    let mut uncoupled = cfg.clone();
+    if let Some(f) = &mut uncoupled.federation {
+        f.budget_sharing = BudgetSharing::None;
+    }
+    let free = run_federation(&uncoupled).unwrap();
+    assert!(free.shared_cap.is_none());
+    assert!(
+        free.peak_total_fleet <= 2 * cap,
+        "uncoupled members exceeded their own caps"
+    );
+}
+
+/// Split sharing slices the pool: each member is capped at K/N, so the
+/// summed fleet stays within K without any cross-cluster transfer.
+#[test]
+fn split_shared_budget_respects_slices() {
+    let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+    cfg.threshold = 0.3;
+    cfg.scenario = Some(named("burst-storm", &cfg).unwrap());
+    cfg.federation = Some(FederationSpec {
+        clusters: 2,
+        router: RouterKind::PassThrough,
+        budget_sharing: BudgetSharing::Split,
+        stagger: 0.0,
+    });
+    let outcome = run_federation(&cfg).unwrap();
+    let cap = outcome.shared_cap.unwrap();
+    assert!(
+        outcome.peak_total_fleet <= cap,
+        "split slices overshot the total: peak {} > {}",
+        outcome.peak_total_fleet,
+        cap
+    );
+}
+
+/// The registry scenario end-to-end: `federated-burst` resolved against
+/// a config runs two staggered-storm clusters under one pooled budget
+/// and produces per-cluster + aggregate reports.
+#[test]
+fn federated_burst_registry_end_to_end() {
+    let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+    cfg.scenario = Some(named("federated-burst", &cfg).unwrap());
+    cfg.federation = named_federation("federated-burst", &cfg).unwrap();
+    assert!(cfg.federation.is_some());
+    let mut analytics = NativeAnalytics;
+    let fed = run_federated_experiment_with(&cfg, &mut analytics).unwrap();
+    assert_eq!(fed.per_cluster.len(), 2);
+    assert!(fed.shared_cap.is_some(), "registry scenario pools the budget");
+    assert!(fed.peak_total_fleet <= fed.shared_cap.unwrap());
+    assert!(fed.aggregate.short_delay.n > 0);
+    assert!(
+        fed.aggregate.cdf.values.last().copied().unwrap_or(0.0) > 0.999,
+        "aggregate CDF must close at 1.0"
+    );
+    // Members see the storm at different times (staggered windows), so
+    // their event streams differ.
+    assert_ne!(
+        fed.per_cluster[0].end_time.to_bits(),
+        fed.per_cluster[1].end_time.to_bits()
+    );
+}
+
+/// The `[federation]` TOML block drives the same path end-to-end.
+#[test]
+fn federation_toml_block_end_to_end() {
+    let cfg = ExperimentConfig::from_toml(
+        r#"
+        seed = 7
+        [cluster]
+        servers = 120
+        short_partition = 8
+        [transient]
+        threshold = 0.5
+        [workload]
+        horizon = 2500
+        [scenario]
+        name = "staggered-storm"
+        storm_windows = [600, 1000]
+        storm_intensity = 3.0
+        [federation]
+        clusters = 2
+        router = "round-robin"
+        budget_sharing = "pooled"
+        stagger = 400
+        "#,
+    )
+    .unwrap();
+    let mut analytics = NativeAnalytics;
+    let fed = run_federated_experiment_with(&cfg, &mut analytics).unwrap();
+    assert_eq!(fed.per_cluster.len(), 2);
+    assert!(fed.aggregate.events > 0);
+    assert!(fed.peak_total_fleet <= fed.shared_cap.unwrap());
+    // Round-robin splits the merged stream: both members run work.
+    assert!(fed.per_cluster.iter().all(|r| r.short_delay.n + r.long_delay.n > 0));
+}

@@ -50,6 +50,7 @@ fn small_cfg(manager: Option<ManagerConfig>) -> SimConfig {
         recycle_task_slots: true,
         recycle_server_slots: true,
         exact_delay_samples: false,
+        exact_snapshot_series: false,
         seed: 5,
     }
 }

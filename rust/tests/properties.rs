@@ -58,6 +58,7 @@ fn random_cfg(rng: &mut Rng, with_manager: bool) -> SimConfig {
         recycle_task_slots: rng.f64() < 0.8,
         recycle_server_slots: rng.f64() < 0.8,
         exact_delay_samples: rng.f64() < 0.25,
+        exact_snapshot_series: rng.f64() < 0.25,
         seed: rng.next_u64(),
     }
 }
