@@ -1,10 +1,12 @@
-//! Microbenchmarks of the hot paths (§Perf, L3): event queue push/pop,
+//! Microbenchmarks of the hot paths (§Perf, L3): event queue push/pop
+//! (calendar vs the reference heap, recorded to `BENCH_engine.json` at
+//! the repo root — the measured backbone of the hot-path campaign),
 //! argmin-tree updates, probe placement, task stealing, and the PJRT
 //! analytics invocation latency (the epoch path).
 //!
 //! `cargo bench --offline --bench micro_hotpath`
 
-use cloudcoaster::benchkit::{bench, black_box, fmt_ns};
+use cloudcoaster::benchkit::{bench, black_box, fmt_ns, BenchResult};
 use cloudcoaster::cluster::{Cluster, QueuePolicy};
 use cloudcoaster::coordinator::report::artifacts_dir;
 use cloudcoaster::metrics::Recorder;
@@ -13,7 +15,26 @@ use cloudcoaster::sched::probe::{assign_least_loaded, filter_long, sample_from_p
 use cloudcoaster::sim::{Engine, Event, Rng};
 use cloudcoaster::util::{JobId, MinTree, ServerRef};
 
-fn bench_event_queue() {
+fn json_entry(name: &str, r: &BenchResult) -> String {
+    format!(
+        "    {{\"name\": \"{name}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \"std_ns\": {:.0}, \"n\": {}}}",
+        r.median_ns(),
+        r.mean_ns(),
+        r.std_ns(),
+        r.samples_ns.len()
+    )
+}
+
+fn mk_engine(reference: bool) -> Engine {
+    // Both pre-sized to the same realistic pending-event depth.
+    if reference {
+        Engine::reference_with_capacity(8192)
+    } else {
+        Engine::with_capacity(8192)
+    }
+}
+
+fn bench_event_queue(entries: &mut Vec<String>) {
     // Throughput of schedule+pop on a queue with realistic depth.
     let n = 100_000u64;
     let r = bench("micro/engine_push_pop_100k", 1, 10, || {
@@ -27,6 +48,98 @@ fn bench_event_queue() {
     });
     let evps = 2.0 * n as f64 / (r.median_ns() / 1e9);
     println!("  -> {:.1}M event-ops/s (push+pop)", evps / 1e6);
+    entries.push(json_entry("engine_push_pop_100k", &r));
+}
+
+/// Steady-state MMPP-shaped churn at 1e6 events: one pop, one push at
+/// the popped clock plus an exponential gap whose mean flips between a
+/// calm and a burst phase (×100 rate), with an occasional far-future
+/// push (the revocation-horizon shape that exercises the overflow
+/// rung). Calendar vs the reference `BinaryHeap` — the before/after
+/// pair for the calendar-queue tentpole.
+fn bench_engine_churn(entries: &mut Vec<String>) {
+    let n = 1_000_000u64;
+    for (label, reference) in [
+        ("engine_churn_mmpp_1e6_calendar", false),
+        ("engine_churn_mmpp_1e6_heap_before", true),
+    ] {
+        let r = bench(&format!("micro/{label}"), 1, 5, || {
+            let mut e = mk_engine(reference);
+            let mut rng = Rng::new(9);
+            for _ in 0..4096 {
+                e.schedule(rng.exponential(50.0), Event::Snapshot);
+            }
+            let mut burst = false;
+            let mut ops = 0u64;
+            while ops < n {
+                let (t, _) = e.pop().expect("steady-state queue drained");
+                if ops % 2048 == 0 {
+                    burst = !burst;
+                }
+                let mean = if burst { 0.4 } else { 40.0 };
+                e.schedule(t + rng.exponential(mean), Event::Snapshot);
+                if ops % 8192 == 0 {
+                    e.schedule(t + 1e7 + rng.f64() * 1e7, Event::Snapshot);
+                }
+                ops += 2;
+            }
+            black_box(e.processed());
+        });
+        let evps = n as f64 / (r.median_ns() / 1e9);
+        println!("  -> {:.1}M event-ops/s ({label})", evps / 1e6);
+        entries.push(json_entry(label, &r));
+    }
+}
+
+/// Same-timestamp burst storms (~1e6 events in runs of 64 ties):
+/// scheduled, then drained via `pop_batch` on both engines, plus a
+/// per-pop drain as the before-side of the batch-dispatch change.
+fn bench_engine_burst(entries: &mut Vec<String>) {
+    let timestamps = 16_384u64;
+    let per = 64u64;
+    for (label, reference, batched) in [
+        ("engine_burst64_pop_batch_calendar", false, true),
+        ("engine_burst64_pop_batch_heap", true, true),
+        ("engine_burst64_pop_single_before", false, false),
+    ] {
+        let r = bench(&format!("micro/{label}"), 1, 5, || {
+            let mut e = mk_engine(reference);
+            let mut rng = Rng::new(13);
+            for ts in 0..timestamps {
+                let t = ts as f64 + rng.f64() * 0.25;
+                for _ in 0..per {
+                    e.schedule(t, Event::Snapshot);
+                }
+            }
+            if batched {
+                let mut batch = Vec::new();
+                while e.pop_batch(&mut batch).is_some() {
+                    black_box(batch.len());
+                }
+            } else {
+                while e.pop().is_some() {}
+            }
+            black_box(e.processed());
+        });
+        let evps = 2.0 * (timestamps * per) as f64 / (r.median_ns() / 1e9);
+        println!("  -> {:.1}M event-ops/s ({label})", evps / 1e6);
+        entries.push(json_entry(label, &r));
+    }
+}
+
+/// Record the engine medians to `BENCH_engine.json` (repo root), the
+/// first measured point of the hot-path campaign's trajectory. The
+/// committed file carries a placeholder status until a toolchain
+/// regenerates it; this overwrites it with measured numbers.
+fn write_engine_json(entries: &[String]) {
+    let json = format!(
+        "{{\n  \"bench\": \"micro_hotpath (engine)\",\n  \"status\": \"measured\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    std::fs::write(out, &json).expect("write BENCH_engine.json");
+    println!("wrote {out}");
 }
 
 fn bench_mintree() {
@@ -102,7 +215,11 @@ fn bench_analytics() {
 }
 
 fn main() {
-    bench_event_queue();
+    let mut engine_entries: Vec<String> = Vec::new();
+    bench_event_queue(&mut engine_entries);
+    bench_engine_churn(&mut engine_entries);
+    bench_engine_burst(&mut engine_entries);
+    write_engine_json(&engine_entries);
     bench_mintree();
     bench_probe_placement();
     bench_steal();

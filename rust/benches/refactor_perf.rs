@@ -225,6 +225,36 @@ fn main() {
         entries.push(json_entry("federation_sequential_baseline_2x", &r));
     }
 
+    // ---- event engine: calendar vs reference heap, end-to-end -------
+    // The micro numbers live in BENCH_engine.json (micro_hotpath); this
+    // is the whole-simulation view of the same swap — identical wiring
+    // and workload, only `SimConfig::reference_engine` differs (results
+    // are bit-identical; the delta is pure event-queue wall-clock).
+    {
+        use cloudcoaster::coordinator::report::{build_scheduler, build_workload};
+        use cloudcoaster::coordinator::simulate;
+
+        let mut base = bench_common::bench_base();
+        if let cloudcoaster::coordinator::config::WorkloadSource::YahooLike(p) =
+            &mut base.workload
+        {
+            p.horizon = 3600.0;
+        }
+        let w = build_workload(&base).unwrap();
+        for (label, reference) in
+            [("engine_run_calendar", false), ("engine_run_heap_before", true)]
+        {
+            let mut cfg = base.to_sim_config();
+            cfg.reference_engine = reference;
+            let r = bench(&format!("refactor/{label}"), 1, 5, || {
+                let mut sched = build_scheduler(base.scheduler, base.probe_ratio);
+                let res = simulate(&w, sched.as_mut(), &cfg);
+                black_box(res.events);
+            });
+            entries.push(json_entry(label, &r));
+        }
+    }
+
     // ---- sweep: serial vs parallel ----------------------------------
     let mut base = bench_common::bench_base();
     // Shrink to keep the bench under a minute while preserving dynamics.

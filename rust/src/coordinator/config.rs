@@ -90,6 +90,11 @@ pub struct ExperimentConfig {
     /// Predictive resizing via the lr_forecast artifact (abl-forecast).
     pub predictive: bool,
     pub snapshot_interval: f64,
+    /// Run on the reference `BinaryHeap` event engine instead of the
+    /// default calendar queue (`[engine] reference = true` /
+    /// `--reference-engine true`). Bit-identical results; kept for the
+    /// CI engine-equivalence smoke and golden comparisons.
+    pub reference_engine: bool,
     pub seed: u64,
     pub workload: WorkloadSource,
     /// Declarative workload scenario (source + combinator stack +
@@ -122,6 +127,7 @@ impl ExperimentConfig {
             drain_cooldown: 120.0,
             predictive: false,
             snapshot_interval: 60.0,
+            reference_engine: false,
             seed: 42,
             workload: WorkloadSource::YahooLike(YahooLikeParams::default()),
             scenario: None,
@@ -181,6 +187,7 @@ impl ExperimentConfig {
                     queue_policy: self.queue_policy,
                     manager: Some(manager),
                     snapshot_interval: self.snapshot_interval,
+                    reference_engine: self.reference_engine,
                     seed: self.seed,
                     ..Default::default()
                 }
@@ -191,6 +198,7 @@ impl ExperimentConfig {
                 queue_policy: self.queue_policy,
                 manager: None,
                 snapshot_interval: self.snapshot_interval,
+                reference_engine: self.reference_engine,
                 seed: self.seed,
                 ..Default::default()
             },
@@ -250,6 +258,9 @@ impl ExperimentConfig {
             if v {
                 cfg.queue_policy = QueuePolicy::Fifo;
             }
+        }
+        if let Some(v) = t.get("engine.reference").and_then(|v| v.as_bool()) {
+            cfg.reference_engine = v;
         }
         if let Some(v) = t.get("seed").and_then(|v| v.as_u64()) {
             cfg.seed = v;

@@ -77,6 +77,13 @@ pub struct SimConfig {
     /// comparisons of the series themselves; all *report* fields are
     /// identical either way (nothing distilled reads the series).
     pub exact_snapshot_series: bool,
+    /// Run on the pre-calendar `BinaryHeap` event engine
+    /// ([`crate::sim::Engine::reference`]) instead of the default
+    /// calendar queue. Reference mode for golden comparisons (the CI
+    /// engine-equivalence smoke diffs the two): every simulation field
+    /// is bit-identical either way, only event-queue wall-clock
+    /// differs.
+    pub reference_engine: bool,
     pub seed: u64,
 }
 
@@ -94,6 +101,7 @@ impl Default for SimConfig {
             recycle_server_slots: true,
             exact_delay_samples: false,
             exact_snapshot_series: false,
+            reference_engine: false,
             seed: 1,
         }
     }
@@ -145,6 +153,7 @@ pub fn build_world<'a>(
 ) -> World<'a> {
     let mut world =
         World::from_workload(workload, build_cluster(cfg), build_recorder(cfg), cfg.seed);
+    world.engine = build_engine(cfg);
     wire_standard(&mut world, scheduler, cfg, analytics);
     world
 }
@@ -161,6 +170,7 @@ pub fn build_world_from_source<'a>(
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
 ) -> World<'a> {
     let mut world = World::new(source, build_cluster(cfg), build_recorder(cfg), cfg.seed);
+    world.engine = build_engine(cfg);
     wire_standard(&mut world, scheduler, cfg, analytics);
     world
 }
@@ -170,6 +180,22 @@ fn build_cluster(cfg: &SimConfig) -> Cluster {
     cluster.set_task_recycling(cfg.recycle_task_slots);
     cluster.set_server_recycling(cfg.recycle_server_slots);
     cluster
+}
+
+/// Engine sized from the configured load: pending events are dominated
+/// by one `TaskFinish` per busy server plus transient lifecycle and
+/// periodic events, so the hint is static fleet + transient cap. Purely
+/// a pre-allocation hint — every simulation field is bit-identical for
+/// any hint (and for the reference `BinaryHeap` engine).
+fn build_engine(cfg: &SimConfig) -> crate::sim::Engine {
+    let transient_cap =
+        cfg.manager.as_ref().map(|m| m.budget.max_transients()).unwrap_or(0);
+    let hint = cfg.n_general + cfg.n_short_reserved + transient_cap + 64;
+    if cfg.reference_engine {
+        crate::sim::Engine::reference_with_capacity(hint)
+    } else {
+        crate::sim::Engine::with_capacity(hint)
+    }
 }
 
 fn build_recorder(cfg: &SimConfig) -> Recorder {
@@ -399,6 +425,7 @@ pub fn build_federation<'a>(
                 sim_cfg.seed,
             )
         };
+        world.engine = build_engine(&sim_cfg);
         wire_standard_shared(&mut world, sched.as_mut(), &sim_cfg, None, shared.clone());
         if routed {
             // The member's canonical arrival stream (0xAE, forked after

@@ -20,7 +20,13 @@
 //! The simulator is composed from four layers:
 //!
 //! * **sim** — the deterministic core: event queue + clock
-//!   ([`sim::Engine`]), forked PRNG streams ([`sim::Rng`]), and the
+//!   ([`sim::Engine`] — a self-tuning calendar queue: O(1) amortized
+//!   push/pop under bursty arrivals with an overflow rung for
+//!   far-future events, popping in exactly the `(time, seq)` order of
+//!   the `BinaryHeap` it replaced, which survives as
+//!   `Engine::reference` for golden/equivalence checks; `pop_batch`
+//!   drains whole same-timestamp runs for the world's batch dispatch),
+//!   forked PRNG streams ([`sim::Rng`]), and the
 //!   composable [`sim::World`]. A `World` owns engine, cluster, recorder
 //!   and RNG streams, pulls arrivals lazily from a streaming
 //!   [`trace::ArrivalSource`] (one job of lookahead; eager workloads
@@ -119,8 +125,12 @@
 //! stress-tests both arenas under randomized
 //! enqueue/steal/revoke/drain interleavings (no resurrection, slots <=
 //! peak-active, all four recycling-mode combinations observationally
-//! identical), and `tests/pool_index_props.rs` pins every indexed
-//! least-loaded answer to the naive linear scan it replaced.
+//! identical), `tests/pool_index_props.rs` pins every indexed
+//! least-loaded answer to the naive linear scan it replaced, and
+//! `tests/engine_props.rs` pins the calendar queue to the reference
+//! `BinaryHeap` under randomized push/pop interleavings, tie storms,
+//! far-future overflow and rollover boundaries (plus a full-run
+//! bit-identity check via `SimConfig::reference_engine`).
 //!
 //! ## Quickstart
 //!

@@ -4,6 +4,7 @@
 //! cloudcoaster run      [--config FILE] [--scheduler KIND] [--r R] [--seed N]
 //!                       [--scenario default|managerless|burst-storm|federated-burst]
 //!                       [--clusters N] [--router KIND] [--budget-sharing MODE]
+//!                       [--reference-engine true|false]
 //! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3] [--threads N]
 //! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler|storm|router|budget [--threads N]
 //! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
@@ -103,6 +104,11 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(n) = args.get("short-partition") {
         cfg.short_partition = n.parse().context("--short-partition")?;
+    }
+    if let Some(v) = args.get("reference-engine") {
+        // The pre-calendar BinaryHeap engine — bit-identical results;
+        // the CI engine-equivalence smoke diffs the two.
+        cfg.reference_engine = v.parse().context("--reference-engine")?;
     }
     if let Some(name) = args.get("scenario") {
         // Registry scenarios compose with the configured workload (so

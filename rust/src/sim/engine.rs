@@ -2,8 +2,82 @@
 //! tie-break, the simulation clock, and lightweight event accounting.
 //!
 //! This is the innermost loop of the whole system — every simulated task
-//! passes through `push` + `pop` at least twice — so the representation is
-//! kept lean: a `BinaryHeap` of 24-byte entries keyed by `(time, seq)`.
+//! passes through `push` + `pop` at least twice — so the default
+//! representation is a **calendar queue**: a two-tier bucketed structure
+//! giving O(1) amortized push/pop under the MMPP arrival mix, versus the
+//! O(log n) of the [`BinaryHeap`] it replaced (the heap survives as
+//! [`Engine::reference`] purely for golden/equivalence comparisons —
+//! `SimConfig::reference_engine`, mirroring the arena `recycle_*`
+//! pattern).
+//!
+//! # Calendar queue layout
+//!
+//! Entries are 24-byte `(time, seq, event)` records. The structure is:
+//!
+//! * a **year of buckets** — `nb` (a power of two) unsorted `Vec`s
+//!   covering the rolling window `[window_start, window_start + nb·w)`,
+//!   where `w` is the bucket width. An in-window entry lives in bucket
+//!   `⌊(t − window_start)/w⌋`.
+//! * the **open bucket** `cur` — the contents of bucket `cur_bucket`,
+//!   sorted ascending by `(time, seq)` and consumed front-to-back
+//!   through `cur_pos`. Buckets are sorted lazily, each exactly once,
+//!   when the drain reaches them.
+//! * an **overflow rung** — a min-heap holding far-future events (index
+//!   ≥ `nb`: transient MTTF revocation horizons, long forecast
+//!   deadlines). Overflow entries are re-bucketed **lazily on
+//!   rollover**: only when the window advances onto them, so an event a
+//!   simulated year out is touched O(log overflow) times total, not
+//!   once per window.
+//!
+//! # Invariants (why the total order is exact)
+//!
+//! 1. **Total order preserved.** The bucket index function
+//!    `i(t) = clamp(⌊(t − window_start)/w⌋, 0, ∞)` is monotone
+//!    nondecreasing in `t` (f64 subtraction and division by a positive
+//!    constant are monotone), so a smaller-time entry can never land in
+//!    a later bucket than a larger-time one — even under floating-point
+//!    rounding at bucket boundaries. Draining buckets in index order
+//!    with an in-bucket `(time, seq)` sort therefore yields *exactly*
+//!    the global `(time, seq)` order the heap produced; equal-time
+//!    entries share one bucket (same index) and sort by insertion seq.
+//!    Pinned against the in-tree heap oracle by `tests/engine_props.rs`
+//!    and end-to-end by the determinism goldens.
+//! 2. **Rollover correctness.** Membership (bucket vs overflow) is
+//!    decided by the *same* index function, so the overflow rung only
+//!    ever holds entries ordered after every in-window entry. When the
+//!    window empties, it jumps to the earliest overflow time and
+//!    re-buckets exactly the entries whose new index is in-window; the
+//!    remainder stay strictly later. Every bucket belongs to exactly
+//!    one window (no modulo wrap-around years).
+//! 3. **Head availability.** After every mutation the earliest entry is
+//!    at `cur[cur_pos]` (restored eagerly), so [`Engine::peek_time`] is
+//!    O(1) — the federation's earliest-next-event merge keys on it once
+//!    per member per step.
+//!
+//! # Self-tuning (no config knob)
+//!
+//! The bucket width tracks observed inter-event spacing: a decayed mean
+//! of the nonzero gaps between consecutively popped timestamps
+//! (deterministic — a pure function of the event sequence, never the
+//! wall clock). The width is re-derived from it at structural resizes
+//! (bucket count doubles when occupancy exceeds 2 entries/bucket,
+//! shrinks when it falls below 1/8) and at rollovers, where retuning is
+//! free because the window is empty. Capacity hints
+//! ([`Engine::with_capacity`]) pre-size the bucket count from expected
+//! pending events — one `TaskFinish` per busy server plus transient
+//! lifecycle traffic — so an N-member federation no longer pre-pays
+//! N × 64Ki heap slots.
+//!
+//! # Batch dispatch
+//!
+//! [`Engine::pop_batch`] drains the maximal run of equal-time events in
+//! seq order into a caller-owned scratch buffer (the run is contiguous
+//! in the open bucket — equal times share one index). `World::step`'s
+//! batch path dispatches such runs through the component list with the
+//! per-event callback order unchanged, skipping the per-event loop
+//! setup; events scheduled *during* a batch at the same timestamp have
+//! higher seqs and form the next batch, which is exactly the order a
+//! per-event pop loop would produce.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -35,17 +109,366 @@ impl Ord for Entry {
     }
 }
 
+/// Smallest / largest bucket counts the calendar will use. The floor
+/// keeps tiny queues cheap; the ceiling bounds the Vec-header footprint
+/// (24 B each) at planet scale.
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 20;
+/// Default pre-size for [`Engine::new`] (standalone/test use): modest,
+/// grows on demand. Wired runs pass a load-derived hint instead.
+const DEFAULT_HINT: usize = 256;
+/// Bucket width clamp: keeps the window arithmetic finite and the
+/// index function well-defined under degenerate gap estimates.
+const MIN_WIDTH: f64 = 1e-9;
+const MAX_WIDTH: f64 = 1e12;
+
+/// The calendar/ladder structure behind the default engine. See the
+/// module docs for layout and invariants.
+struct Calendar {
+    /// The year of buckets; `buckets[cur_bucket]` is always empty (its
+    /// live contents are `cur`), as are all buckets below it.
+    buckets: Vec<Vec<Entry>>,
+    /// Bucket width `w` (seconds); finite, in `[MIN_WIDTH, MAX_WIDTH]`.
+    width: f64,
+    /// Start of the current window; bucket `i` covers
+    /// `[window_start + i·w, window_start + (i+1)·w)` modulo the
+    /// monotone-clamp at index 0.
+    window_start: f64,
+    /// The open bucket's contents, ascending `(time, seq)`, consumed
+    /// from `cur_pos`. If the queue is nonempty, `cur[cur_pos]` is the
+    /// global minimum (head invariant).
+    cur: Vec<Entry>,
+    cur_pos: usize,
+    cur_bucket: usize,
+    /// Far-future rung: entries whose index is ≥ `buckets.len()`.
+    overflow: BinaryHeap<Reverse<Entry>>,
+    /// Live entries in `cur[cur_pos..]` + all `buckets` (excludes the
+    /// overflow rung).
+    in_window: usize,
+    /// Decayed mean of nonzero inter-pop gaps — the spacing estimate
+    /// the width self-tunes from. 0.0 until the first nonzero gap.
+    gap_ewma: f64,
+    /// Timestamp of the most recent pop (−∞ before the first).
+    last_pop: f64,
+}
+
+impl Calendar {
+    fn with_capacity(hint: usize) -> Self {
+        let nb = hint.clamp(MIN_BUCKETS, MAX_BUCKETS).next_power_of_two();
+        Calendar {
+            buckets: std::iter::repeat_with(Vec::new).take(nb).collect(),
+            width: 1.0,
+            window_start: 0.0,
+            cur: Vec::new(),
+            cur_pos: 0,
+            cur_bucket: 0,
+            overflow: BinaryHeap::new(),
+            in_window: 0,
+            gap_ewma: 0.0,
+            last_pop: f64::NEG_INFINITY,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.in_window + self.overflow.len()
+    }
+
+    /// Bucket index of `t` under the current window: monotone
+    /// nondecreasing in `t` (the order-exactness keystone — see module
+    /// docs). Returns `usize::MAX` for the overflow rung.
+    #[inline]
+    fn index_of(&self, t: f64) -> usize {
+        let d = (t - self.window_start) / self.width;
+        if d <= 0.0 {
+            0
+        } else if d >= self.buckets.len() as f64 {
+            usize::MAX
+        } else {
+            d as usize
+        }
+    }
+
+    #[inline]
+    fn peek(&self) -> Option<&Entry> {
+        self.cur.get(self.cur_pos)
+    }
+
+    fn push(&mut self, e: Entry) {
+        if self.len() == 0 {
+            // Re-anchor an empty calendar on the incoming event so a
+            // sparse queue never walks dead buckets to reach it.
+            self.window_start = e.at.0;
+            self.cur_bucket = 0;
+            self.cur.clear();
+            self.cur_pos = 0;
+        }
+        let i = self.index_of(e.at.0);
+        if i >= self.buckets.len() {
+            self.overflow.push(Reverse(e));
+        } else if i == self.cur_bucket {
+            // Into the open bucket: keep the ascending (time, seq)
+            // order. Equal-time storms append at the tail (their seq is
+            // the running maximum), so tie bursts are O(1) per push.
+            let tail = &self.cur[self.cur_pos..];
+            let pos = tail.partition_point(|x| x < &e);
+            self.cur.insert(self.cur_pos + pos, e);
+            self.in_window += 1;
+        } else if i < self.cur_bucket {
+            // Earlier than the open bucket (the drain skipped empty
+            // buckets ahead of a gap, then a near-term event was
+            // scheduled behind it): hand the open bucket's unconsumed
+            // tail back and reopen bucket `i`. All buckets below
+            // `cur_bucket` are empty, so `cur` becomes exactly `[e]`.
+            let cb = self.cur_bucket;
+            let mut returned = std::mem::take(&mut self.buckets[cb]);
+            returned.extend(self.cur.drain(self.cur_pos..));
+            self.buckets[cb] = returned;
+            self.cur.clear();
+            self.cur_pos = 0;
+            self.cur.push(e);
+            self.cur_bucket = i;
+            self.in_window += 1;
+        } else {
+            self.buckets[i].push(e);
+            self.in_window += 1;
+        }
+        if self.len() > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            self.resize();
+        }
+        self.ensure_head();
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        let e = *self.peek()?;
+        self.cur_pos += 1;
+        self.in_window -= 1;
+        self.note_pop(e.at.0);
+        self.maybe_shrink();
+        self.ensure_head();
+        Some(e)
+    }
+
+    /// Drain the maximal run of equal-time entries (contiguous in the
+    /// open bucket — equal times share one index) into `out`,
+    /// returning the shared timestamp. Exactly equivalent to repeated
+    /// [`Calendar::pop`] while the head time is unchanged.
+    fn pop_run(&mut self, out: &mut Vec<Event>) -> Option<Time> {
+        let t = self.peek()?.at;
+        while let Some(e) = self.cur.get(self.cur_pos) {
+            if e.at != t {
+                break;
+            }
+            out.push(e.event);
+            self.cur_pos += 1;
+            self.in_window -= 1;
+        }
+        self.note_pop(t.0);
+        self.maybe_shrink();
+        self.ensure_head();
+        Some(t.0)
+    }
+
+    /// Track inter-pop spacing for the width self-tuner. Zero gaps
+    /// (same-timestamp batches) are skipped: bucket width should track
+    /// the spacing of *distinct* timestamps, and a pop-batch drain must
+    /// tune identically to the per-pop loop it replaces.
+    #[inline]
+    fn note_pop(&mut self, t: f64) {
+        if t > self.last_pop {
+            if self.last_pop.is_finite() {
+                let gap = t - self.last_pop;
+                self.gap_ewma = if self.gap_ewma > 0.0 {
+                    0.875 * self.gap_ewma + 0.125 * gap
+                } else {
+                    gap
+                };
+            }
+            self.last_pop = t;
+        }
+    }
+
+    #[inline]
+    fn maybe_shrink(&mut self) {
+        if self.buckets.len() > MIN_BUCKETS && self.len() * 8 < self.buckets.len() {
+            self.resize();
+        }
+    }
+
+    /// The width the spacing estimate currently suggests: ~2 distinct
+    /// timestamps per bucket, clamped to keep the window finite.
+    fn tuned_width(&self) -> f64 {
+        if self.gap_ewma > 0.0 {
+            (2.0 * self.gap_ewma).clamp(MIN_WIDTH, MAX_WIDTH)
+        } else {
+            self.width
+        }
+    }
+
+    /// Rebuild the bucket array for the current queue size: new bucket
+    /// count ~ live entries (power of two), new width from the spacing
+    /// estimate, window re-anchored at the clock floor. O(live
+    /// entries), amortized O(1) by the doubling/halving thresholds.
+    fn resize(&mut self) {
+        let nb = self.len().clamp(MIN_BUCKETS, MAX_BUCKETS).next_power_of_two();
+        let mut stash: Vec<Entry> = Vec::with_capacity(self.in_window);
+        stash.extend(self.cur.drain(self.cur_pos..));
+        self.cur.clear();
+        self.cur_pos = 0;
+        for b in &mut self.buckets {
+            stash.append(b);
+        }
+        self.buckets.resize_with(nb, Vec::new);
+        self.width = self.tuned_width();
+        // Every live entry's time is ≥ the engine clock (scheduling
+        // into the past panics), so the last pop is a valid window
+        // anchor; entries landing at or before it clamp into bucket 0,
+        // which the monotone index keeps order-exact.
+        if self.last_pop.is_finite() {
+            self.window_start = self.last_pop;
+        }
+        self.cur_bucket = 0;
+        self.in_window = 0;
+        for e in stash {
+            let i = self.index_of(e.at.0);
+            if i >= self.buckets.len() {
+                self.overflow.push(Reverse(e));
+            } else {
+                self.buckets[i].push(e);
+                self.in_window += 1;
+            }
+        }
+        // A wider window may now cover rung entries; a narrower one
+        // pushed some out above. Either way, re-establish invariant 2.
+        self.drain_overflow();
+        self.ensure_head();
+    }
+
+    /// Move overflow entries whose index now falls in-window into their
+    /// buckets (stops at the first that doesn't — the rung is a min-
+    /// heap, and the index function is monotone in time).
+    fn drain_overflow(&mut self) {
+        loop {
+            let t = match self.overflow.peek() {
+                Some(Reverse(e)) => e.at.0,
+                None => return,
+            };
+            let i = self.index_of(t);
+            if i >= self.buckets.len() {
+                return;
+            }
+            let Reverse(e) = self.overflow.pop().expect("peeked entry vanished");
+            self.buckets[i].push(e);
+            self.in_window += 1;
+        }
+    }
+
+    /// Restore the head invariant: if the queue is nonempty, the global
+    /// minimum sits at `cur[cur_pos]`. Advances the open bucket past
+    /// drained ones (sorting each newly opened bucket exactly once) and
+    /// performs the lazy rollover — jump the window to the earliest
+    /// rung entry and re-bucket what now falls inside — when the whole
+    /// window has drained.
+    fn ensure_head(&mut self) {
+        if self.cur_pos < self.cur.len() {
+            return;
+        }
+        if self.in_window == 0 {
+            if self.overflow.is_empty() {
+                return;
+            }
+            // Rollover: re-anchor on the earliest far-future event
+            // (its index becomes 0, so the drain moves at least one
+            // entry and terminates). Retuning the width here is free —
+            // no in-window entry needs re-bucketing.
+            let t0 = self.overflow.peek().expect("overflow nonempty").0.at.0;
+            self.window_start = t0;
+            self.width = self.tuned_width();
+            self.cur_bucket = 0;
+            self.drain_overflow();
+        }
+        // Find the next nonempty bucket. Scanning starts at cur_bucket
+        // itself: normally empty (its contents were `cur`), but a
+        // rollover or resize restocks it in place.
+        let mut i = self.cur_bucket;
+        while self.buckets[i].is_empty() {
+            i += 1;
+            debug_assert!(i < self.buckets.len(), "in_window > 0 but no nonempty bucket");
+        }
+        // Open bucket i, recycling the retired `cur` allocation as the
+        // bucket's (now empty) storage.
+        let mut fresh = std::mem::take(&mut self.buckets[i]);
+        std::mem::swap(&mut self.cur, &mut fresh);
+        fresh.clear();
+        self.buckets[i] = fresh;
+        self.cur_pos = 0;
+        self.cur_bucket = i;
+        // Each bucket is sorted exactly once, when opened. Keys are
+        // unique (seq), so unstable sort is deterministic.
+        self.cur.sort_unstable();
+    }
+}
+
+/// The two queue representations behind [`Engine`]: the calendar is
+/// the default; the heap is the order-oracle reference kept for golden
+/// comparisons (`SimConfig::reference_engine`) and the equivalence
+/// property suite.
+enum Queue {
+    Calendar(Calendar),
+    Heap(BinaryHeap<Reverse<Entry>>),
+}
+
 /// Time-ordered event queue + simulation clock.
 pub struct Engine {
-    heap: BinaryHeap<Reverse<Entry>>,
+    queue: Queue,
     now: Time,
     seq: u64,
     processed: u64,
 }
 
 impl Engine {
+    /// Calendar-queue engine with the default (modest, growable)
+    /// pre-size — the standalone/test constructor. Wired runs size the
+    /// engine from expected load via [`Engine::with_capacity`].
     pub fn new() -> Self {
-        Engine { heap: BinaryHeap::with_capacity(1 << 16), now: 0.0, seq: 0, processed: 0 }
+        Self::with_capacity(DEFAULT_HINT)
+    }
+
+    /// Calendar-queue engine pre-sized for `hint` expected concurrently
+    /// pending events (≈ busy servers + transient cap: each running
+    /// task holds one `TaskFinish`, plus lifecycle and periodic
+    /// events). Purely a performance hint — the structure grows and
+    /// shrinks regardless, and results are bit-identical for any hint.
+    pub fn with_capacity(hint: usize) -> Self {
+        Engine {
+            queue: Queue::Calendar(Calendar::with_capacity(hint)),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// The pre-calendar `BinaryHeap` engine, kept as the order oracle
+    /// for golden/equivalence comparisons (`SimConfig::reference_engine`
+    /// and `tests/engine_props.rs`). Keeps the historical 64Ki
+    /// pre-allocation.
+    pub fn reference() -> Self {
+        Self::reference_with_capacity(1 << 16)
+    }
+
+    /// [`Engine::reference`] with an explicit heap pre-allocation.
+    pub fn reference_with_capacity(hint: usize) -> Self {
+        Engine {
+            queue: Queue::Heap(BinaryHeap::with_capacity(hint)),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Is this the reference `BinaryHeap` engine (true) or the default
+    /// calendar queue (false)?
+    pub fn is_reference(&self) -> bool {
+        matches!(self.queue, Queue::Heap(_))
     }
 
     /// Current simulation time (seconds).
@@ -61,15 +484,20 @@ impl Engine {
 
     /// Number of events still queued.
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        match &self.queue {
+            Queue::Calendar(c) => c.len(),
+            Queue::Heap(h) => h.len(),
+        }
     }
 
-    /// Schedule `event` at absolute time `at`. Panics on NaN or on
-    /// scheduling into the past — both are simulator bugs, not runtime
-    /// conditions.
+    /// Schedule `event` at absolute time `at`. Panics on NaN/infinite
+    /// times or on scheduling into the past — all are simulator bugs,
+    /// not runtime conditions (and the finiteness bound keeps the
+    /// calendar's window arithmetic well-defined).
     #[inline]
     pub fn schedule(&mut self, at: Time, event: Event) {
         assert!(!at.is_nan(), "NaN event time for {event:?}");
+        assert!(at.is_finite(), "non-finite event time {at} for {event:?}");
         assert!(
             at >= self.now,
             "scheduling into the past: {at} < {} for {event:?}",
@@ -77,7 +505,10 @@ impl Engine {
         );
         let entry = Entry { at: OrderedTime(at), seq: self.seq, event };
         self.seq += 1;
-        self.heap.push(Reverse(entry));
+        match &mut self.queue {
+            Queue::Calendar(c) => c.push(entry),
+            Queue::Heap(h) => h.push(Reverse(entry)),
+        }
     }
 
     /// Schedule `event` after `delay` seconds.
@@ -90,16 +521,51 @@ impl Engine {
     /// simulation has quiesced.
     #[inline]
     pub fn pop(&mut self) -> Option<(Time, Event)> {
-        let Reverse(entry) = self.heap.pop()?;
+        let entry = match &mut self.queue {
+            Queue::Calendar(c) => c.pop()?,
+            Queue::Heap(h) => h.pop()?.0,
+        };
         debug_assert!(entry.at.0 >= self.now, "time went backwards");
         self.now = entry.at.0;
         self.processed += 1;
         Some((entry.at.0, entry.event))
     }
 
-    /// Peek at the next event time without popping.
+    /// Drain the maximal run of equal-time events, in seq order, into
+    /// the reusable scratch `out` (cleared first), advancing the clock
+    /// to their shared timestamp. Equivalent to calling [`Engine::pop`]
+    /// while the head time is unchanged — `World`'s batch dispatch path
+    /// is built on this. Returns `None` when the queue is empty.
+    pub fn pop_batch(&mut self, out: &mut Vec<Event>) -> Option<Time> {
+        out.clear();
+        let t = match &mut self.queue {
+            Queue::Calendar(c) => c.pop_run(out)?,
+            Queue::Heap(h) => {
+                let Reverse(first) = h.pop()?;
+                out.push(first.event);
+                while let Some(Reverse(e)) = h.peek() {
+                    if e.at != first.at {
+                        break;
+                    }
+                    out.push(h.pop().expect("peeked entry vanished").0.event);
+                }
+                first.at.0
+            }
+        };
+        debug_assert!(t >= self.now, "time went backwards");
+        self.now = t;
+        self.processed += out.len() as u64;
+        Some(t)
+    }
+
+    /// Time of the next event without popping — O(1) on both
+    /// representations (the federation merge calls this once per member
+    /// per step).
     pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|Reverse(e)| e.at.0)
+        match &self.queue {
+            Queue::Calendar(c) => c.peek().map(|e| e.at.0),
+            Queue::Heap(h) => h.peek().map(|Reverse(e)| e.at.0),
+        }
     }
 }
 
@@ -114,44 +580,59 @@ mod tests {
     use super::*;
     use crate::util::{JobId, ServerRef, TaskRef};
 
+    fn engines() -> Vec<Engine> {
+        // Both representations plus a degenerate capacity that forces
+        // early calendar resizes.
+        vec![Engine::new(), Engine::with_capacity(1), Engine::reference()]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut e = Engine::new();
-        e.schedule(3.0, Event::Snapshot);
-        e.schedule(1.0, Event::JobArrival(JobId(1)));
-        e.schedule(2.0, Event::JobArrival(JobId(2)));
-        let times: Vec<f64> = std::iter::from_fn(|| e.pop()).map(|(t, _)| t).collect();
-        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        for mut e in engines() {
+            e.schedule(3.0, Event::Snapshot);
+            e.schedule(1.0, Event::JobArrival(JobId(1)));
+            e.schedule(2.0, Event::JobArrival(JobId(2)));
+            let times: Vec<f64> = std::iter::from_fn(|| e.pop()).map(|(t, _)| t).collect();
+            assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut e = Engine::new();
-        e.schedule(5.0, Event::JobArrival(JobId(1)));
-        e.schedule(5.0, Event::JobArrival(JobId(2)));
-        e.schedule(5.0, Event::JobArrival(JobId(3)));
-        let ids: Vec<u32> = std::iter::from_fn(|| e.pop())
-            .map(|(_, ev)| match ev {
-                Event::JobArrival(j) => j.0,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(ids, vec![1, 2, 3]);
+        for mut e in engines() {
+            e.schedule(5.0, Event::JobArrival(JobId(1)));
+            e.schedule(5.0, Event::JobArrival(JobId(2)));
+            e.schedule(5.0, Event::JobArrival(JobId(3)));
+            let ids: Vec<u32> = std::iter::from_fn(|| e.pop())
+                .map(|(_, ev)| match ev {
+                    Event::JobArrival(j) => j.0,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(ids, vec![1, 2, 3]);
+        }
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut e = Engine::new();
-        e.schedule(1.0, Event::Snapshot);
-        e.schedule(4.0, Event::Snapshot);
-        e.pop();
-        assert_eq!(e.now(), 1.0);
-        // schedule_after is relative to the advanced clock
-        e.schedule_after(1.5, Event::TaskFinish { server: ServerRef::initial(0), task: TaskRef { slot: 0, gen: 0 } });
-        let (t, _) = e.pop().unwrap();
-        assert_eq!(t, 2.5);
-        let (t, _) = e.pop().unwrap();
-        assert_eq!(t, 4.0);
+        for mut e in engines() {
+            e.schedule(1.0, Event::Snapshot);
+            e.schedule(4.0, Event::Snapshot);
+            e.pop();
+            assert_eq!(e.now(), 1.0);
+            // schedule_after is relative to the advanced clock
+            e.schedule_after(
+                1.5,
+                Event::TaskFinish {
+                    server: ServerRef::initial(0),
+                    task: TaskRef { slot: 0, gen: 0 },
+                },
+            );
+            let (t, _) = e.pop().unwrap();
+            assert_eq!(t, 2.5);
+            let (t, _) = e.pop().unwrap();
+            assert_eq!(t, 4.0);
+        }
     }
 
     #[test]
@@ -164,13 +645,97 @@ mod tests {
     }
 
     #[test]
-    fn counts_processed() {
+    #[should_panic(expected = "NaN event time")]
+    fn rejects_nan_times() {
         let mut e = Engine::new();
-        for i in 0..10 {
-            e.schedule(i as f64, Event::Snapshot);
+        e.schedule(f64::NAN, Event::Snapshot);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_infinite_times() {
+        let mut e = Engine::new();
+        e.schedule(f64::INFINITY, Event::Snapshot);
+    }
+
+    #[test]
+    fn counts_processed() {
+        for mut e in engines() {
+            e.schedule(0.0, Event::Snapshot);
+            for i in 0..10 {
+                e.schedule(i as f64, Event::Snapshot);
+            }
+            // 0.0 twice: equal-time entries count individually.
+            while e.pop().is_some() {}
+            assert_eq!(e.processed(), 11);
+            assert_eq!(e.pending(), 0);
         }
-        while e.pop().is_some() {}
-        assert_eq!(e.processed(), 10);
-        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn far_future_overflow_pops_in_order() {
+        for mut e in engines() {
+            // A revocation-horizon shape: near-term churn plus events
+            // far beyond any initial window.
+            e.schedule(5.0, Event::JobArrival(JobId(0)));
+            e.schedule(2.0e9, Event::JobArrival(JobId(1)));
+            e.schedule(1.0e9, Event::JobArrival(JobId(2)));
+            e.schedule(7.0, Event::JobArrival(JobId(3)));
+            let order: Vec<u32> = std::iter::from_fn(|| e.pop())
+                .map(|(_, ev)| match ev {
+                    Event::JobArrival(j) => j.0,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(order, vec![0, 3, 2, 1]);
+        }
+    }
+
+    #[test]
+    fn reopens_earlier_buckets_after_skip_ahead() {
+        for mut e in engines() {
+            e.schedule(1.0, Event::JobArrival(JobId(0)));
+            e.schedule(1000.0, Event::JobArrival(JobId(1)));
+            let (t, _) = e.pop().unwrap();
+            assert_eq!(t, 1.0);
+            // The drain has skipped far ahead to reach 1000.0's bucket;
+            // a near-term event must still pop first.
+            e.schedule(2.0, Event::JobArrival(JobId(2)));
+            assert_eq!(e.peek_time(), Some(2.0));
+            let (t, _) = e.pop().unwrap();
+            assert_eq!(t, 2.0);
+            let (t, _) = e.pop().unwrap();
+            assert_eq!(t, 1000.0);
+        }
+    }
+
+    #[test]
+    fn pop_batch_drains_maximal_equal_time_runs() {
+        for mut e in engines() {
+            e.schedule(1.0, Event::JobArrival(JobId(0)));
+            e.schedule(2.0, Event::JobArrival(JobId(1)));
+            e.schedule(2.0, Event::JobArrival(JobId(2)));
+            e.schedule(2.0, Event::JobArrival(JobId(3)));
+            e.schedule(3.0, Event::JobArrival(JobId(4)));
+            let mut batch = Vec::new();
+            assert_eq!(e.pop_batch(&mut batch), Some(1.0));
+            assert_eq!(batch.len(), 1);
+            assert_eq!(e.pop_batch(&mut batch), Some(2.0));
+            assert_eq!(batch.len(), 3);
+            assert_eq!(
+                batch,
+                vec![
+                    Event::JobArrival(JobId(1)),
+                    Event::JobArrival(JobId(2)),
+                    Event::JobArrival(JobId(3)),
+                ]
+            );
+            assert_eq!(e.pop_batch(&mut batch), Some(3.0));
+            assert_eq!(batch.len(), 1);
+            assert_eq!(e.pop_batch(&mut batch), None);
+            assert!(batch.is_empty(), "empty pop_batch must leave the scratch clear");
+            assert_eq!(e.processed(), 5);
+            assert_eq!(e.now(), 3.0);
+        }
     }
 }

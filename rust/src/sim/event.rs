@@ -4,7 +4,10 @@
 //! events popping off the [`crate::sim::Engine`] queue. Ordering is by
 //! time, then by insertion sequence number — so same-timestamp events are
 //! processed in the order they were scheduled, which keeps runs bitwise
-//! deterministic.
+//! deterministic. That `(time, seq)` order is representation-
+//! independent: the calendar queue, the reference heap, and the batch
+//! path (`Engine::pop_batch` draining a whole equal-time run at once)
+//! all dispatch the identical per-event sequence.
 
 use crate::util::{JobId, ServerRef, TaskRef};
 

@@ -37,6 +37,16 @@
 //! arrivals route before equal-time member events, and every RNG stream
 //! forks off per-member config seeds — a federated run is bit-identical
 //! across repeats and sweep thread counts.
+//!
+//! The earliest-next-event merge keys on [`World::next_event_time`]
+//! (the engine's O(1) `peek_time` — on the calendar queue the head is
+//! restored eagerly after every mutation precisely so this stays a
+//! `&self` constant-time read), and members advance via the
+//! single-event [`World::step`], never the batch path: routed arrivals
+//! must interleave *between* same-timestamp events exactly as the
+//! per-event merge dictates. A standalone `World::run` uses batch
+//! dispatch, which produces the identical event order — the N = 1
+//! pass-through golden pins stepped-vs-batched equivalence end to end.
 
 use crate::sim::{Rng, World};
 use crate::trace::{ArrivalSource, Job};

@@ -1,9 +1,11 @@
 //! Deterministic discrete-event simulation core: the event queue and
-//! clock ([`Engine`]), the event vocabulary ([`Event`]), the
-//! reproducible PRNG ([`Rng`]), the composable simulation [`World`]
-//! with its pluggable [`Component`]s, and the multi-cluster
-//! [`Federation`] that advances several worlds in global event-time
-//! order behind a pluggable [`JobRouter`].
+//! clock ([`Engine`] — a calendar queue with O(1) amortized push/pop
+//! and same-timestamp batch draining; the pre-calendar `BinaryHeap`
+//! survives as [`Engine::reference`] for golden comparisons), the
+//! event vocabulary ([`Event`]), the reproducible PRNG ([`Rng`]), the
+//! composable simulation [`World`] with its pluggable [`Component`]s,
+//! and the multi-cluster [`Federation`] that advances several worlds
+//! in global event-time order behind a pluggable [`JobRouter`].
 
 pub mod components;
 mod engine;

@@ -26,13 +26,20 @@
 //! trace-bound.
 //!
 //! **Stepping**: the event loop is exposed piecewise —
-//! [`World::start`] / [`World::step`] / [`World::finish`] — and
-//! [`World::run`] is exactly their composition, so a
+//! [`World::start`] / [`World::step`] / [`World::finish`] — so a
 //! [`crate::sim::Federation`] can interleave several worlds in global
 //! event-time order without perturbing a single world's event
 //! sequence. Externally-routed worlds use an inbox feed
 //! ([`World::new_inbox`] / [`World::inject_job`]) instead of pulling
-//! from a source they own.
+//! from a source they own. [`World::run`] drives the same per-event
+//! dispatch through [`World::step_batch`], which drains each maximal
+//! run of equal-time events from the engine in one call
+//! ([`Engine::pop_batch`]) and dispatches them in seq order — the
+//! event-for-event order (and therefore every report bit) is identical
+//! to the single-step loop, but the queue is touched once per unique
+//! timestamp instead of once per event, which matters under the
+//! paper's bursty arrivals where a burst lands hundreds of
+//! same-timestamp events.
 //!
 //! **Borrowed lookahead**: a world built over an eager [`Workload`]
 //! ([`World::from_workload`]) borrows each job straight from the
@@ -229,6 +236,9 @@ pub struct World<'w> {
     orphans: Vec<TaskRef>,
     prewarm_lr: Option<f64>,
     deferred: Vec<(Time, Event)>,
+    /// Reusable same-timestamp scratch for [`World::step_batch`] (one
+    /// allocation for the whole run, not one per batch).
+    batch: Vec<Event>,
 }
 
 impl<'w> World<'w> {
@@ -279,9 +289,14 @@ impl<'w> World<'w> {
     fn with_feed(feed: Feed<'w>, cluster: Cluster, rec: Recorder, seed: u64) -> Self {
         let mut root_rng = Rng::new(seed);
         let sched_rng = root_rng.fork(0x5C);
+        // Pending events are dominated by one `TaskFinish` per busy
+        // server, so the static fleet is the natural engine pre-size
+        // (the runner replaces this with a transient-aware hint when it
+        // knows the manager budget; any hint is bit-identical).
+        let engine = Engine::with_capacity(cluster.servers.len() + 64);
         World {
             cluster,
-            engine: Engine::new(),
+            engine,
             rec,
             feed,
             root_rng,
@@ -301,6 +316,7 @@ impl<'w> World<'w> {
             orphans: Vec::new(),
             prewarm_lr: None,
             deferred: Vec::new(),
+            batch: Vec::new(),
         }
     }
 
@@ -543,10 +559,55 @@ impl<'w> World<'w> {
 
     /// Process exactly one event, returning its timestamp (`None` once
     /// the engine has quiesced). A stale (generation-filtered) finish
-    /// still counts as a processed step.
+    /// still counts as a processed step. The federation steps member
+    /// worlds through this (never [`World::step_batch`]): its global
+    /// merge interleaves members *per event*, and routed arrivals must
+    /// be injected between same-timestamp events exactly as the seed
+    /// did.
     pub fn step(&mut self) -> Option<Time> {
         let (now, event) = self.engine.pop()?;
         let mut components = std::mem::take(&mut self.components);
+        self.dispatch_event(now, event, &mut components);
+        self.components = components;
+        Some(now)
+    }
+
+    /// Process every event sharing the next timestamp in one call,
+    /// returning that timestamp (`None` once the engine has quiesced).
+    /// Events dispatch in exactly the `(time, seq)` order of a
+    /// [`World::step`] loop — anything a handler schedules *at* the
+    /// current timestamp has a higher seq than every drained event, so
+    /// it forms the next batch, precisely where a per-event pop would
+    /// have placed it. [`World::run`] is built on this; the per-batch
+    /// saving is one engine head-restore per unique timestamp instead
+    /// of one per event.
+    pub fn step_batch(&mut self) -> Option<Time> {
+        let mut batch = std::mem::take(&mut self.batch);
+        let popped = self.engine.pop_batch(&mut batch);
+        let Some(now) = popped else {
+            self.batch = batch;
+            return None;
+        };
+        let mut components = std::mem::take(&mut self.components);
+        for &event in &batch {
+            self.dispatch_event(now, event, &mut components);
+        }
+        self.components = components;
+        self.batch = batch;
+        Some(now)
+    }
+
+    /// The per-event core shared by [`World::step`] and
+    /// [`World::step_batch`]: arrival intake, cluster lifecycle,
+    /// component dispatch, completion accounting. A stale
+    /// (generation-filtered) finish returns before components see the
+    /// event.
+    fn dispatch_event(
+        &mut self,
+        now: Time,
+        event: Event,
+        components: &mut [Box<dyn Component + 'w>],
+    ) {
         // ---- core pre-dispatch: arrival intake + cluster lifecycle ----
         self.arrived.clear();
         self.orphans.clear();
@@ -592,8 +653,7 @@ impl<'w> World<'w> {
                     FinishOutcome::Stale => {
                         // Filtered pre-dispatch: components never see
                         // the event (the old loop's `continue`).
-                        self.components = components;
-                        return Some(now);
+                        return;
                     }
                     FinishOutcome::Finished { job, is_long, drained } => {
                         if drained {
@@ -677,8 +737,6 @@ impl<'w> World<'w> {
                 c.on_long_change(now, &mut ctx);
             }
         }
-        self.components = components;
-        Some(now)
     }
 
     /// Close out the run after the engine quiesces: retire transients
@@ -711,13 +769,15 @@ impl<'w> World<'w> {
         self.cluster.check_invariants();
     }
 
-    /// Drive the event loop to quiescence: exactly
-    /// [`World::start`] + a [`World::step`] loop + [`World::finish`],
-    /// so a stepped (federated) world and a plain `run()` are the same
-    /// code path event for event.
+    /// Drive the event loop to quiescence: [`World::start`] + a
+    /// [`World::step_batch`] loop + [`World::finish`]. The batch loop
+    /// dispatches events in exactly the order of a [`World::step`]
+    /// loop (see [`World::step_batch`]), so a stepped (federated)
+    /// world and a plain `run()` stay bit-identical event for event —
+    /// pinned by the N=1 federation passthrough golden.
     pub fn run(&mut self) {
         self.start();
-        while self.step().is_some() {}
+        while self.step_batch().is_some() {}
         self.finish();
     }
 }

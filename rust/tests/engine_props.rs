@@ -1,0 +1,324 @@
+//! Order-equivalence properties for the calendar-queue event engine.
+//!
+//! The calendar queue must pop in *exactly* the `(time, seq)` order of
+//! the `BinaryHeap` it replaced — that total order is what every
+//! determinism golden rests on. These tests drive randomized and
+//! adversarial schedule/pop interleavings (equal-time tie storms,
+//! far-future overflow events, rollover boundaries, skip-ahead reopen
+//! paths) against the reference heap engine kept in-tree
+//! ([`Engine::reference`]), and pin the panic contract for NaN /
+//! infinite / past times.
+
+use cloudcoaster::sim::{Engine, Event, Rng};
+use cloudcoaster::testkit::{property, uniform, usize_in};
+use cloudcoaster::util::JobId;
+
+/// Distinct payloads so an order mismatch is visible even among
+/// equal-time events (seq-order check).
+fn ev(i: u32) -> Event {
+    Event::JobArrival(JobId(i))
+}
+
+/// A randomized schedule/pop script replayed identically onto several
+/// engines. Times are engine-clock-relative offsets, so the script is
+/// valid (never past-scheduling) regardless of representation.
+enum Op {
+    /// Schedule at `now + offset` (offset >= 0).
+    Push(f64),
+    /// Re-schedule at exactly the last pushed absolute time, if still
+    /// >= now (tie storms across interleaved pops).
+    PushTie,
+    Pop,
+    PopBatch,
+}
+
+/// Generate a script mixing dense MMPP-ish churn, exact-tie storms,
+/// far-future overflow pushes (revocation-horizon shape) and drain
+/// phases that force rollovers and the skip-ahead reopen path.
+fn random_script(rng: &mut Rng, len: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(len);
+    for _ in 0..len {
+        match rng.below(10) {
+            0..=3 => {
+                // Near-term churn at two very different scales so the
+                // self-tuned width is wrong for part of the stream.
+                let mean = if rng.below(2) == 0 { 0.3 } else { 300.0 };
+                ops.push(Op::Push(rng.exponential(mean)));
+            }
+            4 => ops.push(Op::Push(0.0)), // at the current clock
+            5 => ops.push(Op::PushTie),
+            6 => {
+                // Far future: lands in the overflow rung, popped only
+                // after a window rollover.
+                ops.push(Op::Push(1e6 + uniform(rng, 0.0, 1e9)));
+            }
+            _ => {
+                if rng.below(4) == 0 {
+                    ops.push(Op::PopBatch);
+                } else {
+                    ops.push(Op::Pop);
+                }
+            }
+        }
+    }
+    ops
+}
+
+/// Replay `script` on `engine`, recording every popped `(time-bits,
+/// event)` and checking `peek_time` coherence throughout, then drain to
+/// quiescence. `PopBatch` flattens into the same per-event stream.
+fn replay(mut engine: Engine, script: &[Op]) -> Vec<(u64, Event)> {
+    let mut popped = Vec::new();
+    let mut batch = Vec::new();
+    let mut last_abs: Option<f64> = None;
+    for op in script {
+        match op {
+            Op::Push(offset) => {
+                let at = engine.now() + offset;
+                engine.schedule(at, ev(popped.len() as u32 + engine.pending() as u32));
+                last_abs = Some(at);
+            }
+            Op::PushTie => {
+                if let Some(at) = last_abs {
+                    if at >= engine.now() {
+                        engine.schedule(at, ev(popped.len() as u32 + engine.pending() as u32));
+                    }
+                }
+            }
+            Op::Pop => {
+                let peeked = engine.peek_time();
+                if let Some((t, e)) = engine.pop() {
+                    assert_eq!(peeked, Some(t), "peek_time disagreed with pop");
+                    popped.push((t.to_bits(), e));
+                }
+            }
+            Op::PopBatch => {
+                let peeked = engine.peek_time();
+                if let Some(t) = engine.pop_batch(&mut batch) {
+                    assert_eq!(peeked, Some(t), "peek_time disagreed with pop_batch");
+                    assert!(!batch.is_empty(), "nonempty batch for a popped timestamp");
+                    for &e in &batch {
+                        popped.push((t.to_bits(), e));
+                    }
+                }
+            }
+        }
+    }
+    while let Some((t, e)) = engine.pop() {
+        popped.push((t.to_bits(), e));
+    }
+    assert_eq!(engine.pending(), 0);
+    assert_eq!(engine.processed(), popped.len() as u64);
+    popped
+}
+
+/// The payload-id scheme in `replay` depends only on (pops so far,
+/// pending count), both of which are representation-independent — so
+/// two engines replaying the same script assign identical payloads and
+/// their pop streams are comparable element-for-element.
+#[test]
+fn randomized_interleavings_match_heap_oracle() {
+    property("engine/calendar_matches_heap_oracle", 60, |rng| {
+        let len = usize_in(rng, 50, 1200);
+        let script = random_script(rng, len);
+        let oracle = replay(Engine::reference(), &script);
+        // Several calendar pre-sizes: a degenerate hint forces early
+        // grows; a huge one forces shrink passes on drain.
+        for hint in [1usize, 64, 1 << 14] {
+            let got = replay(Engine::with_capacity(hint), &script);
+            assert_eq!(got, oracle, "calendar(hint={hint}) diverged from heap oracle");
+        }
+    });
+}
+
+#[test]
+fn tie_storms_preserve_insertion_order() {
+    property("engine/tie_storm_seq_order", 30, |rng| {
+        let mut cal = Engine::with_capacity(usize_in(rng, 1, 512));
+        let mut heap = Engine::reference();
+        let storms = usize_in(rng, 1, 8);
+        let mut id = 0u32;
+        for s in 0..storms {
+            let t = (s * 7) as f64 + uniform(rng, 0.0, 3.0);
+            let width = usize_in(rng, 1, 400);
+            for _ in 0..width {
+                for e in [&mut cal, &mut heap] {
+                    e.schedule(t, ev(id));
+                }
+                id += 1;
+            }
+            // Interleave pops mid-storm so the open bucket is partially
+            // consumed when the next burst lands.
+            if rng.below(2) == 0 {
+                assert_eq!(cal.pop(), heap.pop());
+            }
+        }
+        let mut last: Option<(u64, u32)> = None;
+        loop {
+            let (c, h) = (cal.pop(), heap.pop());
+            assert_eq!(c, h);
+            let Some((t, e)) = c else { break };
+            let Event::JobArrival(j) = e else { unreachable!() };
+            if let Some((lt, lj)) = last {
+                assert!(
+                    t.to_bits() > lt || j.0 > lj,
+                    "equal-time events out of insertion order"
+                );
+            }
+            last = Some((t.to_bits(), j.0));
+        }
+    });
+}
+
+#[test]
+fn rollover_and_reopen_boundaries_match_oracle() {
+    property("engine/rollover_reopen", 30, |rng| {
+        // Sparse far-apart events force repeated rollovers; after each
+        // pop, a near-term event exercises the reopen path (scheduling
+        // behind a skipped-ahead open bucket).
+        let mut script = Vec::new();
+        let clusters = usize_in(rng, 2, 12);
+        for _ in 0..clusters {
+            script.push(Op::Push(uniform(rng, 1e4, 1e8)));
+        }
+        for _ in 0..clusters {
+            script.push(Op::Pop);
+            script.push(Op::Push(uniform(rng, 0.0, 2.0)));
+            script.push(Op::PushTie);
+        }
+        let oracle = replay(Engine::reference(), &script);
+        let got = replay(Engine::with_capacity(usize_in(rng, 1, 64)), &script);
+        assert_eq!(got, oracle);
+    });
+}
+
+#[test]
+fn pop_batch_is_pop_loop_on_both_engines() {
+    property("engine/pop_batch_equivalence", 30, |rng| {
+        let len = usize_in(rng, 50, 600);
+        let script: Vec<Op> = random_script(rng, len)
+            .into_iter()
+            .map(|op| if matches!(op, Op::PopBatch) { Op::Pop } else { op })
+            .collect();
+        let batched: Vec<Op> = script
+            .iter()
+            .map(|op| match op {
+                Op::Pop => Op::PopBatch,
+                Op::Push(x) => Op::Push(*x),
+                Op::PushTie => Op::PushTie,
+                Op::PopBatch => unreachable!(),
+            })
+            .collect();
+        // pop_batch drains whole timestamp runs, so the batched replay
+        // pops *at least* as much per op — but the drain phase at the
+        // end of `replay` equalizes total coverage, and the per-event
+        // stream must be identical on both representations.
+        let per_pop_cal = replay(Engine::new(), &script);
+        let per_pop_heap = replay(Engine::reference(), &script);
+        assert_eq!(per_pop_cal, per_pop_heap);
+        let batch_cal = replay(Engine::new(), &batched);
+        let batch_heap = replay(Engine::reference(), &batched);
+        assert_eq!(batch_cal, batch_heap);
+    });
+}
+
+#[test]
+fn drain_only_batches_have_strictly_increasing_times() {
+    property("engine/batch_maximality", 20, |rng| {
+        let mut e = Engine::with_capacity(usize_in(rng, 1, 128));
+        let n = usize_in(rng, 10, 300);
+        for i in 0..n {
+            // Coarse-quantized times generate plenty of exact ties.
+            let t = (usize_in(rng, 0, 40) as f64) * 2.5;
+            e.schedule(t, ev(i as u32));
+        }
+        let mut batch = Vec::new();
+        let mut last = f64::NEG_INFINITY;
+        let mut total = 0;
+        while let Some(t) = e.pop_batch(&mut batch) {
+            assert!(
+                t > last,
+                "maximal same-timestamp runs imply strictly increasing batch times"
+            );
+            total += batch.len();
+            last = t;
+        }
+        assert_eq!(total, n);
+    });
+}
+
+#[test]
+#[should_panic(expected = "scheduling into the past")]
+fn calendar_rejects_past_times() {
+    let mut e = Engine::new();
+    e.schedule(10.0, Event::Snapshot);
+    e.pop();
+    e.schedule(9.0, Event::Snapshot);
+}
+
+#[test]
+#[should_panic(expected = "scheduling into the past")]
+fn reference_rejects_past_times() {
+    let mut e = Engine::reference();
+    e.schedule(10.0, Event::Snapshot);
+    e.pop();
+    e.schedule(9.0, Event::Snapshot);
+}
+
+#[test]
+#[should_panic(expected = "NaN event time")]
+fn calendar_rejects_nan_times() {
+    Engine::new().schedule(f64::NAN, Event::Snapshot);
+}
+
+#[test]
+#[should_panic(expected = "NaN event time")]
+fn reference_rejects_nan_times() {
+    Engine::reference().schedule(f64::NAN, Event::Snapshot);
+}
+
+#[test]
+#[should_panic(expected = "non-finite event time")]
+fn calendar_rejects_infinite_times() {
+    Engine::new().schedule(f64::INFINITY, Event::Snapshot);
+}
+
+/// End-to-end pin: a full simulation on the reference engine is
+/// bit-identical to the calendar engine on every distilled field (the
+/// CI smoke diffs the same thing through the CLI).
+#[test]
+fn reference_engine_run_is_bit_identical() {
+    use cloudcoaster::coordinator::runner::{simulate, SimConfig};
+    use cloudcoaster::sched::Hybrid;
+    use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
+    use cloudcoaster::transient::{Budget, ManagerConfig};
+
+    let mut p = YahooLikeParams::default();
+    p.horizon = 3000.0;
+    let w = yahoo_like(&p, &mut Rng::new(11));
+    let run = |reference: bool| {
+        let mut cfg = SimConfig {
+            n_general: 120,
+            n_short_reserved: 4,
+            reference_engine: reference,
+            ..Default::default()
+        };
+        cfg.manager = Some(ManagerConfig {
+            threshold: 0.6,
+            ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0))
+        });
+        let mut sched = Hybrid::cloudcoaster(2.0);
+        simulate(&w, &mut sched, &cfg)
+    };
+    let cal = run(false);
+    let heap = run(true);
+    assert_eq!(cal.events, heap.events);
+    assert_eq!(cal.end_time.to_bits(), heap.end_time.to_bits());
+    assert_eq!(cal.rec.tasks_finished, heap.rec.tasks_finished);
+    assert_eq!(cal.rec.short_delays, heap.rec.short_delays);
+    assert_eq!(cal.rec.long_delays, heap.rec.long_delays);
+    assert_eq!(cal.rec.transients_requested, heap.rec.transients_requested);
+    assert_eq!(cal.manager_stats, heap.manager_stats);
+    assert_eq!(cal.peak_resident_tasks, heap.peak_resident_tasks);
+    assert_eq!(cal.peak_resident_servers, heap.peak_resident_servers);
+}
