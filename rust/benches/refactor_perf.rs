@@ -225,6 +225,38 @@ fn main() {
         entries.push(json_entry("federation_sequential_baseline_2x", &r));
     }
 
+    // ---- PDES: 64-member federation, serial merge vs windowed -------
+    // A wide pass-through federation is the PDES sweet spot: members are
+    // uncoupled (no routed feeds, no pooled budget), so the conservative
+    // window covers each member's whole run and the only serial work is
+    // the start/finish bookkeeping. Reports are bit-identical; the delta
+    // is the wall-clock of advancing 64 member worlds on 1 vs N threads.
+    {
+        use cloudcoaster::coordinator::run_federation;
+        use cloudcoaster::coordinator::scenario::FederationSpec;
+
+        let mut base = bench_common::bench_base();
+        if let cloudcoaster::coordinator::config::WorkloadSource::YahooLike(p) =
+            &mut base.workload
+        {
+            // 64 members multiply the event volume: shorten each.
+            p.horizon = 900.0;
+        }
+        let threads = bench_common::default_threads();
+        for (label, pdes_threads) in
+            [("pdes_fed64_serial", 0usize), ("pdes_fed64_parallel", threads)]
+        {
+            let mut cfg = base.clone();
+            cfg.federation =
+                Some(FederationSpec { clusters: 64, pdes_threads, ..Default::default() });
+            let r = bench(&format!("refactor/{label}"), 1, 5, || {
+                let out = run_federation(&cfg).unwrap();
+                black_box(out.runs.len());
+            });
+            entries.push(json_entry(label, &r));
+        }
+    }
+
     // ---- event engine: calendar vs reference heap, end-to-end -------
     // The micro numbers live in BENCH_engine.json (micro_hotpath); this
     // is the whole-simulation view of the same swap — identical wiring

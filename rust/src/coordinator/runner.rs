@@ -468,7 +468,14 @@ pub fn run_federation(cfg: &ExperimentConfig) -> Result<FederationOutcome> {
         .map(|_| crate::coordinator::report::build_scheduler(cfg.scheduler, cfg.probe_ratio))
         .collect();
     let mut federation = build_federation(cfg, &spec, &mut scheds)?;
-    federation.run();
+    // `pdes_threads = 0` (the default) runs the serial reference merge;
+    // any N >= 1 runs conservative-window PDES — bit-identical reports
+    // either way, so the choice is purely a wall-clock knob.
+    if spec.pdes_threads > 0 {
+        federation.run_pdes(spec.pdes_threads);
+    } else {
+        federation.run();
+    }
     // Read the cap off the federation: the builder that sized the pools
     // recorded it, so the reported bound is the enforced bound.
     let shared_cap = federation.shared_cap();

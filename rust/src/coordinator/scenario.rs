@@ -355,7 +355,8 @@ fn key_str<'t>(t: &'t Table, k: &str) -> Result<Option<&'t str>> {
 
 /// Every key the `[federation]` TOML section understands (closed set:
 /// unknown keys are config errors, not silent no-ops).
-const FEDERATION_KEYS: &[&str] = &["clusters", "router", "budget_sharing", "stagger"];
+const FEDERATION_KEYS: &[&str] =
+    &["clusters", "router", "budget_sharing", "stagger", "pdes_threads"];
 
 /// Which [`crate::sim::JobRouter`] fronts a federation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -444,6 +445,12 @@ pub struct FederationSpec {
     /// so bursts sweep across the federation instead of striking every
     /// cluster at once.
     pub stagger: f64,
+    /// Worker threads for conservative-window PDES inside the one
+    /// federated run (`Federation::run_pdes`). `0` — the default — runs
+    /// the serial reference merge; any `N >= 1` runs the windowed path
+    /// (bit-identical reports at every value, pinned by
+    /// `tests/federation_golden.rs`).
+    pub pdes_threads: usize,
 }
 
 impl Default for FederationSpec {
@@ -453,6 +460,7 @@ impl Default for FederationSpec {
             router: RouterKind::PassThrough,
             budget_sharing: BudgetSharing::None,
             stagger: 0.0,
+            pdes_threads: 0,
         }
     }
 }
@@ -467,6 +475,12 @@ impl FederationSpec {
         }
         if !(self.stagger >= 0.0 && self.stagger.is_finite()) {
             bail!("federation.stagger must be finite and >= 0 (got {})", self.stagger);
+        }
+        if self.pdes_threads > 512 {
+            bail!(
+                "federation.pdes_threads capped at 512 (got {}); 0 = serial merge",
+                self.pdes_threads
+            );
         }
         Ok(())
     }
@@ -501,6 +515,11 @@ impl FederationSpec {
         }
         if let Some(v) = t.get("federation.stagger") {
             spec.stagger = v.as_f64().context("federation.stagger must be a number")?;
+        }
+        if let Some(v) = t.get("federation.pdes_threads") {
+            spec.pdes_threads = v
+                .as_usize()
+                .context("federation.pdes_threads must be a non-negative integer")?;
         }
         spec.validate()?;
         Ok(Some(spec))
@@ -548,6 +567,7 @@ pub fn named_federation(
                 router: RouterKind::PassThrough,
                 budget_sharing: BudgetSharing::Pooled,
                 stagger: 0.20 * h,
+                ..Default::default()
             })
         }
         _ => None,

@@ -40,13 +40,29 @@
 //!   `run()` is exactly their composition), which is what the
 //!   multi-cluster [`sim::Federation`] builds on: N member worlds —
 //!   each with its own cluster, scenario pipeline, recorder and
-//!   seed-forked RNG streams — advanced in global event-time order by
-//!   an earliest-next-event merge, with a pluggable [`sim::JobRouter`]
-//!   (pass-through / round-robin / least-queued / class-split)
-//!   dispatching arrivals across clusters and an optional
-//!   [`transient::SharedBudget`] pooling one transient budget across
-//!   all of them. An N = 1 pass-through federation is bit-identical
-//!   to the plain world. Together with the cluster's generational
+//!   seed-forked RNG streams — advanced in global event-time order,
+//!   with a pluggable [`sim::JobRouter`] (pass-through / round-robin /
+//!   least-queued / class-split) dispatching arrivals across clusters
+//!   and an optional [`transient::SharedBudget`] pooling one transient
+//!   budget across all of them. The federation runs two ways:
+//!   `Federation::run` is the serial reference — an
+//!   earliest-next-event merge stepping one member event at a time —
+//!   and `Federation::run_pdes(threads)` is conservative-window
+//!   parallel discrete-event execution over the same members: each
+//!   round computes a safe horizon (the min over the routers' next
+//!   feed-arrival lower bound and pooled-coupled members' next event
+//!   times), advances every uncoupled member's events strictly below
+//!   it concurrently on scoped threads, then drains the boundary
+//!   through the exact serial merge loop. Members only touch their own
+//!   engine/cluster/recorder inside a window, cross-member state
+//!   (fleet and cost watermarks) is replayed from per-step change
+//!   journals in the serial `(time, member index)` order, and pooled
+//!   members never advance inside windows — so every report field is
+//!   bit-identical to the serial merge at any thread count, and the
+//!   serial path survives as the golden reference (mirroring
+//!   `Engine::reference`). An N = 1 pass-through federation is
+//!   bit-identical to the plain world. Together with the cluster's
+//!   generational
 //!   task and server arenas and the recorder's fixed-memory delay
 //!   sketches, job records, task slots, server slots and per-sample
 //!   metrics are all O(active), not O(trace) (`peak_resident_jobs` /
@@ -92,7 +108,10 @@
 //!   (storm intensity, splice points) and federation axes (router,
 //!   budget sharing) sweep like any other grid axis. A `[federation]`
 //!   TOML block or `--clusters N` / `--scenario federated-burst`
-//!   resolves to a [`coordinator::FederationSpec`]; the canonical
+//!   resolves to a [`coordinator::FederationSpec`]
+//!   (`pdes_threads` / `--pdes-threads N` selects the
+//!   conservative-window parallel path, 0 the serial reference merge —
+//!   reports are bit-identical either way); the canonical
 //!   member wiring is [`coordinator::build_federation`] /
 //!   [`coordinator::run_federation`], distilled into per-cluster
 //!   reports plus a merged aggregate
@@ -113,8 +132,10 @@
 //!
 //! Determinism is load-bearing: `tests/federation_golden.rs` pins the
 //! N = 1 pass-through federation bit-exactly to the plain world (plus
-//! N = 2 determinism, sweep-thread invariance and the pooled-budget
-//! cap invariant), `tests/golden_determinism.rs` pins the
+//! N = 2 determinism, sweep-thread invariance, the pooled-budget
+//! cap invariant, and the conservative-window PDES path bit-exactly
+//! to the serial merge at 1/2/8 worker threads for every router and
+//! budget-sharing mode), `tests/golden_determinism.rs` pins the
 //! `World` decomposition bit-exactly to the original monolithic runner,
 //! `tests/streaming_golden.rs` pins the streaming arrival path
 //! bit-exactly to the eager replay (and the combinators to fixed

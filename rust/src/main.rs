@@ -4,7 +4,7 @@
 //! cloudcoaster run      [--config FILE] [--scheduler KIND] [--r R] [--seed N]
 //!                       [--scenario default|managerless|burst-storm|federated-burst]
 //!                       [--clusters N] [--router KIND] [--budget-sharing MODE]
-//!                       [--reference-engine true|false]
+//!                       [--pdes-threads N] [--reference-engine true|false]
 //! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3] [--threads N]
 //! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler|storm|router|budget [--threads N]
 //! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
@@ -26,6 +26,10 @@
 //! `--budget-sharing none|split|pooled` couples the transient budgets).
 //! A federated run prints one summary line per cluster plus the
 //! aggregate (merged delay histograms, summed cost ledgers).
+//! `--pdes-threads N` advances the member worlds with
+//! conservative-window parallel execution on N worker threads inside
+//! the one run; 0 (the default) keeps the serial reference merge.
+//! Reports are bit-identical either way — only wall-clock changes.
 //!
 //! Sweeps and ablations fan their runs out across `--threads` OS threads
 //! (default: all cores). Simulation results are bit-identical at any
@@ -144,6 +148,14 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(b) = args.get("budget-sharing") {
         let mut fed = cfg.federation.clone().unwrap_or_default();
         fed.budget_sharing = cloudcoaster::coordinator::BudgetSharing::parse(b)?;
+        if !had_explicit_clusters {
+            fed.clusters = 2;
+        }
+        cfg.federation = Some(fed);
+    }
+    if let Some(n) = args.get("pdes-threads") {
+        let mut fed = cfg.federation.clone().unwrap_or_default();
+        fed.pdes_threads = n.parse().context("--pdes-threads")?;
         if !had_explicit_clusters {
             fed.clusters = 2;
         }

@@ -17,7 +17,11 @@ pub struct SchedCtx<'a> {
 
 /// A job-placement policy. Schedulers only *place* tasks onto server
 /// queues; execution, queue discipline and metrics are the cluster's job.
-pub trait Scheduler {
+///
+/// `Send` so a member world (which borrows its scheduler exclusively)
+/// can advance on a federation PDES worker thread; schedulers are plain
+/// policy state, so the bound costs implementors nothing.
+pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
 
     /// Place all tasks of `job` (already materialised in the task arena as

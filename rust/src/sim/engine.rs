@@ -558,9 +558,22 @@ impl Engine {
         Some(t)
     }
 
+    /// [`Engine::pop_batch`], bounded: drain the next equal-time run
+    /// only when its timestamp lies strictly *before* `horizon`;
+    /// otherwise pop nothing and return `None` (`out` is untouched, the
+    /// clock does not advance). The federation's conservative-window
+    /// PDES drains member engines through this — events at or past the
+    /// window horizon belong to the serial merge boundary.
+    pub fn pop_batch_before(&mut self, horizon: Time, out: &mut Vec<Event>) -> Option<Time> {
+        match self.peek_time() {
+            Some(t) if t < horizon => self.pop_batch(out),
+            _ => None,
+        }
+    }
+
     /// Time of the next event without popping — O(1) on both
     /// representations (the federation merge calls this once per member
-    /// per step).
+    /// per step, and the PDES horizon computation keys on it).
     pub fn peek_time(&self) -> Option<Time> {
         match &self.queue {
             Queue::Calendar(c) => c.peek().map(|e| e.at.0),
@@ -610,6 +623,29 @@ mod tests {
                 })
                 .collect();
             assert_eq!(ids, vec![1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn pop_batch_before_respects_horizon() {
+        for mut e in engines() {
+            e.schedule(1.0, Event::JobArrival(JobId(1)));
+            e.schedule(1.0, Event::JobArrival(JobId(2)));
+            e.schedule(2.0, Event::JobArrival(JobId(3)));
+            let mut out = Vec::new();
+            // Horizon at the head time: strictly-before means no drain,
+            // no clock movement.
+            assert_eq!(e.pop_batch_before(1.0, &mut out), None);
+            assert_eq!(e.now(), 0.0);
+            assert_eq!(e.processed(), 0);
+            // Horizon past the head: drains exactly the equal-time run.
+            assert_eq!(e.pop_batch_before(1.5, &mut out), Some(1.0));
+            assert_eq!(out.len(), 2);
+            assert_eq!(e.now(), 1.0);
+            // The 2.0 event sits at the next horizon, so again nothing.
+            assert_eq!(e.pop_batch_before(2.0, &mut out), None);
+            assert_eq!(e.pop_batch_before(f64::INFINITY, &mut out), Some(2.0));
+            assert_eq!(e.pop_batch_before(f64::INFINITY, &mut out), None);
         }
     }
 

@@ -41,13 +41,66 @@
 //! The earliest-next-event merge keys on [`World::next_event_time`]
 //! (the engine's O(1) `peek_time` — on the calendar queue the head is
 //! restored eagerly after every mutation precisely so this stays a
-//! `&self` constant-time read), and members advance via the
-//! single-event [`World::step`], never the batch path: routed arrivals
-//! must interleave *between* same-timestamp events exactly as the
-//! per-event merge dictates. A standalone `World::run` uses batch
-//! dispatch, which produces the identical event order — the N = 1
-//! pass-through golden pins stepped-vs-batched equivalence end to end.
+//! `&self` constant-time read), and the serial merge advances members
+//! via the single-event [`World::step`]: routed arrivals must
+//! interleave *between* same-timestamp events exactly as the per-event
+//! merge dictates. A standalone `World::run` uses batch dispatch, which
+//! produces the identical event order — the N = 1 pass-through golden
+//! pins stepped-vs-batched equivalence end to end.
+//!
+//! # Conservative-window PDES
+//!
+//! [`Federation::run_pdes`] executes the *same* merge with member
+//! worlds advancing concurrently on scoped threads. The serial merge
+//! order restricted to any window in which no cross-member interaction
+//! occurs is just the `(time, member index)`-lexicographic interleaving
+//! of the members' own event sequences — and each member's sequence is
+//! interleaving-independent, because members only ever touch their own
+//! engine, cluster and recorder. Cross-member interaction happens at
+//! exactly three points, and each yields a conservative horizon term:
+//!
+//! 1. **Routed arrivals** — an arrival is injected when global time
+//!    reaches it, so the global feed's one-job lookahead (cf.
+//!    [`World::pending_arrival`]) lower-bounds the next injection.
+//! 2. **Pooled shared budgets** — any event of a member whose
+//!    [`SharedBudget`] handle is shared with another member
+//!    ([`SharedBudget::same_pool`]) can take or release pool units in
+//!    contention-sensitive order, so such a member's own
+//!    `next_event_time` is a horizon term: pooled-coupled members only
+//!    ever step in the serial boundary phase, which preserves the exact
+//!    serial take/release order (and Σ(active + provisioning) ≤ K). A
+//!    *split* pool is touched only by its own member plus that member's
+//!    release bookkeeping, which runs inside the member's own window —
+//!    per-pool operation order is again exactly serial.
+//! 3. **The fleet watermarks** — the serial merge samples
+//!    Σ fleet / Σ active after *every* member step. Window advance logs
+//!    a change point per step whose fleet or active-cost value changed
+//!    (bitwise, so `-0.0` vs `0.0` is a change), and the barrier
+//!    replays all members' change points in `(time, member index)`
+//!    order, recomputing both sums with the serial fold — steps that
+//!    changed neither leave the sums bit-identical, so skipping them
+//!    cannot move a maximum.
+//!
+//! Each PDES iteration computes `H = min(next routed arrival, min
+//! pooled-coupled next event)`, advances every uncoupled member through
+//! events strictly below `H` in parallel (members without a transient
+//! manager have identically-zero watermark contributions and drain via
+//! the batch path; managed members step per event to sample
+//! watermarks), replays the journals at the barrier in member-index
+//! order, then runs the ordinary serial merge for everything at `H`
+//! (arrivals before equal-time events, lowest member index first).
+//! `H = None` — no arrivals pending, no pooled coupling — drains every
+//! member to quiescence fully in parallel. Every report field is
+//! bit-identical to [`Federation::run`] at any thread count (pinned by
+//! `tests/federation_golden.rs`); the serial merge survives as the
+//! reference mode, mirroring `Engine::reference`. With *pooled* sharing
+//! every member is budget-coupled, so `run_pdes` degenerates to the
+//! serial boundary phase — correct by construction, parallel speedup
+//! only for `none`/`split` sharing.
 
+use std::sync::Mutex;
+
+use crate::sim::components::TransientManagerComponent;
 use crate::sim::{Rng, World};
 use crate::trace::{ArrivalSource, Job};
 use crate::transient::SharedBudget;
@@ -202,12 +255,95 @@ pub struct Federation<'w> {
     /// Last reconciled fleet (active + provisioning transients) per
     /// member — the release-side bookkeeping for the shared pools.
     last_fleet: Vec<usize>,
+    /// Last observed active-transient cost value per member — the PDES
+    /// barrier replays watermark change points against this mirror, so
+    /// it must track `rec.cost.active_now()` exactly (maintained by
+    /// `reconcile` and the journal replay).
+    last_active: Vec<f64>,
     /// High-water mark of the summed fleet across members (the
     /// cross-cluster cap invariant: never exceeds a pooled cap).
     peak_total_fleet: usize,
     /// High-water mark of summed *active* transients (report headline).
     peak_total_active: f64,
     steps: u64,
+    /// Reusable routing-view scratch: the router sees every member's
+    /// queue state per arrival, rebuilt in place instead of allocated.
+    view_scratch: Vec<MemberView>,
+}
+
+/// One watermark change point observed inside a parallel window: member
+/// state *after* a step whose fleet or active-cost value changed.
+#[derive(Clone, Copy, Debug)]
+struct FleetChange {
+    time: Time,
+    fleet: usize,
+    active: f64,
+}
+
+/// A unit of parallel window work: one member world plus the state its
+/// window loop threads through (shared-pool handle for release
+/// bookkeeping, last reconciled fleet/active for change detection).
+struct WindowTask<'t, 'w> {
+    index: usize,
+    world: &'t mut World<'w>,
+    shared: Option<SharedBudget>,
+    managed: bool,
+    fleet: usize,
+    active_bits: u64,
+}
+
+/// What a window hands back to the barrier.
+struct WindowOutcome {
+    index: usize,
+    steps: u64,
+    changes: Vec<FleetChange>,
+}
+
+/// Advance one member through every event strictly below `horizon`
+/// (`None` = to quiescence). Runs on a PDES worker thread; everything
+/// it touches is member-local except the member's own shared-pool
+/// handle, which in split mode no other thread touches.
+///
+/// Managed members (wired transient manager) step per event: the serial
+/// merge samples the fleet watermarks after every step, so the journal
+/// must too. Unmanaged members have identically-zero fleet and active
+/// cost for the whole run, so the batch path (one engine head-restore
+/// per unique timestamp, bit-identical event order — pinned by the
+/// N = 1 pass-through golden) drains them with an empty journal.
+fn advance_window(task: WindowTask, horizon: Option<Time>) -> WindowOutcome {
+    let world = task.world;
+    let before = world.engine.processed();
+    let mut changes = Vec::new();
+    if task.managed {
+        let mut fleet = task.fleet;
+        let mut active_bits = task.active_bits;
+        loop {
+            match (world.next_event_time(), horizon) {
+                (None, _) => break,
+                (Some(t), Some(h)) if t >= h => break,
+                _ => {}
+            }
+            let t = world.step().expect("peeked event vanished");
+            let new_fleet = {
+                let c = &world.cluster;
+                c.transient_pool.len() + c.provisioning_count()
+            };
+            if new_fleet < fleet {
+                if let Some(shared) = &task.shared {
+                    shared.release(fleet - new_fleet);
+                }
+            }
+            let active = world.rec.cost.active_now();
+            if new_fleet != fleet || active.to_bits() != active_bits {
+                changes.push(FleetChange { time: t, fleet: new_fleet, active });
+                fleet = new_fleet;
+                active_bits = active.to_bits();
+            }
+        }
+    } else {
+        world.run_until(horizon.unwrap_or(f64::INFINITY));
+    }
+    WindowOutcome { index: task.index, steps: world.engine.processed() - before, changes }
 }
 
 impl<'w> Federation<'w> {
@@ -224,9 +360,11 @@ impl<'w> Federation<'w> {
             shareds: vec![None; n],
             shared_cap: None,
             last_fleet: vec![0; n],
+            last_active: vec![0.0; n],
             peak_total_fleet: 0,
             peak_total_active: 0.0,
             steps: 0,
+            view_scratch: Vec::new(),
         }
     }
 
@@ -253,9 +391,11 @@ impl<'w> Federation<'w> {
             shareds: vec![None; n],
             shared_cap: None,
             last_fleet: vec![0; n],
+            last_active: vec![0.0; n],
             peak_total_fleet: 0,
             peak_total_active: 0.0,
             steps: 0,
+            view_scratch: Vec::new(),
         }
     }
 
@@ -318,16 +458,16 @@ impl<'w> Federation<'w> {
         self.members
     }
 
-    fn views(&self) -> Vec<MemberView> {
-        self.members
-            .iter()
-            .enumerate()
-            .map(|(index, m)| MemberView {
-                index,
-                outstanding_tasks: m.outstanding_tasks(),
-                resident_jobs: m.resident_jobs(),
-            })
-            .collect()
+    /// Rebuild the per-arrival routing views into `out` — the reusable
+    /// federation scratch (no allocation once warm; an associated fn so
+    /// the merge loop can borrow the members and the scratch disjointly).
+    fn fill_views(members: &[World<'_>], out: &mut Vec<MemberView>) {
+        out.clear();
+        out.extend(members.iter().enumerate().map(|(index, m)| MemberView {
+            index,
+            outstanding_tasks: m.outstanding_tasks(),
+            resident_jobs: m.resident_jobs(),
+        }));
     }
 
     /// Earliest member event as `(time, member index)` (ties to the
@@ -359,20 +499,21 @@ impl<'w> Federation<'w> {
             }
         }
         self.last_fleet[i] = fleet;
+        // Keep the active-cost mirror fresh: a member's active value
+        // only moves during its own steps, so updating slot `i` here
+        // (and the others at window replay) keeps `last_active[j] ==
+        // members[j].rec.cost.active_now()` at every merge instant.
+        self.last_active[i] = self.members[i].rec.cost.active_now();
         let total: usize = self.last_fleet.iter().sum();
         self.peak_total_fleet = self.peak_total_fleet.max(total);
         let active: f64 = self.members.iter().map(|m| m.rec.cost.active_now()).sum();
         self.peak_total_active = self.peak_total_active.max(active);
     }
 
-    /// Drive every member to quiescence in global event-time order.
-    ///
-    /// Loop invariant: each iteration consumes exactly one unit of
-    /// global progress — either the earliest pending arrival is routed
-    /// (and the producing source refilled) or the member holding the
-    /// earliest event steps once — so the run terminates whenever the
-    /// member sources do.
-    pub fn run(&mut self) {
+    /// Shared run prologue: start every member, prime the global feed's
+    /// one-job lookaheads (closing inboxes immediately on a zero-job
+    /// stream), and take the initial watermark samples.
+    fn start_members(&mut self) {
         for m in &mut self.members {
             m.start();
         }
@@ -390,45 +531,276 @@ impl<'w> Federation<'w> {
         for i in 0..self.members.len() {
             self.reconcile(i);
         }
+    }
 
-        loop {
-            let next_arrival = self.feed.as_ref().and_then(GlobalFeed::earliest);
-            let next_event = self.earliest_event();
-            match (next_arrival, next_event) {
-                (None, None) => break,
-                // Arrivals route when global time reaches them: strictly
-                // before later events, and before *equal-time* events so
-                // the injected arrival competes inside the target's own
-                // engine (a fixed, deterministic order).
-                (Some((arrival, si)), ev) if ev.map_or(true, |(te, _)| arrival <= te) => {
-                    let feed = self.feed.as_mut().expect("arrival without a feed");
-                    let job = feed.lookahead[si].take().expect("earliest() said Some");
-                    let views = self.views();
-                    let router = self.router.as_mut().expect("routed mode has a router");
-                    let target = router.route(&job, si, &views).min(views.len() - 1);
-                    self.members[target].inject_job(job);
-                    let feed = self.feed.as_mut().expect("feed still present");
-                    feed.refill(si);
-                    if feed.exhausted() {
-                        for m in &mut self.members {
-                            m.close_inbox();
-                        }
-                    }
-                }
-                (_, Some((_, i))) => {
-                    self.members[i].step();
-                    self.steps += 1;
-                    self.reconcile(i);
-                }
-                // No member event but an arrival exists — handled by the
-                // arrival arm above (its guard is true when ev is None).
-                (Some(_), None) => unreachable!("arrival arm covers ev == None"),
-            }
-        }
-
+    fn finish_members(&mut self) {
         for m in &mut self.members {
             m.finish();
         }
+    }
+
+    /// One unit of serial-merge progress: route the earliest pending
+    /// arrival, or step the member holding the earliest event and
+    /// reconcile it. Returns `false` — consuming nothing — when the
+    /// federation has quiesced, or when `bound` is set and the earliest
+    /// item lies strictly beyond it (the PDES boundary phase drains
+    /// items *at* the window horizon with exactly this loop, so the
+    /// boundary is the serial merge by construction).
+    fn serial_step(&mut self, bound: Option<Time>) -> bool {
+        let next_arrival = self.feed.as_ref().and_then(GlobalFeed::earliest);
+        let next_event = self.earliest_event();
+        if let Some(b) = bound {
+            let t = match (next_arrival, next_event) {
+                (None, None) => return false,
+                (Some((a, _)), Some((e, _))) => a.min(e),
+                (Some((a, _)), None) => a,
+                (None, Some((e, _))) => e,
+            };
+            if t > b {
+                return false;
+            }
+        }
+        match (next_arrival, next_event) {
+            (None, None) => false,
+            // Arrivals route when global time reaches them: strictly
+            // before later events, and before *equal-time* events so
+            // the injected arrival competes inside the target's own
+            // engine (a fixed, deterministic order).
+            (Some((arrival, si)), ev) if ev.map_or(true, |(te, _)| arrival <= te) => {
+                let feed = self.feed.as_mut().expect("arrival without a feed");
+                let job = feed.lookahead[si].take().expect("earliest() said Some");
+                let mut views = std::mem::take(&mut self.view_scratch);
+                Self::fill_views(&self.members, &mut views);
+                let router = self.router.as_mut().expect("routed mode has a router");
+                let target = router.route(&job, si, &views).min(views.len() - 1);
+                self.view_scratch = views;
+                self.members[target].inject_job(job);
+                let feed = self.feed.as_mut().expect("feed still present");
+                feed.refill(si);
+                if feed.exhausted() {
+                    for m in &mut self.members {
+                        m.close_inbox();
+                    }
+                }
+                true
+            }
+            (_, Some((_, i))) => {
+                let _ = self.members[i].step();
+                self.steps += 1;
+                self.reconcile(i);
+                true
+            }
+            // No member event but an arrival exists — handled by the
+            // arrival arm above (its guard is true when ev is None).
+            (Some(_), None) => unreachable!("arrival arm covers ev == None"),
+        }
+    }
+
+    /// Drive every member to quiescence in global event-time order —
+    /// the serial reference merge ([`Federation::run_pdes`] must match
+    /// it bit for bit, as `Engine::reference` anchors the calendar
+    /// queue).
+    ///
+    /// Loop invariant: each iteration consumes exactly one unit of
+    /// global progress — either the earliest pending arrival is routed
+    /// (and the producing source refilled) or the member holding the
+    /// earliest event steps once — so the run terminates whenever the
+    /// member sources do.
+    pub fn run(&mut self) {
+        self.start_members();
+        while self.serial_step(None) {}
+        self.finish_members();
+    }
+
+    /// Which members are *budget-coupled* — holding a [`SharedBudget`]
+    /// handle on a pool some other member also draws from? Their events
+    /// are horizon events: they only step in the serial boundary phase.
+    fn pooled_coupled(&self) -> Vec<bool> {
+        let n = self.members.len();
+        let mut coupled = vec![false; n];
+        for i in 0..n {
+            let Some(a) = &self.shareds[i] else { continue };
+            for (j, other) in self.shareds.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                if let Some(b) = other {
+                    if a.same_pool(b) {
+                        coupled[i] = true;
+                        break;
+                    }
+                }
+            }
+        }
+        coupled
+    }
+
+    /// The conservative window horizon: no member advancing strictly
+    /// below it can miss a cross-member interaction. `None` means no
+    /// interaction can ever happen again — windows may drain to
+    /// quiescence.
+    fn window_horizon(&self, coupled: &[bool]) -> Option<Time> {
+        let mut horizon =
+            self.feed.as_ref().and_then(GlobalFeed::earliest).map(|(t, _)| t);
+        for (i, m) in self.members.iter().enumerate() {
+            if !coupled[i] {
+                continue;
+            }
+            if let Some(t) = m.next_event_time() {
+                horizon = Some(match horizon {
+                    Some(h) => h.min(t),
+                    None => t,
+                });
+            }
+        }
+        horizon
+    }
+
+    /// Replay the windows' watermark change points in the serial merge
+    /// order — ascending `(time, member index)`, FIFO within a member —
+    /// recomputing the summed-fleet and summed-active watermarks with
+    /// the serial fold at each point. Steps that changed neither value
+    /// were skipped by the journal: they contribute bit-identical sums,
+    /// so they cannot move a maximum. `outcomes` is sorted by member
+    /// index, so the linear scan's first minimum breaks time ties to
+    /// the lowest member index, exactly as `earliest_event` does.
+    fn replay_changes(&mut self, outcomes: &[WindowOutcome]) {
+        let lists: Vec<(usize, &[FleetChange])> = outcomes
+            .iter()
+            .filter(|o| !o.changes.is_empty())
+            .map(|o| (o.index, o.changes.as_slice()))
+            .collect();
+        if lists.is_empty() {
+            return;
+        }
+        let mut pos = vec![0usize; lists.len()];
+        loop {
+            let mut best: Option<(Time, usize)> = None; // (time, list slot)
+            for (k, (_, changes)) in lists.iter().enumerate() {
+                if let Some(c) = changes.get(pos[k]) {
+                    if best.map_or(true, |(bt, _)| c.time < bt) {
+                        best = Some((c.time, k));
+                    }
+                }
+            }
+            let Some((_, k)) = best else { break };
+            let (mi, changes) = lists[k];
+            let c = changes[pos[k]];
+            pos[k] += 1;
+            self.last_fleet[mi] = c.fleet;
+            self.last_active[mi] = c.active;
+            let total: usize = self.last_fleet.iter().sum();
+            self.peak_total_fleet = self.peak_total_fleet.max(total);
+            let active: f64 = self.last_active.iter().sum();
+            self.peak_total_active = self.peak_total_active.max(active);
+        }
+    }
+
+    /// Advance every uncoupled member with work strictly below `horizon`
+    /// (`None` = drain fully), fanned out over at most `threads` scoped
+    /// worker threads, then reconcile the outcomes deterministically:
+    /// thread completion order is host scheduling noise, so outcomes
+    /// sort by member index before the journal replay.
+    fn advance_windows(
+        &mut self,
+        horizon: Option<Time>,
+        threads: usize,
+        managed: &[bool],
+        coupled: &[bool],
+    ) {
+        let mut tasks: Vec<WindowTask<'_, 'w>> = Vec::new();
+        let shareds = &self.shareds;
+        let last_fleet = &self.last_fleet;
+        let last_active = &self.last_active;
+        for (i, m) in self.members.iter_mut().enumerate() {
+            if coupled[i] {
+                continue;
+            }
+            let Some(t) = m.next_event_time() else { continue };
+            if let Some(h) = horizon {
+                if t >= h {
+                    continue;
+                }
+            }
+            // A member's own pending arrival is safe to cross: its
+            // JobArrival event is already in the engine (so `t` keys on
+            // it); only *feed* lookaheads — a horizon term — can inject
+            // new events from outside (`World::pending_arrival`
+            // documents the lower-bound invariant).
+            tasks.push(WindowTask {
+                index: i,
+                world: m,
+                shared: shareds[i].clone(),
+                managed: managed[i],
+                fleet: last_fleet[i],
+                active_bits: last_active[i].to_bits(),
+            });
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let mut outcomes: Vec<WindowOutcome> = if threads <= 1 || tasks.len() == 1 {
+            tasks.into_iter().map(|t| advance_window(t, horizon)).collect()
+        } else {
+            let workers = threads.min(tasks.len());
+            let queue = Mutex::new(tasks);
+            let done: Mutex<Vec<WindowOutcome>> = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let Some(task) = queue.lock().unwrap().pop() else { break };
+                        let outcome = advance_window(task, horizon);
+                        done.lock().unwrap().push(outcome);
+                    });
+                }
+            });
+            done.into_inner().unwrap()
+        };
+        outcomes.sort_by_key(|o| o.index);
+        for o in &outcomes {
+            self.steps += o.steps;
+        }
+        self.replay_changes(&outcomes);
+    }
+
+    /// Drive every member to quiescence with conservative-window
+    /// parallel discrete-event execution — bit-identical to
+    /// [`Federation::run`] at any `threads` count (including 1, which
+    /// exercises the same windowed code path inline).
+    ///
+    /// Each iteration: compute the horizon, advance every uncoupled
+    /// member below it in parallel, replay the watermark journals, then
+    /// run the serial merge for everything *at* the horizon (arrivals
+    /// route before equal-time events, ties to the lowest member
+    /// index). Progress: a `Some` horizon is witnessed by a pending
+    /// arrival or a pooled member's event at exactly that time, so the
+    /// boundary always consumes at least one item; a `None` horizon
+    /// means the windows just drained everything.
+    pub fn run_pdes(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        self.start_members();
+        let managed: Vec<bool> = self
+            .members
+            .iter()
+            .map(|m| m.component::<TransientManagerComponent>().is_some())
+            .collect();
+        let coupled = self.pooled_coupled();
+        loop {
+            let horizon = self.window_horizon(&coupled);
+            self.advance_windows(horizon, threads, &managed, &coupled);
+            let Some(h) = horizon else { break };
+            let mut progressed = false;
+            while self.serial_step(Some(h)) {
+                progressed = true;
+            }
+            debug_assert!(progressed, "PDES boundary at t={h} consumed nothing");
+            if !progressed {
+                // Defensive: a horizon no longer witnessed by any item
+                // (cannot happen — see above) must not spin forever.
+                break;
+            }
+        }
+        self.finish_members();
     }
 }
 
@@ -578,6 +950,209 @@ mod tests {
         let mut r1 = ClassSplit::default();
         assert_eq!(r1.route(&job(false), 0, &one), 0);
         assert_eq!(r1.route(&job(true), 0, &one), 0);
+    }
+
+    /// `World` must be `Send` for the PDES windows to move members onto
+    /// scoped worker threads; this fails to compile if any field (or
+    /// boxed trait object) loses the bound.
+    #[test]
+    fn worlds_and_window_state_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<World<'static>>();
+        assert_send::<SharedBudget>();
+    }
+
+    fn assert_federations_bit_identical(a: &Federation, b: &Federation) {
+        assert_eq!(a.steps(), b.steps());
+        assert_eq!(a.peak_total_fleet(), b.peak_total_fleet());
+        assert_eq!(
+            a.peak_total_active().to_bits(),
+            b.peak_total_active().to_bits()
+        );
+        for (x, y) in a.members().iter().zip(b.members()) {
+            assert_eq!(x.engine.processed(), y.engine.processed());
+            assert_eq!(x.engine.now().to_bits(), y.engine.now().to_bits());
+            assert_eq!(x.jobs_seen(), y.jobs_seen());
+            assert_eq!(x.rec.tasks_finished, y.rec.tasks_finished);
+            assert_eq!(x.rec.short_delays, y.rec.short_delays);
+            assert_eq!(x.rec.long_delays, y.rec.long_delays);
+            assert_eq!(x.peak_resident_jobs(), y.peak_resident_jobs());
+            assert_eq!(x.peak_resident_tasks(), y.peak_resident_tasks());
+        }
+    }
+
+    #[test]
+    fn pdes_passthrough_matches_serial_merge_at_every_thread_count() {
+        let serial = {
+            let mut s0 = Hybrid::eagle(2.0);
+            let mut s1 = Hybrid::eagle(2.0);
+            let mut fed =
+                Federation::passthrough(vec![member(&mut s0, 3), member(&mut s1, 4)]);
+            fed.run();
+            (
+                fed.steps(),
+                fed.members().iter().map(|m| m.engine.processed()).collect::<Vec<_>>(),
+                fed.members()
+                    .iter()
+                    .map(|m| m.rec.tasks_finished)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        for threads in [1, 2, 8] {
+            let mut s0 = Hybrid::eagle(2.0);
+            let mut s1 = Hybrid::eagle(2.0);
+            let mut fed =
+                Federation::passthrough(vec![member(&mut s0, 3), member(&mut s1, 4)]);
+            fed.run_pdes(threads);
+            assert_eq!(fed.steps(), serial.0, "threads={threads}");
+            assert_eq!(
+                fed.members().iter().map(|m| m.engine.processed()).collect::<Vec<_>>(),
+                serial.1,
+                "threads={threads}"
+            );
+            assert_eq!(
+                fed.members()
+                    .iter()
+                    .map(|m| m.rec.tasks_finished)
+                    .collect::<Vec<_>>(),
+                serial.2,
+                "threads={threads}"
+            );
+        }
+    }
+
+    /// Cross-member tie storm: both sources emit jobs at *identical*
+    /// timestamps, so routed arrivals and member events collide at the
+    /// same instant across members — the PDES boundary must interleave
+    /// them exactly as the serial merge (arrivals first, then events,
+    /// lowest member index first).
+    fn tie_storm_fed<'s>(
+        s0: &'s mut Hybrid,
+        s1: &'s mut Hybrid,
+    ) -> Federation<'s> {
+        use crate::trace::VecSource;
+        let mk_jobs = || {
+            let mut jobs = Vec::new();
+            let mut id = 0u32;
+            // 40 waves of 4 jobs each, every job in a wave at the same
+            // arrival time, waves 25 s apart; task durations collide too.
+            for wave in 0..40 {
+                for _ in 0..4 {
+                    jobs.push(Job {
+                        id: JobId(id),
+                        arrival: wave as f64 * 25.0,
+                        task_durations: vec![10.0, 10.0],
+                        is_long: wave % 5 == 0,
+                    });
+                    id += 1;
+                }
+            }
+            jobs
+        };
+        let mut w0 =
+            World::new_inbox(Cluster::new(64, 8, QueuePolicy::Fifo), Recorder::new(1.0), 21);
+        w0.add_component(Box::new(SnapshotSampler::new(60.0)));
+        w0.add_component(Box::new(SchedulerComponent::new(s0)));
+        let mut w1 =
+            World::new_inbox(Cluster::new(64, 8, QueuePolicy::Fifo), Recorder::new(1.0), 22);
+        w1.add_component(Box::new(SnapshotSampler::new(60.0)));
+        w1.add_component(Box::new(SchedulerComponent::new(s1)));
+        let r0 = w0.fork_rng(0xAE);
+        let r1 = w1.fork_rng(0xAE);
+        let src0: Box<dyn ArrivalSource> = Box::new(VecSource::new(mk_jobs(), 90.0));
+        let src1: Box<dyn ArrivalSource> = Box::new(VecSource::new(mk_jobs(), 90.0));
+        Federation::routed(
+            vec![w0, w1],
+            vec![src0, src1],
+            vec![r0, r1],
+            Box::new(RoundRobin::default()),
+        )
+    }
+
+    #[test]
+    fn pdes_same_timestamp_tie_storm_matches_serial_merge() {
+        let mut a0 = Hybrid::eagle(2.0);
+        let mut a1 = Hybrid::eagle(2.0);
+        let mut serial = tie_storm_fed(&mut a0, &mut a1);
+        serial.run();
+        let total: u64 = serial.members().iter().map(|m| m.jobs_seen()).sum();
+        assert_eq!(total, 320, "both tied sources must drain fully");
+        for threads in [1, 2, 8] {
+            let mut b0 = Hybrid::eagle(2.0);
+            let mut b1 = Hybrid::eagle(2.0);
+            let mut pdes = tie_storm_fed(&mut b0, &mut b1);
+            pdes.run_pdes(threads);
+            assert_federations_bit_identical(&serial, &pdes);
+        }
+    }
+
+    /// Regression (merge-loop audit): a member whose engine is exhausted
+    /// while its inbox is open-but-empty is *idle, not done* — the merge
+    /// must keep running on pending feed arrivals and deliver the late
+    /// jobs instead of declaring global quiescence. Source 0 has a long
+    /// arrival gap during which both members fully quiesce except for
+    /// the open inboxes.
+    fn gap_fed<'s>(s0: &'s mut Hybrid, s1: &'s mut Hybrid) -> Federation<'s> {
+        use crate::trace::VecSource;
+        let jobs = vec![
+            Job { id: JobId(0), arrival: 1.0, task_durations: vec![5.0], is_long: false },
+            Job { id: JobId(1), arrival: 2.0, task_durations: vec![5.0], is_long: false },
+            // ... both members drain completely by ~t=10 ...
+            Job {
+                id: JobId(2),
+                arrival: 5000.0,
+                task_durations: vec![5.0],
+                is_long: false,
+            },
+            Job {
+                id: JobId(3),
+                arrival: 5001.0,
+                task_durations: vec![5.0],
+                is_long: false,
+            },
+        ];
+        let mut w0 =
+            World::new_inbox(Cluster::new(16, 4, QueuePolicy::Fifo), Recorder::new(1.0), 31);
+        w0.add_component(Box::new(SnapshotSampler::new(60.0)));
+        w0.add_component(Box::new(SchedulerComponent::new(s0)));
+        let mut w1 =
+            World::new_inbox(Cluster::new(16, 4, QueuePolicy::Fifo), Recorder::new(1.0), 32);
+        w1.add_component(Box::new(SnapshotSampler::new(60.0)));
+        w1.add_component(Box::new(SchedulerComponent::new(s1)));
+        let r0 = w0.fork_rng(0xAE);
+        let r1 = w1.fork_rng(0xAE);
+        let src0: Box<dyn ArrivalSource> = Box::new(VecSource::new(jobs, 90.0));
+        let empty: Box<dyn ArrivalSource> = Box::new(VecSource::new(Vec::new(), 90.0));
+        Federation::routed(
+            vec![w0, w1],
+            vec![src0, empty],
+            vec![r0, r1],
+            Box::new(RoundRobin::default()),
+        )
+    }
+
+    #[test]
+    fn open_but_empty_inbox_is_idle_not_done() {
+        let mut a0 = Hybrid::eagle(2.0);
+        let mut a1 = Hybrid::eagle(2.0);
+        let mut serial = gap_fed(&mut a0, &mut a1);
+        serial.run();
+        let jobs: Vec<u64> = serial.members().iter().map(|m| m.jobs_seen()).collect();
+        assert_eq!(jobs.iter().sum::<u64>(), 4, "late post-gap arrivals were dropped");
+        assert_eq!(jobs, vec![2, 2], "round-robin must deliver across the gap");
+        for m in serial.members() {
+            assert_eq!(m.outstanding_tasks(), 0);
+            assert_eq!(m.rec.tasks_finished, 2);
+        }
+        // The PDES path must honor the same invariant: a `None` horizon
+        // (quiescence) is only declared once the feed is drained.
+        for threads in [1, 4] {
+            let mut b0 = Hybrid::eagle(2.0);
+            let mut b1 = Hybrid::eagle(2.0);
+            let mut pdes = gap_fed(&mut b0, &mut b1);
+            pdes.run_pdes(threads);
+            assert_federations_bit_identical(&serial, &pdes);
+        }
     }
 
     #[test]

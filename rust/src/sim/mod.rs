@@ -5,7 +5,10 @@
 //! event vocabulary ([`Event`]), the reproducible PRNG ([`Rng`]), the
 //! composable simulation [`World`] with its pluggable [`Component`]s,
 //! and the multi-cluster [`Federation`] that advances several worlds
-//! in global event-time order behind a pluggable [`JobRouter`].
+//! in global event-time order behind a pluggable [`JobRouter`] —
+//! serially ([`Federation::run`], the reference merge) or with
+//! conservative-window parallel execution ([`Federation::run_pdes`],
+//! bit-identical at any thread count).
 
 pub mod components;
 mod engine;

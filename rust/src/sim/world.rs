@@ -137,7 +137,13 @@ impl WorldCtx<'_> {
 /// order. Implementations: the scheduler adapter, the transient manager,
 /// the Hawk-lineage work stealer, the snapshot/forecast sampler (see
 /// [`crate::sim::components`]).
-pub trait Component {
+///
+/// `Send` (like [`crate::trace::ArrivalSource`] and
+/// [`crate::sched::Scheduler`]) so a fully wired `World` can advance on
+/// a federation PDES worker thread. Components stay thread-confined —
+/// only the world that owns them ever calls in — the bound just lets
+/// the owning world migrate between threads at window boundaries.
+pub trait Component: Send {
     fn name(&self) -> &'static str {
         "component"
     }
@@ -559,11 +565,12 @@ impl<'w> World<'w> {
 
     /// Process exactly one event, returning its timestamp (`None` once
     /// the engine has quiesced). A stale (generation-filtered) finish
-    /// still counts as a processed step. The federation steps member
-    /// worlds through this (never [`World::step_batch`]): its global
-    /// merge interleaves members *per event*, and routed arrivals must
-    /// be injected between same-timestamp events exactly as the seed
-    /// did.
+    /// still counts as a processed step. The federation's serial merge
+    /// and its PDES windows over budget-managed members step through
+    /// this (never [`World::step_batch`]): the global merge interleaves
+    /// members *per event* — routed arrivals inject between
+    /// same-timestamp events, and the fleet watermark samples after
+    /// every event — so batch granularity would be observable.
     pub fn step(&mut self) -> Option<Time> {
         let (now, event) = self.engine.pop()?;
         let mut components = std::mem::take(&mut self.components);
@@ -595,6 +602,49 @@ impl<'w> World<'w> {
         self.components = components;
         self.batch = batch;
         Some(now)
+    }
+
+    /// [`World::step_batch`], bounded: drain the next same-timestamp
+    /// batch only when it lies strictly *before* `horizon`; otherwise
+    /// process nothing and return `None`. The federation's PDES windows
+    /// drive unmanaged members through this — events at or past the
+    /// conservative horizon must wait for the serial merge boundary,
+    /// where routed arrivals and shared-budget interactions reconcile.
+    pub fn step_batch_before(&mut self, horizon: Time) -> Option<Time> {
+        let mut batch = std::mem::take(&mut self.batch);
+        let popped = self.engine.pop_batch_before(horizon, &mut batch);
+        let Some(now) = popped else {
+            self.batch = batch;
+            return None;
+        };
+        let mut components = std::mem::take(&mut self.components);
+        for &event in &batch {
+            self.dispatch_event(now, event, &mut components);
+        }
+        self.components = components;
+        self.batch = batch;
+        Some(now)
+    }
+
+    /// Advance until the next event is at or past `horizon` (or the
+    /// engine quiesces), batch-granular; returns events processed. The
+    /// scratch buffer behind [`World::step_batch`] is a `World` field,
+    /// so repeated bounded runs — like [`World::run`]'s unbounded loop —
+    /// allocate nothing in steady state.
+    pub fn run_until(&mut self, horizon: Time) -> u64 {
+        let before = self.engine.processed();
+        while self.step_batch_before(horizon).is_some() {}
+        self.engine.processed() - before
+    }
+
+    /// Arrival time of the primed one-job lookahead, if any — a lower
+    /// bound on this world's next arrival intake. For an inbox-fed
+    /// member this (or the feed's own lookahead, for the members still
+    /// to be routed to) is what makes the federation's conservative
+    /// horizon safe: no arrival can materialise inside a window that
+    /// ends at or before every pending arrival's lower bound.
+    pub fn pending_arrival(&self) -> Option<Time> {
+        self.lookahead.as_ref().map(|j| j.job().arrival)
     }
 
     /// The per-event core shared by [`World::step`] and

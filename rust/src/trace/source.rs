@@ -30,7 +30,11 @@ use crate::trace::{Job, Workload};
 use crate::util::Time;
 
 /// A pull-based stream of jobs, nondecreasing in arrival time.
-pub trait ArrivalSource {
+///
+/// `Send` so a member world (which owns its source) can advance on a
+/// federation PDES worker thread; sources are plain data plus forked
+/// RNG streams, so the bound costs implementors nothing.
+pub trait ArrivalSource: Send {
     /// Pull the next job, or `None` when the trace is exhausted.
     ///
     /// `rng` is the driver-owned arrival stream; replay and synthetic

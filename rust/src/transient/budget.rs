@@ -11,8 +11,7 @@
 //! burst can use (pooled sharing), or a hard per-cluster slice of the
 //! same total (split sharing).
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Short-partition budget: the paper's (N, p, r) triple.
 #[derive(Clone, Copy, Debug)]
@@ -57,40 +56,54 @@ struct SharedPool {
 }
 
 /// A counted transient-lease pool shared across clusters in a
-/// federation (`Rc`-shared within one single-threaded federated run;
-/// sweeps parallelise across runs, never inside one, so no `Sync` is
-/// needed). Managers [`SharedBudget::try_take`] one unit per transient
-/// request; the federation driver releases units as it observes each
-/// cluster's fleet (active + provisioning) shrink after a step. The
-/// `peak` watermark records the most units ever simultaneously taken —
-/// the cross-cluster cap test pins `peak <= cap`.
+/// federation. Managers [`SharedBudget::try_take`] one unit per
+/// transient request; the federation driver releases units as it
+/// observes each cluster's fleet (active + provisioning) shrink after a
+/// step. The `peak` watermark records the most units ever
+/// simultaneously taken — the cross-cluster cap test pins `peak <= cap`.
+///
+/// `Arc<Mutex>`-shared so member worlds can advance on the federation's
+/// PDES worker threads. The lock is uncontended by construction: a pool
+/// shared across members (pooled sharing) makes those members
+/// horizon events — they only ever step in the serial boundary phase —
+/// while a per-member slice (split sharing) is touched only by its own
+/// member's thread, so take/release order on any one pool is exactly
+/// the serial merge order.
 #[derive(Clone, Debug)]
-pub struct SharedBudget(Rc<RefCell<SharedPool>>);
+pub struct SharedBudget(Arc<Mutex<SharedPool>>);
 
 impl SharedBudget {
     pub fn new(cap: usize) -> Self {
-        SharedBudget(Rc::new(RefCell::new(SharedPool { cap, in_use: 0, peak: 0 })))
+        SharedBudget(Arc::new(Mutex::new(SharedPool { cap, in_use: 0, peak: 0 })))
+    }
+
+    /// Do these two handles draw from the same pool? The federation's
+    /// PDES scheduler uses this to detect budget coupling: members
+    /// sharing a pool must synchronize at the merge boundary, members
+    /// with disjoint pools may advance concurrently.
+    pub fn same_pool(&self, other: &SharedBudget) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
     }
 
     /// Total units in the pool.
     pub fn cap(&self) -> usize {
-        self.0.borrow().cap
+        self.0.lock().unwrap().cap
     }
 
     /// Units currently taken across every sharing cluster.
     pub fn in_use(&self) -> usize {
-        self.0.borrow().in_use
+        self.0.lock().unwrap().in_use
     }
 
     /// High-water mark of simultaneously taken units.
     pub fn peak(&self) -> usize {
-        self.0.borrow().peak
+        self.0.lock().unwrap().peak
     }
 
     /// Take one unit if headroom remains; `false` when the pool is
     /// exhausted (the caller treats it like a failed market request).
     pub fn try_take(&self) -> bool {
-        let mut p = self.0.borrow_mut();
+        let mut p = self.0.lock().unwrap();
         if p.in_use >= p.cap {
             return false;
         }
@@ -102,7 +115,7 @@ impl SharedBudget {
     /// Return `n` units to the pool (saturating: a release can never
     /// underflow even if the driver reconciles conservatively).
     pub fn release(&self, n: usize) {
-        let mut p = self.0.borrow_mut();
+        let mut p = self.0.lock().unwrap();
         p.in_use = p.in_use.saturating_sub(n);
     }
 }
@@ -173,5 +186,21 @@ mod tests {
         let z = SharedBudget::new(0);
         assert!(!z.try_take());
         assert_eq!(z.peak(), 0);
+    }
+
+    #[test]
+    fn same_pool_identity_tracks_clones_not_caps() {
+        let a = SharedBudget::new(4);
+        let b = a.clone();
+        let c = SharedBudget::new(4); // equal cap, distinct pool
+        assert!(a.same_pool(&b));
+        assert!(b.same_pool(&a));
+        assert!(!a.same_pool(&c));
+    }
+
+    #[test]
+    fn shared_budget_handles_are_send() {
+        fn assert_send<T: Send + Sync>() {}
+        assert_send::<SharedBudget>();
     }
 }

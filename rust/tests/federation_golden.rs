@@ -73,6 +73,7 @@ fn n1_passthrough_federation_reproduces_plain_world_report() {
             router: RouterKind::PassThrough,
             budget_sharing: BudgetSharing::None,
             stagger: 0.0,
+            pdes_threads: 0,
         });
         let fed = run_federated_experiment_with(&fed_cfg, &mut analytics).unwrap();
         assert_eq!(fed.per_cluster.len(), 1);
@@ -104,6 +105,7 @@ fn n2_federation_deterministic_per_seed() {
             router,
             budget_sharing: BudgetSharing::Pooled,
             stagger: 400.0,
+            pdes_threads: 0,
         });
         let mut analytics = NativeAnalytics;
         let a = run_federated_experiment_with(&cfg, &mut analytics).unwrap();
@@ -158,6 +160,7 @@ fn federated_sweep_invariant_under_thread_count() {
         router: RouterKind::PassThrough,
         budget_sharing: BudgetSharing::Pooled,
         stagger: 400.0,
+        pdes_threads: 0,
     });
     let mut points = router_points(
         &base,
@@ -194,6 +197,7 @@ fn pooled_shared_budget_cap_never_exceeded() {
         router: RouterKind::PassThrough,
         budget_sharing: BudgetSharing::Pooled,
         stagger: 500.0,
+        pdes_threads: 0,
     });
     let outcome = run_federation(&cfg).unwrap();
     let cap = outcome.shared_cap.expect("pooled sharing has a cap");
@@ -233,6 +237,7 @@ fn split_shared_budget_respects_slices() {
         router: RouterKind::PassThrough,
         budget_sharing: BudgetSharing::Split,
         stagger: 0.0,
+        pdes_threads: 0,
     });
     let outcome = run_federation(&cfg).unwrap();
     let cap = outcome.shared_cap.unwrap();
@@ -269,6 +274,84 @@ fn federated_burst_registry_end_to_end() {
         fed.per_cluster[0].end_time.to_bits(),
         fed.per_cluster[1].end_time.to_bits()
     );
+}
+
+/// Runs `cfg` under the serial reference merge and under
+/// conservative-window PDES at each thread count, asserting the whole
+/// federated report surface is bit-identical every time.
+fn assert_pdes_bit_identical(cfg: &ExperimentConfig, threads: &[usize]) {
+    let mut analytics = NativeAnalytics;
+    let mut serial_cfg = cfg.clone();
+    if let Some(f) = &mut serial_cfg.federation {
+        f.pdes_threads = 0;
+    }
+    let serial = run_federated_experiment_with(&serial_cfg, &mut analytics).unwrap();
+    for &n in threads {
+        let mut pdes_cfg = cfg.clone();
+        if let Some(f) = &mut pdes_cfg.federation {
+            f.pdes_threads = n;
+        }
+        let pdes = run_federated_experiment_with(&pdes_cfg, &mut analytics).unwrap();
+        assert_eq!(
+            serial.per_cluster.len(),
+            pdes.per_cluster.len(),
+            "pdes_threads {n}"
+        );
+        for (a, b) in serial.per_cluster.iter().zip(&pdes.per_cluster) {
+            assert_reports_bit_identical(a, b);
+        }
+        assert_reports_bit_identical(&serial.aggregate, &pdes.aggregate);
+        assert_eq!(
+            serial.peak_total_fleet, pdes.peak_total_fleet,
+            "pdes_threads {n}"
+        );
+        assert_eq!(serial.shared_cap, pdes.shared_cap, "pdes_threads {n}");
+    }
+}
+
+/// The PDES acceptance pin: every router, under staggered burst storms
+/// with an uncoupled budget, produces bit-identical per-cluster and
+/// aggregate reports at 1, 2, and 8 worker threads vs the serial merge.
+#[test]
+fn pdes_routers_bit_identical_at_every_thread_count() {
+    for router in [
+        RouterKind::PassThrough,
+        RouterKind::LeastQueued,
+        RouterKind::ClassSplit,
+    ] {
+        let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+        cfg.scenario = Some(named("burst-storm", &cfg).unwrap());
+        cfg.federation = Some(FederationSpec {
+            clusters: 2,
+            router,
+            budget_sharing: BudgetSharing::None,
+            stagger: 400.0,
+            pdes_threads: 0,
+        });
+        assert_pdes_bit_identical(&cfg, &[1, 2, 8]);
+    }
+}
+
+/// Budget-sharing coverage: pooled contention with aggressive revocation
+/// churn (the hardest coupling — members fight over one cap while
+/// transients fail and release mid-window) and split slices both stay
+/// bit-identical under PDES at 1, 2, and 8 threads.
+#[test]
+fn pdes_budget_sharing_bit_identical_at_every_thread_count() {
+    for sharing in [BudgetSharing::Pooled, BudgetSharing::Split] {
+        let mut cfg = tiny_cfg(SchedulerKind::CloudCoaster);
+        cfg.threshold = 0.3; // aggressive growth: the caps do the limiting
+        cfg.mttf = Some(900.0); // churn: request/revoke/release all run long
+        cfg.scenario = Some(named("burst-storm", &cfg).unwrap());
+        cfg.federation = Some(FederationSpec {
+            clusters: 2,
+            router: RouterKind::LeastQueued,
+            budget_sharing: sharing,
+            stagger: 500.0,
+            pdes_threads: 0,
+        });
+        assert_pdes_bit_identical(&cfg, &[1, 2, 8]);
+    }
 }
 
 /// The `[federation]` TOML block drives the same path end-to-end.
