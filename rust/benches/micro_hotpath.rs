@@ -1,8 +1,10 @@
 //! Microbenchmarks of the hot paths (§Perf, L3): event queue push/pop
 //! (calendar vs the reference heap, recorded to `BENCH_engine.json` at
 //! the repo root — the measured backbone of the hot-path campaign),
-//! argmin-tree updates, probe placement, task stealing, and the PJRT
-//! analytics invocation latency (the epoch path).
+//! argmin-tree updates, probe placement over the SoA hot-field mirror
+//! vs the reference struct reads, zero-alloc revoke churn with the
+//! pool hit/miss counters, task stealing, and the PJRT analytics
+//! invocation latency (the epoch path).
 //!
 //! `cargo bench --offline --bench micro_hotpath`
 
@@ -13,7 +15,7 @@ use cloudcoaster::metrics::Recorder;
 use cloudcoaster::runtime::AnalyticsEngine;
 use cloudcoaster::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
 use cloudcoaster::sim::{Engine, Event, Rng};
-use cloudcoaster::util::{JobId, MinTree, ServerRef};
+use cloudcoaster::util::{JobId, MinTree, ServerRef, TaskRef};
 
 fn json_entry(name: &str, r: &BenchResult) -> String {
     format!(
@@ -155,28 +157,81 @@ fn bench_mintree() {
     println!("  -> {} per update+argmin", fmt_ns(r.median_ns() / 1000.0));
 }
 
-fn bench_probe_placement() {
-    let mut cluster = Cluster::new(3920, 80, QueuePolicy::Fifo);
+/// Probe sampling + least-loaded assignment, once over the dense SoA
+/// hot-field mirror and once over the reference struct reads
+/// (`soa_hot_fields` off) — the read-path before/after pair of
+/// hot-path campaign part 2. Same cluster shape, same RNG seed; the
+/// placements are bit-identical, only the memory traffic differs.
+fn bench_probe_placement(entries: &mut Vec<String>) {
+    for (label, soa) in
+        [("probe_place_soa_dense", true), ("probe_place_struct_before", false)]
+    {
+        let mut cluster = Cluster::new(3920, 80, QueuePolicy::Fifo);
+        cluster.set_soa_hot_fields(soa);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(3.0);
+        let mut rng = Rng::new(3);
+        // Pre-load some servers.
+        for i in 0..2000u32 {
+            let t = cluster.add_task(JobId(0), 100.0, i % 5 == 0, 0.0);
+            cluster.enqueue(t, ServerRef::initial(i), &mut engine, &mut rec);
+        }
+        let pool: Vec<ServerRef> = cluster.general.clone();
+        let mut buf = ProbeBuffers::new();
+        let mut out = Vec::new();
+        let costs = vec![30.0f64; 20];
+        let r = bench(&format!("micro/{label}_40probes"), 100, 20, || {
+            buf.candidates.clear();
+            sample_from_pool(&pool, 40, &cluster, &mut rng, &mut buf);
+            filter_long(&cluster, &mut buf);
+            assign_least_loaded(&cluster, &costs, &mut buf, &mut out);
+            black_box(out.len());
+        });
+        println!(
+            "  -> {} per short-job placement (40 probes, {label})",
+            fmt_ns(r.median_ns())
+        );
+        entries.push(json_entry(label, &r));
+    }
+}
+
+/// Transient revoke churn on the zero-alloc path: `revoke_into` with a
+/// caller-owned orphan scratch, server slots recycling through the
+/// free list and queue buffers through the capacity pool. The pool
+/// counters are recorded next to the timing — at steady state the hit
+/// counts track the cycle count and the misses stay bounded by warmup,
+/// which is the "zero steady-state allocations" evidence in JSON form.
+fn bench_revoke_pool(entries: &mut Vec<String>) {
+    let mut cluster = Cluster::new(16, 4, QueuePolicy::Fifo);
     let mut engine = Engine::new();
     let mut rec = Recorder::new(3.0);
-    let mut rng = Rng::new(3);
-    // Pre-load some servers.
-    for i in 0..2000u32 {
-        let t = cluster.add_task(JobId(0), 100.0, i % 5 == 0, 0.0);
-        cluster.enqueue(t, ServerRef::initial(i), &mut engine, &mut rec);
-    }
-    let pool: Vec<ServerRef> = cluster.general.clone();
-    let mut buf = ProbeBuffers::new();
-    let mut out = Vec::new();
-    let costs = vec![30.0f64; 20];
-    let r = bench("micro/probe_place_20task_job", 100, 20, || {
-        buf.candidates.clear();
-        sample_from_pool(&pool, 40, &cluster, &mut rng, &mut buf);
-        filter_long(&cluster, &mut buf);
-        assign_least_loaded(&cluster, &costs, &mut buf, &mut out);
-        black_box(out.len());
+    let mut orphans: Vec<TaskRef> = Vec::new();
+    let mut now = 0.0f64;
+    let cycles = 500u64;
+    let r = bench("micro/revoke_into_pooled_x500", 1, 10, || {
+        for _ in 0..cycles {
+            let sid = cluster.request_transient(now);
+            cluster.transient_ready(sid, now, &mut rec);
+            for i in 0..8 {
+                let t = cluster.add_task(JobId(i), 50.0, false, now);
+                cluster.enqueue(t, sid, &mut engine, &mut rec);
+            }
+            cluster.revoke_into(sid, now + 1.0, &mut rec, &mut orphans);
+            black_box(orphans.len());
+            now += 10.0;
+        }
     });
-    println!("  -> {} per short-job placement (40 probes)", fmt_ns(r.median_ns()));
+    println!(
+        "  -> {} per request->load->revoke cycle",
+        fmt_ns(r.median_ns() / cycles as f64)
+    );
+    entries.push(json_entry("revoke_into_pooled_cycle500", &r));
+    let p = cluster.pool_stats();
+    entries.push(format!(
+        "    {{\"name\": \"revoke_pool_counters\", \"server_slot_hits\": {}, \
+         \"server_slot_misses\": {}, \"queue_buf_hits\": {}, \"queue_buf_misses\": {}}}",
+        p.server_slot_hits, p.server_slot_misses, p.queue_buf_hits, p.queue_buf_misses
+    ));
 }
 
 fn bench_steal() {
@@ -219,9 +274,10 @@ fn main() {
     bench_event_queue(&mut engine_entries);
     bench_engine_churn(&mut engine_entries);
     bench_engine_burst(&mut engine_entries);
+    bench_probe_placement(&mut engine_entries);
+    bench_revoke_pool(&mut engine_entries);
     write_engine_json(&engine_entries);
     bench_mintree();
-    bench_probe_placement();
     bench_steal();
     bench_analytics();
 }

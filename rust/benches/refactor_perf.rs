@@ -6,6 +6,9 @@
 //! * indexed `least_loaded_general` / `least_loaded_short_reserved`
 //!   queries vs the naive linear scans they replaced ("before" is the
 //!   scan, re-implemented here verbatim);
+//! * steady-state revocation churn through the pooled `revoke_into`
+//!   scratch vs the allocating `revoke` wrapper (hot-path campaign
+//!   part 2), with the pool hit/miss counters recorded alongside;
 //! * a paper-grid sweep executed serially vs fanned out with
 //!   `run_sweep_parallel` across all cores.
 //!
@@ -18,7 +21,7 @@ use cloudcoaster::cluster::{Cluster, QueuePolicy};
 use cloudcoaster::coordinator::sweep::{paper_points, run_sweep_parallel};
 use cloudcoaster::metrics::Recorder;
 use cloudcoaster::sim::{Engine, Rng};
-use cloudcoaster::util::{JobId, ServerRef};
+use cloudcoaster::util::{JobId, ServerRef, TaskRef};
 
 /// The pre-refactor short-pool scan (what `least_loaded_short_ondemand`
 /// and `replace_orphans` did per placement).
@@ -180,6 +183,49 @@ fn main() {
             "    {{\"name\": \"{label}_final_slots\", \"slots\": {}, \"peak_resident\": {}}}",
             cluster.server_slots(),
             cluster.peak_resident_servers()
+        ));
+    }
+
+    // ---- steady-state allocation: pooled scratch vs fresh Vecs ------
+    // The zero-alloc campaign's before/after. The same request ->
+    // ready -> load -> revoke churn runs once through `revoke_into`
+    // with a reused orphan scratch (and the queue-buffer pool behind
+    // retire/request underneath), and once through the allocating
+    // `revoke` wrapper that returns a fresh Vec per call. The results
+    // are identical; the delta is the steady-state allocator traffic
+    // on the revocation path. Pool hit/miss counters ride along as the
+    // structural evidence (hits track cycles, misses stay at warmup).
+    for (label, pooled) in
+        [("alloc_steady_state_pooled", true), ("alloc_steady_state_before", false)]
+    {
+        let mut cluster = Cluster::new(16, 4, QueuePolicy::Fifo);
+        let mut engine = Engine::new();
+        let mut rec = Recorder::new(3.0);
+        let mut scratch: Vec<TaskRef> = Vec::new();
+        let mut now = 0.0f64;
+        let r = bench(&format!("refactor/{label}_x2000"), 1, 10, || {
+            for _ in 0..2000u64 {
+                let sid = cluster.request_transient(now);
+                cluster.transient_ready(sid, now, &mut rec);
+                for i in 0..4 {
+                    let t = cluster.add_task(JobId(i), 25.0, false, now);
+                    cluster.enqueue(t, sid, &mut engine, &mut rec);
+                }
+                if pooled {
+                    cluster.revoke_into(sid, now + 1.0, &mut rec, &mut scratch);
+                    black_box(scratch.len());
+                } else {
+                    black_box(cluster.revoke(sid, now + 1.0, &mut rec).len());
+                }
+                now += 10.0;
+            }
+        });
+        entries.push(json_entry(label, &r));
+        let p = cluster.pool_stats();
+        entries.push(format!(
+            "    {{\"name\": \"{label}_pool_counters\", \"server_slot_hits\": {}, \
+             \"server_slot_misses\": {}, \"queue_buf_hits\": {}, \"queue_buf_misses\": {}}}",
+            p.server_slot_hits, p.server_slot_misses, p.queue_buf_hits, p.queue_buf_misses
         ));
     }
 

@@ -49,6 +49,39 @@
 //! ([`Cluster::set_server_recycling`]) for golden comparisons;
 //! `peak_resident_servers` accounting is mode-independent, so every
 //! simulation observable is bit-identical either way.
+//!
+//! ## Struct-of-arrays hot fields
+//!
+//! The placement/argmin paths (probe sampling, `least_loaded_*`,
+//! Eagle's succinct-state filter) touch four per-server fields on
+//! every event: `est_work`, queue depth, the accepting/long state
+//! bits, and `ready_seq`. Walking `Vec<Server>` for those reads drags
+//! the cold remainder (the queue `VecDeque`, lifecycle timestamps)
+//! through cache. [`HotFields`] keeps a dense parallel-array mirror,
+//! **indexed by arena slot** — the generation discipline is unchanged:
+//! handles are still validated against `Server::id` (hot-field
+//! accessors `debug_assert` it), and slot reuse overwrites the arrays
+//! in lockstep with the struct. The arrays are maintained
+//! *unconditionally* by every mutator ([`Cluster::sync_hot`], called
+//! from `sync_index` and every state transition);
+//! [`Cluster::set_soa_hot_fields`] only switches which representation
+//! the read accessors consult, so SoA-vs-struct bit-identity is
+//! testable the same way the recycling toggles are, and
+//! [`Cluster::check_invariants`] pins array == struct in both modes.
+//!
+//! ## Steady-state allocation pooling
+//!
+//! The event loop's mutation paths allocate nothing once warm:
+//! `try_start_next` pruning and `steal_short_tasks` run on pooled
+//! scratch buffers, [`Cluster::revoke_into`] fills a caller-passed
+//! orphan buffer (the [`Engine::pop_batch`] idiom), and retired
+//! transients donate their queue `VecDeque` buffers to a free pool
+//! that [`Cluster::request_transient`] reinstalls on the slot's next
+//! tenant. [`PoolStats`] counts hits/misses for every pool (task
+//! slots, server slots, queue buffers) — deterministic counters the
+//! opt-in profiler reports as the zero-alloc evidence.
+
+use std::collections::VecDeque;
 
 use crate::cluster::{
     Pool, PoolIndex, QueuePolicy, Server, ServerKind, ServerState, Task, TaskState,
@@ -74,6 +107,59 @@ pub enum FinishOutcome {
         /// retire it.
         drained: bool,
     },
+}
+
+/// Dense parallel arrays of the per-server fields the placement,
+/// probe and argmin paths touch every event (see the module docs).
+/// Indexed by **arena slot**; maintained in lockstep with the
+/// `Server` structs by every mutator, whether or not the SoA read
+/// path is enabled.
+#[derive(Clone, Debug, Default)]
+pub struct HotFields {
+    /// Estimated queued + running work (the probe-score field).
+    pub est_work: Vec<f64>,
+    /// Queue length + running occupancy — the transient-index depth key.
+    pub depth: Vec<u32>,
+    /// State tag collapsed to the one bit placement cares about
+    /// (`state == Active`).
+    pub accepting: Vec<bool>,
+    /// Eagle's succinct state: does the server host any long task?
+    pub has_long: Vec<bool>,
+    /// Kind tag collapsed to the bit the §3.3 duplication check reads.
+    pub is_transient: Vec<bool>,
+    /// Activation order — the transient drain-victim tie-break key.
+    pub ready_seq: Vec<u64>,
+}
+
+impl HotFields {
+    /// Extend every array by one default slot (new arena slot appended).
+    fn push_slot(&mut self) {
+        self.est_work.push(0.0);
+        self.depth.push(0);
+        self.accepting.push(false);
+        self.has_long.push(false);
+        self.is_transient.push(false);
+        self.ready_seq.push(0);
+    }
+}
+
+/// Hit/miss counters for the steady-state allocation pools. A *hit*
+/// reuses pooled capacity; a *miss* allocates fresh. Pure event-driven
+/// counts — deterministic for a fixed config, so the profiler reports
+/// them and CI pins run-to-run identity. Not part of the bit-identity
+/// surface (reference modes legitimately miss more).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Task arena: slot popped from the free list vs fresh append.
+    pub task_slot_hits: u64,
+    pub task_slot_misses: u64,
+    /// Server arena: retired-transient slot reused vs fresh append.
+    pub server_slot_hits: u64,
+    pub server_slot_misses: u64,
+    /// Transient queue `VecDeque` buffers reinstalled from the pool vs
+    /// freshly allocated with the new tenant.
+    pub queue_buf_hits: u64,
+    pub queue_buf_misses: u64,
 }
 
 /// Full simulated-cluster state.
@@ -126,6 +212,25 @@ pub struct Cluster {
     /// Per-pool argmin indexes (general / short-reserved / transient) —
     /// O(log N) exact least-loaded queries for every placement path.
     index: PoolIndex,
+    /// Dense SoA mirror of the hot fields, indexed by arena slot.
+    /// Always maintained; [`Cluster::set_soa_hot_fields`] picks the
+    /// read path.
+    hot: HotFields,
+    /// Serve hot-field reads from the dense arrays (default). Off =
+    /// read back through the `Server` structs — the reference layout
+    /// for the SoA-vs-struct golden pin.
+    soa_hot_fields: bool,
+    /// Retired transients' queue buffers awaiting reuse: the buffer
+    /// recycles alongside the arena slot so steady-state provisioning
+    /// churn reuses capacity instead of allocating per tenant.
+    free_queue_bufs: Vec<VecDeque<TaskRef>>,
+    /// Allocation-pool hit/miss counters (profiler evidence).
+    pool_stats: PoolStats,
+    /// Pooled scratch for `try_start_next` pruning — taken/restored
+    /// around the dequeue loop; never allocates once warm.
+    scratch_pruned: Vec<TaskRef>,
+    /// Pooled scratch for `steal_short_tasks` (same discipline).
+    scratch_stolen: Vec<TaskRef>,
 }
 
 impl Cluster {
@@ -145,7 +250,7 @@ impl Cluster {
                 short_reserved.push(id);
             }
         }
-        Cluster {
+        let mut cluster = Cluster {
             n_total: servers.len(),
             resident_servers: servers.len(),
             peak_resident_servers: servers.len(),
@@ -165,7 +270,18 @@ impl Cluster {
             short_reserved,
             transient_pool: Vec::new(),
             index: PoolIndex::new(n_general, n_short_reserved),
+            hot: HotFields::default(),
+            soa_hot_fields: true,
+            free_queue_bufs: Vec::new(),
+            pool_stats: PoolStats::default(),
+            scratch_pruned: Vec::new(),
+            scratch_stolen: Vec::new(),
+        };
+        for slot in 0..cluster.servers.len() {
+            cluster.hot.push_slot();
+            cluster.sync_hot(slot);
         }
+        cluster
     }
 
     /// Toggle task-slot recycling. Off keeps the arena append-only (the
@@ -185,6 +301,37 @@ impl Cluster {
         self.recycle_servers = on;
     }
 
+    /// Toggle the SoA read path for the hot fields (default on). The
+    /// dense arrays are maintained by every mutator in both modes —
+    /// this only picks which representation the read accessors
+    /// ([`Cluster::est_work_of`], [`Cluster::is_accepting`],
+    /// [`Cluster::has_long`], [`Cluster::has_queued`],
+    /// [`Cluster::is_transient`]) consult, so every simulation
+    /// observable is bit-identical either way; the golden tests pin it.
+    pub fn set_soa_hot_fields(&mut self, on: bool) {
+        self.soa_hot_fields = on;
+    }
+
+    /// Allocation-pool hit/miss counters (see [`PoolStats`]).
+    #[inline]
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool_stats
+    }
+
+    /// Refresh the dense hot-field mirror for one arena slot from its
+    /// `Server` struct. Called from [`Cluster::sync_index`] (every load
+    /// change) and from every state transition that bypasses it.
+    #[inline]
+    fn sync_hot(&mut self, slot: usize) {
+        let s = &self.servers[slot];
+        self.hot.est_work[slot] = s.est_work;
+        self.hot.depth[slot] = s.depth() as u32;
+        self.hot.accepting[slot] = s.accepting();
+        self.hot.has_long[slot] = s.long_tasks > 0;
+        self.hot.is_transient[slot] = s.kind == ServerKind::Transient;
+        self.hot.ready_seq[slot] = s.ready_seq;
+    }
+
     /// Keep the per-pool argmin indexes in sync after any load change on
     /// `sid` (est_work, queue depth, or running slot).
     #[inline]
@@ -194,6 +341,7 @@ impl Cluster {
             debug_assert_eq!(s.id, sid, "sync_index through a stale ServerRef");
             (s.pool, s.est_work, s.depth() as u32, s.ready_seq)
         };
+        self.sync_hot(sid.index());
         match pool {
             Pool::General => self.index.update_general(sid.index(), est_work),
             Pool::ShortReserved => {
@@ -349,7 +497,61 @@ impl Cluster {
     /// head-of-line blocking.)
     #[inline]
     pub fn has_long(&self, id: ServerRef) -> bool {
-        self.servers[id.index()].long_tasks > 0
+        debug_assert_eq!(self.servers[id.index()].id, id, "has_long through a stale ServerRef");
+        if self.soa_hot_fields {
+            self.hot.has_long[id.index()]
+        } else {
+            self.servers[id.index()].long_tasks > 0
+        }
+    }
+
+    /// Estimated queued + running work on `id` — the probe-score read
+    /// every placement path makes. Dense-array read by default.
+    #[inline]
+    pub fn est_work_of(&self, id: ServerRef) -> f64 {
+        debug_assert_eq!(self.servers[id.index()].id, id, "est_work_of through a stale ServerRef");
+        if self.soa_hot_fields {
+            self.hot.est_work[id.index()]
+        } else {
+            self.servers[id.index()].est_work
+        }
+    }
+
+    /// Is `id` accepting new work (state == Active)? The probe-sampling
+    /// filter. Dense-array read by default.
+    #[inline]
+    pub fn is_accepting(&self, id: ServerRef) -> bool {
+        debug_assert_eq!(self.servers[id.index()].id, id, "is_accepting through a stale ServerRef");
+        if self.soa_hot_fields {
+            self.hot.accepting[id.index()]
+        } else {
+            self.servers[id.index()].accepting()
+        }
+    }
+
+    /// Is `id` a transient server? The §3.3 duplication check's kind
+    /// read. Dense-array read by default.
+    #[inline]
+    pub fn is_transient(&self, id: ServerRef) -> bool {
+        debug_assert_eq!(self.servers[id.index()].id, id, "is_transient through a stale ServerRef");
+        if self.soa_hot_fields {
+            self.hot.is_transient[id.index()]
+        } else {
+            self.servers[id.index()].kind == ServerKind::Transient
+        }
+    }
+
+    /// Does `id` have any *queued* (not running) task? The work
+    /// stealer's victim filter. The dense path derives queue length
+    /// from the depth array (depth = queue length + running occupancy).
+    #[inline]
+    pub fn has_queued(&self, id: ServerRef) -> bool {
+        debug_assert_eq!(self.servers[id.index()].id, id, "has_queued through a stale ServerRef");
+        if self.soa_hot_fields {
+            self.hot.depth[id.index()] > self.servers[id.index()].running.is_some() as u32
+        } else {
+            !self.servers[id.index()].queue.is_empty()
+        }
     }
 
     // ---------------------------------------------------------- tasks
@@ -362,11 +564,13 @@ impl Cluster {
         if let Some(slot) = self.free_slots.pop() {
             // The generation was bumped at release; reuse it as-is so
             // every pre-release handle stays invalid.
+            self.pool_stats.task_slot_hits += 1;
             let gen = self.tasks[slot as usize].id.gen;
             let id = TaskRef { slot, gen };
             self.tasks[slot as usize] = Task::new(id, job, duration, is_long, now);
             id
         } else {
+            self.pool_stats.task_slot_misses += 1;
             let id = TaskRef { slot: self.tasks.len() as u32, gen: 0 };
             self.tasks.push(Task::new(id, job, duration, is_long, now));
             id
@@ -441,7 +645,9 @@ impl Cluster {
         if self.servers[server_id.index()].running.is_some() {
             return;
         }
-        let mut pruned: Vec<TaskRef> = Vec::new();
+        // Pooled scratch: taken for the loop, restored (cleared) on
+        // every exit — the dequeue path never allocates once warm.
+        let mut pruned: Vec<TaskRef> = std::mem::take(&mut self.scratch_pruned);
         loop {
             let idx = {
                 let server = &mut self.servers[server_id.index()];
@@ -464,7 +670,7 @@ impl Cluster {
             let Some(idx) = idx else {
                 // Pruning may have shortened the queue — resync depth.
                 self.sync_index(server_id);
-                return;
+                break;
             };
             let server = &mut self.servers[server_id.index()];
             let task_id = server.queue.remove(idx).expect("index from select_next");
@@ -506,8 +712,10 @@ impl Cluster {
                 self.sync_index(other_sid);
             }
             self.sync_index(server_id);
-            return;
+            break;
         }
+        pruned.clear();
+        self.scratch_pruned = pruned;
     }
 
     /// Consume a popped `TaskFinish` event: drop its liveness ref, filter
@@ -587,7 +795,8 @@ impl Cluster {
         if victim == thief || !self.servers[thief.index()].accepting() {
             return 0;
         }
-        let mut stolen: Vec<TaskRef> = Vec::with_capacity(max_n);
+        // Pooled scratch (same discipline as `try_start_next`).
+        let mut stolen: Vec<TaskRef> = std::mem::take(&mut self.scratch_stolen);
         {
             let queue = &mut self.servers[victim.index()].queue;
             let mut i = 0;
@@ -617,9 +826,12 @@ impl Cluster {
         }
         self.sync_index(victim);
         let n = stolen.len();
-        for tid in stolen {
+        for i in 0..n {
+            let tid = stolen[i];
             self.enqueue(tid, thief, engine, rec);
         }
+        stolen.clear();
+        self.scratch_stolen = stolen;
         n
     }
 
@@ -636,18 +848,31 @@ impl Cluster {
         let id = if let Some(slot) = self.free_server_slots.pop() {
             // The generation was bumped at release; reuse it as-is so
             // every pre-release handle stays invalid.
+            self.pool_stats.server_slot_hits += 1;
             let gen = self.servers[slot as usize].id.gen;
             ServerRef { slot, gen }
         } else {
+            self.pool_stats.server_slot_misses += 1;
             ServerRef::initial(self.servers.len() as u32)
         };
-        let server =
+        let mut server =
             Server::new(id, ServerKind::Transient, Pool::TransientPool, ServerState::Provisioning, now);
+        // Reinstall a recycled queue buffer (harvested at retire) so
+        // steady-state provisioning churn reuses capacity.
+        if let Some(buf) = self.free_queue_bufs.pop() {
+            debug_assert!(buf.is_empty(), "pooled queue buffer not drained");
+            self.pool_stats.queue_buf_hits += 1;
+            server.queue = buf;
+        } else {
+            self.pool_stats.queue_buf_misses += 1;
+        }
         if id.index() == self.servers.len() {
             self.servers.push(server);
+            self.hot.push_slot();
         } else {
             self.servers[id.index()] = server;
         }
+        self.sync_hot(id.index());
         id
     }
 
@@ -676,6 +901,7 @@ impl Cluster {
             server.ready_seq = seq;
             (server.depth() as u32, server.est_work, seq)
         };
+        self.sync_hot(id.index());
         self.transient_pool.push(id);
         self.index.insert_transient(id, key);
         self.n_total += 1;
@@ -689,6 +915,7 @@ impl Cluster {
         debug_assert_eq!(server.state, ServerState::Active);
         debug_assert_eq!(server.kind, ServerKind::Transient);
         server.state = ServerState::Draining;
+        self.sync_hot(id.index());
         // Remove from the probe-candidate pool and load index immediately.
         self.transient_pool.retain(|&s| s != id);
         self.index.remove_transient(id);
@@ -711,6 +938,12 @@ impl Cluster {
         server.state = ServerState::Retired;
         server.retired_at = now;
         let lifetime = now - server.active_at;
+        // Harvest the (empty) queue buffer: its capacity recycles
+        // through the free pool to the next provisioned transient.
+        let buf = std::mem::take(&mut server.queue);
+        debug_assert!(buf.is_empty(), "retire harvested a non-empty queue");
+        self.free_queue_bufs.push(buf);
+        self.sync_hot(id.index());
         self.transient_pool.retain(|&s| s != id);
         self.index.remove_transient(id); // no-op if drain already removed it
         self.n_total -= 1;
@@ -727,18 +960,27 @@ impl Cluster {
     /// Revoke a transient server immediately (provider reclaim, §3.3).
     ///
     /// Queued copies on it become stale; tasks whose *only* copy lived
-    /// here (including a task mid-execution) are returned for
-    /// rescheduling. The interrupted execution's already-scheduled
-    /// `TaskFinish` event stays in the queue as a liveness ref — it pops
-    /// later, resolves [`FinishOutcome::Stale`], and only then can the
-    /// slot recycle.
-    pub fn revoke(&mut self, id: ServerRef, now: Time, rec: &mut Recorder) -> Vec<TaskRef> {
-        let mut orphans = Vec::new();
-        let (queued, running): (Vec<TaskRef>, Option<TaskRef>) = {
-            let server = &self.servers[id.index()];
-            (server.queue.iter().copied().collect(), server.running)
-        };
-        for tid in queued {
+    /// here (including a task mid-execution) are appended to `orphans`
+    /// (cleared first) for rescheduling — a caller-passed scratch
+    /// buffer, like [`Engine::pop_batch`], so the revocation path
+    /// allocates nothing at steady state. The interrupted execution's
+    /// already-scheduled `TaskFinish` event stays in the queue as a
+    /// liveness ref — it pops later, resolves [`FinishOutcome::Stale`],
+    /// and only then can the slot recycle.
+    pub fn revoke_into(
+        &mut self,
+        id: ServerRef,
+        now: Time,
+        rec: &mut Recorder,
+        orphans: &mut Vec<TaskRef>,
+    ) {
+        orphans.clear();
+        // Take the queue instead of collecting it into a fresh Vec: it
+        // is emptied below anyway, and the drained buffer goes back on
+        // the slot so `retire` harvests its capacity into the pool.
+        let mut queue = std::mem::take(&mut self.servers[id.index()].queue);
+        let running = self.servers[id.index()].running;
+        for tid in queue.drain(..) {
             let task = &mut self.tasks[tid.index()];
             debug_assert_eq!(task.id, tid, "queue entry outlived its slot");
             if task.state == TaskState::Queued {
@@ -755,6 +997,7 @@ impl Cluster {
                 self.maybe_free(tid);
             }
         }
+        self.servers[id.index()].queue = queue;
         if let Some(tid) = running {
             // Mid-execution work is lost; the task restarts elsewhere.
             // (Its pending finish event keeps the slot pinned until it
@@ -767,9 +1010,11 @@ impl Cluster {
                 // §3.3 payoff: a shadow copy still sits queued on an
                 // on-demand server — the task resurrects there. Restore
                 // the load-estimate contribution discounted at start.
+                // (`placed_on` is a fixed two-slot array; copy it out
+                // instead of collecting a Vec.)
                 let dur = task.duration;
-                let locs: Vec<ServerRef> = task.placed_on.iter().flatten().copied().collect();
-                for loc in locs {
+                let locs = task.placed_on;
+                for loc in locs.into_iter().flatten() {
                     self.servers[loc.index()].est_work += dur;
                     self.sync_index(loc);
                 }
@@ -779,7 +1024,6 @@ impl Cluster {
         }
         {
             let server = &mut self.servers[id.index()];
-            server.queue.clear();
             server.running = None;
             server.est_work = 0.0;
             // Settle the N_long counter here (retire() sees 0 below).
@@ -788,8 +1032,17 @@ impl Cluster {
                 self.n_long_servers -= 1;
             }
         }
+        self.sync_hot(id.index());
         rec.transients_revoked += 1;
         self.retire(id, now, rec);
+    }
+
+    /// [`Cluster::revoke_into`] returning a fresh orphan Vec — the
+    /// allocating convenience wrapper (tests, tooling); the event loop
+    /// threads its pooled scratch through `revoke_into` instead.
+    pub fn revoke(&mut self, id: ServerRef, now: Time, rec: &mut Recorder) -> Vec<TaskRef> {
+        let mut orphans = Vec::new();
+        self.revoke_into(id, now, rec, &mut orphans);
         orphans
     }
 
@@ -848,10 +1101,30 @@ impl Cluster {
             })
             .count();
         assert_eq!(self.n_provisioning, provisioning_scan, "provisioning counter drift");
+        // SoA mirror: the dense hot-field arrays track the structs
+        // exactly — for every slot, in both read modes, freed or live
+        // (retire refreshes the arrays before releasing the slot).
+        assert_eq!(self.hot.est_work.len(), self.servers.len(), "hot-array length drift");
+        assert_eq!(self.hot.depth.len(), self.servers.len(), "hot-array length drift");
+        assert_eq!(self.hot.ready_seq.len(), self.servers.len(), "hot-array length drift");
         let mut n_long = 0;
         let mut n_total = 0;
         for (i, s) in self.servers.iter().enumerate() {
             assert_eq!(s.id.index(), i, "server id/slot drift at {i}");
+            assert_eq!(
+                self.hot.est_work[i].to_bits(),
+                s.est_work.to_bits(),
+                "SoA est_work drift at slot {i}"
+            );
+            assert_eq!(self.hot.depth[i] as usize, s.depth(), "SoA depth drift at slot {i}");
+            assert_eq!(self.hot.accepting[i], s.accepting(), "SoA accepting drift at slot {i}");
+            assert_eq!(self.hot.has_long[i], s.long_tasks > 0, "SoA has_long drift at slot {i}");
+            assert_eq!(
+                self.hot.is_transient[i],
+                s.kind == ServerKind::Transient,
+                "SoA is_transient drift at slot {i}"
+            );
+            assert_eq!(self.hot.ready_seq[i], s.ready_seq, "SoA ready_seq drift at slot {i}");
             if free_servers.contains(&(i as u32)) {
                 // Released slot awaiting reuse: payload is the retired
                 // previous tenant; no live invariants apply.
@@ -1292,5 +1565,84 @@ mod tests {
         c.transient_ready(cc, 4.0, &mut r);
         assert_eq!(c.transient_drain_victim(), Some(b));
         c.check_invariants();
+    }
+
+    #[test]
+    fn dense_accessors_match_struct_reads_in_both_modes() {
+        let (mut c, mut e, mut r) = setup();
+        let sid = c.request_transient(0.0);
+        c.transient_ready(sid, 1.0, &mut r);
+        let blocker = c.add_task(JobId(0), 50.0, false, 0.0);
+        c.enqueue(blocker, sref(0), &mut e, &mut r);
+        let t = c.add_task(JobId(0), 10.0, false, 0.0);
+        c.enqueue(t, sref(0), &mut e, &mut r); // queued behind blocker
+        let tl = c.add_task(JobId(0), 99.0, true, 0.0);
+        c.enqueue(tl, sref(1), &mut e, &mut r);
+        for soa in [true, false] {
+            c.set_soa_hot_fields(soa);
+            for s in [sref(0), sref(1), sref(4), sid] {
+                assert_eq!(c.est_work_of(s).to_bits(), c.server(s).est_work.to_bits());
+                assert_eq!(c.is_accepting(s), c.server(s).accepting());
+                assert_eq!(c.has_long(s), c.server(s).long_tasks > 0);
+                assert_eq!(c.has_queued(s), !c.server(s).queue.is_empty());
+                assert_eq!(c.is_transient(s), c.server(s).kind == ServerKind::Transient);
+            }
+        }
+        assert!(c.has_queued(sref(0)));
+        assert!(!c.has_queued(sref(1))); // running, nothing queued
+        assert!(c.has_long(sref(1)));
+        assert!(c.is_transient(sid));
+        assert!(!c.is_transient(sref(0)));
+        c.check_invariants();
+    }
+
+    #[test]
+    fn queue_buffers_recycle_through_the_pool() {
+        let (mut c, mut e, mut r) = setup();
+        // Three sequential transient lifecycles with queued work: the
+        // first tenant's buffer misses the pool, the next two hit.
+        for wave in 0..3 {
+            let now = wave as f64 * 100.0;
+            let sid = c.request_transient(now);
+            c.transient_ready(sid, now + 1.0, &mut r);
+            let t = c.add_task(JobId(wave), 5.0, false, now + 1.0);
+            c.enqueue(t, sid, &mut e, &mut r);
+            drain_events(&mut c, &mut e, &mut r);
+            assert!(c.begin_drain(sid), "drained transient should be idle");
+            c.retire(sid, now + 50.0, &mut r);
+            c.check_invariants();
+        }
+        let ps = c.pool_stats();
+        assert_eq!(ps.queue_buf_misses, 1, "only the first tenant allocates");
+        assert_eq!(ps.queue_buf_hits, 2, "later tenants reuse the pooled buffer");
+        assert_eq!(ps.server_slot_hits, 2);
+        assert_eq!(ps.server_slot_misses, 1);
+    }
+
+    #[test]
+    fn revoke_into_matches_revoke_and_reuses_scratch() {
+        // Two identical clusters; one revokes through the allocating
+        // wrapper, the other through the pooled-scratch entry point.
+        let build = |c: &mut Cluster, e: &mut Engine, r: &mut Recorder| {
+            let sid = c.request_transient(0.0);
+            c.transient_ready(sid, 0.0, r);
+            let b = c.add_task(JobId(0), 100.0, false, 0.0);
+            c.enqueue(b, sid, e, r);
+            let only = c.add_task(JobId(0), 30.0, false, 0.0);
+            c.enqueue(only, sid, e, r);
+            (sid, only, b)
+        };
+        let (mut c1, mut e1, mut r1) = setup();
+        let (sid1, only1, b1) = build(&mut c1, &mut e1, &mut r1);
+        let via_wrapper = c1.revoke(sid1, 10.0, &mut r1);
+        let (mut c2, mut e2, mut r2) = setup();
+        let (sid2, _, _) = build(&mut c2, &mut e2, &mut r2);
+        let mut scratch = vec![TaskRef { slot: 999, gen: 7 }]; // stale junk: must be cleared
+        c2.revoke_into(sid2, 10.0, &mut r2, &mut scratch);
+        assert_eq!(via_wrapper.len(), scratch.len());
+        assert!(via_wrapper.contains(&only1));
+        assert!(via_wrapper.contains(&b1));
+        c1.check_invariants();
+        c2.check_invariants();
     }
 }

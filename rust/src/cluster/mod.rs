@@ -6,6 +6,21 @@
 //! transient's slot recycles immediately; stale lifecycle events fail
 //! the generation check). Plus the incrementally-maintained
 //! long-load-ratio state and the per-pool argmin indexes.
+//!
+//! **SoA layout invariant:** the per-server hot fields the placement
+//! and argmin paths read every event (`est_work`, queue depth, the
+//! accepting/long/transient state bits, `ready_seq`) are mirrored into
+//! dense parallel arrays ([`HotFields`]) indexed by **arena slot**.
+//! The generation discipline is unchanged — handles still validate
+//! against the slot's live generation, and slot reuse overwrites the
+//! arrays in lockstep with the struct — and the mirror is maintained
+//! unconditionally, so toggling the SoA read path
+//! ([`Cluster::set_soa_hot_fields`]) cannot change any simulation
+//! observable. Steady-state mutators allocate nothing: revocation
+//! fills a caller-passed scratch ([`Cluster::revoke_into`]), pruning
+//! and stealing run on pooled buffers, and retired transients' queue
+//! buffers recycle through a free pool ([`PoolStats`] counts the
+//! hits/misses).
 
 #[allow(clippy::module_inception)]
 mod cluster;
@@ -13,7 +28,7 @@ mod index;
 mod server;
 mod task;
 
-pub use cluster::{Cluster, FinishOutcome};
+pub use cluster::{Cluster, FinishOutcome, HotFields, PoolStats};
 pub use index::{PoolIndex, TransientKey};
 pub use server::{Pool, QueuePolicy, Server, ServerKind, ServerState};
 pub use task::{Task, TaskState};

@@ -95,6 +95,16 @@ pub struct ExperimentConfig {
     /// `--reference-engine true`). Bit-identical results; kept for the
     /// CI engine-equivalence smoke and golden comparisons.
     pub reference_engine: bool,
+    /// Serve hot per-server fields from the cluster's dense
+    /// struct-of-arrays mirror (default) or the reference `Server`
+    /// struct layout (`soa_hot_fields = false` / `--soa-hot-fields
+    /// false`). Bit-identical results either way; kept for golden
+    /// comparisons of the SoA read path.
+    pub soa_hot_fields: bool,
+    /// Enable the hot-path profiler (`profile = true` / `--profile`).
+    /// Reported on stderr + optional JSON; the default stdout surface
+    /// stays byte-identical to an unprofiled run.
+    pub profile: bool,
     pub seed: u64,
     pub workload: WorkloadSource,
     /// Declarative workload scenario (source + combinator stack +
@@ -128,6 +138,8 @@ impl ExperimentConfig {
             predictive: false,
             snapshot_interval: 60.0,
             reference_engine: false,
+            soa_hot_fields: true,
+            profile: false,
             seed: 42,
             workload: WorkloadSource::YahooLike(YahooLikeParams::default()),
             scenario: None,
@@ -188,6 +200,8 @@ impl ExperimentConfig {
                     manager: Some(manager),
                     snapshot_interval: self.snapshot_interval,
                     reference_engine: self.reference_engine,
+                    soa_hot_fields: self.soa_hot_fields,
+                    profile: self.profile,
                     seed: self.seed,
                     ..Default::default()
                 }
@@ -199,6 +213,8 @@ impl ExperimentConfig {
                 manager: None,
                 snapshot_interval: self.snapshot_interval,
                 reference_engine: self.reference_engine,
+                soa_hot_fields: self.soa_hot_fields,
+                profile: self.profile,
                 seed: self.seed,
                 ..Default::default()
             },
@@ -261,6 +277,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = t.get("engine.reference").and_then(|v| v.as_bool()) {
             cfg.reference_engine = v;
+        }
+        if let Some(v) = t.get("engine.soa_hot_fields").and_then(|v| v.as_bool()) {
+            cfg.soa_hot_fields = v;
+        }
+        if let Some(v) = t.get("profile").and_then(|v| v.as_bool()) {
+            cfg.profile = v;
         }
         if let Some(v) = t.get("seed").and_then(|v| v.as_u64()) {
             cfg.seed = v;
@@ -415,6 +437,24 @@ mod tests {
     #[test]
     fn invalid_scenario_rejected_by_config() {
         assert!(ExperimentConfig::from_toml("[scenario]\nstorm_windows = [9, 1]\n").is_err());
+    }
+
+    #[test]
+    fn profile_and_soa_keys_parse_and_thread_through() {
+        let cfg = ExperimentConfig::from_toml(
+            "profile = true\n[engine]\nsoa_hot_fields = false\n",
+        )
+        .unwrap();
+        assert!(cfg.profile);
+        assert!(!cfg.soa_hot_fields);
+        let sim = cfg.to_sim_config();
+        assert!(sim.profile);
+        assert!(!sim.soa_hot_fields);
+        // Defaults: SoA reads on, profiling off — on both scheduler arms.
+        let d = ExperimentConfig::paper_defaults().to_sim_config();
+        assert!(d.soa_hot_fields && !d.profile);
+        let b = ExperimentConfig::paper_baseline().to_sim_config();
+        assert!(b.soa_hot_fields && !b.profile);
     }
 
     #[test]

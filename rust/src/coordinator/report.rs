@@ -94,6 +94,10 @@ pub struct Report {
     pub snapshot_series_bytes: usize,
     /// Which analytics engine produced the CDF ("xla" or "native").
     pub analytics_engine: &'static str,
+    /// Hot-path profile (`Some` only when the run had `profile = true`).
+    /// Reported out-of-band (stderr + `--profile-out` JSON) — never part
+    /// of the default stdout surface or the bit-identity goldens.
+    pub profile: Option<crate::sim::ProfileReport>,
 }
 
 /// A federated run distilled: per-cluster reports plus the aggregate
@@ -285,6 +289,7 @@ fn distill(cfg: &ExperimentConfig, mut run: RunResult, analytics: &mut dyn Analy
         delay_struct_bytes: run.rec.delay_struct_bytes(),
         snapshot_series_bytes: run.rec.snapshot_series_bytes(),
         analytics_engine: analytics.name(),
+        profile: run.profile,
     })
 }
 
@@ -352,6 +357,9 @@ fn distill_aggregate(
         delay_struct_bytes: runs.iter().map(|r| r.rec.delay_struct_bytes()).sum(),
         snapshot_series_bytes: runs.iter().map(|r| r.rec.snapshot_series_bytes()).sum(),
         analytics_engine: analytics.name(),
+        // Per-member profiles stay on the per-cluster reports; no
+        // meaningful cross-cluster merge exists for wall-time splits.
+        profile: None,
     })
 }
 

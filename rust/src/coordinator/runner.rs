@@ -28,8 +28,8 @@ use crate::coordinator::scenario::{BudgetSharing, FederationSpec, RouterKind, Sc
 use crate::metrics::Recorder;
 use crate::sched::Scheduler;
 use crate::sim::{
-    ClassSplit, Federation, JobRouter, LeastQueued, RoundRobin, Rng, SchedulerComponent,
-    SnapshotSampler, TransientManagerComponent, WorkStealer, World,
+    ClassSplit, Federation, JobRouter, LeastQueued, ProfileReport, RoundRobin, Rng,
+    SchedulerComponent, SnapshotSampler, TransientManagerComponent, WorkStealer, World,
 };
 use crate::trace::{ArrivalSource, Workload};
 use crate::transient::{ManagerConfig, SharedBudget};
@@ -84,6 +84,20 @@ pub struct SimConfig {
     /// is bit-identical either way, only event-queue wall-clock
     /// differs.
     pub reference_engine: bool,
+    /// Serve the cluster's hot per-server fields (est_work, queue
+    /// depth, accepting/long/transient tags, ready_seq) from the dense
+    /// struct-of-arrays mirror (default). `false` reads the same values
+    /// back through the `Server` structs — the reference layout for
+    /// golden comparisons; every simulation field is bit-identical
+    /// either way, only probe-path cache behaviour differs.
+    pub soa_hot_fields: bool,
+    /// Enable the hot-path profiler: per-event-class counts and wall
+    /// time, per-component wall time, allocation-pool hit/miss
+    /// counters. Reported on stderr (and via `--profile-out` as JSON)
+    /// so the default stdout surface stays byte-identical to an
+    /// unprofiled run — profiling is excluded from the bit-identity
+    /// surface entirely.
+    pub profile: bool,
     pub seed: u64,
 }
 
@@ -102,6 +116,8 @@ impl Default for SimConfig {
             exact_delay_samples: false,
             exact_snapshot_series: false,
             reference_engine: false,
+            soa_hot_fields: true,
+            profile: false,
             seed: 1,
         }
     }
@@ -131,6 +147,8 @@ pub struct RunResult {
     /// slots recycle, so this (not transients ever requested) bounds
     /// server memory even under revocation churn.
     pub peak_resident_servers: usize,
+    /// Hot-path profile (`Some` only when `SimConfig::profile` was on).
+    pub profile: Option<ProfileReport>,
 }
 
 impl RunResult {
@@ -179,6 +197,7 @@ fn build_cluster(cfg: &SimConfig) -> Cluster {
     let mut cluster = Cluster::new(cfg.n_general, cfg.n_short_reserved, cfg.queue_policy);
     cluster.set_task_recycling(cfg.recycle_task_slots);
     cluster.set_server_recycling(cfg.recycle_server_slots);
+    cluster.set_soa_hot_fields(cfg.soa_hot_fields);
     cluster
 }
 
@@ -228,6 +247,9 @@ fn wire_standard_shared<'a>(
     analytics: Option<&'a mut (dyn crate::runtime::Analytics + 'a)>,
     shared: Option<SharedBudget>,
 ) {
+    if cfg.profile {
+        world.enable_profiler();
+    }
     // Snapshot sampler first: it records l_r before any same-event
     // mutation and publishes the prewarm forecast the manager consumes.
     let predictive = cfg.manager.as_ref().map(|m| m.predictive).unwrap_or(false);
@@ -317,13 +339,14 @@ fn run_and_distill(mut world: World<'_>, name: String, wall0: Instant) -> RunRes
 
 /// Extract a [`RunResult`] from a world that has already run (shared by
 /// the single-world entry points and the federation driver).
-fn distill_world(world: World<'_>, name: String, wall_ms: f64) -> RunResult {
+fn distill_world(mut world: World<'_>, name: String, wall_ms: f64) -> RunResult {
     let manager_stats = world.component::<TransientManagerComponent>().map(|m| m.stats());
     let end_time = world.engine.now();
     let events = world.engine.processed();
     let peak_resident_jobs = world.peak_resident_jobs();
     let peak_resident_tasks = world.peak_resident_tasks();
     let peak_resident_servers = world.peak_resident_servers();
+    let profile = world.take_profile();
     RunResult {
         scheduler: name,
         rec: world.rec,
@@ -334,6 +357,7 @@ fn distill_world(world: World<'_>, name: String, wall_ms: f64) -> RunResult {
         peak_resident_jobs,
         peak_resident_tasks,
         peak_resident_servers,
+        profile,
     }
 }
 

@@ -94,7 +94,20 @@
 //!   to date by every mutator, so all placement and drain-victim
 //!   queries are O(log n) with scan-identical tie-breaking — the
 //!   transient index recycles its tree slots too, with a `ready_seq`
-//!   key component pinning the historical ready-order tie-break.
+//!   key component pinning the historical ready-order tie-break. The
+//!   hot per-server fields (est. work, queue depth, accepting/long
+//!   flags, ready sequence) are additionally mirrored into dense
+//!   struct-of-arrays columns ([`cluster::HotFields`], synced by every
+//!   mutator) so the probe-sampling and least-loaded read paths touch
+//!   contiguous memory instead of striding across `Server` structs;
+//!   `SimConfig::soa_hot_fields` (default on) switches only the read
+//!   path, so the struct reads survive as the bit-identity reference.
+//!   Steady-state churn allocates nothing: revocation drains into a
+//!   caller-owned scratch ([`cluster::Cluster::revoke_into`]), retired
+//!   transients donate their queue buffers to a capacity pool that the
+//!   next provisioned server reuses, and the scheduler/steal scratch
+//!   Vecs are pooled — [`cluster::PoolStats`] counts the hits/misses
+//!   as structural evidence.
 //! * **coordinator** — experiment configuration
 //!   ([`coordinator::ExperimentConfig`]), the declarative scenario
 //!   registry ([`coordinator::scenario`]: a `[scenario]` TOML block or
@@ -151,7 +164,17 @@
 //! `tests/engine_props.rs` pins the calendar queue to the reference
 //! `BinaryHeap` under randomized push/pop interleavings, tie storms,
 //! far-future overflow and rollover boundaries (plus a full-run
-//! bit-identity check via `SimConfig::reference_engine`).
+//! bit-identity check via `SimConfig::reference_engine`). The SoA
+//! hot-field mirror is held to the same standard: `check_invariants`
+//! pins the dense columns bitwise to the `Server` structs after every
+//! transition, and `tests/streaming_golden.rs` pins full reports
+//! across `soa_hot_fields` on/off. The opt-in hot-path profiler
+//! (`--profile true` / `profile = true`, reported on stderr and via
+//! `--profile-out` JSON) is deliberately outside the bit-identity
+//! surface: its event/pool counts are deterministic per config —
+//! golden-checked — but its wall-time splits are machine noise, so
+//! stdout and every report field stay byte-identical with profiling
+//! on or off.
 //!
 //! ## Quickstart
 //!

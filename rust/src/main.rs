@@ -5,6 +5,8 @@
 //!                       [--scenario default|managerless|burst-storm|federated-burst]
 //!                       [--clusters N] [--router KIND] [--budget-sharing MODE]
 //!                       [--pdes-threads N] [--reference-engine true|false]
+//!                       [--soa-hot-fields true|false] [--profile true]
+//!                       [--profile-out FILE]
 //! cloudcoaster sweep    [--config FILE] [--ratios 1,2,3] [--threads N]
 //! cloudcoaster ablate   [--config FILE] --what threshold|revocation|policy|scheduler|storm|router|budget [--threads N]
 //! cloudcoaster trace    [--out FILE] [--kind yahoo|google] [--horizon SECS]
@@ -30,6 +32,14 @@
 //! conservative-window parallel execution on N worker threads inside
 //! the one run; 0 (the default) keeps the serial reference merge.
 //! Reports are bit-identical either way — only wall-clock changes.
+//!
+//! `--profile true` turns on the hot-path profiler: per-event-class
+//! counts and wall time, per-component wall time, and allocation-pool
+//! hit/miss counters, reported on stderr (and as JSON via
+//! `--profile-out FILE`). Stdout stays byte-identical to an unprofiled
+//! run. `--soa-hot-fields false` serves hot per-server reads from the
+//! reference struct layout instead of the dense SoA mirror —
+//! bit-identical results either way (the CI smoke diffs them).
 //!
 //! Sweeps and ablations fan their runs out across `--threads` OS threads
 //! (default: all cores). Simulation results are bit-identical at any
@@ -114,6 +124,17 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // the CI engine-equivalence smoke diffs the two.
         cfg.reference_engine = v.parse().context("--reference-engine")?;
     }
+    if let Some(v) = args.get("soa-hot-fields") {
+        // `false` reads hot server fields through the reference struct
+        // layout instead of the dense SoA mirror — bit-identical
+        // results; the CI SoA-equivalence smoke diffs the two.
+        cfg.soa_hot_fields = v.parse().context("--soa-hot-fields")?;
+    }
+    if let Some(v) = args.get("profile") {
+        // Hot-path profiler: report goes to stderr (and --profile-out
+        // as JSON) so stdout stays byte-identical to an unprofiled run.
+        cfg.profile = v.parse().context("--profile")?;
+    }
     if let Some(name) = args.get("scenario") {
         // Registry scenarios compose with the configured workload (so
         // `--scenario burst-storm` over a CSV workload is a burst-storm
@@ -180,6 +201,11 @@ fn parse_threads(args: &Args) -> Result<usize> {
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     eprintln!("workload: {}", workload_summary(&cfg)?);
+    // Profiles collected per run (per member for a federation) and
+    // reported after the stdout summary — on stderr and via
+    // --profile-out, never stdout, so the default surface stays
+    // byte-identical to an unprofiled run.
+    let mut profiles: Vec<(String, cloudcoaster::sim::ProfileReport)> = Vec::new();
     let rep = if cfg.federation.is_some() {
         // Federated run: one line per member cluster, then the
         // aggregate (merged delay histograms, summed cost ledgers) —
@@ -187,6 +213,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         let fed = cloudcoaster::coordinator::run_federated_experiment(&cfg)?;
         for (i, rep) in fed.per_cluster.iter().enumerate() {
             println!("cluster {i}: {}", summary_line(rep));
+            if let Some(p) = &rep.profile {
+                profiles.push((format!("cluster {i}"), p.clone()));
+            }
         }
         match fed.shared_cap {
             Some(cap) => println!(
@@ -202,6 +231,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         run_experiment(&cfg)?
     };
+    if let Some(p) = &rep.profile {
+        profiles.push(("run".to_string(), p.clone()));
+    }
     println!("{}", summary_line(&rep));
     if cfg.scenario.as_ref().map(|s| s.reshapes_workload()).unwrap_or(false) {
         eprintln!("peak resident jobs (streaming): {}", rep.peak_resident_jobs);
@@ -218,6 +250,26 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(out) = args.get("cdf-out") {
         std::fs::write(out, rep.cdf.to_csv())?;
         eprintln!("wrote CDF to {out}");
+    }
+    for (label, p) in &profiles {
+        eprintln!("profile [{label}]");
+        eprint!("{}", p.render());
+    }
+    if let Some(out) = args.get("profile-out") {
+        match profiles.as_slice() {
+            [] => eprintln!("--profile-out given but profiling was off (pass --profile true)"),
+            [(_, p)] => {
+                std::fs::write(out, p.to_json())?;
+                eprintln!("wrote profile to {out}");
+            }
+            many => {
+                // Federated run: one JSON object per member, in order.
+                let parts: Vec<String> =
+                    many.iter().map(|(_, p)| p.to_json().trim_end().to_string()).collect();
+                std::fs::write(out, format!("[\n{}\n]\n", parts.join(",\n")))?;
+                eprintln!("wrote {} member profiles to {out}", many.len());
+            }
+        }
     }
     Ok(())
 }

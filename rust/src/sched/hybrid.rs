@@ -17,7 +17,6 @@
 //! server is transient also enqueues a copy on an on-demand short server
 //! so revocation can never lose work.
 
-use crate::cluster::ServerKind;
 use crate::sched::probe::{assign_least_loaded, filter_long, sample_from_pool, ProbeBuffers};
 use crate::sched::{SchedCtx, Scheduler};
 use crate::trace::Job;
@@ -119,7 +118,7 @@ impl Hybrid {
             // The duplication target is an O(log n) short-pool index
             // query, not a partition scan.
             if self.duplicate_to_ondemand
-                && ctx.cluster.server(sid).kind == ServerKind::Transient
+                && ctx.cluster.is_transient(sid)
                 && ctx.cluster.task(tid).copies > 0
             {
                 if let Some(od) = ctx.cluster.least_loaded_short_reserved() {

@@ -37,7 +37,10 @@ pub fn sample_from_pool(
     }
     for _ in 0..k {
         let sid = pool[rng.below(pool.len() as u64) as usize];
-        if cluster.server(sid).accepting() {
+        // Dense hot-field read: the sampling loop is the single
+        // hottest read path, so it must not drag Server structs
+        // through cache.
+        if cluster.is_accepting(sid) {
             buf.candidates.push(sid);
         }
     }
@@ -66,7 +69,7 @@ pub fn assign_least_loaded(
     out.clear();
     buf.loads.clear();
     buf.loads
-        .extend(buf.candidates.iter().map(|&sid| cluster.server(sid).est_work));
+        .extend(buf.candidates.iter().map(|&sid| cluster.est_work_of(sid)));
     for &cost in task_costs {
         // Linear argmin over the probe set (probe sets are O(2m), small).
         let (mut best, mut best_load) = (0usize, f64::INFINITY);

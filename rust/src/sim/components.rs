@@ -205,7 +205,9 @@ fn try_steal(
         } else {
             cluster.general[rng.below(cluster.general.len() as u64) as usize]
         };
-        if cluster.server(victim).queue.is_empty() {
+        // Dense hot-field read: depth minus running occupancy answers
+        // "any queued work?" without touching the victim's struct.
+        if !cluster.has_queued(victim) {
             continue;
         }
         if cluster.steal_short_tasks(victim, thief, steal_batch, engine, rec) > 0 {

@@ -45,17 +45,37 @@ pub enum Event {
 }
 
 impl Event {
+    /// Number of event classes (the profiler's counter-array size).
+    pub const N_KINDS: usize = 7;
+
+    /// Every kind label, in [`Event::kind_index`] order.
+    pub const KINDS: [&'static str; Event::N_KINDS] = [
+        "job_arrival",
+        "task_finish",
+        "transient_ready",
+        "revocation_warning",
+        "revoked",
+        "drain_complete",
+        "snapshot",
+    ];
+
     /// Coarse event-class label used by the engine's trace hook and the
     /// profiling counters.
     pub fn kind(&self) -> &'static str {
+        Event::KINDS[self.kind_index()]
+    }
+
+    /// Dense index of this event's class into [`Event::KINDS`] — the
+    /// profiler counts into a fixed array instead of hashing labels.
+    pub fn kind_index(&self) -> usize {
         match self {
-            Event::JobArrival(_) => "job_arrival",
-            Event::TaskFinish { .. } => "task_finish",
-            Event::TransientReady(_) => "transient_ready",
-            Event::RevocationWarning(_) => "revocation_warning",
-            Event::Revoked(_) => "revoked",
-            Event::DrainComplete(_) => "drain_complete",
-            Event::Snapshot => "snapshot",
+            Event::JobArrival(_) => 0,
+            Event::TaskFinish { .. } => 1,
+            Event::TransientReady(_) => 2,
+            Event::RevocationWarning(_) => 3,
+            Event::Revoked(_) => 4,
+            Event::DrainComplete(_) => 5,
+            Event::Snapshot => 6,
         }
     }
 }

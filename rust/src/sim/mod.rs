@@ -8,12 +8,16 @@
 //! in global event-time order behind a pluggable [`JobRouter`] —
 //! serially ([`Federation::run`], the reference merge) or with
 //! conservative-window parallel execution ([`Federation::run_pdes`],
-//! bit-identical at any thread count).
+//! bit-identical at any thread count). The opt-in hot-path
+//! [`Profiler`] rides on the world's dispatch loop and finalises into
+//! a [`ProfileReport`] — see the `profiler` module docs for its
+//! determinism contract (profiling never perturbs simulation bits).
 
 pub mod components;
 mod engine;
 mod event;
 pub mod federation;
+mod profiler;
 mod rng;
 mod world;
 
@@ -23,5 +27,6 @@ pub use components::{
 pub use engine::Engine;
 pub use event::Event;
 pub use federation::{ClassSplit, Federation, JobRouter, LeastQueued, MemberView, RoundRobin};
+pub use profiler::{ProfileReport, Profiler};
 pub use rng::Rng;
 pub use world::{Component, World, WorldCtx};

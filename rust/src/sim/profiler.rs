@@ -1,0 +1,210 @@
+//! Opt-in hot-path profiler: counts events by [`Event::kind`],
+//! attributes wall time per event class and per [`Component`], and
+//! reports the cluster's allocation-pool hit/miss counters — the
+//! in-binary evidence behind the zero-alloc/SoA hot-path claims, so a
+//! 1e4-server burst-storm run can be profiled reproducibly instead of
+//! once under an external tool.
+//!
+//! **Determinism contract**: profiling is enabled per run
+//! (`SimConfig::profile` / `--profile`) and is *excluded from the
+//! bit-identity surface* — the counters never feed back into the
+//! simulation, so every simulation observable is bit-identical with
+//! profiling on or off (pinned by the streaming goldens). Within the
+//! profile itself, event counts and pool counters are pure functions
+//! of the run and repeat bit-exactly run to run (CI pins this); wall
+//! times are wall clock and are not comparable across runs.
+//!
+//! [`Component`]: crate::sim::Component
+
+use crate::cluster::PoolStats;
+use crate::sim::Event;
+
+/// Upper bound on profiled components per world (the dispatch loop
+/// times into a fixed stack array to stay allocation-free; standard
+/// wirings use at most four components).
+pub const MAX_PROFILED_COMPONENTS: usize = 16;
+
+/// Live profiling state owned by a `World` while a profiled run is in
+/// flight. Finalised into a [`ProfileReport`] by `World::take_profile`.
+#[derive(Clone, Debug, Default)]
+pub struct Profiler {
+    /// Popped events per class, indexed by [`Event::kind_index`]
+    /// (stale generation-filtered events count too — they cost a pop).
+    pub event_counts: [u64; Event::N_KINDS],
+    /// Wall nanoseconds of `dispatch_event` per class (core lifecycle +
+    /// component dispatch + completion accounting).
+    pub event_nanos: [u64; Event::N_KINDS],
+    /// Component names, registered in wiring order at first dispatch.
+    pub component_names: Vec<&'static str>,
+    /// Wall nanoseconds inside each component's handlers (`on_event` +
+    /// `on_long_change`), parallel to `component_names`.
+    pub component_nanos: Vec<u64>,
+}
+
+impl Profiler {
+    /// Account one dispatched event of class `kind_idx`.
+    #[inline]
+    pub fn record_event(&mut self, kind_idx: usize, nanos: u64) {
+        self.event_counts[kind_idx] += 1;
+        self.event_nanos[kind_idx] += nanos;
+    }
+
+    /// Account handler time for the component at wiring position `i`.
+    #[inline]
+    pub fn record_component(&mut self, i: usize, name: &'static str, nanos: u64) {
+        while self.component_names.len() <= i {
+            self.component_names.push("");
+            self.component_nanos.push(0);
+        }
+        self.component_names[i] = name;
+        self.component_nanos[i] += nanos;
+    }
+
+    /// Finalise into a report, folding in the cluster's pool counters.
+    pub fn into_report(self, pools: PoolStats) -> ProfileReport {
+        ProfileReport {
+            by_kind: Event::KINDS
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (k, self.event_counts[i], self.event_nanos[i]))
+                .collect(),
+            by_component: self
+                .component_names
+                .iter()
+                .zip(&self.component_nanos)
+                .map(|(&n, &ns)| (n, ns))
+                .collect(),
+            pools,
+        }
+    }
+}
+
+/// A finished run's hot-path profile. Reported as a separate section
+/// (stderr) and a JSON artifact next to the CDF — never on the default
+/// stdout surface, which stays byte-identical to an unprofiled run.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    /// `(kind, count, wall_ns)` per event class, in [`Event::KINDS`]
+    /// order. Counts are deterministic; wall_ns is not.
+    pub by_kind: Vec<(&'static str, u64, u64)>,
+    /// `(component, wall_ns)` in wiring order.
+    pub by_component: Vec<(&'static str, u64)>,
+    /// Allocation-pool hit/miss counters (deterministic).
+    pub pools: PoolStats,
+}
+
+impl ProfileReport {
+    /// Total events popped (sum over classes).
+    pub fn events_total(&self) -> u64 {
+        self.by_kind.iter().map(|(_, c, _)| c).sum()
+    }
+
+    /// Human-readable report section (stderr).
+    pub fn render(&self) -> String {
+        let mut out = String::from("-- hot-path profile --\n");
+        out.push_str(&format!("events: {} total\n", self.events_total()));
+        for &(kind, count, ns) in &self.by_kind {
+            if count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {kind:<20} {count:>10}  {:>9.2} ms\n",
+                ns as f64 / 1e6
+            ));
+        }
+        out.push_str("components:\n");
+        for &(name, ns) in &self.by_component {
+            out.push_str(&format!("  {name:<20} {:>9.2} ms\n", ns as f64 / 1e6));
+        }
+        let p = &self.pools;
+        out.push_str(&format!(
+            "pools (hit/miss): task slots {}/{}, server slots {}/{}, queue buffers {}/{}\n",
+            p.task_slot_hits,
+            p.task_slot_misses,
+            p.server_slot_hits,
+            p.server_slot_misses,
+            p.queue_buf_hits,
+            p.queue_buf_misses,
+        ));
+        out
+    }
+
+    /// JSON artifact. Deterministic fields (`event_counts`, `pools`)
+    /// are separate objects from the wall-clock ones so CI can pin
+    /// run-to-run identity on just the counts.
+    pub fn to_json(&self) -> String {
+        let counts: Vec<String> = self
+            .by_kind
+            .iter()
+            .map(|(k, c, _)| format!("\"{k}\": {c}"))
+            .collect();
+        let walls: Vec<String> = self
+            .by_kind
+            .iter()
+            .map(|(k, _, ns)| format!("\"{k}\": {ns}"))
+            .collect();
+        let comps: Vec<String> = self
+            .by_component
+            .iter()
+            .map(|(n, ns)| format!("\"{n}\": {ns}"))
+            .collect();
+        let p = &self.pools;
+        format!(
+            "{{\n  \"events_total\": {},\n  \"event_counts\": {{{}}},\n  \
+             \"event_wall_ns\": {{{}}},\n  \"component_wall_ns\": {{{}}},\n  \
+             \"pools\": {{\"task_slot_hits\": {}, \"task_slot_misses\": {}, \
+             \"server_slot_hits\": {}, \"server_slot_misses\": {}, \
+             \"queue_buf_hits\": {}, \"queue_buf_misses\": {}}}\n}}\n",
+            self.events_total(),
+            counts.join(", "),
+            walls.join(", "),
+            comps.join(", "),
+            p.task_slot_hits,
+            p.task_slot_misses,
+            p.server_slot_hits,
+            p.server_slot_misses,
+            p.queue_buf_hits,
+            p.queue_buf_misses,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let mut prof = Profiler::default();
+        prof.record_event(0, 1500);
+        prof.record_event(1, 2500);
+        prof.record_event(1, 500);
+        prof.record_component(0, "scheduler", 1000);
+        prof.record_component(1, "work-stealer", 2000);
+        let mut pools = PoolStats::default();
+        pools.task_slot_hits = 9;
+        pools.queue_buf_misses = 1;
+        let rep = prof.into_report(pools);
+        assert_eq!(rep.events_total(), 3);
+        assert_eq!(rep.by_kind[0], ("job_arrival", 1, 1500));
+        assert_eq!(rep.by_kind[1], ("task_finish", 2, 3000));
+        let text = rep.render();
+        assert!(text.contains("job_arrival"));
+        assert!(text.contains("scheduler"));
+        assert!(text.contains("queue buffers 0/1"));
+        let json = rep.to_json();
+        assert!(json.contains("\"events_total\": 3"));
+        assert!(json.contains("\"task_finish\": 2"));
+        assert!(json.contains("\"task_slot_hits\": 9"));
+        // Balanced braces (cheap well-formedness check without a parser).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn kind_tables_agree() {
+        // The profiler's fixed arrays rely on KINDS/kind_index agreeing.
+        assert_eq!(Event::KINDS.len(), Event::N_KINDS);
+        assert_eq!(Event::Snapshot.kind_index(), Event::N_KINDS - 1);
+        assert_eq!(Event::KINDS[Event::Snapshot.kind_index()], "snapshot");
+    }
+}

@@ -70,10 +70,12 @@
 //! arena recycling on/off).
 
 use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
 
 use crate::cluster::{Cluster, FinishOutcome, ServerKind, ServerState};
 use crate::metrics::Recorder;
-use crate::sim::{Engine, Event, Rng};
+use crate::sim::profiler::MAX_PROFILED_COMPONENTS;
+use crate::sim::{Engine, Event, ProfileReport, Profiler, Rng};
 use crate::trace::{ArrivalSource, Job, Workload};
 use crate::util::{JobId, TaskRef, Time};
 
@@ -245,6 +247,10 @@ pub struct World<'w> {
     /// Reusable same-timestamp scratch for [`World::step_batch`] (one
     /// allocation for the whole run, not one per batch).
     batch: Vec<Event>,
+    /// Opt-in hot-path profiler ([`World::enable_profiler`]). Counters
+    /// never feed back into the simulation, so every simulation
+    /// observable is bit-identical with profiling on or off.
+    profiler: Option<Profiler>,
 }
 
 impl<'w> World<'w> {
@@ -323,7 +329,25 @@ impl<'w> World<'w> {
             prewarm_lr: None,
             deferred: Vec::new(),
             batch: Vec::new(),
+            profiler: None,
         }
+    }
+
+    /// Turn on hot-path profiling for this run (`--profile`): events
+    /// counted and wall-timed by class, wall time per component, and
+    /// the cluster's allocation-pool counters at close-out. Profiling
+    /// is excluded from the bit-identity surface — it observes the run
+    /// without perturbing it.
+    pub fn enable_profiler(&mut self) {
+        self.profiler = Some(Profiler::default());
+    }
+
+    /// Finalise and take this run's profile (`None` when profiling was
+    /// never enabled), folding in the cluster's pool counters. Call
+    /// after [`World::finish`].
+    pub fn take_profile(&mut self) -> Option<ProfileReport> {
+        let pools = self.cluster.pool_stats();
+        self.profiler.take().map(|p| p.into_report(pools))
     }
 
     /// Derive an independent RNG stream for a component (e.g. the
@@ -647,16 +671,51 @@ impl<'w> World<'w> {
         self.lookahead.as_ref().map(|j| j.job().arrival)
     }
 
-    /// The per-event core shared by [`World::step`] and
-    /// [`World::step_batch`]: arrival intake, cluster lifecycle,
-    /// component dispatch, completion accounting. A stale
-    /// (generation-filtered) finish returns before components see the
-    /// event.
+    /// The per-event entry shared by [`World::step`] and
+    /// [`World::step_batch`]. Unprofiled runs fall straight through to
+    /// [`World::dispatch_event_core`]; profiled runs wrap it with
+    /// wall-clock timing (whole event + per-component) and count every
+    /// popped event — stale generation-filtered finishes included, since
+    /// they cost a pop and their count is deterministic.
     fn dispatch_event(
         &mut self,
         now: Time,
         event: Event,
         components: &mut [Box<dyn Component + 'w>],
+    ) {
+        if self.profiler.is_none() {
+            self.dispatch_event_core(now, event, components, &mut None);
+            return;
+        }
+        let kind_idx = event.kind_index();
+        // Timed into a stack array: `dispatch_event_core` borrows all of
+        // `self` (the profiler included), so per-component nanos merge
+        // into the profiler only after the core returns.
+        let mut comp_nanos = [0u64; MAX_PROFILED_COMPONENTS];
+        let started = Instant::now();
+        {
+            let mut slot = Some(&mut comp_nanos);
+            self.dispatch_event_core(now, event, components, &mut slot);
+        }
+        let total_ns = started.elapsed().as_nanos() as u64;
+        let prof = self.profiler.as_mut().expect("profiler vanished mid-event");
+        prof.record_event(kind_idx, total_ns);
+        for (i, c) in components.iter().enumerate().take(MAX_PROFILED_COMPONENTS) {
+            prof.record_component(i, c.name(), comp_nanos[i]);
+        }
+    }
+
+    /// The per-event core: arrival intake, cluster lifecycle, component
+    /// dispatch, completion accounting. A stale (generation-filtered)
+    /// finish returns before components see the event. `comp_nanos` is
+    /// the profiling wrapper's per-component timing scratch (`None` on
+    /// the unprofiled fast path — no timing code runs).
+    fn dispatch_event_core(
+        &mut self,
+        now: Time,
+        event: Event,
+        components: &mut [Box<dyn Component + 'w>],
+        comp_nanos: &mut Option<&mut [u64; MAX_PROFILED_COMPONENTS]>,
     ) {
         // ---- core pre-dispatch: arrival intake + cluster lifecycle ----
         self.arrived.clear();
@@ -719,7 +778,9 @@ impl<'w> World<'w> {
                 // recycled) must not touch the slot's next tenant.
                 let state = self.cluster.get_server(sid).map(|s| s.state);
                 if matches!(state, Some(ServerState::Active | ServerState::Draining)) {
-                    self.orphans = self.cluster.revoke(sid, now, &mut self.rec);
+                    // Orphans land in the world's reusable scratch —
+                    // zero allocation per revocation in steady state.
+                    self.cluster.revoke_into(sid, now, &mut self.rec, &mut self.orphans);
                 }
             }
             Event::DrainComplete(sid) => {
@@ -750,8 +811,18 @@ impl<'w> World<'w> {
         // ---- dispatch to components, in wiring order ----
         {
             let mut ctx = self.ctx();
-            for c in components.iter_mut() {
-                c.on_event(now, &event, &mut ctx);
+            if let Some(nanos) = comp_nanos {
+                for (i, c) in components.iter_mut().enumerate() {
+                    let t0 = Instant::now();
+                    c.on_event(now, &event, &mut ctx);
+                    if i < nanos.len() {
+                        nanos[i] += t0.elapsed().as_nanos() as u64;
+                    }
+                }
+            } else {
+                for c in components.iter_mut() {
+                    c.on_event(now, &event, &mut ctx);
+                }
             }
         }
 
@@ -783,8 +854,18 @@ impl<'w> World<'w> {
 
         if long_change {
             let mut ctx = self.ctx();
-            for c in components.iter_mut() {
-                c.on_long_change(now, &mut ctx);
+            if let Some(nanos) = comp_nanos {
+                for (i, c) in components.iter_mut().enumerate() {
+                    let t0 = Instant::now();
+                    c.on_long_change(now, &mut ctx);
+                    if i < nanos.len() {
+                        nanos[i] += t0.elapsed().as_nanos() as u64;
+                    }
+                }
+            } else {
+                for c in components.iter_mut() {
+                    c.on_long_change(now, &mut ctx);
+                }
             }
         }
     }

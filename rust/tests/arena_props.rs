@@ -12,7 +12,12 @@
 //!   against recycling and non-recycling clusters — any combination of
 //!   the task and server toggles — produces the exact same delays,
 //!   finish counts, stale-copy counts, `peak_resident_tasks` and
-//!   `peak_resident_servers`. Only slot counts may differ.
+//!   `peak_resident_servers`. Only slot counts may differ;
+//! * the struct-of-arrays hot-field mirror tracks the `Server` structs
+//!   bitwise through every transition (pinned per step through the
+//!   dense accessors here and through the raw arrays by
+//!   `check_invariants`), and the SoA read mode is itself
+//!   observationally invisible.
 //!
 //! Every operation selects its targets through the *pools* (general /
 //! short-reserved / transient, in ready order), never through raw slot
@@ -68,16 +73,20 @@ fn pool_size(cluster: &Cluster) -> usize {
 }
 
 /// Drive a random but fully seed-determined interleaving of cluster ops.
+/// `soa` selects the hot-field read path (dense struct-of-arrays mirror
+/// vs. reference struct reads) — observables must be identical.
 fn drive(
     seed: u64,
     recycle_tasks: bool,
     recycle_servers: bool,
+    soa: bool,
     steps: usize,
 ) -> (RunObservables, SlotCounts) {
     let mut rng = Rng::new(seed);
     let mut cluster = Cluster::new(6, 3, QueuePolicy::Fifo);
     cluster.set_task_recycling(recycle_tasks);
     cluster.set_server_recycling(recycle_servers);
+    cluster.set_soa_hot_fields(soa);
     let mut engine = Engine::new();
     // Exact delay backend: observables compare the raw sample sequence.
     let mut rec = Recorder::new_exact(2.0);
@@ -197,6 +206,26 @@ fn drive(
             }
         }
         cluster.check_invariants();
+        // Dense-mirror pin, through the *accessors* (whichever read mode
+        // is active must agree with a direct struct read for every live
+        // pool member; `check_invariants` above already pins the raw
+        // arrays bitwise for every slot, freed included).
+        for i in 0..pool_size(&cluster) {
+            let sid = pool_member(&cluster, i);
+            let s = cluster.server(sid);
+            let (est, longs, acc, queued, transient) = (
+                s.est_work.to_bits(),
+                s.long_tasks > 0,
+                s.accepting(),
+                !s.queue.is_empty(),
+                s.kind == cloudcoaster::cluster::ServerKind::Transient,
+            );
+            assert_eq!(cluster.est_work_of(sid).to_bits(), est, "est_work mirror diverged");
+            assert_eq!(cluster.has_long(sid), longs, "has_long mirror diverged");
+            assert_eq!(cluster.is_accepting(sid), acc, "accepting mirror diverged");
+            assert_eq!(cluster.has_queued(sid), queued, "has_queued mirror diverged");
+            assert_eq!(cluster.is_transient(sid), transient, "is_transient mirror diverged");
+        }
         if recycle_tasks {
             // The memory headline: the arena never holds more slots than
             // the peak number of simultaneously live tasks.
@@ -289,7 +318,7 @@ fn drive(
 fn arena_stress_no_resurrection_and_bounded_slots() {
     property("arena stress", 30, |rng| {
         let seed = rng.next_u64();
-        drive(seed, true, true, 300);
+        drive(seed, true, true, true, 300);
     });
 }
 
@@ -301,10 +330,10 @@ fn arena_recycling_is_observationally_invisible() {
     // Only the slot counts may differ (that's the point of the arenas).
     property("arena mode equivalence", 10, |rng| {
         let seed = rng.next_u64();
-        let (both, slots_both) = drive(seed, true, true, 250);
-        let (neither, slots_neither) = drive(seed, false, false, 250);
-        let (tasks_only, _) = drive(seed, true, false, 250);
-        let (servers_only, _) = drive(seed, false, true, 250);
+        let (both, slots_both) = drive(seed, true, true, true, 250);
+        let (neither, slots_neither) = drive(seed, false, false, true, 250);
+        let (tasks_only, _) = drive(seed, true, false, true, 250);
+        let (servers_only, _) = drive(seed, false, true, true, 250);
         assert_eq!(both, neither, "recycling changed an observable");
         assert_eq!(both, tasks_only, "task recycling alone changed an observable");
         assert_eq!(both, servers_only, "server recycling alone changed an observable");
@@ -320,6 +349,24 @@ fn arena_recycling_is_observationally_invisible() {
             slots_both.server_slots,
             slots_neither.server_slots
         );
+    });
+}
+
+#[test]
+fn soa_read_mode_is_observationally_invisible() {
+    // Same seed-determined op sequence with hot fields served from the
+    // dense SoA mirror vs. read back through the `Server` structs:
+    // every observable must match bit-exactly — the mirror is
+    // maintained unconditionally, the toggle only picks the read path.
+    // (The per-step mirror pin inside `drive` runs in both modes, so
+    // the dense arrays are checked against the structs throughout.)
+    property("soa mode equivalence", 10, |rng| {
+        let seed = rng.next_u64();
+        let (dense, slots_dense) = drive(seed, true, true, true, 250);
+        let (structs, slots_structs) = drive(seed, true, true, false, 250);
+        assert_eq!(dense, structs, "SoA read path changed an observable");
+        assert_eq!(slots_dense.task_slots, slots_structs.task_slots);
+        assert_eq!(slots_dense.server_slots, slots_structs.server_slots);
     });
 }
 

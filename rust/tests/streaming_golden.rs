@@ -308,15 +308,19 @@ fn peak_resident_tasks_flat_under_10x_trace_scaling() {
 /// requested* scales with the horizon; peak *concurrent* transients is
 /// capped by the budget, so the server arena must stay flat.
 fn churn_run(horizon: f64, recycle_servers: bool) -> RunResult {
+    churn_run_with(horizon, |cfg| cfg.recycle_server_slots = recycle_servers)
+}
+
+fn churn_run_with(horizon: f64, tweak: impl FnOnce(&mut SimConfig)) -> RunResult {
     let mut p = golden_params();
     p.horizon = horizon;
     let mut cfg = SimConfig {
         n_general: 96,
         n_short_reserved: 4,
-        recycle_server_slots: recycle_servers,
         seed: 5,
         ..Default::default()
     };
+    tweak(&mut cfg);
     let mut mgr = ManagerConfig {
         threshold: 0.5,
         ..ManagerConfig::paper(Budget::new(8, 0.5, 3.0)) // K = 12
@@ -371,6 +375,81 @@ fn peak_resident_servers_bounded_under_10x_revocation_churn() {
         "peak resident servers grew with trace length: {} -> {}",
         short.peak_resident_servers,
         long.peak_resident_servers
+    );
+}
+
+#[test]
+fn soa_hot_fields_off_report_bits_identical_to_defaults() {
+    // The PR-8 tentpole golden: serving hot per-server fields from the
+    // dense struct-of-arrays mirror (default) vs reading them back
+    // through the reference `Server` structs must agree on every
+    // simulation bit — the mirror is maintained unconditionally, the
+    // toggle only switches the read path.
+    let dense = storm_run_with(4000.0, |_| {});
+    let structs = storm_run_with(4000.0, |cfg| cfg.soa_hot_fields = false);
+    assert_same_run(&dense, &structs);
+    assert_eq!(dense.peak_resident_jobs, structs.peak_resident_jobs);
+    assert_eq!(dense.peak_resident_tasks, structs.peak_resident_tasks);
+
+    // And under CloudCoaster revocation churn, where every transition
+    // that must refresh the mirror (provision, ready, drain, revoke,
+    // retire, steal) fires continuously.
+    let dense = churn_run_with(4000.0, |_| {});
+    let structs = churn_run_with(4000.0, |cfg| cfg.soa_hot_fields = false);
+    assert_same_run(&dense, &structs);
+    assert!(dense.rec.transients_revoked > 0, "churn scenario produced no revocations");
+}
+
+#[test]
+fn profiling_does_not_perturb_simulation_bits() {
+    // Profiling is excluded from the bit-identity surface: a profiled
+    // run reports the exact same simulation bits as an unprofiled one.
+    let plain = storm_run_with(4000.0, |_| {});
+    let profiled = storm_run_with(4000.0, |cfg| cfg.profile = true);
+    assert_same_run(&plain, &profiled);
+    assert!(plain.profile.is_none(), "profile produced without profile=true");
+    let prof = profiled.profile.as_ref().expect("profiled run lost its profile");
+    // Every popped event is counted — stale finishes included — so the
+    // profiler's total matches the engine's processed count exactly.
+    assert_eq!(prof.events_total(), profiled.events);
+    assert!(prof.to_json().contains("\"events_total\""));
+
+    // Event counts and pool counters are pure functions of the run:
+    // bit-identical run to run (wall times are not, and aren't pinned).
+    let again = storm_run_with(4000.0, |cfg| cfg.profile = true);
+    let prof2 = again.profile.as_ref().unwrap();
+    let counts: Vec<(&str, u64)> = prof.by_kind.iter().map(|&(k, c, _)| (k, c)).collect();
+    let counts2: Vec<(&str, u64)> = prof2.by_kind.iter().map(|&(k, c, _)| (k, c)).collect();
+    assert_eq!(counts, counts2, "profiler event counts not deterministic");
+    assert_eq!(prof.pools, prof2.pools, "pool counters not deterministic");
+}
+
+#[test]
+fn churn_profile_shows_steady_state_pool_reuse() {
+    // The zero-alloc acceptance evidence: under continuous revocation
+    // churn the allocation pools serve the steady state — retired
+    // transients donate server slots and queue buffers that later
+    // leases reuse, so misses are confined to cold starts.
+    let plain = churn_run_with(4000.0, |_| {});
+    let profiled = churn_run_with(4000.0, |cfg| cfg.profile = true);
+    assert_same_run(&plain, &profiled);
+    let prof = profiled.profile.as_ref().unwrap();
+    assert_eq!(prof.events_total(), profiled.events);
+    assert!(profiled.rec.transients_revoked > 0, "no churn to measure");
+    assert!(
+        prof.pools.server_slot_hits > 0,
+        "no server-slot reuse under churn: {:?}",
+        prof.pools
+    );
+    assert!(
+        prof.pools.queue_buf_hits > 0,
+        "no queue-buffer reuse under churn: {:?}",
+        prof.pools
+    );
+    assert!(
+        prof.pools.task_slot_hits > prof.pools.task_slot_misses,
+        "steady state should be dominated by task-slot reuse: {:?}",
+        prof.pools
     );
 }
 
