@@ -1,0 +1,72 @@
+//! `pallas-lint` — run the first-party static-analysis pass over the
+//! crate's own sources and report violations of the simulator's
+//! structural invariants (see `rust/LINTS.md`).
+//!
+//! Usage:
+//!
+//! ```text
+//! pallas-lint [--json[=PATH]] [SRC_ROOT]
+//! ```
+//!
+//! With no arguments, lints the `src/` directory of the crate this
+//! binary was built from. `--json` prints the byte-deterministic JSON
+//! report to stdout instead of the human rendering; `--json=PATH`
+//! writes it to `PATH` and keeps the human rendering on stdout (the CI
+//! gate uses this to fail loudly *and* upload the artifact). Exits 0
+//! on a clean pass, 1 on any unsuppressed diagnostic, 2 on I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use cloudcoaster::lint;
+
+fn main() -> ExitCode {
+    let mut json_to_stdout = false;
+    let mut json_path: Option<PathBuf> = None;
+    let mut src_root: Option<PathBuf> = None;
+
+    for arg in std::env::args().skip(1) {
+        if arg == "--json" {
+            json_to_stdout = true;
+        } else if let Some(p) = arg.strip_prefix("--json=") {
+            json_path = Some(PathBuf::from(p));
+        } else if arg == "--help" || arg == "-h" {
+            eprintln!("usage: pallas-lint [--json[=PATH]] [SRC_ROOT]");
+            return ExitCode::SUCCESS;
+        } else if src_root.is_none() {
+            src_root = Some(PathBuf::from(arg));
+        } else {
+            eprintln!("pallas-lint: unexpected argument `{arg}`");
+            return ExitCode::from(2);
+        }
+    }
+
+    let root = src_root
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+
+    let report = match lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_path {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("pallas-lint: write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if json_to_stdout {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

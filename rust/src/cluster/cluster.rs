@@ -321,6 +321,7 @@ impl Cluster {
     /// Refresh the dense hot-field mirror for one arena slot from its
     /// `Server` struct. Called from [`Cluster::sync_index`] (every load
     /// change) and from every state transition that bypasses it.
+    // lint: hot-path
     #[inline]
     fn sync_hot(&mut self, slot: usize) {
         let s = &self.servers[slot];
@@ -334,6 +335,7 @@ impl Cluster {
 
     /// Keep the per-pool argmin indexes in sync after any load change on
     /// `sid` (est_work, queue depth, or running slot).
+    // lint: hot-path
     #[inline]
     fn sync_index(&mut self, sid: ServerRef) {
         let (pool, est_work, depth, seq) = {
@@ -356,7 +358,7 @@ impl Cluster {
     /// centralized scheduler's placement target for long tasks.
     #[inline]
     pub fn least_loaded_general(&self) -> ServerRef {
-        let slot = self.index.least_loaded_general_slot().expect("empty general partition");
+        let slot = self.index.least_loaded_general_slot().expect("empty general partition"); // lint: allow(panic-surface): build() rejects clusters with an empty general partition
         self.general[slot]
     }
 
@@ -558,6 +560,7 @@ impl Cluster {
 
     /// Create a task in the arena (does not enqueue it), reusing a
     /// recycled slot when one is free.
+    // lint: hot-path
     pub fn add_task(&mut self, job: JobId, duration: f64, is_long: bool, now: Time) -> TaskRef {
         self.resident_tasks += 1;
         self.peak_resident_tasks = self.peak_resident_tasks.max(self.resident_tasks);
@@ -600,6 +603,7 @@ impl Cluster {
 
     /// Enqueue (a copy of) `task` on `server`; starts it immediately if
     /// the server is idle. Panics if the server is not accepting work.
+    // lint: hot-path
     pub fn enqueue(
         &mut self,
         task_id: TaskRef,
@@ -635,6 +639,7 @@ impl Cluster {
 
     /// Pop the next runnable task (per policy) and start it. No-op if the
     /// slot is busy or the queue has no runnable entry.
+    // lint: hot-path
     pub fn try_start_next(
         &mut self,
         server_id: ServerRef,
@@ -673,7 +678,7 @@ impl Cluster {
                 break;
             };
             let server = &mut self.servers[server_id.index()];
-            let task_id = server.queue.remove(idx).expect("index from select_next");
+            let task_id = server.queue.remove(idx).expect("index from select_next"); // lint: allow(panic-surface): idx came from select_next over this same queue one line up
             let task = &mut self.tasks[task_id.index()];
             debug_assert_eq!(task.id, task_id, "queue entry outlived its slot");
             if task.state != TaskState::Queued {
@@ -724,6 +729,7 @@ impl Cluster {
     /// bookkeeping. Completion fields are extracted into the returned
     /// [`FinishOutcome`] *before* the slot can be recycled — never read
     /// them back through the `TaskRef`.
+    // lint: hot-path
     pub fn on_task_finish(
         &mut self,
         server_id: ServerRef,
@@ -784,6 +790,7 @@ impl Cluster {
     /// CloudCoaster build on) drains deep queues left behind by load
     /// spikes: an idle server probes random busy ones and takes a batch
     /// of their pending shorts.
+    // lint: hot-path
     pub fn steal_short_tasks(
         &mut self,
         victim: ServerRef,
@@ -967,6 +974,7 @@ impl Cluster {
     /// already-scheduled `TaskFinish` event stays in the queue as a
     /// liveness ref — it pops later, resolves [`FinishOutcome::Stale`],
     /// and only then can the slot recycle.
+    // lint: hot-path
     pub fn revoke_into(
         &mut self,
         id: ServerRef,
@@ -1051,7 +1059,7 @@ impl Cluster {
     /// Exhaustive invariant check (tests / debug builds only — O(cluster)).
     pub fn check_invariants(&self) {
         use std::collections::HashSet;
-        let free: HashSet<u32> = self.free_slots.iter().copied().collect();
+        let free: HashSet<u32> = self.free_slots.iter().copied().collect(); // lint: allow(unordered-iter): duplicate detection via len() only, never iterated
         assert_eq!(free.len(), self.free_slots.len(), "duplicate slots on the free list");
         if self.recycle {
             assert_eq!(
@@ -1065,7 +1073,7 @@ impl Cluster {
         }
         assert!(self.peak_resident_tasks >= self.resident_tasks);
         // Server-arena accounting (the server twin of the task checks).
-        let free_servers: HashSet<u32> = self.free_server_slots.iter().copied().collect();
+        let free_servers: HashSet<u32> = self.free_server_slots.iter().copied().collect(); // lint: allow(unordered-iter): duplicate detection via len() only, never iterated
         assert_eq!(
             free_servers.len(),
             self.free_server_slots.len(),
@@ -1169,6 +1177,7 @@ impl Cluster {
                 }
             }
             if let Some(tid) = s.running {
+                // lint: allow(panic-surface): check_invariants is a diagnostic-only walk; a recycled ref here IS the bug it reports
                 let t = self
                     .get_task(tid)
                     .expect("running slot references a recycled task");
@@ -1181,6 +1190,7 @@ impl Cluster {
             // copies were discounted when their live twin started).
             let mut expect = s.running.map(|t| self.task(t).duration).unwrap_or(0.0);
             for &tid in &s.queue {
+                // lint: allow(panic-surface): check_invariants is a diagnostic-only walk; a recycled ref here IS the bug it reports
                 let t = self
                     .get_task(tid)
                     .expect("server queue references a recycled task");

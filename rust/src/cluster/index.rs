@@ -76,6 +76,7 @@ impl PoolIndex {
 
     // ------------------------------------------------------------ general
 
+    // lint: hot-path
     #[inline]
     pub fn update_general(&mut self, slot: usize, est_work: f64) {
         debug_assert!(slot < self.n_general);
@@ -84,6 +85,7 @@ impl PoolIndex {
 
     /// Slot (== position in `Cluster::general`) of the least-loaded
     /// general server. `None` only for an empty general partition.
+    // lint: hot-path
     #[inline]
     pub fn least_loaded_general_slot(&self) -> Option<usize> {
         (self.n_general > 0).then(|| self.general.argmin())
@@ -96,6 +98,7 @@ impl PoolIndex {
 
     // ------------------------------------------------------ short-reserved
 
+    // lint: hot-path
     #[inline]
     pub fn update_short(&mut self, slot: usize, est_work: f64) {
         debug_assert!(slot < self.n_short);
@@ -104,6 +107,7 @@ impl PoolIndex {
 
     /// Slot (== position in `Cluster::short_reserved`) of the
     /// least-loaded on-demand short server.
+    // lint: hot-path
     #[inline]
     pub fn least_loaded_short_slot(&self) -> Option<usize> {
         (self.n_short > 0).then(|| self.short.argmin())
@@ -118,6 +122,7 @@ impl PoolIndex {
 
     /// Register a transient server that just became Active, reusing a
     /// recycled tree slot when one is free.
+    // lint: hot-path
     pub fn insert_transient(&mut self, sid: ServerRef, key: TransientKey) {
         let rel = sid.index() - self.t_base;
         if rel >= self.t_slot.len() {
@@ -149,6 +154,7 @@ impl PoolIndex {
     /// like the read paths: a stale handle whose arena slot has been
     /// recycled must not tombstone — or double-free the tree slot of —
     /// the slot's new tenant.
+    // lint: hot-path
     pub fn remove_transient(&mut self, sid: ServerRef) {
         let Some(rel) = sid.index().checked_sub(self.t_base) else { return };
         let Some(&slot) = self.t_slot.get(rel) else { return };
@@ -164,6 +170,7 @@ impl PoolIndex {
     /// Refresh a transient server's key; no-op if it is not indexed
     /// (provisioning, draining or retired). Generation-guarded: a stale
     /// handle must not re-key the slot's new tenant.
+    // lint: hot-path
     #[inline]
     pub fn update_transient(&mut self, sid: ServerRef, key: TransientKey) {
         let Some(rel) = sid.index().checked_sub(self.t_base) else { return };
@@ -200,6 +207,7 @@ impl PoolIndex {
     /// `(depth, est_work, ready_seq)` — the manager's drain victim
     /// ("fastest to free"), earliest-activated on load ties, exactly
     /// like the scan it replaced.
+    // lint: hot-path
     #[inline]
     pub fn transient_argmin(&self) -> Option<ServerRef> {
         (self.t_len > 0).then(|| self.t_server[self.transient.argmin()])

@@ -102,7 +102,7 @@ impl Task {
                 return;
             }
         }
-        panic!("task {:?} placed on more than two servers", self.id);
+        panic!("task {:?} placed on more than two servers", self.id); // lint: allow(panic-surface): enforces the two-copy placement invariant (paper 3.3); a third copy is a scheduler bug
     }
 
     /// Forget a queue-entry location (entry consumed, stolen or revoked).

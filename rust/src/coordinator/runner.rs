@@ -33,7 +33,7 @@ use crate::sim::{
 };
 use crate::trace::{ArrivalSource, Workload};
 use crate::transient::{ManagerConfig, SharedBudget};
-use crate::util::Time;
+use crate::util::{Time, RNG_ARRIVALS, RNG_MARKET};
 
 /// Low-level simulation parameters (cluster geometry + hooks).
 #[derive(Clone, Debug)]
@@ -268,10 +268,11 @@ fn wire_standard_shared<'a>(
         world.add_component(Box::new(SnapshotSampler::new(cfg.snapshot_interval)));
     }
 
-    // Transient manager (market RNG stream forks with label 0x7A, after
-    // the scheduler stream's 0x5C — the original runner's fork order).
+    // Transient manager (market RNG stream forks with RNG_MARKET, after
+    // the scheduler stream's RNG_SCHED — the original runner's fork
+    // order; see util/rng_labels.rs for the table).
     if let Some(mcfg) = cfg.manager.clone() {
-        let market_rng = world.fork_rng(0x7A);
+        let market_rng = world.fork_rng(RNG_MARKET);
         let component = match shared {
             Some(pool) => TransientManagerComponent::with_shared_budget(mcfg, market_rng, pool),
             None => TransientManagerComponent::new(mcfg, market_rng),
@@ -452,12 +453,12 @@ pub fn build_federation<'a>(
         world.engine = build_engine(&sim_cfg);
         wire_standard_shared(&mut world, sched.as_mut(), &sim_cfg, None, shared.clone());
         if routed {
-            // The member's canonical arrival stream (0xAE, forked after
-            // wiring exactly where `World::start` would fork it) drives
-            // the federation's pull from this member's source, so a
-            // routed member consumes the identical stream a standalone
-            // run of the same config would.
-            arr_rngs.push(world.fork_rng(0xAE));
+            // The member's canonical arrival stream (RNG_ARRIVALS,
+            // forked after wiring exactly where `World::start` would
+            // fork it) drives the federation's pull from this member's
+            // source, so a routed member consumes the identical stream
+            // a standalone run of the same config would.
+            arr_rngs.push(world.fork_rng(RNG_ARRIVALS));
             sources.push(scenario.build_source(mc)?);
         }
         worlds.push(world);

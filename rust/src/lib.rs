@@ -176,6 +176,24 @@
 //! stdout and every report field stay byte-identical with profiling
 //! on or off.
 //!
+//! ## Static invariants
+//!
+//! The golden and property suites above catch determinism drift *after*
+//! it happens; the first-party [`lint`] pass (`pallas-lint`) rejects
+//! the code shapes that cause it *before* a run exists. Six rules, each
+//! one file under `src/lint/`: wall-clock reads quarantined to the
+//! coordinator/benchkit/profiler edges, unordered `HashMap`/`HashSet`
+//! iteration banned from report-shaping modules, every RNG fork label
+//! forced through the [`util`] registry (`RNG_*` constants — no raw
+//! hex at call sites), raw `TaskId`/`ServerId` construction confined
+//! to [`util`], allocation banned inside `// lint: hot-path`-marked
+//! functions, and `unwrap`/`expect`/`panic!` in library simulation
+//! paths required to carry a written justification. Violations are
+//! suppressed line-by-line with `// lint: allow(<rule>): <reason>`;
+//! `tests/lint_clean.rs` gates `cargo test` on a clean tree, and the
+//! JSON report (`pallas-lint --json`) is byte-deterministic for CI
+//! diffing. See `rust/LINTS.md` for the full rule catalogue.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -239,6 +257,7 @@
 pub mod benchkit;
 pub mod cluster;
 pub mod coordinator;
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;

@@ -1,0 +1,144 @@
+//! `hot-path-no-alloc`: a function marked with a standalone
+//! `// lint: hot-path` comment is scanned for allocating calls —
+//! `Vec::new`, `vec![`, `.to_vec()`, `.collect()`, `Box::new`,
+//! `.clone()`. This turns PR 8's zero-alloc event-loop campaign from
+//! after-the-fact pool counters into a gate that fires at lint time,
+//! on the exact functions the profiler showed on the hot path.
+//!
+//! The marker attaches to the next `fn` item; the scan covers its
+//! body (first `{` after the `fn` keyword through the matching `}`).
+//! `Vec::with_capacity` is deliberately not banned: one-time arena
+//! sizing inside setup branches is amortized, and banning it would
+//! just push people to `resize`-style churn.
+
+use super::{Diagnostic, FileCtx};
+use crate::lint::lexer::TokKind;
+
+const RULE: &str = "hot-path-no-alloc";
+
+/// `.method()` calls that allocate.
+const BANNED_METHODS: [&str; 3] = ["to_vec", "collect", "clone"];
+
+pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    for &marker_line in ctx.hot_markers {
+        // First `fn` token strictly after the marker line.
+        let fn_idx = ctx
+            .toks
+            .iter()
+            .position(|t| t.line > marker_line && t.kind == TokKind::Ident && t.text == "fn");
+        let Some(fn_idx) = fn_idx else { continue };
+        // Body: first `{` after the fn keyword, brace-matched.
+        let Some(open) = (fn_idx..ctx.toks.len()).find(|&i| ctx.is_punct(i, '{')) else {
+            continue;
+        };
+        let mut depth = 0i32;
+        let mut close = open;
+        for i in open..ctx.toks.len() {
+            if ctx.is_punct(i, '{') {
+                depth += 1;
+            } else if ctx.is_punct(i, '}') {
+                depth -= 1;
+                if depth == 0 {
+                    close = i;
+                    break;
+                }
+            }
+        }
+        let fn_name = ctx.ident(fn_idx + 1).unwrap_or("<anonymous>").to_string();
+        scan_body(ctx, open, close, &fn_name, out);
+    }
+}
+
+fn scan_body(
+    ctx: &FileCtx,
+    open: usize,
+    close: usize,
+    fn_name: &str,
+    out: &mut Vec<Diagnostic>,
+) {
+    for i in open..close {
+        let line = ctx.toks[i].line;
+        // Vec::new / Box::new
+        if let Some(head) = ctx.ident(i) {
+            if (head == "Vec" || head == "Box")
+                && ctx.is_punct(i + 1, ':')
+                && ctx.is_punct(i + 2, ':')
+                && ctx.ident(i + 3) == Some("new")
+            {
+                out.push(ctx.diag(
+                    line,
+                    RULE,
+                    format!("`{head}::new` in hot-path fn `{fn_name}`"),
+                ));
+                continue;
+            }
+            // vec![
+            if head == "vec" && ctx.is_punct(i + 1, '!') {
+                out.push(ctx.diag(
+                    line,
+                    RULE,
+                    format!("`vec![` in hot-path fn `{fn_name}`"),
+                ));
+                continue;
+            }
+        }
+        // .to_vec() / .collect() / .clone()
+        if ctx.is_punct(i, '.') {
+            if let Some(m) = ctx.ident(i + 1) {
+                if BANNED_METHODS.contains(&m) && ctx.is_punct(i + 2, '(') {
+                    out.push(ctx.diag(
+                        ctx.toks[i + 1].line,
+                        RULE,
+                        format!("`.{m}()` in hot-path fn `{fn_name}`"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::{lint_file_source, LabelRegistry};
+
+    #[test]
+    fn flags_allocation_in_marked_fn() {
+        let src = "// lint: hot-path\nfn step(&mut self) {\n    let v: Vec<u32> = Vec::new();\n    let w = v.clone();\n    let _ = w;\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        let hits: Vec<_> = out.kept.iter().filter(|d| d.rule == "hot-path-no-alloc").collect();
+        assert_eq!(hits.len(), 2, "{hits:?}");
+    }
+
+    #[test]
+    fn unmarked_fns_are_not_scanned() {
+        let src = "fn setup() -> Vec<u32> {\n    (0..4).collect()\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "hot-path-no-alloc"));
+    }
+
+    #[test]
+    fn marker_scope_ends_at_fn_body() {
+        let src = "// lint: hot-path\nfn hot(&mut self) -> u32 {\n    self.n\n}\n\nfn cold() -> Vec<u32> {\n    vec![1, 2]\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        assert!(
+            out.kept.iter().all(|d| d.rule != "hot-path-no-alloc"),
+            "cold() is past hot()'s body: {:?}",
+            out.kept
+        );
+    }
+
+    #[test]
+    fn with_capacity_is_allowed() {
+        let src = "// lint: hot-path\nfn grow(&mut self) {\n    self.buf = Vec::with_capacity(64);\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "hot-path-no-alloc"));
+    }
+
+    #[test]
+    fn suppression_inside_hot_fn() {
+        let src = "// lint: hot-path\nfn step(&mut self) {\n    // lint: allow(hot-path-no-alloc): one-time lazy init on first event\n    self.scratch = Vec::new();\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "hot-path-no-alloc"), "{:?}", out.kept);
+        assert_eq!(out.suppressed.len(), 1);
+    }
+}

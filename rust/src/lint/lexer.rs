@@ -1,0 +1,389 @@
+//! A minimal comment/string-aware Rust lexer for `pallas-lint`.
+//!
+//! This is deliberately **not** a full Rust lexer: the lint rules only
+//! need identifiers, integer literals and single-character punctuation,
+//! with comments, strings, char literals and lifetimes recognised well
+//! enough that their *contents* never leak into the token stream (a
+//! `"HashMap"` inside a string or a `panic!` inside a doc comment must
+//! not trip a rule). It handles nested block comments, raw strings
+//! (`r"…"`, `r#"…"#`, any hash depth), byte strings, escapes inside
+//! string/char literals, and the char-literal-vs-lifetime ambiguity.
+//!
+//! Line comments are captured separately (with their line number and
+//! whether they stand alone on the line) because the suppression and
+//! `hot-path` markers live in them.
+
+/// Token kind. Only `Ident` and `Int` carry text the rules inspect;
+/// string/char/lifetime tokens exist so rules can see that *something*
+/// non-matchable occupied the position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TokKind {
+    Ident,
+    Int,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct Tok {
+    /// 1-based source line.
+    pub line: u32,
+    pub kind: TokKind,
+    /// Identifier / integer-literal text; for `Punct` the single
+    /// character; empty for string/char/lifetime tokens.
+    pub text: String,
+}
+
+/// A `//` comment, captured for marker parsing.
+#[derive(Debug, Clone)]
+pub(crate) struct LineComment {
+    /// 1-based source line the comment starts on.
+    pub line: u32,
+    /// Text after the `//` (and after any further leading `/` or `!`
+    /// of doc comments), not trimmed.
+    pub text: String,
+    /// True when only whitespace precedes the `//` on its line.
+    pub standalone: bool,
+}
+
+pub(crate) struct LexOutput {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+    /// Total number of source lines (1-based indexing convenience).
+    pub n_lines: u32,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + line comments. Never fails: unterminated
+/// constructs simply consume to end of input (the real compiler owns
+/// error reporting; the lint only needs a best-effort scan).
+pub(crate) fn lex(src: &str) -> LexOutput {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // Whether a token has already been emitted on the current line
+    // (drives LineComment::standalone).
+    let mut line_has_code = false;
+
+    macro_rules! bump_line {
+        () => {{
+            line += 1;
+            line_has_code = false;
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            bump_line!();
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n {
+            if chars[i + 1] == '/' {
+                let start_line = line;
+                let standalone = !line_has_code;
+                let mut j = i + 2;
+                // Fold doc-comment sigils into the prefix.
+                while j < n && (chars[j] == '/' || chars[j] == '!') {
+                    j += 1;
+                }
+                let mut text = String::new();
+                while j < n && chars[j] != '\n' {
+                    text.push(chars[j]);
+                    j += 1;
+                }
+                comments.push(LineComment { line: start_line, text, standalone });
+                i = j;
+                continue;
+            }
+            if chars[i + 1] == '*' {
+                // Nested block comment.
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if chars[j] == '\n' {
+                        bump_line!();
+                        j += 1;
+                    } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+                continue;
+            }
+        }
+        // String literal.
+        if c == '"' {
+            let start_line = line;
+            i = scan_string_body(&chars, i + 1, &mut line, &mut line_has_code);
+            toks.push(Tok { line: start_line, kind: TokKind::Str, text: String::new() });
+            line_has_code = true;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 2 < n
+                && is_ident_start(chars[i + 1])
+                && chars[i + 2] != '\''
+            {
+                // Lifetime: 'a, 'static, '_ …
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Tok { line, kind: TokKind::Lifetime, text: String::new() });
+                line_has_code = true;
+                i = j;
+                continue;
+            }
+            // Char literal: '\n', 'x', '\u{1F600}' …
+            let mut j = i + 1;
+            while j < n && chars[j] != '\'' {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { line, kind: TokKind::Char, text: String::new() });
+            line_has_code = true;
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Identifier — with raw-string / byte-string prefix handling.
+        if is_ident_start(c) {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && is_ident_continue(chars[j]) {
+                text.push(chars[j]);
+                j += 1;
+            }
+            let next = if j < n { chars[j] } else { '\0' };
+            if (text == "r" || text == "br") && (next == '"' || next == '#') {
+                // Possible raw string r"…" / r#"…"# / br#"…"#.
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let start_line = line;
+                    // Scan to closing `"` followed by `hashes` hashes.
+                    let mut m = k + 1;
+                    'raw: while m < n {
+                        if chars[m] == '\n' {
+                            bump_line!();
+                            m += 1;
+                            continue;
+                        }
+                        if chars[m] == '"' {
+                            let mut h = 0usize;
+                            while m + 1 + h < n && h < hashes && chars[m + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                m += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        m += 1;
+                    }
+                    toks.push(Tok {
+                        line: start_line,
+                        kind: TokKind::Str,
+                        text: String::new(),
+                    });
+                    line_has_code = true;
+                    i = m;
+                    continue;
+                }
+                // `r#ident` raw identifier or stray hash: fall through,
+                // emit `r` as an ident and let the main loop resume at
+                // the hash.
+            }
+            if text == "b" && next == '"' {
+                let start_line = line;
+                i = scan_string_body(&chars, j + 1, &mut line, &mut line_has_code);
+                toks.push(Tok { line: start_line, kind: TokKind::Str, text: String::new() });
+                line_has_code = true;
+                continue;
+            }
+            toks.push(Tok { line, kind: TokKind::Ident, text });
+            line_has_code = true;
+            i = j;
+            continue;
+        }
+        // Integer (and, loosely, float) literals. Rules only consume
+        // integer values; float fragments lex as Int + Punct('.') + Int,
+        // which no rule matches on.
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && (is_ident_continue(chars[j])) {
+                text.push(chars[j]);
+                j += 1;
+            }
+            toks.push(Tok { line, kind: TokKind::Int, text });
+            line_has_code = true;
+            i = j;
+            continue;
+        }
+        // Single-character punctuation.
+        toks.push(Tok { line, kind: TokKind::Punct, text: c.to_string() });
+        line_has_code = true;
+        i += 1;
+    }
+
+    let n_lines = line.max(1);
+    LexOutput { toks, comments, n_lines }
+}
+
+/// Scan a (non-raw) string body starting just past the opening quote;
+/// returns the index just past the closing quote. Tracks newlines.
+fn scan_string_body(
+    chars: &[char],
+    mut j: usize,
+    line: &mut u32,
+    line_has_code: &mut bool,
+) -> usize {
+    let n = chars.len();
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                *line_has_code = false;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Parse an integer literal's text (`0x5C`, `1_000u64`, `42`) into its
+/// value. Returns `None` for malformed or non-integer text.
+pub(crate) fn parse_int_literal(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (radix, digits) = if let Some(rest) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X"))
+    {
+        (16u32, rest)
+    } else if let Some(rest) = t.strip_prefix("0b").or_else(|| t.strip_prefix("0B")) {
+        (2, rest)
+    } else if let Some(rest) = t.strip_prefix("0o").or_else(|| t.strip_prefix("0O")) {
+        (8, rest)
+    } else {
+        (10, t.as_str())
+    };
+    // Strip a type suffix (u8/u16/u32/u64/usize/i*…): cut at the first
+    // char that is not a digit of the radix.
+    let end = digits
+        .char_indices()
+        .find(|&(_, c)| !c.is_digit(radix))
+        .map(|(idx, _)| idx)
+        .unwrap_or(digits.len());
+    let core = &digits[..end];
+    if core.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(core, radix).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = r##"
+            // HashMap in a comment
+            /* Instant::now() in /* a nested */ block */
+            let s = "HashMap::new()";
+            let r = r#"panic!("x")"#;
+            let c = 'x';
+            let lt: &'static str = "SystemTime";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.iter().any(|t| t == "HashMap"));
+        assert!(!ids.iter().any(|t| t == "Instant"));
+        assert!(!ids.iter().any(|t| t == "panic"));
+        assert!(!ids.iter().any(|t| t == "SystemTime"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let out = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        let kinds: Vec<TokKind> = out.toks.iter().map(|t| t.kind).collect();
+        assert!(kinds.contains(&TokKind::Lifetime));
+        assert!(!kinds.contains(&TokKind::Char));
+    }
+
+    #[test]
+    fn line_numbers_and_standalone_flags() {
+        let src = "let a = 1; // trailing\n// standalone\nlet b = 2;\n";
+        let out = lex(src);
+        assert_eq!(out.comments.len(), 2);
+        assert_eq!(out.comments[0].line, 1);
+        assert!(!out.comments[0].standalone);
+        assert_eq!(out.comments[1].line, 2);
+        assert!(out.comments[1].standalone);
+        let b_tok = out.toks.iter().find(|t| t.text == "b");
+        assert_eq!(b_tok.map(|t| t.line), Some(3));
+    }
+
+    #[test]
+    fn int_literal_parsing() {
+        assert_eq!(parse_int_literal("0x5C"), Some(0x5C));
+        assert_eq!(parse_int_literal("0xA11"), Some(0xA11));
+        assert_eq!(parse_int_literal("42"), Some(42));
+        assert_eq!(parse_int_literal("1_000"), Some(1000));
+        assert_eq!(parse_int_literal("0x5Cu64"), Some(0x5C));
+        assert_eq!(parse_int_literal("0x"), None);
+        assert_eq!(parse_int_literal("nope"), None);
+    }
+
+    #[test]
+    fn multiline_strings_track_lines() {
+        let src = "let s = \"a\nb\nc\";\nafter();";
+        let out = lex(src);
+        let after = out.toks.iter().find(|t| t.text == "after");
+        assert_eq!(after.map(|t| t.line), Some(4));
+    }
+}

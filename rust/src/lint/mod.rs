@@ -1,0 +1,688 @@
+//! `pallas-lint`: a first-party static-analysis pass over `rust/src/**`
+//! that enforces the simulator's structural invariants as named,
+//! suppressible rules. Zero dependencies — a hand-rolled
+//! comment/string-aware lexer ([`lexer`]), no `syn` — so the build
+//! stays fully vendored and the pass runs identically offline, in CI,
+//! and in-process from `tests/lint_clean.rs`.
+//!
+//! ## Rules
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `wall-clock-quarantine` | wall-clock reads only in whitelisted timing modules |
+//! | `unordered-iter` | no `HashMap`/`HashSet` in sim/report-surface modules without a keyed-access argument |
+//! | `rng-label-registry` | every RNG fork label is a named constant from `util/rng_labels.rs`, unique crate-wide |
+//! | `raw-id-ban` | no raw `TaskId`/`ServerId` outside `util` compat shims |
+//! | `hot-path-no-alloc` | functions marked `// lint: hot-path` contain no allocating calls |
+//! | `panic-surface` | `unwrap`/`expect`/`panic!` in library sim paths carry a justification |
+//!
+//! ## Suppression
+//!
+//! `// lint: allow(<rule>): <reason>` — trailing on a line it covers
+//! that line; standing alone it covers the following statement (up to
+//! and including the next line containing `;`, `{` or `}`). The reason
+//! is mandatory; a missing reason is a malformed marker. Unused
+//! suppressions are reported in the JSON output but are not fatal, so
+//! a drive-by refactor that removes a violation does not break the
+//! build — it just leaves a visible crumb to clean up.
+//!
+//! `// lint: hot-path` marks the next `fn` item for the
+//! `hot-path-no-alloc` scan.
+//!
+//! Code under `#[cfg(test)]` / `#[test]` items is exempt from every
+//! rule: tests may use wall clocks, ad-hoc fork labels and `unwrap`
+//! freely.
+//!
+//! See `rust/LINTS.md` for the full catalogue and how to add a rule.
+
+mod hot_path;
+mod lexer;
+mod panic_surface;
+mod raw_ids;
+mod rng_labels;
+mod unordered_iter;
+mod wall_clock;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use lexer::{LexOutput, Tok, TokKind};
+
+pub use rng_labels::LabelRegistry;
+
+/// The closed set of rule names. Suppression markers naming anything
+/// else are malformed (catches typos like `allow(panic_surface)`).
+pub const RULES: [&str; 6] = [
+    "wall-clock-quarantine",
+    "unordered-iter",
+    "rng-label-registry",
+    "raw-id-ban",
+    "hot-path-no-alloc",
+    "panic-surface",
+];
+
+/// One finding, pre- or post-suppression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A suppression that matched no diagnostic (reported, non-fatal).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnusedSuppression {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RuleCount {
+    pub violations: usize,
+    pub suppressed: usize,
+}
+
+/// The result of a full pass. Every collection is sorted so that the
+/// JSON rendering is byte-deterministic run-to-run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Unsuppressed findings — non-empty means the gate fails.
+    pub diagnostics: Vec<Diagnostic>,
+    pub suppressed: usize,
+    pub rule_counts: BTreeMap<&'static str, RuleCount>,
+    pub unused_suppressions: Vec<UnusedSuppression>,
+    /// Malformed markers and other non-fatal scan notes.
+    pub notes: Vec<String>,
+}
+
+impl LintReport {
+    /// True when the pass found zero unsuppressed diagnostics.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Deterministic JSON rendering: fixed key order, sorted
+    /// collections, no timestamps or absolute paths.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        let _ = writeln!(s, "  \"schema\": \"pallas-lint/1\",");
+        let _ = writeln!(s, "  \"files_scanned\": {},", self.files_scanned);
+        let _ = writeln!(s, "  \"unsuppressed\": {},", self.diagnostics.len());
+        let _ = writeln!(s, "  \"suppressed\": {},", self.suppressed);
+        s.push_str("  \"rules\": {\n");
+        for (i, (rule, c)) in self.rule_counts.iter().enumerate() {
+            let comma = if i + 1 < self.rule_counts.len() { "," } else { "" };
+            let _ = writeln!(
+                s,
+                "    {}: {{\"violations\": {}, \"suppressed\": {}}}{}",
+                json_str(rule),
+                c.violations,
+                c.suppressed,
+                comma
+            );
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"diagnostics\": [\n");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            let comma = if i + 1 < self.diagnostics.len() { "," } else { "" };
+            let _ = writeln!(
+                s,
+                "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}}}{}",
+                json_str(&d.file),
+                d.line,
+                json_str(d.rule),
+                json_str(&d.message),
+                comma
+            );
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"unused_suppressions\": [\n");
+        for (i, u) in self.unused_suppressions.iter().enumerate() {
+            let comma = if i + 1 < self.unused_suppressions.len() { "," } else { "" };
+            let _ = writeln!(
+                s,
+                "    {{\"file\": {}, \"line\": {}, \"rule\": {}}}{}",
+                json_str(&u.file),
+                u.line,
+                json_str(&u.rule),
+                comma
+            );
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"notes\": [\n");
+        for (i, note) in self.notes.iter().enumerate() {
+            let comma = if i + 1 < self.notes.len() { "," } else { "" };
+            let _ = writeln!(s, "    {}{}", json_str(note), comma);
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable rendering: `file:line: [rule] message` per
+    /// finding plus a one-line summary.
+    pub fn render_human(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            let _ = writeln!(s, "{}:{}: [{}] {}", d.file, d.line, d.rule, d.message);
+        }
+        for u in &self.unused_suppressions {
+            let _ = writeln!(
+                s,
+                "{}:{}: note: unused suppression for `{}`",
+                u.file, u.line, u.rule
+            );
+        }
+        for note in &self.notes {
+            let _ = writeln!(s, "note: {note}");
+        }
+        let _ = writeln!(
+            s,
+            "pallas-lint: {} file(s), {} unsuppressed diagnostic(s), {} suppressed",
+            self.files_scanned,
+            self.diagnostics.len(),
+            self.suppressed
+        );
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+// ------------------------------------------------------------ markers
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Marker {
+    Allow { rule: String, reason: String },
+    HotPath,
+}
+
+/// Parse a line comment's text. `None`: not a lint marker at all.
+/// `Some(Err(..))`: a lint marker that is malformed (reported as a
+/// note — the comment author clearly meant to talk to us).
+fn parse_marker(text: &str) -> Option<Result<Marker, String>> {
+    let t = text.trim();
+    let rest = t.strip_prefix("lint:")?.trim();
+    if rest == "hot-path" {
+        return Some(Ok(Marker::HotPath));
+    }
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        let close = match inner.find(')') {
+            Some(c) => c,
+            None => return Some(Err("unterminated `allow(`".to_string())),
+        };
+        let rule = inner[..close].trim().to_string();
+        if !RULES.contains(&rule.as_str()) {
+            return Some(Err(format!("unknown rule `{rule}` in allow marker")));
+        }
+        let after = inner[close + 1..].trim_start();
+        let reason = match after.strip_prefix(':') {
+            Some(r) => r.trim(),
+            None => return Some(Err(format!("allow({rule}) is missing `: <reason>`"))),
+        };
+        if reason.is_empty() {
+            return Some(Err(format!("allow({rule}) has an empty reason")));
+        }
+        return Some(Ok(Marker::Allow { rule, reason: reason.to_string() }));
+    }
+    Some(Err(format!("unrecognized lint marker `{t}`")))
+}
+
+#[derive(Debug)]
+struct Suppression {
+    rule: String,
+    line: u32,
+    /// Inclusive line range this suppression covers.
+    covers: (u32, u32),
+    used: bool,
+}
+
+/// How far a standalone suppression extends: through the next line
+/// containing a statement/block terminator, capped defensively.
+const STANDALONE_COVER_CAP: u32 = 12;
+
+fn suppression_cover(standalone: bool, line: u32, lines: &[&str]) -> (u32, u32) {
+    if !standalone {
+        return (line, line);
+    }
+    let mut end = line + 1;
+    let last = lines.len() as u32;
+    while end <= last && end - line <= STANDALONE_COVER_CAP {
+        let text = lines[(end - 1) as usize];
+        if text.contains(';') || text.contains('{') || text.contains('}') {
+            break;
+        }
+        end += 1;
+    }
+    (line + 1, end.min(last))
+}
+
+// ------------------------------------------------------- test regions
+
+/// Mark every line belonging to a `#[test]` / `#[cfg(test)]`-gated item
+/// (attribute through the end of the item). All rules skip those lines.
+fn test_lines(toks: &[Tok], n_lines: u32) -> Vec<bool> {
+    let mut marked = vec![false; n_lines as usize + 2];
+    let is_p = |i: usize, c: char| {
+        toks.get(i).is_some_and(|t| {
+            t.kind == TokKind::Punct && t.text.len() == 1 && t.text.as_bytes()[0] == c as u8
+        })
+    };
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_p(i, '#') && is_p(i + 1, '[')) {
+            i += 1;
+            continue;
+        }
+        // Scan the attribute to its matching `]`.
+        let attr_start = i;
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "[" | "(" => depth += 1,
+                    "]" | ")" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident {
+                if t.text == "test" {
+                    has_test = true;
+                } else if t.text == "not" {
+                    has_not = true;
+                }
+            }
+            j += 1;
+        }
+        if !(has_test && !has_not) {
+            i = j;
+            continue;
+        }
+        // Skip any further stacked attributes.
+        while is_p(j, '#') && is_p(j + 1, '[') {
+            let mut d = 0i32;
+            j += 1;
+            while j < toks.len() {
+                if toks[j].kind == TokKind::Punct {
+                    match toks[j].text.as_str() {
+                        "[" | "(" => d += 1,
+                        "]" | ")" => {
+                            d -= 1;
+                            if d == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+        }
+        // Skip the item: to a `;` outside any bracket, or through the
+        // matching `}` of its first top-level brace block.
+        let mut pd = 0i32; // () and []
+        let mut bd = 0i32; // {}
+        let mut started = false;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => pd += 1,
+                    ")" | "]" => pd -= 1,
+                    "{" => {
+                        bd += 1;
+                        started = true;
+                    }
+                    "}" => {
+                        bd -= 1;
+                        if started && bd == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    ";" if pd == 0 && bd == 0 && !started => {
+                        j += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let start_line = toks[attr_start].line;
+        let end_line = if j > 0 && j <= toks.len() { toks[j - 1].line } else { n_lines };
+        for l in start_line..=end_line.min(n_lines) {
+            marked[l as usize] = true;
+        }
+        i = j;
+    }
+    marked
+}
+
+// -------------------------------------------------------- file context
+
+/// Everything a rule sees about one file.
+pub(crate) struct FileCtx<'a> {
+    pub rel: &'a str,
+    pub toks: &'a [Tok],
+    /// Lines carrying a `// lint: hot-path` marker.
+    pub hot_markers: &'a [u32],
+    pub registry: &'a LabelRegistry,
+}
+
+impl FileCtx<'_> {
+    pub(crate) fn ident(&self, i: usize) -> Option<&str> {
+        match self.toks.get(i) {
+            Some(t) if t.kind == TokKind::Ident => Some(&t.text),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn is_punct(&self, i: usize, c: char) -> bool {
+        self.toks
+            .get(i)
+            .is_some_and(|t| t.kind == TokKind::Punct && t.text.len() == 1 && t.text.as_bytes()[0] == c as u8)
+    }
+
+    pub(crate) fn diag(&self, line: u32, rule: &'static str, message: String) -> Diagnostic {
+        Diagnostic { file: self.rel.to_string(), line, rule, message }
+    }
+
+    /// True when `prefix` is one of the module-path prefixes of this
+    /// file (e.g. `in_module(&["sim/", "cluster/"])`).
+    pub(crate) fn in_module(&self, prefixes: &[&str]) -> bool {
+        prefixes.iter().any(|p| self.rel.starts_with(p))
+    }
+}
+
+// ------------------------------------------------------------- driver
+
+/// Outcome of linting one file (exposed for fixture tests).
+#[derive(Debug, Default)]
+pub struct FileLint {
+    pub kept: Vec<Diagnostic>,
+    pub suppressed: Vec<Diagnostic>,
+    pub unused: Vec<UnusedSuppression>,
+    pub notes: Vec<String>,
+}
+
+/// Lint one file's source text against a prebuilt registry. This is
+/// the unit the fixture tests drive; [`run`] maps it over the tree.
+pub fn lint_file_source(rel: &str, source: &str, registry: &LabelRegistry) -> FileLint {
+    let LexOutput { toks, comments, n_lines } = lexer::lex(source);
+    let lines: Vec<&str> = source.lines().collect();
+    let tests = test_lines(&toks, n_lines);
+    let mut suppressions: Vec<Suppression> = Vec::new();
+    let mut hot_markers: Vec<u32> = Vec::new();
+    let mut out = FileLint::default();
+
+    for c in &comments {
+        if tests.get(c.line as usize).copied().unwrap_or(false) {
+            continue;
+        }
+        match parse_marker(&c.text) {
+            None => {}
+            Some(Err(e)) => out.notes.push(format!("{rel}:{}: {e}", c.line)),
+            Some(Ok(Marker::HotPath)) => hot_markers.push(c.line),
+            Some(Ok(Marker::Allow { rule, .. })) => {
+                let covers = suppression_cover(c.standalone, c.line, &lines);
+                suppressions.push(Suppression { rule, line: c.line, covers, used: false });
+            }
+        }
+    }
+
+    let ctx = FileCtx { rel, toks: &toks, hot_markers: &hot_markers, registry };
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    wall_clock::check(&ctx, &mut raw);
+    unordered_iter::check(&ctx, &mut raw);
+    rng_labels::check(&ctx, &mut raw);
+    raw_ids::check(&ctx, &mut raw);
+    hot_path::check(&ctx, &mut raw);
+    panic_surface::check(&ctx, &mut raw);
+
+    for d in raw {
+        if tests.get(d.line as usize).copied().unwrap_or(false) {
+            continue;
+        }
+        let hit = suppressions
+            .iter_mut()
+            .find(|s| s.rule == d.rule && s.covers.0 <= d.line && d.line <= s.covers.1);
+        match hit {
+            Some(s) => {
+                s.used = true;
+                out.suppressed.push(d);
+            }
+            None => out.kept.push(d),
+        }
+    }
+    for s in &suppressions {
+        if !s.used {
+            out.unused.push(UnusedSuppression {
+                file: rel.to_string(),
+                line: s.line,
+                rule: s.rule.clone(),
+            });
+        }
+    }
+    out
+}
+
+fn walk_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut stack = vec![root.to_path_buf()];
+    let mut files = Vec::new();
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read_dir entry: {e}"))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Run the full pass over every `.rs` file under `src_root` (the
+/// crate's `src/` directory). The RNG label registry is parsed from
+/// `src_root/util/rng_labels.rs` first; a missing or inconsistent
+/// registry is itself a `rng-label-registry` diagnostic.
+pub fn run(src_root: &Path) -> Result<LintReport, String> {
+    let mut report = LintReport::default();
+    for rule in RULES {
+        report.rule_counts.insert(rule, RuleCount::default());
+    }
+
+    let registry_rel = "util/rng_labels.rs";
+    let registry_path = src_root.join(registry_rel);
+    let registry = match std::fs::read_to_string(&registry_path) {
+        Ok(src) => {
+            let (reg, problems) = LabelRegistry::parse(&src);
+            for p in problems {
+                report.diagnostics.push(Diagnostic {
+                    file: registry_rel.to_string(),
+                    line: 1,
+                    rule: "rng-label-registry",
+                    message: p,
+                });
+            }
+            reg
+        }
+        Err(e) => {
+            report.diagnostics.push(Diagnostic {
+                file: registry_rel.to_string(),
+                line: 1,
+                rule: "rng-label-registry",
+                message: format!("label registry unreadable: {e}"),
+            });
+            LabelRegistry::default()
+        }
+    };
+
+    for path in walk_rs_files(src_root)? {
+        let rel_os = path
+            .strip_prefix(src_root)
+            .map_err(|e| format!("strip_prefix: {e}"))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let file_lint = lint_file_source(&rel_os, &source, &registry);
+        report.files_scanned += 1;
+        for d in file_lint.kept {
+            if let Some(c) = report.rule_counts.get_mut(d.rule) {
+                c.violations += 1;
+            }
+            report.diagnostics.push(d);
+        }
+        for d in file_lint.suppressed {
+            if let Some(c) = report.rule_counts.get_mut(d.rule) {
+                c.suppressed += 1;
+            }
+            report.suppressed += 1;
+        }
+        report.unused_suppressions.extend(file_lint.unused);
+        report.notes.extend(file_lint.notes);
+    }
+
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message)));
+    report
+        .unused_suppressions
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    report.notes.sort();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_registry() -> LabelRegistry {
+        LabelRegistry::default()
+    }
+
+    #[test]
+    fn marker_parsing() {
+        assert_eq!(parse_marker(" just a comment"), None);
+        assert_eq!(parse_marker(" lint: hot-path"), Some(Ok(Marker::HotPath)));
+        let m = parse_marker(" lint: allow(panic-surface): lock is uncontended");
+        assert_eq!(
+            m,
+            Some(Ok(Marker::Allow {
+                rule: "panic-surface".to_string(),
+                reason: "lock is uncontended".to_string(),
+            }))
+        );
+        assert!(matches!(parse_marker(" lint: allow(panic-surface):"), Some(Err(_))));
+        assert!(matches!(parse_marker(" lint: allow(nope): reason"), Some(Err(_))));
+        assert!(matches!(parse_marker(" lint: frobnicate"), Some(Err(_))));
+    }
+
+    #[test]
+    fn trailing_suppression_covers_its_line() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // lint: allow(panic-surface): caller checked\n}\n";
+        let out = lint_file_source("sim/fixture.rs", src, &empty_registry());
+        assert!(out.kept.is_empty(), "kept: {:?}", out.kept);
+        assert_eq!(out.suppressed.len(), 1);
+        assert!(out.unused.is_empty());
+    }
+
+    #[test]
+    fn standalone_suppression_covers_a_multiline_statement() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic-surface): invariant upheld by caller\n    x\n        .unwrap()\n}\n";
+        let out = lint_file_source("sim/fixture.rs", src, &empty_registry());
+        // `.unwrap()` sits two lines below the marker; the standalone
+        // cover extends through the first `;`/`{`/`}` line.
+        assert!(out.kept.is_empty(), "kept: {:?}", out.kept);
+        assert_eq!(out.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn unused_suppressions_are_reported_not_fatal() {
+        let src = "// lint: allow(panic-surface): nothing here\nfn f() {}\n";
+        let out = lint_file_source("sim/fixture.rs", src, &empty_registry());
+        assert!(out.kept.is_empty());
+        assert_eq!(out.unused.len(), 1);
+        assert_eq!(out.unused[0].rule, "panic-surface");
+    }
+
+    #[test]
+    fn malformed_markers_become_notes() {
+        let src = "// lint: allow(panic-surface) no colon\nfn f() {}\n";
+        let out = lint_file_source("sim/fixture.rs", src, &empty_registry());
+        assert_eq!(out.notes.len(), 1);
+    }
+
+    #[test]
+    fn test_items_are_exempt_from_all_rules() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let x: Option<u32> = None;\n        x.unwrap();\n    }\n}\n";
+        let out = lint_file_source("sim/fixture.rs", src, &empty_registry());
+        assert!(out.kept.is_empty(), "kept: {:?}", out.kept);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let out = lint_file_source("sim/fixture.rs", src, &empty_registry());
+        assert_eq!(out.kept.len(), 1);
+        assert_eq!(out.kept[0].rule, "panic-surface");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_escaped() {
+        let mut r = LintReport::default();
+        r.rule_counts.insert("panic-surface", RuleCount { violations: 1, suppressed: 2 });
+        r.diagnostics.push(Diagnostic {
+            file: "sim/a.rs".to_string(),
+            line: 3,
+            rule: "panic-surface",
+            message: "say \"why\"".to_string(),
+        });
+        let a = r.to_json();
+        let b = r.to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\\\"why\\\""));
+        assert!(a.contains("\"schema\": \"pallas-lint/1\""));
+    }
+}

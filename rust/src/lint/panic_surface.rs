@@ -1,0 +1,99 @@
+//! `panic-surface`: `.unwrap()` / `.expect(..)` / `panic!(..)` in the
+//! library sim paths must carry a justification. A panic inside the
+//! event loop is a correct response to a broken invariant — and a
+//! terrible one to a recoverable condition; the rule forces each site
+//! to state which it is via `// lint: allow(panic-surface): <why>`.
+//! The justification *is* the suppression: every surviving site reads
+//! as a documented invariant, and a new bare `unwrap` fails the gate.
+//!
+//! Scope: the library modules a simulation run executes. The
+//! coordinator/CLI/benchkit layers are exempt — a driver aborting on
+//! bad input is fine — as are `unwrap_or`/`unwrap_or_else`/
+//! `unwrap_or_default` (they don't panic) and `unreachable!`/`assert!`
+//! (self-justifying by name).
+
+use super::{Diagnostic, FileCtx};
+
+const RULE: &str = "panic-surface";
+
+/// Library sim paths: code that runs inside a simulation.
+const SCOPE: [&str; 7] =
+    ["sim/", "cluster/", "sched/", "transient/", "metrics/", "trace/", "util/"];
+
+pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !ctx.in_module(&SCOPE) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        let Some(name) = ctx.ident(i) else { continue };
+        // .unwrap() / .expect(
+        if (name == "unwrap" || name == "expect")
+            && ctx.is_punct(i.wrapping_sub(1), '.')
+            && ctx.is_punct(i + 1, '(')
+        {
+            out.push(ctx.diag(
+                t.line,
+                RULE,
+                format!(
+                    "`.{name}` in a library sim path: justify the invariant with \
+                     `// lint: allow(panic-surface): <why>` or handle the None/Err"
+                ),
+            ));
+            continue;
+        }
+        // panic!(
+        if name == "panic" && ctx.is_punct(i + 1, '!') {
+            out.push(ctx.diag(
+                t.line,
+                RULE,
+                "`panic!` in a library sim path: justify with \
+                 `// lint: allow(panic-surface): <why>`"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::{lint_file_source, LabelRegistry};
+
+    #[test]
+    fn flags_unwrap_expect_panic_in_scope() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    let a = x.unwrap();\n    let b = x.expect(\"b\");\n    if a + b > 9 { panic!(\"boom\") }\n    a\n}\n";
+        let out = lint_file_source("trace/x.rs", src, &LabelRegistry::default());
+        let hits: Vec<_> = out.kept.iter().filter(|d| d.rule == "panic-surface").collect();
+        assert_eq!(hits.len(), 3, "{hits:?}");
+    }
+
+    #[test]
+    fn non_panicking_unwrap_variants_pass() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or(0) + x.unwrap_or_else(|| 1) + x.unwrap_or_default()\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "panic-surface"), "{:?}", out.kept);
+    }
+
+    #[test]
+    fn driver_layers_are_exempt() {
+        let src = "fn main() { std::fs::read(\"x\").unwrap(); }\n";
+        for rel in ["coordinator/report.rs", "bin/cli.rs", "benchkit.rs"] {
+            let out = lint_file_source(rel, src, &LabelRegistry::default());
+            assert!(out.kept.iter().all(|d| d.rule != "panic-surface"), "{rel}");
+        }
+    }
+
+    #[test]
+    fn justified_sites_pass() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic-surface): x is populated by the caller's invariant\n    x.unwrap()\n}\n";
+        let out = lint_file_source("cluster/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "panic-surface"), "{:?}", out.kept);
+        assert_eq!(out.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn unreachable_and_asserts_pass() {
+        let src = "fn f(n: u32) {\n    assert!(n > 0);\n    match n { 0 => unreachable!(\"checked\"), _ => {} }\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "panic-surface"), "{:?}", out.kept);
+    }
+}

@@ -1,0 +1,63 @@
+//! `raw-id-ban`: the raw `TaskId` / `ServerId` index types were
+//! superseded by the generation-checked `TaskRef` / `ServerRef` arena
+//! handles (PR 6); a raw index that outlives a slot recycle silently
+//! addresses the slot's next tenant. Outside `util` (where a compat
+//! shim may legitimately live), any mention of the raw types is a
+//! regression.
+
+use super::{Diagnostic, FileCtx};
+
+const RULE: &str = "raw-id-ban";
+
+const BANNED: [&str; 2] = ["TaskId", "ServerId"];
+
+pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if ctx.rel.starts_with("util/") {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        let Some(name) = ctx.ident(i) else { continue };
+        if BANNED.contains(&name) {
+            out.push(ctx.diag(
+                t.line,
+                RULE,
+                format!(
+                    "raw `{name}` outside util: use the generation-checked \
+                     `{}Ref` arena handle",
+                    name.trim_end_matches("Id")
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::{lint_file_source, LabelRegistry};
+
+    #[test]
+    fn flags_raw_ids_outside_util() {
+        let src = "fn f(id: TaskId) -> ServerId { todo!() }\n";
+        let out = lint_file_source("cluster/x.rs", src, &LabelRegistry::default());
+        let hits: Vec<_> = out.kept.iter().filter(|d| d.rule == "raw-id-ban").collect();
+        assert_eq!(hits.len(), 2, "{hits:?}");
+    }
+
+    #[test]
+    fn util_shims_and_ref_types_pass() {
+        let shim = "pub struct TaskId(pub u32);\n";
+        let out = lint_file_source("util/compat.rs", shim, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "raw-id-ban"));
+
+        let refs = "fn f(id: TaskRef) -> ServerRef { todo!() }\n";
+        let out = lint_file_source("cluster/x.rs", refs, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "raw-id-ban"));
+    }
+
+    #[test]
+    fn doc_comment_mentions_pass() {
+        let src = "/// Replaced the old raw `ServerId`.\nfn f() {}\n";
+        let out = lint_file_source("cluster/x.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "raw-id-ban"));
+    }
+}

@@ -1,0 +1,189 @@
+//! `rng-label-registry`: every RNG fork label at a call site must be a
+//! named constant from the single registry table in
+//! `util/rng_labels.rs`, and registry labels must be unique
+//! crate-wide. Stream identity is what makes runs reproducible across
+//! engines, thread counts and PDES windows; a raw `0x..` literal at a
+//! call site is an unregistered stream that nothing audits, and two
+//! registry entries with the same value are two streams that silently
+//! collide.
+//!
+//! Call-site matching: an ident `fork` / `fork_rng` followed by `(`.
+//! An integer literal argument is always a violation; an `RNG_*` ident
+//! must exist in the registry; any other expression (a `label`
+//! parameter being passed through, `self.label`, …) is out of the
+//! rule's static reach and passes.
+
+use super::{Diagnostic, FileCtx};
+use crate::lint::lexer::{self, TokKind};
+
+const RULE: &str = "rng-label-registry";
+
+/// The parsed `util/rng_labels.rs` table: `(name, value)` per
+/// `pub const RNG_…: u64 = 0x…;` entry, in file order.
+#[derive(Debug, Clone, Default)]
+pub struct LabelRegistry {
+    pub entries: Vec<(String, u64)>,
+}
+
+impl LabelRegistry {
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|(n, _)| n == name)
+    }
+
+    /// Parse the registry source. Returns the table plus any
+    /// consistency problems (duplicate names or values) phrased as
+    /// diagnostic messages.
+    pub fn parse(source: &str) -> (LabelRegistry, Vec<String>) {
+        let toks = lexer::lex(source).toks;
+        let mut entries: Vec<(String, u64)> = Vec::new();
+        let mut problems = Vec::new();
+        let mut i = 0usize;
+        while i < toks.len() {
+            let is_const =
+                toks[i].kind == TokKind::Ident && toks[i].text == "const";
+            if is_const {
+                let name_ok = toks
+                    .get(i + 1)
+                    .filter(|t| t.kind == TokKind::Ident && t.text.starts_with("RNG_"));
+                if let Some(name_tok) = name_ok {
+                    // Scan forward to `= <int> ;`.
+                    let mut j = i + 2;
+                    let mut value = None;
+                    while j < toks.len() && j < i + 10 {
+                        if toks[j].kind == TokKind::Punct && toks[j].text == ";" {
+                            break;
+                        }
+                        if toks[j].kind == TokKind::Int {
+                            value = lexer::parse_int_literal(&toks[j].text);
+                            break;
+                        }
+                        j += 1;
+                    }
+                    match value {
+                        Some(v) => entries.push((name_tok.text.clone(), v)),
+                        None => problems.push(format!(
+                            "registry constant `{}` has no parseable integer value",
+                            name_tok.text
+                        )),
+                    }
+                }
+            }
+            i += 1;
+        }
+        for (idx, (name, value)) in entries.iter().enumerate() {
+            for (name2, value2) in &entries[idx + 1..] {
+                if name == name2 {
+                    problems.push(format!("duplicate registry label name `{name}`"));
+                }
+                if value == value2 {
+                    problems.push(format!(
+                        "registry labels `{name}` and `{name2}` collide on value {value:#x}"
+                    ));
+                }
+            }
+        }
+        (LabelRegistry { entries }, problems)
+    }
+}
+
+pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    for (i, t) in ctx.toks.iter().enumerate() {
+        let Some(name) = ctx.ident(i) else { continue };
+        if name != "fork" && name != "fork_rng" {
+            continue;
+        }
+        if !ctx.is_punct(i + 1, '(') {
+            continue;
+        }
+        // First token of the argument list.
+        let Some(arg) = ctx.toks.get(i + 2) else { continue };
+        match arg.kind {
+            TokKind::Int => {
+                let shown = &arg.text;
+                out.push(ctx.diag(
+                    t.line,
+                    RULE,
+                    format!(
+                        "raw fork label `{shown}`: use a named `RNG_*` constant from \
+                         util/rng_labels.rs so the stream is registered and collision-checked"
+                    ),
+                ));
+            }
+            TokKind::Ident if arg.text.starts_with("RNG_") => {
+                if !ctx.registry.contains(&arg.text) {
+                    out.push(ctx.diag(
+                        t.line,
+                        RULE,
+                        format!(
+                            "fork label `{}` is not in the util/rng_labels.rs registry",
+                            arg.text
+                        ),
+                    ));
+                }
+            }
+            // `&mut self` in the definition, a passed-through `label`
+            // parameter, `self.label`, … — not statically checkable.
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::LabelRegistry;
+    use crate::lint::lint_file_source;
+
+    const REGISTRY_SRC: &str = "pub const RNG_SCHED: u64 = 0x5C;\npub const RNG_ARRIVALS: u64 = 0xAE;\n";
+
+    fn registry() -> LabelRegistry {
+        let (reg, problems) = LabelRegistry::parse(REGISTRY_SRC);
+        assert!(problems.is_empty(), "{problems:?}");
+        reg
+    }
+
+    #[test]
+    fn registry_parses_names_and_values() {
+        let reg = registry();
+        assert_eq!(reg.entries.len(), 2);
+        assert_eq!(reg.entries[0], ("RNG_SCHED".to_string(), 0x5C));
+        assert!(reg.contains("RNG_ARRIVALS"));
+        assert!(!reg.contains("RNG_NOPE"));
+    }
+
+    #[test]
+    fn registry_value_collisions_are_reported() {
+        let src = "pub const RNG_A: u64 = 0x10;\npub const RNG_B: u64 = 0x10;\n";
+        let (_, problems) = LabelRegistry::parse(src);
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].contains("collide"));
+    }
+
+    #[test]
+    fn raw_literal_labels_are_flagged() {
+        let src = "fn f(rng: &mut Rng) { let _ = rng.fork(0x5C); }\n";
+        let out = lint_file_source("sim/x.rs", src, &registry());
+        let hits: Vec<_> = out.kept.iter().filter(|d| d.rule == "rng-label-registry").collect();
+        assert_eq!(hits.len(), 1, "{hits:?}");
+    }
+
+    #[test]
+    fn registered_constants_pass_unknown_ones_fail() {
+        let ok = "fn f(rng: &mut Rng) { let _ = rng.fork(RNG_SCHED); }\n";
+        let out = lint_file_source("sim/x.rs", ok, &registry());
+        assert!(out.kept.iter().all(|d| d.rule != "rng-label-registry"));
+
+        let bad = "fn f(rng: &mut Rng) { let _ = rng.fork(RNG_NOPE); }\n";
+        let out = lint_file_source("sim/x.rs", bad, &registry());
+        assert_eq!(
+            out.kept.iter().filter(|d| d.rule == "rng-label-registry").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn passthrough_parameters_and_definitions_pass() {
+        let src = "impl W {\n    pub fn fork_rng(&mut self, label: u64) -> Rng {\n        self.root.fork(label)\n    }\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &registry());
+        assert!(out.kept.iter().all(|d| d.rule != "rng-label-registry"), "{:?}", out.kept);
+    }
+}

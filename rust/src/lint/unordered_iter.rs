@@ -1,0 +1,102 @@
+//! `unordered-iter`: `HashMap`/`HashSet` inside the sim/report-surface
+//! modules is a diagnostic. Iterating either feeds randomized order
+//! into whatever consumes it; if that consumer is (or ever becomes) an
+//! observable — a report, a golden, a tie-break — determinism dies
+//! silently. The fix is `BTreeMap`/sorted keys, or, when the container
+//! is provably keyed-access-only (insert/get/remove, never iterated),
+//! a suppression stating that argument so the next editor re-audits
+//! before adding a loop.
+//!
+//! `use` declaration lines are exempt (flagging both the import and
+//! every mention would double-count a single decision).
+
+use super::{Diagnostic, FileCtx};
+use crate::lint::lexer::TokKind;
+
+const RULE: &str = "unordered-iter";
+
+/// Module prefixes whose state can reach a report observable.
+const SCOPE: [&str; 8] = [
+    "sim/",
+    "cluster/",
+    "sched/",
+    "transient/",
+    "metrics/",
+    "trace/",
+    "runtime/",
+    "coordinator/",
+];
+
+const BANNED: [&str; 2] = ["HashMap", "HashSet"];
+
+pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !ctx.in_module(&SCOPE) {
+        return;
+    }
+    // First ident on each line, to recognize `use …;` lines.
+    let mut line_leader: Vec<(u32, String)> = Vec::new();
+    for t in ctx.toks {
+        if line_leader.last().map(|(l, _)| *l) != Some(t.line) {
+            let leader = if t.kind == TokKind::Ident { t.text.clone() } else { String::new() };
+            line_leader.push((t.line, leader));
+        }
+    }
+    let leader_of = |line: u32| -> &str {
+        line_leader
+            .iter()
+            .find(|(l, _)| *l == line)
+            .map(|(_, s)| s.as_str())
+            .unwrap_or("")
+    };
+    for (i, t) in ctx.toks.iter().enumerate() {
+        let Some(name) = ctx.ident(i) else { continue };
+        if BANNED.contains(&name) && leader_of(t.line) != "use" {
+            out.push(ctx.diag(
+                t.line,
+                RULE,
+                format!(
+                    "`{name}` in a sim/report-surface module: iteration order is \
+                     randomized; use BTreeMap/sorted keys, or suppress with the \
+                     keyed-access-only argument"
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::{lint_file_source, LabelRegistry};
+
+    #[test]
+    fn flags_hashmap_in_sim_scope() {
+        let src = "use std::collections::HashMap;\nstruct S { m: HashMap<u32, f64> }\n";
+        let out = lint_file_source("sim/state.rs", src, &LabelRegistry::default());
+        let hits: Vec<_> = out.kept.iter().filter(|d| d.rule == "unordered-iter").collect();
+        // The `use` line is exempt; the field declaration is flagged.
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn out_of_scope_modules_pass() {
+        let src = "use std::collections::HashMap;\nstruct S { m: HashMap<u32, f64> }\n";
+        let out = lint_file_source("util/scratch.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "unordered-iter"));
+    }
+
+    #[test]
+    fn suppression_with_keyed_access_argument() {
+        let src = "struct S {\n    // lint: allow(unordered-iter): keyed access only, never iterated\n    m: std::collections::HashMap<u32, f64>,\n}\n";
+        let out = lint_file_source("sim/state.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "unordered-iter"), "{:?}", out.kept);
+        assert_eq!(out.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn btreemap_passes() {
+        let src = "use std::collections::BTreeMap;\nstruct S { m: BTreeMap<u32, f64> }\n";
+        let out = lint_file_source("sim/state.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "unordered-iter"));
+    }
+}

@@ -1,0 +1,71 @@
+//! `wall-clock-quarantine`: wall-clock reads (`Instant`, `SystemTime`)
+//! are only allowed in the whitelisted timing modules. Everything the
+//! report surface touches must be driven by virtual time — a stray
+//! `Instant::now()` in a component is exactly the kind of
+//! nondeterminism the golden suites can only catch after the fact.
+//!
+//! Whitelist: the runner's wall-clock accounting, the benchmark kit,
+//! and the hot-path profiler (whose `Stopwatch` is the sanctioned way
+//! for sim code to measure real time).
+
+use super::{Diagnostic, FileCtx};
+
+const RULE: &str = "wall-clock-quarantine";
+
+/// Files allowed to touch the wall clock directly.
+const WHITELIST: [&str; 3] = ["coordinator/runner.rs", "benchkit.rs", "sim/profiler.rs"];
+
+const BANNED: [&str; 2] = ["Instant", "SystemTime"];
+
+pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if WHITELIST.contains(&ctx.rel) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        let Some(name) = ctx.ident(i) else { continue };
+        if BANNED.contains(&name) {
+            out.push(ctx.diag(
+                t.line,
+                RULE,
+                format!(
+                    "`{name}` outside the timing whitelist ({}); route real-time \
+                     measurement through `sim::profiler::Stopwatch`",
+                    WHITELIST.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::{lint_file_source, LabelRegistry};
+
+    #[test]
+    fn flags_instant_outside_whitelist() {
+        let src = "use std::time::Instant;\nfn f() { let _t = Instant::now(); }\n";
+        let out = lint_file_source("sim/world.rs", src, &LabelRegistry::default());
+        let hits: Vec<_> =
+            out.kept.iter().filter(|d| d.rule == "wall-clock-quarantine").collect();
+        assert_eq!(hits.len(), 2, "use line + call site: {hits:?}");
+    }
+
+    #[test]
+    fn whitelisted_files_pass() {
+        let src = "use std::time::Instant;\nfn f() { let _t = Instant::now(); }\n";
+        for rel in ["coordinator/runner.rs", "benchkit.rs", "sim/profiler.rs"] {
+            let out = lint_file_source(rel, src, &LabelRegistry::default());
+            assert!(
+                out.kept.iter().all(|d| d.rule != "wall-clock-quarantine"),
+                "{rel} should be whitelisted"
+            );
+        }
+    }
+
+    #[test]
+    fn mentions_in_comments_and_strings_pass() {
+        let src = "// Instant::now() would be wrong here.\nfn f() -> &'static str { \"SystemTime\" }\n";
+        let out = lint_file_source("sim/world.rs", src, &LabelRegistry::default());
+        assert!(out.kept.iter().all(|d| d.rule != "wall-clock-quarantine"));
+    }
+}

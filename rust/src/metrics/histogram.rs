@@ -325,7 +325,7 @@ impl DelayDist {
         match (self, other) {
             (DelayDist::Sketch(a), DelayDist::Sketch(b)) => a.merge(b),
             (DelayDist::Exact(a), DelayDist::Exact(b)) => a.merge_from(b),
-            _ => panic!("DelayDist::merge_from across mismatched backends"),
+            _ => panic!("DelayDist::merge_from across mismatched backends"), // lint: allow(panic-surface): documented policy -- mismatched backends are a wiring bug, not data
         }
     }
 

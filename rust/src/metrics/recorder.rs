@@ -178,7 +178,7 @@ impl Recorder {
             (0..n_edges).map(|i| max * i as f64 / (n_edges - 1) as f64).collect()
         };
         if self.short_delays.is_exact() {
-            let s = self.short_delays.samples().expect("exact backend has samples");
+            let s = self.short_delays.samples().expect("exact backend has samples"); // lint: allow(panic-surface): guarded by is_exact() one line up
             Cdf::from_samples_at(s, edges)
         } else {
             let n = self.short_delays.len();

@@ -163,7 +163,7 @@ impl Analytics for NativeAnalytics {
 #[cfg(feature = "xla")]
 pub struct XlaAnalytics {
     client: xla::PjRtClient,
-    executables: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+    executables: HashMap<&'static str, xla::PjRtLoadedExecutable>, // lint: allow(unordered-iter): keyed by artifact name (insert/get only), never iterated
 }
 
 #[cfg(feature = "xla")]
@@ -172,7 +172,7 @@ impl XlaAnalytics {
     pub fn load(dir: &Path) -> Result<Self> {
         validate_manifest(dir)?;
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut executables = HashMap::new();
+        let mut executables = HashMap::new(); // lint: allow(unordered-iter): construction of the keyed-access-only artifact map
         for name in ARTIFACT_NAMES {
             let path = dir.join(artifact_file(name));
             let proto = xla::HloModuleProto::from_text_file(

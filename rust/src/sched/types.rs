@@ -39,7 +39,7 @@ pub trait Scheduler: Send {
                 .cluster
                 .least_loaded_short_reserved()
                 .or_else(|| ctx.cluster.general.first().copied())
-                .expect("cluster has no on-demand servers");
+                .expect("cluster has no on-demand servers"); // lint: allow(panic-surface): build() guarantees at least one on-demand server
             ctx.cluster.enqueue(tid, target, ctx.engine, ctx.rec);
         }
     }

@@ -44,7 +44,7 @@ impl Component for SchedulerComponent<'_> {
     fn on_event(&mut self, _now: Time, event: &Event, ctx: &mut WorldCtx) {
         match event {
             Event::JobArrival(_) => {
-                let job = ctx.job.expect("JobArrival dispatched without its job");
+                let job = ctx.job.expect("JobArrival dispatched without its job"); // lint: allow(panic-surface): World::dispatch_event always stages the job before a JobArrival
                 let mut sctx = SchedCtx {
                     cluster: &mut *ctx.cluster,
                     engine: &mut *ctx.engine,

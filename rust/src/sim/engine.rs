@@ -177,6 +177,7 @@ impl Calendar {
     /// nondecreasing in `t` (the order-exactness keystone — see module
     /// docs). Returns `usize::MAX` for the overflow rung.
     #[inline]
+    // lint: hot-path
     fn index_of(&self, t: f64) -> usize {
         let d = (t - self.window_start) / self.width;
         if d <= 0.0 {
@@ -193,6 +194,7 @@ impl Calendar {
         self.cur.get(self.cur_pos)
     }
 
+    // lint: hot-path
     fn push(&mut self, e: Entry) {
         if self.len() == 0 {
             // Re-anchor an empty calendar on the incoming event so a
@@ -238,6 +240,7 @@ impl Calendar {
         self.ensure_head();
     }
 
+    // lint: hot-path
     fn pop(&mut self) -> Option<Entry> {
         let e = *self.peek()?;
         self.cur_pos += 1;
@@ -252,6 +255,7 @@ impl Calendar {
     /// open bucket — equal times share one index) into `out`,
     /// returning the shared timestamp. Exactly equivalent to repeated
     /// [`Calendar::pop`] while the head time is unchanged.
+    // lint: hot-path
     fn pop_run(&mut self, out: &mut Vec<Event>) -> Option<Time> {
         let t = self.peek()?.at;
         while let Some(e) = self.cur.get(self.cur_pos) {
@@ -272,6 +276,7 @@ impl Calendar {
     /// (same-timestamp batches) are skipped: bucket width should track
     /// the spacing of *distinct* timestamps, and a pop-batch drain must
     /// tune identically to the per-pop loop it replaces.
+    // lint: hot-path
     #[inline]
     fn note_pop(&mut self, t: f64) {
         if t > self.last_pop {
@@ -356,6 +361,7 @@ impl Calendar {
             if i >= self.buckets.len() {
                 return;
             }
+            // lint: allow(panic-surface): peek() returned Some above and nothing else touches the heap between
             let Reverse(e) = self.overflow.pop().expect("peeked entry vanished");
             self.buckets[i].push(e);
             self.in_window += 1;
@@ -368,6 +374,7 @@ impl Calendar {
     /// performs the lazy rollover — jump the window to the earliest
     /// rung entry and re-bucket what now falls inside — when the whole
     /// window has drained.
+    // lint: hot-path
     fn ensure_head(&mut self) {
         if self.cur_pos < self.cur.len() {
             return;
@@ -380,6 +387,7 @@ impl Calendar {
             // (its index becomes 0, so the drain moves at least one
             // entry and terminates). Retuning the width here is free —
             // no in-window entry needs re-bucketing.
+            // lint: allow(panic-surface): guarded by the overflow.is_empty() early return just above
             let t0 = self.overflow.peek().expect("overflow nonempty").0.at.0;
             self.window_start = t0;
             self.width = self.tuned_width();
@@ -494,6 +502,7 @@ impl Engine {
     /// times or on scheduling into the past — all are simulator bugs,
     /// not runtime conditions (and the finiteness bound keeps the
     /// calendar's window arithmetic well-defined).
+    // lint: hot-path
     #[inline]
     pub fn schedule(&mut self, at: Time, event: Event) {
         assert!(!at.is_nan(), "NaN event time for {event:?}");
@@ -519,6 +528,7 @@ impl Engine {
 
     /// Pop the next event, advancing the clock. Returns `None` when the
     /// simulation has quiesced.
+    // lint: hot-path
     #[inline]
     pub fn pop(&mut self) -> Option<(Time, Event)> {
         let entry = match &mut self.queue {
@@ -536,6 +546,7 @@ impl Engine {
     /// to their shared timestamp. Equivalent to calling [`Engine::pop`]
     /// while the head time is unchanged — `World`'s batch dispatch path
     /// is built on this. Returns `None` when the queue is empty.
+    // lint: hot-path
     pub fn pop_batch(&mut self, out: &mut Vec<Event>) -> Option<Time> {
         out.clear();
         let t = match &mut self.queue {
@@ -547,6 +558,7 @@ impl Engine {
                     if e.at != first.at {
                         break;
                     }
+                    // lint: allow(panic-surface): peek() returned Some in this loop iteration; single-threaded access
                     out.push(h.pop().expect("peeked entry vanished").0.event);
                 }
                 first.at.0
@@ -574,6 +586,7 @@ impl Engine {
     /// Time of the next event without popping — O(1) on both
     /// representations (the federation merge calls this once per member
     /// per step, and the PDES horizon computation keys on it).
+    // lint: hot-path
     pub fn peek_time(&self) -> Option<Time> {
         match &self.queue {
             Queue::Calendar(c) => c.peek().map(|e| e.at.0),

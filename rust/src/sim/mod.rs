@@ -27,6 +27,6 @@ pub use components::{
 pub use engine::Engine;
 pub use event::Event;
 pub use federation::{ClassSplit, Federation, JobRouter, LeastQueued, MemberView, RoundRobin};
-pub use profiler::{ProfileReport, Profiler};
+pub use profiler::{ProfileReport, Profiler, Stopwatch};
 pub use rng::Rng;
 pub use world::{Component, World, WorldCtx};

@@ -19,6 +19,37 @@
 use crate::cluster::PoolStats;
 use crate::sim::Event;
 
+/// The sanctioned wall-clock primitive for sim code. `pallas-lint`'s
+/// `wall-clock-quarantine` rule bans `std::time::Instant` outside this
+/// module (plus the runner and benchkit), so any real-time measurement
+/// a sim path needs — today, the world's per-event/per-component
+/// profiling — goes through a `Stopwatch`. That keeps the quarantine
+/// lexically checkable: a grep for `Instant` finds only timing modules,
+/// and every wall-clock read inherits this module's determinism
+/// contract (never feeds back into simulation observables).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    #[inline]
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    /// Wall nanoseconds since [`Stopwatch::start`], saturating at
+    /// `u64::MAX` (585 years — plenty for an event handler).
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        let nanos = self.0.elapsed().as_nanos();
+        if nanos > u64::MAX as u128 {
+            u64::MAX
+        } else {
+            nanos as u64
+        }
+    }
+}
+
 /// Upper bound on profiled components per world (the dispatch loop
 /// times into a fixed stack array to stay allocation-free; standard
 /// wirings use at most four components).
@@ -198,6 +229,14 @@ mod tests {
         assert!(json.contains("\"task_slot_hits\": 9"));
         // Balanced braces (cheap well-formedness check without a parser).
         assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn stopwatch_is_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
     }
 
     #[test]

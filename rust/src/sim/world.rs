@@ -70,14 +70,13 @@
 //! arena recycling on/off).
 
 use std::collections::{HashMap, VecDeque};
-use std::time::Instant;
 
 use crate::cluster::{Cluster, FinishOutcome, ServerKind, ServerState};
 use crate::metrics::Recorder;
 use crate::sim::profiler::MAX_PROFILED_COMPONENTS;
-use crate::sim::{Engine, Event, ProfileReport, Profiler, Rng};
+use crate::sim::{Engine, Event, ProfileReport, Profiler, Rng, Stopwatch};
 use crate::trace::{ArrivalSource, Job, Workload};
-use crate::util::{JobId, TaskRef, Time};
+use crate::util::{JobId, TaskRef, Time, RNG_ARRIVALS, RNG_SCHED};
 
 /// Mutable per-event view handed to components.
 ///
@@ -89,7 +88,8 @@ pub struct WorldCtx<'w> {
     pub engine: &'w mut Engine,
     pub rec: &'w mut Recorder,
     /// The shared scheduler-side RNG stream (probe sampling, stealing) —
-    /// fork label 0x5C off the root seed, as in the original runner.
+    /// fork label [`crate::util::RNG_SCHED`] off the root seed, as in
+    /// the original runner.
     pub rng: &'w mut Rng,
     /// The job whose `JobArrival` is being dispatched (`None` for every
     /// other event). Dropped when the event ends — components must copy
@@ -219,6 +219,7 @@ pub struct World<'w> {
     components: Vec<Box<dyn Component + 'w>>,
     /// Per-job completion accounting, keyed by `JobId.0` — entries live
     /// from arrival to last task finish (O(active jobs), not O(trace)).
+    // lint: allow(unordered-iter): keyed access only (insert/get_mut/remove/len/is_empty) — never iterated, so randomized order cannot reach an observable
     job_meta: HashMap<u32, JobMeta>,
     /// Tasks materialised but not yet finished.
     outstanding: u64,
@@ -229,7 +230,8 @@ pub struct World<'w> {
     /// One-job lookahead: pulled from the feed, arrival event queued.
     lookahead: Option<JobRef<'w>>,
     source_done: bool,
-    /// The arrival RNG stream (label 0xAE), forked at [`World::start`].
+    /// The arrival RNG stream ([`crate::util::RNG_ARRIVALS`]), forked
+    /// at [`World::start`].
     /// Held in an `Option` so [`World::step`]'s feed advance can take it
     /// without splitting a borrow of `self`.
     arrivals_rng: Option<Rng>,
@@ -255,10 +257,12 @@ pub struct World<'w> {
 
 impl<'w> World<'w> {
     /// Build a world over a streaming `source`. RNG streams fork off
-    /// `seed` in a fixed order: the scheduler stream first (label 0x5C),
-    /// then whatever the caller forks via [`World::fork_rng`], then the
-    /// arrival stream (label 0xAE, forked at [`World::run`]) — matching
-    /// the original runner so fixed-seed runs stay bit-identical.
+    /// `seed` in a fixed order: the scheduler stream first
+    /// (`RNG_SCHED`), then whatever the caller forks via
+    /// [`World::fork_rng`], then the arrival stream (`RNG_ARRIVALS`,
+    /// forked at [`World::run`]) — matching the original runner so
+    /// fixed-seed runs stay bit-identical. The label table and
+    /// canonical order live in `util/rng_labels.rs`.
     pub fn new(
         source: Box<dyn ArrivalSource + 'w>,
         cluster: Cluster,
@@ -300,7 +304,7 @@ impl<'w> World<'w> {
 
     fn with_feed(feed: Feed<'w>, cluster: Cluster, rec: Recorder, seed: u64) -> Self {
         let mut root_rng = Rng::new(seed);
-        let sched_rng = root_rng.fork(0x5C);
+        let sched_rng = root_rng.fork(RNG_SCHED);
         // Pending events are dominated by one `TaskFinish` per busy
         // server, so the static fleet is the natural engine pre-size
         // (the runner replaces this with a transient-aware hint when it
@@ -314,6 +318,7 @@ impl<'w> World<'w> {
             root_rng,
             sched_rng,
             components: Vec::new(),
+            // lint: allow(unordered-iter): construction of the keyed-access-only job_meta map
             job_meta: HashMap::new(),
             outstanding: 0,
             next_id: 0,
@@ -351,7 +356,7 @@ impl<'w> World<'w> {
     }
 
     /// Derive an independent RNG stream for a component (e.g. the
-    /// transient market uses label 0x7A).
+    /// transient market uses [`crate::util::RNG_MARKET`]).
     pub fn fork_rng(&mut self, label: u64) -> Rng {
         self.root_rng.fork(label)
     }
@@ -503,6 +508,7 @@ impl<'w> World<'w> {
                     self.last_arrival
                 );
                 self.last_arrival = arrival;
+                // lint: allow(panic-surface): job ids are u32 by design; a 4-billion-job trace is out of scope and overflow must not wrap silently
                 self.next_id = self.next_id.checked_add(1).expect("more than u32::MAX jobs");
                 self.lookahead = Some(jobref);
             }
@@ -516,6 +522,7 @@ impl<'w> World<'w> {
     /// doesn't split a `self` borrow) — state-for-state identical to the
     /// local variable the pre-stepping `run()` threaded by `&mut`.
     fn prime_arrival(&mut self) {
+        // lint: allow(panic-surface): start() populates arrivals_rng before any event dispatches; absence is a driver wiring bug
         let mut rng = self.arrivals_rng.take().expect("prime_arrival before start()");
         self.advance_source(&mut rng);
         self.arrivals_rng = Some(rng);
@@ -533,6 +540,7 @@ impl<'w> World<'w> {
     /// scheduled immediately.
     pub fn inject_job(&mut self, job: Job) {
         let Feed::Inbox { queue, closed } = &mut self.feed else {
+            // lint: allow(panic-surface): API misuse by the federation driver — injecting into a self-fed world corrupts arrival order, so fail fast
             panic!("inject_job on a world that owns its arrival feed");
         };
         assert!(!*closed, "inject_job after close_inbox");
@@ -562,19 +570,21 @@ impl<'w> World<'w> {
 
     /// Prepare the event loop: fork the arrival stream, prime the first
     /// lookahead + arrival event, run every component's `on_start`.
-    /// Fork order — scheduler stream 0x5C at construction, component
-    /// streams (e.g. the market's 0x7A) while wiring, arrivals 0xAE
-    /// here — matches the original runner, so fixed-seed runs are
-    /// bit-identical. [`World::run`] is exactly `start` + `step`-loop +
+    /// Fork order — scheduler stream `RNG_SCHED` at construction,
+    /// component streams (e.g. the market's `RNG_MARKET`) while wiring,
+    /// `RNG_ARRIVALS` here — matches the original runner, so
+    /// fixed-seed runs are bit-identical (table: `util/rng_labels.rs`).
+    /// [`World::run`] is exactly `start` + `step`-loop +
     /// `finish`; the pieces are public so a federation can interleave
     /// several worlds in global event-time order.
     pub fn start(&mut self) {
         debug_assert!(self.arrivals_rng.is_none(), "start() called twice");
         // The arrival stream forks off the root *after* the scheduler
-        // stream (0x5C, at construction) and any component streams the
-        // caller forked while wiring (e.g. the market's 0x7A) — so the
-        // streaming refactor leaves every legacy stream bit-identical.
-        self.arrivals_rng = Some(self.root_rng.fork(0xAE));
+        // stream (RNG_SCHED, at construction) and any component streams
+        // the caller forked while wiring (e.g. the market's RNG_MARKET)
+        // — so the streaming refactor leaves every legacy stream
+        // bit-identical.
+        self.arrivals_rng = Some(self.root_rng.fork(RNG_ARRIVALS));
         self.prime_arrival();
         let mut components = std::mem::take(&mut self.components);
         {
@@ -692,12 +702,13 @@ impl<'w> World<'w> {
         // `self` (the profiler included), so per-component nanos merge
         // into the profiler only after the core returns.
         let mut comp_nanos = [0u64; MAX_PROFILED_COMPONENTS];
-        let started = Instant::now();
+        let started = Stopwatch::start();
         {
             let mut slot = Some(&mut comp_nanos);
             self.dispatch_event_core(now, event, components, &mut slot);
         }
-        let total_ns = started.elapsed().as_nanos() as u64;
+        let total_ns = started.elapsed_ns();
+        // lint: allow(panic-surface): checked is_none() above; the profiler is only taken at run end
         let prof = self.profiler.as_mut().expect("profiler vanished mid-event");
         prof.record_event(kind_idx, total_ns);
         for (i, c) in components.iter().enumerate().take(MAX_PROFILED_COMPONENTS) {
@@ -725,6 +736,7 @@ impl<'w> World<'w> {
         self.finished = None;
         match event {
             Event::JobArrival(jid) => {
+                // lint: allow(panic-surface): prime_arrival schedules JobArrival only after filling the lookahead; an empty slot is a lost-job invariant break
                 let jobref =
                     self.lookahead.take().expect("JobArrival without a pulled job");
                 {
@@ -813,10 +825,10 @@ impl<'w> World<'w> {
             let mut ctx = self.ctx();
             if let Some(nanos) = comp_nanos {
                 for (i, c) in components.iter_mut().enumerate() {
-                    let t0 = Instant::now();
+                    let t0 = Stopwatch::start();
                     c.on_event(now, &event, &mut ctx);
                     if i < nanos.len() {
-                        nanos[i] += t0.elapsed().as_nanos() as u64;
+                        nanos[i] += t0.elapsed_ns();
                     }
                 }
             } else {
@@ -832,10 +844,12 @@ impl<'w> World<'w> {
                 self.prime_arrival();
             }
             Event::TaskFinish { .. } => {
+                // lint: allow(panic-surface): pre-dispatch filtered Stale outcomes and returned; a live finish always set self.finished
                 let (jid, _) =
                     self.finished.expect("stale finishes are filtered pre-dispatch");
                 self.outstanding -= 1;
                 let done = {
+                    // lint: allow(panic-surface): job_meta entries live from arrival to last finish; a miss means task/job accounting diverged
                     let meta = self
                         .job_meta
                         .get_mut(&jid.0)
@@ -844,6 +858,7 @@ impl<'w> World<'w> {
                     meta.remaining == 0
                 };
                 if done {
+                    // lint: allow(panic-surface): get_mut above proved the entry exists within this same event
                     let meta = self.job_meta.remove(&jid.0).expect("meta vanished");
                     self.rec.job_finished(meta.is_long, now - meta.arrival);
                 }
@@ -856,10 +871,10 @@ impl<'w> World<'w> {
             let mut ctx = self.ctx();
             if let Some(nanos) = comp_nanos {
                 for (i, c) in components.iter_mut().enumerate() {
-                    let t0 = Instant::now();
+                    let t0 = Stopwatch::start();
                     c.on_long_change(now, &mut ctx);
                     if i < nanos.len() {
-                        nanos[i] += t0.elapsed().as_nanos() as u64;
+                        nanos[i] += t0.elapsed_ns();
                     }
                 }
             } else {

@@ -251,7 +251,7 @@ impl CsvStream {
         loop {
             let line = match self.lines.next()? {
                 Ok(l) => l,
-                Err(e) => panic!("{}: I/O error mid-replay: {e}", self.path.display()),
+                Err(e) => panic!("{}: I/O error mid-replay: {e}", self.path.display()), // lint: allow(panic-surface): replay cannot continue past a torn read; fail loud per LINTS.md
             };
             self.lineno += 1;
             if line.trim().is_empty() {
@@ -259,7 +259,7 @@ impl CsvStream {
             }
             let lineno = self.lineno;
             return Some(parse_row(&line, lineno).unwrap_or_else(|e| {
-                panic!("{}: file changed since validation: {e:#}", self.path.display())
+                panic!("{}: file changed since validation: {e:#}", self.path.display()) // lint: allow(panic-surface): rows were validated at open; a parse failure here means the file mutated mid-run
             }));
         }
     }

@@ -322,16 +322,16 @@ impl ArrivalSource for Merge<'_> {
         if self.peek_b.is_none() {
             self.peek_b = Some(self.b.next_job(rng));
         }
-        let take_a = match (self.peek_a.as_ref().unwrap(), self.peek_b.as_ref().unwrap()) {
+        let take_a = match (self.peek_a.as_ref().unwrap(), self.peek_b.as_ref().unwrap()) { // lint: allow(panic-surface): both peeks populated just above
             (Some(ja), Some(jb)) => ja.arrival <= jb.arrival,
             (Some(_), None) => true,
             (None, Some(_)) => false,
             (None, None) => return None,
         };
         if take_a {
-            self.peek_a.take().unwrap()
+            self.peek_a.take().unwrap() // lint: allow(panic-surface): the match above proved this side is Some
         } else {
-            self.peek_b.take().unwrap()
+            self.peek_b.take().unwrap() // lint: allow(panic-surface): the match above proved this side is Some
         }
     }
 

@@ -16,7 +16,10 @@
 
 use crate::sim::Rng;
 use crate::trace::{ArrivalSource, Job, Mmpp, MmppStream, Workload};
-use crate::util::{JobId, Time};
+use crate::util::{
+    JobId, Time, RNG_GOOGLE_ARRIVALS, RNG_GOOGLE_SIZES, RNG_YAHOO_LONG_ARRIVALS,
+    RNG_YAHOO_LONG_SIZES, RNG_YAHOO_SHORT_ARRIVALS, RNG_YAHOO_SHORT_SIZES,
+};
 
 /// Parameters for the Yahoo-like evaluation workload.
 ///
@@ -118,12 +121,13 @@ pub struct YahooSource {
 
 impl YahooSource {
     /// Fork order off `rng` matches the eager generator exactly
-    /// (0xA11, 0xA22, 0xB22, 0xB33).
+    /// (short arrivals, long arrivals, short sizes, long sizes — see
+    /// `util/rng_labels.rs`).
     pub fn new(params: &YahooLikeParams, rng: &mut Rng) -> Self {
-        let short_arr_rng = rng.fork(0xA11);
-        let long_arr_rng = rng.fork(0xA22);
-        let short_size = rng.fork(0xB22);
-        let long_size = rng.fork(0xB33);
+        let short_arr_rng = rng.fork(RNG_YAHOO_SHORT_ARRIVALS);
+        let long_arr_rng = rng.fork(RNG_YAHOO_LONG_ARRIVALS);
+        let short_size = rng.fork(RNG_YAHOO_SHORT_SIZES);
+        let long_size = rng.fork(RNG_YAHOO_LONG_SIZES);
         let mut short_arr =
             MmppStream::new(params.short_arrivals.clone(), params.horizon, short_arr_rng);
         let mut long_arr =
@@ -154,6 +158,7 @@ impl ArrivalSource for YahooSource {
         };
         let p = &self.params;
         if take_short {
+            // lint: allow(panic-surface): the match on (next_short, next_long) above only selects a side whose head is Some
             let t = self.next_short.take().expect("short head checked above");
             self.next_short = self.short_arr.next_arrival();
             let n = pareto_count(
@@ -167,6 +172,7 @@ impl ArrivalSource for YahooSource {
                 .collect();
             Some(Job { id: JobId(0), arrival: t, task_durations: durs, is_long: false })
         } else {
+            // lint: allow(panic-surface): the match on (next_short, next_long) above only selects a side whose head is Some
             let t = self.next_long.take().expect("long head checked above");
             self.next_long = self.long_arr.next_arrival();
             let n = pareto_count(
@@ -230,7 +236,8 @@ impl Default for GoogleLikeParams {
 }
 
 /// Streaming Google-like generator: one MMPP arrival stream plus one
-/// size stream (forks 0xC33 / 0xD44, as in the eager path). Jobs are
+/// size stream (forks `RNG_GOOGLE_ARRIVALS` / `RNG_GOOGLE_SIZES`, as
+/// in the eager path). Jobs are
 /// classified short / long by mean task duration against the standard
 /// 90 s cutoff, as the hybrid schedulers require.
 pub struct GoogleSource {
@@ -242,8 +249,8 @@ pub struct GoogleSource {
 
 impl GoogleSource {
     pub fn new(params: &GoogleLikeParams, rng: &mut Rng) -> Self {
-        let arr_rng = rng.fork(0xC33);
-        let size = rng.fork(0xD44);
+        let arr_rng = rng.fork(RNG_GOOGLE_ARRIVALS);
+        let size = rng.fork(RNG_GOOGLE_SIZES);
         let mut arr = MmppStream::new(params.arrivals.clone(), params.horizon, arr_rng);
         let next_arrival = arr.next_arrival();
         GoogleSource { params: params.clone(), arr, size, next_arrival }

@@ -241,7 +241,7 @@ impl TransientManager {
     /// lexicographic `(depth, est_work)` key with the same first-minimal
     /// tie-break as the scan it replaced.
     fn pick_victim(&self, cluster: &Cluster) -> ServerRef {
-        cluster.transient_drain_victim().expect("pick_victim on empty pool")
+        cluster.transient_drain_victim().expect("pick_victim on empty pool") // lint: allow(panic-surface): callers check transient_pool_len() > 0 before draining
     }
 
     /// `TransientReady` arrived: the server joins the pool. The handle

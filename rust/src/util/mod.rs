@@ -5,7 +5,9 @@ use std::cmp::Ordering;
 use std::fmt;
 
 mod mintree;
+mod rng_labels;
 pub use mintree::{IndexKey, MinTree};
+pub use rng_labels::*;
 
 /// Simulation time in seconds since simulation start.
 pub type Time = f64;

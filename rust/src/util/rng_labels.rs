@@ -1,0 +1,90 @@
+//! The crate-wide RNG fork-label registry.
+//!
+//! Every deterministic RNG stream in the simulator is forked off a
+//! parent with `Rng::fork(label)`; the label, mixed into the child
+//! seed, *is* the stream's identity. Two streams forking the same
+//! label off the same parent collide; a call site inventing an ad-hoc
+//! literal creates a stream nothing audits. This table is therefore
+//! the single source of truth: `pallas-lint`'s `rng-label-registry`
+//! rule parses it, checks the values are unique, and requires every
+//! non-test `fork(..)` call site to name one of these constants.
+//!
+//! ## Fork order
+//!
+//! Label uniqueness makes streams independent of fork *order*, but the
+//! golden suites pin the canonical wiring order anyway — reordering
+//! forks off a shared parent changes which raw draws each child seeds
+//! from. The canonical sequence off a world's root RNG is:
+//!
+//! | # | label | constant | forked by | when |
+//! |---|-------|----------|-----------|------|
+//! | 1 | `0x5C`  | [`RNG_SCHED`]    | `World::new`           | at construction |
+//! | 2 | `0x7A`  | [`RNG_MARKET`]   | `coordinator::runner`  | while wiring components |
+//! | 3 | `0xAE`  | [`RNG_ARRIVALS`] | `World::start` (or the federation driver, in its stead) | at start |
+//!
+//! The synthetic-trace generators fork off the *arrivals* stream they
+//! are handed, in declaration order below: Yahoo-like draws `0xA11`,
+//! `0xA22`, `0xB22`, `0xB33` (short/long arrival processes, then
+//! short/long size streams); Google-like draws `0xC33`, `0xD44`
+//! (arrival process, then sizes). Streaming and eager generator paths
+//! share these labels so both produce bit-identical workloads.
+//!
+//! Adding a stream: append a constant with a fresh value, document the
+//! forking site in the table above, and use the constant at the call
+//! site — `pallas-lint` fails on raw literals and on value collisions.
+
+/// Scheduler decision stream — probe target choices, tie-break jitter.
+/// Forked first, in `World::new`.
+pub const RNG_SCHED: u64 = 0x5C;
+
+/// Transient-market stream — lease lifetime and readiness draws.
+/// Forked by the runner while wiring the transient manager.
+pub const RNG_MARKET: u64 = 0x7A;
+
+/// Arrival-feed stream — drives the workload source. Forked in
+/// `World::start`, or pre-forked by the federation driver when a
+/// shared feed routes jobs across member worlds.
+pub const RNG_ARRIVALS: u64 = 0xAE;
+
+/// Yahoo-like generator: short-class MMPP arrival process.
+pub const RNG_YAHOO_SHORT_ARRIVALS: u64 = 0xA11;
+
+/// Yahoo-like generator: long-class MMPP arrival process.
+pub const RNG_YAHOO_LONG_ARRIVALS: u64 = 0xA22;
+
+/// Yahoo-like generator: short-class task-count/duration sizes.
+pub const RNG_YAHOO_SHORT_SIZES: u64 = 0xB22;
+
+/// Yahoo-like generator: long-class task-count/duration sizes.
+pub const RNG_YAHOO_LONG_SIZES: u64 = 0xB33;
+
+/// Google-like generator: MMPP arrival process.
+pub const RNG_GOOGLE_ARRIVALS: u64 = 0xC33;
+
+/// Google-like generator: task-count/duration sizes.
+pub const RNG_GOOGLE_SIZES: u64 = 0xD44;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_unique() {
+        let all = [
+            RNG_SCHED,
+            RNG_MARKET,
+            RNG_ARRIVALS,
+            RNG_YAHOO_SHORT_ARRIVALS,
+            RNG_YAHOO_LONG_ARRIVALS,
+            RNG_YAHOO_SHORT_SIZES,
+            RNG_YAHOO_LONG_SIZES,
+            RNG_GOOGLE_ARRIVALS,
+            RNG_GOOGLE_SIZES,
+        ];
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a, b, "fork label collision");
+            }
+        }
+    }
+}

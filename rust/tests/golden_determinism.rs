@@ -18,6 +18,7 @@ use cloudcoaster::sched::{Hybrid, SchedCtx, Scheduler};
 use cloudcoaster::sim::{Engine, Event, Rng};
 use cloudcoaster::trace::synth::{yahoo_like, YahooLikeParams};
 use cloudcoaster::trace::Workload;
+use cloudcoaster::util::{RNG_MARKET, RNG_SCHED};
 use cloudcoaster::transient::{Budget, ManagerConfig, TransientManager};
 use cloudcoaster::util::{JobId, TaskRef, Time};
 
@@ -87,11 +88,11 @@ fn legacy_simulate(
     let mut engine = Engine::new();
     let mut rec = Recorder::with_backend(r, cfg.exact_delay_samples);
     let mut root_rng = Rng::new(cfg.seed);
-    let mut sched_rng = root_rng.fork(0x5C); // probe sampling stream
+    let mut sched_rng = root_rng.fork(RNG_SCHED); // probe sampling stream
     let mut manager = cfg
         .manager
         .clone()
-        .map(|m| TransientManager::new(m, root_rng.fork(0x7A)));
+        .map(|m| TransientManager::new(m, root_rng.fork(RNG_MARKET)));
 
     let mut job_remaining: Vec<u32> =
         workload.jobs.iter().map(|j| j.num_tasks() as u32).collect();

@@ -1,0 +1,47 @@
+//! Tier-1 gate: the tree must be `pallas-lint`-clean.
+//!
+//! Runs the full lint pass in-process over `src/**` (same entry point
+//! the `pallas-lint` binary uses) and fails with the human-readable
+//! report if any unsuppressed diagnostic remains. A second run pins the
+//! JSON report byte-for-byte, so CI can diff artifacts across commits
+//! without timestamp or ordering noise.
+
+use std::path::Path;
+
+use cloudcoaster::lint;
+
+fn src_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// The whole crate carries zero unsuppressed diagnostics. Every known
+/// exception is a `// lint: allow(<rule>): <reason>` at the site, so a
+/// failure here means new code broke an invariant (or an allow lost its
+/// anchor line in a refactor) — the printed report says which and where.
+#[test]
+fn tree_is_lint_clean() {
+    let report = lint::run(&src_root()).expect("lint walk over src/ failed");
+    assert!(
+        report.files_scanned > 0,
+        "lint walk found no .rs files under {}",
+        src_root().display()
+    );
+    assert!(
+        report.is_clean(),
+        "pallas-lint found unsuppressed diagnostics:\n\n{}",
+        report.render_human()
+    );
+}
+
+/// Two independent runs over the same tree serialize to byte-identical JSON:
+/// no timestamps, no absolute paths, no hash-order leakage.
+#[test]
+fn json_report_is_byte_deterministic() {
+    let a = lint::run(&src_root()).expect("first lint run failed").to_json();
+    let b = lint::run(&src_root()).expect("second lint run failed").to_json();
+    assert_eq!(a, b, "pallas-lint JSON output is not run-to-run deterministic");
+    assert!(
+        !a.contains(&src_root().display().to_string()),
+        "JSON report leaks the absolute source root"
+    );
+}
