@@ -1,0 +1,78 @@
+//! `pallas-check` — run the tier-2 crate-wide symbol-resolution and
+//! API-consistency analysis over the crate's own sources (see
+//! `rust/LINTS.md` for the rule catalogue and
+//! `cloudcoaster::lint::check` for the resolution discipline).
+//!
+//! Usage:
+//!
+//! ```text
+//! pallas-check [--json[=PATH]] [--lenient] [SRC_ROOT]
+//! ```
+//!
+//! With no arguments, analyses the `src/` directory of the crate this
+//! binary was built from. `--json` prints the byte-deterministic JSON
+//! report (schema `pallas-check/1`) to stdout; `--json=PATH` writes it
+//! to `PATH` and keeps the human rendering on stdout. By default an
+//! unused `check-*` suppression marker fails the run like a violation
+//! does; `--lenient` downgrades that to the diagnostics-only gate.
+//! Exits 0 on a clean pass, 1 otherwise, 2 on I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use cloudcoaster::lint;
+
+fn main() -> ExitCode {
+    let mut json_to_stdout = false;
+    let mut json_path: Option<PathBuf> = None;
+    let mut lenient = false;
+    let mut src_root: Option<PathBuf> = None;
+
+    for arg in std::env::args().skip(1) {
+        if arg == "--json" {
+            json_to_stdout = true;
+        } else if let Some(p) = arg.strip_prefix("--json=") {
+            json_path = Some(PathBuf::from(p));
+        } else if arg == "--lenient" {
+            lenient = true;
+        } else if arg == "--help" || arg == "-h" {
+            eprintln!("usage: pallas-check [--json[=PATH]] [--lenient] [SRC_ROOT]");
+            return ExitCode::SUCCESS;
+        } else if src_root.is_none() {
+            src_root = Some(PathBuf::from(arg));
+        } else {
+            eprintln!("pallas-check: unexpected argument `{arg}`");
+            return ExitCode::from(2);
+        }
+    }
+
+    let root = src_root
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+
+    let report = match lint::check::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-check: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_path {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("pallas-check: write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if json_to_stdout {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+
+    let ok = if lenient { report.is_clean() } else { report.is_clean_strict() };
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

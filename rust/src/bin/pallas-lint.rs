@@ -5,24 +5,48 @@
 //! Usage:
 //!
 //! ```text
-//! pallas-lint [--json[=PATH]] [SRC_ROOT]
+//! pallas-lint [--json[=PATH]] [--deep] [--lenient] [SRC_ROOT]
 //! ```
 //!
 //! With no arguments, lints the `src/` directory of the crate this
 //! binary was built from. `--json` prints the byte-deterministic JSON
 //! report to stdout instead of the human rendering; `--json=PATH`
 //! writes it to `PATH` and keeps the human rendering on stdout (the CI
-//! gate uses this to fail loudly *and* upload the artifact). Exits 0
-//! on a clean pass, 1 on any unsuppressed diagnostic, 2 on I/O errors.
+//! gate uses this to fail loudly *and* upload the artifact).
+//!
+//! `--deep` also runs the tier-2 crate-wide `pallas-check` analysis
+//! and combines both reports (JSON schema `pallas-deep/1` with `lint`
+//! and `check` sub-objects). By default an unused suppression marker
+//! fails the run like a violation does; `--lenient` downgrades that to
+//! the diagnostics-only gate. Exits 0 on a clean pass, 1 on any
+//! unsuppressed diagnostic (or, without `--lenient`, any unused
+//! suppression), 2 on I/O errors.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use cloudcoaster::lint;
 
+/// Re-indent a child report's JSON for embedding as an object value:
+/// first line stays put (it follows `"lint": `), later lines gain two
+/// spaces so the combined document nests cleanly.
+fn embed(json: &str) -> String {
+    let mut out = String::new();
+    for (i, l) in json.trim_end().lines().enumerate() {
+        if i > 0 {
+            out.push('\n');
+            out.push_str("  ");
+        }
+        out.push_str(l);
+    }
+    out
+}
+
 fn main() -> ExitCode {
     let mut json_to_stdout = false;
     let mut json_path: Option<PathBuf> = None;
+    let mut deep = false;
+    let mut lenient = false;
     let mut src_root: Option<PathBuf> = None;
 
     for arg in std::env::args().skip(1) {
@@ -30,8 +54,12 @@ fn main() -> ExitCode {
             json_to_stdout = true;
         } else if let Some(p) = arg.strip_prefix("--json=") {
             json_path = Some(PathBuf::from(p));
+        } else if arg == "--deep" {
+            deep = true;
+        } else if arg == "--lenient" {
+            lenient = true;
         } else if arg == "--help" || arg == "-h" {
-            eprintln!("usage: pallas-lint [--json[=PATH]] [SRC_ROOT]");
+            eprintln!("usage: pallas-lint [--json[=PATH]] [--deep] [--lenient] [SRC_ROOT]");
             return ExitCode::SUCCESS;
         } else if src_root.is_none() {
             src_root = Some(PathBuf::from(arg));
@@ -51,20 +79,43 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+    let check_report = if deep {
+        match lint::check::run(&root) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("pallas-lint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        None
+    };
 
+    let json = match &check_report {
+        Some(c) => format!(
+            "{{\n  \"schema\": \"pallas-deep/1\",\n  \"lint\": {},\n  \"check\": {}\n}}\n",
+            embed(&report.to_json()),
+            embed(&c.to_json())
+        ),
+        None => report.to_json(),
+    };
     if let Some(path) = &json_path {
-        if let Err(e) = std::fs::write(path, report.to_json()) {
+        if let Err(e) = std::fs::write(path, &json) {
             eprintln!("pallas-lint: write {}: {e}", path.display());
             return ExitCode::from(2);
         }
     }
     if json_to_stdout {
-        print!("{}", report.to_json());
+        print!("{json}");
     } else {
         print!("{}", report.render_human());
+        if let Some(c) = &check_report {
+            print!("{}", c.render_human());
+        }
     }
 
-    if report.is_clean() {
+    let clean = |r: &lint::LintReport| if lenient { r.is_clean() } else { r.is_clean_strict() };
+    if clean(&report) && check_report.as_ref().map_or(true, |c| clean(c)) {
         ExitCode::SUCCESS
     } else {
         ExitCode::from(1)

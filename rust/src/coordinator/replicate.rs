@@ -12,6 +12,7 @@ use crate::runtime::AnalyticsEngine;
 
 /// Distribution of the headline ratios across seeds.
 #[derive(Debug)]
+// lint: allow(check-dead-pub): flows out as `replicate()`'s return type; callers print `summary()` without naming it
 pub struct Replication {
     pub seeds: Vec<u64>,
     /// baseline_mean_delay / cloudcoaster_mean_delay per seed.

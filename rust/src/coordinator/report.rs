@@ -23,6 +23,7 @@ use crate::trace::{synth, TraceStats, Workload};
 /// shared ceil-based nearest-rank convention. Empty populations (a
 /// zero-short-task run) yield well-defined zeros, never NaN.
 #[derive(Clone, Debug)]
+// lint: allow(check-dead-pub): flows out as the `Report` delay-field type; consumers read its fields through `Report` without naming it
 pub struct DelayStats {
     pub n: usize,
     pub mean: f64,

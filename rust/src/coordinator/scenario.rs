@@ -576,8 +576,9 @@ pub fn named_federation(
 
 /// Stream the experiment's `[workload]` selection — the streaming twin
 /// of `report::build_workload` (same seeds, same forks, bit-identical
-/// jobs).
-pub fn workload_source(
+/// jobs). Only the scenario pipeline builder needs it; widen to `pub`
+/// if an external caller ever streams workloads directly.
+pub(crate) fn workload_source(
     ws: &WorkloadSource,
     root: &mut Rng,
 ) -> Result<Box<dyn ArrivalSource>> {

@@ -71,7 +71,7 @@ pub fn run_sweep_parallel(
 }
 
 /// Like [`run_sweep_parallel`] with a caller-supplied workload.
-pub fn run_points_on(
+pub(crate) fn run_points_on(
     workload: &Workload,
     points: &[GridPoint],
     threads: usize,
@@ -375,37 +375,10 @@ pub fn forecast_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
     run_grid(base, &forecast_points(base))
 }
 
-/// Scheduler-family comparison.
-pub fn scheduler_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
-    run_grid(base, &scheduler_points(base))
-}
-
-/// Scenario sweep: burst-storm intensity axis.
-pub fn storm_sweep(base: &ExperimentConfig, intensities: &[f64]) -> Result<Vec<Report>> {
-    run_grid(base, &storm_intensity_points(base, intensities)?)
-}
-
-/// Federation sweep: router axis (all four routers).
-pub fn router_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
-    use crate::coordinator::scenario::RouterKind;
-    run_grid(
-        base,
-        &router_points(
-            base,
-            &[
-                RouterKind::PassThrough,
-                RouterKind::RoundRobin,
-                RouterKind::LeastQueued,
-                RouterKind::ClassSplit,
-            ],
-        ),
-    )
-}
-
-/// Federation sweep: budget-sharing axis.
-pub fn budget_sharing_sweep(base: &ExperimentConfig) -> Result<Vec<Report>> {
-    run_grid(base, &budget_sharing_points(base))
-}
+// The scheduler/storm/router/budget axes are reachable through
+// `cloudcoaster ablate --what …`, which builds the same `*_points`
+// grids and fans them out across threads; the serial one-shot wrappers
+// those axes once had were never called from anywhere and are gone.
 
 #[cfg(test)]
 mod tests {

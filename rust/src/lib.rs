@@ -188,11 +188,26 @@
 //! hex at call sites), raw `TaskId`/`ServerId` construction confined
 //! to [`util`], allocation banned inside `// lint: hot-path`-marked
 //! functions, and `unwrap`/`expect`/`panic!` in library simulation
-//! paths required to carry a written justification. Violations are
-//! suppressed line-by-line with `// lint: allow(<rule>): <reason>`;
-//! `tests/lint_clean.rs` gates `cargo test` on a clean tree, and the
-//! JSON report (`pallas-lint --json`) is byte-deterministic for CI
-//! diffing. See `rust/LINTS.md` for the full rule catalogue.
+//! paths required to carry a written justification.
+//!
+//! A second tier, [`lint::check`] (`pallas-check`, or
+//! `pallas-lint --deep` for both tiers at once), goes crate-wide: it
+//! builds a symbol table of the whole crate — module tree, fn
+//! signatures, struct fields, enum variants, trait surfaces, impl
+//! blocks, imports — and resolves every path, call, struct literal,
+//! and `self.` access against it. Seven `check-*` rules catch the
+//! cross-module drift rustc only reports at compile time (renamed fns
+//! still called by old names, arity drift, vanished fields, `Event`
+//! dispatch tables out of sync with the variant list, impl blocks
+//! diverging from their trait, duplicate definitions, dead `pub`
+//! API). Its recall is pinned by a 29-crate seeded-defect corpus under
+//! `tests/fixtures/check/`.
+//!
+//! Violations in either tier are suppressed line-by-line with
+//! `// lint: allow(<rule>): <reason>`; unused suppressions fail the
+//! run. `tests/lint_clean.rs` gates `cargo test` on a strictly clean
+//! tree, and both JSON reports (`--json`) are byte-deterministic for
+//! CI diffing. See `rust/LINTS.md` for the full rule catalogue.
 //!
 //! ## Quickstart
 //!

@@ -1,0 +1,591 @@
+//! Crate-shape rules: import resolution, trait-impl conformance,
+//! duplicate definitions, dead `pub` items, and the `Event`
+//! exhaustiveness anchors. These run over the whole module tree
+//! rather than one reference sink.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use super::parse::{match_close, FnDef};
+use super::resolve::{Crate, Res, Resolver};
+use super::{Report, R_DEAD, R_DUP, R_PATHS, R_TRAITS, R_VARIANTS};
+use crate::lint::lexer::{self, TokKind};
+
+/// `use` declarations must resolve; glob imports must come from a
+/// module (or enum, for `use Enum::*`).
+pub(crate) fn check_use_decls(krate: &Crate, rz: &Resolver<'_>, rep: &mut Report) {
+    for m in krate.all_modules() {
+        let module = &krate.modules[m];
+        let rel = module.file.clone();
+        for u in &module.items.uses {
+            let r = rz.resolve_path(m, &u.path);
+            let path_s =
+                format!("{}{}", u.path.join("::"), if u.is_glob { "::*" } else { "" });
+            match r {
+                None => {
+                    rep.diag(&rel, u.line, R_PATHS, format!("unresolved import `{path_s}`"));
+                }
+                Some(Res::Missing { name, .. }) => {
+                    rep.diag(
+                        &rel,
+                        u.line,
+                        R_PATHS,
+                        format!("unresolved import `{path_s}`: no `{name}`"),
+                    );
+                }
+                Some(tgt) => {
+                    if u.is_glob
+                        && !matches!(
+                            tgt,
+                            Res::Module(_) | Res::Enum { .. } | Res::External | Res::Unknown
+                        )
+                    {
+                        rep.diag(
+                            &rel,
+                            u.line,
+                            R_PATHS,
+                            format!("glob import `{path_s}` from a non-module"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `impl Trait for Type` blocks: the trait must resolve, every method
+/// and associated item must be declared by it (with matching arity),
+/// and every required method must be present.
+pub(crate) fn check_trait_impls(krate: &Crate, rz: &Resolver<'_>, rep: &mut Report) {
+    for m in krate.all_modules() {
+        let module = &krate.modules[m];
+        let rel = module.file.clone();
+        for idef in &module.items.impls {
+            let Some(tp) = &idef.trait_path else {
+                continue;
+            };
+            let tpath = tp.join("::");
+            let tr = rz.resolve_path(m, tp);
+            let (trm, trname) = match tr {
+                None => {
+                    if !module.items.macro_items {
+                        rep.diag(
+                            &rel,
+                            idef.line,
+                            R_PATHS,
+                            format!("`impl {tpath} for …`: unresolved trait"),
+                        );
+                    }
+                    continue;
+                }
+                Some(Res::Missing { name, .. }) => {
+                    rep.diag(&rel, idef.line, R_PATHS, format!("`impl {tpath} for …`: no `{name}`"));
+                    continue;
+                }
+                Some(Res::Trait { module: trm, name }) => (trm, name),
+                Some(_) => continue,
+            };
+            // Merge the declared surface across cfg twins of the trait.
+            let mut required: BTreeMap<&str, &FnDef> = BTreeMap::new();
+            let mut provided: BTreeMap<&str, &FnDef> = BTreeMap::new();
+            let mut assoc: BTreeSet<&str> = BTreeSet::new();
+            for td in rz.trait_defs(trm, &trname) {
+                for (n, fd) in &td.required {
+                    required.insert(n.as_str(), fd);
+                }
+                for (n, fd) in &td.provided {
+                    provided.insert(n.as_str(), fd);
+                }
+                for a in &td.assoc {
+                    assoc.insert(a.as_str());
+                }
+            }
+            let declared: BTreeSet<&str> = required
+                .keys()
+                .chain(provided.keys())
+                .copied()
+                .chain(assoc.iter().copied())
+                .collect();
+            let tgt = idef.type_name.as_deref().unwrap_or("…");
+            for (mname, fds) in &idef.methods {
+                if !declared.contains(mname.as_str()) {
+                    rep.diag(
+                        &rel,
+                        fds[0].line,
+                        R_TRAITS,
+                        format!(
+                            "`impl {tpath} for {tgt}`: method `{mname}` is not a member \
+                             of `{trname}`"
+                        ),
+                    );
+                } else if let Some(tfd) =
+                    required.get(mname.as_str()).or_else(|| provided.get(mname.as_str()))
+                {
+                    if !fds.iter().any(|fd| fd.arity == tfd.arity) {
+                        rep.diag(
+                            &rel,
+                            fds[0].line,
+                            R_TRAITS,
+                            format!(
+                                "`impl {tpath} for {tgt}`: `{mname}` has arity {}, \
+                                 trait declares {}",
+                                fds[0].arity, tfd.arity
+                            ),
+                        );
+                    }
+                }
+            }
+            for aname in &idef.assoc {
+                if !declared.contains(aname.as_str()) {
+                    rep.diag(
+                        &rel,
+                        idef.line,
+                        R_TRAITS,
+                        format!(
+                            "`impl {tpath} for {tgt}`: associated item `{aname}` is not \
+                             a member of `{trname}`"
+                        ),
+                    );
+                }
+            }
+            for rname in required.keys() {
+                if !idef.methods.contains_key(*rname) {
+                    rep.diag(
+                        &rel,
+                        idef.line,
+                        R_TRAITS,
+                        format!("`impl {tpath} for {tgt}` is missing required method `{rname}`"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Duplicate definitions: same name twice in one namespace of one
+/// module, double imports, and repeated methods within or across
+/// inherent impls. `#[cfg]`-gated twins are expected and skipped.
+pub(crate) fn check_duplicates(krate: &Crate, rep: &mut Report) {
+    for m in krate.all_modules() {
+        let module = &krate.modules[m];
+        let rel = module.file.clone();
+        let it = &module.items;
+        let mpath = module.display_path();
+
+        let mut dup_scan = |groups: &[BTreeMap<String, Vec<(u32, bool)>>], what: &str| {
+            let mut names: BTreeMap<&str, Vec<(u32, bool)>> = BTreeMap::new();
+            for g in groups {
+                for (name, defs) in g {
+                    names.entry(name.as_str()).or_default().extend(defs.iter().copied());
+                }
+            }
+            for (name, defs) in names {
+                let mut live: Vec<u32> =
+                    defs.iter().filter(|(_, cfg)| !cfg).map(|(l, _)| *l).collect();
+                if live.len() > 1 {
+                    live.sort_unstable();
+                    rep.diag(
+                        &rel,
+                        live[1],
+                        R_DUP,
+                        format!("duplicate {what} definition `{name}` in `{mpath}`"),
+                    );
+                }
+            }
+        };
+
+        let structs: BTreeMap<String, Vec<(u32, bool)>> = it
+            .structs
+            .iter()
+            .map(|(n, v)| (n.clone(), v.iter().map(|d| (d.line, d.cfg)).collect()))
+            .collect();
+        let enums: BTreeMap<String, Vec<(u32, bool)>> = it
+            .enums
+            .iter()
+            .map(|(n, v)| (n.clone(), v.iter().map(|d| (d.line, d.cfg)).collect()))
+            .collect();
+        let traits: BTreeMap<String, Vec<(u32, bool)>> = it
+            .traits
+            .iter()
+            .map(|(n, v)| (n.clone(), v.iter().map(|d| (d.line, d.cfg)).collect()))
+            .collect();
+        let types: BTreeMap<String, Vec<(u32, bool)>> = it
+            .types
+            .iter()
+            .map(|(n, v)| (n.clone(), v.iter().map(|d| (d.line, d.cfg)).collect()))
+            .collect();
+        let fns: BTreeMap<String, Vec<(u32, bool)>> = it
+            .fns
+            .iter()
+            .map(|(n, v)| (n.clone(), v.iter().map(|d| (d.line, d.cfg)).collect()))
+            .collect();
+        let consts: BTreeMap<String, Vec<(u32, bool)>> = it
+            .consts
+            .iter()
+            .map(|(n, v)| (n.clone(), v.iter().map(|d| (d.line, d.cfg)).collect()))
+            .collect();
+        dup_scan(&[structs, enums, traits, types], "type");
+        dup_scan(&[fns], "fn");
+        dup_scan(&[consts], "const/static");
+
+        // Duplicate explicit imports of the same alias from two paths.
+        let mut alias_seen: BTreeMap<&str, &[String]> = BTreeMap::new();
+        for u in &it.uses {
+            let Some(alias) = u.alias.as_deref() else {
+                continue;
+            };
+            if u.is_glob || u.cfg || alias == "_" {
+                continue;
+            }
+            match alias_seen.get(alias) {
+                Some(path) if *path != u.path.as_slice() => {
+                    rep.diag(
+                        &rel,
+                        u.line,
+                        R_DUP,
+                        format!("`{alias}` imported more than once in `{mpath}`"),
+                    );
+                }
+                Some(_) => {}
+                None => {
+                    alias_seen.insert(alias, &u.path);
+                }
+            }
+        }
+
+        // Duplicate methods within one impl block.
+        for idef in &it.impls {
+            for (mname, fds) in &idef.methods {
+                let mut live: Vec<u32> =
+                    fds.iter().filter(|fd| !fd.cfg).map(|fd| fd.line).collect();
+                if live.len() > 1 {
+                    live.sort_unstable();
+                    rep.diag(
+                        &rel,
+                        live[1],
+                        R_DUP,
+                        format!("method `{mname}` defined twice in the same impl block"),
+                    );
+                }
+            }
+        }
+    }
+
+    // Duplicate methods across inherent impls of one type name.
+    let mut inherent: BTreeMap<(String, String), Vec<(String, u32)>> = BTreeMap::new();
+    for m in krate.all_modules() {
+        let module = &krate.modules[m];
+        for idef in &module.items.impls {
+            if idef.trait_path.is_some() || idef.cfg {
+                continue;
+            }
+            let Some(tname) = &idef.type_name else {
+                continue;
+            };
+            for (mname, fds) in &idef.methods {
+                for fd in fds {
+                    if !fd.cfg {
+                        inherent
+                            .entry((tname.clone(), mname.clone()))
+                            .or_default()
+                            .push((module.file.clone(), fd.line));
+                    }
+                }
+            }
+        }
+    }
+    for ((tname, mname), mut sites) in inherent {
+        if sites.len() > 1 {
+            sites.sort();
+            rep.diag(
+                &sites[1].0,
+                sites[1].1,
+                R_DUP,
+                format!("method `{mname}` defined in more than one inherent impl of `{tname}`"),
+            );
+        }
+    }
+}
+
+/// `pub` items (plain `pub` only — rustc's `dead_code` lint already
+/// covers private and `pub(crate)` items) that no other file in the
+/// crate, its tests, benches, or examples ever names.
+pub(crate) fn check_dead_pub(
+    krate: &Crate,
+    src_root: &Path,
+    test_marks: &BTreeMap<String, Vec<bool>>,
+    rep: &mut Report,
+) {
+    // name -> set of "containers" (files) where the ident appears.
+    let mut ident_files: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut index = |label: &str, toks: &[lexer::Tok]| {
+        for t in toks {
+            if t.kind == TokKind::Ident {
+                ident_files.entry(t.text.clone()).or_default().insert(label.to_string());
+            }
+        }
+    };
+    for (rel, fp) in &krate.files {
+        index(rel, &fp.toks);
+    }
+    for extra_dir in ["../tests", "../benches", "../../examples"] {
+        let d = src_root.join(extra_dir);
+        if !d.is_dir() {
+            continue;
+        }
+        let mut stack = vec![d];
+        while let Some(dir) = stack.pop() {
+            let Ok(rd) = std::fs::read_dir(&dir) else {
+                continue;
+            };
+            let mut entries: Vec<_> = rd.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+            entries.sort();
+            for p in entries {
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().is_some_and(|x| x == "rs") {
+                    if let Ok(src) = std::fs::read_to_string(&p) {
+                        let out = lexer::lex(&src);
+                        index(&format!("ext:{}", p.display()), &out.toks);
+                    }
+                }
+            }
+        }
+    }
+
+    let empty: Vec<bool> = Vec::new();
+    for m in krate.all_modules() {
+        let module = &krate.modules[m];
+        if module.items.test_only || module.is_bin_root_tree() {
+            continue;
+        }
+        let rel = module.file.clone();
+        let marks = test_marks.get(&rel).unwrap_or(&empty);
+        let it = &module.items;
+        // (line, vis) of the first def under each name, per namespace.
+        let mut candidates: Vec<(&str, u32, &str, &str)> = Vec::new();
+        for (name, v) in &it.fns {
+            if let Some(d) = v.first() {
+                candidates.push((name, d.line, &d.vis, "fn"));
+            }
+        }
+        for (name, v) in &it.structs {
+            if let Some(d) = v.first() {
+                candidates.push((name, d.line, &d.vis, "struct"));
+            }
+        }
+        for (name, v) in &it.enums {
+            if let Some(d) = v.first() {
+                candidates.push((name, d.line, &d.vis, "enum"));
+            }
+        }
+        for (name, v) in &it.traits {
+            if let Some(d) = v.first() {
+                candidates.push((name, d.line, &d.vis, "trait"));
+            }
+        }
+        for (name, v) in &it.consts {
+            if let Some(d) = v.first() {
+                candidates.push((name, d.line, &d.vis, "const"));
+            }
+        }
+        for (name, v) in &it.types {
+            if let Some(d) = v.first() {
+                candidates.push((name, d.line, &d.vis, "type alias"));
+            }
+        }
+        for (name, line, vis, what) in candidates {
+            if vis != "pub" || name == "main" || name.starts_with('_') {
+                continue;
+            }
+            if marks.get(line as usize).copied().unwrap_or(false) {
+                continue;
+            }
+            let referenced_elsewhere = ident_files
+                .get(name)
+                .is_some_and(|refs| refs.iter().any(|r| r != &rel));
+            if referenced_elsewhere {
+                continue;
+            }
+            rep.diag(
+                &rel,
+                line,
+                R_DEAD,
+                format!("pub {what} `{name}` is never referenced outside `{rel}`"),
+            );
+        }
+    }
+}
+
+/// The `Event` enum's exhaustiveness anchors: `N_KINDS`, `KINDS`,
+/// `kind_index`, `dispatch_event_core` must exist and stay in sync
+/// with the variant list — the manual dispatch tables the calendar
+/// queue relies on cannot drift when a variant is added.
+pub(crate) fn check_event_anchors(krate: &Crate, rep: &mut Report) {
+    // First `Event` enum in module-tree order (bin roots skipped).
+    let mut found_ev: Option<(usize, &super::parse::EnumDef)> = None;
+    for m in krate.all_modules() {
+        if krate.modules[m].is_bin_root_tree() {
+            continue;
+        }
+        if let Some(ed) = krate.modules[m].items.enums.get("Event").and_then(|v| v.first()) {
+            found_ev = Some((m, ed));
+            break;
+        }
+    }
+    let Some((em, ed)) = found_ev else {
+        return;
+    };
+    let rel = krate.modules[em].file.clone();
+    let Some(fp) = krate.files.get(&rel) else {
+        return;
+    };
+    let toks = &fp.toks;
+    let variants: Vec<&str> = ed.variants.iter().map(|v| v.name.as_str()).collect();
+
+    let mut n_kinds: Option<i64> = None;
+    let mut kinds_count: Option<usize> = None;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || i == 0 {
+            continue;
+        }
+        let prev_is_const =
+            toks[i - 1].kind == TokKind::Ident && toks[i - 1].text == "const";
+        if t.text == "N_KINDS" && prev_is_const {
+            let mut j = i + 1;
+            while j < toks.len()
+                && !(toks[j].kind == TokKind::Punct && toks[j].text == "=")
+            {
+                j += 1;
+            }
+            if j + 1 < toks.len() && toks[j + 1].kind == TokKind::Int {
+                if let Ok(v) = toks[j + 1].text.parse::<i64>() {
+                    n_kinds = Some(v);
+                }
+            }
+        }
+        if t.text == "KINDS" && prev_is_const {
+            // Scan past the type annotation (`[&str; N]`) to the `=`.
+            let mut j = i + 1;
+            let mut depth = 0i32;
+            while j < toks.len() {
+                let tt = &toks[j];
+                if tt.kind == TokKind::Punct {
+                    match tt.text.as_str() {
+                        "=" if depth == 0 => break,
+                        "(" | "[" | "{" | "<" => depth += 1,
+                        ")" | "]" | "}" | ">" => depth -= 1,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if j < toks.len()
+                && j + 1 < toks.len()
+                && toks[j + 1].kind == TokKind::Punct
+                && toks[j + 1].text == "["
+            {
+                let close = match_close(toks, j + 1, '[', ']');
+                let mut commas = 0usize;
+                let mut depth = 0i32;
+                let mut last_sig: Option<&str> = None;
+                for tt in &toks[j + 2..close.saturating_sub(1)] {
+                    if tt.kind == TokKind::Punct {
+                        match tt.text.as_str() {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => depth -= 1,
+                            "," if depth == 0 => commas += 1,
+                            _ => {}
+                        }
+                        last_sig = Some(tt.text.as_str());
+                    } else {
+                        last_sig = Some("x");
+                    }
+                }
+                // Trailing comma means `commas` == element count.
+                kinds_count = Some(if last_sig == Some(",") { commas } else { commas + 1 });
+            }
+        }
+    }
+
+    let nv = variants.len();
+    match n_kinds {
+        None => rep.diag(
+            &rel,
+            ed.line,
+            R_VARIANTS,
+            "`Event` exhaustiveness anchor `const N_KINDS` not found".to_string(),
+        ),
+        Some(n) if n != nv as i64 => rep.diag(
+            &rel,
+            ed.line,
+            R_VARIANTS,
+            format!("`Event::N_KINDS` is {n} but `Event` has {nv} variants"),
+        ),
+        _ => {}
+    }
+    match kinds_count {
+        None => rep.diag(
+            &rel,
+            ed.line,
+            R_VARIANTS,
+            "`Event` exhaustiveness anchor `const KINDS` not found".to_string(),
+        ),
+        Some(k) if k != nv => rep.diag(
+            &rel,
+            ed.line,
+            R_VARIANTS,
+            format!("`Event::KINDS` lists {k} names but `Event` has {nv} variants"),
+        ),
+        _ => {}
+    }
+
+    for fn_name in ["kind_index", "dispatch_event_core"] {
+        // LAST definition found in tree order wins — mirrors a human
+        // reading the final override.
+        let mut found: Option<(String, &FnDef)> = None;
+        for m2 in krate.all_modules() {
+            let m2ref = &krate.modules[m2];
+            if let Some(fds) = m2ref.items.fns.get(fn_name) {
+                if let Some(fd) = fds.last() {
+                    found = Some((m2ref.file.clone(), fd));
+                }
+            }
+            for idef in &m2ref.items.impls {
+                if let Some(fds) = idef.methods.get(fn_name) {
+                    if let Some(fd) = fds.last() {
+                        found = Some((m2ref.file.clone(), fd));
+                    }
+                }
+            }
+        }
+        let Some((frel, fd)) = found else {
+            rep.diag(
+                &rel,
+                ed.line,
+                R_VARIANTS,
+                format!("`Event` exhaustiveness anchor fn `{fn_name}` not found"),
+            );
+            continue;
+        };
+        let Some(ffp) = krate.files.get(&frel) else {
+            continue;
+        };
+        let (lo, hi) = fd.body;
+        let idents: BTreeSet<&str> = ffp.toks[lo.min(ffp.toks.len())..hi.min(ffp.toks.len())]
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        for v in &variants {
+            if !idents.contains(v) {
+                rep.diag(
+                    &frel,
+                    fd.line,
+                    R_VARIANTS,
+                    format!("`{fn_name}` does not mention `Event::{v}`"),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! `pallas-check`: tier-2 crate-wide symbol-resolution and
+//! API-consistency analysis. Where tier-1 `pallas-lint` is per-file
+//! and syntactic, this pass builds a whole-crate symbol table
+//! (phase 1: [`parse`] + [`resolve`]) and then resolves every
+//! checkable reference against it (phase 2: [`walk`] + [`rules`] +
+//! [`crate_rules`]) — catching the cross-module drift rustc only
+//! reports at compile time and this repo's toolchain-less CI
+//! otherwise never sees: renamed fns still named in other modules,
+//! call-arity drift, struct-literal fields that no longer exist,
+//! enum variants missing from hand-maintained dispatch tables.
+//!
+//! ## Rules
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `check-path-resolution` | every `a::b` path, `use` decl and `mod` decl resolves |
+//! | `check-call-arity` | calls match some signature's arity (cfg twins allowed) |
+//! | `check-struct-fields` | struct literals/patterns name real fields |
+//! | `check-enum-variants` | variant uses match payload shape; `Event` anchors in sync |
+//! | `check-trait-impls` | impl blocks match the trait's declared surface |
+//! | `check-duplicate-def` | no name defined twice in one namespace/module |
+//! | `check-dead-pub` | plain-`pub` items are referenced outside their file |
+//!
+//! ## Resolution discipline
+//!
+//! Three-valued: external (std/vendored/prelude), unknown
+//! (macro-tainted scope, type alias, open type, possible local
+//! variable), or resolved/missing. Only *missing* and concrete
+//! contradictions are reported, keeping the pass zero-false-positive
+//! on code rustc accepts. The deliberate false-negative surface is
+//! documented per rule in `rust/LINTS.md`.
+//!
+//! Suppression mirrors tier 1: `// lint: allow(check-<rule>): <reason>`
+//! trailing or standalone. Test regions are *not* exempt (test code
+//! must resolve too) except for `check-dead-pub`, where `#[cfg(test)]`
+//! items are skipped. Validated against the seeded-defect corpus in
+//! `rust/tests/fixtures/check/`.
+
+pub(crate) mod crate_rules;
+pub(crate) mod parse;
+pub(crate) mod resolve;
+pub(crate) mod rules;
+pub(crate) mod walk;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::{
+    suppression_cover, test_lines, walk_rs_files, Diagnostic, LintReport, RuleCount,
+    UnusedSuppression,
+};
+
+/// The closed set of tier-2 rule names.
+pub const RULES: [&str; 7] = [
+    "check-path-resolution",
+    "check-call-arity",
+    "check-struct-fields",
+    "check-enum-variants",
+    "check-trait-impls",
+    "check-duplicate-def",
+    "check-dead-pub",
+];
+
+pub(crate) const R_PATHS: &str = "check-path-resolution";
+pub(crate) const R_ARITY: &str = "check-call-arity";
+pub(crate) const R_FIELDS: &str = "check-struct-fields";
+pub(crate) const R_VARIANTS: &str = "check-enum-variants";
+pub(crate) const R_TRAITS: &str = "check-trait-impls";
+pub(crate) const R_DUP: &str = "check-duplicate-def";
+pub(crate) const R_DEAD: &str = "check-dead-pub";
+
+/// Pre-suppression findings accumulated by the rule passes.
+#[derive(Debug, Default)]
+pub(crate) struct Report {
+    /// (file, line, rule, message).
+    pub diags: Vec<(String, u32, &'static str, String)>,
+    pub notes: Vec<String>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn diag(&mut self, file: &str, line: u32, rule: &'static str, message: String) {
+        self.diags.push((file.to_string(), line, rule, message));
+    }
+}
+
+/// Parse result for one comment against the *tier-2* marker grammar.
+#[derive(Debug, PartialEq, Eq)]
+enum CheckMarker {
+    Allow { rule: String },
+    /// A lint marker, but not tier-2 business (tier-1 rule, hot-path).
+    Other,
+    Bad(String),
+}
+
+/// Tier-2 view of a `// lint: …` comment. Tier-1 rules and `hot-path`
+/// markers are `Other` (not ours, not an error); a `check-*` marker
+/// with an unknown rule or a missing/empty reason is `Bad`.
+fn parse_check_marker(text: &str) -> Option<CheckMarker> {
+    let t = text.trim();
+    let rest = t.strip_prefix("lint:")?.trim();
+    if rest == "hot-path" {
+        return Some(CheckMarker::Other);
+    }
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        let close = match inner.find(')') {
+            Some(c) => c,
+            None => return Some(CheckMarker::Bad("unterminated `allow(`".to_string())),
+        };
+        let rule = inner[..close].trim().to_string();
+        if !rule.starts_with("check-") {
+            return Some(CheckMarker::Other); // tier-1 suppression: not ours
+        }
+        if !RULES.contains(&rule.as_str()) {
+            return Some(CheckMarker::Bad(format!("unknown rule `{rule}` in allow marker")));
+        }
+        let after = inner[close + 1..].trim_start();
+        let reason = match after.strip_prefix(':') {
+            Some(r) => r.trim(),
+            None => {
+                return Some(CheckMarker::Bad(format!("allow({rule}) is missing `: <reason>`")))
+            }
+        };
+        if reason.is_empty() {
+            return Some(CheckMarker::Bad(format!("allow({rule}) has an empty reason")));
+        }
+        return Some(CheckMarker::Allow { rule });
+    }
+    Some(CheckMarker::Other)
+}
+
+struct Suppression {
+    rule: String,
+    line: u32,
+    covers: (u32, u32),
+    used: bool,
+}
+
+/// Run the full tier-2 pass over the crate rooted at `src_root` (the
+/// crate's `src/` directory). Errors only on unreadable directories;
+/// a missing `lib.rs`/`main.rs` yields an empty crate whose on-disk
+/// files all become orphan notes.
+pub fn run(src_root: &Path) -> Result<LintReport, String> {
+    let krate = resolve::build_crate(src_root);
+    let rz = resolve::Resolver::new(&krate);
+    let mut rep = Report::default();
+    for (file, line, rule, message) in &krate.diags {
+        rep.diag(file, *line, rule, message.clone());
+    }
+
+    // Modules grouped by defining file.
+    let mut mods_by_file: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for m in krate.all_modules() {
+        mods_by_file.entry(krate.modules[m].file.clone()).or_default().push(m);
+    }
+
+    // Orphan files: on disk but reachable from no crate root. They are
+    // not scanned (no module scope to resolve in), only reported.
+    for path in walk_rs_files(src_root)? {
+        let rel = path
+            .strip_prefix(src_root)
+            .map_err(|e| format!("strip_prefix: {e}"))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        if !krate.files.contains_key(&rel) {
+            rep.notes.push(format!("{rel}: not reachable from any crate root (orphan file)"));
+        }
+    }
+    rep.files_scanned = krate.files.len();
+
+    let mut test_marks: BTreeMap<String, Vec<bool>> = BTreeMap::new();
+    for (rel, fp) in &krate.files {
+        test_marks.insert(rel.clone(), test_lines(&fp.toks, fp.n_lines));
+    }
+
+    // Phase 2: walk each file, resolve every reference per module.
+    for (rel, fp) in &krate.files {
+        let Some(mods) = mods_by_file.get(rel) else {
+            continue;
+        };
+        let spans: Vec<((usize, usize), usize)> =
+            mods.iter().map(|&m| (krate.modules[m].items.tok_span, m)).collect();
+        let mut walker = walk::Walker::new(fp, spans);
+        for &m in mods {
+            walker.prescan(&krate.modules[m].items);
+        }
+        let sinks = walker.walk();
+        for (m, sink) in &sinks {
+            rules::check_sink(&rz, *m, sink, rel, &mut rep);
+        }
+    }
+
+    crate_rules::check_use_decls(&krate, &rz, &mut rep);
+    crate_rules::check_trait_impls(&krate, &rz, &mut rep);
+    crate_rules::check_duplicates(&krate, &mut rep);
+    crate_rules::check_dead_pub(&krate, src_root, &test_marks, &mut rep);
+    crate_rules::check_event_anchors(&krate, &mut rep);
+
+    Ok(apply_suppressions(&krate, rep))
+}
+
+/// Match findings against `check-*` allow markers, producing the
+/// final report. Unlike tier 1, markers inside test regions count:
+/// the rules scan test code too.
+fn apply_suppressions(krate: &resolve::Crate, rep: Report) -> LintReport {
+    let mut sup_by_file: BTreeMap<&str, Vec<Suppression>> = BTreeMap::new();
+    let mut notes = rep.notes;
+    for (rel, fp) in &krate.files {
+        let source = krate.sources.get(rel).map(String::as_str).unwrap_or("");
+        let lines: Vec<&str> = source.lines().collect();
+        let mut sups = Vec::new();
+        for c in &fp.comments {
+            match parse_check_marker(&c.text) {
+                None | Some(CheckMarker::Other) => {}
+                Some(CheckMarker::Bad(msg)) => notes.push(format!("{rel}:{}: {msg}", c.line)),
+                Some(CheckMarker::Allow { rule }) => {
+                    let covers = suppression_cover(c.standalone, c.line, &lines);
+                    sups.push(Suppression { rule, line: c.line, covers, used: false });
+                }
+            }
+        }
+        sup_by_file.insert(rel.as_str(), sups);
+    }
+
+    let mut diags = rep.diags;
+    diags.sort();
+    let mut report = LintReport { schema: "pallas-check/1", ..LintReport::default() };
+    for rule in RULES {
+        report.rule_counts.insert(rule, RuleCount::default());
+    }
+    report.files_scanned = rep.files_scanned;
+    for (file, line, rule, message) in diags {
+        let hit = sup_by_file.get_mut(file.as_str()).and_then(|sups| {
+            sups.iter_mut()
+                .find(|s| s.rule == rule && s.covers.0 <= line && line <= s.covers.1)
+        });
+        match hit {
+            Some(s) => {
+                s.used = true;
+                report.suppressed += 1;
+                if let Some(c) = report.rule_counts.get_mut(rule) {
+                    c.suppressed += 1;
+                }
+            }
+            None => {
+                if let Some(c) = report.rule_counts.get_mut(rule) {
+                    c.violations += 1;
+                }
+                report.diagnostics.push(Diagnostic { file, line, rule, message });
+            }
+        }
+    }
+    for (rel, sups) in &sup_by_file {
+        for s in sups {
+            if !s.used {
+                report.unused_suppressions.push(UnusedSuppression {
+                    file: rel.to_string(),
+                    line: s.line,
+                    rule: s.rule.clone(),
+                });
+            }
+        }
+    }
+    report.diagnostics.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    report
+        .unused_suppressions
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    notes.sort();
+    report.notes = notes;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn write_tree(tag: &str, files: &[(&str, &str)]) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("pallas-check-run-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for (rel, src) in files {
+            let p = dir.join(rel);
+            if let Some(parent) = p.parent() {
+                std::fs::create_dir_all(parent).unwrap();
+            }
+            std::fs::write(p, src).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn marker_grammar() {
+        assert_eq!(parse_check_marker(" plain comment"), None);
+        assert_eq!(parse_check_marker(" lint: hot-path"), Some(CheckMarker::Other));
+        assert_eq!(
+            parse_check_marker(" lint: allow(panic-surface): tier-1 business"),
+            Some(CheckMarker::Other)
+        );
+        assert_eq!(
+            parse_check_marker(" lint: allow(check-dead-pub): public API kept for PR 12"),
+            Some(CheckMarker::Allow { rule: "check-dead-pub".to_string() })
+        );
+        assert!(matches!(
+            parse_check_marker(" lint: allow(check-dead-pub)"),
+            Some(CheckMarker::Bad(_))
+        ));
+        assert!(matches!(
+            parse_check_marker(" lint: allow(check-dead-pub):"),
+            Some(CheckMarker::Bad(_))
+        ));
+        assert!(matches!(
+            parse_check_marker(" lint: allow(check-nonsense): reason"),
+            Some(CheckMarker::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn end_to_end_finds_and_suppresses() {
+        let root = write_tree(
+            "e2e",
+            &[
+                (
+                    "lib.rs",
+                    "pub mod util;\npub fn entry() -> u32 {\n    util::helper(1, 2)\n}\n",
+                ),
+                ("util.rs", "pub fn helper(x: u32) -> u32 { x }\n"),
+            ],
+        );
+        let rep = run(&root).unwrap();
+        assert_eq!(rep.schema, "pallas-check/1");
+        let arity: Vec<_> =
+            rep.diagnostics.iter().filter(|d| d.rule == "check-call-arity").collect();
+        assert_eq!(arity.len(), 1, "{:?}", rep.diagnostics);
+        assert!(arity[0].message.contains("called with 2 arg(s)"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn suppressed_finding_counts_and_unused_markers_surface() {
+        let root = write_tree(
+            "sup",
+            &[(
+                "lib.rs",
+                "pub fn lonely() {}\n\
+                 // lint: allow(check-dead-pub): staged API for the next PR\n\
+                 pub fn also_lonely() {}\n",
+            )],
+        );
+        let rep = run(&root).unwrap();
+        // `lonely` is kept; `also_lonely` is suppressed (standalone
+        // marker covers the next line).
+        assert!(rep
+            .diagnostics
+            .iter()
+            .any(|d| d.rule == "check-dead-pub" && d.message.contains("`lonely`")));
+        assert!(!rep.diagnostics.iter().any(|d| d.message.contains("also_lonely")));
+        assert_eq!(rep.suppressed, 1);
+        assert!(rep.unused_suppressions.is_empty());
+        assert!(!rep.is_clean());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn json_is_byte_deterministic() {
+        let root = write_tree(
+            "det",
+            &[("lib.rs", "pub mod a;\n"), ("a.rs", "pub fn f(x: u32) -> u32 { x }\n")],
+        );
+        let a = run(&root).unwrap().to_json();
+        let b = run(&root).unwrap().to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"pallas-check/1\""));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

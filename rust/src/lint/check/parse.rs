@@ -1,0 +1,1326 @@
+//! Phase-1 item parser for `pallas-check`: walks one file's token
+//! stream (from the tier-1 [`lexer`](crate::lint::lexer)) and collects
+//! item definitions per module — fn signatures, struct fields, enum
+//! variants, trait method sets, impl blocks, const/static/type items,
+//! and `use` declarations (including renames, brace groups and globs).
+//!
+//! The parser is deliberately shallow: it tracks bracket depth and a
+//! handful of keywords, never types. Anything it cannot classify it
+//! skips without error — the resolver treats the enclosing module as
+//! *open* (macro-tainted) rather than guessing, so parse blind spots
+//! become false negatives, never false positives.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lint::lexer::{LineComment, Tok, TokKind};
+
+/// Keywords that can never begin a value/type path in expression
+/// position. `crate` and `super` are absent on purpose: they do start
+/// paths.
+pub(crate) const KEYWORDS_NOT_PATH_START: [&str; 36] = [
+    "fn", "let", "if", "else", "match", "while", "for", "loop", "return", "break", "continue",
+    "impl", "trait", "struct", "enum", "mod", "use", "pub", "const", "static", "type", "where",
+    "unsafe", "async", "move", "ref", "mut", "dyn", "as", "in", "extern", "await", "box",
+    "macro_rules", "true", "false",
+];
+
+/// Shape of a struct or enum-variant body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum AdtKind {
+    Unit,
+    Tuple,
+    Named,
+}
+
+/// How a method binds `self` (only presence matters to the rules; the
+/// flavor is kept for diagnostics-by-eye while debugging fixtures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SelfKind {
+    Value,
+    Ref,
+    RefMut,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct FnDef {
+    pub name: String,
+    /// Parameter count INCLUDING `self` when present.
+    pub arity: usize,
+    pub self_kind: Option<SelfKind>,
+    pub line: u32,
+    /// `""` | `"pub"` | `"pub(crate)"` | …
+    pub vis: String,
+    pub cfg: bool,
+    pub generics: BTreeSet<String>,
+    /// Token range of the body (or `(end, end)` for a bodyless decl).
+    pub body: (usize, usize),
+    pub has_body: bool,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct StructDef {
+    pub name: String,
+    pub kind: AdtKind,
+    pub fields: Vec<String>,
+    pub tuple_arity: usize,
+    pub line: u32,
+    pub vis: String,
+    pub cfg: bool,
+    pub derives: BTreeSet<String>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct VariantDef {
+    pub name: String,
+    pub kind: AdtKind,
+    pub fields: Vec<String>,
+    pub tuple_arity: usize,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct EnumDef {
+    pub name: String,
+    /// Declaration order preserved (exhaustiveness counts compare
+    /// against it).
+    pub variants: Vec<VariantDef>,
+    pub line: u32,
+    pub vis: String,
+    pub cfg: bool,
+    pub derives: BTreeSet<String>,
+}
+
+impl EnumDef {
+    pub fn variant(&self, name: &str) -> Option<&VariantDef> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct TraitDef {
+    pub name: String,
+    pub required: BTreeMap<String, FnDef>,
+    pub provided: BTreeMap<String, FnDef>,
+    /// Associated consts and types declared by the trait.
+    pub assoc: BTreeSet<String>,
+    pub line: u32,
+    pub vis: String,
+    pub cfg: bool,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ImplDef {
+    /// `None` when the impl target is not a plain path (tuples, refs).
+    pub type_name: Option<String>,
+    /// `None` for inherent impls; the trait's path segments otherwise.
+    pub trait_path: Option<Vec<String>>,
+    pub methods: BTreeMap<String, Vec<FnDef>>,
+    /// Associated consts/types defined in the impl body.
+    pub assoc: BTreeSet<String>,
+    pub line: u32,
+    pub cfg: bool,
+    pub generics: BTreeSet<String>,
+    /// Token range of the impl body.
+    pub body: (usize, usize),
+}
+
+/// A `const`, `static` or `type` alias item (shape is identical for
+/// the rules' purposes: a named, possibly-pub leaf).
+#[derive(Debug, Clone)]
+pub(crate) struct ConstDef {
+    pub name: String,
+    pub line: u32,
+    pub vis: String,
+    pub cfg: bool,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct UseDef {
+    /// Local name bound by the import; `None` for globs.
+    pub alias: Option<String>,
+    /// Path segments (for globs: the module path before `::*`).
+    pub path: Vec<String>,
+    pub line: u32,
+    pub is_glob: bool,
+    pub cfg: bool,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ModDecl {
+    pub name: String,
+    pub line: u32,
+    pub cfg: bool,
+}
+
+/// Everything defined directly in one module.
+#[derive(Debug, Default)]
+pub(crate) struct ModItems {
+    pub fns: BTreeMap<String, Vec<FnDef>>,
+    pub structs: BTreeMap<String, Vec<StructDef>>,
+    pub enums: BTreeMap<String, Vec<EnumDef>>,
+    pub traits: BTreeMap<String, Vec<TraitDef>>,
+    pub consts: BTreeMap<String, Vec<ConstDef>>,
+    /// Type aliases.
+    pub types: BTreeMap<String, Vec<ConstDef>>,
+    pub uses: Vec<UseDef>,
+    pub mod_decls: Vec<ModDecl>,
+    /// Inline `mod x { … }` bodies; drained into child modules by the
+    /// tree builder.
+    pub inline_mods: BTreeMap<String, ModItems>,
+    pub impls: Vec<ImplDef>,
+    /// The module contains a macro definition or item-position macro
+    /// invocation — it may define items this parser cannot see, so
+    /// resolution failures inside it degrade to "unknown".
+    pub macro_items: bool,
+    /// Inline mod under `#[cfg(test)]` (dead-pub exempts it).
+    pub test_only: bool,
+    /// Token range this module covers in its file.
+    pub tok_span: (usize, usize),
+    /// Defining file, set by the tree builder.
+    pub file: String,
+}
+
+/// Parse result for one file: the root [`ModItems`] (module path is
+/// assigned later by the tree builder) plus the raw token/comment
+/// streams the phase-2 walker re-reads.
+#[derive(Debug)]
+pub(crate) struct FileParse {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+    pub n_lines: u32,
+    /// Taken (`Option::take`) by the tree builder when the file is
+    /// attached to the module tree.
+    pub root: Option<ModItems>,
+    /// Token ranges of `macro_rules!` bodies — the walker skips them.
+    pub macro_spans: Vec<(usize, usize)>,
+}
+
+pub(crate) fn ident_at(toks: &[Tok], i: usize) -> Option<&str> {
+    match toks.get(i) {
+        Some(t) if t.kind == TokKind::Ident => Some(&t.text),
+        _ => None,
+    }
+}
+
+pub(crate) fn punct_at(toks: &[Tok], i: usize) -> Option<&str> {
+    match toks.get(i) {
+        Some(t) if t.kind == TokKind::Punct => Some(&t.text),
+        _ => None,
+    }
+}
+
+pub(crate) fn is_punct(toks: &[Tok], i: usize, c: char) -> bool {
+    punct_at(toks, i).is_some_and(|p| p.len() == 1 && p.as_bytes()[0] == c as u8)
+}
+
+/// Index of the token AFTER the bracket group opening at `i`.
+pub(crate) fn match_close(toks: &[Tok], mut i: usize, open: char, close: char) -> usize {
+    let mut depth = 0i32;
+    let n = toks.len();
+    while i < n {
+        if is_punct(toks, i, open) {
+            depth += 1;
+        } else if is_punct(toks, i, close) {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    n
+}
+
+/// `i` at `#`; returns (index after the attribute, idents inside it).
+pub(crate) fn skip_attr(toks: &[Tok], i: usize) -> (usize, Vec<String>) {
+    let mut idents = Vec::new();
+    let mut j = i + 1; // at `[`
+    let mut depth = 0i32;
+    let n = toks.len();
+    while j < n {
+        match toks[j].kind {
+            TokKind::Punct => match toks[j].text.as_str() {
+                "[" | "(" => depth += 1,
+                "]" | ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return (j + 1, idents);
+                    }
+                }
+                _ => {}
+            },
+            TokKind::Ident => idents.push(toks[j].text.clone()),
+            _ => {}
+        }
+        j += 1;
+    }
+    (n, idents)
+}
+
+/// Parse a fn parameter list between `(` at `lo` and its `)` at
+/// `hi - 1`. Returns (arity including self, self kind).
+fn parse_params(toks: &[Tok], lo: usize, hi: usize) -> (usize, Option<SelfKind>) {
+    let i = lo + 1;
+    let end = hi.saturating_sub(1);
+    if i >= end {
+        return (0, None);
+    }
+    // Split on top-level commas, tracking (), [], {} and <> depth.
+    let mut entries: Vec<(usize, usize)> = Vec::new();
+    let mut depth_par = 0i32;
+    let mut depth_ang = 0i32;
+    let mut start = i;
+    let mut j = i;
+    let mut prev: Option<&str> = None;
+    while j < end {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth_par += 1,
+                ")" | "]" | "}" => depth_par -= 1,
+                "<" if depth_par == 0 => depth_ang += 1,
+                ">" if depth_par == 0 && prev != Some("-") => {
+                    if depth_ang > 0 {
+                        depth_ang -= 1;
+                    }
+                }
+                "," if depth_par == 0 && depth_ang == 0 => {
+                    entries.push((start, j));
+                    start = j + 1;
+                }
+                _ => {}
+            }
+            prev = Some(&t.text);
+        } else {
+            prev = None;
+        }
+        j += 1;
+    }
+    if start < end {
+        entries.push((start, end));
+    }
+    if entries.is_empty() {
+        return (0, None);
+    }
+    // Self kind from the first entry: [&] [lifetime] [mut] self.
+    let (a, b) = entries[0];
+    let mut k = a;
+    let mut is_ref = false;
+    if k < b && is_punct(toks, k, '&') {
+        is_ref = true;
+        k += 1;
+        if k < b && toks[k].kind == TokKind::Lifetime {
+            k += 1;
+        }
+    }
+    let mut is_mut = false;
+    if k < b && ident_at(toks, k) == Some("mut") {
+        is_mut = true;
+        k += 1;
+    }
+    let mut self_kind = None;
+    if k < b && ident_at(toks, k) == Some("self") {
+        // Must not be `self::x` (a type path in an unusual spot).
+        let is_path = k + 2 < b && is_punct(toks, k + 1, ':') && is_punct(toks, k + 2, ':');
+        if !is_path {
+            self_kind = Some(if is_ref {
+                if is_mut {
+                    SelfKind::RefMut
+                } else {
+                    SelfKind::Ref
+                }
+            } else {
+                SelfKind::Value
+            });
+        }
+    }
+    (entries.len(), self_kind)
+}
+
+/// `i` at `<`; collect top-level generic parameter names.
+/// Returns (names, index after the closing `>`).
+pub(crate) fn parse_generics(toks: &[Tok], mut i: usize) -> (BTreeSet<String>, usize) {
+    let mut names = BTreeSet::new();
+    let mut depth = 0i32;
+    let n = toks.len();
+    let mut expecting = true; // at a parameter-name position
+    let mut prev: Option<&str> = None;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "<" => depth += 1,
+                ">" if prev != Some("-") => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return (names, i + 1);
+                    }
+                }
+                "," if depth == 1 => expecting = true,
+                ":" if depth == 1 => expecting = false,
+                _ => {}
+            }
+            prev = Some(&t.text);
+        } else {
+            if t.kind == TokKind::Ident && depth == 1 && expecting && t.text != "const" {
+                names.insert(t.text.clone());
+                expecting = false;
+            }
+            prev = None;
+        }
+        i += 1;
+    }
+    (names, n)
+}
+
+struct Parser<'a> {
+    toks: &'a [Tok],
+    macro_spans: Vec<(usize, usize)>,
+}
+
+/// Parse one file's tokens into a [`FileParse`].
+pub(crate) fn parse_file(toks: Vec<Tok>, comments: Vec<LineComment>, n_lines: u32) -> FileParse {
+    let mut root = ModItems { tok_span: (0, toks.len()), ..ModItems::default() };
+    let mut p = Parser { toks: &toks, macro_spans: Vec::new() };
+    p.parse_items(0, toks.len(), &mut root);
+    let macro_spans = p.macro_spans;
+    FileParse { toks, comments, n_lines, root: Some(root), macro_spans }
+}
+
+impl<'a> Parser<'a> {
+    #[allow(clippy::too_many_lines)]
+    fn parse_items(&mut self, lo: usize, hi: usize, module: &mut ModItems) {
+        let toks = self.toks;
+        let mut i = lo;
+        let mut vis = String::new();
+        let mut cfg = false;
+        let mut cfg_test = false;
+        let mut derives: BTreeSet<String> = BTreeSet::new();
+
+        macro_rules! reset_mods {
+            () => {{
+                vis.clear();
+                cfg = false;
+                cfg_test = false;
+                derives.clear();
+            }};
+        }
+
+        while i < hi {
+            let t = &toks[i];
+            if t.kind == TokKind::Punct && t.text == "#" {
+                if is_punct(toks, i + 1, '[') && i + 1 < hi {
+                    let (j, idents) = skip_attr(toks, i);
+                    let has = |s: &str| idents.iter().any(|x| x == s);
+                    if has("cfg") || has("cfg_attr") {
+                        cfg = true;
+                        if has("test") && !has("not") {
+                            cfg_test = true;
+                        }
+                    }
+                    if idents.first().map(String::as_str) == Some("derive") {
+                        derives.extend(idents.iter().skip(1).cloned());
+                    }
+                    i = j;
+                    continue;
+                }
+                i += 1;
+                continue;
+            }
+            if t.kind != TokKind::Ident {
+                i += 1;
+                continue;
+            }
+            match t.text.as_str() {
+                "pub" => {
+                    vis = "pub".to_string();
+                    i += 1;
+                    // pub(crate) / pub(super) / pub(in …)
+                    if i < hi && is_punct(toks, i, '(') {
+                        let j = match_close(toks, i, '(', ')');
+                        let inner: String = toks[i..j.min(hi)]
+                            .iter()
+                            .filter(|x| x.kind == TokKind::Ident)
+                            .map(|x| x.text.as_str())
+                            .collect();
+                        vis = format!("pub({})", if inner.is_empty() { "?" } else { &inner });
+                        i = j;
+                    }
+                }
+                "unsafe" | "async" | "extern" | "default" => {
+                    let was_extern = t.text == "extern";
+                    i += 1;
+                    if was_extern && i < hi && toks[i].kind == TokKind::Str {
+                        i += 1;
+                    }
+                }
+                "macro_rules" => {
+                    // macro_rules ! name { … } — record and skip the body.
+                    let mut j = i + 1;
+                    if j < hi && is_punct(toks, j, '!') {
+                        j += 1;
+                    }
+                    if j < hi && toks[j].kind == TokKind::Ident {
+                        module.macro_items = true; // may be invoked to make items
+                        j += 1;
+                    }
+                    while j < hi && !matches!(punct_at(toks, j), Some("{" | "(" | "[")) {
+                        j += 1;
+                    }
+                    if j < hi {
+                        let (o, c) = match punct_at(toks, j) {
+                            Some("(") => ('(', ')'),
+                            Some("[") => ('[', ']'),
+                            _ => ('{', '}'),
+                        };
+                        let body_lo = j;
+                        j = match_close(toks, j, o, c);
+                        self.macro_spans.push((body_lo, j));
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                "mod" => {
+                    if let Some(name) = ident_at(toks, i + 1).filter(|_| i + 1 < hi) {
+                        let name = name.to_string();
+                        let line = t.line;
+                        let nxt = i + 2;
+                        if nxt < hi && is_punct(toks, nxt, ';') {
+                            module.mod_decls.push(ModDecl { name, line, cfg });
+                            i = nxt + 1;
+                        } else if nxt < hi && is_punct(toks, nxt, '{') {
+                            let close = match_close(toks, nxt, '{', '}');
+                            let mut inner = ModItems {
+                                test_only: cfg_test || module.test_only,
+                                tok_span: (nxt + 1, close.saturating_sub(1)),
+                                ..ModItems::default()
+                            };
+                            self.parse_items(nxt + 1, close.saturating_sub(1), &mut inner);
+                            module.inline_mods.insert(name, inner);
+                            i = close;
+                        } else {
+                            i = nxt;
+                        }
+                        reset_mods!();
+                        continue;
+                    }
+                    i += 1;
+                }
+                "use" => {
+                    let mut j = i + 1;
+                    while j < hi && !is_punct(toks, j, ';') {
+                        j += 1;
+                    }
+                    self.parse_use(i + 1, j, module, t.line, cfg);
+                    i = j + 1;
+                    reset_mods!();
+                }
+                "fn" => {
+                    let (fd, j) = self.parse_fn(i, hi, &vis, cfg);
+                    if let Some(fd) = fd {
+                        module.fns.entry(fd.name.clone()).or_default().push(fd);
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                "struct" => {
+                    let (sd, j) = self.parse_struct(i, hi, &vis, cfg, &derives);
+                    if let Some(sd) = sd {
+                        module.structs.entry(sd.name.clone()).or_default().push(sd);
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                "enum" => {
+                    let (ed, j) = self.parse_enum(i, hi, &vis, cfg, &derives);
+                    if let Some(ed) = ed {
+                        module.enums.entry(ed.name.clone()).or_default().push(ed);
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                "trait" => {
+                    let (td, j) = self.parse_trait(i, hi, &vis, cfg);
+                    if let Some(td) = td {
+                        module.traits.entry(td.name.clone()).or_default().push(td);
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                "impl" => {
+                    let (idef, j) = self.parse_impl(i, hi, cfg);
+                    if let Some(idef) = idef {
+                        module.impls.push(idef);
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                w @ ("const" | "static") => {
+                    let _ = w;
+                    let mut j = i + 1;
+                    if j < hi && ident_at(toks, j) == Some("mut") {
+                        j += 1;
+                    }
+                    if let Some(name) = ident_at(toks, j).filter(|_| j < hi) {
+                        if name != "_" {
+                            module.consts.entry(name.to_string()).or_default().push(ConstDef {
+                                name: name.to_string(),
+                                line: toks[j].line,
+                                vis: vis.clone(),
+                                cfg,
+                            });
+                        }
+                    }
+                    // Skip to `;` at depth 0 (initializers nest brackets).
+                    let mut depth = 0i32;
+                    while j < hi {
+                        if toks[j].kind == TokKind::Punct {
+                            match toks[j].text.as_str() {
+                                "(" | "[" | "{" => depth += 1,
+                                ")" | "]" | "}" => depth -= 1,
+                                ";" if depth == 0 => {
+                                    j += 1;
+                                    break;
+                                }
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                    reset_mods!();
+                }
+                "type" => {
+                    let mut j = i + 1;
+                    if let Some(name) = ident_at(toks, j).filter(|_| j < hi) {
+                        module.types.entry(name.to_string()).or_default().push(ConstDef {
+                            name: name.to_string(),
+                            line: toks[j].line,
+                            vis: vis.clone(),
+                            cfg,
+                        });
+                    }
+                    while j < hi && !is_punct(toks, j, ';') {
+                        j += 1;
+                    }
+                    i = j + 1;
+                    reset_mods!();
+                }
+                w => {
+                    // Item-position macro invocation: `name ! ( … ) ;` etc.
+                    if i + 1 < hi
+                        && is_punct(toks, i + 1, '!')
+                        && !KEYWORDS_NOT_PATH_START.contains(&w)
+                    {
+                        module.macro_items = true;
+                        let mut j = i + 2;
+                        if j < hi {
+                            if let Some(o @ ("{" | "(" | "[")) = punct_at(toks, j) {
+                                let (o, c) = match o {
+                                    "(" => ('(', ')'),
+                                    "[" => ('[', ']'),
+                                    _ => ('{', '}'),
+                                };
+                                j = match_close(toks, j, o, c);
+                            }
+                        }
+                        i = j;
+                        reset_mods!();
+                        continue;
+                    }
+                    i += 1;
+                    reset_mods!();
+                }
+            }
+        }
+    }
+
+    /// `i` at `fn`. Returns (parsed def, index after the item).
+    fn parse_fn(&self, i: usize, hi: usize, vis: &str, cfg: bool) -> (Option<FnDef>, usize) {
+        let toks = self.toks;
+        let mut j = i + 1;
+        let Some(name) = ident_at(toks, j).filter(|_| j < hi) else {
+            return (None, i + 1);
+        };
+        let name = name.to_string();
+        let line = toks[j].line;
+        j += 1;
+        let mut generics = BTreeSet::new();
+        if j < hi && is_punct(toks, j, '<') {
+            let (g, nj) = parse_generics(toks, j);
+            generics = g;
+            j = nj;
+        }
+        if j >= hi || !is_punct(toks, j, '(') {
+            return (None, j);
+        }
+        let close = match_close(toks, j, '(', ')');
+        let (arity, self_kind) = parse_params(toks, j, close);
+        j = close;
+        // Skip return type / where clause to the body `{` or decl `;`.
+        let mut depth = 0i32;
+        let mut body_end = hi;
+        let mut found = false;
+        while j < hi {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "<" => depth += 1,
+                    ")" | "]" | ">" => {
+                        if depth > 0 {
+                            depth -= 1;
+                        }
+                    }
+                    ";" if depth == 0 => {
+                        body_end = j + 1;
+                        found = true;
+                        break;
+                    }
+                    "{" if depth == 0 => {
+                        body_end = match_close(toks, j, '{', '}');
+                        found = true;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if !found {
+            body_end = hi;
+        }
+        let has_body = j < hi && is_punct(toks, j, '{');
+        let fd = FnDef {
+            name,
+            arity,
+            self_kind,
+            line,
+            vis: vis.to_string(),
+            cfg,
+            generics,
+            body: (j, body_end),
+            has_body,
+        };
+        (Some(fd), body_end)
+    }
+
+    fn parse_struct(
+        &self,
+        i: usize,
+        hi: usize,
+        vis: &str,
+        cfg: bool,
+        derives: &BTreeSet<String>,
+    ) -> (Option<StructDef>, usize) {
+        let toks = self.toks;
+        let mut j = i + 1;
+        let Some(name) = ident_at(toks, j).filter(|_| j < hi) else {
+            return (None, i + 1);
+        };
+        let mut s = StructDef {
+            name: name.to_string(),
+            kind: AdtKind::Unit,
+            fields: Vec::new(),
+            tuple_arity: 0,
+            line: toks[j].line,
+            vis: vis.to_string(),
+            cfg,
+            derives: derives.clone(),
+        };
+        j += 1;
+        if j < hi && is_punct(toks, j, '<') {
+            let (_, nj) = parse_generics(toks, j);
+            j = nj;
+        }
+        while j < hi {
+            if is_punct(toks, j, ';') {
+                return (Some(s), j + 1); // unit struct
+            }
+            if is_punct(toks, j, '(') {
+                let close = match_close(toks, j, '(', ')');
+                s.kind = AdtKind::Tuple;
+                let (arity, _) = parse_params(toks, j, close);
+                s.tuple_arity = arity;
+                j = close;
+                while j < hi && !is_punct(toks, j, ';') {
+                    j += 1;
+                }
+                return (Some(s), j + 1);
+            }
+            if is_punct(toks, j, '{') {
+                let close = match_close(toks, j, '{', '}');
+                s.kind = AdtKind::Named;
+                s.fields = self.parse_named_fields(j + 1, close.saturating_sub(1));
+                return (Some(s), close);
+            }
+            j += 1;
+        }
+        (Some(s), hi)
+    }
+
+    /// Field names inside a struct/variant body: idents at depth 0
+    /// directly followed by a single `:` at entry start.
+    fn parse_named_fields(&self, lo: usize, hi: usize) -> Vec<String> {
+        let toks = self.toks;
+        let mut fields = Vec::new();
+        let mut depth = 0i32;
+        let mut at_entry_start = true;
+        let mut j = lo;
+        while j < hi {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "#" if is_punct(toks, j + 1, '[') && j + 1 < hi => {
+                        let (nj, _) = skip_attr(toks, j);
+                        j = nj;
+                        continue;
+                    }
+                    "(" | "[" | "{" | "<" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    ">" if depth > 0 => depth -= 1,
+                    "," if depth == 0 => {
+                        at_entry_start = true;
+                        j += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident && depth == 0 && at_entry_start {
+                if t.text == "pub" {
+                    j += 1;
+                    if j < hi && is_punct(toks, j, '(') {
+                        j = match_close(toks, j, '(', ')');
+                    }
+                    continue;
+                }
+                // A field declaration is `name: Type` — the name is
+                // directly followed by a colon.
+                if j + 1 < hi && is_punct(toks, j + 1, ':') {
+                    fields.push(t.text.clone());
+                }
+                at_entry_start = false;
+            }
+            j += 1;
+        }
+        fields
+    }
+
+    fn parse_enum(
+        &self,
+        i: usize,
+        hi: usize,
+        vis: &str,
+        cfg: bool,
+        derives: &BTreeSet<String>,
+    ) -> (Option<EnumDef>, usize) {
+        let toks = self.toks;
+        let mut j = i + 1;
+        let Some(name) = ident_at(toks, j).filter(|_| j < hi) else {
+            return (None, i + 1);
+        };
+        let mut e = EnumDef {
+            name: name.to_string(),
+            variants: Vec::new(),
+            line: toks[j].line,
+            vis: vis.to_string(),
+            cfg,
+            derives: derives.clone(),
+        };
+        j += 1;
+        if j < hi && is_punct(toks, j, '<') {
+            let (_, nj) = parse_generics(toks, j);
+            j = nj;
+        }
+        while j < hi && !is_punct(toks, j, '{') {
+            if is_punct(toks, j, ';') {
+                return (Some(e), j + 1);
+            }
+            j += 1;
+        }
+        if j >= hi {
+            return (Some(e), hi);
+        }
+        let close = match_close(toks, j, '{', '}');
+        // Variants: idents at depth 0 at entry start, optionally with
+        // a `(…)` or `{…}` payload.
+        let mut k = j + 1;
+        let body_end = close.saturating_sub(1);
+        let mut at_entry_start = true;
+        let mut depth = 0i32;
+        while k < body_end {
+            let t = &toks[k];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "#" if k + 1 < close && is_punct(toks, k + 1, '[') => {
+                        let (nk, _) = skip_attr(toks, k);
+                        k = nk;
+                        continue;
+                    }
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    "," if depth == 0 => at_entry_start = true,
+                    _ => {}
+                }
+                k += 1;
+                continue;
+            }
+            if t.kind == TokKind::Ident && depth == 0 && at_entry_start {
+                let mut v = VariantDef {
+                    name: t.text.clone(),
+                    kind: AdtKind::Unit,
+                    fields: Vec::new(),
+                    tuple_arity: 0,
+                };
+                let nxt = k + 1;
+                if nxt < body_end && is_punct(toks, nxt, '(') {
+                    let c2 = match_close(toks, nxt, '(', ')');
+                    v.kind = AdtKind::Tuple;
+                    let (arity, _) = parse_params(toks, nxt, c2);
+                    v.tuple_arity = arity;
+                    k = c2;
+                } else if nxt < body_end && is_punct(toks, nxt, '{') {
+                    let c2 = match_close(toks, nxt, '{', '}');
+                    v.kind = AdtKind::Named;
+                    v.fields = self.parse_named_fields(nxt + 1, c2.saturating_sub(1));
+                    k = c2;
+                } else {
+                    // Unit (an explicit `= discriminant` is skipped by
+                    // the surrounding depth/comma tracking).
+                    k = nxt;
+                }
+                e.variants.push(v);
+                at_entry_start = false;
+                continue;
+            }
+            k += 1;
+        }
+        (Some(e), close)
+    }
+
+    fn parse_trait(&self, i: usize, hi: usize, vis: &str, cfg: bool) -> (Option<TraitDef>, usize) {
+        let toks = self.toks;
+        let mut j = i + 1;
+        let Some(name) = ident_at(toks, j).filter(|_| j < hi) else {
+            return (None, i + 1);
+        };
+        let mut tr = TraitDef {
+            name: name.to_string(),
+            required: BTreeMap::new(),
+            provided: BTreeMap::new(),
+            assoc: BTreeSet::new(),
+            line: toks[j].line,
+            vis: vis.to_string(),
+            cfg,
+        };
+        j += 1;
+        if j < hi && is_punct(toks, j, '<') {
+            let (_, nj) = parse_generics(toks, j);
+            j = nj;
+        }
+        while j < hi && !matches!(punct_at(toks, j), Some("{" | ";")) {
+            j += 1;
+        }
+        if j >= hi || punct_at(toks, j) == Some(";") {
+            return (Some(tr), j + 1);
+        }
+        let close = match_close(toks, j, '{', '}');
+        let body_end = close.saturating_sub(1);
+        let mut k = j + 1;
+        while k < body_end {
+            let t = &toks[k];
+            if t.kind == TokKind::Punct && t.text == "#" && k + 1 < close && is_punct(toks, k + 1, '[')
+            {
+                let (nk, _) = skip_attr(toks, k);
+                k = nk;
+                continue;
+            }
+            if t.kind == TokKind::Ident && t.text == "fn" {
+                let (fd, k2) = self.parse_fn(k, body_end, "", false);
+                if let Some(fd) = fd {
+                    if fd.has_body {
+                        tr.provided.insert(fd.name.clone(), fd);
+                    } else {
+                        tr.required.insert(fd.name.clone(), fd);
+                    }
+                }
+                k = k2;
+                continue;
+            }
+            if t.kind == TokKind::Ident && (t.text == "const" || t.text == "type") {
+                if let Some(a) = ident_at(toks, k + 1).filter(|_| k + 1 < close) {
+                    tr.assoc.insert(a.to_string());
+                }
+                while k < body_end && !is_punct(toks, k, ';') {
+                    k += 1;
+                }
+                k += 1;
+                continue;
+            }
+            k += 1;
+        }
+        (Some(tr), close)
+    }
+
+    /// `i` at `impl`. Handles `impl<G> Type { … }` and
+    /// `impl<G> Trait for Type { … }`.
+    fn parse_impl(&self, i: usize, hi: usize, cfg: bool) -> (Option<ImplDef>, usize) {
+        let toks = self.toks;
+        let mut j = i + 1;
+        let mut generics = BTreeSet::new();
+        if j < hi && is_punct(toks, j, '<') {
+            let (g, nj) = parse_generics(toks, j);
+            generics = g;
+            j = nj;
+        }
+        // Collect the pre-body path tokens up to `{` at depth 0. A
+        // `None` entry marks a non-path construct (tuple type).
+        let mut segs1: Vec<Option<String>> = Vec::new();
+        let mut segs2: Vec<Option<String>> = Vec::new();
+        let mut in_second = false;
+        let mut saw_for = false;
+        let mut depth = 0i32;
+        let mut prev: Option<&str> = None;
+        while j < hi {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "<" => depth += 1,
+                    ">" if prev != Some("-") => {
+                        if depth > 0 {
+                            depth -= 1;
+                        }
+                    }
+                    "{" if depth == 0 => break,
+                    "(" if depth == 0 => {
+                        j = match_close(toks, j, '(', ')');
+                        if in_second {
+                            segs2.push(None);
+                        } else {
+                            segs1.push(None);
+                        }
+                        prev = Some(")");
+                        continue;
+                    }
+                    _ => {}
+                }
+                prev = Some(&t.text);
+            } else if t.kind == TokKind::Ident && depth == 0 {
+                prev = None;
+                match t.text.as_str() {
+                    "for" => {
+                        saw_for = true;
+                        in_second = true;
+                        j += 1;
+                        continue;
+                    }
+                    "where" => {
+                        while j < hi && !is_punct(toks, j, '{') {
+                            j += 1;
+                        }
+                        break;
+                    }
+                    "dyn" | "mut" | "const" => {}
+                    w => {
+                        if in_second {
+                            segs2.push(Some(w.to_string()));
+                        } else {
+                            segs1.push(Some(w.to_string()));
+                        }
+                    }
+                }
+            } else {
+                prev = None;
+            }
+            j += 1;
+        }
+        if j >= hi || !is_punct(toks, j, '{') {
+            return (None, j + 1);
+        }
+        let close = match_close(toks, j, '{', '}');
+        let non_path1 = segs1.iter().any(Option::is_none);
+        let non_path2 = segs2.iter().any(Option::is_none);
+        let (trait_path, type_segs): (Option<Vec<String>>, Vec<String>) = if saw_for {
+            let tp: Vec<String> = segs1.iter().flatten().cloned().collect();
+            (
+                if tp.is_empty() { None } else { Some(tp) },
+                segs2.iter().flatten().cloned().collect(),
+            )
+        } else {
+            (None, segs1.iter().flatten().cloned().collect())
+        };
+        let mut type_name = type_segs.last().cloned();
+        if non_path1 || non_path2 || (saw_for && segs2.is_empty()) || (!saw_for && segs1.is_empty())
+        {
+            type_name = None;
+        }
+        let mut idef = ImplDef {
+            type_name,
+            trait_path,
+            methods: BTreeMap::new(),
+            assoc: BTreeSet::new(),
+            line: toks[i].line,
+            cfg,
+            generics,
+            body: (j + 1, close.saturating_sub(1)),
+        };
+        // Parse methods + assoc items in the body.
+        let body_end = close.saturating_sub(1);
+        let mut k = j + 1;
+        let mut vis = String::new();
+        let mut mcfg = false;
+        while k < body_end {
+            let t = &toks[k];
+            if t.kind == TokKind::Punct && t.text == "#" && k + 1 < close && is_punct(toks, k + 1, '[')
+            {
+                let (nk, idents) = skip_attr(toks, k);
+                if idents.iter().any(|x| x == "cfg") {
+                    mcfg = true;
+                }
+                k = nk;
+                continue;
+            }
+            if t.kind == TokKind::Ident {
+                match t.text.as_str() {
+                    "pub" => {
+                        vis = "pub".to_string();
+                        k += 1;
+                        if k < close && is_punct(toks, k, '(') {
+                            k = match_close(toks, k, '(', ')');
+                        }
+                        continue;
+                    }
+                    "unsafe" | "async" | "default" | "extern" => {
+                        k += 1;
+                        continue;
+                    }
+                    "fn" => {
+                        let (fd, k2) = self.parse_fn(k, body_end, &vis, mcfg);
+                        if let Some(fd) = fd {
+                            idef.methods.entry(fd.name.clone()).or_default().push(fd);
+                        }
+                        k = k2;
+                        vis.clear();
+                        mcfg = false;
+                        continue;
+                    }
+                    "const" | "type" => {
+                        if let Some(a) = ident_at(toks, k + 1).filter(|_| k + 1 < close) {
+                            idef.assoc.insert(a.to_string());
+                        }
+                        let mut depth = 0i32;
+                        while k < body_end {
+                            if toks[k].kind == TokKind::Punct {
+                                match toks[k].text.as_str() {
+                                    "(" | "[" | "{" => depth += 1,
+                                    ")" | "]" | "}" => depth -= 1,
+                                    ";" if depth == 0 => {
+                                        k += 1;
+                                        break;
+                                    }
+                                    _ => {}
+                                }
+                            }
+                            k += 1;
+                        }
+                        vis.clear();
+                        mcfg = false;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            k += 1;
+            vis.clear();
+            mcfg = false;
+        }
+        (Some(idef), close)
+    }
+
+    /// Parse the tokens of one `use` declaration (between `use` and `;`).
+    fn parse_use(&self, lo: usize, hi: usize, module: &mut ModItems, line: u32, cfg: bool) {
+        let prefix: Vec<String> = Vec::new();
+        self.parse_use_tree(lo, hi, module, line, cfg, &prefix);
+    }
+
+    /// Recursive `use`-tree descent:
+    /// `path := seg (:: seg)* [:: {tree, …}] [:: *] [as alias]`.
+    /// Returns the index after the parsed subtree.
+    fn parse_use_tree(
+        &self,
+        mut j: usize,
+        hi: usize,
+        module: &mut ModItems,
+        line: u32,
+        cfg: bool,
+        prefix: &[String],
+    ) -> usize {
+        let toks = self.toks;
+        let mut segs: Vec<String> = prefix.to_vec();
+        while j < hi {
+            let t = &toks[j];
+            if t.kind == TokKind::Ident {
+                if t.text == "as" {
+                    let aliasable = j + 1 < hi
+                        && (toks[j + 1].kind == TokKind::Ident || toks[j + 1].text == "_");
+                    if aliasable {
+                        module.uses.push(UseDef {
+                            alias: Some(toks[j + 1].text.clone()),
+                            path: segs,
+                            line,
+                            is_glob: false,
+                            cfg,
+                        });
+                        return j + 2;
+                    }
+                    return j + 1;
+                }
+                segs.push(t.text.clone());
+                j += 1;
+                continue;
+            }
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    ":" => {
+                        j += 1;
+                        continue;
+                    }
+                    "*" => {
+                        module.uses.push(UseDef {
+                            alias: None,
+                            path: segs,
+                            line,
+                            is_glob: true,
+                            cfg,
+                        });
+                        return j + 1;
+                    }
+                    "{" => {
+                        let close = match_close(toks, j, '{', '}');
+                        let inner_end = close.saturating_sub(1);
+                        let mut k = j + 1;
+                        while k < inner_end {
+                            if is_punct(toks, k, ',') {
+                                k += 1;
+                                continue;
+                            }
+                            k = self.parse_use_tree(k, inner_end, module, line, cfg, &segs);
+                            while k < inner_end && is_punct(toks, k, ',') {
+                                k += 1;
+                            }
+                        }
+                        return close;
+                    }
+                    _ => break,
+                }
+            }
+            break;
+        }
+        if segs.len() > prefix.len() {
+            // A `self` leaf inside a brace group imports the module itself.
+            if segs.last().map(String::as_str) == Some("self") && segs.len() > 1 {
+                let alias = segs[segs.len() - 2].clone();
+                segs.pop();
+                module.uses.push(UseDef { alias: Some(alias), path: segs, line, is_glob: false, cfg });
+            } else {
+                let alias = segs.last().cloned();
+                module.uses.push(UseDef { alias, path: segs, line, is_glob: false, cfg });
+            }
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer;
+
+    fn parse(src: &str) -> FileParse {
+        let out = lexer::lex(src);
+        parse_file(out.toks, out.comments, out.n_lines)
+    }
+
+    #[test]
+    fn fn_signatures_and_self_kinds() {
+        let fp = parse(
+            "pub fn free(a: u32, b: &str) -> u32 { a }\n\
+             struct S { x: u32 }\n\
+             impl S {\n    fn m(&mut self, k: u32) {}\n    fn assoc() -> S { S { x: 0 } }\n}\n",
+        );
+        let root = fp.root.unwrap();
+        let free = &root.fns["free"][0];
+        assert_eq!(free.arity, 2);
+        assert_eq!(free.vis, "pub");
+        assert!(free.self_kind.is_none());
+        let imp = &root.impls[0];
+        assert_eq!(imp.type_name.as_deref(), Some("S"));
+        assert_eq!(imp.methods["m"][0].arity, 2);
+        assert_eq!(imp.methods["m"][0].self_kind, Some(SelfKind::RefMut));
+        assert!(imp.methods["assoc"][0].self_kind.is_none());
+    }
+
+    #[test]
+    fn struct_enum_shapes() {
+        let fp = parse(
+            "pub struct Named { pub a: u32, b: Vec<(u32, u32)> }\n\
+             struct Tup(u32, String);\nstruct Unit;\n\
+             enum E { A, B(u32, u32), C { x: f64 } }\n",
+        );
+        let root = fp.root.unwrap();
+        let named = &root.structs["Named"][0];
+        assert_eq!(named.kind, AdtKind::Named);
+        assert_eq!(named.fields, vec!["a", "b"]);
+        assert_eq!(root.structs["Tup"][0].tuple_arity, 2);
+        assert_eq!(root.structs["Unit"][0].kind, AdtKind::Unit);
+        let e = &root.enums["E"][0];
+        assert_eq!(e.variants.len(), 3);
+        assert_eq!(e.variant("B").unwrap().tuple_arity, 2);
+        assert_eq!(e.variant("C").unwrap().fields, vec!["x"]);
+    }
+
+    #[test]
+    fn use_trees_globs_and_renames() {
+        let fp = parse(
+            "use crate::sim::{Event, world::World as W};\nuse std::collections::*;\n\
+             use super::config::{self, ExperimentConfig};\n",
+        );
+        let root = fp.root.unwrap();
+        let aliases: Vec<_> =
+            root.uses.iter().filter_map(|u| u.alias.as_deref()).collect();
+        assert!(aliases.contains(&"Event"));
+        assert!(aliases.contains(&"W"));
+        assert!(aliases.contains(&"config"));
+        assert!(aliases.contains(&"ExperimentConfig"));
+        assert!(root.uses.iter().any(|u| u.is_glob && u.path == ["std", "collections"]));
+        let w = root.uses.iter().find(|u| u.alias.as_deref() == Some("W")).unwrap();
+        assert_eq!(w.path, ["crate", "sim", "world", "World"]);
+    }
+
+    #[test]
+    fn trait_and_impl_bodies() {
+        let fp = parse(
+            "trait T {\n    fn req(&self, x: u32) -> u32;\n    fn prov(&self) -> u32 { 0 }\n    const K: u32;\n}\n\
+             struct S;\nimpl T for S {\n    fn req(&self, x: u32) -> u32 { x }\n    const K: u32 = 1;\n}\n",
+        );
+        let root = fp.root.unwrap();
+        let t = &root.traits["T"][0];
+        assert!(t.required.contains_key("req"));
+        assert!(t.provided.contains_key("prov"));
+        assert!(t.assoc.contains("K"));
+        let imp = &root.impls[0];
+        assert_eq!(imp.trait_path.as_deref(), Some(&["T".to_string()][..]));
+        assert!(imp.assoc.contains("K"));
+    }
+
+    #[test]
+    fn inline_mods_and_macro_spans() {
+        let fp = parse(
+            "mod inner { pub fn f() {} }\n#[cfg(test)]\nmod tests { fn t() {} }\n\
+             macro_rules! m { () => { fn ghost() {} }; }\n",
+        );
+        let root = fp.root.unwrap();
+        assert!(root.inline_mods["inner"].fns.contains_key("f"));
+        assert!(root.inline_mods["tests"].test_only);
+        assert!(root.macro_items);
+        assert_eq!(fp.macro_spans.len(), 1);
+    }
+}

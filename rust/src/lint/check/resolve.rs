@@ -1,0 +1,851 @@
+//! Crate module tree + path resolver for `pallas-check`.
+//!
+//! The tree builder roots at `lib.rs` (falling back to `main.rs`),
+//! follows `mod x;` declarations through `x.rs` / `x/mod.rs`, and
+//! attaches `main.rs` and `bin/*.rs` as standalone bin-crate roots
+//! whose `crate::` resolves to themselves.
+//!
+//! Resolution is three-valued. A path is **external** (std / vendored /
+//! prelude heads — never checkable), **unknown** (passes through a
+//! macro-tainted module, a type alias, or an *open* type — skip,
+//! false-negative direction), or it resolves to a concrete item /
+//! is definitively **missing** (a finding). Only the third state ever
+//! produces a diagnostic, which is what keeps the pass zero-false-
+//! positive on code rustc accepts.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::parse::{parse_file, EnumDef, FileParse, FnDef, ImplDef, ModItems, StructDef, TraitDef};
+use crate::lint::lexer;
+
+/// Crates resolvable outside this source tree: paths headed here are
+/// external, never reported.
+pub(crate) const EXTERNAL_CRATES: [&str; 6] =
+    ["std", "core", "alloc", "anyhow", "proc_macro", "xla"];
+
+/// Names that resolve via the std prelude / primitives; a path headed
+/// by one of these is external.
+pub(crate) const PRELUDE: [&str; 97] = [
+    "Vec", "String", "Box", "Option", "Some", "None", "Result", "Ok", "Err", "Rc", "Arc",
+    "RefCell", "Cell", "Mutex", "RwLock", "HashMap", "HashSet", "BTreeMap", "BTreeSet",
+    "VecDeque", "BinaryHeap", "Cow", "PathBuf", "Path", "Ordering", "Duration", "Instant",
+    "SystemTime", "ExitCode", "Iterator", "IntoIterator", "Default", "Clone", "Copy", "Debug",
+    "Display", "From", "Into", "TryFrom", "TryInto", "FromStr", "ToString", "AsRef", "AsMut",
+    "Drop", "Fn", "FnMut", "FnOnce", "Send", "Sync", "Sized", "Eq", "PartialEq", "Ord",
+    "PartialOrd", "Hash", "Hasher", "Extend", "DoubleEndedIterator", "ExactSizeIterator",
+    "Reverse", "Wrapping", "Saturating", "PhantomData", "ManuallyDrop", "MaybeUninit",
+    "NonZeroU32", "NonZeroU64", "NonZeroUsize", "IpAddr", "SocketAddr", "TcpListener",
+    "TcpStream", "ThreadId", "JoinHandle", "bool", "char", "str", "u8", "u16", "u32", "u64",
+    "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize", "f32", "f64", "drop", "println",
+    "print", "eprintln", "eprint",
+];
+
+// ("panic", "assert", "min", "max", "abs" round out the prelude set —
+// they are macro/method names more than paths, kept separate so the
+// array above stays recognizably "types + macros you'd import".)
+pub(crate) const PRELUDE_EXTRA: [&str; 5] = ["panic", "assert", "min", "max", "abs"];
+
+pub(crate) fn is_prelude(name: &str) -> bool {
+    PRELUDE.contains(&name) || PRELUDE_EXTRA.contains(&name)
+}
+
+/// Method sets of std traits this crate implements; a type whose trait
+/// impls all map through this table (or local traits) has a *closed*
+/// method universe.
+pub(crate) const STD_TRAIT_METHODS: [(&str, &[&str]); 18] = [
+    ("Default", &["default"]),
+    ("Clone", &["clone", "clone_from"]),
+    ("Copy", &[]),
+    ("Debug", &["fmt"]),
+    ("Display", &["fmt"]),
+    ("Error", &["source", "description", "cause"]),
+    ("From", &["from"]),
+    ("Into", &["into"]),
+    ("TryFrom", &["try_from"]),
+    ("FromStr", &["from_str"]),
+    ("Eq", &[]),
+    ("PartialEq", &["eq", "ne"]),
+    ("Ord", &["cmp", "max", "min", "clamp"]),
+    ("PartialOrd", &["partial_cmp", "lt", "le", "gt", "ge"]),
+    ("Hash", &["hash", "hash_slice"]),
+    ("Drop", &["drop"]),
+    ("Send", &[]),
+    ("Sync", &[]),
+];
+
+/// Derives that add a known method set.
+pub(crate) const DERIVE_METHODS: [(&str, &[&str]); 9] = [
+    ("Default", &["default"]),
+    ("Clone", &["clone", "clone_from"]),
+    ("Copy", &[]),
+    ("Debug", &["fmt"]),
+    ("PartialEq", &["eq", "ne"]),
+    ("Eq", &[]),
+    ("Ord", &["cmp", "max", "min", "clamp"]),
+    ("PartialOrd", &["partial_cmp", "lt", "le", "gt", "ge"]),
+    ("Hash", &["hash", "hash_slice"]),
+];
+
+pub(crate) fn std_trait_methods(name: &str) -> Option<&'static [&'static str]> {
+    STD_TRAIT_METHODS.iter().find(|(n, _)| *n == name).map(|(_, m)| *m)
+}
+
+pub(crate) fn derive_methods(name: &str) -> Option<&'static [&'static str]> {
+    DERIVE_METHODS.iter().find(|(n, _)| *n == name).map(|(_, m)| *m)
+}
+
+/// A node in the crate module tree. Nodes live in [`Crate::modules`]
+/// and reference each other by index, so the whole tree is one arena
+/// with no interior pointers.
+#[derive(Debug)]
+pub(crate) struct Module {
+    /// Path segments from the crate root (bin roots get a synthetic
+    /// `bin?<file>` head so rules can recognize them).
+    pub path: Vec<String>,
+    pub items: ModItems,
+    /// Defining file (rel path, `/`-separated).
+    pub file: String,
+    /// name -> module index.
+    pub children: std::collections::BTreeMap<String, usize>,
+    pub parent: Option<usize>,
+}
+
+impl Module {
+    pub fn display_path(&self) -> String {
+        if self.path.is_empty() {
+            "crate root".to_string()
+        } else {
+            self.path.join("::")
+        }
+    }
+
+    pub fn is_bin_root_tree(&self) -> bool {
+        self.path.first().is_some_and(|s| s.starts_with("bin?"))
+    }
+}
+
+#[derive(Debug, Default)]
+pub(crate) struct Crate {
+    pub modules: Vec<Module>,
+    /// Lib crate root (or `main.rs` when no `lib.rs` exists).
+    pub root: Option<usize>,
+    /// Standalone bin-root modules (`main.rs`, `bin/*.rs`).
+    pub bins: Vec<usize>,
+    /// rel path -> parse result (root [`ModItems`] taken on attach).
+    pub files: std::collections::BTreeMap<String, FileParse>,
+    /// rel path -> source text (kept for suppression line scans).
+    pub sources: std::collections::BTreeMap<String, String>,
+    /// Diagnostics raised during tree construction
+    /// (file, line, rule, message).
+    pub diags: Vec<(String, u32, &'static str, String)>,
+}
+
+impl Crate {
+    /// Every module, depth-first from the lib root then each bin root.
+    pub fn all_modules(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        fn walk(c: &Crate, m: usize, out: &mut Vec<usize>) {
+            out.push(m);
+            for &child in c.modules[m].children.values() {
+                walk(c, child, out);
+            }
+        }
+        if let Some(r) = self.root {
+            walk(self, r, &mut out);
+        }
+        for &b in &self.bins {
+            walk(self, b, &mut out);
+        }
+        out
+    }
+
+    pub fn module(&self, idx: usize) -> &Module {
+        &self.modules[idx]
+    }
+}
+
+/// Read + parse one file, caching in `crate.files`. Returns whether
+/// the file exists (its root items stay in the cache until attached).
+fn parse_rel(krate: &mut Crate, src_root: &Path, rel: &str) -> bool {
+    if krate.files.contains_key(rel) {
+        return true;
+    }
+    let path = src_root.join(rel);
+    let Ok(src) = std::fs::read_to_string(&path) else {
+        return false;
+    };
+    let out = lexer::lex(&src);
+    let fp = parse_file(out.toks, out.comments, out.n_lines);
+    krate.files.insert(rel.to_string(), fp);
+    krate.sources.insert(rel.to_string(), src);
+    true
+}
+
+/// Attach `items` as the module at `path`, recursing into inline mods
+/// and `mod x;` files. Returns the new module's arena index.
+fn attach(
+    krate: &mut Crate,
+    src_root: &Path,
+    mut items: ModItems,
+    path: Vec<String>,
+    file_rel: &str,
+    dir_rel: &str,
+) -> usize {
+    items.file = file_rel.to_string();
+    let inline = std::mem::take(&mut items.inline_mods);
+    let mod_decls = items.mod_decls.clone();
+    let idx = krate.modules.len();
+    krate.modules.push(Module {
+        path: path.clone(),
+        items,
+        file: file_rel.to_string(),
+        children: std::collections::BTreeMap::new(),
+        parent: None,
+    });
+    for (name, mut inner) in inline {
+        inner.test_only = inner.test_only || krate.modules[idx].items.test_only;
+        let mut child_path = path.clone();
+        child_path.push(name.clone());
+        let child = attach(krate, src_root, inner, child_path, file_rel, dir_rel);
+        krate.modules[child].parent = Some(idx);
+        krate.modules[idx].children.insert(name, child);
+    }
+    for d in mod_decls {
+        let cand1 = if dir_rel.is_empty() {
+            format!("{}.rs", d.name)
+        } else {
+            format!("{dir_rel}/{}.rs", d.name)
+        };
+        let cand2 = if dir_rel.is_empty() {
+            format!("{}/mod.rs", d.name)
+        } else {
+            format!("{dir_rel}/{}/mod.rs", d.name)
+        };
+        let sub_dir =
+            if dir_rel.is_empty() { d.name.clone() } else { format!("{dir_rel}/{}", d.name) };
+        let sub_rel = if parse_rel(krate, src_root, &cand1) {
+            cand1.clone()
+        } else if parse_rel(krate, src_root, &cand2) {
+            cand2.clone()
+        } else {
+            if !d.cfg {
+                krate.diags.push((
+                    file_rel.to_string(),
+                    d.line,
+                    "check-path-resolution",
+                    format!("`mod {};` resolves to no file ({cand1} or {cand2})", d.name),
+                ));
+            }
+            continue;
+        };
+        let sub_items = krate
+            .files
+            .get_mut(&sub_rel)
+            .and_then(|fp| fp.root.take())
+            .unwrap_or_default();
+        let mut child_path = path.clone();
+        child_path.push(d.name.clone());
+        let child = attach(krate, src_root, sub_items, child_path, &sub_rel, &sub_dir);
+        krate.modules[child].parent = Some(idx);
+        krate.modules[idx].children.insert(d.name, child);
+    }
+    idx
+}
+
+/// Build the crate module tree from `src_root` (the crate's `src/`
+/// directory).
+pub(crate) fn build_crate(src_root: &Path) -> Crate {
+    let mut krate = Crate::default();
+    if parse_rel(&mut krate, src_root, "lib.rs") {
+        let items = krate.files.get_mut("lib.rs").and_then(|f| f.root.take()).unwrap_or_default();
+        let r = attach(&mut krate, src_root, items, Vec::new(), "lib.rs", "");
+        krate.root = Some(r);
+    }
+    if parse_rel(&mut krate, src_root, "main.rs") {
+        let items = krate.files.get_mut("main.rs").and_then(|f| f.root.take()).unwrap_or_default();
+        if krate.root.is_none() {
+            let r = attach(&mut krate, src_root, items, Vec::new(), "main.rs", "");
+            krate.root = Some(r);
+        } else {
+            let b = attach(
+                &mut krate,
+                src_root,
+                items,
+                vec!["bin?main".to_string()],
+                "main.rs",
+                "",
+            );
+            krate.bins.push(b);
+        }
+    }
+    // bin/*.rs as standalone bin roots.
+    let bin_dir = src_root.join("bin");
+    if bin_dir.is_dir() {
+        let mut names: Vec<String> = match std::fs::read_dir(&bin_dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.ends_with(".rs"))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        names.sort();
+        for name in names {
+            let rel = format!("bin/{name}");
+            if parse_rel(&mut krate, src_root, &rel) {
+                let items =
+                    krate.files.get_mut(&rel).and_then(|f| f.root.take()).unwrap_or_default();
+                let b = attach(
+                    &mut krate,
+                    src_root,
+                    items,
+                    vec![format!("bin?{name}")],
+                    &rel,
+                    "bin",
+                );
+                krate.bins.push(b);
+            }
+        }
+    }
+    krate
+}
+
+// ------------------------------------------------------------ resolution
+
+/// Where the signature(s) behind a `Res::Fn` live, so rules can fetch
+/// `FnDef`s without the resolver holding borrows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum FnRef {
+    /// `module.items.fns[name]`.
+    ModFn,
+    /// `module.items.impls[idx].methods[name]`.
+    ImplMethod(usize),
+    /// Required/provided method of `module.items.traits[trait_name]`.
+    TraitMethod(String),
+    /// Derive- or std-trait-provided: no local signature to check.
+    Synthetic,
+}
+
+/// Resolution result. `module` fields are arena indices into
+/// [`Crate::modules`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum Res {
+    /// std / vendored / prelude — not checkable, never reported.
+    External,
+    /// Macro-tainted scope, type alias, open type — cannot say.
+    Unknown,
+    /// Definitely does not resolve. `variant` marks an enum-member
+    /// miss (routed to `check-enum-variants`).
+    Missing { module: Option<usize>, name: String, variant: bool },
+    Module(usize),
+    Fn { module: usize, name: String, fn_ref: FnRef },
+    Struct { module: usize, name: String },
+    Enum { module: usize, name: String },
+    Trait { module: usize, name: String },
+    Const { module: usize, name: String },
+    Type { module: usize, name: String },
+    Variant { module: usize, enum_name: String, name: String },
+    Assoc { module: usize, name: String },
+}
+
+impl Res {
+    pub fn is_skip(&self) -> bool {
+        matches!(self, Res::External | Res::Unknown)
+    }
+}
+
+type Visited = BTreeSet<(usize, String, bool)>;
+
+pub(crate) struct Resolver<'c> {
+    pub krate: &'c Crate,
+    /// type name -> [(module idx, impl idx within that module)].
+    impls_by_type: std::collections::BTreeMap<&'c str, Vec<(usize, usize)>>,
+}
+
+impl<'c> Resolver<'c> {
+    pub fn new(krate: &'c Crate) -> Self {
+        let mut impls_by_type: std::collections::BTreeMap<&'c str, Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for m in krate.all_modules() {
+            for (i, idef) in krate.modules[m].items.impls.iter().enumerate() {
+                if let Some(t) = &idef.type_name {
+                    impls_by_type.entry(t.as_str()).or_default().push((m, i));
+                }
+            }
+        }
+        Resolver { krate, impls_by_type }
+    }
+
+    fn items(&self, m: usize) -> &'c ModItems {
+        &self.krate.modules[m].items
+    }
+
+    pub fn struct_def(&self, m: usize, name: &str) -> Option<&'c StructDef> {
+        self.items(m).structs.get(name).and_then(|v| v.first())
+    }
+
+    pub fn struct_defs(&self, m: usize, name: &str) -> &'c [StructDef] {
+        self.items(m).structs.get(name).map_or(&[], Vec::as_slice)
+    }
+
+    pub fn enum_def(&self, m: usize, name: &str) -> Option<&'c EnumDef> {
+        self.items(m).enums.get(name).and_then(|v| v.first())
+    }
+
+    pub fn trait_defs(&self, m: usize, name: &str) -> &'c [TraitDef] {
+        self.items(m).traits.get(name).map_or(&[], Vec::as_slice)
+    }
+
+    pub fn impls_for(&self, type_name: &str) -> &[(usize, usize)] {
+        self.impls_by_type.get(type_name).map_or(&[], Vec::as_slice)
+    }
+
+    fn impl_at(&self, site: (usize, usize)) -> &'c ImplDef {
+        &self.krate.modules[site.0].items.impls[site.1]
+    }
+
+    /// Find `name` among items defined directly in module `m`
+    /// (no imports).
+    pub fn lookup_local(&self, m: usize, name: &str) -> Option<Res> {
+        let module = &self.krate.modules[m];
+        if let Some(&child) = module.children.get(name) {
+            return Some(Res::Module(child));
+        }
+        let it = &module.items;
+        let owned = name.to_string();
+        if it.structs.contains_key(name) {
+            return Some(Res::Struct { module: m, name: owned });
+        }
+        if it.enums.contains_key(name) {
+            return Some(Res::Enum { module: m, name: owned });
+        }
+        if it.traits.contains_key(name) {
+            return Some(Res::Trait { module: m, name: owned });
+        }
+        if it.fns.contains_key(name) {
+            return Some(Res::Fn { module: m, name: owned, fn_ref: FnRef::ModFn });
+        }
+        if it.consts.contains_key(name) {
+            return Some(Res::Const { module: m, name: owned });
+        }
+        if it.types.contains_key(name) {
+            return Some(Res::Type { module: m, name: owned });
+        }
+        None
+    }
+
+    /// Resolve `name` in module `m`'s scope: local items, explicit
+    /// imports, then globs. `None` means "not found here" (which is
+    /// *not* the same as [`Res::Missing`]).
+    pub fn resolve_in_module(
+        &self,
+        m: usize,
+        name: &str,
+        visited: &mut Visited,
+        imports_ok: bool,
+    ) -> Option<Res> {
+        let key = (m, name.to_string(), imports_ok);
+        if visited.contains(&key) {
+            return None;
+        }
+        visited.insert(key);
+        if let Some(r) = self.lookup_local(m, name) {
+            return Some(r);
+        }
+        let it = self.items(m);
+        if !imports_ok {
+            if it.macro_items {
+                return Some(Res::Unknown);
+            }
+            return None;
+        }
+        // Explicit imports.
+        for u in &it.uses {
+            if !u.is_glob && u.alias.as_deref() == Some(name) {
+                return self.resolve_path_in(m, &u.path, visited);
+            }
+        }
+        // Glob imports: try each target.
+        for u in &it.uses {
+            if !u.is_glob {
+                continue;
+            }
+            let Some(tgt) = self.resolve_path_in(m, &u.path, visited) else {
+                continue;
+            };
+            match tgt {
+                Res::Module(tm) => {
+                    if let Some(r) = self.resolve_in_module(tm, name, visited, true) {
+                        if !matches!(r, Res::Missing { .. }) {
+                            return Some(r);
+                        }
+                    }
+                }
+                Res::Enum { module, name: ename } => {
+                    // `use Enum::*` — variants become bare names.
+                    if let Some(ed) = self.enum_def(module, &ename) {
+                        if ed.variant(name).is_some() {
+                            return Some(Res::Variant {
+                                module,
+                                enum_name: ename,
+                                name: name.to_string(),
+                            });
+                        }
+                    }
+                }
+                Res::External | Res::Unknown => {
+                    // Glob from an external module: anything may be in
+                    // scope.
+                    return Some(Res::Unknown);
+                }
+                _ => {}
+            }
+        }
+        if it.macro_items {
+            return Some(Res::Unknown);
+        }
+        None
+    }
+
+    /// Resolve a multi-segment path from module `m`'s scope.
+    /// `None` means "cannot say" (rules skip).
+    pub fn resolve_path(&self, m: usize, segs: &[String]) -> Option<Res> {
+        let mut visited = Visited::new();
+        self.resolve_path_in(m, segs, &mut visited)
+    }
+
+    /// Resolve a bare name in module `m`'s scope with a fresh visited
+    /// set (convenience for rules that start from a type name).
+    pub fn resolve_name(&self, m: usize, name: &str) -> Option<Res> {
+        let mut visited = Visited::new();
+        self.resolve_in_module(m, name, &mut visited, true)
+    }
+
+    fn resolve_path_in(&self, m: usize, segs: &[String], visited: &mut Visited) -> Option<Res> {
+        if segs.is_empty() {
+            return None;
+        }
+        let first = segs[0].as_str();
+        let mut i = 1usize;
+        let mut cur: Res;
+        match first {
+            "crate" => cur = Res::Module(self.root_for(m)),
+            "cloudcoaster" => match self.krate.root {
+                Some(r) => cur = Res::Module(r),
+                None => return Some(Res::External),
+            },
+            "self" => cur = Res::Module(m),
+            "super" => {
+                let mut up = self.krate.modules[m].parent;
+                while i < segs.len() && segs[i] == "super" {
+                    up = up.and_then(|u| self.krate.modules[u].parent);
+                    i += 1;
+                }
+                match up {
+                    Some(u) => cur = Res::Module(u),
+                    None => return Some(Res::Unknown),
+                }
+            }
+            "Self" => return Some(Res::Unknown), // substituted by the walker
+            _ if EXTERNAL_CRATES.contains(&first) || is_prelude(first) => {
+                return Some(Res::External);
+            }
+            _ => {
+                cur = self.resolve_in_module(m, first, visited, true)?;
+            }
+        }
+        // Walk the remaining segments.
+        while i < segs.len() {
+            if cur.is_skip() {
+                return Some(cur);
+            }
+            let name = segs[i].as_str();
+            cur = match cur {
+                Res::Module(mm) => {
+                    match self.resolve_in_module(mm, name, visited, true) {
+                        Some(r) => r,
+                        None => {
+                            if self.items(mm).macro_items {
+                                return Some(Res::Unknown);
+                            }
+                            return Some(Res::Missing {
+                                module: Some(mm),
+                                name: name.to_string(),
+                                variant: false,
+                            });
+                        }
+                    }
+                }
+                Res::Enum { module, name: ename } => {
+                    let ed = self.enum_def(module, &ename);
+                    if ed.is_some_and(|e| e.variant(name).is_some()) {
+                        Res::Variant { module, enum_name: ename, name: name.to_string() }
+                    } else {
+                        let as_type =
+                            Res::Enum { module, name: ename.clone() };
+                        if let Some(r) = self.lookup_type_member(&as_type, name) {
+                            r
+                        } else if self.type_is_closed(&as_type) {
+                            return Some(Res::Missing {
+                                module: Some(module),
+                                name: format!("{ename}::{name}"),
+                                variant: true,
+                            });
+                        } else {
+                            return Some(Res::Unknown);
+                        }
+                    }
+                }
+                Res::Type { .. } => return Some(Res::Unknown), // can't see through aliases
+                Res::Trait { module, name: tname } => {
+                    let member = self.trait_defs(module, &tname).first().is_some_and(|td| {
+                        td.required.contains_key(name)
+                            || td.provided.contains_key(name)
+                            || td.assoc.contains(name)
+                    });
+                    if member {
+                        Res::Assoc { module, name: name.to_string() }
+                    } else {
+                        return Some(Res::Missing {
+                            module: Some(module),
+                            name: format!("{tname}::{name}"),
+                            variant: false,
+                        });
+                    }
+                }
+                Res::Struct { module, name: sname } => {
+                    let as_type = Res::Struct { module, name: sname.clone() };
+                    if let Some(r) = self.lookup_type_member(&as_type, name) {
+                        r
+                    } else if self.type_is_closed(&as_type) {
+                        return Some(Res::Missing {
+                            module: Some(module),
+                            name: format!("{sname}::{name}"),
+                            variant: false,
+                        });
+                    } else {
+                        return Some(Res::Unknown);
+                    }
+                }
+                // fn::x, const::x — nonsense, but could be a
+                // module/value name clash; don't guess.
+                _ => return Some(Res::Unknown),
+            };
+            i += 1;
+        }
+        Some(cur)
+    }
+
+    fn root_for(&self, m: usize) -> usize {
+        let mut cur = m;
+        while let Some(p) = self.krate.modules[cur].parent {
+            cur = p;
+        }
+        // Bin roots resolve `crate::` to themselves.
+        cur
+    }
+
+    // -- type member lookup ----------------------------------------------
+
+    fn type_def_parts(&self, type_res: &Res) -> Option<(usize, &str)> {
+        match type_res {
+            Res::Struct { module, name } | Res::Enum { module, name } => Some((*module, name)),
+            _ => None,
+        }
+    }
+
+    fn type_derives(&self, type_res: &Res) -> Option<&'c BTreeSet<String>> {
+        let (m, name) = self.type_def_parts(type_res)?;
+        match type_res {
+            Res::Struct { .. } => self.struct_def(m, name).map(|s| &s.derives),
+            Res::Enum { .. } => self.enum_def(m, name).map(|e| &e.derives),
+            _ => None,
+        }
+    }
+
+    /// Find `name` as a method/assoc item of struct/enum `type_res`.
+    pub fn lookup_type_member(&self, type_res: &Res, name: &str) -> Option<Res> {
+        let (_, tname) = self.type_def_parts(type_res)?;
+        let tname = tname.to_string();
+        for &site in self.impls_for(&tname) {
+            let (m, ii) = site;
+            let idef = self.impl_at(site);
+            if idef.methods.contains_key(name) {
+                return Some(Res::Fn {
+                    module: m,
+                    name: name.to_string(),
+                    fn_ref: FnRef::ImplMethod(ii),
+                });
+            }
+            if idef.assoc.contains(name) {
+                return Some(Res::Assoc { module: m, name: name.to_string() });
+            }
+            // Provided/required methods of the impl'd local trait.
+            if let Some(tp) = &idef.trait_path {
+                if let Some(Res::Trait { module: trm, name: trname }) = self.resolve_path(m, tp) {
+                    if let Some(td) = self.trait_defs(trm, &trname).first() {
+                        if td.provided.contains_key(name) || td.required.contains_key(name) {
+                            // A required-but-unimplemented method still
+                            // *resolves*; the trait-impls rule flags the
+                            // impl itself.
+                            return Some(Res::Fn {
+                                module: trm,
+                                name: name.to_string(),
+                                fn_ref: FnRef::TraitMethod(trname),
+                            });
+                        }
+                        if td.assoc.contains(name) {
+                            return Some(Res::Assoc { module: trm, name: name.to_string() });
+                        }
+                    }
+                }
+            }
+        }
+        // Derive-provided methods.
+        if let Some(derives) = self.type_derives(type_res) {
+            for dv in derives {
+                if derive_methods(dv).is_some_and(|ms| ms.contains(&name)) {
+                    let (m, _) = self.type_def_parts(type_res)?;
+                    return Some(Res::Fn {
+                        module: m,
+                        name: name.to_string(),
+                        fn_ref: FnRef::Synthetic,
+                    });
+                }
+            }
+        }
+        // Std-trait impls with known method sets.
+        for &site in self.impls_for(&tname) {
+            let idef = self.impl_at(site);
+            if let Some(tp) = &idef.trait_path {
+                if let Some(last) = tp.last() {
+                    if std_trait_methods(last).is_some_and(|ms| ms.contains(&name)) {
+                        return Some(Res::Fn {
+                            module: site.0,
+                            name: name.to_string(),
+                            fn_ref: FnRef::Synthetic,
+                        });
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// True when every method of the type is knowable: inherent impls,
+    /// local-trait impls, known-std-trait impls, known derives — and
+    /// the defining module is not macro-tainted.
+    pub fn type_is_closed(&self, type_res: &Res) -> bool {
+        let Some((m, tname)) = self.type_def_parts(type_res) else {
+            return false;
+        };
+        if self.items(m).macro_items {
+            return false;
+        }
+        if let Some(derives) = self.type_derives(type_res) {
+            for dv in derives {
+                if derive_methods(dv).is_none() {
+                    return false;
+                }
+            }
+        }
+        let tname = tname.to_string();
+        for &site in self.impls_for(&tname) {
+            let idef = self.impl_at(site);
+            if let Some(tp) = &idef.trait_path {
+                let last = tp.last().map(String::as_str).unwrap_or("");
+                if matches!(self.resolve_path(site.0, tp), Some(Res::Trait { .. })) {
+                    continue;
+                }
+                if std_trait_methods(last).is_some() {
+                    continue;
+                }
+                return false;
+            }
+        }
+        true
+    }
+
+    /// All known methods of a type: inherent + local-trait
+    /// (name -> candidate signatures, cfg twins included).
+    pub fn type_method_candidates(
+        &self,
+        type_name: &str,
+    ) -> std::collections::BTreeMap<&'c str, Vec<&'c FnDef>> {
+        let mut out: std::collections::BTreeMap<&'c str, Vec<&'c FnDef>> =
+            std::collections::BTreeMap::new();
+        for &site in self.impls_for(type_name) {
+            let idef = self.impl_at(site);
+            for (name, fds) in &idef.methods {
+                out.entry(name.as_str()).or_default().extend(fds.iter());
+            }
+            if let Some(tp) = &idef.trait_path {
+                if let Some(Res::Trait { module: trm, name: trname }) =
+                    self.resolve_path(site.0, tp)
+                {
+                    if let Some(td) = self.trait_defs(trm, &trname).first() {
+                        for (name, fd) in td.provided.iter().chain(td.required.iter()) {
+                            out.entry(name.as_str()).or_default().push(fd);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn write_tree(files: &[(&str, &str)]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-check-resolve-{}-{}",
+            std::process::id(),
+            files.len()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        for (rel, src) in files {
+            let p = dir.join(rel);
+            if let Some(parent) = p.parent() {
+                std::fs::create_dir_all(parent).unwrap();
+            }
+            std::fs::write(p, src).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn builds_tree_and_resolves_across_modules() {
+        let root = write_tree(&[
+            ("lib.rs", "pub mod util;\npub mod engine;\n"),
+            ("util/mod.rs", "pub struct Widget { pub id: u64 }\npub fn helper(x: u32) -> u32 { x }\n"),
+            ("engine.rs", "use crate::util::Widget;\npub fn go(w: Widget) {}\n"),
+        ]);
+        let krate = build_crate(&root);
+        assert!(krate.diags.is_empty(), "{:?}", krate.diags);
+        let r = Resolver::new(&krate);
+        let eng = *krate.modules[krate.root.unwrap()].children.get("engine").unwrap();
+        let segs: Vec<String> =
+            ["crate", "util", "helper"].iter().map(|s| s.to_string()).collect();
+        assert!(matches!(r.resolve_path(eng, &segs), Some(Res::Fn { .. })));
+        let missing: Vec<String> =
+            ["crate", "util", "nope"].iter().map(|s| s.to_string()).collect();
+        assert!(matches!(r.resolve_path(eng, &missing), Some(Res::Missing { .. })));
+        let ext: Vec<String> = ["std", "mem", "take"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(r.resolve_path(eng, &ext), Some(Res::External));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_mod_file_is_a_finding() {
+        let root = write_tree(&[("lib.rs", "mod ghost;\n")]);
+        let krate = build_crate(&root);
+        assert_eq!(krate.diags.len(), 1);
+        assert!(krate.diags[0].3.contains("ghost"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,358 @@
+//! Per-reference rules: everything driven by one module's [`RefSink`] —
+//! path existence, call arity, struct-literal fields, enum-variant
+//! payload shapes, and `self.`-access consistency.
+//!
+//! Every rule follows the same skip discipline: [`Res::External`] and
+//! [`Res::Unknown`] (and a `None` resolution — bare heads that may be
+//! locals) are silently passed over. Only a definitive
+//! [`Res::Missing`] or a concrete definition that contradicts the use
+//! site produces a diagnostic.
+
+use std::collections::BTreeSet;
+
+use super::parse::{AdtKind, FnDef, VariantDef};
+use super::resolve::{FnRef, Res, Resolver};
+use super::walk::RefSink;
+use super::{Report, R_ARITY, R_FIELDS, R_PATHS, R_VARIANTS};
+
+/// Format an expected-arity set the way the fixture corpus expects:
+/// a bare number when unambiguous, a `[1, 2]` list for cfg twins.
+fn fmt_arities(exp: &BTreeSet<usize>) -> String {
+    if exp.len() == 1 {
+        exp.iter().next().unwrap().to_string()
+    } else {
+        let items: Vec<String> = exp.iter().map(|x| x.to_string()).collect();
+        format!("[{}]", items.join(", "))
+    }
+}
+
+/// All `FnDef`s a resolved call path may refer to (cfg twins
+/// included). `None` means "no signature known — skip arity".
+fn fn_candidates<'c>(
+    rz: &Resolver<'c>,
+    module: usize,
+    segs: &[String],
+    r: &Res,
+) -> Option<Vec<&'c FnDef>> {
+    let Res::Fn { module: rm, name: rname, fn_ref } = r else {
+        return None;
+    };
+    let last = segs.last()?.as_str();
+    if segs.len() >= 2 {
+        match rz.resolve_path(module, &segs[..segs.len() - 1]) {
+            Some(Res::Struct { name: pname, .. }) | Some(Res::Enum { name: pname, .. }) => {
+                // `Type::method` — all inherent + local-trait
+                // signatures under that name.
+                return match rz.type_method_candidates(&pname).get(last) {
+                    Some(v) if !v.is_empty() => Some(v.clone()),
+                    // Derive/std-trait-provided: no signature known.
+                    _ => None,
+                };
+            }
+            Some(Res::Module(pm)) => {
+                return Some(
+                    rz.krate.modules[pm]
+                        .items
+                        .fns
+                        .get(last)
+                        .map_or_else(Vec::new, |f| f.iter().collect()),
+                );
+            }
+            _ => {}
+        }
+    }
+    if let Some(fds) = rz.krate.modules[*rm].items.fns.get(last) {
+        if !fds.is_empty() {
+            return Some(fds.iter().collect());
+        }
+    }
+    // Fall back to the resolved definition itself — covers
+    // `use foo as bar` renames and impl/trait methods reached through
+    // imports. Synthetic fns (derives) have no signature to check.
+    let defn: Option<&'c FnDef> = match fn_ref {
+        FnRef::ModFn => rz.krate.modules[*rm].items.fns.get(rname).and_then(|v| v.first()),
+        FnRef::ImplMethod(ii) => {
+            rz.krate.modules[*rm].items.impls[*ii].methods.get(rname).and_then(|v| v.first())
+        }
+        FnRef::TraitMethod(tr) => rz
+            .trait_defs(*rm, tr)
+            .first()
+            .and_then(|td| td.provided.get(rname).or_else(|| td.required.get(rname))),
+        FnRef::Synthetic => None,
+    };
+    defn.map(|d| vec![d])
+}
+
+/// Union of field names and body shapes across a struct's cfg twins.
+fn struct_field_union<'c>(
+    rz: &Resolver<'c>,
+    m: usize,
+    name: &str,
+) -> (BTreeSet<&'c str>, BTreeSet<AdtKind>) {
+    let mut fields = BTreeSet::new();
+    let mut kinds = BTreeSet::new();
+    for sd in rz.struct_defs(m, name) {
+        kinds.insert(sd.kind);
+        for f in &sd.fields {
+            fields.insert(f.as_str());
+        }
+    }
+    (fields, kinds)
+}
+
+fn variant_def<'c>(rz: &Resolver<'c>, r: &Res) -> Option<&'c VariantDef> {
+    let Res::Variant { module, enum_name, name } = r else {
+        return None;
+    };
+    rz.enum_def(*module, enum_name).and_then(|ed| ed.variant(name))
+}
+
+fn missing_suffix(rz: &Resolver<'_>, module: Option<usize>) -> String {
+    match module {
+        Some(m) => format!(" in `{}`", rz.krate.modules[m].display_path()),
+        None => String::new(),
+    }
+}
+
+/// Apply every per-reference rule to one module's sink.
+pub(crate) fn check_sink(
+    rz: &Resolver<'_>,
+    module: usize,
+    sink: &RefSink,
+    rel: &str,
+    rep: &mut Report,
+) {
+    // -- paths: existence only -------------------------------------------
+    for (segs, line) in &sink.paths {
+        if let Some(Res::Missing { module: dm, name, variant }) = rz.resolve_path(module, segs) {
+            let rule = if variant { R_VARIANTS } else { R_PATHS };
+            rep.diag(
+                rel,
+                *line,
+                rule,
+                format!(
+                    "`{}` does not resolve: no `{name}`{}",
+                    segs.join("::"),
+                    missing_suffix(rz, dm)
+                ),
+            );
+        }
+    }
+
+    // -- calls -------------------------------------------------------------
+    for (segs, nargs, line, dd) in &sink.calls {
+        let Some(r) = rz.resolve_path(module, segs) else {
+            continue;
+        };
+        if r.is_skip() {
+            continue;
+        }
+        let path_s = segs.join("::");
+        match &r {
+            Res::Missing { name, variant, .. } => {
+                let rule = if *variant { R_VARIANTS } else { R_ARITY };
+                rep.diag(
+                    rel,
+                    *line,
+                    rule,
+                    format!("call to `{path_s}` does not resolve: no `{name}`"),
+                );
+                continue;
+            }
+            _ if *dd => continue,
+            Res::Fn { .. } => {
+                let Some(cands) = fn_candidates(rz, module, segs, &r) else {
+                    continue;
+                };
+                if cands.is_empty() {
+                    continue;
+                }
+                if !cands.iter().any(|fd| fd.arity == *nargs) {
+                    let exp: BTreeSet<usize> = cands.iter().map(|fd| fd.arity).collect();
+                    rep.diag(
+                        rel,
+                        *line,
+                        R_ARITY,
+                        format!(
+                            "`{path_s}` called with {nargs} arg(s); signature takes {} \
+                             (self included for `Type::method` calls)",
+                            fmt_arities(&exp)
+                        ),
+                    );
+                }
+            }
+            Res::Struct { module: sm, name: sname } => {
+                let (_, kinds) = struct_field_union(rz, *sm, sname);
+                if kinds.len() == 1 && kinds.contains(&AdtKind::Tuple) {
+                    let arities: BTreeSet<usize> =
+                        rz.struct_defs(*sm, sname).iter().map(|sd| sd.tuple_arity).collect();
+                    if !arities.contains(nargs) {
+                        rep.diag(
+                            rel,
+                            *line,
+                            R_ARITY,
+                            format!(
+                                "tuple-struct `{path_s}` constructed with {nargs} field(s); \
+                                 definition has {}",
+                                arities.iter().next().copied().unwrap_or(0)
+                            ),
+                        );
+                    }
+                }
+            }
+            Res::Variant { .. } => {
+                let Some(v) = variant_def(rz, &r) else {
+                    continue;
+                };
+                match v.kind {
+                    AdtKind::Tuple if v.tuple_arity != *nargs => rep.diag(
+                        rel,
+                        *line,
+                        R_VARIANTS,
+                        format!(
+                            "variant `{path_s}` has {} payload field(s), used with {nargs}",
+                            v.tuple_arity
+                        ),
+                    ),
+                    AdtKind::Unit if *nargs > 0 => rep.diag(
+                        rel,
+                        *line,
+                        R_VARIANTS,
+                        format!("variant `{path_s}` is a unit variant but is used with arguments"),
+                    ),
+                    AdtKind::Named => rep.diag(
+                        rel,
+                        *line,
+                        R_VARIANTS,
+                        format!("variant `{path_s}` has named fields; parenthesized use"),
+                    ),
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // -- struct literals / patterns ----------------------------------------
+    for (segs, fields, _has_base, line) in &sink.struct_lits {
+        let Some(r) = rz.resolve_path(module, segs) else {
+            continue;
+        };
+        if r.is_skip() {
+            continue;
+        }
+        let path_s = segs.join("::");
+        match &r {
+            Res::Missing { name, variant, .. } => {
+                let rule = if *variant { R_VARIANTS } else { R_PATHS };
+                rep.diag(rel, *line, rule, format!("`{path_s}` does not resolve: no `{name}`"));
+            }
+            Res::Struct { module: sm, name: sname } => {
+                let (union, kinds) = struct_field_union(rz, *sm, sname);
+                if !kinds.contains(&AdtKind::Named) {
+                    continue;
+                }
+                for (fname, fline) in fields {
+                    if !union.contains(fname.as_str()) {
+                        rep.diag(
+                            rel,
+                            *fline,
+                            R_FIELDS,
+                            format!("`{path_s}` has no field `{fname}`"),
+                        );
+                    }
+                }
+            }
+            Res::Variant { .. } => {
+                let Some(v) = variant_def(rz, &r) else {
+                    continue;
+                };
+                if v.kind != AdtKind::Named {
+                    continue;
+                }
+                for (fname, fline) in fields {
+                    if !v.fields.iter().any(|f| f == fname) {
+                        rep.diag(
+                            rel,
+                            *fline,
+                            R_FIELDS,
+                            format!("variant `{path_s}` has no field `{fname}`"),
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // -- self.field --------------------------------------------------------
+    for (name, line, tname) in &sink.self_fields {
+        let Some(rt) = rz.resolve_name(module, tname) else {
+            continue;
+        };
+        let Res::Struct { module: sm, name: sname } = &rt else {
+            continue;
+        };
+        let (union, kinds) = struct_field_union(rz, *sm, sname);
+        if !kinds.contains(&AdtKind::Named) || union.contains(name.as_str()) {
+            continue;
+        }
+        if rz.lookup_type_member(&rt, name).is_some() {
+            continue; // a method referenced as a value; dot-calls below
+        }
+        if rz.type_is_closed(&rt) {
+            rep.diag(
+                rel,
+                *line,
+                R_FIELDS,
+                format!("`{tname}` has no field or method `{name}`"),
+            );
+        }
+    }
+
+    // -- self.method(...) --------------------------------------------------
+    for (name, nargs, line, tname, dd) in &sink.self_methods {
+        let Some(rt) = rz.resolve_name(module, tname) else {
+            continue;
+        };
+        if let Res::Struct { module: sm, name: sname } = &rt {
+            let (union, _) = struct_field_union(rz, *sm, sname);
+            if union.contains(name.as_str()) {
+                continue; // closure-typed field called as `self.f(…)`
+            }
+        } else if !matches!(rt, Res::Enum { .. }) {
+            continue;
+        }
+        if rz.lookup_type_member(&rt, name).is_none() {
+            if rz.type_is_closed(&rt) {
+                rep.diag(rel, *line, R_ARITY, format!("no method `{name}` on `{tname}`"));
+            }
+            continue;
+        }
+        if *dd {
+            continue;
+        }
+        let cands = rz.type_method_candidates(tname);
+        let cands: Vec<&FnDef> = cands.get(name.as_str()).cloned().unwrap_or_default();
+        if cands.is_empty() || !cands.iter().any(|fd| fd.self_kind.is_some()) {
+            continue;
+        }
+        if !cands.iter().any(|fd| fd.self_kind.is_some() && fd.arity - 1 == *nargs) {
+            let exp: BTreeSet<usize> = cands
+                .iter()
+                .filter(|fd| fd.self_kind.is_some())
+                .map(|fd| fd.arity - 1)
+                .collect();
+            rep.diag(
+                rel,
+                *line,
+                R_ARITY,
+                format!(
+                    "`self.{name}(…)` on `{tname}` called with {nargs} arg(s); \
+                     signature takes {}",
+                    fmt_arities(&exp)
+                ),
+            );
+        }
+    }
+}

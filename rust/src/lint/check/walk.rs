@@ -1,0 +1,639 @@
+//! Reference walker for `pallas-check`: scans one file's token stream
+//! and records every checkable *use* of a name — multi-segment paths,
+//! calls with argument counts, struct literals/patterns with their
+//! field lists, and `self.field` / `self.method(…)` accesses — each
+//! tagged with the module whose scope the reference appears in.
+//!
+//! Bare single identifiers are never recorded: they could be local
+//! variables, which this pass cannot see. Multi-segment paths are the
+//! checkable surface (`a::b` must resolve no matter what locals exist).
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::parse::{
+    is_punct, match_close, skip_attr, FileParse, ModItems, KEYWORDS_NOT_PATH_START,
+};
+use crate::lint::lexer::TokKind;
+
+/// References collected for one module's scope.
+#[derive(Debug, Default)]
+pub(crate) struct RefSink {
+    /// (segments, line) — existence-checked only.
+    pub paths: Vec<(Vec<String>, u32)>,
+    /// (segments, nargs, line, has_top_level_dotdot).
+    pub calls: Vec<(Vec<String>, usize, u32, bool)>,
+    /// (segments, [(field, line)], has_base, line).
+    pub struct_lits: Vec<(Vec<String>, Vec<(String, u32)>, bool, u32)>,
+    /// (field name, line, impl type name).
+    pub self_fields: Vec<(String, u32, String)>,
+    /// (method name, nargs, line, impl type name, has_dotdot).
+    pub self_methods: Vec<(String, usize, u32, String, bool)>,
+}
+
+/// Count call arguments between `(` at `lo` and its matching `)` at
+/// `hi - 1`. Returns `(nargs, has_top_level_dotdot)` — a top-level
+/// `..` (rest pattern or range) makes the count unreliable, so callers
+/// skip arity checks when it is set.
+pub(crate) fn count_args(toks: &[crate::lint::lexer::Tok], lo: usize, hi: usize) -> (usize, bool) {
+    let mut i = lo + 1;
+    let end = hi.saturating_sub(1);
+    if i >= end {
+        return (0, false);
+    }
+    let mut has_dotdot = false;
+    let mut nargs = 1usize;
+    let mut depth = 0i32;
+    // Last significant token text, for closure-at-arg-start detection.
+    let mut prev: Option<&str> = Some("(");
+    while i < end {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            let c = t.text.as_str();
+            match c {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "," if depth == 0 => nargs += 1,
+                "." if depth == 0 => {
+                    if i + 1 < end && is_punct(toks, i + 1, '.') {
+                        has_dotdot = true;
+                    }
+                }
+                ":" if depth == 0 => {
+                    // Turbofish `::<…>` — skip the angle group.
+                    if i + 1 < end
+                        && is_punct(toks, i + 1, ':')
+                        && i + 2 < end
+                        && is_punct(toks, i + 2, '<')
+                    {
+                        let mut ad = 0i32;
+                        let mut j = i + 2;
+                        let mut prev2: Option<&str> = None;
+                        while j < end {
+                            let tt = &toks[j];
+                            if tt.kind == TokKind::Punct {
+                                if tt.text == "<" {
+                                    ad += 1;
+                                } else if tt.text == ">" && prev2 != Some("-") {
+                                    ad -= 1;
+                                    if ad == 0 {
+                                        break;
+                                    }
+                                }
+                                prev2 = Some(tt.text.as_str());
+                            } else {
+                                prev2 = None;
+                            }
+                            j += 1;
+                        }
+                        i = j + 1;
+                        prev = Some(">");
+                        continue;
+                    }
+                }
+                "|" if depth == 0
+                    && matches!(prev, Some("(") | Some(",") | Some("move")) =>
+                {
+                    // Closure at argument start: consume params up to
+                    // the closing `|` (or `||` for no params).
+                    if i + 1 < end && is_punct(toks, i + 1, '|') {
+                        i += 2;
+                        prev = Some("|");
+                        continue;
+                    }
+                    let mut j = i + 1;
+                    let mut d2 = 0i32;
+                    while j < end {
+                        let tt = &toks[j];
+                        if tt.kind == TokKind::Punct {
+                            match tt.text.as_str() {
+                                "(" | "[" | "{" | "<" => d2 += 1,
+                                ")" | "]" | "}" | ">" => d2 -= 1,
+                                "|" if d2 == 0 => break,
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j + 1;
+                    prev = Some("|");
+                    continue;
+                }
+                _ => {}
+            }
+            prev = Some(&toks[i].text);
+        } else if t.kind == TokKind::Ident {
+            prev = Some(&t.text);
+        } else {
+            prev = None;
+        }
+        i += 1;
+    }
+    if end > 0 && is_punct(toks, end - 1, ',') {
+        nargs -= 1;
+    }
+    (nargs, has_dotdot)
+}
+
+/// Tokens that, directly before `Name {`, mean the brace is a block —
+/// not a struct literal. `&` mostly precedes reference *types*
+/// (`-> &Server {` starts a fn body); a borrowed struct literal
+/// `&Foo { … }` goes unchecked (false-negative direction).
+pub(crate) const STRUCT_LIT_BLOCKERS: [&str; 26] = [
+    "impl", "for", "in", "dyn", "as", "where", "trait", "struct", "enum", "union", "fn", "mod",
+    "use", "type", "else", "if", "while", "match", "loop", "return", "break", "move", "mut", "&",
+    // `|x| Foo { … }` closure bodies are fine: prev is `|`, not listed.
+    "unsafe", "do",
+];
+
+/// Field names + `..base` marker inside a struct literal or pattern
+/// body (`lo..hi` exclusive of the braces).
+pub(crate) fn collect_literal_fields(
+    toks: &[crate::lint::lexer::Tok],
+    lo: usize,
+    hi: usize,
+) -> (Vec<(String, u32)>, bool) {
+    let mut fields = Vec::new();
+    let mut has_base = false;
+    let mut depth = 0i32;
+    let mut at_entry_start = true;
+    let mut j = lo;
+    while j < hi {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "," if depth == 0 => {
+                    at_entry_start = true;
+                    j += 1;
+                    continue;
+                }
+                "." if depth == 0 && at_entry_start => {
+                    // `..base` / `..` rest pattern.
+                    has_base = true;
+                    at_entry_start = false;
+                }
+                _ => {}
+            }
+            j += 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident && depth == 0 && at_entry_start {
+            if matches!(t.text.as_str(), "ref" | "mut" | "box") {
+                j += 1;
+                continue;
+            }
+            // Shorthand `x` or `x: expr`; exclude `x::y` paths (a path
+            // head, not a field name).
+            let is_path = j + 1 < hi && is_punct(toks, j + 1, ':') && is_punct(toks, j + 2, ':');
+            if !is_path {
+                fields.push((t.text.clone(), t.line));
+            }
+            at_entry_start = false;
+        } else if depth == 0 && at_entry_start && t.kind == TokKind::Int {
+            // Tuple-struct numeric field init `0: x`.
+            at_entry_start = false;
+        }
+        j += 1;
+    }
+    (fields, has_base)
+}
+
+/// Walk one file's tokens, emitting references keyed by the module
+/// (arena index) whose span contains them.
+pub(crate) struct Walker<'a> {
+    toks: &'a [crate::lint::lexer::Tok],
+    /// (tok_span, module idx), sorted by span size ascending so the
+    /// first containing span is the innermost module.
+    module_spans: Vec<((usize, usize), usize)>,
+    /// (lo, hi, impl type name, impl generics).
+    impl_spans: Vec<(usize, usize, Option<String>, BTreeSet<String>)>,
+    /// (lo, hi, fn generic params).
+    generic_spans: Vec<(usize, usize, BTreeSet<String>)>,
+    skip_spans: Vec<(usize, usize)>,
+    sinks: BTreeMap<usize, RefSink>,
+}
+
+impl<'a> Walker<'a> {
+    pub fn new(fp: &'a FileParse, mut module_spans: Vec<((usize, usize), usize)>) -> Self {
+        module_spans.sort_by_key(|(span, _)| span.1 - span.0);
+        let mut skip_spans = fp.macro_spans.clone();
+        skip_spans.sort_unstable();
+        Walker {
+            toks: &fp.toks,
+            module_spans,
+            impl_spans: Vec::new(),
+            generic_spans: Vec::new(),
+            skip_spans,
+            sinks: BTreeMap::new(),
+        }
+    }
+
+    /// Record impl body spans + fn generic spans from one module's
+    /// items. The driver calls this for every arena module of the
+    /// file (inline mods are separate arena nodes).
+    pub fn prescan(&mut self, items: &ModItems) {
+        for idef in &items.impls {
+            self.impl_spans.push((
+                idef.body.0,
+                idef.body.1,
+                idef.type_name.clone(),
+                idef.generics.clone(),
+            ));
+            for fds in idef.methods.values() {
+                for fd in fds {
+                    if !fd.generics.is_empty() {
+                        self.generic_spans.push((fd.body.0, fd.body.1, fd.generics.clone()));
+                    }
+                }
+            }
+        }
+        for fds in items.fns.values() {
+            for fd in fds {
+                if !fd.generics.is_empty() {
+                    self.generic_spans.push((fd.body.0, fd.body.1, fd.generics.clone()));
+                }
+            }
+        }
+    }
+
+    fn module_for(&self, i: usize) -> Option<usize> {
+        self.module_spans
+            .iter()
+            .find(|((lo, hi), _)| *lo <= i && i < *hi)
+            .map(|&(_, m)| m)
+    }
+
+    /// Innermost impl block containing token `i` (largest `lo` wins).
+    fn impl_type_at(&self, i: usize) -> (Option<&str>, Option<usize>) {
+        let mut best: Option<usize> = None;
+        for (k, (lo, hi, _, _)) in self.impl_spans.iter().enumerate() {
+            if *lo <= i && i < *hi && best.is_none_or(|b| *lo >= self.impl_spans[b].0) {
+                best = Some(k);
+            }
+        }
+        (best.and_then(|k| self.impl_spans[k].2.as_deref()), best)
+    }
+
+    fn generic_in_scope(&self, i: usize, name: &str) -> bool {
+        if self
+            .generic_spans
+            .iter()
+            .any(|(lo, hi, g)| *lo <= i && i < *hi && g.contains(name))
+        {
+            return true;
+        }
+        let (_, k) = self.impl_type_at(i);
+        k.is_some_and(|k| self.impl_spans[k].3.contains(name))
+    }
+
+    fn in_skip(&self, i: usize) -> Option<usize> {
+        self.skip_spans.iter().find(|(lo, hi)| *lo <= i && i < *hi).map(|&(_, hi)| hi)
+    }
+
+    pub fn walk(mut self) -> BTreeMap<usize, RefSink> {
+        let toks = self.toks;
+        let n = toks.len();
+        let mut i = 0usize;
+        // Previous significant token texts (ident/punct only).
+        let mut prev_sig: Option<String> = None;
+        let mut prev_sig2: Option<String> = None;
+        while i < n {
+            if let Some(hi) = self.in_skip(i) {
+                i = hi;
+                prev_sig = None;
+                prev_sig2 = None;
+                continue;
+            }
+            let t = &toks[i];
+            if t.kind == TokKind::Punct && t.text == "#" {
+                if is_punct(toks, i + 1, '[') {
+                    let (j, _) = skip_attr(toks, i);
+                    i = j;
+                    continue;
+                }
+                if is_punct(toks, i + 1, '!') && is_punct(toks, i + 2, '[') {
+                    let mut depth = 0i32;
+                    let mut j = i + 2;
+                    while j < n {
+                        if toks[j].kind == TokKind::Punct {
+                            match toks[j].text.as_str() {
+                                "[" | "(" => depth += 1,
+                                "]" | ")" => {
+                                    depth -= 1;
+                                    if depth == 0 {
+                                        j += 1;
+                                        break;
+                                    }
+                                }
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+            if t.kind == TokKind::Punct && t.text == "$" {
+                // Macro fragment: skip the following ident too.
+                i += 2;
+                prev_sig = None;
+                prev_sig2 = None;
+                continue;
+            }
+            if t.kind != TokKind::Ident {
+                prev_sig2 = prev_sig.take();
+                // Lifetimes lex with empty text; mark them so
+                // `-> &'c Foo {` blocks struct-lit collection the same
+                // way `-> &Foo {` does.
+                prev_sig = match t.kind {
+                    TokKind::Punct => Some(t.text.clone()),
+                    TokKind::Lifetime => Some("'".to_string()),
+                    _ => None,
+                };
+                i += 1;
+                continue;
+            }
+            let w = t.text.as_str();
+            // `use` / `mod` declarations are item business — phase 1
+            // already captured them.
+            if w == "use" {
+                while i < n && !is_punct(toks, i, ';') {
+                    i += 1;
+                }
+                i += 1;
+                prev_sig = Some(";".to_string());
+                prev_sig2 = None;
+                continue;
+            }
+            if w == "mod" {
+                i += 2;
+                prev_sig = None;
+                continue;
+            }
+            if w == "macro_rules" {
+                // Body was recorded as a skip span; just advance.
+                i += 1;
+                prev_sig = Some("macro_rules".to_string());
+                continue;
+            }
+            // `self.x` / `self.x(…)`
+            if w == "self" && is_punct(toks, i + 1, '.') && prev_sig.as_deref() != Some(".") {
+                let j = i + 2;
+                if j < n && toks[j].kind == TokKind::Ident {
+                    let name = toks[j].text.clone();
+                    if name == "await" {
+                        i = j + 1;
+                        prev_sig = None;
+                        continue;
+                    }
+                    let (tname, _) = self.impl_type_at(i);
+                    let tname = tname.map(str::to_string);
+                    let module = self.module_for(i);
+                    if let (Some(tname), Some(m)) = (tname, module) {
+                        let sink = self.sinks.entry(m).or_default();
+                        if is_punct(toks, j + 1, '(') {
+                            let close = match_close(toks, j + 1, '(', ')');
+                            let (nargs, dd) = count_args(toks, j + 1, close);
+                            sink.self_methods.push((
+                                name.clone(),
+                                nargs,
+                                toks[j].line,
+                                tname,
+                                dd,
+                            ));
+                        } else {
+                            sink.self_fields.push((name.clone(), toks[j].line, tname));
+                        }
+                    }
+                    i = j + 1;
+                    prev_sig = Some(name);
+                    prev_sig2 = Some(".".to_string());
+                    continue;
+                }
+                i = j;
+                continue;
+            }
+            // Path start? prev must not be `.` (method call) or `::`
+            // (path tail). A single `:` — field init, type
+            // annotation — is fine.
+            if prev_sig.as_deref() == Some(".")
+                || (prev_sig.as_deref() == Some(":") && prev_sig2.as_deref() == Some(":"))
+            {
+                prev_sig2 = prev_sig.take();
+                prev_sig = Some(w.to_string());
+                i += 1;
+                continue;
+            }
+            if KEYWORDS_NOT_PATH_START.contains(&w) && w != "crate" && w != "super" {
+                prev_sig2 = prev_sig.take();
+                prev_sig = Some(w.to_string());
+                i += 1;
+                continue;
+            }
+            // Collect path segments (`a::b::c`, turbofish skipped).
+            let mut segs = vec![w.to_string()];
+            let line = t.line;
+            let mut j = i + 1;
+            while j + 1 < n && is_punct(toks, j, ':') && is_punct(toks, j + 1, ':') {
+                let k = j + 2;
+                if k < n && is_punct(toks, k, '<') {
+                    // Turbofish: skip the angle group; the path may
+                    // continue after it (`Vec::<u8>::new`).
+                    let mut ad = 0i32;
+                    let mut p2: Option<&str> = None;
+                    let mut k2 = k;
+                    while k2 < n {
+                        let tt = &toks[k2];
+                        if tt.kind == TokKind::Punct {
+                            if tt.text == "<" {
+                                ad += 1;
+                            } else if tt.text == ">" && p2 != Some("-") {
+                                ad -= 1;
+                                if ad == 0 {
+                                    k2 += 1;
+                                    break;
+                                }
+                            }
+                            p2 = Some(tt.text.as_str());
+                        } else {
+                            p2 = None;
+                        }
+                        k2 += 1;
+                    }
+                    j = k2;
+                    continue;
+                }
+                if k < n && toks[k].kind == TokKind::Ident && toks[k].text != "crate" {
+                    segs.push(toks[k].text.clone());
+                    j = k + 1;
+                    continue;
+                }
+                break;
+            }
+            let prev_for_guard = prev_sig.take();
+            let prev2_for_guard = prev_sig2.take();
+            prev_sig2 = prev_for_guard.clone();
+            prev_sig = Some(segs[segs.len() - 1].clone());
+            let Some(module) = self.module_for(i) else {
+                i = j;
+                continue;
+            };
+            // `Self::x` — substitute the enclosing impl's type.
+            if segs[0] == "Self" {
+                let (tname, _) = self.impl_type_at(i);
+                let Some(tname) = tname else {
+                    i = j;
+                    continue;
+                };
+                segs[0] = tname.to_string();
+            } else if segs[0] == "self" && segs.len() == 1 {
+                i = j;
+                continue;
+            }
+            // Generic parameters in scope shadow everything.
+            if self.generic_in_scope(i, &segs[0]) {
+                i = j;
+                continue;
+            }
+            if j < n && is_punct(toks, j, '(') {
+                if prev_for_guard.as_deref() == Some("fn") {
+                    i = j;
+                    continue;
+                }
+                let close = match_close(toks, j, '(', ')');
+                let (nargs, dd) = count_args(toks, j, close);
+                self.sinks.entry(module).or_default().calls.push((segs, nargs, line, dd));
+                i = j + 1;
+                prev_sig = Some("(".to_string());
+                continue;
+            }
+            if j < n && is_punct(toks, j, '!') {
+                // Macro invocation: its args are walked as ordinary
+                // tokens; the macro name itself is not a value path.
+                i = j + 1;
+                prev_sig = Some("!".to_string());
+                continue;
+            }
+            if j < n && is_punct(toks, j, '{') {
+                let blocked = prev_for_guard
+                    .as_deref()
+                    .is_some_and(|p| STRUCT_LIT_BLOCKERS.contains(&p))
+                    || (prev_for_guard.as_deref() == Some(">")
+                        && prev2_for_guard.as_deref() == Some("-"))
+                    // `-> &'c Foo {` — a lifetime before the path means
+                    // reference-type position, never a literal.
+                    || prev_for_guard.as_deref().is_some_and(|p| p.starts_with('\''));
+                if !blocked {
+                    let close = match_close(toks, j, '{', '}');
+                    let (fields, has_base) =
+                        collect_literal_fields(toks, j + 1, close.saturating_sub(1));
+                    self.sinks
+                        .entry(module)
+                        .or_default()
+                        .struct_lits
+                        .push((segs, fields, has_base, line));
+                    // Tokens inside the literal still get walked.
+                }
+                i = j;
+                continue;
+            }
+            if segs.len() >= 2 {
+                self.sinks.entry(module).or_default().paths.push((segs, line));
+            }
+            i = j;
+        }
+        self.sinks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::check::parse::parse_file;
+    use crate::lint::lexer::lex;
+
+    fn walk_src(src: &str) -> RefSink {
+        let out = lex(src);
+        let fp = parse_file(out.toks, out.comments, out.n_lines);
+        let span = fp.root.as_ref().map(|r| r.tok_span).unwrap_or((0, 0));
+        let mut w = Walker::new(&fp, vec![(span, 0)]);
+        if let Some(r) = &fp.root {
+            w.prescan(r);
+        }
+        let mut sinks = w.walk();
+        sinks.remove(&0).unwrap_or_default()
+    }
+
+    #[test]
+    fn collects_calls_with_arity() {
+        let s = walk_src("fn f() { util::go(1, 2); other::make(); }\n");
+        assert_eq!(s.calls.len(), 2);
+        assert_eq!(s.calls[0].0, vec!["util", "go"]);
+        assert_eq!(s.calls[0].1, 2);
+        assert_eq!(s.calls[1].1, 0);
+    }
+
+    #[test]
+    fn closures_and_turbofish_count_as_one_arg() {
+        let s = walk_src(
+            "fn f() { m::apply(|x, y| x + y, 5); m::parse::<u32, Error>(text, 3); }\n",
+        );
+        assert_eq!(s.calls.len(), 2, "{:?}", s.calls);
+        assert_eq!(s.calls[0].1, 2, "closure params must not be counted");
+        assert_eq!(s.calls[1].0, vec!["m", "parse"]);
+        assert_eq!(s.calls[1].1, 2, "turbofish type args must not be counted");
+    }
+
+    #[test]
+    fn struct_literals_and_patterns() {
+        let s = walk_src(
+            "fn f() { let w = geo::Widget { id: 4, name, ..base }; \
+             if let shape::Point { x, .. } = p {} }\n",
+        );
+        assert_eq!(s.struct_lits.len(), 2, "{:?}", s.struct_lits);
+        let (segs, fields, has_base, _) = &s.struct_lits[0];
+        assert_eq!(segs, &vec!["geo".to_string(), "Widget".to_string()]);
+        let names: Vec<&str> = fields.iter().map(|(f, _)| f.as_str()).collect();
+        assert_eq!(names, ["id", "name"]);
+        assert!(has_base);
+        assert!(s.struct_lits[1].2, "`..` rest pattern sets has_base");
+    }
+
+    #[test]
+    fn self_accesses_carry_impl_type() {
+        let s = walk_src(
+            "struct W { n: u32 }\nimpl W {\n  fn go(&mut self) { self.n += 1; self.step(4); }\n}\n",
+        );
+        assert_eq!(s.self_fields.len(), 1);
+        assert_eq!(s.self_fields[0].0, "n");
+        assert_eq!(s.self_fields[0].2, "W");
+        assert_eq!(s.self_methods.len(), 1);
+        assert_eq!(s.self_methods[0].0, "step");
+        assert_eq!(s.self_methods[0].1, 1);
+    }
+
+    #[test]
+    fn fn_body_after_ref_return_is_not_a_literal() {
+        let s = walk_src("fn get(&self) -> &types::Server { &self.s }\n");
+        assert!(s.struct_lits.is_empty(), "{:?}", s.struct_lits);
+        // The return-type path is still existence-checked.
+        assert!(s.paths.iter().any(|(segs, _)| segs == &vec!["types", "Server"]));
+    }
+
+    #[test]
+    fn fn_body_after_lifetime_ref_return_is_not_a_literal() {
+        // The lifetime between `&` and the path must not defeat the
+        // reference-type blocker.
+        let s = walk_src("fn get<'c>(&'c self) -> &'c types::Server { &self.s }\n");
+        assert!(s.struct_lits.is_empty(), "{:?}", s.struct_lits);
+    }
+
+    #[test]
+    fn generic_params_shadow_path_heads() {
+        let s = walk_src("fn f<T: Clone>(x: T) { T::clone(&x); }\n");
+        assert!(s.calls.is_empty(), "{:?}", s.calls);
+    }
+}

@@ -1,9 +1,10 @@
 //! `hot-path-no-alloc`: a function marked with a standalone
 //! `// lint: hot-path` comment is scanned for allocating calls —
-//! `Vec::new`, `vec![`, `.to_vec()`, `.collect()`, `Box::new`,
-//! `.clone()`. This turns PR 8's zero-alloc event-loop campaign from
-//! after-the-fact pool counters into a gate that fires at lint time,
-//! on the exact functions the profiler showed on the hot path.
+//! `Vec::new`, `String::new`, `vec![`, `format!(`, `.to_vec()`,
+//! `.collect()`, `Box::new`, `Box::from`, `.clone()`, `.to_string()`,
+//! `.to_owned()`. This turns PR 8's zero-alloc event-loop campaign
+//! from after-the-fact pool counters into a gate that fires at lint
+//! time, on the exact functions the profiler showed on the hot path.
 //!
 //! The marker attaches to the next `fn` item; the scan covers its
 //! body (first `{` after the `fn` keyword through the matching `}`).
@@ -17,7 +18,7 @@ use crate::lint::lexer::TokKind;
 const RULE: &str = "hot-path-no-alloc";
 
 /// `.method()` calls that allocate.
-const BANNED_METHODS: [&str; 3] = ["to_vec", "collect", "clone"];
+const BANNED_METHODS: [&str; 5] = ["to_vec", "collect", "clone", "to_string", "to_owned"];
 
 pub(crate) fn check(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
     for &marker_line in ctx.hot_markers {
@@ -58,26 +59,28 @@ fn scan_body(
 ) {
     for i in open..close {
         let line = ctx.toks[i].line;
-        // Vec::new / Box::new
+        // Vec::new / Box::new / String::new / Box::from
         if let Some(head) = ctx.ident(i) {
-            if (head == "Vec" || head == "Box")
+            if (head == "Vec" || head == "Box" || head == "String")
                 && ctx.is_punct(i + 1, ':')
                 && ctx.is_punct(i + 2, ':')
-                && ctx.ident(i + 3) == Some("new")
             {
-                out.push(ctx.diag(
-                    line,
-                    RULE,
-                    format!("`{head}::new` in hot-path fn `{fn_name}`"),
-                ));
-                continue;
+                let tail = ctx.ident(i + 3);
+                if tail == Some("new") || (head == "Box" && tail == Some("from")) {
+                    out.push(ctx.diag(
+                        line,
+                        RULE,
+                        format!("`{head}::{}` in hot-path fn `{fn_name}`", tail.unwrap()),
+                    ));
+                    continue;
+                }
             }
-            // vec![
-            if head == "vec" && ctx.is_punct(i + 1, '!') {
+            // vec![ / format!(
+            if (head == "vec" || head == "format") && ctx.is_punct(i + 1, '!') {
                 out.push(ctx.diag(
                     line,
                     RULE,
-                    format!("`vec![` in hot-path fn `{fn_name}`"),
+                    format!("`{head}!` in hot-path fn `{fn_name}`"),
                 ));
                 continue;
             }
@@ -125,6 +128,14 @@ mod tests {
             "cold() is past hot()'s body: {:?}",
             out.kept
         );
+    }
+
+    #[test]
+    fn flags_string_allocations() {
+        let src = "// lint: hot-path\nfn step(&mut self) {\n    let s = String::new();\n    let t = format!(\"{s}\");\n    let u = t.to_string();\n    let v = u.to_owned();\n    let b = Box::from(v);\n    let _ = b;\n}\n";
+        let out = lint_file_source("sim/x.rs", src, &LabelRegistry::default());
+        let hits: Vec<_> = out.kept.iter().filter(|d| d.rule == "hot-path-no-alloc").collect();
+        assert_eq!(hits.len(), 5, "{hits:?}");
     }
 
     #[test]

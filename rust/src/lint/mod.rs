@@ -22,9 +22,10 @@
 //! that line; standing alone it covers the following statement (up to
 //! and including the next line containing `;`, `{` or `}`). The reason
 //! is mandatory; a missing reason is a malformed marker. Unused
-//! suppressions are reported in the JSON output but are not fatal, so
-//! a drive-by refactor that removes a violation does not break the
-//! build — it just leaves a visible crumb to clean up.
+//! suppressions are fatal by default ([`LintReport::is_clean_strict`]):
+//! a drive-by refactor that removes a violation must also delete the
+//! marker, or pass `--lenient` to downgrade the failure while cleaning
+//! up.
 //!
 //! `// lint: hot-path` marks the next `fn` item for the
 //! `hot-path-no-alloc` scan.
@@ -33,8 +34,18 @@
 //! rule: tests may use wall clocks, ad-hoc fork labels and `unwrap`
 //! freely.
 //!
+//! ## Tiers
+//!
+//! This module is tier 1: per-file, syntactic. The [`check`] submodule
+//! is tier 2 (`pallas-check`): a crate-wide symbol-resolution and
+//! API-consistency pass with its own `check-*` rules, run via
+//! `pallas-check` or `pallas-lint --deep`. Tier-2 suppressions
+//! (`// lint: allow(check-…): reason`) share this marker syntax and
+//! are validated here, but matched against findings over there.
+//!
 //! See `rust/LINTS.md` for the full catalogue and how to add a rule.
 
+pub mod check;
 mod hot_path;
 mod lexer;
 mod panic_surface;
@@ -73,7 +84,8 @@ pub struct Diagnostic {
     pub message: String,
 }
 
-/// A suppression that matched no diagnostic (reported, non-fatal).
+/// A suppression that matched no diagnostic. Fails the strict gate
+/// ([`LintReport::is_clean_strict`]) so stale markers get pruned.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct UnusedSuppression {
     pub file: String,
@@ -88,9 +100,13 @@ pub struct RuleCount {
 }
 
 /// The result of a full pass. Every collection is sorted so that the
-/// JSON rendering is byte-deterministic run-to-run.
-#[derive(Debug, Default)]
+/// JSON rendering is byte-deterministic run-to-run. Shared by both
+/// tiers: tier 1 fills it with `pallas-lint/1`, [`check::run`] with
+/// `pallas-check/1`.
+#[derive(Debug)]
 pub struct LintReport {
+    /// JSON schema tag; also names the tool in human output.
+    pub schema: &'static str,
     pub files_scanned: usize,
     /// Unsuppressed findings — non-empty means the gate fails.
     pub diagnostics: Vec<Diagnostic>,
@@ -101,10 +117,38 @@ pub struct LintReport {
     pub notes: Vec<String>,
 }
 
+impl Default for LintReport {
+    fn default() -> Self {
+        LintReport {
+            schema: "pallas-lint/1",
+            files_scanned: 0,
+            diagnostics: Vec::new(),
+            suppressed: 0,
+            rule_counts: BTreeMap::new(),
+            unused_suppressions: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+}
+
 impl LintReport {
     /// True when the pass found zero unsuppressed diagnostics.
     pub fn is_clean(&self) -> bool {
         self.diagnostics.is_empty()
+    }
+
+    /// Strict cleanliness: no unsuppressed diagnostics AND no unused
+    /// suppressions. The bins gate on this by default — a suppression
+    /// whose violation is gone must be deleted, not left to rot —
+    /// with `--lenient` falling back to [`is_clean`](Self::is_clean).
+    pub fn is_clean_strict(&self) -> bool {
+        self.diagnostics.is_empty() && self.unused_suppressions.is_empty()
+    }
+
+    /// The tool name half of the schema tag (`pallas-lint/1` →
+    /// `pallas-lint`), used in human-readable output.
+    pub fn tool_name(&self) -> &'static str {
+        self.schema.split('/').next().unwrap_or(self.schema)
     }
 
     /// Deterministic JSON rendering: fixed key order, sorted
@@ -112,7 +156,7 @@ impl LintReport {
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        let _ = writeln!(s, "  \"schema\": \"pallas-lint/1\",");
+        let _ = writeln!(s, "  \"schema\": {},", json_str(self.schema));
         let _ = writeln!(s, "  \"files_scanned\": {},", self.files_scanned);
         let _ = writeln!(s, "  \"unsuppressed\": {},", self.diagnostics.len());
         let _ = writeln!(s, "  \"suppressed\": {},", self.suppressed);
@@ -185,7 +229,8 @@ impl LintReport {
         }
         let _ = writeln!(
             s,
-            "pallas-lint: {} file(s), {} unsuppressed diagnostic(s), {} suppressed",
+            "{}: {} file(s), {} unsuppressed diagnostic(s), {} suppressed",
+            self.tool_name(),
             self.files_scanned,
             self.diagnostics.len(),
             self.suppressed
@@ -237,7 +282,10 @@ fn parse_marker(text: &str) -> Option<Result<Marker, String>> {
             None => return Some(Err("unterminated `allow(`".to_string())),
         };
         let rule = inner[..close].trim().to_string();
-        if !RULES.contains(&rule.as_str()) {
+        // Tier-2 `check-*` rules are valid marker targets too; tier 1
+        // validates them here (one shared syntax, one error surface)
+        // and `check::run` matches them against its findings.
+        if !RULES.contains(&rule.as_str()) && !check::RULES.contains(&rule.as_str()) {
             return Some(Err(format!("unknown rule `{rule}` in allow marker")));
         }
         let after = inner[close + 1..].trim_start();
@@ -264,9 +312,9 @@ struct Suppression {
 
 /// How far a standalone suppression extends: through the next line
 /// containing a statement/block terminator, capped defensively.
-const STANDALONE_COVER_CAP: u32 = 12;
+pub(crate) const STANDALONE_COVER_CAP: u32 = 12;
 
-fn suppression_cover(standalone: bool, line: u32, lines: &[&str]) -> (u32, u32) {
+pub(crate) fn suppression_cover(standalone: bool, line: u32, lines: &[&str]) -> (u32, u32) {
     if !standalone {
         return (line, line);
     }
@@ -286,7 +334,7 @@ fn suppression_cover(standalone: bool, line: u32, lines: &[&str]) -> (u32, u32) 
 
 /// Mark every line belonging to a `#[test]` / `#[cfg(test)]`-gated item
 /// (attribute through the end of the item). All rules skip those lines.
-fn test_lines(toks: &[Tok], n_lines: u32) -> Vec<bool> {
+pub(crate) fn test_lines(toks: &[Tok], n_lines: u32) -> Vec<bool> {
     let mut marked = vec![false; n_lines as usize + 2];
     let is_p = |i: usize, c: char| {
         toks.get(i).is_some_and(|t| {
@@ -434,7 +482,7 @@ impl FileCtx<'_> {
 
 /// Outcome of linting one file (exposed for fixture tests).
 #[derive(Debug, Default)]
-pub struct FileLint {
+pub(crate) struct FileLint {
     pub kept: Vec<Diagnostic>,
     pub suppressed: Vec<Diagnostic>,
     pub unused: Vec<UnusedSuppression>,
@@ -443,7 +491,7 @@ pub struct FileLint {
 
 /// Lint one file's source text against a prebuilt registry. This is
 /// the unit the fixture tests drive; [`run`] maps it over the tree.
-pub fn lint_file_source(rel: &str, source: &str, registry: &LabelRegistry) -> FileLint {
+pub(crate) fn lint_file_source(rel: &str, source: &str, registry: &LabelRegistry) -> FileLint {
     let LexOutput { toks, comments, n_lines } = lexer::lex(source);
     let lines: Vec<&str> = source.lines().collect();
     let tests = test_lines(&toks, n_lines);
@@ -460,6 +508,12 @@ pub fn lint_file_source(rel: &str, source: &str, registry: &LabelRegistry) -> Fi
             Some(Err(e)) => out.notes.push(format!("{rel}:{}: {e}", c.line)),
             Some(Ok(Marker::HotPath)) => hot_markers.push(c.line),
             Some(Ok(Marker::Allow { rule, .. })) => {
+                // Tier-2 suppressions belong to `check::run`; creating
+                // a tier-1 suppression for them here would only ever
+                // report it unused.
+                if rule.starts_with("check-") {
+                    continue;
+                }
                 let covers = suppression_cover(c.standalone, c.line, &lines);
                 suppressions.push(Suppression { rule, line: c.line, covers, used: false });
             }
@@ -502,7 +556,7 @@ pub fn lint_file_source(rel: &str, source: &str, registry: &LabelRegistry) -> Fi
     out
 }
 
-fn walk_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+pub(crate) fn walk_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
     let mut stack = vec![root.to_path_buf()];
     let mut files = Vec::new();
     while let Some(dir) = stack.pop() {

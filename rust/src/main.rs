@@ -141,7 +141,14 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // trace replay). A `[scenario]` section in the config file is
         // replaced by the named one; `federated-burst` also installs
         // its registry federation (clusters still overridable below).
-        cfg.scenario = Some(cloudcoaster::coordinator::scenario::named(name, &cfg)?);
+        cfg.scenario = Some(
+            cloudcoaster::coordinator::scenario::named(name, &cfg).with_context(|| {
+                format!(
+                    "known scenarios: {}",
+                    cloudcoaster::coordinator::scenario::SCENARIO_NAMES.join(", ")
+                )
+            })?,
+        );
         if let Some(fed) = cloudcoaster::coordinator::scenario::named_federation(name, &cfg)? {
             cfg.federation = Some(fed);
         }
@@ -306,6 +313,19 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         "market" => sweep::bid_points(&cfg, &[None, Some(2.0), Some(0.5), Some(0.35)]),
         "forecast" => sweep::forecast_points(&cfg),
         "storm" => sweep::storm_intensity_points(&cfg, &[1.0, 2.0, 3.0, 5.0])?,
+        "splice" => {
+            // Regime-switch axis: replay a CSV tail from progressively
+            // earlier fractions of the synthetic horizon.
+            let csv = args.get("csv").context("--what splice needs --csv FILE")?;
+            let horizon = match &cfg.workload {
+                WorkloadSource::YahooLike(p) => p.horizon,
+                WorkloadSource::GoogleLike(p) => p.horizon,
+                WorkloadSource::Csv(_) => {
+                    bail!("--what splice needs a synthetic base workload (yahoo/google)")
+                }
+            };
+            sweep::splice_points(&cfg, csv, horizon, &[0.25, 0.5, 0.75])
+        }
         "router" => sweep::router_points(
             &cfg,
             &[
@@ -318,7 +338,7 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         "budget" => sweep::budget_sharing_points(&cfg),
         other => bail!(
             "unknown ablation {other:?} \
-             (threshold|revocation|policy|scheduler|market|forecast|storm|router|budget)"
+             (threshold|revocation|policy|scheduler|market|forecast|storm|splice|router|budget)"
         ),
     };
     let reports = sweep::run_sweep_parallel(&cfg, &points, threads)?;

@@ -1,0 +1,1 @@
+pub(crate) fn run() {}

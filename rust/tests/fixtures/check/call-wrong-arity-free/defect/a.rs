@@ -1,0 +1,3 @@
+pub(crate) fn scale(x: u32, f: u32) -> u32 {
+    x * f
+}

@@ -1,0 +1,7 @@
+pub(crate) struct Gauge;
+
+impl Gauge {
+    pub(crate) fn read(&self, idx: usize) -> usize {
+        idx
+    }
+}

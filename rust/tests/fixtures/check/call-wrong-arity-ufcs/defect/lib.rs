@@ -1,0 +1,5 @@
+pub mod a;
+
+pub(crate) fn go(g: &a::Gauge) -> usize {
+    a::Gauge::read(g)
+}

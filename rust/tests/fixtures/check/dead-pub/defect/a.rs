@@ -1,0 +1,3 @@
+pub fn orphan_api() -> u32 {
+    7
+}

@@ -1,0 +1,7 @@
+pub(crate) fn poll() -> u32 {
+    1
+}
+
+pub(crate) fn poll() -> u32 {
+    2
+}

@@ -1,0 +1,3 @@
+pub(crate) fn one() -> u32 {
+    1
+}

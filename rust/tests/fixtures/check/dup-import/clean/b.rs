@@ -1,0 +1,3 @@
+pub(crate) fn two() -> u32 {
+    2
+}

@@ -1,0 +1,8 @@
+pub mod a;
+pub mod b;
+use a::one as thing;
+use b::two as other;
+
+pub(crate) fn go() -> u32 {
+    thing() + other()
+}

@@ -1,0 +1,8 @@
+pub mod a;
+pub mod b;
+use a::one as thing;
+use b::two as thing;
+
+pub(crate) fn go() -> u32 {
+    thing()
+}

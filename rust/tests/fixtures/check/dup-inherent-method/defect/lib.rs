@@ -1,0 +1,13 @@
+pub(crate) struct Relay;
+
+impl Relay {
+    pub(crate) fn fire(&self) -> u32 {
+        1
+    }
+}
+
+impl Relay {
+    pub(crate) fn fire(&self) -> u32 {
+        2
+    }
+}

@@ -1,0 +1,7 @@
+pub(crate) struct Slot {
+    a: u32,
+}
+
+pub(crate) struct Bay {
+    b: u32,
+}

@@ -1,0 +1,26 @@
+pub(crate) enum Event {
+    Arrive,
+    Depart,
+    Tick,
+}
+
+impl Event {
+    pub(crate) const N_KINDS: usize = 3;
+    pub(crate) const KINDS: [&'static str; 3] = ["arrive", "depart", "tick"];
+
+    pub(crate) fn kind_index(&self) -> usize {
+        match self {
+            Event::Arrive => 0,
+            Event::Depart => 1,
+            Event::Tick => 2,
+        }
+    }
+}
+
+pub(crate) fn dispatch_event_core(ev: &Event) -> usize {
+    match ev {
+        Event::Arrive => 1,
+        Event::Depart => 2,
+        Event::Tick => 3,
+    }
+}

@@ -1,0 +1,13 @@
+pub(crate) struct Counter {
+    count: u32,
+}
+
+impl Counter {
+    pub(crate) fn clear(&mut self) {
+        self.count = 0;
+    }
+
+    pub(crate) fn tick(&mut self) {
+        self.clear();
+    }
+}

@@ -1,0 +1,5 @@
+pub mod a;
+
+pub(crate) fn go() -> u32 {
+    a::LIMIT
+}

@@ -1,0 +1,1 @@
+pub(crate) const LIMIT: u32 = 3;

@@ -1,0 +1,4 @@
+pub(crate) struct Cfg {
+    pub(crate) rate: u32,
+    pub(crate) cap: u32,
+}

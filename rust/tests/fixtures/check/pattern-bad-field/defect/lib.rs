@@ -1,0 +1,6 @@
+pub mod a;
+
+pub(crate) fn go(c: a::Cfg) -> u32 {
+    let a::Cfg { rate, capp } = c;
+    rate + capp
+}

@@ -1,0 +1,9 @@
+pub(crate) struct Counter {
+    count: u32,
+}
+
+impl Counter {
+    pub(crate) fn total(&self) -> u32 {
+        self.count
+    }
+}

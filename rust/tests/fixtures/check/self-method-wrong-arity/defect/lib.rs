@@ -1,0 +1,13 @@
+pub(crate) struct Counter {
+    count: u32,
+}
+
+impl Counter {
+    pub(crate) fn bump(&mut self, by: u32) {
+        self.count += by;
+    }
+
+    pub(crate) fn tick(&mut self) {
+        self.bump();
+    }
+}

@@ -1,0 +1,6 @@
+pub mod a;
+
+pub(crate) fn go() -> u32 {
+    let c = a::Cfg { rate: 1, cap: 2 };
+    c.rate
+}

@@ -1,0 +1,4 @@
+// lint: allow(check-dead-pub): staged API, wired up by the next PR
+pub fn staged_api() -> u32 {
+    7
+}

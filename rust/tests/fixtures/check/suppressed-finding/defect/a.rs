@@ -1,0 +1,3 @@
+pub fn staged_api() -> u32 {
+    7
+}

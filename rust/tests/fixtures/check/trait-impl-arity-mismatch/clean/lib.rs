@@ -1,0 +1,9 @@
+pub mod a;
+
+pub(crate) struct Greedy;
+
+impl a::Policy for Greedy {
+    fn pick(&self, n: usize) -> usize {
+        n
+    }
+}

@@ -1,0 +1,3 @@
+pub(crate) trait Policy {
+    fn pick(&self, n: usize) -> usize;
+}

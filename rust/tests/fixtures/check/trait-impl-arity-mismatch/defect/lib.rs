@@ -1,0 +1,9 @@
+pub mod a;
+
+pub(crate) struct Greedy;
+
+impl a::Policy for Greedy {
+    fn pick(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,5 @@
+pub mod a;
+
+pub(crate) struct Greedy;
+
+impl a::Policy for Greedy {}

@@ -1,0 +1,15 @@
+pub mod a;
+
+pub(crate) struct Greedy;
+
+impl a::Policy for Greedy {
+    fn pick(&self, n: usize) -> usize {
+        n
+    }
+}
+
+impl Greedy {
+    pub(crate) fn extra(&self) -> usize {
+        0
+    }
+}

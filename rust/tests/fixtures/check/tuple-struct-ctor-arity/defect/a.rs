@@ -1,0 +1,1 @@
+pub(crate) struct Pair(u32, u32);

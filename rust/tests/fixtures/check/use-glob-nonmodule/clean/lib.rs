@@ -1,0 +1,2 @@
+pub mod a;
+use a::*;

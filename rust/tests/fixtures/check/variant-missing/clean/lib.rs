@@ -1,0 +1,5 @@
+pub mod a;
+
+pub(crate) fn go() -> a::Mode {
+    a::Mode::On
+}

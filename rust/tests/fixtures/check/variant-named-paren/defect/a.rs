@@ -1,0 +1,4 @@
+pub(crate) enum Job {
+    Spawn { id: u32 },
+    Halt,
+}

@@ -1,0 +1,5 @@
+pub mod a;
+
+pub(crate) fn go() -> a::Job {
+    a::Job::Spawn(1)
+}

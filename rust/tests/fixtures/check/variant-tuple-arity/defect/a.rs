@@ -1,0 +1,4 @@
+pub(crate) enum Msg {
+    Ping(u32),
+    Stop,
+}

@@ -1,0 +1,5 @@
+pub mod a;
+
+pub(crate) fn go() -> a::Msg {
+    a::Msg::Stop(3)
+}

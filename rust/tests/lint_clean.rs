@@ -1,10 +1,14 @@
-//! Tier-1 gate: the tree must be `pallas-lint`-clean.
+//! Static-analysis gates: the tree must be `pallas-lint`-clean (tier 1)
+//! and `pallas-check`-clean (tier 2).
 //!
-//! Runs the full lint pass in-process over `src/**` (same entry point
-//! the `pallas-lint` binary uses) and fails with the human-readable
-//! report if any unsuppressed diagnostic remains. A second run pins the
-//! JSON report byte-for-byte, so CI can diff artifacts across commits
-//! without timestamp or ordering noise.
+//! Runs both passes in-process over `src/**` (same entry points the
+//! binaries use) and fails with the human-readable report if any
+//! unsuppressed diagnostic remains. Repeat runs pin the JSON reports
+//! byte-for-byte, so CI can diff artifacts across commits without
+//! timestamp or ordering noise. The tier-2 pass is additionally
+//! validated against the seeded-defect corpus in
+//! `tests/fixtures/check/`: every planted defect must be caught under
+//! its expected rule, and every clean twin must pass strictly.
 
 use std::path::Path;
 
@@ -44,4 +48,80 @@ fn json_report_is_byte_deterministic() {
         !a.contains(&src_root().display().to_string()),
         "JSON report leaks the absolute source root"
     );
+}
+
+/// Tier-2 gate: crate-wide symbol resolution and API consistency. The
+/// strict form — unused `check-*` suppressions fail too, so stale
+/// markers can't accumulate. Also pins JSON byte-determinism and the
+/// schema tag for the CI artifact diff.
+#[test]
+fn pallas_check_clean() {
+    let report = lint::check::run(&src_root()).expect("check walk over src/ failed");
+    assert!(report.files_scanned > 0, "pallas-check scanned no files");
+    assert_eq!(report.schema, "pallas-check/1");
+    assert!(
+        report.is_clean_strict(),
+        "pallas-check found unsuppressed diagnostics or unused suppressions:\n\n{}",
+        report.render_human()
+    );
+    let again = lint::check::run(&src_root()).expect("second check run failed");
+    assert_eq!(
+        report.to_json(),
+        again.to_json(),
+        "pallas-check JSON output is not run-to-run deterministic"
+    );
+    assert!(
+        !report.to_json().contains(&src_root().display().to_string()),
+        "JSON report leaks the absolute source root"
+    );
+}
+
+/// Recall over the seeded-defect corpus: every `defect/` tree fires at
+/// least one finding under the rule named in its `EXPECT` file (and no
+/// finding under any other rule — fixtures are single-defect), and
+/// every `clean/` twin passes the strict gate. A regression in any
+/// resolver or rule shows up here as a named fixture, not a vague diff.
+#[test]
+fn check_corpus_recall() {
+    let corpus = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/check");
+    let mut cases: Vec<std::path::PathBuf> = std::fs::read_dir(&corpus)
+        .expect("fixture corpus missing")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_dir())
+        .collect();
+    cases.sort();
+    assert!(cases.len() >= 25, "corpus shrank: only {} cases", cases.len());
+
+    for case in &cases {
+        let name = case.file_name().unwrap().to_string_lossy().to_string();
+        let expect = std::fs::read_to_string(case.join("EXPECT"))
+            .unwrap_or_else(|e| panic!("{name}: EXPECT unreadable: {e}"));
+        let expect = expect.trim();
+        assert!(
+            lint::check::RULES.contains(&expect),
+            "{name}: EXPECT names unknown rule `{expect}`"
+        );
+
+        let defect = lint::check::run(&case.join("defect"))
+            .unwrap_or_else(|e| panic!("{name}: defect run failed: {e}"));
+        assert!(
+            defect.diagnostics.iter().any(|d| d.rule == expect),
+            "{name}: planted `{expect}` defect NOT caught; report:\n{}",
+            defect.render_human()
+        );
+        let off_rule: Vec<_> =
+            defect.diagnostics.iter().filter(|d| d.rule != expect).collect();
+        assert!(
+            off_rule.is_empty(),
+            "{name}: off-rule findings in single-defect fixture: {off_rule:?}"
+        );
+
+        let clean = lint::check::run(&case.join("clean"))
+            .unwrap_or_else(|e| panic!("{name}: clean run failed: {e}"));
+        assert!(
+            clean.is_clean_strict(),
+            "{name}: clean twin is not clean:\n{}",
+            clean.render_human()
+        );
+    }
 }
